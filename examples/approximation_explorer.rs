@@ -1,0 +1,86 @@
+//! Approximation explorer: interactive-style CLI over the SE(2) Fourier
+//! machinery — sweeps radius x basis size (Fig. 3's axes), prints ASCII
+//! plots of the target function vs its truncated series (Fig. 4's view),
+//! and verifies the factorization identity phi_q(p_n) phi_k(p_m) ~=
+//! phi(p_{n->m}) on random poses.
+//!
+//! Run: `cargo run --release --example approximation_explorer`
+
+use se2attn::fourier::{
+    approximation_error, coefficients, reconstruct, u_x, Axis, BF16_EPS, FP16_EPS,
+};
+use se2attn::geometry::Pose;
+use se2attn::prng::Rng;
+
+fn main() {
+    println!("== SE(2) Fourier approximation explorer ==\n");
+
+    // ---- radius x basis sweep (Fig. 3's content, coarse) ----------------
+    println!("mean spectral-norm error ||phi(rel) - phi_q phi_k||_2");
+    println!("(256 random pose pairs per cell; fp16 eps {FP16_EPS:.1e}, bf16 eps {BF16_EPS:.1e})\n");
+    let radii = [0.5, 1.0, 2.0, 4.0, 8.0];
+    let basis = [6usize, 12, 18, 28, 40];
+    print!("{:>8}", "r \\ F");
+    for f in basis {
+        print!("{f:>10}");
+    }
+    println!();
+    let mut rng = Rng::new(1);
+    for r in radii {
+        print!("{r:>8.1}");
+        for f in basis {
+            let mut total = 0.0;
+            let trials = 256;
+            for _ in 0..trials {
+                let psi = rng.range(-std::f64::consts::PI, std::f64::consts::PI);
+                let pm = Pose::new(r * psi.cos(), r * psi.sin(), rng.range(-3.1, 3.1));
+                let pn = Pose::new(0.0, 0.0, rng.range(-3.1, 3.1));
+                total += approximation_error(&pn, &pm, f);
+            }
+            print!("{:>10.1e}", total / trials as f64);
+        }
+        println!();
+    }
+
+    // ---- Fig. 4-style ASCII plot ----------------------------------------
+    println!("\ntarget cos(u_m^(x)(theta)) vs Fourier approximations");
+    for (x, y) in [(1.0f64, 0.0f64), (6.0, -4.0)] {
+        let r = (x * x + y * y).sqrt();
+        println!("\nkey position ({x}, {y})  |p| = {r:.1}");
+        let width = 64;
+        for f in [4usize, 8, 16, 28] {
+            let (gamma, _) = coefficients(x, y, f, Axis::X);
+            let mut err: f64 = 0.0;
+            let mut line = String::new();
+            for i in 0..width {
+                let t = -std::f64::consts::PI
+                    + std::f64::consts::TAU * i as f64 / width as f64;
+                let exact = u_x(x, y, t).cos();
+                let approx = reconstruct(&gamma, t);
+                err = err.max((exact - approx).abs());
+                // render the approximation as a height-5 strip
+                let level = ((approx + 1.0) / 2.0 * 4.0).round() as i64;
+                line.push(match level.clamp(0, 4) {
+                    0 => '_',
+                    1 => '.',
+                    2 => '-',
+                    3 => '=',
+                    _ => '#',
+                });
+            }
+            println!("  F={f:<3} max err {err:>8.1e}  {line}");
+        }
+    }
+
+    // ---- factorization identity spot check ------------------------------
+    println!("\nfactorization identity on 1000 random pose pairs (F=28, |p|<=4):");
+    let mut worst: f64 = 0.0;
+    for _ in 0..1000 {
+        let pn = Pose::new(rng.range(-2.8, 2.8), rng.range(-2.8, 2.8), rng.range(-3.1, 3.1));
+        let pm = Pose::new(rng.range(-2.8, 2.8), rng.range(-2.8, 2.8), rng.range(-3.1, 3.1));
+        worst = worst.max(approximation_error(&pn, &pm, 28));
+    }
+    println!("worst error {worst:.2e}  (paper: <1e-3 achievable — {})",
+        if worst < 1e-3 { "CONFIRMED" } else { "not met at these radii" });
+    println!("\napproximation_explorer OK");
+}

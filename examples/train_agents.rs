@@ -1,0 +1,90 @@
+//! End-to-end training driver (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Generates a synthetic scenario dataset, trains the agent-simulation
+//! transformer with SE(2) Fourier attention for a few hundred steps via the
+//! AOT train_step artifact (Adam state threaded through PJRT), logs the
+//! loss curve, then evaluates NLL + minADE with sampled rollouts.
+//!
+//! Run: `cargo run --release --example train_agents [steps] [examples] [method]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use se2attn::config::{Method, SystemConfig};
+use se2attn::coordinator::{ModelHandle, RolloutEngine, Trainer};
+use se2attn::metrics::TableOneRow;
+use se2attn::runtime::Engine;
+use se2attn::sim::TrajectoryClass;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: u64 = args.first().map_or(300, |s| s.parse().unwrap());
+    let n_examples: usize = args.get(1).map_or(512, |s| s.parse().unwrap());
+    let method = Method::parse(args.get(2).map_or("se2fourier", String::as_str))?;
+
+    let cfg = SystemConfig::load("artifacts")?;
+    let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
+    let mut model = ModelHandle::init(Arc::clone(&engine), method, 0)?;
+    println!(
+        "== train_agents: {} | {} weights | {} steps x batch {} | {} examples ==",
+        method.display(),
+        model.n_weights(),
+        steps,
+        cfg.model.batch_size,
+        n_examples
+    );
+
+    // ---- dataset + training -------------------------------------------
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(cfg.model.clone(), cfg.sim.clone(), n_examples, 0);
+    println!(
+        "dataset: {} train / {} val examples ({:.1}s to generate)",
+        trainer.loader.train.len(),
+        trainer.loader.val.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let report = trainer.run(&mut model, steps)?;
+    println!("\nloss curve:");
+    for (step, loss) in &report.loss_curve {
+        let bar = "#".repeat((loss * 12.0) as usize);
+        println!("  step {step:>5}  {loss:7.4}  {bar}");
+    }
+    println!(
+        "\ntrained {} steps in {:.1}s ({:.2} steps/s, {:.1} examples/s)",
+        report.steps,
+        report.wall_secs,
+        report.steps as f64 / report.wall_secs,
+        report.examples_seen as f64 / report.wall_secs
+    );
+    println!("validation NLL: {:.4}", report.final_val_loss);
+    let first = report.loss_curve.first().unwrap().1;
+    let last = report.loss_curve.last().unwrap().1;
+    assert!(
+        last < first,
+        "training must reduce loss ({first} -> {last})"
+    );
+
+    // ---- rollout evaluation --------------------------------------------
+    println!("\nevaluating rollouts (minADE over sampled futures)...");
+    let rollout = RolloutEngine::new(cfg.model.clone(), cfg.sim.clone());
+    let mut row = TableOneRow::default();
+    let eval_seeds: Vec<u64> = (10_000..10_006).collect();
+    rollout.evaluate(&model, &eval_seeds, 8, &mut row)?;
+    println!("NLL {:.3}", row.nll());
+    for class in [
+        TrajectoryClass::Stationary,
+        TrajectoryClass::Straight,
+        TrajectoryClass::Turning,
+    ] {
+        println!(
+            "minADE[{:<10}] {:>6.2} m  (n={})",
+            class.name(),
+            row.min_ade(class),
+            row.count(class)
+        );
+    }
+    println!("\ntrain_agents OK — record this run in EXPERIMENTS.md §E2E");
+    Ok(())
+}

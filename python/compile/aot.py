@@ -1,0 +1,288 @@
+"""AOT pipeline: lower every L2 entrypoint to HLO text + JSON manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``artifacts/`` (relative to the repo root):
+
+    {name}.hlo.txt        HLO text, lowered with return_tuple=True
+    {name}.manifest.json  input/output names, shapes, dtypes
+    index.json            artifact list + the full model configuration
+
+Entrypoints per attention method m in {abs, rope2d, se2rep, se2fourier}:
+
+    fwd_{m}         (params..., feat, pose, tq)                  -> (logits,)
+    train_step_{m}  (params..., m..., v..., step, batch...)      -> (params'..., m'..., v'..., loss)
+    decode_{m}      (params..., feat, pose, tq, seed, temp)      -> (actions, logp, logits)
+    attn_{m}        (q, k, v, pose, tq)                          -> (out,)    [single head]
+
+plus method-independent:
+
+    init            (seed,)                                      -> (params...,)
+    flash_sdpa      (q, k, v, tq, tk)                            -> (out,)
+
+Run ``python -m compile.aot --out-dir ../artifacts`` from ``python/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .config import ALL_METHODS, DEFAULT_CONFIG, ModelConfig
+from .kernels import se2_fourier as se2f
+from .kernels.flash_sdpa import flash_sdpa
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    CRITICAL: default HLO printing elides large array constants as a
+    literal ``{...}`` placeholder, which the xla_extension 0.5.1 text
+    parser silently accepts as garbage data (observed as wrong numerics in
+    any artifact with a constant table, e.g. the spatial-scale ladder).
+    ``print_large_constants=True`` keeps the payload; metadata is dropped
+    to keep files small and the old parser happy.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, s):
+    return {
+        "name": name,
+        "shape": list(s.shape),
+        "dtype": str(s.dtype),
+    }
+
+
+def emit(out_dir, name, fn, in_specs, in_names, out_names=None):
+    """Lower ``fn`` at ``in_specs`` and write artifact + manifest.
+
+    keep_unused=True: parameters that a variant doesn't read (e.g. `pose`
+    in the abs attention) must stay in the signature so the manifest and
+    the compiled program agree on buffer count.
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    out_shape = jax.eval_shape(fn, *in_specs)
+    outs = jax.tree_util.tree_leaves(out_shape)
+    if out_names is None:
+        out_names = [f"out{i}" for i in range(len(outs))]
+    assert len(out_names) == len(outs), (name, len(out_names), len(outs))
+    manifest = {
+        "name": name,
+        "inputs": [_io_entry(n, s) for n, s in zip(in_names, in_specs)],
+        "outputs": [_io_entry(n, s) for n, s in zip(out_names, outs)],
+    }
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB hlo, "
+          f"{len(in_specs)} in / {len(outs)} out")
+    return manifest
+
+
+def build_all(out_dir: str, cfg: ModelConfig, methods=ALL_METHODS):
+    os.makedirs(out_dir, exist_ok=True)
+    pnames = sorted(model.param_shapes(cfg))
+    pshapes = model.param_shapes(cfg)
+    nparams = len(pnames)
+    b, n = cfg.batch_size, cfg.n_tokens
+
+    param_specs = [spec(pshapes[k]) for k in pnames]
+    batch_specs = [
+        spec((b, n, cfg.feat_dim)),          # feat
+        spec((b, n, 3)),                     # pose
+        spec((b, n), I32),                   # tq
+    ]
+    batch_names = ["feat", "pose", "tq"]
+
+    artifacts = []
+
+    # ---- init --------------------------------------------------------
+    def init_flat(seed):
+        params = model.init_params(seed, cfg)
+        return tuple(params[k] for k in pnames)
+
+    artifacts.append(emit(
+        out_dir, "init", init_flat, [spec((), I32)], ["seed"],
+        out_names=[f"param:{k}" for k in pnames],
+    ))
+
+    # ---- flash sdpa standalone ----------------------------------------
+    nn, c = 256, 64
+
+    def flash_flat(q, k, v, tq, tk):
+        return (flash_sdpa(q, k, v, tq, tk, 1.0 / math.sqrt(c)),)
+
+    artifacts.append(emit(
+        out_dir, "flash_sdpa", flash_flat,
+        [spec((nn, c)), spec((nn, c)), spec((nn, c)),
+         spec((nn,), I32), spec((nn,), I32)],
+        ["q", "k", "v", "tq", "tk"], ["out"],
+    ))
+
+    # ---- per-method entrypoints ----------------------------------------
+    for method in methods:
+        def fwd_flat(*args, _m=method):
+            params = dict(zip(pnames, args[:nparams]))
+            feat, pose, tq = args[nparams:]
+            return (model.forward(params, feat, pose, tq, cfg, _m),)
+
+        artifacts.append(emit(
+            out_dir, f"fwd_{method}", fwd_flat,
+            param_specs + batch_specs,
+            [f"param:{k}" for k in pnames] + batch_names,
+            ["logits"],
+        ))
+
+        def train_flat(*args, _m=method):
+            params = dict(zip(pnames, args[:nparams]))
+            mm = dict(zip(pnames, args[nparams : 2 * nparams]))
+            vv = dict(zip(pnames, args[2 * nparams : 3 * nparams]))
+            step, feat, pose, tq, target = args[3 * nparams :]
+            np_, nm, nv, loss = train.train_step(
+                params, mm, vv, step, feat, pose, tq, target, cfg, _m
+            )
+            return (
+                tuple(np_[k] for k in pnames)
+                + tuple(nm[k] for k in pnames)
+                + tuple(nv[k] for k in pnames)
+                + (loss,)
+            )
+
+        artifacts.append(emit(
+            out_dir, f"train_step_{method}", train_flat,
+            param_specs * 3
+            + [spec(())]
+            + batch_specs
+            + [spec((b, n), I32)],
+            [f"param:{k}" for k in pnames]
+            + [f"m:{k}" for k in pnames]
+            + [f"v:{k}" for k in pnames]
+            + ["step"] + batch_names + ["target"],
+            [f"param:{k}" for k in pnames]
+            + [f"m:{k}" for k in pnames]
+            + [f"v:{k}" for k in pnames]
+            + ["loss"],
+        ))
+
+        def decode_flat(*args, _m=method):
+            params = dict(zip(pnames, args[:nparams]))
+            feat, pose, tq, seed, temp = args[nparams:]
+            return model.decode(
+                params, feat, pose, tq, seed, temp, cfg, _m
+            )
+
+        artifacts.append(emit(
+            out_dir, f"decode_{method}", decode_flat,
+            param_specs + batch_specs + [spec((), I32), spec(())],
+            [f"param:{k}" for k in pnames] + batch_names
+            + ["seed", "temperature"],
+            ["actions", "logp", "logits"],
+        ))
+
+    # ---- standalone single-head attention (pallas projections) ---------
+    for method in methods:
+        def attn_flat(q, k, v, pose, tq, _m=method):
+            qh = q[None, :, None, :]  # (1, N, 1, dh)
+            kh = k[None, :, None, :]
+            vh = v[None, :, None, :]
+            if _m == "se2fourier":
+                f = cfg.fourier_f
+                scales = se2f.scales_for(cfg.head_dim, cfg.spatial_scales)
+                c = cfg.se2f_proj_dim
+                pref = (float(c) / float(cfg.head_dim)) ** 0.25
+                qp = se2f.project_q_pallas(q, pose, scales, f, pref)
+                kp = se2f.project_k_pallas(k, pose, scales, f, pref)
+                vp = se2f.project_k_pallas(v, pose, scales, f, 1.0)
+                ot = flash_sdpa(qp, kp, vp, tq, tq, 1.0 / math.sqrt(c))
+                return (se2f.unproject_o_pallas(ot, pose, scales, f),)
+            params_stub = {}  # unused
+            del params_stub
+            from . import model as _model
+            qp, kp, vp, scale = _model._project_qkv(
+                qh, kh, vh, pose[None], cfg, _m
+            )
+            out = flash_sdpa(
+                qp[0, :, 0, :], kp[0, :, 0, :], vp[0, :, 0, :],
+                tq, tq, scale,
+            )
+            out = _model._unproject_o(
+                out[None, :, None, :], pose[None], cfg, _m
+            )
+            return (out[0, :, 0, :],)
+
+        nt, dh = cfg.n_tokens, cfg.head_dim
+        artifacts.append(emit(
+            out_dir, f"attn_{method}", attn_flat,
+            [spec((nt, dh)), spec((nt, dh)), spec((nt, dh)),
+             spec((nt, 3)), spec((nt,), I32)],
+            ["q", "k", "v", "pose", "tq"], ["out"],
+        ))
+
+    # ---- fused SE(2) Fourier attention (single Pallas kernel) -----------
+    if "se2fourier" in methods:
+        from .kernels.fused_attn import fused_se2f_attention
+
+        def fused_flat(q, k, v, pose, tq):
+            return (fused_se2f_attention(
+                q, k, v, pose, tq, cfg.fourier_f, cfg.spatial_scales
+            ),)
+
+        nt, dh = cfg.n_tokens, cfg.head_dim
+        artifacts.append(emit(
+            out_dir, "attn_se2fourier_fused", fused_flat,
+            [spec((nt, dh)), spec((nt, dh)), spec((nt, dh)),
+             spec((nt, 3)), spec((nt,), I32)],
+            ["q", "k", "v", "pose", "tq"], ["out"],
+        ))
+
+    # ---- index ----------------------------------------------------------
+    index = {
+        "artifacts": [a["name"] for a in artifacts],
+        "config": dataclasses.asdict(cfg),
+        "param_names": pnames,
+        "methods": list(methods),
+    }
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--methods", default=",".join(ALL_METHODS))
+    args = ap.parse_args()
+    methods = tuple(m for m in args.methods.split(",") if m)
+    build_all(args.out_dir, DEFAULT_CONFIG, methods)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Shared model / kernel configuration.
+
+This module is the single source of truth for the static shapes baked into
+the AOT artifacts.  The Rust runtime reads the same values from the manifest
+files emitted by ``aot.py`` — change them here and re-run ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# Attention method identifiers. These strings appear in artifact filenames
+# and in the Rust `AttentionMethod` enum — keep them in sync.
+METHOD_ABS = "abs"
+METHOD_ROPE2D = "rope2d"
+METHOD_SE2REP = "se2rep"
+METHOD_SE2FOURIER = "se2fourier"
+ALL_METHODS = (METHOD_ABS, METHOD_ROPE2D, METHOD_SE2REP, METHOD_SE2FOURIER)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer configuration for the agent-simulation model.
+
+    The head dimension must be divisible by 6 (SE(2) Fourier blocks), 4
+    (2D RoPE blocks) and 3 (SE(2) representation blocks); 48 and 96 are the
+    natural choices.
+    """
+
+    # -- transformer -----------------------------------------------------
+    n_layers: int = 2
+    n_heads: int = 2
+    head_dim: int = 48
+    d_model: int = 96
+    d_ff: int = 192
+    # -- tokens ----------------------------------------------------------
+    n_tokens: int = 64          # tokens per scene (map + agent-step tokens)
+    feat_dim: int = 16          # raw token feature width
+    n_actions: int = 64         # discrete action codebook size
+    # -- SE(2) Fourier ---------------------------------------------------
+    fourier_f: int = 12         # basis size F (paper Fig 3: F=12 ~ radius 2)
+    # Per-block spatial scales applied to (x, y) before the rotary /
+    # Fourier machinery, cycled across blocks (paper Sec III-C, [17]).
+    # All <= 1: scaling *down* keeps the effective key radius inside the
+    # Fourier-accurate band of Fig. 3 (radius <= 4 at F ~ 18).
+    spatial_scales: Tuple[float, ...] = (1.0, 0.5, 0.25, 0.125)
+    # -- training --------------------------------------------------------
+    batch_size: int = 8
+    learning_rate: float = 3e-4
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    # -- masking sentinels -----------------------------------------------
+    map_timestep: int = -1      # timestep id for map tokens (visible to all)
+    pad_timestep: int = -1000   # timestep id for padding tokens (masked out)
+    no_loss_target: int = -1    # target id meaning "no loss at this token"
+
+    @property
+    def se2f_blocks(self) -> int:
+        """Number of 6-wide SE(2) Fourier blocks per head."""
+        assert self.head_dim % 6 == 0
+        return self.head_dim // 6
+
+    @property
+    def se2f_proj_dim(self) -> int:
+        """Projected per-head width c = (4F + 2) * blocks (paper Sec III-C)."""
+        return (4 * self.fourier_f + 2) * self.se2f_blocks
+
+    def proj_dim(self, method: str) -> int:
+        """Per-head width after the method's phi_q/phi_k projection."""
+        if method == METHOD_SE2FOURIER:
+            return self.se2f_proj_dim
+        return self.head_dim
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+# A tiny configuration used by fast unit tests.
+TEST_CONFIG = ModelConfig(
+    n_layers=1,
+    n_heads=1,
+    head_dim=12,
+    d_model=12,
+    d_ff=24,
+    n_tokens=16,
+    feat_dim=8,
+    n_actions=16,
+    fourier_f=12,
+    batch_size=2,
+)

@@ -1,0 +1,60 @@
+"""SE(2) geometry helpers (pure jnp, build-time only).
+
+Poses are arrays with trailing dimension 3: ``(x, y, theta)``.  The group
+operation is the usual rigid-transform composition; ``relative(a, b)``
+computes ``a^{-1} b``, the pose of ``b`` expressed in the frame of ``a``
+(paper Sec. II-A: ``p_{n->m} = p_n^{-1} p_m``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wrap_angle(theta):
+    """Wrap angles to (-pi, pi]."""
+    return jnp.arctan2(jnp.sin(theta), jnp.cos(theta))
+
+
+def compose(a, b):
+    """Group product a * b for SE(2) poses (..., 3)."""
+    ax, ay, at = a[..., 0], a[..., 1], a[..., 2]
+    bx, by, bt = b[..., 0], b[..., 1], b[..., 2]
+    c, s = jnp.cos(at), jnp.sin(at)
+    return jnp.stack(
+        [ax + c * bx - s * by, ay + s * bx + c * by, wrap_angle(at + bt)],
+        axis=-1,
+    )
+
+
+def inverse(a):
+    """Group inverse a^{-1} for SE(2) poses (..., 3)."""
+    ax, ay, at = a[..., 0], a[..., 1], a[..., 2]
+    c, s = jnp.cos(at), jnp.sin(at)
+    return jnp.stack(
+        [-c * ax - s * ay, s * ax - c * ay, wrap_angle(-at)], axis=-1
+    )
+
+
+def relative(a, b):
+    """Relative pose a^{-1} b; broadcasting over leading dims."""
+    return compose(inverse(a), b)
+
+
+def rot2(theta):
+    """2D rotation matrix rho(theta) (paper Eq. 5), shape (..., 2, 2)."""
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    row0 = jnp.stack([c, -s], axis=-1)
+    row1 = jnp.stack([s, c], axis=-1)
+    return jnp.stack([row0, row1], axis=-2)
+
+
+def se2_matrix(pose):
+    """Homogeneous representation psi(x, y, theta) (paper Eq. 8), (..., 3, 3)."""
+    x, y, t = pose[..., 0], pose[..., 1], pose[..., 2]
+    c, s = jnp.cos(t), jnp.sin(t)
+    zero, one = jnp.zeros_like(x), jnp.ones_like(x)
+    row0 = jnp.stack([c, -s, x], axis=-1)
+    row1 = jnp.stack([s, c, y], axis=-1)
+    row2 = jnp.stack([zero, zero, one], axis=-1)
+    return jnp.stack([row0, row1, row2], axis=-2)

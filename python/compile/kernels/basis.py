@@ -1,0 +1,115 @@
+"""Fourier basis machinery for SE(2) Fourier attention (paper Sec. III-B).
+
+The basis functions are (paper Eq. 12)::
+
+    g_0(z) = 1
+    g_1(z) = sin(z)     g_2(z) = cos(z)
+    g_3(z) = sin(2z)    g_4(z) = cos(2z)   ...
+
+i.e. ``g_i(z) = cos((i/2) z)`` for even i and ``sin(((i+1)/2) z)`` for odd i.
+
+The key-side coefficients ``Gamma_m(i)`` / ``Lambda_m(i)`` (Eq. 14/15) are
+the Fourier coefficients of ``cos(u_m(z))`` / ``sin(u_m(z))`` where
+``u_m^{(x)}(z) = x_m cos z + y_m sin z``.  They are computed by the paper's
+recipe: numerical integration over a uniform 2F-point grid, which for a
+2π-periodic integrand is the (exact-up-to-aliasing) trapezoid rule and
+reduces to a single small matmul against a constant quadrature matrix —
+MXU-friendly by construction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def basis_frequencies(f: int) -> np.ndarray:
+    """Integer frequency of each basis element: [0, 1, 1, 2, 2, 3, 3, ...]."""
+    i = np.arange(f)
+    return np.where(i % 2 == 0, i // 2, (i + 1) // 2)
+
+
+def eval_basis(theta, f: int):
+    """Evaluate b = [g_0(theta), ..., g_{F-1}(theta)] (paper Sec. III-B).
+
+    theta: (...,) -> returns (..., F).
+
+    Built entirely from ``jnp.arange`` (lowered as iota) so it can be used
+    inside Pallas kernel bodies without captured host constants.
+    """
+    i = jnp.arange(f)
+    freqs = ((i + 1) // 2).astype(theta.dtype)  # 0, 1, 1, 2, 2, ...
+    ang = theta[..., None] * freqs  # (..., F)
+    even = i % 2 == 0
+    return jnp.where(even, jnp.cos(ang), jnp.sin(ang))
+
+
+def quadrature_grid(f: int) -> np.ndarray:
+    """The 2F-point uniform grid z_j on [-pi, pi) used for Eq. 14/15."""
+    return -np.pi + np.pi * np.arange(2 * f) / f
+
+
+def quadrature_matrix(f: int) -> np.ndarray:
+    """Constant matrix W of shape (2F, F) such that for samples
+    ``s_j = h(z_j)`` of a periodic function h, ``s @ W`` gives the basis
+    coefficients ``(a_i / 2F) * sum_j h(z_j) g_i(z_j)`` (Eq. 14).
+    """
+    z = quadrature_grid(f)  # (2F,)
+    freqs = basis_frequencies(f)
+    ang = np.outer(z, freqs)  # (2F, F)
+    even = np.arange(f) % 2 == 0
+    g = np.where(even, np.cos(ang), np.sin(ang))
+    a = np.where(np.arange(f) == 0, 1.0, 2.0)
+    return (g * a) / (2.0 * f)
+
+
+def quadrature_grid_jnp(f: int, dtype=jnp.float32):
+    """jnp/iota version of ``quadrature_grid`` (Pallas-kernel safe)."""
+    return (-jnp.pi + jnp.pi * jnp.arange(2 * f) / f).astype(dtype)
+
+
+def quadrature_matrix_jnp(f: int, dtype=jnp.float32):
+    """jnp/iota version of ``quadrature_matrix`` (Pallas-kernel safe)."""
+    z = quadrature_grid_jnp(f, dtype)
+    i = jnp.arange(f)
+    freqs = ((i + 1) // 2).astype(dtype)
+    ang = z[:, None] * freqs  # (2F, F)
+    even = i % 2 == 0
+    g = jnp.where(even, jnp.cos(ang), jnp.sin(ang))
+    a = jnp.where(i == 0, 1.0, 2.0).astype(dtype)
+    return (g * a) / (2.0 * f)
+
+
+def u_x(x, y, z):
+    """u_m^{(x)}(z) = x cos z + y sin z (paper Eq. 11)."""
+    return x[..., None] * jnp.cos(z) + y[..., None] * jnp.sin(z)
+
+
+def u_y(x, y, z):
+    """u_m^{(y)}(z) = -x sin z + y cos z (paper Eq. 18)."""
+    return -x[..., None] * jnp.sin(z) + y[..., None] * jnp.cos(z)
+
+
+def fourier_coefficients(x, y, f: int, axis: str = "x"):
+    """Gamma_m, Lambda_m of shape (..., F) for key position (x, y).
+
+    axis='x' approximates cos/sin of u^{(x)}; axis='y' of u^{(y)}.
+    Implements Eq. 14/15 with 2F-point quadrature.
+    """
+    z = quadrature_grid_jnp(f, x.dtype)
+    w = quadrature_matrix_jnp(f, x.dtype)
+    u = u_x(x, y, z) if axis == "x" else u_y(x, y, z)  # (..., 2F)
+    gamma = jnp.matmul(jnp.cos(u), w)  # (..., F)
+    lam = jnp.matmul(jnp.sin(u), w)  # (..., F)
+    return gamma, lam
+
+
+def approx_cos_u(x, y, theta, f: int, axis: str = "x"):
+    """Reconstruct the Fourier approximation of cos(u(theta)) — used by the
+    Fig. 4 reproduction and by unit tests.
+
+    x, y: (...,) key position; theta: (T,) -> returns (..., T).
+    """
+    gamma, _ = fourier_coefficients(x, y, f, axis)  # (..., F)
+    b = eval_basis(theta, f)  # (T, F)
+    return jnp.matmul(gamma, b.T)

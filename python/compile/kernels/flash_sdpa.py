@@ -1,0 +1,265 @@
+"""Flash-attention-style SDPA Pallas kernel (linear memory).
+
+This is the ``SDPA`` subroutine of the paper's Algorithm 2: a standard
+scaled-dot-product attention that never materializes the N x M score matrix.
+Forward and backward are both Pallas kernels using the FlashAttention-2
+recomputation scheme, wired together with ``jax.custom_vjp`` so the model
+can train through it.
+
+Masking: instead of an (N, M) boolean mask (which would itself be quadratic
+memory), visibility is derived inside the kernel from two *linear* integer
+vectors ``tq`` (N,) and ``tk`` (M,): token n sees token m iff
+``tq[n] >= tk[m]``.  The agent-simulation model encodes
+
+    map tokens      -> timestep -1   (visible to everyone)
+    agent tokens    -> timestep  t   (causal by scene time)
+    padding tokens  -> timestep  PAD_T = 2^30  (see nothing / seen by nobody)
+
+Rows with no visible key produce zeros (guarded divide).
+
+On real TPU hardware the k-loop would move into the grid with BlockSpec
+streaming HBM->VMEM; under interpret=True we keep the loop inside the kernel
+body, which is numerically identical (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+PAD_T = 1 << 30
+
+# 64 x 64 blocks: at the model's N=64 the k-loop runs exactly once, which
+# matters twice over — on TPU it is the MXU-native tile, and under
+# interpret=True it minimizes the per-iteration interpreter overhead that
+# dominates CPU wall-clock (see EXPERIMENTS.md §Perf, L1 iteration 1).
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _pick_block(n: int, pref: int) -> int:
+    if n % pref == 0:
+        return pref
+    for b in (64, 32, 16, 8, 4, 2, 1):
+        if b <= pref and n % b == 0:
+            return b
+    return n
+
+
+# --------------------------------------------------------------------------
+# forward kernel
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(block_k, scale, q_ref, k_ref, v_ref, tq_ref, tk_ref,
+                o_ref, lse_ref):
+    bq, c = q_ref.shape
+    m_tot, cv = v_ref.shape
+    q = q_ref[...]
+    tq = tq_ref[...]
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        tk_blk = pl.load(tk_ref, (pl.ds(j * block_k, block_k),))
+        s = jnp.dot(q, k_blk.T) * scale  # (bq, bk)
+        mask = tq[:, None] >= tk_blk[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None]) * mask  # re-mask: exp(0) rows
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, cv), jnp.float32)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, m_tot // block_k, body,
+                                        (m0, l0, acc0))
+    safe_l = jnp.maximum(l_f, 1e-30)
+    o_ref[...] = acc_f / safe_l[:, None]
+    # log-sum-exp per row, saved for the backward pass
+    lse_ref[...] = m_f + jnp.log(safe_l)
+
+
+def _flash_fwd(q, k, v, tq, tk, scale, block_q, block_k):
+    n, c = q.shape
+    m, cv = k.shape[0], v.shape[1]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    kern = functools.partial(_fwd_kernel, bk, scale)
+    o, lse = pl.pallas_call(
+        kern,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, cv), lambda i: (0, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, cv), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, cv), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, tq, tk)
+    return o, lse
+
+
+# --------------------------------------------------------------------------
+# backward kernels (FlashAttention-2 style recomputation)
+# --------------------------------------------------------------------------
+
+def _bwd_dq_kernel(block_k, scale, q_ref, k_ref, v_ref, tq_ref, tk_ref,
+                   lse_ref, do_ref, delta_ref, dq_ref):
+    m_tot = k_ref.shape[0]
+    q = q_ref[...]
+    tq = tq_ref[...]
+    lse = lse_ref[...]
+    do = do_ref[...]
+    delta = delta_ref[...]
+
+    def body(j, dq):
+        k_blk = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None)))
+        tk_blk = pl.load(tk_ref, (pl.ds(j * block_k, block_k),))
+        s = jnp.dot(q, k_blk.T) * scale
+        mask = tq[:, None] >= tk_blk[None, :]
+        p = jnp.exp(jnp.where(mask, s, NEG_INF) - lse[:, None]) * mask
+        dp = jnp.dot(do, v_blk.T)  # (bq, bk)
+        ds = p * (dp - delta[:, None])
+        return dq + jnp.dot(ds, k_blk) * scale
+
+    dq0 = jnp.zeros_like(q)
+    dq_ref[...] = jax.lax.fori_loop(0, m_tot // block_k, body, dq0)
+
+
+def _bwd_dkv_kernel(block_q, scale, q_ref, k_ref, v_ref, tq_ref, tk_ref,
+                    lse_ref, do_ref, delta_ref, dk_ref, dv_ref):
+    n_tot = q_ref.shape[0]
+    k_blk = k_ref[...]
+    v_blk = v_ref[...]
+    tk = tk_ref[...]
+
+    def body(i, carry):
+        dk, dv = carry
+        q_blk = pl.load(q_ref, (pl.ds(i * block_q, block_q), slice(None)))
+        tq_blk = pl.load(tq_ref, (pl.ds(i * block_q, block_q),))
+        lse_blk = pl.load(lse_ref, (pl.ds(i * block_q, block_q),))
+        do_blk = pl.load(do_ref, (pl.ds(i * block_q, block_q), slice(None)))
+        delta_blk = pl.load(delta_ref, (pl.ds(i * block_q, block_q),))
+        s = jnp.dot(q_blk, k_blk.T) * scale  # (bq, bk)
+        mask = tq_blk[:, None] >= tk[None, :]
+        p = jnp.exp(jnp.where(mask, s, NEG_INF) - lse_blk[:, None]) * mask
+        dv_new = dv + jnp.dot(p.T, do_blk)
+        dp = jnp.dot(do_blk, v_blk.T)
+        ds = p * (dp - delta_blk[:, None])
+        dk_new = dk + jnp.dot(ds.T, q_blk) * scale
+        return dk_new, dv_new
+
+    dk0 = jnp.zeros_like(k_blk)
+    dv0 = jnp.zeros_like(v_blk)
+    dk_f, dv_f = jax.lax.fori_loop(0, n_tot // block_q, body, (dk0, dv0))
+    dk_ref[...] = dk_f
+    dv_ref[...] = dv_f
+
+
+def _flash_bwd(q, k, v, tq, tk, o, lse, do, scale, block_q, block_k):
+    n, c = q.shape
+    m, cv = k.shape[0], v.shape[1]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    # delta_n = sum_c do_nc * o_nc  (FlashAttention-2 Eq. for D)
+    delta = jnp.sum(do * o, axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bk, scale),
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, cv), lambda i: (0, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq, cv), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(q, k, v, tq, tk, lse, do, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq, scale),
+        grid=(m // bk,),
+        in_specs=[
+            pl.BlockSpec((n, c), lambda j: (0, 0)),
+            pl.BlockSpec((bk, c), lambda j: (j, 0)),
+            pl.BlockSpec((bk, cv), lambda j: (j, 0)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((bk,), lambda j: (j,)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n, cv), lambda j: (0, 0)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, c), lambda j: (j, 0)),
+            pl.BlockSpec((bk, cv), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, c), jnp.float32),
+            jax.ShapeDtypeStruct((m, cv), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, tq, tk, lse, do, delta)
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------
+# custom-vjp wrapper
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_sdpa(q, k, v, tq, tk, scale,
+               block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Linear-memory SDPA.  q: (N, c), k: (M, c), v: (M, cv);
+    tq: (N,) int32, tk: (M,) int32 visibility timesteps."""
+    o, _ = _flash_fwd(q, k, v, tq, tk, scale, block_q, block_k)
+    return o
+
+
+def _vjp_fwd(q, k, v, tq, tk, scale, block_q, block_k):
+    o, lse = _flash_fwd(q, k, v, tq, tk, scale, block_q, block_k)
+    return o, (q, k, v, tq, tk, o, lse)
+
+
+def _vjp_bwd(scale, block_q, block_k, res, do):
+    q, k, v, tq, tk, o, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, tq, tk, o, lse, do,
+                            scale, block_q, block_k)
+    return dq, dk, dv, None, None
+
+
+flash_sdpa.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def flash_sdpa_batched(q, k, v, tq, tk, scale,
+                       block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """vmapped flash_sdpa over (B, H): q (B, H, N, c), tq (B, N)."""
+    inner = lambda qq, kk, vv, tqq, tkk: flash_sdpa(
+        qq, kk, vv, tqq, tkk, scale, block_q, block_k
+    )
+    over_heads = jax.vmap(inner, in_axes=(0, 0, 0, None, None))
+    over_batch = jax.vmap(over_heads, in_axes=(0, 0, 0, 0, 0))
+    return over_batch(q, k, v, tq, tk)

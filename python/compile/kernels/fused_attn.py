@@ -1,0 +1,86 @@
+"""Fused SE(2) Fourier attention: one Pallas kernel for the whole of
+Algorithm 2 (phi_q/phi_k projections + flash SDPA + phi_q unprojection).
+
+Rationale (DESIGN.md §8 / EXPERIMENTS.md §Perf): the projected
+q~/k~/v~/o~ tensors are (4F+2)/6 ~ 8.3x wider than the raw heads.  In the
+unfused path they round-trip HBM between the projection kernels and the
+SDPA kernel; fusing keeps them in VMEM for the lifetime of a q-tile.  VMEM
+budget at (block_q=64, full K=64, c=400): q~ + k~ + v~ + acc ~= 4 * 64 *
+400 * 4 B = 410 KiB — comfortably inside a TPU core's ~16 MiB.
+
+Trade-off: with more than one q-tile the key-side projection is recomputed
+per tile (k~/v~ are tile-invariant).  At the model's N=64 there is exactly
+one tile, so fusion is a pure win; for long sequences the unfused path
+amortizes better — both are provided and benchmarked.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import se2_fourier as se2f
+
+NEG_INF = -1e30
+
+
+def _fused_kernel(f, scale_pref, sm_scale,
+                  pose_ref, q_ref, k_ref, v_ref, tq_ref, tk_ref,
+                  scales_ref, o_ref):
+    """Single-tile fused Algorithm 2 (q-tile x full keys)."""
+    scales = scales_ref[...]
+    pose_q = pose_ref[...]  # (bq, 3) — q-tile poses
+    pose_k = pose_ref[...]  # self-attention: same pose table
+    # ---- projections (Eq. 19), all in VMEM -----------------------------
+    qt = se2f.project_q_jnp(q_ref[...], pose_q, scales, f, scale_pref)
+    kt = se2f.project_k_jnp(k_ref[...], pose_k, scales, f, scale_pref)
+    vt = se2f.project_k_jnp(v_ref[...], pose_k, scales, f, 1.0)
+    # ---- SDPA with the visibility rule ---------------------------------
+    s = jnp.dot(qt, kt.T) * sm_scale
+    mask = tq_ref[...][:, None] >= tk_ref[...][None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m) * mask
+    l = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    ot = jnp.dot(p / l, vt)
+    # ---- unprojection (Alg. 2 line 4) -----------------------------------
+    o_ref[...] = se2f.unproject_o_jnp(ot, pose_q, scales, f)
+
+
+def fused_se2f_attention(q, k, v, pose, tq, f, spatial_scales):
+    """Fused single-head SE(2) Fourier attention.  q/k/v: (N, d) with
+    d % 6 == 0; pose: (N, 3); tq: (N,) visibility timesteps.
+
+    Self-attention only (key poses == query poses), matching the
+    `attn_se2fourier` artifact's contract.
+    """
+    n, d = q.shape
+    c = (4 * f + 2) * (d // 6)
+    pref = (c / d) ** 0.25
+    sm_scale = 1.0 / math.sqrt(c)
+    nb = d // 6
+    scales_arr = jnp.asarray(
+        [float(spatial_scales[j % len(spatial_scales)]) for j in range(nb)],
+        jnp.float32,
+    )
+    kern = functools.partial(_fused_kernel, f, pref, sm_scale)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, 3), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(pose, q, k, v, tq, tq, scales_arr)

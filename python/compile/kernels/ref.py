@@ -1,0 +1,250 @@
+"""Pure-jnp correctness oracles.
+
+Two layers of reference:
+
+1. ``algorithm1`` — the paper's Algorithm 1 (quadratic-memory relative
+   SDPA): explicitly materializes ``phi(p_{n->m})`` for every query/key pair.
+   This is the ground truth every linear-memory implementation is checked
+   against.
+2. Explicit *matrix* builders for ``phi_q`` / ``phi_k`` of each method
+   (Eq. 6/7/9/19).  The fast vectorized projections in ``se2_fourier.py`` /
+   ``rope.py`` must match these matrices applied naively.
+
+Everything here is deliberately simple and quadratic; nothing from this file
+is ever lowered into an artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import geometry
+from . import basis as basis_mod
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Reference scaled dot-product attention
+# --------------------------------------------------------------------------
+
+def naive_sdpa(q, k, v, scale=None, mask=None):
+    """Reference SDPA.  q: (N, c), k/v: (M, c) / (M, cv), mask: (N, M) bool."""
+    c = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(c)) if scale is None else scale
+    logits = jnp.matmul(q, k.T) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    a = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return jnp.matmul(a, v)
+
+
+def visibility_mask(tq, tk, valid_q, valid_k):
+    """The model's attention rule: token n sees token m iff t_n >= t_m and
+    both are valid.  Map tokens carry timestep -1 so they are visible to
+    everyone (and see only other map tokens)."""
+    see = tq[:, None] >= tk[None, :]
+    return see & valid_q[:, None] & valid_k[None, :]
+
+
+# --------------------------------------------------------------------------
+# phi(p_rel) builders — the *target* matrices of each method
+# --------------------------------------------------------------------------
+
+def _block_diag(mats):
+    """Stack a list of (..., a, b) matrices block-diagonally -> (..., A, B)."""
+    rows = sum(m.shape[-2] for m in mats)
+    cols = sum(m.shape[-1] for m in mats)
+    batch = jnp.broadcast_shapes(*[m.shape[:-2] for m in mats])
+    out = jnp.zeros(batch + (rows, cols), dtype=mats[0].dtype)
+    r = c = 0
+    for m in mats:
+        m = jnp.broadcast_to(m, batch + m.shape[-2:])
+        out = out.at[..., r : r + m.shape[-2], c : c + m.shape[-1]].set(m)
+        r += m.shape[-2]
+        c += m.shape[-1]
+    return out
+
+
+def _scales_for(head_dim: int, block: int, spatial_scales):
+    n_blocks = head_dim // block
+    return [spatial_scales[j % len(spatial_scales)] for j in range(n_blocks)]
+
+
+def phi_rel_rope2d(pose_n, pose_m, head_dim, spatial_scales):
+    """Eq. 7 stacked: diag over blocks of [rho(a*dx), rho(a*dy)].
+
+    2D RoPE uses the *abelian* relative position (plain subtraction)."""
+    dx = pose_m[..., 0] - pose_n[..., 0]
+    dy = pose_m[..., 1] - pose_n[..., 1]
+    blocks = []
+    for a in _scales_for(head_dim, 4, spatial_scales):
+        blocks.append(geometry.rot2(a * dx))
+        blocks.append(geometry.rot2(a * dy))
+    return _block_diag(blocks)
+
+
+def phi_rel_se2rep(pose_n, pose_m, head_dim, spatial_scales):
+    """Eq. 9 stacked: psi(p_n^{-1} p_m) per 3-wide block, positions scaled."""
+    rel = geometry.relative(pose_n, pose_m)
+    blocks = []
+    for a in _scales_for(head_dim, 3, spatial_scales):
+        scaled = jnp.stack(
+            [a * rel[..., 0], a * rel[..., 1], rel[..., 2]], axis=-1
+        )
+        blocks.append(geometry.se2_matrix(scaled))
+    return _block_diag(blocks)
+
+
+def phi_rel_se2fourier(pose_n, pose_m, head_dim, spatial_scales):
+    """Eq. 10 stacked: diag[rho(x_rel), rho(y_rel), rho(theta_rel)] per
+    6-wide block — the *exact* target that SE(2) Fourier approximates."""
+    rel = geometry.relative(pose_n, pose_m)
+    blocks = []
+    for a in _scales_for(head_dim, 6, spatial_scales):
+        blocks.append(geometry.rot2(a * rel[..., 0]))
+        blocks.append(geometry.rot2(a * rel[..., 1]))
+        blocks.append(geometry.rot2(rel[..., 2]))
+    return _block_diag(blocks)
+
+
+PHI_REL = {
+    "rope2d": phi_rel_rope2d,
+    "se2rep": phi_rel_se2rep,
+    "se2fourier": phi_rel_se2fourier,
+}
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — quadratic-memory relative SDPA (the oracle)
+# --------------------------------------------------------------------------
+
+def algorithm1(q, k, v, pose_q, pose_k, method, spatial_scales, mask=None):
+    """Paper Algorithm 1.  q: (N, d); k, v: (M, d); poses (N/M, 3)."""
+    d = q.shape[-1]
+    phi = PHI_REL[method](
+        pose_q[:, None, :], pose_k[None, :, :], d, spatial_scales
+    )  # (N, M, d, d)
+    logits = jnp.einsum("nd,nmde,me->nm", q, phi, k) / jnp.sqrt(d)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    a = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return jnp.einsum("nm,nmde,me->nd", a, phi, v)
+
+
+# --------------------------------------------------------------------------
+# Explicit phi_q / phi_k matrices (slow; for verifying the fast projections)
+# --------------------------------------------------------------------------
+
+def phi_q_mat_rope2d(pose, head_dim, spatial_scales):
+    blocks = []
+    for a in _scales_for(head_dim, 4, spatial_scales):
+        blocks.append(geometry.rot2(-a * pose[..., 0]))
+        blocks.append(geometry.rot2(-a * pose[..., 1]))
+    return _block_diag(blocks)
+
+
+def phi_k_mat_rope2d(pose, head_dim, spatial_scales):
+    blocks = []
+    for a in _scales_for(head_dim, 4, spatial_scales):
+        blocks.append(geometry.rot2(a * pose[..., 0]))
+        blocks.append(geometry.rot2(a * pose[..., 1]))
+    return _block_diag(blocks)
+
+
+def phi_q_mat_se2rep(pose, head_dim, spatial_scales):
+    blocks = []
+    for a in _scales_for(head_dim, 3, spatial_scales):
+        scaled = jnp.stack(
+            [a * pose[..., 0], a * pose[..., 1], pose[..., 2]], axis=-1
+        )
+        blocks.append(geometry.se2_matrix(geometry.inverse(scaled)))
+    return _block_diag(blocks)
+
+
+def phi_k_mat_se2rep(pose, head_dim, spatial_scales):
+    blocks = []
+    for a in _scales_for(head_dim, 3, spatial_scales):
+        scaled = jnp.stack(
+            [a * pose[..., 0], a * pose[..., 1], pose[..., 2]], axis=-1
+        )
+        blocks.append(geometry.se2_matrix(scaled))
+    return _block_diag(blocks)
+
+
+def _phi_q_fourier_block(pose, a, f):
+    """One 6 x (4F+2) query block (paper Eq. 19)."""
+    x, y, t = a * pose[..., 0], a * pose[..., 1], pose[..., 2]
+    b = basis_mod.eval_basis(t, f)  # (..., F)
+    vx = -x * jnp.cos(t) - y * jnp.sin(t)
+    vy = x * jnp.sin(t) - y * jnp.cos(t)
+
+    def rot_outer(vv):
+        c, s = jnp.cos(vv)[..., None], jnp.sin(vv)[..., None]
+        top = jnp.concatenate([c * b, -s * b], axis=-1)  # (..., 2F)
+        bot = jnp.concatenate([s * b, c * b], axis=-1)
+        return jnp.stack([top, bot], axis=-2)  # (..., 2, 2F)
+
+    theta_blk = geometry.rot2(-t)  # (..., 2, 2)
+    return _block_diag([rot_outer(vx), rot_outer(vy), theta_blk])
+
+
+def _phi_k_fourier_block(pose, a, f):
+    """One (4F+2) x 6 key block (paper Eq. 19)."""
+    x, y, t = a * pose[..., 0], a * pose[..., 1], pose[..., 2]
+
+    def coeff_mat(axis):
+        gamma, lam = basis_mod.fourier_coefficients(x, y, f, axis)
+        top = jnp.stack([gamma, -lam], axis=-1)  # (..., F, 2)
+        bot = jnp.stack([lam, gamma], axis=-1)
+        return jnp.concatenate([top, bot], axis=-2)  # (..., 2F, 2)
+
+    theta_blk = geometry.rot2(t)
+    return _block_diag([coeff_mat("x"), coeff_mat("y"), theta_blk])
+
+
+def phi_q_mat_se2fourier(pose, head_dim, spatial_scales, f):
+    blocks = [
+        _phi_q_fourier_block(pose, a, f)
+        for a in _scales_for(head_dim, 6, spatial_scales)
+    ]
+    return _block_diag(blocks)
+
+
+def phi_k_mat_se2fourier(pose, head_dim, spatial_scales, f):
+    blocks = [
+        _phi_k_fourier_block(pose, a, f)
+        for a in _scales_for(head_dim, 6, spatial_scales)
+    ]
+    return _block_diag(blocks)
+
+
+def algorithm2_explicit(
+    q, k, v, pose_q, pose_k, method, spatial_scales, f=None, mask=None
+):
+    """Paper Algorithm 2 using the explicit phi_q/phi_k matrices above.
+
+    Used by tests to show Alg2 == Alg1 (exactly for rope2d/se2rep, to
+    Fourier tolerance for se2fourier).
+    """
+    d = q.shape[-1]
+    if method == "rope2d":
+        pq = phi_q_mat_rope2d(pose_q, d, spatial_scales)
+        pk = phi_k_mat_rope2d(pose_k, d, spatial_scales)
+    elif method == "se2rep":
+        pq = phi_q_mat_se2rep(pose_q, d, spatial_scales)
+        pk = phi_k_mat_se2rep(pose_k, d, spatial_scales)
+    elif method == "se2fourier":
+        pq = phi_q_mat_se2fourier(pose_q, d, spatial_scales, f)
+        pk = phi_k_mat_se2fourier(pose_k, d, spatial_scales, f)
+    else:
+        raise ValueError(method)
+    c = pq.shape[-1]
+    scale = (float(c) / float(d)) ** 0.25
+    qt = scale * jnp.einsum("ndc,nd->nc", pq, q)
+    kt = scale * jnp.einsum("mcd,md->mc", pk, k)
+    vt = jnp.einsum("mcd,md->mc", pk, v)
+    ot = naive_sdpa(qt, kt, vt, scale=1.0 / jnp.sqrt(c), mask=mask)
+    return jnp.einsum("ndc,nc->nd", pq, ot)

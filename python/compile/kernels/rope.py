@@ -1,0 +1,111 @@
+"""Vectorized projections for the baseline relative-attention methods.
+
+These are the *fast* (linear-memory, per-token) forms of phi_q^T / phi_k for
+2D RoPE (paper Eq. 7) and the SE(2) representation (paper Eq. 9).  Both are
+cheap elementwise/3x3 operations that XLA fuses into the attention prologue,
+so they do not need a dedicated Pallas kernel; the SE(2) Fourier projection
+(the paper's contribution, with its quadrature matmul) lives in
+``se2_fourier.py`` as a Pallas kernel.
+
+All functions take
+
+    x     : (..., d)  per-head features
+    pose  : (..., 3)  SE(2) pose per token
+    scales: (B,)      per-block spatial scale (B = d // block_width)
+
+and return the projected features with the same leading shape.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _pair_rotate(x_pairs, angle):
+    """Rotate feature pairs by ``angle``: x_pairs (..., B, 2), angle (..., B)."""
+    c, s = jnp.cos(angle), jnp.sin(angle)
+    x0, x1 = x_pairs[..., 0], x_pairs[..., 1]
+    return jnp.stack([c * x0 - s * x1, s * x0 + c * x1], axis=-1)
+
+
+def rope1d_project(x, positions, scales):
+    """Classic RoPE (paper Eq. 6): blocks of 2, angle = scale * position.
+
+    Applied identically to queries and keys (phi_q(p)^T = phi_k(p) = rho(ap)).
+    positions: (...,) scalar location per token.
+    """
+    d = x.shape[-1]
+    nb = d // 2
+    pairs = x.reshape(x.shape[:-1] + (nb, 2))
+    angle = positions[..., None] * scales
+    return _pair_rotate(pairs, angle).reshape(x.shape)
+
+
+def rope2d_project(x, pose, scales):
+    """2D RoPE (paper Eq. 7): blocks of 4 = [x-pair, y-pair].
+
+    Identical for queries and keys.  Ignores pose[..., 2] (not rotation
+    invariant — that is the paper's Fig. 1(b) point).
+    """
+    d = x.shape[-1]
+    nb = d // 4
+    pairs = x.reshape(x.shape[:-1] + (2 * nb, 2))
+    ax = pose[..., 0:1] * scales  # (..., B)
+    ay = pose[..., 1:2] * scales
+    angle = jnp.stack([ax, ay], axis=-1).reshape(pose.shape[:-1] + (2 * nb,))
+    return _pair_rotate(pairs, angle).reshape(x.shape)
+
+
+def _se2_apply(x_triples, pose, scales, inverse, transpose):
+    """Apply psi(pose) (optionally of the inverse pose, optionally
+    transposed) to feature triples: x_triples (..., B, 3)."""
+    px = pose[..., 0:1] * scales
+    py = pose[..., 1:2] * scales
+    t = jnp.broadcast_to(pose[..., 2:3], px.shape)
+    if inverse:
+        c, s = jnp.cos(t), jnp.sin(t)
+        px, py, t = -c * px - s * py, s * px - c * py, -t
+    c, s = jnp.cos(t), jnp.sin(t)
+    x0, x1, x2 = x_triples[..., 0], x_triples[..., 1], x_triples[..., 2]
+    if not transpose:
+        # [c -s px; s c py; 0 0 1] @ [x0 x1 x2]
+        return jnp.stack(
+            [c * x0 - s * x1 + px * x2, s * x0 + c * x1 + py * x2, x2],
+            axis=-1,
+        )
+    # transpose: [c s 0; -s c 0; px py 1] @ [x0 x1 x2]
+    return jnp.stack(
+        [c * x0 + s * x1, -s * x0 + c * x1, px * x0 + py * x1 + x2],
+        axis=-1,
+    )
+
+
+def se2rep_project_q(x, pose, scales):
+    """phi_q(p)^T q with phi_q = psi(p^{-1}) (paper Eq. 9)."""
+    d = x.shape[-1]
+    triples = x.reshape(x.shape[:-1] + (d // 3, 3))
+    out = _se2_apply(triples, pose, scales, inverse=True, transpose=True)
+    return out.reshape(x.shape)
+
+
+def se2rep_project_k(x, pose, scales):
+    """phi_k(p) k with phi_k = psi(p) (paper Eq. 9).  Also used for values."""
+    d = x.shape[-1]
+    triples = x.reshape(x.shape[:-1] + (d // 3, 3))
+    out = _se2_apply(triples, pose, scales, inverse=False, transpose=False)
+    return out.reshape(x.shape)
+
+
+def se2rep_unproject_o(x, pose, scales):
+    """phi_q(p) o_tilde — the post-attention output map (Alg. 2 line 4)."""
+    d = x.shape[-1]
+    triples = x.reshape(x.shape[:-1] + (d // 3, 3))
+    out = _se2_apply(triples, pose, scales, inverse=True, transpose=False)
+    return out.reshape(x.shape)
+
+
+def block_scales(head_dim: int, block: int, spatial_scales) -> jnp.ndarray:
+    """The per-block scale ladder, cycled (paper Sec. III-C / [17])."""
+    nb = head_dim // block
+    vals = [spatial_scales[j % len(spatial_scales)] for j in range(nb)]
+    return jnp.asarray(vals, dtype=jnp.float32)

@@ -1,0 +1,217 @@
+"""SE(2) Fourier projections — the paper's contribution (Sec. III).
+
+Implements the linear-memory factorization
+
+    phi_q(p_n) phi_k(p_m)  ~=  diag[rho(x_rel), rho(y_rel), rho(theta_rel)]
+
+per 6-wide feature block (Eq. 19/20).  Three entry points:
+
+* ``project_q(q, pose)``          -> q_tilde  (..., (4F+2) * B)
+* ``project_k(k, pose)``          -> k_tilde / v_tilde
+* ``unproject_o(o_tilde, pose)``  -> o        (..., 6 * B)
+
+Each has a pure-jnp implementation (``*_jnp``) and a Pallas kernel
+(``*_pallas``, interpret=True for CPU-PJRT per the image constraint).  The
+Pallas kernels tile over tokens: per tile the key-side kernel evaluates
+``u = x cos z + y sin z`` on the constant 2F-point quadrature grid and
+contracts against the constant quadrature matrix — a (T*B, 2F) x (2F, F)
+matmul that maps directly onto the MXU on real hardware.
+
+Layout per 6-wide input block j (scale a_j): input features
+``[qx0 qx1 qy0 qy1 qt0 qt1]`` map to projected features
+``[x-cos part (F) | x-sin part (F) | y-cos (F) | y-sin (F) | theta pair (2)]``
+of width 4F+2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import basis as basis_mod
+from .rope import block_scales
+
+# Token tile for the Pallas projection kernels. 64 tokens x (4F+2)B floats
+# comfortably fits VMEM (see DESIGN.md §8).
+TILE = 64
+
+
+def _prep(pose, scales):
+    """Scaled coordinates per block: x, y (..., B); theta terms (..., 1)."""
+    x = pose[..., 0:1] * scales
+    y = pose[..., 1:2] * scales
+    t = pose[..., 2:3]  # keep the trailing axis for broadcasting vs (..., B)
+    return x, y, t
+
+
+# --------------------------------------------------------------------------
+# pure-jnp reference/fallback implementations
+# --------------------------------------------------------------------------
+
+def project_q_jnp(q, pose, scales, f: int, scale_pref: float = 1.0):
+    """q_tilde = scale_pref * phi_q(p)^T q (Alg. 2 line 1).
+
+    q: (..., 6B), pose: (..., 3) -> (..., (4F+2) B).
+    """
+    nb = q.shape[-1] // 6
+    blocks = q.reshape(q.shape[:-1] + (nb, 6))
+    x, y, t = _prep(pose, scales)
+    ct, st = jnp.cos(t), jnp.sin(t)  # (..., 1)
+    b = basis_mod.eval_basis(t[..., 0], f)[..., None, :]  # (..., 1, F)
+    vx = -x * ct - y * st  # (..., B)
+    vy = x * st - y * ct
+    cx, sx = jnp.cos(vx)[..., None], jnp.sin(vx)[..., None]  # (..., B, 1)
+    cy, sy = jnp.cos(vy)[..., None], jnp.sin(vy)[..., None]
+    q0, q1 = blocks[..., 0:1], blocks[..., 1:2]
+    q2, q3 = blocks[..., 2:3], blocks[..., 3:4]
+    q4, q5 = blocks[..., 4], blocks[..., 5]  # (..., B)
+    out = jnp.concatenate(
+        [
+            b * (cx * q0 + sx * q1),      # (..., B, F)
+            b * (-sx * q0 + cx * q1),
+            b * (cy * q2 + sy * q3),
+            b * (-sy * q2 + cy * q3),
+            # theta pair: phi_q^(theta)^T = rho(-t)^T = rho(t)
+            jnp.stack([ct * q4 - st * q5, st * q4 + ct * q5], axis=-1),
+        ],
+        axis=-1,
+    )
+    return (scale_pref * out).reshape(q.shape[:-1] + (-1,))
+
+
+def project_k_jnp(k, pose, scales, f: int, scale_pref: float = 1.0):
+    """k_tilde = scale_pref * phi_k(p) k (Alg. 2 line 2).
+
+    Use scale_pref=1 for the value path."""
+    nb = k.shape[-1] // 6
+    blocks = k.reshape(k.shape[:-1] + (nb, 6))
+    x, y, t = _prep(pose, scales)
+    ct, st = jnp.cos(t), jnp.sin(t)  # (..., 1)
+    gx, lx = basis_mod.fourier_coefficients(x, y, f, "x")  # (..., B, F)
+    gy, ly = basis_mod.fourier_coefficients(x, y, f, "y")
+    k0, k1 = blocks[..., 0:1], blocks[..., 1:2]
+    k2, k3 = blocks[..., 2:3], blocks[..., 3:4]
+    k4, k5 = blocks[..., 4], blocks[..., 5]  # (..., B)
+    out = jnp.concatenate(
+        [
+            gx * k0 - lx * k1,
+            lx * k0 + gx * k1,
+            gy * k2 - ly * k3,
+            ly * k2 + gy * k3,
+            # theta pair: phi_k^(theta) = rho(t)
+            jnp.stack([ct * k4 - st * k5, st * k4 + ct * k5], axis=-1),
+        ],
+        axis=-1,
+    )
+    return (scale_pref * out).reshape(k.shape[:-1] + (-1,))
+
+
+def unproject_o_jnp(ot, pose, scales, f: int):
+    """o = phi_q(p) o_tilde (Alg. 2 line 4): (..., (4F+2)B) -> (..., 6B)."""
+    w = 4 * f + 2
+    nb = ot.shape[-1] // w
+    blocks = ot.reshape(ot.shape[:-1] + (nb, w))
+    x, y, t = _prep(pose, scales)
+    ct, st = jnp.cos(t), jnp.sin(t)  # (..., 1)
+    b = basis_mod.eval_basis(t[..., 0], f)[..., None, :]  # (..., 1, F)
+    vx = -x * ct - y * st  # (..., B)
+    vy = x * st - y * ct
+    cx, sx = jnp.cos(vx), jnp.sin(vx)  # (..., B)
+    cy, sy = jnp.cos(vy), jnp.sin(vy)
+    # b-contractions: per block, s = b . ot_slice
+    sxa = jnp.sum(b * blocks[..., 0:f], axis=-1)  # (..., B)
+    sxb = jnp.sum(b * blocks[..., f : 2 * f], axis=-1)
+    sya = jnp.sum(b * blocks[..., 2 * f : 3 * f], axis=-1)
+    syb = jnp.sum(b * blocks[..., 3 * f : 4 * f], axis=-1)
+    o4, o5 = blocks[..., 4 * f], blocks[..., 4 * f + 1]  # (..., B)
+    out = jnp.stack(
+        [
+            cx * sxa - sx * sxb,
+            sx * sxa + cx * sxb,
+            cy * sya - sy * syb,
+            sy * sya + cy * syb,
+            # theta pair: phi_q^(theta) = rho(-t)
+            ct * o4 + st * o5,
+            -st * o4 + ct * o5,
+        ],
+        axis=-1,
+    )
+    return out.reshape(ot.shape[:-1] + (-1,))
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels (token-tiled)
+# --------------------------------------------------------------------------
+
+def _q_kernel(f, scale_pref, pose_ref, q_ref, scales_ref, o_ref):
+    o_ref[...] = project_q_jnp(
+        q_ref[...], pose_ref[...], scales_ref[...], f, scale_pref
+    )
+
+
+def _k_kernel(f, scale_pref, pose_ref, k_ref, scales_ref, o_ref):
+    o_ref[...] = project_k_jnp(
+        k_ref[...], pose_ref[...], scales_ref[...], f, scale_pref
+    )
+
+
+def _o_kernel(f, pose_ref, ot_ref, scales_ref, o_ref):
+    o_ref[...] = unproject_o_jnp(ot_ref[...], pose_ref[...], scales_ref[...], f)
+
+
+def _tile_for(n: int) -> int:
+    return TILE if n % TILE == 0 else n
+
+
+def _projection_call(kernel, pose, x, scales, out_w):
+    n, d = x.shape
+    tile = _tile_for(n)
+    nb = scales.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 3), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((nb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, out_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, out_w), jnp.float32),
+        interpret=True,
+    )(pose, x, scales)
+
+
+def project_q_pallas(q, pose, scales, f: int, scale_pref: float = 1.0):
+    """Pallas-tiled q projection.  q: (N, 6B), pose: (N, 3)."""
+    nb = q.shape[-1] // 6
+    sc = jnp.broadcast_to(jnp.asarray(scales, jnp.float32), (nb,))
+    out_w = (4 * f + 2) * nb
+    return _projection_call(
+        functools.partial(_q_kernel, f, scale_pref), pose, q, sc, out_w
+    )
+
+
+def project_k_pallas(k, pose, scales, f: int, scale_pref: float = 1.0):
+    """Pallas-tiled k (or v with scale_pref=1) projection."""
+    nb = k.shape[-1] // 6
+    sc = jnp.broadcast_to(jnp.asarray(scales, jnp.float32), (nb,))
+    out_w = (4 * f + 2) * nb
+    return _projection_call(
+        functools.partial(_k_kernel, f, scale_pref), pose, k, sc, out_w
+    )
+
+
+def unproject_o_pallas(ot, pose, scales, f: int):
+    """Pallas-tiled output unprojection.  ot: (N, (4F+2)B)."""
+    nb = ot.shape[-1] // (4 * f + 2)
+    sc = jnp.broadcast_to(jnp.asarray(scales, jnp.float32), (nb,))
+    return _projection_call(
+        functools.partial(_o_kernel, f), pose, ot, sc, 6 * nb
+    )
+
+
+def scales_for(head_dim: int, spatial_scales) -> jnp.ndarray:
+    return block_scales(head_dim, 6, spatial_scales)

@@ -1,0 +1,244 @@
+"""L2: the agent-simulation transformer (JAX, build-time only).
+
+A next-token-prediction model over tokenized driving scenes (paper Sec.
+IV-B): each token is an agent-timestep or a map element with an associated
+SE(2) pose; a transformer with one of four relative-attention mechanisms
+predicts a categorical distribution over a discrete action codebook.
+
+The four attention methods (paper Table I):
+
+* ``abs``        — absolute position embeddings added to features, plain SDPA
+* ``rope2d``     — 2D RoPE (Eq. 7), translation invariant only
+* ``se2rep``     — SE(2) homogeneous representation (Eq. 9)
+* ``se2fourier`` — the paper's SE(2) Fourier mechanism (Eq. 19)
+
+All methods share an identical parameter structure so the Rust coordinator
+can treat checkpoints uniformly.  The SDPA inner loop is the Pallas flash
+kernel from ``kernels/flash_sdpa.py`` (linear memory, custom VJP).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import (
+    METHOD_ABS,
+    METHOD_ROPE2D,
+    METHOD_SE2FOURIER,
+    METHOD_SE2REP,
+    ModelConfig,
+)
+from .kernels import rope as rope_mod
+from .kernels import se2_fourier as se2f
+from .kernels.flash_sdpa import flash_sdpa_batched
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Deterministic name -> shape map; the manifest order is sorted(name)."""
+    h = cfg.n_heads * cfg.head_dim
+    shapes = {
+        "embed_w": (cfg.feat_dim, cfg.d_model),
+        "embed_b": (cfg.d_model,),
+        # absolute-position pathway (used by method 'abs' only, but always
+        # present so every method has an identical checkpoint layout)
+        "posemb_w": (24, cfg.d_model),
+        "posemb_b": (cfg.d_model,),
+        "final_ln_g": (cfg.d_model,),
+        "final_ln_b": (cfg.d_model,),
+        "head_w": (cfg.d_model, cfg.n_actions),
+        "head_b": (cfg.n_actions,),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layer{i}_"
+        shapes.update(
+            {
+                p + "ln1_g": (cfg.d_model,),
+                p + "ln1_b": (cfg.d_model,),
+                p + "wqkv": (cfg.d_model, 3 * h),
+                p + "bqkv": (3 * h,),
+                p + "wo": (h, cfg.d_model),
+                p + "bo": (cfg.d_model,),
+                p + "ln2_g": (cfg.d_model,),
+                p + "ln2_b": (cfg.d_model,),
+                p + "wff1": (cfg.d_model, cfg.d_ff),
+                p + "bff1": (cfg.d_ff,),
+                p + "wff2": (cfg.d_ff, cfg.d_model),
+                p + "bff2": (cfg.d_model,),
+            }
+        )
+    return shapes
+
+
+def init_params(seed, cfg: ModelConfig) -> Params:
+    """Initialize parameters from an int32 seed (traceable, AOT-friendly)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params = {}
+    for name in sorted(shapes):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):  # layernorm gains
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 1.0 / math.sqrt(max(1, fan_in))
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def pose_sincos(pose):
+    """Sin-cos embedding of an SE(2) pose (for the 'abs' baseline): four
+    frequencies over x and y plus heading harmonics, width 24."""
+    x, y, t = pose[..., 0], pose[..., 1], pose[..., 2]
+    feats = []
+    for freq in (0.5, 1.0, 2.0, 4.0):
+        feats += [jnp.sin(freq * x), jnp.cos(freq * x),
+                  jnp.sin(freq * y), jnp.cos(freq * y)]
+    feats += [jnp.sin(t), jnp.cos(t), jnp.sin(2 * t), jnp.cos(2 * t),
+              jnp.sin(3 * t), jnp.cos(3 * t), jnp.sin(4 * t), jnp.cos(4 * t)]
+    return jnp.stack(feats, axis=-1)  # (..., 24)
+
+
+def _project_qkv(q, k, v, pose, cfg: ModelConfig, method: str):
+    """Apply the method's phi_q^T / phi_k maps per head.
+
+    q, k, v: (B, N, H, dh); pose: (B, N, 3) broadcast over heads as
+    (B, N, 1, 3).  Returns projected (B, N, H, c) tensors plus the SDPA
+    scale 1/sqrt(c) (Alg. 2 line 3).
+    """
+    pb = pose[:, :, None, :]  # (B, N, 1, 3)
+    dh = cfg.head_dim
+    if method == METHOD_ABS:
+        return q, k, v, 1.0 / math.sqrt(dh)
+    if method == METHOD_ROPE2D:
+        scales = rope_mod.block_scales(dh, 4, cfg.spatial_scales)
+        qp = rope_mod.rope2d_project(q, pb, scales)
+        kp = rope_mod.rope2d_project(k, pb, scales)
+        # Alg. 2 transforms values too (v~ = phi_k v); combined with the
+        # phi_q post-rotation this equals Alg. 1's phi(p_rel) v.
+        vp = rope_mod.rope2d_project(v, pb, scales)
+        return qp, kp, vp, 1.0 / math.sqrt(dh)
+    if method == METHOD_SE2REP:
+        scales = rope_mod.block_scales(dh, 3, cfg.spatial_scales)
+        qp = rope_mod.se2rep_project_q(q, pb, scales)
+        kp = rope_mod.se2rep_project_k(k, pb, scales)
+        vp = rope_mod.se2rep_project_k(v, pb, scales)
+        return qp, kp, vp, 1.0 / math.sqrt(dh)
+    if method == METHOD_SE2FOURIER:
+        f = cfg.fourier_f
+        scales = se2f.scales_for(dh, cfg.spatial_scales)
+        c = cfg.se2f_proj_dim
+        pref = (float(c) / float(dh)) ** 0.25  # Alg. 2 prefactor (c/d)^(1/4)
+        qp = se2f.project_q_jnp(q, pb, scales, f, pref)
+        kp = se2f.project_k_jnp(k, pb, scales, f, pref)
+        vp = se2f.project_k_jnp(v, pb, scales, f, 1.0)
+        return qp, kp, vp, 1.0 / math.sqrt(c)
+    raise ValueError(f"unknown method {method}")
+
+
+def _unproject_o(o, pose, cfg: ModelConfig, method: str):
+    """Alg. 2 line 4: o = phi_q(p) o_tilde (identity for abs)."""
+    pb = pose[:, :, None, :]
+    dh = cfg.head_dim
+    if method == METHOD_ROPE2D:
+        scales = rope_mod.block_scales(dh, 4, cfg.spatial_scales)
+        # phi_q(p) = rho(-a x) blocks: rotate by negated coordinates
+        return rope_mod.rope2d_project(o, -pb, scales)
+    if method == METHOD_SE2REP:
+        scales = rope_mod.block_scales(dh, 3, cfg.spatial_scales)
+        return rope_mod.se2rep_unproject_o(o, pb, scales)
+    if method == METHOD_SE2FOURIER:
+        scales = se2f.scales_for(dh, cfg.spatial_scales)
+        return se2f.unproject_o_jnp(o, pb, scales, cfg.fourier_f)
+    return o
+
+
+def attention(x, pose, tq, params: Params, prefix: str,
+              cfg: ModelConfig, method: str):
+    """One multi-head relative-attention layer (paper Alg. 2 end-to-end)."""
+    bsz, n, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    qkv = x @ params[prefix + "wqkv"] + params[prefix + "bqkv"]
+    qkv = qkv.reshape(bsz, n, 3, h, dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, N, H, dh)
+    qp, kp, vp, scale = _project_qkv(q, k, v, pose, cfg, method)
+    # (B, N, H, c) -> (B, H, N, c)
+    qp = qp.transpose(0, 2, 1, 3)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    ot = flash_sdpa_batched(qp, kp, vp, tq, tq, scale)
+    ot = ot.transpose(0, 2, 1, 3)  # (B, N, H, c)
+    o = _unproject_o(ot, pose, cfg, method)  # (B, N, H, dh)
+    o = o.reshape(bsz, n, h * dh)
+    return o @ params[prefix + "wo"] + params[prefix + "bo"]
+
+
+def forward(params: Params, feat, pose, tq, cfg: ModelConfig, method: str):
+    """Logits over the action codebook.
+
+    feat: (B, N, feat_dim) raw token features
+    pose: (B, N, 3) SE(2) pose per token
+    tq:   (B, N) int32 visibility timestep (see flash_sdpa docstring)
+    returns logits (B, N, n_actions)
+    """
+    x = feat @ params["embed_w"] + params["embed_b"]
+    if method == METHOD_ABS:
+        x = x + pose_sincos(pose) @ params["posemb_w"] + params["posemb_b"]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}_"
+        a = attention(
+            layer_norm(x, params[p + "ln1_g"], params[p + "ln1_b"]),
+            pose, tq, params, p, cfg, method,
+        )
+        x = x + a
+        mlp_in = layer_norm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        hdn = jax.nn.gelu(mlp_in @ params[p + "wff1"] + params[p + "bff1"])
+        x = x + hdn @ params[p + "wff2"] + params[p + "bff2"]
+    x = layer_norm(x, params["final_ln_g"], params["final_ln_b"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+def nll_loss(params: Params, feat, pose, tq, target, cfg: ModelConfig,
+             method: str):
+    """Masked mean cross-entropy; target < 0 means no loss at that token."""
+    logits = forward(params, feat, pose, tq, cfg, method)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.clip(target, 0, cfg.n_actions - 1)
+    chosen = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = logz - chosen
+    mask = (target >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def decode(params: Params, feat, pose, tq, seed, temperature,
+           cfg: ModelConfig, method: str):
+    """Sample actions at every token: returns (actions, logp, logits)."""
+    logits = forward(params, feat, pose, tq, cfg, method)
+    key = jax.random.PRNGKey(seed)
+    scaled = logits / jnp.maximum(temperature, 1e-3)
+    actions = jax.random.categorical(key, scaled, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    chosen = jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+    return actions.astype(jnp.int32), chosen, logits

@@ -1,0 +1,48 @@
+"""Training step (Adam) for the agent-simulation model.
+
+Hand-written Adam so the whole optimizer lowers into a single AOT artifact:
+the Rust trainer holds params / m / v as device-resident PJRT buffers and
+feeds them back each step (no optimizer state ever lives host-side).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    """Adam first/second-moment accumulators, zero-initialized."""
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def train_step(params: Params, m: Params, v: Params, step, feat, pose, tq,
+               target, cfg: ModelConfig, method: str):
+    """One Adam step.  ``step`` is a float32 scalar (1-based).
+
+    Returns (new_params, new_m, new_v, loss).
+    """
+    loss, grads = jax.value_and_grad(model.nll_loss)(
+        params, feat, pose, tq, target, cfg, method
+    )
+    b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.learning_rate
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_params, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        m_k = b1 * m[k] + (1.0 - b1) * g
+        v_k = b2 * v[k] + (1.0 - b2) * g * g
+        update = lr * (m_k / bc1) / (jnp.sqrt(v_k / bc2) + eps)
+        new_params[k] = params[k] - update
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_params, new_m, new_v, loss

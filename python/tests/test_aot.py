@@ -1,0 +1,70 @@
+"""AOT pipeline smoke tests: HLO text emission + manifest correctness.
+
+Uses the tiny TEST_CONFIG so lowering stays fast; the full DEFAULT_CONFIG
+artifacts are produced by ``make artifacts`` and exercised by the Rust
+integration tests.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.config import TEST_CONFIG
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build_all(out, TEST_CONFIG, methods=("se2fourier",))
+    return out
+
+
+def test_artifacts_exist(artifact_dir):
+    for name in ("init", "flash_sdpa", "fwd_se2fourier",
+                 "train_step_se2fourier", "decode_se2fourier",
+                 "attn_se2fourier"):
+        assert os.path.exists(os.path.join(artifact_dir, f"{name}.hlo.txt"))
+        assert os.path.exists(
+            os.path.join(artifact_dir, f"{name}.manifest.json"))
+    assert os.path.exists(os.path.join(artifact_dir, "index.json"))
+
+
+def test_hlo_text_is_parseable_module(artifact_dir):
+    text = open(os.path.join(artifact_dir, "fwd_se2fourier.hlo.txt")).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_shapes(artifact_dir):
+    cfg = TEST_CONFIG
+    man = json.load(
+        open(os.path.join(artifact_dir, "fwd_se2fourier.manifest.json")))
+    by_name = {e["name"]: e for e in man["inputs"]}
+    assert by_name["feat"]["shape"] == [cfg.batch_size, cfg.n_tokens,
+                                        cfg.feat_dim]
+    assert by_name["pose"]["shape"] == [cfg.batch_size, cfg.n_tokens, 3]
+    assert by_name["tq"]["dtype"] == "int32"
+    (out,) = man["outputs"]
+    assert out["shape"] == [cfg.batch_size, cfg.n_tokens, cfg.n_actions]
+
+
+def test_train_manifest_roundtrip(artifact_dir):
+    man = json.load(open(
+        os.path.join(artifact_dir, "train_step_se2fourier.manifest.json")))
+    in_params = [e for e in man["inputs"] if e["name"].startswith("param:")]
+    out_params = [e for e in man["outputs"]
+                  if e["name"].startswith("param:")]
+    assert [e["name"] for e in in_params] == [e["name"] for e in out_params]
+    assert [e["shape"] for e in in_params] == [e["shape"] for e in
+                                               out_params]
+    assert man["outputs"][-1]["name"] == "loss"
+    assert man["outputs"][-1]["shape"] == []
+
+
+def test_index_config(artifact_dir):
+    idx = json.load(open(os.path.join(artifact_dir, "index.json")))
+    assert idx["config"]["n_actions"] == TEST_CONFIG.n_actions
+    assert idx["config"]["fourier_f"] == TEST_CONFIG.fourier_f
+    assert "param_names" in idx and len(idx["param_names"]) > 10

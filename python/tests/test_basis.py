@@ -1,0 +1,126 @@
+"""Unit tests for the Fourier basis machinery (paper Sec. III-B)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import basis
+
+
+def test_basis_frequencies():
+    assert list(basis.basis_frequencies(7)) == [0, 1, 1, 2, 2, 3, 3]
+
+
+def test_eval_basis_matches_definition():
+    f = 9
+    theta = jnp.linspace(-np.pi, np.pi, 17)
+    b = np.asarray(basis.eval_basis(theta, f))
+    for i in range(f):
+        if i % 2 == 0:
+            expect = np.cos((i / 2) * np.asarray(theta))
+        else:
+            expect = np.sin(((i + 1) / 2) * np.asarray(theta))
+        np.testing.assert_allclose(b[:, i], expect, atol=1e-6)
+
+
+def test_quadrature_matrix_orthogonality():
+    """Quadrature of g_i against g_j recovers the identity (i, j < F):
+    the 2F-point rule integrates products of basis elements exactly."""
+    f = 8
+    z = basis.quadrature_grid(f)
+    w = basis.quadrature_matrix(f)
+    for i in range(f):
+        gi = (np.cos((i // 2) * z) if i % 2 == 0
+              else np.sin(((i + 1) // 2) * z))
+        coeffs = gi @ w
+        expect = np.zeros(f)
+        expect[i] = 1.0
+        np.testing.assert_allclose(coeffs, expect, atol=1e-6)
+
+
+def test_quadrature_jnp_matches_numpy():
+    for f in (4, 9, 18):
+        np.testing.assert_allclose(
+            np.asarray(basis.quadrature_matrix_jnp(f)),
+            basis.quadrature_matrix(f),
+            atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(basis.quadrature_grid_jnp(f)),
+            basis.quadrature_grid(f),
+            atol=1e-6,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    x=st.floats(-2.0, 2.0),
+    y=st.floats(-2.0, 2.0),
+    theta=st.floats(-np.pi, np.pi),
+)
+def test_fourier_approximation_error_small_radius(x, y, theta):
+    """With F=18 and radius <= ~2.8 the pointwise approximation of
+    cos(u(theta)) is accurate to ~1e-4 (paper Fig. 3 band)."""
+    f = 18
+    xx = jnp.asarray([x], jnp.float32)
+    yy = jnp.asarray([y], jnp.float32)
+    approx = basis.approx_cos_u(xx, yy, jnp.asarray([theta]), f, "x")
+    exact = np.cos(x * np.cos(theta) + y * np.sin(theta))
+    assert abs(float(approx[0, 0]) - exact) < 5e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.floats(0.1, 4.0),
+    psi=st.floats(-np.pi, np.pi),
+    theta=st.floats(-np.pi, np.pi),
+)
+def test_coefficients_jacobi_anger(r, psi, theta):
+    """Cross-check the quadrature coefficients against the Jacobi-Anger
+    reconstruction: sum_i Gamma(i) g_i(theta) ~= cos(u(theta))."""
+    f = 28
+    x, y = r * np.cos(psi), r * np.sin(psi)
+    gamma, lam = basis.fourier_coefficients(
+        jnp.asarray([x], jnp.float32), jnp.asarray([y], jnp.float32), f, "x"
+    )
+    b = basis.eval_basis(jnp.asarray([theta], jnp.float32), f)
+    recon_cos = float(jnp.sum(gamma[0] * b[0]))
+    recon_sin = float(jnp.sum(lam[0] * b[0]))
+    u = x * np.cos(theta) + y * np.sin(theta)
+    assert abs(recon_cos - np.cos(u)) < 1e-3
+    assert abs(recon_sin - np.sin(u)) < 1e-3
+
+
+def test_error_grows_with_radius():
+    """Fig. 3 shape: for fixed F, error increases with key radius."""
+    f = 12
+    thetas = jnp.linspace(-np.pi, np.pi, 64)
+    errs = []
+    for r in (1.0, 4.0, 8.0):
+        x, y = r / np.sqrt(2), r / np.sqrt(2)
+        approx = basis.approx_cos_u(
+            jnp.asarray([x], jnp.float32), jnp.asarray([y], jnp.float32),
+            thetas, f, "x",
+        )
+        exact = np.cos(x * np.cos(np.asarray(thetas))
+                       + y * np.sin(np.asarray(thetas)))
+        errs.append(float(np.max(np.abs(np.asarray(approx) - exact))))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_error_shrinks_with_basis_size():
+    """Fig. 3 shape: for fixed radius, error decreases with F."""
+    x, y = 3.0, -2.0
+    thetas = jnp.linspace(-np.pi, np.pi, 64)
+    errs = []
+    for f in (6, 12, 18, 28):
+        approx = basis.approx_cos_u(
+            jnp.asarray([x], jnp.float32), jnp.asarray([y], jnp.float32),
+            thetas, f, "x",
+        )
+        exact = np.cos(x * np.cos(np.asarray(thetas))
+                       + y * np.sin(np.asarray(thetas)))
+        errs.append(float(np.max(np.abs(np.asarray(approx) - exact))))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+    assert errs[3] < 1e-4

@@ -1,0 +1,117 @@
+"""SE(2) invariance properties (paper Eq. 2 / Fig. 1).
+
+Applying a global frame change z^{-1} to every pose must leave the attention
+output unchanged — exactly for se2rep and the quadratic oracle, to Fourier
+tolerance for se2fourier.  rope2d must be invariant to translations but NOT
+to rotations; abs is invariant to neither.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import geometry
+from compile.kernels import ref
+
+SCALES = (1.0, 0.5)
+
+
+def _scene(seed, n=8, m=10, d=12, rmax=1.5):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    pq = jnp.asarray(np.column_stack([
+        rng.uniform(-rmax, rmax, n), rng.uniform(-rmax, rmax, n),
+        rng.uniform(-np.pi, np.pi, n)]), jnp.float32)
+    pk = jnp.asarray(np.column_stack([
+        rng.uniform(-rmax, rmax, m), rng.uniform(-rmax, rmax, m),
+        rng.uniform(-np.pi, np.pi, m)]), jnp.float32)
+    return q, k, v, pq, pk
+
+
+def _shift(poses, z):
+    zinv = geometry.inverse(jnp.asarray(z, jnp.float32))
+    return geometry.compose(zinv[None, :], poses)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    zx=st.floats(-1.0, 1.0), zy=st.floats(-1.0, 1.0),
+    zt=st.floats(-np.pi, np.pi),
+)
+def test_alg1_se2_invariant(seed, zx, zy, zt):
+    q, k, v, pq, pk = _scene(seed)
+    z = (zx, zy, zt)
+    for method in ("se2rep", "se2fourier"):
+        o = ref.algorithm1(q, k, v, pq, pk, method, SCALES)
+        o2 = ref.algorithm1(q, k, v, _shift(pq, z), _shift(pk, z),
+                            method, SCALES)
+        np.testing.assert_allclose(o, o2, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    zx=st.floats(-1.0, 1.0), zy=st.floats(-1.0, 1.0),
+    zt=st.floats(-np.pi, np.pi),
+)
+def test_alg2_se2fourier_invariant(seed, zx, zy, zt):
+    """The linear-memory version inherits invariance up to approximation
+    error.  Note the frame shift moves positions off-center, so the Fourier
+    radius grows — tolerance reflects F=20 at radius <= ~3.5."""
+    q, k, v, pq, pk = _scene(seed)
+    z = (zx, zy, zt)
+    o = ref.algorithm2_explicit(q, k, v, pq, pk, "se2fourier", SCALES, f=20)
+    o2 = ref.algorithm2_explicit(
+        q, k, v, _shift(pq, z), _shift(pk, z), "se2fourier", SCALES, f=20
+    )
+    np.testing.assert_allclose(o, o2, atol=5e-3)
+
+
+def test_rope2d_translation_invariant_only():
+    q, k, v, pq, pk = _scene(7)
+    # translation: invariant
+    o = ref.algorithm1(q, k, v, pq, pk, "rope2d", SCALES)
+    zt = (0.7, -0.3, 0.0)
+    o_trans = ref.algorithm1(q, k, v, _shift(pq, zt), _shift(pk, zt),
+                             "rope2d", SCALES)
+    np.testing.assert_allclose(o, o_trans, atol=1e-4)
+    # rotation: NOT invariant (Fig. 1b)
+    zr = (0.0, 0.0, 1.1)
+    o_rot = ref.algorithm1(q, k, v, _shift(pq, zr), _shift(pk, zr),
+                           "rope2d", SCALES)
+    assert float(jnp.max(jnp.abs(o - o_rot))) > 1e-3
+
+
+def test_se2_group_axioms():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(-2, 2, (5, 3)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-2, 2, (5, 3)), jnp.float32)
+    c = jnp.asarray(rng.uniform(-2, 2, (5, 3)), jnp.float32)
+    ident = jnp.zeros((5, 3), jnp.float32)
+    # identity
+    np.testing.assert_allclose(
+        geometry.compose(a, ident), a, atol=1e-5)
+    # inverse
+    inv = geometry.compose(geometry.inverse(a), a)
+    np.testing.assert_allclose(inv[:, :2], np.zeros((5, 2)), atol=1e-5)
+    np.testing.assert_allclose(np.sin(inv[:, 2]), np.zeros(5), atol=1e-5)
+    # associativity
+    lhs = geometry.compose(geometry.compose(a, b), c)
+    rhs = geometry.compose(a, geometry.compose(b, c))
+    np.testing.assert_allclose(lhs[:, :2], rhs[:, :2], atol=1e-4)
+    np.testing.assert_allclose(
+        np.sin(lhs[:, 2] - rhs[:, 2]), np.zeros(5), atol=1e-5)
+
+
+def test_matrix_representation_homomorphism():
+    """psi(a * b) == psi(a) psi(b) — Eq. 8 is a group representation."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(-2, 2, (4, 3)), jnp.float32)
+    b = jnp.asarray(rng.uniform(-2, 2, (4, 3)), jnp.float32)
+    lhs = geometry.se2_matrix(geometry.compose(a, b))
+    rhs = jnp.matmul(geometry.se2_matrix(a), geometry.se2_matrix(b))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)

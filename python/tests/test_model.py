@@ -1,0 +1,109 @@
+"""Model-level tests: shapes, masking semantics, and per-method invariance."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import geometry, model
+from compile.config import ALL_METHODS, TEST_CONFIG as CFG
+
+
+def _batch(seed, cfg=CFG):
+    rng = np.random.default_rng(seed)
+    b, n = cfg.batch_size, cfg.n_tokens
+    feat = jnp.asarray(rng.normal(size=(b, n, cfg.feat_dim)), jnp.float32)
+    pose = jnp.asarray(np.concatenate([
+        rng.uniform(-2, 2, (b, n, 2)),
+        rng.uniform(-np.pi, np.pi, (b, n, 1))], -1), jnp.float32)
+    tq = jnp.asarray(rng.integers(0, 6, (b, n)), jnp.int32)
+    target = jnp.asarray(rng.integers(-1, cfg.n_actions, (b, n)), jnp.int32)
+    return feat, pose, tq, target
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0, CFG)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_forward_shape_and_finite(params, method):
+    feat, pose, tq, _ = _batch(0)
+    logits = model.forward(params, feat, pose, tq, CFG, method)
+    assert logits.shape == (CFG.batch_size, CFG.n_tokens, CFG.n_actions)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_loss_positive_and_near_uniform_at_init(params, method):
+    feat, pose, tq, target = _batch(1)
+    loss = float(model.nll_loss(params, feat, pose, tq, target, CFG, method))
+    assert 0.0 < loss < 2.0 * np.log(CFG.n_actions)
+
+
+def test_future_tokens_do_not_affect_past():
+    """Causality: changing features of a later-timestep token must not
+    change logits at earlier-timestep tokens."""
+    params = model.init_params(0, CFG)
+    feat, pose, tq, _ = _batch(2)
+    b, n = feat.shape[:2]
+    tq = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    logits = model.forward(params, feat, pose, tq, CFG, "se2fourier")
+    feat2 = feat.at[:, n - 1].set(feat[:, n - 1] + 100.0)
+    logits2 = model.forward(params, feat2, pose, tq, CFG, "se2fourier")
+    np.testing.assert_allclose(
+        logits[:, : n - 1], logits2[:, : n - 1], atol=1e-4
+    )
+    assert float(jnp.max(jnp.abs(logits[:, -1] - logits2[:, -1]))) > 1e-3
+
+
+@pytest.mark.parametrize(
+    "method,should_be_invariant,tol",
+    [
+        ("abs", False, None),
+        ("rope2d", False, None),
+        ("se2rep", True, 1e-3),
+        ("se2fourier", True, 1e-1),
+    ],
+)
+def test_model_se2_invariance(method, should_be_invariant, tol):
+    """End-to-end Fig. 1 claim: full-model logits under a global frame
+    rotation+translation."""
+    params = model.init_params(0, CFG)
+    feat, pose, tq, _ = _batch(3)
+    z = jnp.asarray([0.5, -0.4, 0.9], jnp.float32)
+    zinv = geometry.inverse(z)
+    pose2 = geometry.compose(
+        jnp.broadcast_to(zinv, pose.shape[:-1] + (3,)), pose
+    )
+    l1 = model.forward(params, feat, pose, tq, CFG, method)
+    l2 = model.forward(params, feat, pose2, tq, CFG, method)
+    diff = float(jnp.max(jnp.abs(l1 - l2)))
+    if should_be_invariant:
+        assert diff < tol, f"{method} should be invariant, diff={diff}"
+    else:
+        assert diff > 1e-3, f"{method} should NOT be invariant, diff={diff}"
+
+
+def test_decode_samples_valid_actions():
+    params = model.init_params(0, CFG)
+    feat, pose, tq, _ = _batch(4)
+    actions, logp, logits = model.decode(
+        params, feat, pose, tq, 123, 1.0, CFG, "se2fourier"
+    )
+    assert actions.shape == (CFG.batch_size, CFG.n_tokens)
+    assert int(actions.min()) >= 0 and int(actions.max()) < CFG.n_actions
+    assert bool(jnp.all(logp <= 0.0))
+    # temperature -> 0 approaches greedy
+    greedy, _, _ = model.decode(params, feat, pose, tq, 123, 1e-3, CFG,
+                                "se2fourier")
+    np.testing.assert_array_equal(
+        np.asarray(greedy), np.asarray(jnp.argmax(logits, -1))
+    )
+
+
+def test_param_shapes_consistent():
+    shapes = model.param_shapes(CFG)
+    params = model.init_params(1, CFG)
+    assert sorted(shapes) == sorted(params)
+    for k, s in shapes.items():
+        assert params[k].shape == s, k

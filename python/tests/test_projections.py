@@ -1,0 +1,182 @@
+"""Projection kernels vs explicit phi_q/phi_k matrices, and Alg. 2 vs Alg. 1.
+
+These are the core correctness signals for the paper's mechanism:
+* the fast per-token projections equal the explicit (slow) matrices,
+* Algorithm 2 == Algorithm 1 exactly for the factorizable methods,
+* Algorithm 2 ~= Algorithm 1 to Fourier tolerance for SE(2) Fourier,
+* the Pallas projection kernels match the jnp fallbacks.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rope as rope_mod, se2_fourier as se2f
+
+SCALES = (1.0, 0.5)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _poses(rng, n, rmax=2.0):
+    return jnp.asarray(
+        np.column_stack([
+            rng.uniform(-rmax, rmax, n),
+            rng.uniform(-rmax, rmax, n),
+            rng.uniform(-np.pi, np.pi, n),
+        ]),
+        jnp.float32,
+    )
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(42)
+
+
+# --------------------------------------------------------------------------
+# fast projections == explicit matrices
+# --------------------------------------------------------------------------
+
+def test_rope2d_projection_matches_matrix(rng):
+    n, d = 8, 8
+    x = _rand(rng, n, d)
+    pose = _poses(rng, n)
+    scales = rope_mod.block_scales(d, 4, SCALES)
+    fast_q = rope_mod.rope2d_project(x, pose, scales)
+    mat = ref.phi_q_mat_rope2d(pose, d, SCALES)
+    slow_q = jnp.einsum("ndc,nd->nc", mat, x)
+    np.testing.assert_allclose(fast_q, slow_q, atol=1e-5)
+    mat_k = ref.phi_k_mat_rope2d(pose, d, SCALES)
+    slow_k = jnp.einsum("ncd,nd->nc", mat_k, x)
+    # For RoPE, phi_q^T x == phi_k x (both rotate by +a p)
+    np.testing.assert_allclose(fast_q, slow_k, atol=1e-5)
+
+
+def test_se2rep_projection_matches_matrix(rng):
+    n, d = 8, 9
+    x = _rand(rng, n, d)
+    pose = _poses(rng, n)
+    scales = rope_mod.block_scales(d, 3, SCALES)
+    fast_q = rope_mod.se2rep_project_q(x, pose, scales)
+    mat_q = ref.phi_q_mat_se2rep(pose, d, SCALES)
+    np.testing.assert_allclose(
+        fast_q, jnp.einsum("ndc,nd->nc", mat_q, x), atol=1e-5
+    )
+    fast_k = rope_mod.se2rep_project_k(x, pose, scales)
+    mat_k = ref.phi_k_mat_se2rep(pose, d, SCALES)
+    np.testing.assert_allclose(
+        fast_k, jnp.einsum("ncd,nd->nc", mat_k, x), atol=1e-5
+    )
+    fast_o = rope_mod.se2rep_unproject_o(x, pose, scales)
+    np.testing.assert_allclose(
+        fast_o, jnp.einsum("ndc,nc->nd", mat_q, x), atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(f=st.integers(4, 20), seed=st.integers(0, 10_000))
+def test_se2fourier_projection_matches_matrix(f, seed):
+    rng = np.random.default_rng(seed)
+    n, d = 6, 12
+    q = _rand(rng, n, d)
+    pose = _poses(rng, n)
+    scales = se2f.scales_for(d, SCALES)
+    c = (4 * f + 2) * (d // 6)
+    pref = (c / d) ** 0.25
+    mat_q = ref.phi_q_mat_se2fourier(pose, d, SCALES, f)
+    np.testing.assert_allclose(
+        se2f.project_q_jnp(q, pose, scales, f, pref),
+        pref * jnp.einsum("ndc,nd->nc", mat_q, q),
+        atol=1e-4,
+    )
+    mat_k = ref.phi_k_mat_se2fourier(pose, d, SCALES, f)
+    np.testing.assert_allclose(
+        se2f.project_k_jnp(q, pose, scales, f, pref),
+        pref * jnp.einsum("ncd,nd->nc", mat_k, q),
+        atol=1e-4,
+    )
+    ot = _rand(rng, n, c)
+    np.testing.assert_allclose(
+        se2f.unproject_o_jnp(ot, pose, scales, f),
+        jnp.einsum("ndc,nc->nd", mat_q, ot),
+        atol=1e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels == jnp fallbacks
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    f=st.sampled_from([6, 12, 18]),
+    n=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_pallas_projections_match_jnp(f, n, seed):
+    rng = np.random.default_rng(seed)
+    d = 12
+    q = _rand(rng, n, d)
+    pose = _poses(rng, n)
+    scales = se2f.scales_for(d, SCALES)
+    np.testing.assert_allclose(
+        se2f.project_q_pallas(q, pose, scales, f, 1.3),
+        se2f.project_q_jnp(q, pose, scales, f, 1.3),
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        se2f.project_k_pallas(q, pose, scales, f, 1.3),
+        se2f.project_k_jnp(q, pose, scales, f, 1.3),
+        atol=1e-5,
+    )
+    ot = _rand(rng, n, (4 * f + 2) * (d // 6))
+    np.testing.assert_allclose(
+        se2f.unproject_o_pallas(ot, pose, scales, f),
+        se2f.unproject_o_jnp(ot, pose, scales, f),
+        atol=1e-5,
+    )
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 == Algorithm 1
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["rope2d", "se2rep"])
+def test_alg2_equals_alg1_exact_methods(rng, method):
+    n, m, d = 10, 14, 12
+    q, k, v = _rand(rng, n, d), _rand(rng, m, d), _rand(rng, m, d)
+    pq, pk = _poses(rng, n), _poses(rng, m)
+    o1 = ref.algorithm1(q, k, v, pq, pk, method, SCALES)
+    o2 = ref.algorithm2_explicit(q, k, v, pq, pk, method, SCALES)
+    np.testing.assert_allclose(o1, o2, atol=1e-4)
+
+
+@pytest.mark.parametrize("f,tol", [(8, 1.5e-1), (14, 8e-3), (20, 1e-3)])
+def test_alg2_converges_to_alg1_fourier(rng, f, tol):
+    """The linear-memory SE(2) Fourier attention converges to the quadratic
+    oracle as F grows (paper Sec. IV-A)."""
+    n, m, d = 10, 14, 12
+    q, k, v = _rand(rng, n, d), _rand(rng, m, d), _rand(rng, m, d)
+    pq, pk = _poses(rng, n), _poses(rng, m)
+    o1 = ref.algorithm1(q, k, v, pq, pk, "se2fourier", SCALES)
+    o2 = ref.algorithm2_explicit(q, k, v, pq, pk, "se2fourier", SCALES, f=f)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < tol
+
+
+def test_alg1_with_mask(rng):
+    """Masked Alg. 1 == masked Alg. 2 for exact methods."""
+    n, m, d = 8, 8, 8
+    q, k, v = _rand(rng, n, d), _rand(rng, m, d), _rand(rng, m, d)
+    pq, pk = _poses(rng, n), _poses(rng, m)
+    tq = jnp.asarray(np.random.default_rng(0).integers(0, 3, n), jnp.int32)
+    tk = jnp.asarray(np.random.default_rng(1).integers(0, 3, m), jnp.int32)
+    mask = tq[:, None] >= tk[None, :]
+    o1 = ref.algorithm1(q, k, v, pq, pk, "rope2d", SCALES, mask=mask)
+    o2 = ref.algorithm2_explicit(
+        q, k, v, pq, pk, "rope2d", SCALES, mask=mask
+    )
+    np.testing.assert_allclose(o1, o2, atol=1e-4)

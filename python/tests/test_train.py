@@ -1,0 +1,81 @@
+"""Training-step tests: loss decreases, Adam bookkeeping, determinism."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model, train
+from compile.config import ALL_METHODS, TEST_CONFIG as CFG
+
+
+def _batch(seed, learnable=True):
+    """A learnable toy task: target action is a deterministic function of
+    the token features, so a few steps must reduce loss."""
+    rng = np.random.default_rng(seed)
+    b, n = CFG.batch_size, CFG.n_tokens
+    feat = jnp.asarray(rng.normal(size=(b, n, CFG.feat_dim)), jnp.float32)
+    pose = jnp.asarray(np.concatenate([
+        rng.uniform(-2, 2, (b, n, 2)),
+        rng.uniform(-np.pi, np.pi, (b, n, 1))], -1), jnp.float32)
+    tq = jnp.asarray(rng.integers(0, 4, (b, n)), jnp.int32)
+    if learnable:
+        target = jnp.asarray(
+            (np.asarray(feat[..., 0]) > 0).astype(np.int32), jnp.int32
+        )
+    else:
+        target = jnp.asarray(rng.integers(0, CFG.n_actions, (b, n)),
+                             jnp.int32)
+    return feat, pose, tq, target
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_loss_decreases(method):
+    params = model.init_params(0, CFG)
+    m, v = train.init_opt_state(params)
+    feat, pose, tq, target = _batch(0)
+    loss0 = float(model.nll_loss(params, feat, pose, tq, target, CFG, method))
+    for step in range(1, 9):
+        params, m, v, loss = train.train_step(
+            params, m, v, float(step), feat, pose, tq, target, CFG, method
+        )
+    assert float(loss) < loss0, (method, loss0, float(loss))
+
+
+def test_train_step_deterministic():
+    params = model.init_params(0, CFG)
+    m, v = train.init_opt_state(params)
+    feat, pose, tq, target = _batch(1)
+    out1 = train.train_step(params, m, v, 1.0, feat, pose, tq, target,
+                            CFG, "se2fourier")
+    out2 = train.train_step(params, m, v, 1.0, feat, pose, tq, target,
+                            CFG, "se2fourier")
+    np.testing.assert_array_equal(
+        np.asarray(out1[3]), np.asarray(out2[3])
+    )
+    for k in params:
+        np.testing.assert_array_equal(
+            np.asarray(out1[0][k]), np.asarray(out2[0][k])
+        )
+
+
+def test_adam_moments_update():
+    params = model.init_params(0, CFG)
+    m, v = train.init_opt_state(params)
+    feat, pose, tq, target = _batch(2)
+    _, m2, v2, _ = train.train_step(params, m, v, 1.0, feat, pose, tq,
+                                    target, CFG, "rope2d")
+    # second moments are nonnegative and some moments moved
+    moved = 0
+    for k in params:
+        assert bool(jnp.all(v2[k] >= 0.0))
+        if float(jnp.max(jnp.abs(m2[k]))) > 0:
+            moved += 1
+    assert moved > len(params) // 2
+
+
+def test_masked_tokens_get_no_loss():
+    params = model.init_params(0, CFG)
+    feat, pose, tq, target = _batch(3)
+    all_masked = jnp.full_like(target, -1)
+    loss = model.nll_loss(params, feat, pose, tq, all_masked, CFG, "abs")
+    assert float(loss) == 0.0

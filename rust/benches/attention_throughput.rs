@@ -1,0 +1,157 @@
+//! Attention wall-clock across methods and scene sizes ("practical to
+//! implement", paper Sec. I/IV): native linear (Alg. 2) vs native quadratic
+//! (Alg. 1) per method, plus the AOT Pallas/PJRT artifact at its lowered
+//! shape.
+//!
+//! Expected shape: quadratic grows ~N^2 and overtakes the linear path by
+//! N in the hundreds; SE(2) Fourier pays a constant-factor premium over
+//! 2D RoPE (projected width c = (4F+2)/6 * d) but keeps the same scaling.
+
+use se2attn::attention::{linear, quadratic, AttnProblem};
+use se2attn::benchlib::{bench_quick, record_row, Table};
+use se2attn::config::Method;
+use se2attn::geometry::Pose;
+use se2attn::jsonio::Json;
+use se2attn::prng::Rng;
+use se2attn::runtime::{Engine, HostTensor};
+
+const D: usize = 48;
+const F: usize = 12;
+
+struct Data {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    poses: Vec<Pose>,
+    tq: Vec<i32>,
+}
+
+fn data(n: usize) -> Data {
+    let mut rng = Rng::new(n as u64 ^ 0xBEEF);
+    Data {
+        q: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        k: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        v: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        poses: (0..n)
+            .map(|_| Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.1, 3.1)))
+            .collect(),
+        tq: (0..n).map(|i| (i / 8) as i32).collect(),
+    }
+}
+
+fn problem<'a>(m: Method, d: &'a Data, scales: &'a [f64]) -> AttnProblem<'a> {
+    AttnProblem {
+        method: m,
+        d: D,
+        fourier_f: F,
+        scales,
+        q: &d.q,
+        k: &d.k,
+        v: &d.v,
+        pose_q: &d.poses,
+        pose_k: &d.poses,
+        tq: &d.tq,
+        tk: &d.tq,
+    }
+}
+
+fn main() {
+    let full = std::env::var("SE2ATTN_BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full {
+        &[64, 128, 256, 512, 1024, 2048]
+    } else {
+        &[64, 128, 256, 512]
+    };
+    let scales = [1.0, 0.5, 0.25, 0.125];
+
+    println!("# Attention throughput — native CPU implementations (d={D}, F={F})\n");
+    let mut table = Table::new(&["method", "N", "linear ms", "quadratic ms", "quad/lin"]);
+    for &n in sizes {
+        let d = data(n);
+        for m in Method::ALL {
+            let p = problem(m, &d, &scales);
+            let lin = bench_quick(|| {
+                std::hint::black_box(linear::attention(&p));
+            });
+            // quadratic at large N is exactly the cost being demonstrated —
+            // cap it to keep default bench time sane
+            let quad_ms = if n <= 512 || full {
+                let s = bench_quick(|| {
+                    std::hint::black_box(quadratic::attention(&p));
+                });
+                s.mean_ms()
+            } else {
+                f64::NAN
+            };
+            table.row(vec![
+                m.name().into(),
+                n.to_string(),
+                format!("{:.3}", lin.mean_ms()),
+                if quad_ms.is_nan() { "-".into() } else { format!("{quad_ms:.3}") },
+                if quad_ms.is_nan() { "-".into() } else { format!("{:.1}x", quad_ms / lin.mean_ms()) },
+            ]);
+            record_row(
+                "attention_throughput",
+                Json::obj(vec![
+                    ("method", Json::Str(m.name().into())),
+                    ("n", Json::Num(n as f64)),
+                    ("linear_ms", Json::Num(lin.mean_ms())),
+                    ("quadratic_ms", Json::Num(quad_ms)),
+                ]),
+            );
+        }
+    }
+    table.print();
+
+    // ---- AOT artifact timing (the production path) ----------------------
+    println!("\n# AOT Pallas/PJRT artifacts at lowered shape (N=64, single head)");
+    match Engine::cpu("artifacts") {
+        Ok(engine) => {
+            let n = 64;
+            let d = data(n);
+            let pose_flat: Vec<f32> = d
+                .poses
+                .iter()
+                .flat_map(|p| [p.x as f32, p.y as f32, p.theta as f32])
+                .collect();
+            let mut t = Table::new(&["artifact", "mean ms", "p95 ms"]);
+            let mut names: Vec<String> =
+                Method::ALL.iter().map(|m| format!("attn_{}", m.name())).collect();
+            // the fused single-kernel variant (projection + SDPA +
+            // unprojection in one Pallas call — see kernels/fused_attn.py)
+            names.push("attn_se2fourier_fused".to_string());
+            for name in names {
+                match engine.load(&name) {
+                    Ok(artifact) => {
+                        let inputs = vec![
+                            HostTensor::f32(vec![n, D], d.q.clone()),
+                            HostTensor::f32(vec![n, D], d.k.clone()),
+                            HostTensor::f32(vec![n, D], d.v.clone()),
+                            HostTensor::f32(vec![n, 3], pose_flat.clone()),
+                            HostTensor::i32(vec![n], d.tq.clone()),
+                        ];
+                        let stats = bench_quick(|| {
+                            std::hint::black_box(artifact.execute(&inputs).unwrap());
+                        });
+                        t.row(vec![
+                            name.clone(),
+                            format!("{:.3}", stats.mean_ms()),
+                            format!("{:.3}", stats.p95_ns / 1e6),
+                        ]);
+                        record_row(
+                            "attention_throughput",
+                            Json::obj(vec![
+                                ("artifact", Json::Str(name)),
+                                ("mean_ms", Json::Num(stats.mean_ms())),
+                            ]),
+                        );
+                    }
+                    Err(e) => println!("  (skipping {name}: {e})"),
+                }
+            }
+            t.print();
+        }
+        Err(e) => println!("(PJRT unavailable: {e} — run `make artifacts` first)"),
+    }
+    println!("\nattention_throughput OK");
+}

@@ -1,0 +1,122 @@
+//! The paper's headline claim: linear vs quadratic memory in the number of
+//! scene tokens.
+//!
+//! Two measurements per N:
+//! * **analytic** — the byte-accurate HBM model of `attention::memmodel`
+//!   (what an fp16 GPU implementation materializes);
+//! * **measured** — `peak_temp_bytes` actually allocated by the native
+//!   Algorithm 1 / Algorithm 2 implementations on identical inputs.
+//!
+//! Expected shape: O(N) vs O(N^2) with a crossover in the hundreds of
+//! tokens; beyond it the quadratic transient dominates and eventually
+//! exceeds any fixed HBM budget while the linear path keeps scaling.
+
+use se2attn::attention::memmodel::{
+    crossover_n, linear_bytes, quadratic_bytes, BYTES_F16,
+};
+use se2attn::attention::{linear, quadratic, AttnProblem};
+use se2attn::benchlib::{record_row, Table};
+use se2attn::config::Method;
+use se2attn::geometry::Pose;
+use se2attn::jsonio::Json;
+use se2attn::prng::Rng;
+
+const D: usize = 48;
+const F: usize = 12;
+
+fn human(bytes: usize) -> String {
+    if bytes > 1 << 30 {
+        format!("{:.2} GiB", bytes as f64 / (1u64 << 30) as f64)
+    } else if bytes > 1 << 20 {
+        format!("{:.2} MiB", bytes as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1} KiB", bytes as f64 / 1024.0)
+    }
+}
+
+fn main() {
+    let full = std::env::var("SE2ATTN_BENCH_FULL").is_ok();
+    println!("# Memory scaling — linear (Alg. 2) vs quadratic (Alg. 1)");
+    println!("# d={D}, F={F}, fp16 analytic model; measured = native f32 impls\n");
+
+    let mut table = Table::new(&[
+        "N", "analytic quad", "analytic lin", "ratio", "measured quad", "measured lin",
+    ]);
+
+    let scales = [1.0, 0.5];
+    let measure_cap = if full { 4096 } else { 1024 };
+    for shift in 6..=13 {
+        let n = 1usize << shift; // 64 .. 8192
+        let aq = quadratic_bytes(n, n, D, BYTES_F16).transient_bytes;
+        let al = linear_bytes(Method::Se2Fourier, n, n, D, F, BYTES_F16).transient_bytes;
+
+        let (mq, ml) = if n <= measure_cap {
+            let mut rng = Rng::new(n as u64);
+            let q: Vec<f32> = (0..n * D).map(|_| rng.normal() as f32).collect();
+            let poses: Vec<Pose> = (0..n)
+                .map(|_| Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.1, 3.1)))
+                .collect();
+            let tq: Vec<i32> = vec![0; n];
+            let p = AttnProblem {
+                method: Method::Se2Fourier,
+                d: D,
+                fourier_f: F,
+                scales: &scales,
+                q: &q,
+                k: &q,
+                v: &q,
+                pose_q: &poses,
+                pose_k: &poses,
+                tq: &tq,
+                tk: &tq,
+            };
+            let ml = linear::attention(&p).peak_temp_bytes;
+            // quadratic gets very slow past a few k tokens; that is the point
+            let mq = if n <= 1024 || full {
+                quadratic::attention(&p).peak_temp_bytes
+            } else {
+                0
+            };
+            (mq, ml)
+        } else {
+            (0, 0)
+        };
+
+        table.row(vec![
+            n.to_string(),
+            human(aq),
+            human(al),
+            format!("{:.1}x", aq as f64 / al as f64),
+            if mq > 0 { human(mq) } else { "-".into() },
+            if ml > 0 { human(ml) } else { "-".into() },
+        ]);
+        record_row(
+            "memory_scaling",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("analytic_quadratic", Json::Num(aq as f64)),
+                ("analytic_linear", Json::Num(al as f64)),
+                ("measured_quadratic", Json::Num(mq as f64)),
+                ("measured_linear", Json::Num(ml as f64)),
+            ]),
+        );
+    }
+    table.print();
+
+    let cross = crossover_n(Method::Se2Fourier, D, F, BYTES_F16);
+    println!("\ncrossover (analytic, self-attention): N = {cross}");
+    println!("at N=8192 the quadratic transient is {} vs linear {} — {}x",
+        human(quadratic_bytes(8192, 8192, D, BYTES_F16).transient_bytes),
+        human(linear_bytes(Method::Se2Fourier, 8192, 8192, D, F, BYTES_F16).transient_bytes),
+        quadratic_bytes(8192, 8192, D, BYTES_F16).transient_bytes
+            / linear_bytes(Method::Se2Fourier, 8192, 8192, D, F, BYTES_F16).transient_bytes);
+
+    // shape assertions
+    let q1 = quadratic_bytes(1024, 1024, D, BYTES_F16).transient_bytes;
+    let q2 = quadratic_bytes(2048, 2048, D, BYTES_F16).transient_bytes;
+    assert_eq!(q2, 4 * q1, "quadratic must scale as N^2");
+    let l1 = linear_bytes(Method::Se2Fourier, 1024, 1024, D, F, BYTES_F16).transient_bytes;
+    let l2 = linear_bytes(Method::Se2Fourier, 2048, 2048, D, F, BYTES_F16).transient_bytes;
+    assert!(l2 <= 2 * l1 + 1024, "linear must scale as N");
+    println!("\nmemory_scaling OK (quadratic ~N^2, linear ~N confirmed)");
+}

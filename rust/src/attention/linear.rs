@@ -1,0 +1,298 @@
+//! Paper Algorithm 2: relative SDPA with linear memory.
+//!
+//! Per-token pre-projection (phi_q^T q, phi_k k, phi_k v), then a streaming
+//! flash-style SDPA (online softmax, O(c) per row), then per-token
+//! post-projection.  No N x M tensor is ever materialized — the
+//! `peak_temp_bytes` accounting proves it.
+
+use crate::config::Method;
+use crate::geometry::Pose;
+
+use super::projections as proj;
+use super::{AttnOutput, AttnProblem};
+
+/// Streaming SDPA over projected tensors: q (n x c), k/v (m x c), online
+/// softmax with visibility rule tq >= tk.  O(m*c) reads per row but O(c)
+/// transient state — the CPU mirror of the Pallas flash kernel.
+fn flash_sdpa(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    tq: &[i32],
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    out: &mut [f32],
+) {
+    let n = tq.len();
+    let m = tk.len();
+    let mut acc = vec![0.0f64; c];
+    for i in 0..n {
+        let qi = &q[i * c..(i + 1) * c];
+        let mut m_i = f64::NEG_INFINITY;
+        let mut l_i = 0.0f64;
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for j in 0..m {
+            if tq[i] < tk[j] {
+                continue;
+            }
+            let kj = &k[j * c..(j + 1) * c];
+            let s: f64 = qi
+                .iter()
+                .zip(kj.iter())
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum::<f64>()
+                * scale;
+            let m_new = m_i.max(s);
+            let alpha = if m_i == f64::NEG_INFINITY {
+                0.0
+            } else {
+                (m_i - m_new).exp()
+            };
+            let p = (s - m_new).exp();
+            l_i = l_i * alpha + p;
+            let vj = &v[j * c..(j + 1) * c];
+            for (a, &vv) in acc.iter_mut().zip(vj.iter()) {
+                *a = *a * alpha + p * vv as f64;
+            }
+            m_i = m_new;
+        }
+        let oi = &mut out[i * c..(i + 1) * c];
+        if l_i > 0.0 {
+            for (o, &a) in oi.iter_mut().zip(acc.iter()) {
+                *o = (a / l_i) as f32;
+            }
+        } else {
+            oi.iter_mut().for_each(|o| *o = 0.0);
+        }
+    }
+}
+
+/// Projected per-head width c for a problem.
+pub fn proj_dim(method: Method, d: usize, fourier_f: usize) -> usize {
+    match method {
+        Method::Se2Fourier => proj::se2f_block_width(fourier_f) * (d / 6),
+        _ => d,
+    }
+}
+
+/// Algorithm 2.  Linear transient memory: three projected tensors of width
+/// c plus O(c) online-softmax state.
+pub fn attention(p: &AttnProblem) -> AttnOutput {
+    p.validate();
+    let (n, m, d, f) = (p.n(), p.m(), p.d, p.fourier_f);
+    let c = proj_dim(p.method, d, f);
+    let scale = 1.0 / (c as f64).sqrt();
+    // Alg. 2 prefactor (c/d)^(1/4) on q~ and k~ makes the effective scale
+    // 1/sqrt(d) after SDPA's 1/sqrt(c).
+    let pref = ((c as f64) / (d as f64)).powf(0.25) as f32;
+
+    let mut qt = vec![0.0f32; n * c];
+    let mut kt = vec![0.0f32; m * c];
+    let mut vt = vec![0.0f32; m * c];
+    let mut scratch: Vec<f32> = Vec::with_capacity(c);
+
+    // ---- pre-projection (linear in N+M) --------------------------------
+    match p.method {
+        Method::Abs => {
+            qt.copy_from_slice(p.q);
+            kt.copy_from_slice(p.k);
+            vt.copy_from_slice(p.v);
+        }
+        Method::Rope2d => {
+            qt.copy_from_slice(p.q);
+            kt.copy_from_slice(p.k);
+            vt.copy_from_slice(p.v);
+            for i in 0..n {
+                proj::rope2d_project(&mut qt[i * c..(i + 1) * c], &p.pose_q[i], p.scales);
+            }
+            for j in 0..m {
+                proj::rope2d_project(&mut kt[j * c..(j + 1) * c], &p.pose_k[j], p.scales);
+                // Alg. 2 line 2 transforms values too (v~ = phi_k v); the
+                // post-attention phi_q rotation makes the composition equal
+                // phi(p_rel) v as in Alg. 1 line 3.
+                proj::rope2d_project(&mut vt[j * c..(j + 1) * c], &p.pose_k[j], p.scales);
+            }
+        }
+        Method::Se2Rep => {
+            qt.copy_from_slice(p.q);
+            kt.copy_from_slice(p.k);
+            vt.copy_from_slice(p.v);
+            for i in 0..n {
+                proj::se2rep_project_q(&mut qt[i * c..(i + 1) * c], &p.pose_q[i], p.scales);
+            }
+            for j in 0..m {
+                proj::se2rep_project_k(&mut kt[j * c..(j + 1) * c], &p.pose_k[j], p.scales);
+                proj::se2rep_project_k(&mut vt[j * c..(j + 1) * c], &p.pose_k[j], p.scales);
+            }
+        }
+        Method::Se2Fourier => {
+            let mut key_scratch = proj::Se2fKeyScratch::new(f);
+            for i in 0..n {
+                proj::se2f_project_q(
+                    &p.q[i * d..(i + 1) * d],
+                    &p.pose_q[i],
+                    p.scales,
+                    f,
+                    pref,
+                    &mut scratch,
+                );
+                qt[i * c..(i + 1) * c].copy_from_slice(&scratch);
+            }
+            let mut v_scratch: Vec<f32> = Vec::with_capacity(c);
+            for j in 0..m {
+                proj::se2f_project_kv_with(
+                    &mut key_scratch,
+                    &p.k[j * d..(j + 1) * d],
+                    &p.v[j * d..(j + 1) * d],
+                    &p.pose_k[j],
+                    p.scales,
+                    pref,
+                    &mut scratch,
+                    &mut v_scratch,
+                );
+                kt[j * c..(j + 1) * c].copy_from_slice(&scratch);
+                vt[j * c..(j + 1) * c].copy_from_slice(&v_scratch);
+            }
+        }
+    }
+
+    // ---- standard SDPA (flash-style, linear memory) ---------------------
+    let mut ot = vec![0.0f32; n * c];
+    let eff_scale = match p.method {
+        // abs/rope2d/se2rep use 1/sqrt(d) directly (c == d)
+        Method::Se2Fourier => scale,
+        _ => 1.0 / (d as f64).sqrt(),
+    };
+    flash_sdpa(&qt, &kt, &vt, p.tq, p.tk, c, eff_scale, &mut ot);
+
+    // ---- post-projection (Alg. 2 line 4) --------------------------------
+    let mut out = vec![0.0f32; n * d];
+    match p.method {
+        Method::Abs => out.copy_from_slice(&ot),
+        Method::Rope2d => {
+            out.copy_from_slice(&ot);
+            // phi_q(p_n) = rho(-a x_n) blocks: rotate by the negated own
+            // coordinates (Alg. 2 line 4).
+            for i in 0..n {
+                let neg = Pose {
+                    x: -p.pose_q[i].x,
+                    y: -p.pose_q[i].y,
+                    theta: 0.0,
+                };
+                proj::rope2d_project(&mut out[i * d..(i + 1) * d], &neg, p.scales);
+            }
+        }
+        Method::Se2Rep => {
+            out.copy_from_slice(&ot);
+            for i in 0..n {
+                proj::se2rep_unproject_o(&mut out[i * d..(i + 1) * d], &p.pose_q[i], p.scales);
+            }
+        }
+        Method::Se2Fourier => {
+            for i in 0..n {
+                proj::se2f_unproject_o(
+                    &ot[i * c..(i + 1) * c],
+                    &p.pose_q[i],
+                    p.scales,
+                    f,
+                    &mut scratch,
+                );
+                out[i * d..(i + 1) * d].copy_from_slice(&scratch);
+            }
+        }
+    }
+
+    // projected q~/k~/v~/o~ are the largest transients: 4 * max(n,m) * c f32
+    let peak = (qt.len() + kt.len() + vt.len() + ot.len())
+        * std::mem::size_of::<f32>();
+    AttnOutput {
+        out,
+        peak_temp_bytes: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Pose;
+    use crate::prng::Rng;
+    use crate::proplite::check;
+
+    #[test]
+    fn fully_masked_rows_are_zero() {
+        let mut rng = Rng::new(1);
+        let d = 12;
+        let n = 4;
+        let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..n).map(|_| Pose::IDENTITY).collect();
+        let tq = vec![-5i32; n];
+        let tk = vec![0i32; n];
+        let p = AttnProblem {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: 6,
+            scales: &[1.0],
+            q: &q,
+            k: &q,
+            v: &q,
+            pose_q: &poses,
+            pose_k: &poses,
+            tq: &tq,
+            tk: &tk,
+        };
+        let out = attention(&p).out;
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn linear_se2fourier_is_frame_invariant() {
+        check("alg2 se2fourier invariance", 15, |rng| {
+            let d = 12;
+            let n = 6;
+            let f = 20;
+            let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let poses: Vec<Pose> = (0..n)
+                .map(|_| {
+                    Pose::new(
+                        rng.range(-1.0, 1.0),
+                        rng.range(-1.0, 1.0),
+                        rng.range(-3.0, 3.0),
+                    )
+                })
+                .collect();
+            let t: Vec<i32> = (0..n).map(|_| rng.int_range(0, 2) as i32).collect();
+            let z = Pose::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-3.0, 3.0));
+            let zi = z.inverse();
+            let shifted: Vec<Pose> = poses.iter().map(|p| zi.compose(p)).collect();
+            let run = |ps: &[Pose]| {
+                attention(&AttnProblem {
+                    method: Method::Se2Fourier,
+                    d,
+                    fourier_f: f,
+                    scales: &[1.0, 0.5],
+                    q: &q,
+                    k: &k,
+                    v: &v,
+                    pose_q: ps,
+                    pose_k: ps,
+                    tq: &t,
+                    tk: &t,
+                })
+                .out
+            };
+            let (o1, o2) = (run(&poses), run(&shifted));
+            crate::proplite::all_close_f32(&o1, &o2, 5e-3, "invariance")
+        });
+    }
+
+    #[test]
+    fn proj_dim_table() {
+        assert_eq!(proj_dim(Method::Abs, 48, 12), 48);
+        assert_eq!(proj_dim(Method::Rope2d, 48, 12), 48);
+        assert_eq!(proj_dim(Method::Se2Rep, 48, 12), 48);
+        assert_eq!(proj_dim(Method::Se2Fourier, 48, 12), 50 * 8);
+    }
+}

@@ -1,0 +1,127 @@
+//! Byte-accurate HBM model for the paper's headline claim: Algorithm 1
+//! needs O(N*M) memory, Algorithm 2 O((N+M)*c).
+//!
+//! The model counts the tensors a GPU implementation would materialize in
+//! HBM (not registers/SRAM): for Alg. 1 the pairwise phi tensor, bias and
+//! weight matrices; for Alg. 2 the projected q~/k~/v~/o~ plus flash-SDPA's
+//! per-row statistics.  The memory-scaling bench prints both the model and
+//! measured peak-allocation numbers.
+
+use crate::config::Method;
+
+use super::linear::proj_dim;
+
+/// Bytes per element (f32 on this testbed; the paper runs fp16/bf16 —
+/// ratios are unchanged).
+pub const BYTES_F32: usize = 4;
+pub const BYTES_F16: usize = 2;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryEstimate {
+    /// Inputs resident either way (q, k, v, poses, timesteps).
+    pub input_bytes: usize,
+    /// Transient working set the algorithm materializes.
+    pub transient_bytes: usize,
+}
+
+impl MemoryEstimate {
+    pub fn total(&self) -> usize {
+        self.input_bytes + self.transient_bytes
+    }
+}
+
+fn input_bytes(n: usize, m: usize, d: usize, elem: usize) -> usize {
+    // q + (k + v) + poses (3 floats) + timesteps (i32)
+    n * d * elem + 2 * m * d * elem + (n + m) * 3 * elem + (n + m) * 4
+}
+
+/// Algorithm 1 (quadratic): the N x M x d x d phi tensor is never stored
+/// whole by a sane implementation, but the N x M bias and attention-weight
+/// matrices are, plus one d x d phi per active pair during aggregation.
+/// GoRela-style implementations additionally materialize the N x M x 3
+/// relative-pose tensor; we count bias + weights + relposes.
+pub fn quadratic_bytes(n: usize, m: usize, d: usize, elem: usize) -> MemoryEstimate {
+    let bias = n * m * elem;
+    let weights = n * m * elem;
+    let rel_poses = n * m * 3 * elem;
+    MemoryEstimate {
+        input_bytes: input_bytes(n, m, d, elem),
+        transient_bytes: bias + weights + rel_poses,
+    }
+}
+
+/// Algorithm 2 (linear): projected q~ (N x c), k~/v~ (M x c), o~ (N x c)
+/// plus flash statistics (2 floats per row).
+pub fn linear_bytes(
+    method: Method,
+    n: usize,
+    m: usize,
+    d: usize,
+    fourier_f: usize,
+    elem: usize,
+) -> MemoryEstimate {
+    let c = proj_dim(method, d, fourier_f);
+    let projected = (n * c + 2 * m * c + n * c) * elem;
+    let flash_stats = 2 * n * elem;
+    MemoryEstimate {
+        input_bytes: input_bytes(n, m, d, elem),
+        transient_bytes: projected + flash_stats,
+    }
+}
+
+/// N at which quadratic transient memory overtakes linear (self-attention,
+/// n == m) — the crossover the memory-scaling bench sweeps across.
+pub fn crossover_n(method: Method, d: usize, fourier_f: usize, elem: usize) -> usize {
+    let mut n = 2;
+    while n < 1 << 22 {
+        let q = quadratic_bytes(n, n, d, elem).transient_bytes;
+        let l = linear_bytes(method, n, n, d, fourier_f, elem).transient_bytes;
+        if q > l {
+            return n;
+        }
+        n *= 2;
+    }
+    usize::MAX
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_grows_quadratically() {
+        let a = quadratic_bytes(256, 256, 48, BYTES_F32).transient_bytes;
+        let b = quadratic_bytes(512, 512, 48, BYTES_F32).transient_bytes;
+        assert_eq!(b, 4 * a);
+    }
+
+    #[test]
+    fn linear_grows_linearly() {
+        let a = linear_bytes(Method::Se2Fourier, 256, 256, 48, 12, BYTES_F32)
+            .transient_bytes;
+        let b = linear_bytes(Method::Se2Fourier, 512, 512, 48, 12, BYTES_F32)
+            .transient_bytes;
+        assert!(b <= 2 * a + 64);
+    }
+
+    #[test]
+    fn fourier_pays_constant_factor_c_over_d() {
+        // c = (4F+2)/6 * d: the paper's trade — bigger constant, better
+        // asymptotics.
+        let lin_fourier =
+            linear_bytes(Method::Se2Fourier, 128, 128, 48, 12, BYTES_F32);
+        let lin_rope =
+            linear_bytes(Method::Rope2d, 128, 128, 48, 12, BYTES_F32);
+        let ratio = lin_fourier.transient_bytes as f64
+            / lin_rope.transient_bytes as f64;
+        assert!((ratio - 50.0 / 6.0).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn crossover_is_moderate() {
+        // With d=48, F=12 the crossover lands in the hundreds of tokens —
+        // real scenes (hundreds to thousands of elements) benefit.
+        let n = crossover_n(Method::Se2Fourier, 48, 12, BYTES_F32);
+        assert!(n >= 64 && n <= 2048, "crossover {n}");
+    }
+}

@@ -1,0 +1,204 @@
+//! CPU attention library: the paper's Algorithm 1 (quadratic memory) and
+//! Algorithm 2 (linear memory) for all four relative-attention methods.
+//!
+//! These native implementations serve three purposes:
+//! 1. **Oracle** — the quadratic Algorithm 1 is the exactness reference the
+//!    AOT artifacts are integration-tested against.
+//! 2. **Baseline** — the benches compare linear vs quadratic wall-clock and
+//!    peak memory on identical inputs (paper's headline claim).
+//! 3. **Fallback** — the coordinator can score small scenes without PJRT.
+//!
+//! Data layout: row-major `[N, d]` f32 slices, poses as `&[Pose]`,
+//! visibility timesteps as `&[i32]` (see the flash kernel's masking rule).
+
+pub mod linear;
+pub mod memmodel;
+pub mod projections;
+pub mod quadratic;
+
+use crate::config::Method;
+use crate::geometry::Pose;
+
+/// Shared description of one attention call.
+#[derive(Clone, Debug)]
+pub struct AttnProblem<'a> {
+    pub method: Method,
+    /// Per-head feature width d (multiple of 6 for se2fourier, 4 for
+    /// rope2d, 3 for se2rep).
+    pub d: usize,
+    /// Fourier basis size F (se2fourier only).
+    pub fourier_f: usize,
+    /// Spatial scale ladder, cycled across blocks.
+    pub scales: &'a [f64],
+    pub q: &'a [f32],
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub pose_q: &'a [Pose],
+    pub pose_k: &'a [Pose],
+    /// Visibility timesteps; token n sees token m iff tq[n] >= tk[m].
+    pub tq: &'a [i32],
+    pub tk: &'a [i32],
+}
+
+impl<'a> AttnProblem<'a> {
+    pub fn n(&self) -> usize {
+        self.pose_q.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.pose_k.len()
+    }
+
+    pub fn validate(&self) {
+        let (n, m, d) = (self.n(), self.m(), self.d);
+        assert_eq!(self.q.len(), n * d, "q shape");
+        assert_eq!(self.k.len(), m * d, "k shape");
+        assert_eq!(self.v.len(), m * d, "v shape");
+        assert_eq!(self.tq.len(), n, "tq shape");
+        assert_eq!(self.tk.len(), m, "tk shape");
+        match self.method {
+            Method::Se2Fourier => assert_eq!(d % 6, 0, "d % 6 for se2fourier"),
+            Method::Rope2d => assert_eq!(d % 4, 0, "d % 4 for rope2d"),
+            Method::Se2Rep => assert_eq!(d % 3, 0, "d % 3 for se2rep"),
+            Method::Abs => {}
+        }
+    }
+
+    /// Per-block scale for block index j.
+    pub fn scale_for(&self, j: usize) -> f64 {
+        self.scales[j % self.scales.len()]
+    }
+}
+
+/// Result wrapper so benches can also inspect peak temporary bytes.
+pub struct AttnOutput {
+    pub out: Vec<f32>,
+    /// Bytes of the largest transient buffer the algorithm materialized
+    /// (the quantity Fig-of-merit for linear vs quadratic memory).
+    pub peak_temp_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    pub(crate) fn random_problem_data(
+        rng: &mut Rng,
+        n: usize,
+        m: usize,
+        d: usize,
+        rmax: f64,
+        tmax: i64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Pose>, Vec<Pose>, Vec<i32>, Vec<i32>) {
+        let gen_vec = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let gen_poses = |rng: &mut Rng, len: usize| -> Vec<Pose> {
+            (0..len)
+                .map(|_| {
+                    Pose::new(
+                        rng.range(-rmax, rmax),
+                        rng.range(-rmax, rmax),
+                        rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+                    )
+                })
+                .collect()
+        };
+        let q = gen_vec(rng, n * d);
+        let k = gen_vec(rng, m * d);
+        let v = gen_vec(rng, m * d);
+        let pq = gen_poses(rng, n);
+        let pk = gen_poses(rng, m);
+        let tq: Vec<i32> = (0..n).map(|_| rng.int_range(0, tmax) as i32).collect();
+        let tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, tmax) as i32).collect();
+        (q, k, v, pq, pk, tq, tk)
+    }
+
+    /// Algorithm 2 == Algorithm 1 exactly for the factorizable methods,
+    /// to Fourier tolerance for se2fourier — the Rust mirror of the
+    /// Python test suite's core check.
+    #[test]
+    fn linear_matches_quadratic_all_methods() {
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(99);
+        for (method, d, tol) in [
+            (Method::Abs, 8, 1e-5),
+            (Method::Rope2d, 8, 1e-4),
+            (Method::Se2Rep, 9, 1e-4),
+            (Method::Se2Fourier, 12, 5e-3),
+        ] {
+            let (q, k, v, pq, pk, tq, tk) =
+                random_problem_data(&mut rng, 10, 14, d, 1.5, 3);
+            let p = AttnProblem {
+                method,
+                d,
+                fourier_f: 16,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            let o1 = quadratic::attention(&p);
+            let o2 = linear::attention(&p);
+            for (i, (a, b)) in o1.out.iter().zip(o2.out.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < tol,
+                    "{method:?} [{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_memory_is_actually_linear() {
+        let scales = [1.0];
+        let mut rng = Rng::new(100);
+        let mut peaks = Vec::new();
+        for n in [32usize, 64, 128] {
+            let (q, k, v, pq, pk, tq, tk) =
+                random_problem_data(&mut rng, n, n, 12, 1.0, 3);
+            let p = AttnProblem {
+                method: Method::Se2Fourier,
+                d: 12,
+                fourier_f: 8,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            peaks.push(linear::attention(&p).peak_temp_bytes as f64 / n as f64);
+        }
+        // bytes-per-token roughly constant for the linear algorithm
+        assert!(peaks[2] < peaks[0] * 1.5, "{peaks:?}");
+        // while the quadratic algorithm grows linearly in bytes-per-token:
+        // past the crossover (N*8 bytes/token vs 4c*4 bytes/token) the
+        // quadratic transient dominates.
+        let n = 1024;
+        let (q, k, v, pq, pk, tq, tk) =
+            random_problem_data(&mut rng, n, n, 12, 1.0, 3);
+        let p = AttnProblem {
+            method: Method::Se2Fourier,
+            d: 12,
+            fourier_f: 8,
+            scales: &scales,
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &pq,
+            pose_k: &pk,
+            tq: &tq,
+            tk: &tk,
+        };
+        let quad = quadratic::attention(&p).peak_temp_bytes as f64 / n as f64;
+        assert!(quad > peaks[2] * 4.0, "quad {quad} vs lin {}", peaks[2]);
+    }
+}

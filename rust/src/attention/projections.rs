@@ -1,0 +1,436 @@
+//! Per-token phi_q^T / phi_k projections — the linear-memory halves of
+//! Algorithm 2, mirroring `python/compile/kernels/{rope,se2_fourier}.py`.
+//!
+//! All functions operate in place on one token's per-head feature slice of
+//! width d (blocks cycled over the scale ladder).
+
+use crate::fourier::{coefficients, eval_basis, Axis, QuadratureTable};
+use crate::geometry::{rotate_pair, Pose};
+
+/// 2D RoPE (Eq. 7): rotate (x-pair, y-pair) blocks by the token's own
+/// *absolute* coordinates.  Identical for queries and keys.
+pub fn rope2d_project(x: &mut [f32], pose: &Pose, scales: &[f64]) {
+    let nb = x.len() / 4;
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let b = &mut x[4 * j..4 * j + 4];
+        let (r0, r1) = rotate_pair(b[0] as f64, b[1] as f64, a * pose.x);
+        let (r2, r3) = rotate_pair(b[2] as f64, b[3] as f64, a * pose.y);
+        b[0] = r0 as f32;
+        b[1] = r1 as f32;
+        b[2] = r2 as f32;
+        b[3] = r3 as f32;
+    }
+}
+
+/// SE(2) representation (Eq. 9) — query side: psi(p^{-1})^T applied per
+/// 3-wide block (positions scaled).
+pub fn se2rep_project_q(x: &mut [f32], pose: &Pose, scales: &[f64]) {
+    let nb = x.len() / 3;
+    for j in 0..nb {
+        let p = pose.scaled(scales[j % scales.len()]);
+        let inv = p.inverse();
+        let (s, c) = inv.theta.sin_cos();
+        let b = &mut x[3 * j..3 * j + 3];
+        let (x0, x1, x2) = (b[0] as f64, b[1] as f64, b[2] as f64);
+        // psi(inv)^T = [c s 0; -s c 0; ix iy 1] applied to column
+        b[0] = (c * x0 + s * x1) as f32;
+        b[1] = (-s * x0 + c * x1) as f32;
+        b[2] = (inv.x * x0 + inv.y * x1 + x2) as f32;
+    }
+}
+
+/// SE(2) representation — key/value side: psi(p) per 3-wide block.
+pub fn se2rep_project_k(x: &mut [f32], pose: &Pose, scales: &[f64]) {
+    let nb = x.len() / 3;
+    for j in 0..nb {
+        let p = pose.scaled(scales[j % scales.len()]);
+        let (s, c) = p.theta.sin_cos();
+        let b = &mut x[3 * j..3 * j + 3];
+        let (x0, x1, x2) = (b[0] as f64, b[1] as f64, b[2] as f64);
+        b[0] = (c * x0 - s * x1 + p.x * x2) as f32;
+        b[1] = (s * x0 + c * x1 + p.y * x2) as f32;
+        b[2] = x2 as f32;
+    }
+}
+
+/// SE(2) representation — output side: psi(p^{-1}) per 3-wide block
+/// (Alg. 2 line 4).
+pub fn se2rep_unproject_o(x: &mut [f32], pose: &Pose, scales: &[f64]) {
+    let nb = x.len() / 3;
+    for j in 0..nb {
+        let p = pose.scaled(scales[j % scales.len()]);
+        let inv = p.inverse();
+        let (s, c) = inv.theta.sin_cos();
+        let b = &mut x[3 * j..3 * j + 3];
+        let (x0, x1, x2) = (b[0] as f64, b[1] as f64, b[2] as f64);
+        b[0] = (c * x0 - s * x1 + inv.x * x2) as f32;
+        b[1] = (s * x0 + c * x1 + inv.y * x2) as f32;
+        b[2] = x2 as f32;
+    }
+}
+
+/// Projected width per 6-wide SE(2) Fourier block.
+pub fn se2f_block_width(f: usize) -> usize {
+    4 * f + 2
+}
+
+/// SE(2) Fourier query projection (Eq. 19): 6-wide block -> (4F+2)-wide.
+/// Layout per block: [x-cos F | x-sin F | y-cos F | y-sin F | theta 2].
+pub fn se2f_project_q(
+    x: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    f: usize,
+    scale_pref: f32,
+    out: &mut Vec<f32>,
+) {
+    let nb = x.len() / 6;
+    let w = se2f_block_width(f);
+    out.clear();
+    out.reserve(nb * w);
+    let b = eval_basis(pose.theta, f);
+    let (st, ct) = pose.theta.sin_cos();
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let (px, py) = (a * pose.x, a * pose.y);
+        let vx = -px * ct - py * st;
+        let vy = px * st - py * ct;
+        let (sx, cx) = vx.sin_cos();
+        let (sy, cy) = vy.sin_cos();
+        let blk = &x[6 * j..6 * j + 6];
+        let (q0, q1) = (blk[0] as f64, blk[1] as f64);
+        let (q2, q3) = (blk[2] as f64, blk[3] as f64);
+        let (q4, q5) = (blk[4] as f64, blk[5] as f64);
+        let pref = scale_pref as f64;
+        for i in 0..f {
+            out.push((pref * b[i] * (cx * q0 + sx * q1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * b[i] * (-sx * q0 + cx * q1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * b[i] * (cy * q2 + sy * q3)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * b[i] * (-sy * q2 + cy * q3)) as f32);
+        }
+        // theta pair: rho(-t)^T = rho(t)
+        out.push((pref * (ct * q4 - st * q5)) as f32);
+        out.push((pref * (st * q4 + ct * q5)) as f32);
+    }
+}
+
+/// SE(2) Fourier key/value projection (Eq. 19): phi_k(p) x.
+///
+/// Allocation-free hot path when a [`QuadratureTable`] and scratch buffers
+/// are provided via [`Se2fKeyScratch`]; the convenience wrapper below
+/// builds them per call for tests/small uses.
+pub struct Se2fKeyScratch {
+    pub table: QuadratureTable,
+    gx: Vec<f64>,
+    lx: Vec<f64>,
+    gy: Vec<f64>,
+    ly: Vec<f64>,
+}
+
+impl Se2fKeyScratch {
+    pub fn new(f: usize) -> Se2fKeyScratch {
+        Se2fKeyScratch {
+            table: QuadratureTable::new(f),
+            gx: vec![0.0; f],
+            lx: vec![0.0; f],
+            gy: vec![0.0; f],
+            ly: vec![0.0; f],
+        }
+    }
+}
+
+pub fn se2f_project_k_with(
+    scratch: &mut Se2fKeyScratch,
+    x: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    scale_pref: f32,
+    out: &mut Vec<f32>,
+) {
+    let f = scratch.table.f;
+    let nb = x.len() / 6;
+    out.clear();
+    out.reserve(nb * se2f_block_width(f));
+    let (st, ct) = pose.theta.sin_cos();
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let (px, py) = (a * pose.x, a * pose.y);
+        scratch
+            .table
+            .coefficients_into(px, py, Axis::X, &mut scratch.gx, &mut scratch.lx);
+        scratch
+            .table
+            .coefficients_into(px, py, Axis::Y, &mut scratch.gy, &mut scratch.ly);
+        let (gx, lx, gy, ly) = (&scratch.gx, &scratch.lx, &scratch.gy, &scratch.ly);
+        let blk = &x[6 * j..6 * j + 6];
+        let (k0, k1) = (blk[0] as f64, blk[1] as f64);
+        let (k2, k3) = (blk[2] as f64, blk[3] as f64);
+        let (k4, k5) = (blk[4] as f64, blk[5] as f64);
+        let pref = scale_pref as f64;
+        for i in 0..f {
+            out.push((pref * (gx[i] * k0 - lx[i] * k1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (lx[i] * k0 + gx[i] * k1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (gy[i] * k2 - ly[i] * k3)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (ly[i] * k2 + gy[i] * k3)) as f32);
+        }
+        out.push((pref * (ct * k4 - st * k5)) as f32);
+        out.push((pref * (st * k4 + ct * k5)) as f32);
+    }
+}
+
+/// Key *and* value projection of one token in a single pass: the
+/// Gamma/Lambda coefficients depend only on the pose, so they are computed
+/// once and applied to both tensors (Alg. 2 line 2) — ~2x on the key side
+/// (EXPERIMENTS.md §Perf L3 iteration 4).
+#[allow(clippy::too_many_arguments)]
+pub fn se2f_project_kv_with(
+    scratch: &mut Se2fKeyScratch,
+    k: &[f32],
+    v: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    k_pref: f32,
+    k_out: &mut Vec<f32>,
+    v_out: &mut Vec<f32>,
+) {
+    let f = scratch.table.f;
+    let nb = k.len() / 6;
+    k_out.clear();
+    v_out.clear();
+    k_out.reserve(nb * se2f_block_width(f));
+    v_out.reserve(nb * se2f_block_width(f));
+    let (st, ct) = pose.theta.sin_cos();
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let (px, py) = (a * pose.x, a * pose.y);
+        scratch
+            .table
+            .coefficients_into(px, py, Axis::X, &mut scratch.gx, &mut scratch.lx);
+        scratch
+            .table
+            .coefficients_into(px, py, Axis::Y, &mut scratch.gy, &mut scratch.ly);
+        let (gx, lx, gy, ly) = (&scratch.gx, &scratch.lx, &scratch.gy, &scratch.ly);
+        for (x, out, pref) in [(k, &mut *k_out, k_pref as f64), (v, &mut *v_out, 1.0)] {
+            let blk = &x[6 * j..6 * j + 6];
+            let (k0, k1) = (blk[0] as f64, blk[1] as f64);
+            let (k2, k3) = (blk[2] as f64, blk[3] as f64);
+            let (k4, k5) = (blk[4] as f64, blk[5] as f64);
+            for i in 0..f {
+                out.push((pref * (gx[i] * k0 - lx[i] * k1)) as f32);
+            }
+            for i in 0..f {
+                out.push((pref * (lx[i] * k0 + gx[i] * k1)) as f32);
+            }
+            for i in 0..f {
+                out.push((pref * (gy[i] * k2 - ly[i] * k3)) as f32);
+            }
+            for i in 0..f {
+                out.push((pref * (ly[i] * k2 + gy[i] * k3)) as f32);
+            }
+            out.push((pref * (ct * k4 - st * k5)) as f32);
+            out.push((pref * (st * k4 + ct * k5)) as f32);
+        }
+    }
+}
+
+pub fn se2f_project_k(
+    x: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    f: usize,
+    scale_pref: f32,
+    out: &mut Vec<f32>,
+) {
+    let nb = x.len() / 6;
+    out.clear();
+    out.reserve(nb * se2f_block_width(f));
+    let (st, ct) = pose.theta.sin_cos();
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let (px, py) = (a * pose.x, a * pose.y);
+        let (gx, lx) = coefficients(px, py, f, Axis::X);
+        let (gy, ly) = coefficients(px, py, f, Axis::Y);
+        let blk = &x[6 * j..6 * j + 6];
+        let (k0, k1) = (blk[0] as f64, blk[1] as f64);
+        let (k2, k3) = (blk[2] as f64, blk[3] as f64);
+        let (k4, k5) = (blk[4] as f64, blk[5] as f64);
+        let pref = scale_pref as f64;
+        for i in 0..f {
+            out.push((pref * (gx[i] * k0 - lx[i] * k1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (lx[i] * k0 + gx[i] * k1)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (gy[i] * k2 - ly[i] * k3)) as f32);
+        }
+        for i in 0..f {
+            out.push((pref * (ly[i] * k2 + gy[i] * k3)) as f32);
+        }
+        out.push((pref * (ct * k4 - st * k5)) as f32);
+        out.push((pref * (st * k4 + ct * k5)) as f32);
+    }
+}
+
+/// SE(2) Fourier output unprojection (Alg. 2 line 4): (4F+2)-wide block ->
+/// 6-wide, o = phi_q(p) o_tilde.
+pub fn se2f_unproject_o(
+    ot: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    f: usize,
+    out: &mut Vec<f32>,
+) {
+    let w = se2f_block_width(f);
+    let nb = ot.len() / w;
+    out.clear();
+    out.reserve(nb * 6);
+    let b = eval_basis(pose.theta, f);
+    let (st, ct) = pose.theta.sin_cos();
+    for j in 0..nb {
+        let a = scales[j % scales.len()];
+        let (px, py) = (a * pose.x, a * pose.y);
+        let vx = -px * ct - py * st;
+        let vy = px * st - py * ct;
+        let (sx, cx) = vx.sin_cos();
+        let (sy, cy) = vy.sin_cos();
+        let blk = &ot[w * j..w * (j + 1)];
+        let dot = |lo: usize| -> f64 {
+            (0..f).map(|i| b[i] * blk[lo + i] as f64).sum()
+        };
+        let (sxa, sxb) = (dot(0), dot(f));
+        let (sya, syb) = (dot(2 * f), dot(3 * f));
+        let (o4, o5) = (blk[4 * f] as f64, blk[4 * f + 1] as f64);
+        out.push((cx * sxa - sx * sxb) as f32);
+        out.push((sx * sxa + cx * sxb) as f32);
+        out.push((cy * sya - sy * syb) as f32);
+        out.push((sy * sya + cy * syb) as f32);
+        // theta pair: rho(-t)
+        out.push((ct * o4 + st * o5) as f32);
+        out.push((-st * o4 + ct * o5) as f32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::{phi_k_block, phi_q_block};
+    use crate::prng::Rng;
+    use crate::proplite::{all_close_f32, check};
+
+    fn rand_pose(rng: &mut Rng) -> Pose {
+        Pose::new(
+            rng.range(-2.0, 2.0),
+            rng.range(-2.0, 2.0),
+            rng.range(-3.1, 3.1),
+        )
+    }
+
+    #[test]
+    fn se2f_projections_match_explicit_matrices() {
+        check("se2f projections == matrices", 40, |rng| {
+            let f = 4 + rng.below(12);
+            let pose = rand_pose(rng);
+            let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+            // query: phi_q^T x
+            let pq = phi_q_block(&pose, f);
+            let expect_q: Vec<f32> = pq
+                .transpose()
+                .matvec(&x.iter().map(|v| *v as f64).collect::<Vec<_>>())
+                .iter()
+                .map(|v| *v as f32)
+                .collect();
+            let mut got = Vec::new();
+            se2f_project_q(&x, &pose, &[1.0], f, 1.0, &mut got);
+            all_close_f32(&got, &expect_q, 1e-5, "phi_q^T x")?;
+            // key: phi_k x
+            let pk = phi_k_block(&pose, f);
+            let expect_k: Vec<f32> = pk
+                .matvec(&x.iter().map(|v| *v as f64).collect::<Vec<_>>())
+                .iter()
+                .map(|v| *v as f32)
+                .collect();
+            se2f_project_k(&x, &pose, &[1.0], f, 1.0, &mut got);
+            all_close_f32(&got, &expect_k, 1e-5, "phi_k x")?;
+            // output: phi_q ot
+            let ot: Vec<f32> =
+                (0..4 * f + 2).map(|_| rng.normal() as f32).collect();
+            let expect_o: Vec<f32> = pq
+                .matvec(&ot.iter().map(|v| *v as f64).collect::<Vec<_>>())
+                .iter()
+                .map(|v| *v as f32)
+                .collect();
+            se2f_unproject_o(&ot, &pose, &[1.0], f, &mut got);
+            all_close_f32(&got, &expect_o, 1e-5, "phi_q ot")
+        });
+    }
+
+    #[test]
+    fn rope2d_inner_product_encodes_relative_position() {
+        // <phi(pn) q, phi(pm) k> == <q, rho(dx) rho(dy) ... k>
+        check("rope2d relativity", 40, |rng| {
+            let (pn, pm) = (rand_pose(rng), rand_pose(rng));
+            let q: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            let k: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            let mut qp = q.clone();
+            let mut kp = k.clone();
+            rope2d_project(&mut qp, &pn, &[1.0]);
+            rope2d_project(&mut kp, &pm, &[1.0]);
+            let got: f64 = qp
+                .iter()
+                .zip(kp.iter())
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            // expected: rotate k by the relative offsets, dot with raw q
+            let (dx, dy) = (pm.x - pn.x, pm.y - pn.y);
+            let (r0, r1) = rotate_pair(k[0] as f64, k[1] as f64, dx);
+            let (r2, r3) = rotate_pair(k[2] as f64, k[3] as f64, dy);
+            let expect = q[0] as f64 * r0
+                + q[1] as f64 * r1
+                + q[2] as f64 * r2
+                + q[3] as f64 * r3;
+            crate::proplite::close(got, expect, 1e-6, "bilinear form")
+        });
+    }
+
+    #[test]
+    fn se2rep_q_then_k_composes_to_relative() {
+        // q^T [psi(pn^-1)] [psi(pm)] k == q^T psi(pn^-1 pm) k
+        check("se2rep composition", 40, |rng| {
+            let (pn, pm) = (rand_pose(rng), rand_pose(rng));
+            let q: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            let k: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            let mut qp = q.clone();
+            let mut kp = k.clone();
+            se2rep_project_q(&mut qp, &pn, &[1.0]);
+            se2rep_project_k(&mut kp, &pm, &[1.0]);
+            let got: f64 = qp
+                .iter()
+                .zip(kp.iter())
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let rel = pn.relative_to(&pm).matrix();
+            let kk: Vec<f64> = k.iter().map(|v| *v as f64).collect();
+            let relk = rel.matvec(&kk);
+            let expect: f64 = q
+                .iter()
+                .zip(relk.iter())
+                .map(|(a, b)| (*a as f64) * b)
+                .sum();
+            crate::proplite::close(got, expect, 1e-5, "bilinear form")
+        });
+    }
+}

@@ -1,0 +1,259 @@
+//! Paper Algorithm 1: relative SDPA with quadratic memory.
+//!
+//! Materializes phi(p_{n->m}) for every pair — exactly the cost the paper
+//! eliminates.  Kept as the correctness oracle and the memory/throughput
+//! baseline for the benches.
+
+use crate::config::Method;
+use crate::geometry::{rotate_pair, Pose};
+
+use super::{AttnOutput, AttnProblem};
+
+/// Apply the method's phi(p_rel) to a d-vector (block-stacked).
+/// For rope2d `rel` must be the *abelian* difference; for the SE(2) methods
+/// the group-relative pose.
+fn apply_phi_rel(
+    method: Method,
+    rel: &Pose,
+    scales: &[f64],
+    x: &[f32],
+    out: &mut [f32],
+) {
+    match method {
+        Method::Abs => out.copy_from_slice(x),
+        Method::Rope2d => {
+            let nb = x.len() / 4;
+            for j in 0..nb {
+                let a = scales[j % scales.len()];
+                let b = &x[4 * j..4 * j + 4];
+                let (r0, r1) = rotate_pair(b[0] as f64, b[1] as f64, a * rel.x);
+                let (r2, r3) = rotate_pair(b[2] as f64, b[3] as f64, a * rel.y);
+                out[4 * j] = r0 as f32;
+                out[4 * j + 1] = r1 as f32;
+                out[4 * j + 2] = r2 as f32;
+                out[4 * j + 3] = r3 as f32;
+            }
+        }
+        Method::Se2Rep => {
+            let nb = x.len() / 3;
+            for j in 0..nb {
+                let p = rel.scaled(scales[j % scales.len()]);
+                let (s, c) = p.theta.sin_cos();
+                let b = &x[3 * j..3 * j + 3];
+                let (x0, x1, x2) = (b[0] as f64, b[1] as f64, b[2] as f64);
+                out[3 * j] = (c * x0 - s * x1 + p.x * x2) as f32;
+                out[3 * j + 1] = (s * x0 + c * x1 + p.y * x2) as f32;
+                out[3 * j + 2] = x2 as f32;
+            }
+        }
+        Method::Se2Fourier => {
+            // the *exact* target diag[rho(x), rho(y), rho(theta)] (Eq. 10)
+            let nb = x.len() / 6;
+            for j in 0..nb {
+                let a = scales[j % scales.len()];
+                let b = &x[6 * j..6 * j + 6];
+                let (r0, r1) = rotate_pair(b[0] as f64, b[1] as f64, a * rel.x);
+                let (r2, r3) = rotate_pair(b[2] as f64, b[3] as f64, a * rel.y);
+                let (r4, r5) = rotate_pair(b[4] as f64, b[5] as f64, rel.theta);
+                out[6 * j] = r0 as f32;
+                out[6 * j + 1] = r1 as f32;
+                out[6 * j + 2] = r2 as f32;
+                out[6 * j + 3] = r3 as f32;
+                out[6 * j + 4] = r4 as f32;
+                out[6 * j + 5] = r5 as f32;
+            }
+        }
+    }
+}
+
+/// Relative pose convention per method (Sec. II-D vs II-E).
+fn relative(method: Method, pn: &Pose, pm: &Pose) -> Pose {
+    match method {
+        Method::Rope2d => Pose {
+            x: pm.x - pn.x,
+            y: pm.y - pn.y,
+            theta: 0.0,
+        },
+        _ => pn.relative_to(pm),
+    }
+}
+
+/// Algorithm 1.  O(N*M*d) time, O(N*M) transient memory (the bias and
+/// weight matrices plus a phi-transformed copy of V per row).
+pub fn attention(p: &AttnProblem) -> AttnOutput {
+    p.validate();
+    let (n, m, d) = (p.n(), p.m(), p.d);
+    let mut out = vec![0.0f32; n * d];
+    // The full n x m score matrix IS the quadratic cost being measured.
+    let mut scores = vec![0.0f64; n * m];
+    let mut phik = vec![0.0f32; d];
+    let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+
+    for i in 0..n {
+        let qi = &p.q[i * d..(i + 1) * d];
+        let row = &mut scores[i * m..(i + 1) * m];
+        for j in 0..m {
+            if p.tq[i] < p.tk[j] {
+                row[j] = f64::NEG_INFINITY;
+                continue;
+            }
+            let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+            apply_phi_rel(p.method, &rel, p.scales, &p.k[j * d..(j + 1) * d], &mut phik);
+            let dot: f64 = qi
+                .iter()
+                .zip(phik.iter())
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum();
+            row[j] = dot * inv_sqrt_d;
+        }
+        crate::linalg::softmax_inplace(row);
+        // o_i = sum_j a_ij phi(rel_ij) v_j   (Alg. 1 line 3)
+        let oi = &mut out[i * d..(i + 1) * d];
+        for j in 0..m {
+            let a = row[j];
+            if a == 0.0 {
+                continue;
+            }
+            let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+            apply_phi_rel(p.method, &rel, p.scales, &p.v[j * d..(j + 1) * d], &mut phik);
+            for (o, &pv) in oi.iter_mut().zip(phik.iter()) {
+                *o += (a * pv as f64) as f32;
+            }
+        }
+    }
+
+    AttnOutput {
+        out,
+        peak_temp_bytes: scores.len() * std::mem::size_of::<f64>(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn problem_data(
+        rng: &mut Rng,
+        n: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Pose>, Vec<i32>) {
+        let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..n)
+            .map(|_| {
+                Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.0, 3.0))
+            })
+            .collect();
+        let t: Vec<i32> = (0..n).map(|_| rng.int_range(0, 3) as i32).collect();
+        (q, k, v, poses, t)
+    }
+
+    #[test]
+    fn se2_methods_are_frame_invariant() {
+        // Algorithm 1 invariance (paper Eq. 2) for the SE(2) methods.
+        let mut rng = Rng::new(7);
+        let scales = [1.0, 0.5];
+        let (q, k, v, poses, t) = problem_data(&mut rng, 8, 12);
+        let z = Pose::new(0.8, -0.5, 1.2);
+        let zi = z.inverse();
+        let shifted: Vec<Pose> = poses.iter().map(|p| zi.compose(p)).collect();
+        for method in [Method::Se2Rep, Method::Se2Fourier] {
+            let d = if method == Method::Se2Rep { 12 } else { 12 };
+            let mk = |ps: &[Pose]| AttnOutput {
+                out: attention(&AttnProblem {
+                    method,
+                    d,
+                    fourier_f: 8,
+                    scales: &scales,
+                    q: &q,
+                    k: &k,
+                    v: &v,
+                    pose_q: ps,
+                    pose_k: ps,
+                    tq: &t,
+                    tk: &t,
+                })
+                .out,
+                peak_temp_bytes: 0,
+            };
+            let o1 = mk(&poses).out;
+            let o2 = mk(&shifted).out;
+            for (a, b) in o1.iter().zip(o2.iter()) {
+                assert!((a - b).abs() < 1e-4, "{method:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn abs_reduces_to_plain_sdpa() {
+        let mut rng = Rng::new(8);
+        let (q, k, v, poses, t) = problem_data(&mut rng, 6, 8);
+        let p = AttnProblem {
+            method: Method::Abs,
+            d: 8,
+            fourier_f: 4,
+            scales: &[1.0],
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &poses,
+            pose_k: &poses,
+            tq: &t,
+            tk: &t,
+        };
+        let got = attention(&p).out;
+        // hand-rolled plain SDPA
+        let n = 6;
+        let d = 8;
+        for i in 0..n {
+            let mut logits: Vec<f64> = (0..n)
+                .map(|j| {
+                    if t[i] < t[j] {
+                        f64::NEG_INFINITY
+                    } else {
+                        (0..d)
+                            .map(|c| q[i * d + c] as f64 * k[j * d + c] as f64)
+                            .sum::<f64>()
+                            / (d as f64).sqrt()
+                    }
+                })
+                .collect();
+            crate::linalg::softmax_inplace(&mut logits);
+            for c in 0..d {
+                let expect: f64 = (0..n)
+                    .map(|j| logits[j] * v[j * d + c] as f64)
+                    .sum();
+                assert!((got[i * d + c] as f64 - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_pairs_get_zero_weight() {
+        let mut rng = Rng::new(9);
+        let (q, k, v, poses, _) = problem_data(&mut rng, 4, 8);
+        // token 0 sees only itself; tokens with equal t see each other
+        let t = vec![0, 1, 1, 2];
+        let p = AttnProblem {
+            method: Method::Rope2d,
+            d: 8,
+            fourier_f: 4,
+            scales: &[1.0],
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &poses,
+            pose_k: &poses,
+            tq: &t,
+            tk: &t,
+        };
+        let got = attention(&p).out;
+        // row 0 attends only to key 0: output must equal phi(rel_00) v_0,
+        // where rel_00 = 0 so phi = I -> v_0 exactly.
+        for c in 0..8 {
+            assert!((got[c] - v[c]).abs() < 1e-5, "{c}");
+        }
+    }
+}

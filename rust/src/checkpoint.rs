@@ -1,0 +1,247 @@
+//! Checkpointing: save/restore model parameters (and optimizer state) to a
+//! length-prefixed binary format with name/shape validation on load.
+//!
+//! Checkpoints are method-agnostic — every attention variant shares the
+//! same parameter layout (see `python/compile/model.py`) — so a checkpoint
+//! trained with one method can warm-start another (useful for the
+//! ablations in `rust/benches/`).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Dtype, HostTensor};
+
+const MAGIC: u32 = 0x5E2A_C4B7;
+const VERSION: u32 = 1;
+
+/// A named tensor bundle (parameters, or parameters + Adam moments).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub method: String,
+    pub entries: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64, method: &str) -> Checkpoint {
+        Checkpoint {
+            step,
+            method: method.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, t: HostTensor) {
+        self.entries.push((name.to_string(), t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&HostTensor> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        write_str(&mut w, &self.method)?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.entries {
+            write_str(&mut w, name)?;
+            let dtype_tag: u8 = match t.dtype() {
+                Dtype::F32 => 0,
+                Dtype::I32 => 1,
+            };
+            w.write_all(&[dtype_tag])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            match t.dtype() {
+                Dtype::F32 => {
+                    for v in t.as_f32()? {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                Dtype::I32 => {
+                    for v in t.as_i32()? {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut r = std::io::BufReader::new(f);
+        if read_u32(&mut r)? != MAGIC {
+            bail!("not a se2attn checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("checkpoint version {version}, expected {VERSION}");
+        }
+        let step = read_u64(&mut r)?;
+        let method = read_str(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        if n > 1 << 20 {
+            bail!("corrupt checkpoint: implausible entry count {n}");
+        }
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut r)?;
+            let mut tag = [0u8; 1];
+            r.read_exact(&mut tag)?;
+            let rank = read_u32(&mut r)? as usize;
+            if rank > 16 {
+                bail!("corrupt checkpoint: rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            if numel > 1 << 28 {
+                bail!("corrupt checkpoint: tensor too large");
+            }
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            let t = match tag[0] {
+                0 => HostTensor::f32(
+                    shape,
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                1 => HostTensor::i32(
+                    shape,
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                other => bail!("corrupt checkpoint: dtype tag {other}"),
+            };
+            entries.push((name, t));
+        }
+        Ok(Checkpoint {
+            step,
+            method,
+            entries,
+        })
+    }
+
+    /// Extract the tensors for the given names, in order, erroring on any
+    /// missing entry (used to restore `ModelHandle` state).
+    pub fn take_ordered(&self, prefix: &str, names: &[String]) -> Result<Vec<HostTensor>> {
+        names
+            .iter()
+            .map(|n| {
+                let key = format!("{prefix}{n}");
+                self.get(&key)
+                    .cloned()
+                    .with_context(|| format!("checkpoint missing '{key}'"))
+            })
+            .collect()
+    }
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 4096 {
+        bail!("corrupt checkpoint: string length {n}");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf).context("checkpoint string not utf-8")?)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn sample_checkpoint() -> Checkpoint {
+        let mut rng = Rng::new(0);
+        let mut ck = Checkpoint::new(123, "se2fourier");
+        ck.push(
+            "param:embed_w",
+            HostTensor::f32(vec![4, 8], rng.normal_vec_f32(32, 1.0)),
+        );
+        ck.push("param:embed_b", HostTensor::f32(vec![8], vec![0.5; 8]));
+        ck.push("meta:ids", HostTensor::i32(vec![3], vec![1, 2, 3]));
+        ck
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample_checkpoint();
+        let path = std::env::temp_dir().join("se2attn_ck_test/a.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn take_ordered_validates() {
+        let ck = sample_checkpoint();
+        let names = vec!["embed_w".to_string(), "embed_b".to_string()];
+        let got = ck.take_ordered("param:", &names).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].shape, vec![4, 8]);
+        let missing = vec!["nope".to_string()];
+        assert!(ck.take_ordered("param:", &missing).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        let dir = std::env::temp_dir().join("se2attn_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.ckpt");
+        std::fs::write(&bad, b"garbage").unwrap();
+        assert!(Checkpoint::load(&bad).is_err());
+        // truncation fuzz
+        let good = dir.join("good.ckpt");
+        sample_checkpoint().save(&good).unwrap();
+        let bytes = std::fs::read(&good).unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let cut = rng.below(bytes.len());
+            std::fs::write(&bad, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&bad).is_err(), "cut at {cut}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

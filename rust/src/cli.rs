@@ -1,0 +1,290 @@
+//! Declarative command-line parsing (substrate for the absent `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Command {
+        Command {
+            name: name.into(),
+            about: about.into(),
+            args: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &str, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Command {
+        self.args.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+}
+
+/// Parsed argument values for one subcommand.
+#[derive(Clone, Debug)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown arg '{name}'"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+}
+
+/// A multi-command CLI application.
+pub struct App {
+    pub name: String,
+    pub about: String,
+    pub commands: Vec<Command>,
+}
+
+pub enum ParseOutcome {
+    Run(Matches),
+    Help(String),
+    Error(String),
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> App {
+        App {
+            name: name.into(),
+            about: about.into(),
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: Command) -> App {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<24} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '<command> --help' for command options.\n");
+        s
+    }
+
+    fn command_usage(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.name, c.name, c.about);
+        for a in &c.args {
+            let d = match (&a.default, a.is_flag) {
+                (_, true) => "flag".to_string(),
+                (Some(d), _) => format!("default: {d}"),
+                (None, _) => "required".to_string(),
+            };
+            s.push_str(&format!("  --{:<22} {} [{}]\n", a.name, a.help, d));
+        }
+        s
+    }
+
+    /// Parse argv (without program name).
+    pub fn parse(&self, argv: &[String]) -> ParseOutcome {
+        if argv.is_empty()
+            || argv[0] == "--help"
+            || argv[0] == "-h"
+            || argv[0] == "help"
+        {
+            return ParseOutcome::Help(self.usage());
+        }
+        let cmd = match self.commands.iter().find(|c| c.name == argv[0]) {
+            Some(c) => c,
+            None => {
+                return ParseOutcome::Error(format!(
+                    "unknown command '{}'\n\n{}",
+                    argv[0],
+                    self.usage()
+                ))
+            }
+        };
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for a in &cmd.args {
+            if a.is_flag {
+                flags.insert(a.name.clone(), false);
+            } else if let Some(d) = &a.default {
+                values.insert(a.name.clone(), d.clone());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return ParseOutcome::Help(self.command_usage(cmd));
+            }
+            let Some(stripped) = tok.strip_prefix("--") else {
+                return ParseOutcome::Error(format!("unexpected argument '{tok}'"));
+            };
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (stripped.to_string(), None),
+            };
+            let Some(spec) = cmd.args.iter().find(|a| a.name == key) else {
+                return ParseOutcome::Error(format!(
+                    "unknown option '--{key}' for '{}'\n\n{}",
+                    cmd.name,
+                    self.command_usage(cmd)
+                ));
+            };
+            if spec.is_flag {
+                flags.insert(key, true);
+                i += 1;
+            } else if let Some(v) = inline_val {
+                values.insert(key, v);
+                i += 1;
+            } else {
+                if i + 1 >= argv.len() {
+                    return ParseOutcome::Error(format!("--{key} needs a value"));
+                }
+                values.insert(key, argv[i + 1].clone());
+                i += 2;
+            }
+        }
+        for a in &cmd.args {
+            if !a.is_flag && !values.contains_key(&a.name) {
+                return ParseOutcome::Error(format!(
+                    "missing required option --{} for '{}'",
+                    a.name, cmd.name
+                ));
+            }
+        }
+        ParseOutcome::Run(Matches {
+            command: cmd.name.clone(),
+            values,
+            flags,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("t", "test app").command(
+            Command::new("serve", "run server")
+                .opt("port", "8080", "port to listen on")
+                .required("model", "artifact name")
+                .flag("verbose", "chatty"),
+        )
+    }
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let m = match app().parse(&args(&["serve", "--model", "fwd", "--verbose"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!("expected run"),
+        };
+        assert_eq!(m.get("port"), "8080");
+        assert_eq!(m.get("model"), "fwd");
+        assert!(m.get_flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let m = match app().parse(&args(&["serve", "--model=x", "--port=9"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.get_usize("port"), 9);
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(matches!(
+            app().parse(&args(&["serve"])),
+            ParseOutcome::Error(_)
+        ));
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        assert!(matches!(
+            app().parse(&args(&["nope"])),
+            ParseOutcome::Error(_)
+        ));
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&args(&[])), ParseOutcome::Help(_)));
+        assert!(matches!(
+            app().parse(&args(&["serve", "--help"])),
+            ParseOutcome::Help(_)
+        ));
+    }
+}

@@ -1,0 +1,243 @@
+//! Typed configuration for the whole system.
+//!
+//! The model-side values are *read from* `artifacts/index.json` (emitted by
+//! the AOT pipeline) so Rust and JAX can never disagree about shapes; the
+//! runtime/simulator knobs have CLI-overridable defaults.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+/// Attention method — kept in sync with `python/compile/config.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Abs,
+    Rope2d,
+    Se2Rep,
+    Se2Fourier,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] =
+        [Method::Abs, Method::Rope2d, Method::Se2Rep, Method::Se2Fourier];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Abs => "abs",
+            Method::Rope2d => "rope2d",
+            Method::Se2Rep => "se2rep",
+            Method::Se2Fourier => "se2fourier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "abs" => Method::Abs,
+            "rope2d" => Method::Rope2d,
+            "se2rep" => Method::Se2Rep,
+            "se2fourier" => Method::Se2Fourier,
+            _ => bail!("unknown attention method '{s}' \
+                        (expected abs|rope2d|se2rep|se2fourier)"),
+        })
+    }
+
+    /// Paper-style display name (Table I rows).
+    pub fn display(&self) -> &'static str {
+        match self {
+            Method::Abs => "Absolute Positions",
+            Method::Rope2d => "2D RoPE",
+            Method::Se2Rep => "SE(2) Representation",
+            Method::Se2Fourier => "SE(2) Fourier (ours)",
+        }
+    }
+}
+
+/// Model configuration baked into the artifacts (mirror of the Python
+/// `ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_tokens: usize,
+    pub feat_dim: usize,
+    pub n_actions: usize,
+    pub fourier_f: usize,
+    pub spatial_scales: Vec<f64>,
+    pub batch_size: usize,
+    pub learning_rate: f64,
+    pub map_timestep: i32,
+    pub param_names: Vec<String>,
+}
+
+impl ModelConfig {
+    /// Parse from the `index.json` the AOT pipeline writes.
+    pub fn from_index(index: &Json) -> Result<ModelConfig> {
+        let c = index.get("config").context("index.json missing 'config'")?;
+        let num = |k: &str| -> Result<f64> {
+            c.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("config.{k} missing"))
+        };
+        let scales = c
+            .get("spatial_scales")
+            .and_then(Json::as_arr)
+            .context("config.spatial_scales missing")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let param_names = index
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .context("index.json missing param_names")?
+            .iter()
+            .filter_map(|j| j.as_str().map(str::to_string))
+            .collect();
+        Ok(ModelConfig {
+            n_layers: num("n_layers")? as usize,
+            n_heads: num("n_heads")? as usize,
+            head_dim: num("head_dim")? as usize,
+            d_model: num("d_model")? as usize,
+            d_ff: num("d_ff")? as usize,
+            n_tokens: num("n_tokens")? as usize,
+            feat_dim: num("feat_dim")? as usize,
+            n_actions: num("n_actions")? as usize,
+            fourier_f: num("fourier_f")? as usize,
+            spatial_scales: scales,
+            batch_size: num("batch_size")? as usize,
+            learning_rate: num("learning_rate")?,
+            map_timestep: num("map_timestep")? as i32,
+            param_names,
+        })
+    }
+
+    /// Per-head projected width c for SE(2) Fourier (Sec. III-C).
+    pub fn se2f_proj_dim(&self) -> usize {
+        (4 * self.fourier_f + 2) * (self.head_dim / 6)
+    }
+}
+
+/// Simulator / scenario-generation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Simulation timestep in seconds (paper evaluates 6 s futures).
+    pub dt: f64,
+    /// History steps tokenized as context.
+    pub history_steps: usize,
+    /// Future steps rolled out for minADE (6 s / dt).
+    pub future_steps: usize,
+    /// Agents per scenario.
+    pub n_agents: usize,
+    /// Map tokens per scenario.
+    pub n_map_tokens: usize,
+    /// World-to-model position downscale: paper downscales positions to
+    /// magnitude <= 4.
+    pub pos_scale: f64,
+    /// minADE sample count (paper: 16 joint trajectory samples).
+    pub n_rollout_samples: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            dt: 0.5,
+            history_steps: 8,
+            future_steps: 12,
+            n_agents: 6,
+            n_map_tokens: 16,
+            pos_scale: 0.05, // +-80 m world -> +-4 model units
+            n_rollout_samples: 16,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Tokens per scene = map tokens + agents x history.
+    pub fn tokens_per_scene(&self) -> usize {
+        self.n_map_tokens + self.n_agents * self.history_steps
+    }
+}
+
+/// Whole-system configuration.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub artifact_dir: PathBuf,
+    pub model: ModelConfig,
+    pub sim: SimConfig,
+    pub threads: usize,
+}
+
+impl SystemConfig {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<SystemConfig> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let index_path = dir.join("index.json");
+        let text = std::fs::read_to_string(&index_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                index_path.display()
+            )
+        })?;
+        let index = Json::parse(&text).context("bad index.json")?;
+        let model = ModelConfig::from_index(&index)?;
+        let sim = SimConfig::default();
+        // the tokenizer layout must agree with the model's token budget
+        if sim.tokens_per_scene() != model.n_tokens {
+            bail!(
+                "sim layout produces {} tokens but artifacts expect {}",
+                sim.tokens_per_scene(),
+                model.n_tokens
+            );
+        }
+        Ok(SystemConfig {
+            artifact_dir: dir,
+            model,
+            sim,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn model_config_from_index_json() {
+        let text = r#"{
+            "config": {"n_layers": 2, "n_heads": 2, "head_dim": 48,
+                       "d_model": 96, "d_ff": 192, "n_tokens": 64,
+                       "feat_dim": 16, "n_actions": 64, "fourier_f": 12,
+                       "spatial_scales": [1.0, 0.5, 0.25, 2.0],
+                       "batch_size": 8, "learning_rate": 0.0003,
+                       "map_timestep": -1},
+            "param_names": ["embed_b", "embed_w"],
+            "artifacts": []
+        }"#;
+        let idx = Json::parse(text).unwrap();
+        let mc = ModelConfig::from_index(&idx).unwrap();
+        assert_eq!(mc.head_dim, 48);
+        assert_eq!(mc.se2f_proj_dim(), 50 * 8);
+        assert_eq!(mc.spatial_scales, vec![1.0, 0.5, 0.25, 2.0]);
+        assert_eq!(mc.param_names.len(), 2);
+    }
+
+    #[test]
+    fn sim_token_budget_matches_default_model() {
+        let sim = SimConfig::default();
+        assert_eq!(sim.tokens_per_scene(), 64);
+    }
+}

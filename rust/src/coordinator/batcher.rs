@@ -1,0 +1,217 @@
+//! Dynamic batcher: the AOT artifacts are lowered at a fixed batch size B,
+//! so incoming requests are grouped into full batches, padding unused slots
+//! by repeating the first scene (padded outputs are sliced away).
+//!
+//! Flush policy: a batch is emitted when full, or when the oldest queued
+//! request has waited `max_wait`; `max_queue` bounds memory (backpressure:
+//! callers get a rejection instead of unbounded queuing).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    pub batch_size: usize,
+    pub max_wait: Duration,
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> BatcherConfig {
+        BatcherConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(20),
+            max_queue: 256,
+        }
+    }
+}
+
+struct Queued<T> {
+    item: T,
+    enqueued_at: Instant,
+}
+
+/// A batch handed to the execution stage: `items` are the real requests,
+/// `padding` how many extra slots were filled by repetition.
+pub struct ReadyBatch<T> {
+    pub items: Vec<T>,
+    pub padding: usize,
+}
+
+/// Order-preserving dynamic batcher (generic over request type).
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Queued<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        assert!(cfg.batch_size > 0);
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a request; `Err(item)` = queue full (backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(item);
+        }
+        self.queue.push_back(Queued {
+            item,
+            enqueued_at: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.batch_size {
+            return true;
+        }
+        match self.queue.front() {
+            Some(front) => now.duration_since(front.enqueued_at) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop a batch if the flush policy triggers.  FIFO order is preserved;
+    /// never returns an empty batch.
+    pub fn poll(&mut self, now: Instant) -> Option<ReadyBatch<T>> {
+        if !self.should_flush(now) {
+            return None;
+        }
+        let take = self.queue.len().min(self.cfg.batch_size);
+        let items: Vec<T> = (0..take)
+            .map(|_| self.queue.pop_front().unwrap().item)
+            .collect();
+        let padding = self.cfg.batch_size - items.len();
+        Some(ReadyBatch { items, padding })
+    }
+
+    /// Flush everything immediately (shutdown path).
+    pub fn drain(&mut self) -> Vec<ReadyBatch<T>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.cfg.batch_size);
+            let items: Vec<T> = (0..take)
+                .map(|_| self.queue.pop_front().unwrap().item)
+                .collect();
+            let padding = self.cfg.batch_size - items.len();
+            out.push(ReadyBatch { items, padding });
+        }
+        out
+    }
+
+    /// Time until the oldest request would force a flush (for event-loop
+    /// sleep calculation).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|f| {
+            self.cfg
+                .max_wait
+                .saturating_sub(now.duration_since(f.enqueued_at))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proplite::check;
+
+    fn cfg(bs: usize, wait_ms: u64, max_q: usize) -> BatcherConfig {
+        BatcherConfig {
+            batch_size: bs,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue: max_q,
+        }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(cfg(4, 1000, 100));
+        for i in 0..4 {
+            b.push(i).unwrap();
+        }
+        let batch = b.poll(Instant::now()).expect("full batch");
+        assert_eq!(batch.items, vec![0, 1, 2, 3]);
+        assert_eq!(batch.padding, 0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = Batcher::new(cfg(4, 50, 100));
+        b.push(7).unwrap();
+        let now = Instant::now();
+        assert!(b.poll(now).is_none(), "should wait");
+        let later = now + Duration::from_millis(60);
+        let batch = b.poll(later).expect("deadline flush");
+        assert_eq!(batch.items, vec![7]);
+        assert_eq!(batch.padding, 3);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut b = Batcher::new(cfg(2, 10, 3));
+        assert!(b.push(1).is_ok());
+        assert!(b.push(2).is_ok());
+        assert!(b.push(3).is_ok());
+        assert_eq!(b.push(4), Err(4));
+    }
+
+    #[test]
+    fn drain_empties_queue() {
+        let mut b = Batcher::new(cfg(4, 1000, 100));
+        for i in 0..10 {
+            b.push(i).unwrap();
+        }
+        let batches = b.drain();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].items, vec![8, 9]);
+        assert_eq!(batches[2].padding, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn property_no_loss_no_dup_fifo() {
+        check("batcher conservation", 50, |rng| {
+            let bs = 1 + rng.below(6);
+            let mut b = Batcher::new(cfg(bs, 0, 10_000));
+            let n = rng.below(200);
+            for i in 0..n {
+                b.push(i).map_err(|_| "rejected".to_string())?;
+            }
+            let mut seen = Vec::new();
+            let far = Instant::now() + Duration::from_secs(10);
+            while let Some(batch) = b.poll(far) {
+                if batch.items.is_empty() {
+                    return Err("empty batch".into());
+                }
+                seen.extend(batch.items);
+            }
+            if seen != (0..n).collect::<Vec<_>>() {
+                return Err(format!("order/loss violation: {} items", seen.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn next_deadline_shrinks() {
+        let mut b = Batcher::new(cfg(4, 100, 10));
+        let t0 = Instant::now();
+        b.push(0).unwrap();
+        let d1 = b.next_deadline(t0).unwrap();
+        let d2 = b.next_deadline(t0 + Duration::from_millis(50)).unwrap();
+        assert!(d2 < d1);
+    }
+}

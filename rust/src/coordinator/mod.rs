@@ -1,0 +1,29 @@
+//! L3 coordinator: the serving/training brain of the system.
+//!
+//! * [`model`] — `ModelHandle`: parameter state + fwd/train/decode calls
+//!   against the AOT artifacts (manifest-driven parameter threading).
+//! * [`batcher`] — dynamic batching of rollout requests into the fixed
+//!   batch shape the artifacts were lowered at (deadline-based flush,
+//!   pad-and-slice).
+//! * [`router`] — routes requests across per-method model replicas.
+//! * [`rollout`] — autoregressive simulation scheduler: decode -> action ->
+//!   kinematic integration -> re-tokenize, for minADE evaluation and
+//!   serving.
+//! * [`trainer`] — training orchestrator over the dataset pipeline.
+//! * [`server`] — thread-based serving loop wiring the above together.
+//! * [`telemetry`] — lock-free counters/histograms for the hot path.
+
+pub mod batcher;
+pub mod model;
+pub mod rollout;
+pub mod router;
+pub mod server;
+pub mod telemetry;
+pub mod trainer;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use model::ModelHandle;
+pub use rollout::{RolloutEngine, RolloutRequest, RolloutResult};
+pub use router::Router;
+pub use server::Server;
+pub use trainer::Trainer;

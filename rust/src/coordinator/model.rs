@@ -1,0 +1,205 @@
+//! `ModelHandle`: owns the parameter/optimizer state for one attention
+//! method and drives the AOT artifacts (init / fwd / train_step / decode).
+//!
+//! Parameter threading is manifest-driven: the artifacts name their slots
+//! `param:<name>` / `m:<name>` / `v:<name>` in sorted order, and the handle
+//! slices its state vectors accordingly — no hard-coded parameter count
+//! anywhere on the Rust side.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Method;
+use crate::dataset::Batch;
+use crate::runtime::{Engine, HostTensor};
+
+/// Decoded model outputs for one batch.
+pub struct DecodeOutput {
+    /// (B, N) sampled action ids.
+    pub actions: Vec<i32>,
+    /// (B, N) log-probability of each sampled action.
+    pub logp: Vec<f32>,
+    /// (B, N, A) full logits.
+    pub logits: Vec<f32>,
+}
+
+pub struct ModelHandle {
+    pub method: Method,
+    engine: Arc<Engine>,
+    /// Parameters, Adam first and second moments (manifest order).
+    params: Vec<HostTensor>,
+    opt_m: Vec<HostTensor>,
+    opt_v: Vec<HostTensor>,
+    pub step: u64,
+    n_params: usize,
+}
+
+impl ModelHandle {
+    /// Initialize parameters on-device via the `init` artifact.
+    pub fn init(engine: Arc<Engine>, method: Method, seed: i32) -> Result<ModelHandle> {
+        let init = engine.load("init")?;
+        let params = init.execute(&[HostTensor::scalar_i32(seed)])?;
+        let n_params = params.len();
+        let opt_m: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::f32(p.shape.clone(), vec![0.0; p.numel()]))
+            .collect();
+        let opt_v = opt_m.clone();
+        Ok(ModelHandle {
+            method,
+            engine,
+            params,
+            opt_m,
+            opt_v,
+            step: 0,
+            n_params,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Total scalar parameter count (for logging).
+    pub fn n_weights(&self) -> usize {
+        self.params.iter().map(HostTensor::numel).sum()
+    }
+
+    fn batch_tensors(&self, b: &Batch, n_tokens: usize, feat_dim: usize) -> Vec<HostTensor> {
+        let bs = b.batch_size;
+        vec![
+            HostTensor::f32(vec![bs, n_tokens, feat_dim], b.feat.clone()),
+            HostTensor::f32(vec![bs, n_tokens, 3], b.pose.clone()),
+            HostTensor::i32(vec![bs, n_tokens], b.tq.clone()),
+        ]
+    }
+
+    /// Forward pass: logits (B, N, A) flattened.
+    pub fn forward(&self, b: &Batch, n_tokens: usize, feat_dim: usize) -> Result<Vec<f32>> {
+        let name = format!("fwd_{}", self.method.name());
+        let mut inputs = self.params.clone();
+        inputs.extend(self.batch_tensors(b, n_tokens, feat_dim));
+        let out = self.engine.run(&name, &inputs)?;
+        Ok(out
+            .into_iter()
+            .next()
+            .context("fwd returned nothing")?
+            .as_f32()?
+            .to_vec())
+    }
+
+    /// One optimizer step; returns the training loss.
+    pub fn train_step(&mut self, b: &Batch, n_tokens: usize, feat_dim: usize) -> Result<f32> {
+        let name = format!("train_step_{}", self.method.name());
+        self.step += 1;
+        let p = self.n_params;
+        let mut inputs =
+            Vec::with_capacity(3 * p + 5);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.opt_m.iter().cloned());
+        inputs.extend(self.opt_v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(self.step as f32));
+        inputs.extend(self.batch_tensors(b, n_tokens, feat_dim));
+        inputs.push(HostTensor::i32(
+            vec![b.batch_size, n_tokens],
+            b.target.clone(),
+        ));
+        let mut out = self.engine.run(&name, &inputs)?;
+        if out.len() != 3 * p + 1 {
+            bail!(
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                3 * p + 1
+            );
+        }
+        let loss = out.pop().unwrap().item_f32()?;
+        self.opt_v = out.split_off(2 * p);
+        self.opt_m = out.split_off(p);
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Sample actions for every token.
+    pub fn decode(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        seed: i32,
+        temperature: f32,
+    ) -> Result<DecodeOutput> {
+        let name = format!("decode_{}", self.method.name());
+        let mut inputs = self.params.clone();
+        inputs.extend(self.batch_tensors(b, n_tokens, feat_dim));
+        inputs.push(HostTensor::scalar_i32(seed));
+        inputs.push(HostTensor::scalar_f32(temperature));
+        let out = self.engine.run(&name, &inputs)?;
+        if out.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", out.len());
+        }
+        Ok(DecodeOutput {
+            actions: out[0].as_i32()?.to_vec(),
+            logp: out[1].as_f32()?.to_vec(),
+            logits: out[2].as_f32()?.to_vec(),
+        })
+    }
+
+    /// Snapshot parameters (for checkpoint writing / tests).
+    pub fn params(&self) -> &[HostTensor] {
+        &self.params
+    }
+
+    /// Restore parameters (e.g. from another handle / checkpoint).
+    pub fn set_params(&mut self, params: Vec<HostTensor>) -> Result<()> {
+        if params.len() != self.n_params {
+            bail!("expected {} tensors, got {}", self.n_params, params.len());
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    /// Full training-state checkpoint (params + Adam moments + step).
+    pub fn to_checkpoint(&self, param_names: &[String]) -> Result<crate::checkpoint::Checkpoint> {
+        if param_names.len() != self.n_params {
+            bail!(
+                "param_names has {} entries, model has {}",
+                param_names.len(),
+                self.n_params
+            );
+        }
+        let mut ck =
+            crate::checkpoint::Checkpoint::new(self.step, self.method.name());
+        for (name, t) in param_names.iter().zip(&self.params) {
+            ck.push(&format!("param:{name}"), t.clone());
+        }
+        for (name, t) in param_names.iter().zip(&self.opt_m) {
+            ck.push(&format!("m:{name}"), t.clone());
+        }
+        for (name, t) in param_names.iter().zip(&self.opt_v) {
+            ck.push(&format!("v:{name}"), t.clone());
+        }
+        Ok(ck)
+    }
+
+    /// Restore full training state from a checkpoint.
+    pub fn restore(
+        &mut self,
+        ck: &crate::checkpoint::Checkpoint,
+        param_names: &[String],
+    ) -> Result<()> {
+        let params = ck.take_ordered("param:", param_names)?;
+        let m = ck.take_ordered("m:", param_names)?;
+        let v = ck.take_ordered("v:", param_names)?;
+        for (t, spec) in params.iter().zip(&self.params) {
+            if t.shape != spec.shape {
+                bail!("checkpoint shape mismatch: {:?} vs {:?}", t.shape, spec.shape);
+            }
+        }
+        self.params = params;
+        self.opt_m = m;
+        self.opt_v = v;
+        self.step = ck.step;
+        Ok(())
+    }
+}

@@ -1,0 +1,251 @@
+//! Autoregressive rollout scheduler: decode actions for the frontier
+//! tokens, integrate the kinematic model, slide the history window,
+//! re-tokenize, repeat — the serving-path core of the agent-simulation
+//! task (paper Sec. IV-B) and the engine behind minADE evaluation.
+//!
+//! Batching: the decode artifact is lowered at batch size B, so up to B
+//! scene-samples advance per PJRT call; a group of scenes with S samples
+//! each is packed into ceil(scenes*S / B) slots per step.
+
+use anyhow::{Context, Result};
+
+use crate::config::{ModelConfig, SimConfig};
+use crate::dataset::Batch;
+use crate::metrics;
+use crate::sim::agent::KinematicAction;
+use crate::sim::{AgentState, MapElement, Scenario, TrajectoryClass};
+use crate::tokenizer::Tokenizer;
+
+use super::model::ModelHandle;
+
+/// A request to roll one scenario forward.
+#[derive(Clone)]
+pub struct RolloutRequest {
+    pub scenario: Scenario,
+    /// History window end (inclusive) in scenario steps.
+    pub t0: usize,
+    pub n_samples: usize,
+    pub temperature: f32,
+    pub seed: i32,
+}
+
+/// World-frame sampled futures plus evaluation metrics.
+pub struct RolloutResult {
+    /// trajectories[sample][agent][step] = world (x, y).
+    pub trajectories: Vec<Vec<Vec<(f64, f64)>>>,
+    /// Per-agent minADE vs the scenario's recorded future.
+    pub min_ade: Vec<f64>,
+    /// Per-agent ground-truth class.
+    pub classes: Vec<TrajectoryClass>,
+    /// Per-step mean decode latency (ms) observed for this request.
+    pub decode_ms: f64,
+}
+
+/// One in-flight scene-sample: mutable window state.
+struct SampleState {
+    map: Vec<MapElement>,
+    window: Vec<Vec<AgentState>>,
+    /// Recorded world positions per agent per emitted step.
+    track: Vec<Vec<(f64, f64)>>,
+}
+
+pub struct RolloutEngine {
+    pub tokenizer: Tokenizer,
+    pub model_cfg: ModelConfig,
+    pub sim: SimConfig,
+}
+
+impl RolloutEngine {
+    pub fn new(model_cfg: ModelConfig, sim: SimConfig) -> RolloutEngine {
+        RolloutEngine {
+            tokenizer: Tokenizer::new(&model_cfg, &sim),
+            model_cfg,
+            sim,
+        }
+    }
+
+    fn sample_state(&self, req: &RolloutRequest) -> SampleState {
+        let h = self.sim.history_steps;
+        let window: Vec<Vec<AgentState>> = (req.t0 + 1 - h..=req.t0)
+            .map(|t| req.scenario.states[t].clone())
+            .collect();
+        let n_agents = window[0].len();
+        SampleState {
+            map: req.scenario.map_elements.clone(),
+            window,
+            track: vec![Vec::new(); n_agents],
+        }
+    }
+
+    /// Advance a group of samples one decode step.
+    fn step_samples(
+        &self,
+        model: &ModelHandle,
+        samples: &mut [SampleState],
+        seed: i32,
+        temperature: f32,
+    ) -> Result<f64> {
+        let b = self.model_cfg.batch_size;
+        let n_tokens = self.model_cfg.n_tokens;
+        let feat_dim = self.model_cfg.feat_dim;
+        let mut decode_ms = 0.0;
+        let mut calls = 0usize;
+
+        let total = samples.len();
+        for chunk_start in (0..total).step_by(b) {
+            let chunk = &mut samples[chunk_start..(chunk_start + b).min(total)];
+            // tokenize each sample; pad batch by repeating the first scene
+            let scenes: Vec<crate::tokenizer::TokenizedScene> = chunk
+                .iter()
+                .map(|s| self.tokenizer.tokenize_window(&s.map, &s.window, None))
+                .collect();
+            let mut batch = Batch {
+                feat: Vec::with_capacity(b * n_tokens * feat_dim),
+                pose: Vec::with_capacity(b * n_tokens * 3),
+                tq: Vec::with_capacity(b * n_tokens),
+                target: Vec::with_capacity(b * n_tokens),
+                batch_size: b,
+            };
+            for i in 0..b {
+                let s = &scenes[i.min(scenes.len() - 1)];
+                batch.feat.extend_from_slice(&s.feat);
+                batch.pose.extend_from_slice(&s.pose);
+                batch.tq.extend_from_slice(&s.tq);
+                batch.target.extend_from_slice(&s.target);
+            }
+            let t0 = std::time::Instant::now();
+            let out = model.decode(
+                &batch,
+                n_tokens,
+                feat_dim,
+                seed.wrapping_add(chunk_start as i32),
+                temperature,
+            )?;
+            decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+            calls += 1;
+
+            // apply sampled frontier actions per (real) sample
+            for (si, state) in chunk.iter_mut().enumerate() {
+                let scene = &scenes[si];
+                let n_agents = state.window[0].len();
+                let latest = state.window.last().unwrap().clone();
+                let mut next = Vec::with_capacity(n_agents);
+                for a in 0..n_agents {
+                    let tok = scene.agent_token(scene.history_steps - 1, a);
+                    let id = out.actions[si * n_tokens + tok];
+                    let action: KinematicAction =
+                        self.tokenizer.codebook.decode(id.max(0) as usize);
+                    let stepped = latest[a].step(action, self.sim.dt);
+                    next.push(stepped);
+                }
+                // record world positions, slide the window
+                for (a, st) in next.iter().enumerate() {
+                    state.track[a].push((st.pose.x, st.pose.y));
+                }
+                state.window.remove(0);
+                state.window.push(next);
+            }
+        }
+        Ok(decode_ms / calls.max(1) as f64)
+    }
+
+    /// Run a full rollout request: S samples x future_steps decode steps.
+    pub fn rollout(&self, model: &ModelHandle, req: &RolloutRequest) -> Result<RolloutResult> {
+        let mut samples: Vec<SampleState> =
+            (0..req.n_samples).map(|_| self.sample_state(req)).collect();
+        let mut decode_ms = 0.0;
+        for step in 0..self.sim.future_steps {
+            decode_ms += self.step_samples(
+                model,
+                &mut samples,
+                req.seed
+                    .wrapping_mul(7919)
+                    .wrapping_add(step as i32 * 104_729),
+                req.temperature,
+            )?;
+        }
+        decode_ms /= self.sim.future_steps as f64;
+
+        let n_agents = samples[0].track.len();
+        let trajectories: Vec<Vec<Vec<(f64, f64)>>> =
+            samples.iter().map(|s| s.track.clone()).collect();
+
+        // minADE vs recorded ground-truth future
+        let mut min_ade = Vec::with_capacity(n_agents);
+        let mut classes = Vec::with_capacity(n_agents);
+        for a in 0..n_agents {
+            let truth: Vec<(f64, f64)> = req
+                .scenario
+                .future_positions(a, req.t0)
+                .into_iter()
+                .take(self.sim.future_steps)
+                .collect();
+            let per_sample: Vec<Vec<(f64, f64)>> = trajectories
+                .iter()
+                .map(|t| t[a].iter().take(truth.len()).cloned().collect())
+                .collect();
+            min_ade.push(metrics::min_ade(&per_sample, &truth));
+            classes.push(req.scenario.classify_future(a, req.t0));
+        }
+
+        Ok(RolloutResult {
+            trajectories,
+            min_ade,
+            classes,
+            decode_ms,
+        })
+    }
+
+    /// Evaluate a model over many scenarios, accumulating a Table-I row.
+    pub fn evaluate(
+        &self,
+        model: &ModelHandle,
+        scenario_seeds: &[u64],
+        n_samples: usize,
+        row: &mut metrics::TableOneRow,
+    ) -> Result<()> {
+        let gen = crate::sim::ScenarioGenerator::new(self.sim.clone());
+        let t0 = self.sim.history_steps - 1;
+        for &seed in scenario_seeds {
+            let scenario = gen.generate(seed);
+            // NLL on the recorded window
+            let ts = self.tokenizer.tokenize_scenario(&scenario, t0);
+            let mut batch_scenes = vec![&ts; self.model_cfg.batch_size];
+            batch_scenes.truncate(self.model_cfg.batch_size);
+            let mut batch = Batch {
+                feat: Vec::new(),
+                pose: Vec::new(),
+                tq: Vec::new(),
+                target: Vec::new(),
+                batch_size: self.model_cfg.batch_size,
+            };
+            for s in &batch_scenes {
+                batch.feat.extend_from_slice(&s.feat);
+                batch.pose.extend_from_slice(&s.pose);
+                batch.tq.extend_from_slice(&s.tq);
+                batch.target.extend_from_slice(&s.target);
+            }
+            let logits = model.forward(&batch, self.model_cfg.n_tokens, self.model_cfg.feat_dim)?;
+            let per_scene = self.model_cfg.n_tokens * self.model_cfg.n_actions;
+            let n_labeled = ts.target.iter().filter(|&&t| t >= 0).count();
+            row.add_nll(
+                metrics::nll(&logits[..per_scene], &ts.target, self.model_cfg.n_actions),
+                n_labeled,
+            );
+
+            // minADE rollout
+            let req = RolloutRequest {
+                scenario,
+                t0,
+                n_samples,
+                temperature: 1.0,
+                seed: seed as i32,
+            };
+            let res = self.rollout(model, &req).context("rollout")?;
+            for (a, &ade) in res.min_ade.iter().enumerate() {
+                row.add_min_ade(res.classes[a], ade);
+            }
+        }
+        Ok(())
+    }
+}

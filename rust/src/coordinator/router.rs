@@ -1,0 +1,101 @@
+//! Request router: maps each request to the model replica serving its
+//! attention method, tracking in-flight counts and rejecting methods that
+//! are not deployed (vLLM-router-style, scaled to this system).
+
+use std::collections::BTreeMap;
+
+use crate::config::Method;
+
+use super::telemetry::Counter;
+
+/// Routing table over per-method replicas of `T` (model handles on the
+/// inference thread; anything in tests).
+pub struct Router<T> {
+    replicas: BTreeMap<&'static str, Vec<T>>,
+    next: BTreeMap<&'static str, usize>,
+    pub routed: Counter,
+    pub rejected: Counter,
+}
+
+impl<T> Router<T> {
+    pub fn new() -> Router<T> {
+        Router {
+            replicas: BTreeMap::new(),
+            next: BTreeMap::new(),
+            routed: Counter::default(),
+            rejected: Counter::default(),
+        }
+    }
+
+    pub fn deploy(&mut self, method: Method, replica: T) {
+        self.replicas.entry(method.name()).or_default().push(replica);
+        self.next.entry(method.name()).or_insert(0);
+    }
+
+    pub fn methods(&self) -> Vec<&'static str> {
+        self.replicas.keys().cloned().collect()
+    }
+
+    pub fn n_replicas(&self, method: Method) -> usize {
+        self.replicas.get(method.name()).map_or(0, Vec::len)
+    }
+
+    /// Round-robin pick of a replica for `method`.
+    pub fn route(&mut self, method: Method) -> Option<&mut T> {
+        let name = method.name();
+        let Some(replicas) = self.replicas.get_mut(name) else {
+            self.rejected.inc();
+            return None;
+        };
+        if replicas.is_empty() {
+            self.rejected.inc();
+            return None;
+        }
+        let idx = {
+            let counter = self.next.get_mut(name).unwrap();
+            let idx = *counter % replicas.len();
+            *counter += 1;
+            idx
+        };
+        self.routed.inc();
+        Some(&mut replicas[idx])
+    }
+}
+
+impl<T> Default for Router<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_round_robin() {
+        let mut r: Router<u32> = Router::new();
+        r.deploy(Method::Se2Fourier, 1);
+        r.deploy(Method::Se2Fourier, 2);
+        let picks: Vec<u32> = (0..4).map(|_| *r.route(Method::Se2Fourier).unwrap()).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+        assert_eq!(r.routed.get(), 4);
+    }
+
+    #[test]
+    fn unknown_method_is_rejected() {
+        let mut r: Router<u32> = Router::new();
+        r.deploy(Method::Abs, 9);
+        assert!(r.route(Method::Rope2d).is_none());
+        assert_eq!(r.n_replicas(Method::Abs), 1);
+        assert_eq!(r.n_replicas(Method::Rope2d), 0);
+    }
+
+    #[test]
+    fn methods_lists_deployments() {
+        let mut r: Router<u32> = Router::new();
+        r.deploy(Method::Abs, 1);
+        r.deploy(Method::Se2Fourier, 2);
+        assert_eq!(r.methods(), vec!["abs", "se2fourier"]);
+    }
+}

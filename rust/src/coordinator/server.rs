@@ -1,0 +1,219 @@
+//! Serving loop: a dedicated inference thread owns the PJRT engine (the
+//! `xla` crate's client is `Rc`-based and must not cross threads) and all
+//! model replicas; request producers on any thread submit through an mpsc
+//! channel and receive results on per-request channels.
+//!
+//! Flow: submit -> router (per-method batcher) -> deadline/size flush ->
+//! rollout engine -> respond.  Backpressure surfaces to callers as
+//! `Busy` rejections instead of unbounded queues.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Method, SystemConfig};
+use crate::runtime::Engine;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::model::ModelHandle;
+use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
+use super::telemetry::ServerStats;
+
+/// A rollout request plus its response channel.
+struct Envelope {
+    method: Method,
+    request: RolloutRequest,
+    submitted_at: Instant,
+    respond: mpsc::Sender<Result<RolloutResult>>,
+}
+
+enum Message {
+    Request(Envelope),
+    Shutdown,
+}
+
+/// Client-side handle to the serving thread.
+pub struct Server {
+    tx: mpsc::Sender<Message>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl Server {
+    /// Start the inference thread: loads artifacts for `methods`, each
+    /// initialized from `param_seed` (examples train them first via the
+    /// Trainer; serving freshly initialized weights is allowed for
+    /// latency benchmarking).
+    pub fn start(
+        cfg: SystemConfig,
+        methods: Vec<Method>,
+        param_seed: i32,
+        batcher_cfg: BatcherConfig,
+    ) -> Result<Server> {
+        let stats = Arc::new(ServerStats::default());
+        let stats_thread = Arc::clone(&stats);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let thread = std::thread::Builder::new()
+            .name("se2attn-inference".into())
+            .spawn(move || {
+                inference_thread(cfg, methods, param_seed, batcher_cfg, rx, ready_tx, stats_thread)
+            })?;
+
+        // wait for model load/compile before accepting traffic
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("inference thread died during startup"))??;
+
+        Ok(Server {
+            tx,
+            thread: Some(thread),
+            stats,
+        })
+    }
+
+    /// Submit a rollout; returns the channel the result will arrive on.
+    pub fn submit(
+        &self,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.stats.requests_in.inc();
+        let env = Envelope {
+            method,
+            request,
+            submitted_at: Instant::now(),
+            respond: rtx,
+        };
+        if self.tx.send(Message::Request(env)).is_err() {
+            // inference thread gone; the receiver will see a disconnect
+        }
+        rrx
+    }
+
+    /// Blocking convenience call.
+    pub fn call(&self, method: Method, request: RolloutRequest) -> Result<RolloutResult> {
+        self.submit(method, request)
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn inference_thread(
+    cfg: SystemConfig,
+    methods: Vec<Method>,
+    param_seed: i32,
+    batcher_cfg: BatcherConfig,
+    rx: mpsc::Receiver<Message>,
+    ready_tx: mpsc::Sender<Result<()>>,
+    stats: Arc<ServerStats>,
+) {
+    // build engine + models on THIS thread (PjRtClient is thread-local)
+    let setup = (|| -> Result<(BTreeMap<&'static str, ModelHandle>, RolloutEngine)> {
+        let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
+        let mut models = BTreeMap::new();
+        for m in &methods {
+            // touch the decode artifact so compilation happens at startup
+            engine.load(&format!("decode_{}", m.name()))?;
+            models.insert(m.name(), ModelHandle::init(Arc::clone(&engine), *m, param_seed)?);
+        }
+        let rollout = RolloutEngine::new(cfg.model.clone(), cfg.sim.clone());
+        Ok((models, rollout))
+    })();
+
+    let (mut models, rollout) = match setup {
+        Ok(v) => {
+            let _ = ready_tx.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    let mut batchers: BTreeMap<&'static str, Batcher<Envelope>> = methods
+        .iter()
+        .map(|m| (m.name(), Batcher::new(batcher_cfg.clone())))
+        .collect();
+
+    let mut running = true;
+    while running {
+        // sleep until the nearest batcher deadline (or a short idle tick)
+        let now = Instant::now();
+        let timeout = batchers
+            .values()
+            .filter_map(|b| b.next_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+
+        match rx.recv_timeout(timeout) {
+            Ok(Message::Request(env)) => match batchers.get_mut(env.method.name()) {
+                Some(b) => {
+                    if let Err(rejected) = b.push(env) {
+                        stats.queue_rejections.inc();
+                        let _ = rejected
+                            .respond
+                            .send(Err(anyhow!("server busy (queue full)")));
+                    }
+                }
+                None => {
+                    stats.queue_rejections.inc();
+                    let _ = env.respond.send(Err(anyhow!(
+                        "method '{}' is not deployed on this server",
+                        env.method.name()
+                    )));
+                }
+            },
+            Ok(Message::Shutdown) => running = false,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+        }
+
+        // flush any ready batches
+        let now = Instant::now();
+        for (name, b) in batchers.iter_mut() {
+            while let Some(ready) = b.poll(now) {
+                stats.batches.inc();
+                stats.padded_slots.add(ready.padding as u64);
+                let model = models.get_mut(name).unwrap();
+                for env in ready.items {
+                    let t0 = Instant::now();
+                    let result = rollout.rollout(model, &env.request);
+                    stats.decode_latency.record(t0.elapsed());
+                    match &result {
+                        Ok(_) => stats.requests_done.inc(),
+                        Err(_) => stats.requests_failed.inc(),
+                    }
+                    stats
+                        .e2e_latency
+                        .record(env.submitted_at.elapsed());
+                    let _ = env.respond.send(result);
+                }
+            }
+        }
+    }
+
+    // drain remaining queued requests with a shutdown error
+    for b in batchers.values_mut() {
+        for ready in b.drain() {
+            for env in ready.items {
+                let _ = env.respond.send(Err(anyhow!("server shutting down")));
+            }
+        }
+    }
+}

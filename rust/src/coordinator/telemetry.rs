@@ -1,0 +1,157 @@
+//! Lock-free telemetry for the serving hot path: counters and fixed-bucket
+//! latency histograms (atomics only, no allocation after construction).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: u64) {
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Serving metrics bundle.
+#[derive(Default, Debug)]
+pub struct ServerStats {
+    pub requests_in: Counter,
+    pub requests_done: Counter,
+    pub requests_failed: Counter,
+    pub batches: Counter,
+    pub padded_slots: Counter,
+    pub queue_rejections: Counter,
+    pub e2e_latency: LatencyHistogram,
+    pub decode_latency: LatencyHistogram,
+}
+
+impl ServerStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "in={} done={} failed={} batches={} pad={} rej={} \
+             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms",
+            self.requests_in.get(),
+            self.requests_done.get(),
+            self.requests_failed.get(),
+            self.batches.get(),
+            self.padded_slots.get(),
+            self.queue_rejections.get(),
+            self.e2e_latency.mean_us() / 1e3,
+            self.e2e_latency.percentile_us(95.0) as f64 / 1e3,
+            self.decode_latency.mean_us() / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = std::sync::Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_bounds() {
+        let h = LatencyHistogram::default();
+        h.record_us(1000);
+        // p100 upper bound must be >= the recorded value
+        assert!(h.percentile_us(100.0) >= 1000);
+    }
+}

@@ -1,0 +1,130 @@
+//! Training orchestrator: dataset pipeline -> ModelHandle train steps, with
+//! loss-curve recording and periodic validation — the loop behind the
+//! `train_agents` end-to-end example and the Table-I bench.
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, SimConfig};
+use crate::dataset::{generate_examples, Loader};
+use crate::metrics;
+use crate::tokenizer::Tokenizer;
+
+use super::model::ModelHandle;
+
+pub struct TrainReport {
+    /// (step, train loss) samples.
+    pub loss_curve: Vec<(u64, f32)>,
+    /// Validation NLL after training (model-loss definition).
+    pub final_val_loss: f64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub examples_seen: u64,
+}
+
+pub struct Trainer {
+    pub model_cfg: ModelConfig,
+    pub sim: SimConfig,
+    pub loader: Loader,
+    /// Record a loss sample every `log_every` steps.
+    pub log_every: u64,
+    /// If set, apply SE(2) frame-jitter augmentation with this max shift
+    /// (model units) to every training batch — the data-augmentation
+    /// baseline the paper names as future ablation work.
+    pub augment: Option<f64>,
+}
+
+impl Trainer {
+    /// Build a trainer with a freshly generated dataset.
+    pub fn new(
+        model_cfg: ModelConfig,
+        sim: SimConfig,
+        n_examples: usize,
+        data_seed: u64,
+    ) -> Trainer {
+        let tokenizer = Tokenizer::new(&model_cfg, &sim);
+        let examples = generate_examples(&sim, &tokenizer, data_seed, n_examples);
+        // hold out at least one full batch for validation (Loader drops
+        // ragged val tails, so a tiny fraction would validate on nothing)
+        let val_frac = if examples.len() >= 2 * model_cfg.batch_size {
+            (model_cfg.batch_size as f64 / examples.len() as f64).max(0.1)
+        } else {
+            0.0
+        };
+        let loader = Loader::new(examples, model_cfg.batch_size, val_frac, data_seed ^ 0xDA7A);
+        Trainer {
+            model_cfg,
+            sim,
+            loader,
+            log_every: 10,
+            augment: None,
+        }
+    }
+
+    /// Build a trainer over pre-generated examples (e.g. from a dataset
+    /// shard written by `gen-data`).
+    pub fn from_examples(
+        model_cfg: ModelConfig,
+        sim: SimConfig,
+        examples: Vec<crate::dataset::Example>,
+        seed: u64,
+    ) -> Trainer {
+        let val_frac = if examples.len() >= 2 * model_cfg.batch_size {
+            (model_cfg.batch_size as f64 / examples.len() as f64).max(0.1)
+        } else {
+            0.0
+        };
+        let loader = Loader::new(examples, model_cfg.batch_size, val_frac, seed ^ 0xDA7A);
+        Trainer {
+            model_cfg,
+            sim,
+            loader,
+            log_every: 10,
+            augment: None,
+        }
+    }
+
+    /// Run `steps` optimizer steps on `model`.
+    pub fn run(&mut self, model: &mut ModelHandle, steps: u64) -> Result<TrainReport> {
+        let n_tokens = self.model_cfg.n_tokens;
+        let feat_dim = self.model_cfg.feat_dim;
+        let t0 = std::time::Instant::now();
+        let mut loss_curve = Vec::new();
+        let mut examples_seen = 0u64;
+        for s in 0..steps {
+            let batch = match self.augment {
+                Some(shift) => self.loader.next_batch_augmented(shift),
+                None => self.loader.next_batch(),
+            };
+            examples_seen += batch.batch_size as u64;
+            let loss = model.train_step(&batch, n_tokens, feat_dim)?;
+            if s % self.log_every == 0 || s + 1 == steps {
+                loss_curve.push((model.step, loss));
+            }
+        }
+        let final_val_loss = self.validate(model)?;
+        Ok(TrainReport {
+            loss_curve,
+            final_val_loss,
+            steps,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            examples_seen,
+        })
+    }
+
+    /// Mean NLL over the validation split.
+    pub fn validate(&self, model: &ModelHandle) -> Result<f64> {
+        let n_tokens = self.model_cfg.n_tokens;
+        let feat_dim = self.model_cfg.feat_dim;
+        let n_actions = self.model_cfg.n_actions;
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for batch in self.loader.val_batches() {
+            let logits = model.forward(&batch, n_tokens, feat_dim)?;
+            let v = metrics::nll(&logits, &batch.target, n_actions);
+            let labeled = batch.target.iter().filter(|&&t| t >= 0).count();
+            total += v * labeled as f64;
+            n += labeled;
+        }
+        Ok(if n == 0 { f64::NAN } else { total / n as f64 })
+    }
+}

@@ -1,0 +1,466 @@
+//! Dataset pipeline: scenario -> tokenized training examples, binary shard
+//! format, deterministic shuffling, batching, train/val split.
+//!
+//! Shards are a simple length-prefixed binary format (magic + header +
+//! per-example arrays) — no serde dependency, write/read round-trip is
+//! property-tested.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::prng::Rng;
+use crate::sim::ScenarioGenerator;
+use crate::tokenizer::{TokenizedScene, Tokenizer};
+
+const MAGIC: u32 = 0x5E2A_77E5;
+const VERSION: u32 = 2;
+
+/// One training example (a tokenized scene).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub feat: Vec<f32>,
+    pub pose: Vec<f32>,
+    pub tq: Vec<i32>,
+    pub target: Vec<i32>,
+    /// Scenario seed + window offset, for tracing examples to scenarios.
+    pub scenario_seed: u64,
+    pub t0: u32,
+}
+
+impl Example {
+    pub fn from_scene(ts: &TokenizedScene, seed: u64, t0: usize) -> Example {
+        Example {
+            feat: ts.feat.clone(),
+            pose: ts.pose.clone(),
+            tq: ts.tq.clone(),
+            target: ts.target.clone(),
+            scenario_seed: seed,
+            t0: t0 as u32,
+        }
+    }
+}
+
+/// A batch in model layout: (B, N, ...) row-major flat arrays.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub feat: Vec<f32>,
+    pub pose: Vec<f32>,
+    pub tq: Vec<i32>,
+    pub target: Vec<i32>,
+    pub batch_size: usize,
+}
+
+pub fn collate(examples: &[&Example]) -> Batch {
+    let b = examples.len();
+    let mut batch = Batch {
+        feat: Vec::with_capacity(b * examples[0].feat.len()),
+        pose: Vec::with_capacity(b * examples[0].pose.len()),
+        tq: Vec::with_capacity(b * examples[0].tq.len()),
+        target: Vec::with_capacity(b * examples[0].target.len()),
+        batch_size: b,
+    };
+    for e in examples {
+        batch.feat.extend_from_slice(&e.feat);
+        batch.pose.extend_from_slice(&e.pose);
+        batch.tq.extend_from_slice(&e.tq);
+        batch.target.extend_from_slice(&e.target);
+    }
+    batch
+}
+
+/// Generate `n_examples` examples from scenarios `seed_start..`, taking
+/// several windows per scenario (every other step of the usable range).
+pub fn generate_examples(
+    sim: &SimConfig,
+    tokenizer: &Tokenizer,
+    seed_start: u64,
+    n_examples: usize,
+) -> Vec<Example> {
+    let gen = ScenarioGenerator::new(sim.clone());
+    let mut out = Vec::with_capacity(n_examples);
+    let mut seed = seed_start;
+    let h = sim.history_steps;
+    while out.len() < n_examples {
+        let s = gen.generate(seed);
+        // usable t0 range: [h-1, h-1+future) stepping by 2 for diversity
+        let mut t0 = h - 1;
+        while t0 < h - 1 + sim.future_steps && out.len() < n_examples {
+            let ts = tokenizer.tokenize_scenario(&s, t0);
+            out.push(Example::from_scene(&ts, seed, t0));
+            t0 += 2;
+        }
+        seed += 1;
+    }
+    out
+}
+
+// --------------------------------------------------------------------------
+// data augmentation (paper Sec. V: "ablation experiments comparing our
+// method against other approaches, such as data augmentation")
+// --------------------------------------------------------------------------
+
+/// Apply a random global SE(2) frame jitter to an example's poses — the
+/// classical alternative to invariant architectures: teach a non-invariant
+/// model (e.g. `abs`) approximate invariance by randomizing the frame.
+///
+/// Features are untouched (they are frame-invariant by construction);
+/// only the pose channel rotates/translates.  Magnitudes are in *model*
+/// units (positions already downscaled).
+pub fn augment_frame_jitter(e: &Example, rng: &mut Rng, max_shift: f64) -> Example {
+    let z = crate::geometry::Pose::new(
+        rng.range(-max_shift, max_shift),
+        rng.range(-max_shift, max_shift),
+        rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+    );
+    let zi = z.inverse();
+    let mut out = e.clone();
+    for p in out.pose.chunks_exact_mut(3) {
+        let world = crate::geometry::Pose::new(p[0] as f64, p[1] as f64, p[2] as f64);
+        let shifted = zi.compose(&world);
+        p[0] = shifted.x as f32;
+        p[1] = shifted.y as f32;
+        p[2] = shifted.theta as f32;
+    }
+    out
+}
+
+// --------------------------------------------------------------------------
+// binary shard io
+// --------------------------------------------------------------------------
+
+fn put_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
+    put_u32(w, vs.len() as u32)?;
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn put_i32s(w: &mut impl Write, vs: &[i32]) -> Result<()> {
+    put_u32(w, vs.len() as u32)?;
+    for v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn get_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = get_u32(r)? as usize;
+    if n > 1 << 28 {
+        bail!("corrupt shard: array too large");
+    }
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn get_i32s(r: &mut impl Read) -> Result<Vec<i32>> {
+    let n = get_u32(r)? as usize;
+    if n > 1 << 28 {
+        bail!("corrupt shard: array too large");
+    }
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write examples to a shard file.
+pub fn write_shard(path: impl AsRef<Path>, examples: &[Example]) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    put_u32(&mut w, MAGIC)?;
+    put_u32(&mut w, VERSION)?;
+    put_u32(&mut w, examples.len() as u32)?;
+    for e in examples {
+        put_u64(&mut w, e.scenario_seed)?;
+        put_u32(&mut w, e.t0)?;
+        put_f32s(&mut w, &e.feat)?;
+        put_f32s(&mut w, &e.pose)?;
+        put_i32s(&mut w, &e.tq)?;
+        put_i32s(&mut w, &e.target)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a shard file.
+pub fn read_shard(path: impl AsRef<Path>) -> Result<Vec<Example>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = std::io::BufReader::new(f);
+    if get_u32(&mut r)? != MAGIC {
+        bail!("not a se2attn shard (bad magic)");
+    }
+    let version = get_u32(&mut r)?;
+    if version != VERSION {
+        bail!("shard version {version}, expected {VERSION}");
+    }
+    let n = get_u32(&mut r)? as usize;
+    if n > 1 << 24 {
+        bail!("corrupt shard: implausible example count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let scenario_seed = get_u64(&mut r)?;
+        let t0 = get_u32(&mut r)?;
+        out.push(Example {
+            scenario_seed,
+            t0,
+            feat: get_f32s(&mut r)?,
+            pose: get_f32s(&mut r)?,
+            tq: get_i32s(&mut r)?,
+            target: get_i32s(&mut r)?,
+        });
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------------------
+// loader
+// --------------------------------------------------------------------------
+
+/// Deterministic shuffling batch iterator with train/val split.
+pub struct Loader {
+    pub train: Vec<Example>,
+    pub val: Vec<Example>,
+    batch_size: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl Loader {
+    pub fn new(mut examples: Vec<Example>, batch_size: usize, val_frac: f64, seed: u64) -> Loader {
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut examples);
+        let n_val = ((examples.len() as f64) * val_frac) as usize;
+        let val = examples.split_off(examples.len() - n_val);
+        let order: Vec<usize> = (0..examples.len()).collect();
+        let mut loader = Loader {
+            train: examples,
+            val,
+            batch_size,
+            order,
+            cursor: 0,
+            rng,
+            epoch: 0,
+        };
+        loader.reshuffle();
+        loader
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next training batch (wraps over epochs; drops ragged tail).
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch_size > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+        let refs: Vec<&Example> = idx.iter().map(|&i| &self.train[i]).collect();
+        collate(&refs)
+    }
+
+    /// Next batch with random SE(2) frame jitter applied to every example
+    /// (the data-augmentation baseline; `max_shift` in model units).
+    pub fn next_batch_augmented(&mut self, max_shift: f64) -> Batch {
+        if self.cursor + self.batch_size > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idx: Vec<usize> =
+            self.order[self.cursor..self.cursor + self.batch_size].to_vec();
+        self.cursor += self.batch_size;
+        let augmented: Vec<Example> = idx
+            .iter()
+            .map(|&i| augment_frame_jitter(&self.train[i], &mut self.rng, max_shift))
+            .collect();
+        let refs: Vec<&Example> = augmented.iter().collect();
+        collate(&refs)
+    }
+
+    /// All validation batches (fixed order).
+    pub fn val_batches(&self) -> Vec<Batch> {
+        self.val
+            .chunks(self.batch_size)
+            .filter(|c| c.len() == self.batch_size)
+            .map(|c| {
+                let refs: Vec<&Example> = c.iter().collect();
+                collate(&refs)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, SimConfig};
+
+    fn tokenizer() -> (SimConfig, Tokenizer) {
+        let sim = SimConfig::default();
+        let model = ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 48,
+            d_model: 96,
+            d_ff: 192,
+            n_tokens: 64,
+            feat_dim: 16,
+            n_actions: 64,
+            fourier_f: 12,
+            spatial_scales: vec![1.0],
+            batch_size: 4,
+            learning_rate: 3e-4,
+            map_timestep: -1,
+            param_names: vec![],
+        };
+        let tok = Tokenizer::new(&model, &sim);
+        (sim, tok)
+    }
+
+    #[test]
+    fn generation_yields_requested_count() {
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 0, 10);
+        assert_eq!(ex.len(), 10);
+        // multiple windows per scenario: first two share a seed
+        assert_eq!(ex[0].scenario_seed, ex[1].scenario_seed);
+        assert_ne!(ex[0].t0, ex[1].t0);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 7, 6);
+        let dir = std::env::temp_dir().join("se2attn_test_shard");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("x.shard");
+        write_shard(&path, &ex).unwrap();
+        let back = read_shard(&path).unwrap();
+        assert_eq!(ex, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shard_rejects_garbage() {
+        let dir = std::env::temp_dir().join("se2attn_test_shard");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("bad.shard");
+        std::fs::write(&path, b"this is not a shard file").unwrap();
+        assert!(read_shard(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn collate_layout() {
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 1, 4);
+        let refs: Vec<&Example> = ex.iter().collect();
+        let b = collate(&refs);
+        assert_eq!(b.batch_size, 4);
+        assert_eq!(b.feat.len(), 4 * ex[0].feat.len());
+        assert_eq!(&b.feat[..ex[0].feat.len()], &ex[0].feat[..]);
+        assert_eq!(
+            &b.tq[ex[0].tq.len()..2 * ex[0].tq.len()],
+            &ex[1].tq[..]
+        );
+    }
+
+    #[test]
+    fn loader_split_and_epochs() {
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 2, 20);
+        let mut loader = Loader::new(ex, 4, 0.2, 99);
+        assert_eq!(loader.val.len(), 4);
+        assert_eq!(loader.train.len(), 16);
+        // 4 batches per epoch; draw 9 -> epoch advanced at least twice
+        for _ in 0..9 {
+            let b = loader.next_batch();
+            assert_eq!(b.batch_size, 4);
+        }
+        assert!(loader.epoch >= 2);
+        assert_eq!(loader.val_batches().len(), 1);
+    }
+
+    #[test]
+    fn augmentation_preserves_invariants() {
+        use crate::geometry::Pose;
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 5, 1).pop().unwrap();
+        let mut rng = crate::prng::Rng::new(0);
+        let aug = augment_frame_jitter(&ex, &mut rng, 2.0);
+        // features, timesteps, targets untouched
+        assert_eq!(ex.feat, aug.feat);
+        assert_eq!(ex.tq, aug.tq);
+        assert_eq!(ex.target, aug.target);
+        // poses changed...
+        assert_ne!(ex.pose, aug.pose);
+        // ...but relative geometry between any token pair is preserved
+        let pose_at = |e: &Example, i: usize| {
+            Pose::new(
+                e.pose[i * 3] as f64,
+                e.pose[i * 3 + 1] as f64,
+                e.pose[i * 3 + 2] as f64,
+            )
+        };
+        for (i, j) in [(0usize, 5usize), (3, 20), (10, 40)] {
+            let r1 = pose_at(&ex, i).relative_to(&pose_at(&ex, j));
+            let r2 = pose_at(&aug, i).relative_to(&pose_at(&aug, j));
+            assert!((r1.x - r2.x).abs() < 1e-4, "{r1:?} vs {r2:?}");
+            assert!((r1.y - r2.y).abs() < 1e-4);
+            assert!(
+                crate::geometry::wrap_angle(r1.theta - r2.theta).abs() < 1e-4
+            );
+        }
+    }
+
+    #[test]
+    fn loader_is_deterministic() {
+        let (sim, tok) = tokenizer();
+        let ex = generate_examples(&sim, &tok, 3, 12);
+        let mut a = Loader::new(ex.clone(), 4, 0.0, 5);
+        let mut b = Loader::new(ex, 4, 0.0, 5);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().tq, b.next_batch().tq);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Thread-pool executor + channels (substrate for the absent `tokio`).
+//!
+//! The coordinator's event loop is synchronous-with-workers: a fixed pool of
+//! OS threads drains a job queue; completion is signalled over std mpsc
+//! channels.  This matches the deployment shape of the serving path (one
+//! PJRT executable is internally threaded by XLA; the pool handles
+//! pre/post-processing and batching concurrency).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> ThreadPool {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..n_threads.max(1))
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("se2attn-worker-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Submit a job for execution.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut jobs = self.queue.jobs.lock().unwrap();
+        jobs.push_back(Box::new(f));
+        self.queue.cv.notify_one();
+    }
+
+    /// Run a batch of jobs and wait for all of them (parallel map that
+    /// preserves input order).
+    pub fn map_wait<T, R, F>(&self, inputs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let n = inputs.len();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for (i, input) in inputs.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.submit(move || {
+                let _ = tx.send((i, f(input)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rx.recv().expect("worker died");
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break Some(j);
+                }
+                if *q.shutdown.lock().unwrap() {
+                    break None;
+                }
+                jobs = q.cv.wait(jobs).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.queue.shutdown.lock().unwrap() = true;
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Simple parallel-for over an index range using scoped threads (no pool).
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_wait_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map_wait((0..32usize).collect(), |x| x * x);
+        assert_eq!(out, (0..32usize).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_for_covers_range() {
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        par_for(64, 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang
+    }
+}

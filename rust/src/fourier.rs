@@ -1,0 +1,383 @@
+//! Fourier machinery for SE(2) Fourier attention (paper Sec. III-B) plus the
+//! analytic Bessel-series cross-check used by property tests.
+//!
+//! Mirrors `python/compile/kernels/basis.py`; the quadrature coefficients
+//! here feed the Rust CPU attention baselines and the Fig. 3 / Fig. 4
+//! reproductions.
+
+use crate::geometry::Pose;
+use crate::linalg::Mat;
+
+/// Integer frequency of basis element i: 0, 1, 1, 2, 2, 3, 3, ... (Eq. 12).
+pub fn basis_frequency(i: usize) -> usize {
+    (i + 1) / 2
+}
+
+/// Evaluate g_i(z) (paper Eq. 12).
+pub fn basis_fn(i: usize, z: f64) -> f64 {
+    let k = basis_frequency(i) as f64;
+    if i % 2 == 0 {
+        (k * z).cos()
+    } else {
+        (k * z).sin()
+    }
+}
+
+/// b_n = [g_0(theta), ..., g_{F-1}(theta)].
+pub fn eval_basis(theta: f64, f: usize) -> Vec<f64> {
+    (0..f).map(|i| basis_fn(i, theta)).collect()
+}
+
+/// The 2F-point uniform quadrature grid on [-pi, pi).
+pub fn quadrature_grid(f: usize) -> Vec<f64> {
+    (0..2 * f)
+        .map(|j| -std::f64::consts::PI + std::f64::consts::PI * j as f64 / f as f64)
+        .collect()
+}
+
+/// u_m^{(x)}(z) = x cos z + y sin z (Eq. 11).
+pub fn u_x(x: f64, y: f64, z: f64) -> f64 {
+    x * z.cos() + y * z.sin()
+}
+
+/// u_m^{(y)}(z) = -x sin z + y cos z (Eq. 18).
+pub fn u_y(x: f64, y: f64, z: f64) -> f64 {
+    -x * z.sin() + y * z.cos()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    X,
+    Y,
+}
+
+/// Precomputed 2F-point quadrature table: grid trig values and weighted
+/// basis matrix.  Hot-path coefficient computation reduces to 2F sin_cos
+/// evaluations plus a (2F x F) contraction per (token, axis) — ~3x faster
+/// than re-evaluating `basis_fn` per element (EXPERIMENTS.md §Perf L3).
+#[derive(Clone, Debug)]
+pub struct QuadratureTable {
+    pub f: usize,
+    /// cos/sin of each grid point z_j.
+    pub cos_z: Vec<f64>,
+    pub sin_z: Vec<f64>,
+    /// w[j * f + i] = g_i(z_j) * a_i / (2F).
+    pub weights: Vec<f64>,
+}
+
+impl QuadratureTable {
+    pub fn new(f: usize) -> QuadratureTable {
+        let grid = quadrature_grid(f);
+        let mut weights = vec![0.0; 2 * f * f];
+        for (j, &z) in grid.iter().enumerate() {
+            for i in 0..f {
+                let a = if i == 0 { 1.0 } else { 2.0 };
+                weights[j * f + i] = basis_fn(i, z) * a / (2.0 * f as f64);
+            }
+        }
+        QuadratureTable {
+            f,
+            cos_z: grid.iter().map(|z| z.cos()).collect(),
+            sin_z: grid.iter().map(|z| z.sin()).collect(),
+            weights,
+        }
+    }
+
+    /// Gamma/Lambda coefficients written into `gamma`/`lambda` (len F).
+    pub fn coefficients_into(
+        &self,
+        x: f64,
+        y: f64,
+        axis: Axis,
+        gamma: &mut [f64],
+        lambda: &mut [f64],
+    ) {
+        let f = self.f;
+        gamma.iter_mut().for_each(|g| *g = 0.0);
+        lambda.iter_mut().for_each(|l| *l = 0.0);
+        for j in 0..2 * f {
+            let u = match axis {
+                Axis::X => x * self.cos_z[j] + y * self.sin_z[j],
+                Axis::Y => -x * self.sin_z[j] + y * self.cos_z[j],
+            };
+            let (su, cu) = u.sin_cos();
+            let row = &self.weights[j * f..(j + 1) * f];
+            for i in 0..f {
+                gamma[i] += cu * row[i];
+                lambda[i] += su * row[i];
+            }
+        }
+    }
+}
+
+/// Fourier coefficients Gamma_m (of cos u) and Lambda_m (of sin u) for key
+/// position (x, y), by the paper's 2F-point quadrature (Eq. 14/15).
+pub fn coefficients(x: f64, y: f64, f: usize, axis: Axis) -> (Vec<f64>, Vec<f64>) {
+    let grid = quadrature_grid(f);
+    let mut gamma = vec![0.0; f];
+    let mut lambda = vec![0.0; f];
+    for &z in &grid {
+        let u = match axis {
+            Axis::X => u_x(x, y, z),
+            Axis::Y => u_y(x, y, z),
+        };
+        let (su, cu) = u.sin_cos();
+        for i in 0..f {
+            let g = basis_fn(i, z);
+            gamma[i] += cu * g;
+            lambda[i] += su * g;
+        }
+    }
+    for i in 0..f {
+        let a = if i == 0 { 1.0 } else { 2.0 };
+        gamma[i] *= a / (2.0 * f as f64);
+        lambda[i] *= a / (2.0 * f as f64);
+    }
+    (gamma, lambda)
+}
+
+/// Reconstruct the truncated series sum_i c_i g_i(theta).
+pub fn reconstruct(coeffs: &[f64], theta: f64) -> f64 {
+    coeffs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| c * basis_fn(i, theta))
+        .sum()
+}
+
+// --------------------------------------------------------------------------
+// Analytic coefficients via Jacobi–Anger (Bessel functions) — the
+// independent oracle for the quadrature implementation.
+//
+//   u(z) = x cos z + y sin z = R cos(z - psi),  R = |(x,y)|, psi = atan2(y,x)
+//   cos(R cos w) = J_0(R) + 2 sum_k (-1)^k J_{2k}(R) cos(2k w)
+//   sin(R cos w) = 2 sum_k (-1)^k J_{2k+1}(R) cos((2k+1) w)
+// --------------------------------------------------------------------------
+
+/// Bessel function of the first kind J_n(x) by ascending power series with
+/// enough terms for |x| <= ~40 in f64.
+pub fn bessel_j(n: usize, x: f64) -> f64 {
+    let half = x / 2.0;
+    // (x/2)^n / n!
+    let mut term = 1.0;
+    for k in 1..=n {
+        term *= half / k as f64;
+    }
+    let mut sum = term;
+    let x2 = half * half;
+    for m in 1..200 {
+        term *= -x2 / (m as f64 * (m + n) as f64);
+        sum += term;
+        if term.abs() < 1e-18 * sum.abs().max(1e-300) {
+            break;
+        }
+    }
+    sum
+}
+
+/// Analytic Fourier coefficients of cos(u^{(x)}(z)) in the g_i basis,
+/// derived from Jacobi–Anger (exact up to Bessel truncation, no aliasing).
+pub fn coefficients_analytic_cos_x(x: f64, y: f64, f: usize) -> Vec<f64> {
+    let r = (x * x + y * y).sqrt();
+    let psi = y.atan2(x);
+    // cos(u) = J0(R) + 2 sum_{k>=1} (-1)^k J_{2k}(R) cos(2k (z - psi))
+    // cos(2k(z-psi)) = cos(2k psi) cos(2k z) + sin(2k psi) sin(2k z)
+    let mut coeffs = vec![0.0; f];
+    if f > 0 {
+        coeffs[0] = bessel_j(0, r);
+    }
+    for i in 1..f {
+        let k = basis_frequency(i);
+        if k % 2 != 0 {
+            continue; // cos(u) has only even harmonics
+        }
+        let kk = k / 2; // harmonic index in Jacobi-Anger
+        let sign = if kk % 2 == 0 { 1.0 } else { -1.0 };
+        let amp = 2.0 * sign * bessel_j(k, r);
+        let ang = k as f64 * psi;
+        if i % 2 == 0 {
+            coeffs[i] = amp * ang.cos(); // cos(k z) component
+        } else {
+            coeffs[i] = amp * ang.sin(); // sin(k z) component
+        }
+    }
+    coeffs
+}
+
+// --------------------------------------------------------------------------
+// Explicit phi matrices (paper Eq. 19) — single 6-wide block
+// --------------------------------------------------------------------------
+
+/// The exact target block diag[rho(x_rel), rho(y_rel), rho(theta_rel)]
+/// (Eq. 10) for a relative pose.
+pub fn phi_target_block(rel: &Pose) -> Mat {
+    Mat::block_diag(&[
+        crate::geometry::rot2(rel.x),
+        crate::geometry::rot2(rel.y),
+        crate::geometry::rot2(rel.theta),
+    ])
+}
+
+/// phi_q(p_n): 6 x (4F+2) query-side factor (Eq. 19).
+pub fn phi_q_block(p: &Pose, f: usize) -> Mat {
+    let b = eval_basis(p.theta, f);
+    let (st, ct) = p.theta.sin_cos();
+    let vx = -p.x * ct - p.y * st;
+    let vy = p.x * st - p.y * ct;
+
+    let rot_outer = |v: f64| -> Mat {
+        let (sv, cv) = v.sin_cos();
+        let mut m = Mat::zeros(2, 2 * f);
+        for i in 0..f {
+            m[(0, i)] = cv * b[i];
+            m[(0, f + i)] = -sv * b[i];
+            m[(1, i)] = sv * b[i];
+            m[(1, f + i)] = cv * b[i];
+        }
+        m
+    };
+
+    Mat::block_diag(&[
+        rot_outer(vx),
+        rot_outer(vy),
+        crate::geometry::rot2(-p.theta),
+    ])
+}
+
+/// phi_k(p_m): (4F+2) x 6 key-side factor (Eq. 19).
+pub fn phi_k_block(p: &Pose, f: usize) -> Mat {
+    let coeff_mat = |axis: Axis| -> Mat {
+        let (gamma, lambda) = coefficients(p.x, p.y, f, axis);
+        let mut m = Mat::zeros(2 * f, 2);
+        for i in 0..f {
+            m[(i, 0)] = gamma[i];
+            m[(i, 1)] = -lambda[i];
+            m[(f + i, 0)] = lambda[i];
+            m[(f + i, 1)] = gamma[i];
+        }
+        m
+    };
+    Mat::block_diag(&[
+        coeff_mat(Axis::X),
+        coeff_mat(Axis::Y),
+        crate::geometry::rot2(p.theta),
+    ])
+}
+
+/// Spectral-norm approximation error
+/// || phi(p_{n->m}) - phi_q(p_n) phi_k(p_m) ||_2  (paper Fig. 3).
+pub fn approximation_error(pn: &Pose, pm: &Pose, f: usize) -> f64 {
+    let target = phi_target_block(&pn.relative_to(pm));
+    let approx = phi_q_block(pn, f).matmul(&phi_k_block(pm, f));
+    target.sub(&approx).spectral_norm()
+}
+
+/// Machine-epsilon reference lines of Fig. 3: smallest eps with 1+eps
+/// representable.
+pub const FP16_EPS: f64 = 0.000976562; // 2^-10
+pub const BF16_EPS: f64 = 0.0078125; // 2^-7
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn basis_matches_paper_table() {
+        let z = 0.37;
+        assert_eq!(basis_fn(0, z), 1.0);
+        assert!((basis_fn(1, z) - z.sin()).abs() < 1e-15);
+        assert!((basis_fn(2, z) - z.cos()).abs() < 1e-15);
+        assert!((basis_fn(3, z) - (2.0 * z).sin()).abs() < 1e-15);
+        assert!((basis_fn(4, z) - (2.0 * z).cos()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quadrature_vs_analytic_bessel() {
+        // The 2F-point quadrature coefficients must match Jacobi–Anger
+        // (once F is large enough that aliasing is negligible).
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let x = rng.range(-3.0, 3.0);
+            let y = rng.range(-3.0, 3.0);
+            let f = 24;
+            let (gamma, _) = coefficients(x, y, f, Axis::X);
+            let analytic = coefficients_analytic_cos_x(x, y, f);
+            for i in 0..16 {
+                assert!(
+                    (gamma[i] - analytic[i]).abs() < 1e-6,
+                    "i={i} quad={} analytic={} at ({x},{y})",
+                    gamma[i],
+                    analytic[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bessel_known_values() {
+        assert!((bessel_j(0, 0.0) - 1.0).abs() < 1e-15);
+        assert!((bessel_j(1, 0.0)).abs() < 1e-15);
+        // J_0(2.404825557695773) ~ 0 (first zero)
+        assert!(bessel_j(0, 2.404825557695773).abs() < 1e-10);
+        // J_1(1.0) = 0.4400505857449335
+        assert!((bessel_j(1, 1.0) - 0.4400505857449335).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_converges() {
+        let (x, y) = (1.5, -0.8);
+        let mut prev = f64::INFINITY;
+        for &f in &[6usize, 12, 20, 28] {
+            let (gamma, _) = coefficients(x, y, f, Axis::X);
+            let mut max_err: f64 = 0.0;
+            for j in 0..64 {
+                let t = -std::f64::consts::PI
+                    + std::f64::consts::TAU * j as f64 / 64.0;
+                let exact = u_x(x, y, t).cos();
+                max_err = max_err.max((reconstruct(&gamma, t) - exact).abs());
+            }
+            assert!(max_err < prev + 1e-12, "F={f}: {max_err} !< {prev}");
+            prev = max_err;
+        }
+        assert!(prev < 1e-6, "F=28 error {prev}");
+    }
+
+    #[test]
+    fn factorization_error_small() {
+        // radius <= 2, F=18 -> error below ~fp16 eps (paper Fig. 3).
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            let pn = Pose::new(
+                rng.range(-1.4, 1.4),
+                rng.range(-1.4, 1.4),
+                rng.range(-3.14, 3.14),
+            );
+            let pm = Pose::new(
+                rng.range(-1.4, 1.4),
+                rng.range(-1.4, 1.4),
+                rng.range(-3.14, 3.14),
+            );
+            let err = approximation_error(&pn, &pm, 18);
+            assert!(err < 2.0 * FP16_EPS, "err={err}");
+        }
+    }
+
+    #[test]
+    fn theta_block_is_exact() {
+        // With zero translation the factorization is exact for any F.
+        let pn = Pose::new(0.0, 0.0, 0.9);
+        let pm = Pose::new(0.0, 0.0, -1.7);
+        assert!(approximation_error(&pn, &pm, 4) < 1e-9);
+    }
+
+    #[test]
+    fn phi_shapes() {
+        let p = Pose::new(1.0, 2.0, 0.5);
+        let f = 9;
+        let q = phi_q_block(&p, f);
+        let k = phi_k_block(&p, f);
+        assert_eq!((q.rows, q.cols), (6, 4 * f + 2));
+        assert_eq!((k.rows, k.cols), (4 * f + 2, 6));
+    }
+}

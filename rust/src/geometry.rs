@@ -1,0 +1,194 @@
+//! SE(2) geometry: poses, composition, relative transforms (paper Sec. II).
+//!
+//! Mirrors `python/compile/geometry.py` exactly — the Rust attention
+//! baselines and the JAX kernels must agree on the group operations, and the
+//! integration tests check them against each other through the artifacts.
+
+use crate::linalg::Mat;
+
+/// An SE(2) pose (x, y, theta).  theta is kept wrapped to (-pi, pi].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pose {
+    pub x: f64,
+    pub y: f64,
+    pub theta: f64,
+}
+
+/// Wrap an angle to (-pi, pi].
+pub fn wrap_angle(t: f64) -> f64 {
+    t.sin().atan2(t.cos())
+}
+
+impl Pose {
+    pub const IDENTITY: Pose = Pose { x: 0.0, y: 0.0, theta: 0.0 };
+
+    pub fn new(x: f64, y: f64, theta: f64) -> Pose {
+        Pose { x, y, theta: wrap_angle(theta) }
+    }
+
+    /// Group product self * other.
+    pub fn compose(&self, other: &Pose) -> Pose {
+        let (s, c) = self.theta.sin_cos();
+        Pose::new(
+            self.x + c * other.x - s * other.y,
+            self.y + s * other.x + c * other.y,
+            self.theta + other.theta,
+        )
+    }
+
+    /// Group inverse.
+    pub fn inverse(&self) -> Pose {
+        let (s, c) = self.theta.sin_cos();
+        Pose::new(-c * self.x - s * self.y, s * self.x - c * self.y, -self.theta)
+    }
+
+    /// Relative pose self^{-1} * other (paper: p_{n->m}).
+    pub fn relative_to(&self, other: &Pose) -> Pose {
+        self.inverse().compose(other)
+    }
+
+    /// Euclidean distance between positions.
+    pub fn dist(&self, other: &Pose) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+
+    pub fn radius(&self) -> f64 {
+        (self.x * self.x + self.y * self.y).sqrt()
+    }
+
+    /// Homogeneous 3x3 representation psi (paper Eq. 8).
+    pub fn matrix(&self) -> Mat {
+        let (s, c) = self.theta.sin_cos();
+        Mat::from_rows(&[
+            &[c, -s, self.x],
+            &[s, c, self.y],
+            &[0.0, 0.0, 1.0],
+        ])
+    }
+
+    /// Scale x/y by `a`, keep theta — the per-block spatial scaling.
+    pub fn scaled(&self, a: f64) -> Pose {
+        Pose { x: a * self.x, y: a * self.y, theta: self.theta }
+    }
+
+    /// Transform a point expressed in this pose's frame into the parent
+    /// frame.
+    pub fn transform_point(&self, px: f64, py: f64) -> (f64, f64) {
+        let (s, c) = self.theta.sin_cos();
+        (self.x + c * px - s * py, self.y + s * px + c * py)
+    }
+}
+
+/// 2D rotation matrix rho(theta) (paper Eq. 5).
+pub fn rot2(theta: f64) -> Mat {
+    let (s, c) = theta.sin_cos();
+    Mat::from_rows(&[&[c, -s], &[s, c]])
+}
+
+/// Rotate a feature pair in place by `theta` (the RoPE primitive).
+#[inline]
+pub fn rotate_pair(x0: f64, x1: f64, theta: f64) -> (f64, f64) {
+    let (s, c) = theta.sin_cos();
+    (c * x0 - s * x1, s * x0 + c * x1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_pose(rng: &mut Rng) -> Pose {
+        Pose::new(
+            rng.range(-3.0, 3.0),
+            rng.range(-3.0, 3.0),
+            rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+        )
+    }
+
+    fn assert_pose_close(a: &Pose, b: &Pose, tol: f64) {
+        assert!((a.x - b.x).abs() < tol, "{a:?} vs {b:?}");
+        assert!((a.y - b.y).abs() < tol, "{a:?} vs {b:?}");
+        assert!(wrap_angle(a.theta - b.theta).abs() < tol, "{a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn identity_laws() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let p = rand_pose(&mut rng);
+            assert_pose_close(&p.compose(&Pose::IDENTITY), &p, 1e-12);
+            assert_pose_close(&Pose::IDENTITY.compose(&p), &p, 1e-12);
+        }
+    }
+
+    #[test]
+    fn inverse_law() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let p = rand_pose(&mut rng);
+            assert_pose_close(&p.compose(&p.inverse()), &Pose::IDENTITY, 1e-9);
+            assert_pose_close(&p.inverse().compose(&p), &Pose::IDENTITY, 1e-9);
+        }
+    }
+
+    #[test]
+    fn associativity() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let (a, b, c) =
+                (rand_pose(&mut rng), rand_pose(&mut rng), rand_pose(&mut rng));
+            assert_pose_close(
+                &a.compose(&b).compose(&c),
+                &a.compose(&b.compose(&c)),
+                1e-9,
+            );
+        }
+    }
+
+    #[test]
+    fn matrix_is_homomorphism() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let (a, b) = (rand_pose(&mut rng), rand_pose(&mut rng));
+            let lhs = a.compose(&b).matrix();
+            let rhs = a.matrix().matmul(&b.matrix());
+            assert!(lhs.sub(&rhs).max_abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn relative_pose_invariance() {
+        // p_{n->m} is unchanged under a global frame shift (Fig. 1c).
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let (n, m, z) =
+                (rand_pose(&mut rng), rand_pose(&mut rng), rand_pose(&mut rng));
+            let rel = n.relative_to(&m);
+            let zi = z.inverse();
+            let rel_shifted = zi.compose(&n).relative_to(&zi.compose(&m));
+            assert_pose_close(&rel, &rel_shifted, 1e-9);
+        }
+    }
+
+    #[test]
+    fn paper_relative_x_formula() {
+        // x_{n->m} = (x_m - x_n) cos t_n + (y_m - y_n) sin t_n  (Sec. III-B)
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let (n, m) = (rand_pose(&mut rng), rand_pose(&mut rng));
+            let rel = n.relative_to(&m);
+            let expect_x = (m.x - n.x) * n.theta.cos() + (m.y - n.y) * n.theta.sin();
+            let expect_y = -(m.x - n.x) * n.theta.sin() + (m.y - n.y) * n.theta.cos();
+            assert!((rel.x - expect_x).abs() < 1e-9);
+            assert!((rel.y - expect_y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rotate_pair_matches_matrix() {
+        let m = rot2(0.3);
+        let (a, b) = rotate_pair(1.0, 2.0, 0.3);
+        let v = m.matvec(&[1.0, 2.0]);
+        assert!((v[0] - a).abs() < 1e-12 && (v[1] - b).abs() < 1e-12);
+    }
+}

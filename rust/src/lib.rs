@@ -1,0 +1,37 @@
+//! # se2attn — Linear Memory SE(2) Invariant Attention, full system
+//!
+//! Reproduction of "Linear Memory SE(2) Invariant Attention" (Pronovost et
+//! al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas)** — flash SDPA + SE(2) Fourier projection kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2 (JAX)** — the agent-simulation transformer
+//!   (`python/compile/model.py`), four relative-attention variants.
+//! * **L3 (this crate)** — the serving/training coordinator and every
+//!   substrate: synthetic driving simulator, tokenizer, dataset pipeline,
+//!   PJRT runtime, batcher/router/rollout scheduler/trainer, metrics, and
+//!   CPU reference implementations of the paper's Algorithms 1 and 2.
+//!
+//! Python never runs on the request path: artifacts are compiled once by
+//! `make artifacts` and loaded via the PJRT C API (`xla` crate).
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod attention;
+pub mod benchlib;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod exec;
+pub mod fourier;
+pub mod geometry;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod prng;
+pub mod proplite;
+pub mod runtime;
+pub mod sim;
+pub mod tokenizer;

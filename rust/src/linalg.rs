@@ -1,0 +1,336 @@
+//! Small dense linear algebra over f64 (row-major), sized for the paper's
+//! per-block matrices: phi_q is 6 x (4F+2), phi_k is (4F+2) x 6, attention
+//! heads are a few hundred wide.  Includes the spectral norm used by the
+//! Fig. 3 reproduction (power iteration on A^T A — no SVD dependency).
+
+use crate::prng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order for cache-friendly access to `other`
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(a, b)| a * b)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// x^T A (i.e. A^T x) without forming the transpose.
+    pub fn tmatvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(r)) {
+                *o += xr * a;
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|a| a * a).sum::<f64>().sqrt()
+    }
+
+    /// Largest singular value via power iteration on A^T A.
+    ///
+    /// Deterministic start vector (seeded), tolerance on the Rayleigh
+    /// quotient; ~60 iterations is plenty for the well-separated spectra of
+    /// rotation-like matrices.
+    pub fn spectral_norm(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        let mut rng = Rng::new(0x5EC7_12A1);
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut sigma2_prev = 0.0;
+        for _ in 0..200 {
+            // w = A^T (A v)
+            let av = self.matvec(&v);
+            let mut w = self.tmatvec(&av);
+            let sigma2 = norm(&w).max(1e-300);
+            normalize(&mut w);
+            v = w;
+            if (sigma2 - sigma2_prev).abs() <= 1e-12 * sigma2.max(1.0) {
+                sigma2_prev = sigma2;
+                break;
+            }
+            sigma2_prev = sigma2;
+        }
+        sigma2_prev.sqrt()
+    }
+
+    /// Place `block` at (r0, c0) — used to assemble block-diagonal phi's.
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Mat) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for r in 0..block.rows {
+            for c in 0..block.cols {
+                self[(r0 + r, c0 + c)] = block.at(r, c);
+            }
+        }
+    }
+
+    /// Block-diagonal assembly of possibly non-square blocks.
+    pub fn block_diag(blocks: &[Mat]) -> Mat {
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let cols = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let (mut r, mut c) = (0, 0);
+        for b in blocks {
+            out.set_block(r, c, b);
+            r += b.rows;
+            c += b.cols;
+        }
+        out
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &a| m.max(a.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|a| a * a).sum::<f64>().sqrt()
+}
+
+fn normalize(x: &mut [f64]) {
+    let n = norm(x).max(1e-300);
+    for a in x.iter_mut() {
+        *a /= n;
+    }
+}
+
+/// Numerically stable softmax (used by CPU attention baselines).
+pub fn softmax_inplace(xs: &mut [f64]) {
+    let m = xs.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+    if m == f64::NEG_INFINITY {
+        for x in xs.iter_mut() {
+            *x = 0.0;
+        }
+        return;
+    }
+    let mut z = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= z;
+    }
+}
+
+/// log(sum(exp(xs))) — used by the NLL metric.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let mut a = Mat::zeros(4, 4);
+        for v in a.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let i = Mat::eye(4);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Mat::from_rows(&[&[1.0, -2.0], &[0.5, 3.0], &[2.0, 2.0]]);
+        let x = vec![2.0, 1.0];
+        assert_eq!(a.matvec(&x), vec![0.0, 4.0, 6.0]);
+        assert_eq!(a.tmatvec(&[1.0, 1.0, 1.0]), vec![3.5, 3.0]);
+    }
+
+    #[test]
+    fn spectral_norm_of_rotation_is_one() {
+        let t: f64 = 0.7;
+        let r = Mat::from_rows(&[&[t.cos(), -t.sin()], &[t.sin(), t.cos()]]);
+        assert!((r.spectral_norm() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let d = Mat::from_rows(&[&[3.0, 0.0], &[0.0, -5.0]]);
+        assert!((d.spectral_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_norm_vs_bruteforce_2x2() {
+        // brute-force over unit vectors
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[-0.5, 0.3]]);
+        let mut best: f64 = 0.0;
+        for i in 0..5000 {
+            let t = i as f64 / 5000.0 * std::f64::consts::TAU;
+            let v = [t.cos(), t.sin()];
+            let av = a.matvec(&v);
+            best = best.max((av[0] * av[0] + av[1] * av[1]).sqrt());
+        }
+        assert!((a.spectral_norm() - best).abs() < 1e-3);
+    }
+
+    #[test]
+    fn block_diag_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::eye(2);
+        let m = Mat::block_diag(&[a, b]);
+        assert_eq!((m.rows, m.cols), (4, 5));
+        assert_eq!(m[(2, 3)], 1.0);
+        assert_eq!(m[(3, 4)], 1.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(xs[3] > 0.999);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let v = [1000.0f32, 1000.0];
+        assert!((logsumexp(&v) - (1000.0 + 2.0f32.ln())).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,283 @@
+//! `se2-attention` — leader binary: CLI over the coordinator.
+//!
+//! Subcommands:
+//!   info       platform + artifact inventory
+//!   gen-data   generate dataset shards from the synthetic simulator
+//!   train      train one attention variant, log the loss curve
+//!   simulate   batched rollout serving with latency/throughput report
+//!   approx     SE(2) Fourier approximation error probe (Fig. 3 pointwise)
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use se2attn::cli::{App, Command, Matches, ParseOutcome};
+use se2attn::config::{Method, SystemConfig};
+use se2attn::coordinator::batcher::BatcherConfig;
+use se2attn::coordinator::{ModelHandle, RolloutRequest, Server, Trainer};
+use se2attn::fourier;
+use se2attn::geometry::Pose;
+use se2attn::prng::Rng;
+use se2attn::runtime::Engine;
+
+fn app() -> App {
+    App::new("se2-attention", "Linear Memory SE(2) Invariant Attention — coordinator")
+        .command(Command::new("info", "show platform, config and artifacts")
+            .opt("artifacts", "artifacts", "artifact directory"))
+        .command(Command::new("gen-data", "generate dataset shards")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("examples", "512", "number of examples")
+            .opt("seed", "0", "generation seed")
+            .opt("out", "data/train.shard", "output shard path"))
+        .command(Command::new("train", "train one attention variant")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("method", "se2fourier", "abs|rope2d|se2rep|se2fourier")
+            .opt("steps", "200", "optimizer steps")
+            .opt("examples", "256", "dataset size (ignored with --data)")
+            .opt("seed", "0", "init + data seed")
+            .opt("data", "", "dataset shard to train from (see gen-data)")
+            .opt("save", "", "write a checkpoint here when done")
+            .opt("resume", "", "restore params/opt-state from a checkpoint")
+            .opt("augment", "0", "SE(2) frame-jitter augmentation magnitude (model units; 0 = off)"))
+        .command(Command::new("render", "ASCII-render a scenario (debug)")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("seed", "42", "scenario seed")
+            .opt("step", "7", "timestep to draw")
+            .flag("futures", "overlay ground-truth futures"))
+        .command(Command::new("simulate", "serve batched rollout requests")
+            .opt("artifacts", "artifacts", "artifact directory")
+            .opt("method", "se2fourier", "attention method")
+            .opt("scenes", "16", "number of scenario requests")
+            .opt("samples", "4", "rollout samples per scene")
+            .opt("seed", "0", "scenario seed base"))
+        .command(Command::new("approx", "Fourier approximation error probe")
+            .opt("radius", "2.0", "key position radius")
+            .opt("basis", "12", "basis size F")
+            .opt("trials", "256", "random (key, query) pairs"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match app().parse(&argv) {
+        ParseOutcome::Help(h) => {
+            println!("{h}");
+            Ok(())
+        }
+        ParseOutcome::Error(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        ParseOutcome::Run(m) => dispatch(&m),
+    }
+}
+
+fn dispatch(m: &Matches) -> Result<()> {
+    match m.command.as_str() {
+        "info" => cmd_info(m),
+        "gen-data" => cmd_gen_data(m),
+        "train" => cmd_train(m),
+        "render" => cmd_render(m),
+        "simulate" => cmd_simulate(m),
+        "approx" => cmd_approx(m),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_info(m: &Matches) -> Result<()> {
+    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let engine = Engine::cpu(&cfg.artifact_dir)?;
+    println!("platform      : {}", engine.platform());
+    println!("artifact dir  : {}", cfg.artifact_dir.display());
+    println!(
+        "model         : {} layers, {} heads x {}d, {} tokens, {} actions, F={}",
+        cfg.model.n_layers,
+        cfg.model.n_heads,
+        cfg.model.head_dim,
+        cfg.model.n_tokens,
+        cfg.model.n_actions,
+        cfg.model.fourier_f
+    );
+    println!(
+        "se2fourier c  : {} per head (vs d={})",
+        cfg.model.se2f_proj_dim(),
+        cfg.model.head_dim
+    );
+    println!(
+        "sim           : dt={}s, {} history + {} future steps, {} agents",
+        cfg.sim.dt, cfg.sim.history_steps, cfg.sim.future_steps, cfg.sim.n_agents
+    );
+    Ok(())
+}
+
+fn cmd_gen_data(m: &Matches) -> Result<()> {
+    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let tok = se2attn::tokenizer::Tokenizer::new(&cfg.model, &cfg.sim);
+    let n = m.get_usize("examples");
+    let t0 = std::time::Instant::now();
+    let examples = se2attn::dataset::generate_examples(&cfg.sim, &tok, m.get_u64("seed"), n);
+    let out = m.get("out");
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    se2attn::dataset::write_shard(out, &examples)?;
+    println!(
+        "wrote {} examples to {out} in {:.1}s",
+        examples.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_train(m: &Matches) -> Result<()> {
+    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let method = Method::parse(m.get("method"))?;
+    let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
+    let mut model = ModelHandle::init(Arc::clone(&engine), method, m.get_u64("seed") as i32)?;
+    if !m.get("resume").is_empty() {
+        let ck = se2attn::checkpoint::Checkpoint::load(m.get("resume"))?;
+        model.restore(&ck, &cfg.model.param_names)?;
+        println!("resumed from {} (step {})", m.get("resume"), model.step);
+    }
+    println!(
+        "training {} ({} tensors, {} weights)",
+        method.display(),
+        model.n_params(),
+        model.n_weights()
+    );
+    let mut trainer = if m.get("data").is_empty() {
+        Trainer::new(
+            cfg.model.clone(),
+            cfg.sim.clone(),
+            m.get_usize("examples"),
+            m.get_u64("seed"),
+        )
+    } else {
+        let examples = se2attn::dataset::read_shard(m.get("data"))?;
+        println!("loaded {} examples from {}", examples.len(), m.get("data"));
+        Trainer::from_examples(
+            cfg.model.clone(),
+            cfg.sim.clone(),
+            examples,
+            m.get_u64("seed"),
+        )
+    };
+    let aug = m.get_f64("augment");
+    if aug > 0.0 {
+        trainer.augment = Some(aug);
+        println!("augmentation: SE(2) frame jitter up to {aug} model units");
+    }
+    let report = trainer.run(&mut model, m.get_u64("steps"))?;
+    if !m.get("save").is_empty() {
+        model
+            .to_checkpoint(&cfg.model.param_names)?
+            .save(m.get("save"))?;
+        println!("checkpoint written to {}", m.get("save"));
+    }
+    for (step, loss) in &report.loss_curve {
+        println!("step {step:>5}  loss {loss:.4}");
+    }
+    println!(
+        "done: {} steps in {:.1}s ({:.1} ex/s), val NLL {:.4}",
+        report.steps,
+        report.wall_secs,
+        report.examples_seen as f64 / report.wall_secs,
+        report.final_val_loss
+    );
+    Ok(())
+}
+
+fn cmd_render(m: &Matches) -> Result<()> {
+    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let gen = se2attn::sim::ScenarioGenerator::new(cfg.sim.clone());
+    let s = gen.generate(m.get_u64("seed"));
+    let step = m.get_usize("step").min(s.n_steps() - 1);
+    if m.get_flag("futures") {
+        println!(
+            "{}",
+            se2attn::sim::render::render_futures(&s, step, 100, 30)
+        );
+        for a in 0..s.n_agents() {
+            println!(
+                "agent {a}: class {}",
+                s.classify_future(a, step).name()
+            );
+        }
+    } else {
+        println!(
+            "{}",
+            se2attn::sim::render::render_scenario(&s, step, None, 100, 30)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(m: &Matches) -> Result<()> {
+    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let method = Method::parse(m.get("method"))?;
+    let scenes = m.get_usize("scenes");
+    let samples = m.get_usize("samples");
+    let seed = m.get_u64("seed");
+
+    let server = Server::start(
+        cfg.clone(),
+        vec![method],
+        seed as i32,
+        BatcherConfig::default(),
+    )?;
+    let gen = se2attn::sim::ScenarioGenerator::new(cfg.sim.clone());
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..scenes {
+        let scenario = gen.generate(seed + i as u64);
+        let req = RolloutRequest {
+            scenario,
+            t0: cfg.sim.history_steps - 1,
+            n_samples: samples,
+            temperature: 1.0,
+            seed: i as i32,
+        };
+        pending.push(server.submit(method, req));
+    }
+    let mut ades = Vec::new();
+    for rx in pending {
+        let res = rx.recv().context("response channel closed")??;
+        ades.extend(res.min_ade);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mean_ade, _) = se2attn::metrics::mean_std(&ades);
+    println!("method={} scenes={scenes} samples={samples}", method.name());
+    println!(
+        "wall {:.2}s  throughput {:.2} scenes/s  minADE(mean over agents) {:.2} m",
+        wall,
+        scenes as f64 / wall,
+        mean_ade
+    );
+    println!("server stats: {}", server.stats.summary());
+    Ok(())
+}
+
+fn cmd_approx(m: &Matches) -> Result<()> {
+    let radius = m.get_f64("radius");
+    let f = m.get_usize("basis");
+    let trials = m.get_usize("trials");
+    let mut rng = Rng::new(42);
+    let mut errs: Vec<f64> = (0..trials)
+        .map(|_| {
+            let psi = rng.range(-std::f64::consts::PI, std::f64::consts::PI);
+            let pm = Pose::new(radius * psi.cos(), radius * psi.sin(), rng.range(-3.14, 3.14));
+            let pn = Pose::new(0.0, 0.0, rng.range(-std::f64::consts::PI, std::f64::consts::PI));
+            fourier::approximation_error(&pn, &pm, f)
+        })
+        .collect();
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    println!(
+        "radius={radius} F={f}: mean {:.2e}  p2.5 {:.2e}  p97.5 {:.2e}  (fp16 eps {:.2e}, bf16 eps {:.2e})",
+        mean,
+        errs[(errs.len() as f64 * 0.025) as usize],
+        errs[(errs.len() as f64 * 0.975) as usize],
+        fourier::FP16_EPS,
+        fourier::BF16_EPS
+    );
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Evaluation metrics (paper Table I): negative log likelihood over the
+//! action codebook and minADE over sampled rollouts, broken down by
+//! ground-truth trajectory class (stationary / straight / turning).
+
+use std::collections::BTreeMap;
+
+use crate::linalg::logsumexp;
+use crate::sim::TrajectoryClass;
+
+/// Mean NLL of targets under logits.
+///
+/// logits: (n_tokens, n_actions) row-major; targets < 0 are skipped
+/// (mirrors the model's masked loss).
+pub fn nll(logits: &[f32], targets: &[i32], n_actions: usize) -> f64 {
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (i, &t) in targets.iter().enumerate() {
+        if t < 0 {
+            continue;
+        }
+        let row = &logits[i * n_actions..(i + 1) * n_actions];
+        let lz = logsumexp(row) as f64;
+        total += lz - row[t as usize] as f64;
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Average displacement error between a predicted and ground-truth
+/// position sequence (world meters).
+pub fn ade(pred: &[(f64, f64)], truth: &[(f64, f64)]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter()
+        .zip(truth.iter())
+        .map(|(p, t)| ((p.0 - t.0).powi(2) + (p.1 - t.1).powi(2)).sqrt())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// minADE over samples: each sample is one predicted trajectory.
+pub fn min_ade(samples: &[Vec<(f64, f64)>], truth: &[(f64, f64)]) -> f64 {
+    samples
+        .iter()
+        .map(|s| ade(s, truth))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Accumulates per-class minADE plus NLL — one Table-I row.
+#[derive(Clone, Debug, Default)]
+pub struct TableOneRow {
+    nll_sum: f64,
+    nll_count: usize,
+    per_class: BTreeMap<&'static str, (f64, usize)>,
+}
+
+impl TableOneRow {
+    pub fn add_nll(&mut self, v: f64, weight: usize) {
+        self.nll_sum += v * weight as f64;
+        self.nll_count += weight;
+    }
+
+    pub fn add_min_ade(&mut self, class: TrajectoryClass, v: f64) {
+        let e = self.per_class.entry(class.name()).or_insert((0.0, 0));
+        e.0 += v;
+        e.1 += 1;
+    }
+
+    pub fn nll(&self) -> f64 {
+        if self.nll_count == 0 {
+            f64::NAN
+        } else {
+            self.nll_sum / self.nll_count as f64
+        }
+    }
+
+    pub fn min_ade(&self, class: TrajectoryClass) -> f64 {
+        match self.per_class.get(class.name()) {
+            Some((sum, n)) if *n > 0 => sum / *n as f64,
+            _ => f64::NAN,
+        }
+    }
+
+    pub fn count(&self, class: TrajectoryClass) -> usize {
+        self.per_class.get(class.name()).map_or(0, |(_, n)| *n)
+    }
+}
+
+/// Mean and sample-std over per-seed results (Table I reports means of 3
+/// seeds).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_uniform_logits() {
+        // all-zero logits over 4 actions -> nll = ln 4 everywhere
+        let logits = vec![0.0f32; 3 * 4];
+        let targets = vec![0, 3, -1];
+        let v = nll(&logits, &targets, 4);
+        assert!((v - (4.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_confident_correct_is_small() {
+        let mut logits = vec![0.0f32; 4];
+        logits[2] = 20.0;
+        assert!(nll(&logits, &[2], 4) < 1e-6);
+        assert!(nll(&logits, &[1], 4) > 10.0);
+    }
+
+    #[test]
+    fn nll_ignores_masked() {
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(nll(&logits, &[-1], 4), 0.0);
+    }
+
+    #[test]
+    fn ade_known_value() {
+        let pred = vec![(0.0, 0.0), (1.0, 0.0)];
+        let truth = vec![(0.0, 1.0), (1.0, 2.0)];
+        assert!((ade(&pred, &truth) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_ade_takes_best_sample() {
+        let truth = vec![(0.0, 0.0), (1.0, 0.0)];
+        let samples = vec![
+            vec![(0.0, 5.0), (1.0, 5.0)], // ade 5
+            vec![(0.0, 1.0), (1.0, 1.0)], // ade 1
+        ];
+        assert!((min_ade(&samples, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_row_aggregates_by_class() {
+        let mut row = TableOneRow::default();
+        row.add_nll(2.0, 10);
+        row.add_nll(4.0, 10);
+        row.add_min_ade(TrajectoryClass::Turning, 2.0);
+        row.add_min_ade(TrajectoryClass::Turning, 4.0);
+        row.add_min_ade(TrajectoryClass::Straight, 1.0);
+        assert!((row.nll() - 3.0).abs() < 1e-12);
+        assert!((row.min_ade(TrajectoryClass::Turning) - 3.0).abs() < 1e-12);
+        assert!((row.min_ade(TrajectoryClass::Straight) - 1.0).abs() < 1e-12);
+        assert!(row.min_ade(TrajectoryClass::Stationary).is_nan());
+        assert_eq!(row.count(TrajectoryClass::Turning), 2);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,114 @@
+//! Property-based testing mini-framework (substrate for the absent
+//! `proptest` crate).
+//!
+//! A property is a closure over a seeded [`crate::prng::Rng`]; the runner
+//! executes it for `cases` seeds and, on failure, reports the failing seed
+//! so the case can be replayed deterministically:
+//!
+//! ```
+//! use se2attn::proplite::check;
+//! check("addition commutes", 256, |rng| {
+//!     let (a, b) = (rng.range(-1e6, 1e6), rng.range(-1e6, 1e6));
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::prng::Rng;
+
+/// Run `cases` random trials of `prop`.  Panics (test failure) with the
+/// seed and message of the first counterexample.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Allow targeted replay: SE2ATTN_PROP_SEED=<n> runs just that seed.
+    if let Ok(s) = std::env::var("SE2ATTN_PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property '{name}' failed at replayed seed {seed}: {msg}");
+            }
+            return;
+        }
+    }
+    for seed in 0..cases {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at seed {seed} \
+                 (replay with SE2ATTN_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f64s are within `tol`, with a useful message.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (|diff|={} > {tol})", (a - b).abs()))
+    }
+}
+
+/// Assert every pair of corresponding slice elements is within `tol`.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "{what}[{i}]: {x} vs {y} (|diff|={} > {tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// f32 variant of [`all_close`].
+pub fn all_close_f32(a: &[f32], b: &[f32], tol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "{what}[{i}]: {x} vs {y} (|diff|={} > {tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 32, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with SE2ATTN_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("always fails", 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "x").is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 0.0, "v").is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 0.0, "v").is_err());
+    }
+}

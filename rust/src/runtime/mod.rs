@@ -1,0 +1,280 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the request path.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! Text is the interchange format (xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos — see /opt/xla-example/README.md).
+//!
+//! Every artifact carries a JSON manifest (input/output names, shapes,
+//! dtypes) emitted by `python/compile/aot.py`; the [`Engine`] validates
+//! every call against it, so shape drift between the Python and Rust sides
+//! fails loudly at the boundary instead of inside XLA.
+
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::Json;
+
+pub use tensor::{Dtype, HostTensor};
+
+/// One input or output slot of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("io entry missing name")?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("io entry missing shape")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let dtype = match j.get("dtype").and_then(Json::as_str) {
+            Some("float32") => Dtype::F32,
+            Some("int32") => Dtype::I32,
+            Some(other) => bail!("unsupported dtype {other}"),
+            None => bail!("io entry missing dtype"),
+        };
+        Ok(IoSpec { name, shape, dtype })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest of one artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .context("manifest missing name")?
+            .to_string();
+        let parse_list = |key: &str| -> Result<Vec<IoSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("manifest missing {key}"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        Ok(Manifest {
+            name,
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+        })
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// A loaded, compiled artifact.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (for telemetry).
+    pub exec_count: std::sync::atomic::AtomicU64,
+    pub exec_nanos: std::sync::atomic::AtomicU64,
+}
+
+impl Artifact {
+    /// Execute with host tensors; returns outputs in manifest order.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let m = &self.manifest;
+        if inputs.len() != m.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                m.name,
+                m.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&m.inputs) {
+            if t.shape != spec.shape || t.dtype() != spec.dtype {
+                bail!(
+                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    m.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.exec_nanos.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        let parts = tuple.to_tuple()?;
+        if parts.len() != m.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                m.name,
+                m.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&m.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+            .collect()
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        let n = self.exec_count.load(std::sync::atomic::Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.exec_nanos.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / n as f64
+            / 1e6
+    }
+}
+
+/// The runtime engine: one PJRT client + a lazy artifact cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    artifacts: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: artifact_dir.into(),
+            artifacts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch cached) artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.artifacts.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(a));
+        }
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let man_path = self.dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::parse(
+            &std::fs::read_to_string(&man_path)
+                .with_context(|| format!("read {}", man_path.display()))?,
+        )?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        eprintln!(
+            "[runtime] compiled {name} in {:.2}s ({} in / {} out)",
+            t0.elapsed().as_secs_f64(),
+            manifest.inputs.len(),
+            manifest.outputs.len()
+        );
+        let artifact = std::sync::Arc::new(Artifact {
+            manifest,
+            exe,
+            exec_count: Default::default(),
+            exec_nanos: Default::default(),
+        });
+        self.artifacts
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&artifact));
+        Ok(artifact)
+    }
+
+    /// Convenience: load + execute.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.execute(inputs)
+    }
+
+    /// Names of currently loaded artifacts.
+    pub fn loaded(&self) -> Vec<String> {
+        self.artifacts.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_and_lookup() {
+        let text = r#"{
+            "name": "toy",
+            "inputs": [
+                {"name": "a", "shape": [2, 3], "dtype": "float32"},
+                {"name": "b", "shape": [], "dtype": "int32"}
+            ],
+            "outputs": [{"name": "o", "shape": [2], "dtype": "float32"}]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.inputs[0].numel(), 6);
+        assert_eq!(m.inputs[1].shape.len(), 0);
+        assert_eq!(m.input_index("b"), Some(1));
+        assert_eq!(m.output_index("o"), Some(0));
+        assert_eq!(m.output_index("nope"), None);
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_dtype() {
+        let text = r#"{"name":"x","inputs":[{"name":"a","shape":[1],"dtype":"float64"}],"outputs":[]}"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+}

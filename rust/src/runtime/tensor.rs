@@ -1,0 +1,184 @@
+//! Host tensors and Literal conversion.
+
+use anyhow::{bail, Context, Result};
+
+use super::IoSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// A host-side tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data");
+        HostTensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data");
+        HostTensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros_like_spec(spec: &IoSpec) -> HostTensor {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::f32(spec.shape.clone(), vec![0.0; spec.numel()]),
+            Dtype::I32 => HostTensor::i32(spec.shape.clone(), vec![0; spec.numel()]),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar convenience accessor.
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("not a scalar (numel {})", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal, checking against the manifest spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
+        let data = match spec.dtype {
+            Dtype::F32 => TensorData::F32(
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("read '{}' as f32", spec.name))?,
+            ),
+            Dtype::I32 => TensorData::I32(
+                lit.to_vec::<i32>()
+                    .with_context(|| format!("read '{}' as i32", spec.name))?,
+            ),
+        };
+        let t = HostTensor {
+            shape: spec.shape.clone(),
+            data,
+        };
+        if t.numel()
+            != match &t.data {
+                TensorData::F32(v) => v.len(),
+                TensorData::I32(v) => v.len(),
+            }
+        {
+            bail!(
+                "output '{}' numel mismatch: spec {:?} vs literal",
+                spec.name,
+                spec.shape
+            );
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.shape.len(), 0);
+        assert_eq!(*s.as_i32().unwrap(), [7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zeros_like_spec() {
+        let spec = IoSpec {
+            name: "x".into(),
+            shape: vec![4, 5],
+            dtype: Dtype::I32,
+        };
+        let t = HostTensor::zeros_like_spec(&spec);
+        assert_eq!(t.numel(), 20);
+        assert_eq!(t.dtype(), Dtype::I32);
+    }
+}

@@ -1,0 +1,340 @@
+//! Kinematic agents and their driving policies.
+//!
+//! Vehicles track lanes with a pure-pursuit steering law and an IDM-style
+//! speed controller (leader- and signal-aware); pedestrians amble near
+//! crosswalks.  The policy's (accel, yaw-rate) output at each step is the
+//! ground-truth *action* the model learns to predict after discretization
+//! by the tokenizer's action codebook.
+
+use crate::geometry::{wrap_angle, Pose};
+use crate::prng::Rng;
+
+use super::map::LaneGraph;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AgentKind {
+    Vehicle,
+    Pedestrian,
+    Cyclist,
+}
+
+/// Continuous control: longitudinal acceleration (m/s^2) + yaw rate (rad/s).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KinematicAction {
+    pub accel: f64,
+    pub yaw_rate: f64,
+}
+
+pub const MAX_ACCEL: f64 = 4.0;
+pub const MAX_YAW_RATE: f64 = 1.0;
+
+impl KinematicAction {
+    pub fn clamped(self) -> KinematicAction {
+        KinematicAction {
+            accel: self.accel.clamp(-MAX_ACCEL, MAX_ACCEL),
+            yaw_rate: self.yaw_rate.clamp(-MAX_YAW_RATE, MAX_YAW_RATE),
+        }
+    }
+}
+
+/// Dynamic state of one agent.
+#[derive(Clone, Copy, Debug)]
+pub struct AgentState {
+    pub pose: Pose,
+    pub speed: f64,
+    pub kind: AgentKind,
+    pub length: f64,
+    pub width: f64,
+    /// Last applied action (exposed as a token feature).
+    pub last_action: KinematicAction,
+}
+
+impl AgentState {
+    /// Unicycle/kinematic-bicycle step (the same integrator the rollout
+    /// scheduler applies to *predicted* actions — train/test dynamics
+    /// match by construction).
+    pub fn step(&self, action: KinematicAction, dt: f64) -> AgentState {
+        let a = action.clamped();
+        let speed = (self.speed + a.accel * dt).max(0.0);
+        let theta = wrap_angle(self.pose.theta + a.yaw_rate * dt);
+        // integrate at mid-heading for better arc fidelity
+        let mid = wrap_angle(self.pose.theta + 0.5 * a.yaw_rate * dt);
+        let (s, c) = mid.sin_cos();
+        AgentState {
+            pose: Pose::new(
+                self.pose.x + speed * c * dt,
+                self.pose.y + speed * s * dt,
+                theta,
+            ),
+            speed,
+            last_action: a,
+            ..*self
+        }
+    }
+}
+
+/// Per-agent behavior controller.
+#[derive(Clone, Debug)]
+pub enum Policy {
+    /// Track `lane` starting near arc position `s0`; `stop_at` optionally
+    /// forces a stop at that arc position (red signal / stop sign).
+    LaneFollow {
+        lane: usize,
+        target_speed: f64,
+        stop_at: Option<f64>,
+    },
+    /// Pedestrian: walk toward a goal point, then pick a new one.
+    Wander { goal: (f64, f64), speed: f64 },
+    /// Parked / stationary agent.
+    Stationary,
+}
+
+/// Lookahead distance for pure pursuit (m).
+const LOOKAHEAD_M: f64 = 6.0;
+/// IDM-ish time headway (s) and minimum gap (m).
+const HEADWAY_S: f64 = 1.5;
+const MIN_GAP_M: f64 = 4.0;
+
+/// Compute the policy's action for `agent` given the world state.
+pub fn plan(
+    policy: &Policy,
+    agent: &AgentState,
+    others: &[AgentState],
+    map: &LaneGraph,
+    rng: &mut Rng,
+) -> (KinematicAction, Policy) {
+    match policy {
+        Policy::Stationary => (
+            KinematicAction {
+                accel: -agent.speed.min(1.0),
+                yaw_rate: 0.0,
+            },
+            policy.clone(),
+        ),
+        Policy::Wander { goal, speed } => {
+            let (gx, gy) = *goal;
+            let dx = gx - agent.pose.x;
+            let dy = gy - agent.pose.y;
+            let dist = (dx * dx + dy * dy).sqrt();
+            let new_policy = if dist < 2.0 {
+                Policy::Wander {
+                    goal: (
+                        agent.pose.x + rng.range(-15.0, 15.0),
+                        agent.pose.y + rng.range(-15.0, 15.0),
+                    ),
+                    speed: *speed,
+                }
+            } else {
+                policy.clone()
+            };
+            let desired_heading = dy.atan2(dx);
+            let herr = wrap_angle(desired_heading - agent.pose.theta);
+            let yaw_rate = (2.0 * herr).clamp(-MAX_YAW_RATE, MAX_YAW_RATE);
+            let accel = (speed - agent.speed).clamp(-1.5, 1.0);
+            (KinematicAction { accel, yaw_rate }.clamped(), new_policy)
+        }
+        Policy::LaneFollow {
+            lane,
+            target_speed,
+            stop_at,
+        } => {
+            let lane_ref = &map.lanes[*lane];
+            // progress: nearest arc position on own lane
+            let mut best_s = 0.0;
+            let mut best_d = f64::INFINITY;
+            let step = super::map::LANE_SAMPLE_STEP_M;
+            for (pi, p) in lane_ref.points.iter().enumerate() {
+                let d = p.dist(&agent.pose);
+                if d < best_d {
+                    best_d = d;
+                    best_s = pi as f64 * step;
+                }
+            }
+            // pure pursuit toward a lookahead point
+            let target = lane_ref.pose_at(best_s + LOOKAHEAD_M);
+            let dx = target.x - agent.pose.x;
+            let dy = target.y - agent.pose.y;
+            let desired_heading = dy.atan2(dx);
+            let herr = wrap_angle(desired_heading - agent.pose.theta);
+            let yaw_rate = (1.5 * herr).clamp(-MAX_YAW_RATE, MAX_YAW_RATE);
+
+            // speed control: target speed, reduced by leader and stop line
+            let mut desired = *target_speed;
+            // leader: nearest other agent ahead within a cone
+            for o in others {
+                let rel = agent.pose.relative_to(&o.pose);
+                if rel.x > 0.0 && rel.x < 30.0 && rel.y.abs() < 2.5 {
+                    let gap = rel.x - MIN_GAP_M;
+                    let safe = (gap / HEADWAY_S).max(0.0);
+                    desired = desired.min(safe.min(o.speed + gap * 0.3));
+                }
+            }
+            // stop line (if any) and the end of the lane both cap speed
+            // with a comfortable braking profile v = sqrt(2 a d)
+            let route_end = lane_ref.length() - LOOKAHEAD_M;
+            let stop_s = stop_at.map_or(route_end, |s| s.min(route_end));
+            let dist_to_stop = stop_s - best_s;
+            if dist_to_stop > 0.0 {
+                desired = desired.min((2.0 * 2.0 * dist_to_stop).sqrt());
+            } else {
+                desired = 0.0;
+            }
+            let accel = ((desired - agent.speed) * 1.2).clamp(-MAX_ACCEL, 2.5);
+            (KinematicAction { accel, yaw_rate }.clamped(), policy.clone())
+        }
+    }
+}
+
+/// Spawn an agent appropriate for the policy.
+pub fn spawn(policy: &Policy, map: &LaneGraph, rng: &mut Rng) -> AgentState {
+    match policy {
+        Policy::LaneFollow { lane, target_speed, .. } => {
+            let lane_ref = &map.lanes[*lane];
+            let s0 = rng.range(0.0, lane_ref.length() * 0.5);
+            let pose = lane_ref.pose_at(s0);
+            AgentState {
+                pose,
+                speed: rng.range(0.3, 1.0) * target_speed,
+                kind: AgentKind::Vehicle,
+                length: rng.range(4.2, 5.4),
+                width: rng.range(1.8, 2.2),
+                last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+            }
+        }
+        Policy::Wander { .. } => {
+            let cw = rng.choice(&map.crosswalks);
+            AgentState {
+                pose: Pose::new(
+                    cw.x + rng.range(-4.0, 4.0),
+                    cw.y + rng.range(-4.0, 4.0),
+                    rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+                ),
+                speed: rng.range(0.6, 1.8),
+                kind: AgentKind::Pedestrian,
+                length: 0.6,
+                width: 0.6,
+                last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+            }
+        }
+        Policy::Stationary => {
+            let lane = rng.choice(&map.lanes);
+            let s0 = rng.range(0.0, lane.length());
+            let p = lane.pose_at(s0);
+            AgentState {
+                pose: Pose::new(p.x + rng.range(-3.0, 3.0), p.y + rng.range(-3.0, 3.0), p.theta),
+                speed: 0.0,
+                kind: AgentKind::Vehicle,
+                length: 4.8,
+                width: 2.0,
+                last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vehicle_at(pose: Pose, speed: f64) -> AgentState {
+        AgentState {
+            pose,
+            speed,
+            kind: AgentKind::Vehicle,
+            length: 4.8,
+            width: 2.0,
+            last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+        }
+    }
+
+    #[test]
+    fn step_integrates_straight_motion() {
+        let a = vehicle_at(Pose::new(0.0, 0.0, 0.0), 10.0);
+        let next = a.step(KinematicAction { accel: 0.0, yaw_rate: 0.0 }, 0.5);
+        assert!((next.pose.x - 5.0).abs() < 1e-9);
+        assert!(next.pose.y.abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_clamps_speed_at_zero() {
+        let a = vehicle_at(Pose::new(0.0, 0.0, 0.0), 0.5);
+        let next = a.step(KinematicAction { accel: -4.0, yaw_rate: 0.0 }, 0.5);
+        assert_eq!(next.speed, 0.0);
+    }
+
+    #[test]
+    fn step_turns_with_yaw_rate() {
+        let a = vehicle_at(Pose::new(0.0, 0.0, 0.0), 8.0);
+        let next = a.step(KinematicAction { accel: 0.0, yaw_rate: 0.5 }, 0.5);
+        assert!((next.pose.theta - 0.25).abs() < 1e-9);
+        assert!(next.pose.y > 0.0, "turning left curves upward");
+    }
+
+    #[test]
+    fn lane_follow_tracks_lane() {
+        let mut rng = Rng::new(3);
+        let map = LaneGraph::generate(&mut rng);
+        let policy = Policy::LaneFollow {
+            lane: 0,
+            target_speed: 10.0,
+            stop_at: None,
+        };
+        let mut agent = spawn(&policy, &map, &mut rng);
+        // place near the lane start so the route end is far away
+        agent.pose = map.lanes[0].pose_at(2.0);
+        let mut p = policy;
+        let mut moved = 0.0;
+        for _ in 0..12 {
+            let (action, np) = plan(&p, &agent, &[], &map, &mut rng);
+            let next = agent.step(action, 0.5);
+            moved += agent.pose.dist(&next.pose);
+            agent = next;
+            p = np;
+        }
+        let (_, _, d) = map.nearest_lane(agent.pose.x, agent.pose.y).unwrap();
+        assert!(d < 5.0, "vehicle strayed {d} m from lane network");
+        assert!(moved > 10.0, "vehicle should be moving, moved {moved} m");
+    }
+
+    #[test]
+    fn stop_at_brings_vehicle_to_rest() {
+        let mut rng = Rng::new(4);
+        let map = LaneGraph::generate(&mut rng);
+        let policy = Policy::LaneFollow {
+            lane: 0,
+            target_speed: 12.0,
+            stop_at: Some(20.0),
+        };
+        let mut agent = spawn(&policy, &map, &mut rng);
+        // place near lane start
+        agent.pose = map.lanes[0].pose_at(0.0);
+        agent.speed = 8.0;
+        let mut p = policy;
+        for _ in 0..60 {
+            let (action, np) = plan(&p, &agent, &[], &map, &mut rng);
+            agent = agent.step(action, 0.5);
+            p = np;
+        }
+        assert!(agent.speed < 0.8, "vehicle should stop, v={}", agent.speed);
+    }
+
+    #[test]
+    fn follower_does_not_rear_end_leader() {
+        let mut rng = Rng::new(5);
+        let map = LaneGraph::generate(&mut rng);
+        let lane = &map.lanes[0];
+        let mut follower = vehicle_at(lane.pose_at(0.0), 12.0);
+        let leader = vehicle_at(lane.pose_at(25.0), 0.0); // stopped ahead
+        let policy = Policy::LaneFollow {
+            lane: 0,
+            target_speed: 12.0,
+            stop_at: None,
+        };
+        for _ in 0..40 {
+            let (action, _) = plan(&policy, &follower, &[leader], &map, &mut rng);
+            follower = follower.step(action, 0.5);
+        }
+        let gap = follower.pose.dist(&leader.pose);
+        assert!(gap > 1.5, "collision: gap {gap}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Procedural lane-graph maps: straights, arcs, intersections, crosswalks.
+//!
+//! Lanes are polylines of SE(2) poses (position + tangent heading) sampled
+//! at a fixed arc-length step.  Curvature is carried per lane so the
+//! tokenizer can expose "turning-ness" as a feature and agents know the
+//! yaw-rate required to track the lane.
+
+use crate::geometry::Pose;
+use crate::prng::Rng;
+
+pub const LANE_SAMPLE_STEP_M: f64 = 4.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapElementKind {
+    Lane,
+    Crosswalk,
+    Signal,
+}
+
+/// One tokenizable map element: a pose plus descriptive features.
+#[derive(Clone, Debug)]
+pub struct MapElement {
+    pub kind: MapElementKind,
+    pub pose: Pose,
+    /// Signed curvature 1/m (lanes only).
+    pub curvature: f64,
+    /// Speed limit m/s (lanes only).
+    pub speed_limit: f64,
+    /// Signal state in [0, 1]: 0 red, 0.5 yellow, 1 green.
+    pub signal_state: f64,
+}
+
+/// A lane centerline.
+#[derive(Clone, Debug)]
+pub struct Lane {
+    pub points: Vec<Pose>,
+    pub curvature: f64,
+    pub speed_limit: f64,
+}
+
+impl Lane {
+    /// Arc-length position -> interpolated pose on the centerline.
+    pub fn pose_at(&self, s: f64) -> Pose {
+        let step = LANE_SAMPLE_STEP_M;
+        let total = (self.points.len() - 1) as f64 * step;
+        let s = s.clamp(0.0, total - 1e-9);
+        let i = (s / step) as usize;
+        let frac = (s - i as f64 * step) / step;
+        let a = &self.points[i];
+        let b = &self.points[(i + 1).min(self.points.len() - 1)];
+        Pose::new(
+            a.x + frac * (b.x - a.x),
+            a.y + frac * (b.y - a.y),
+            a.theta + frac * crate::geometry::wrap_angle(b.theta - a.theta),
+        )
+    }
+
+    pub fn length(&self) -> f64 {
+        (self.points.len() - 1) as f64 * LANE_SAMPLE_STEP_M
+    }
+}
+
+/// A generated map: lanes plus point elements (crosswalks, signals).
+#[derive(Clone, Debug)]
+pub struct LaneGraph {
+    pub lanes: Vec<Lane>,
+    pub crosswalks: Vec<Pose>,
+    pub signals: Vec<(Pose, f64)>,
+}
+
+/// Build a lane from a start pose with constant curvature.
+fn trace_lane(start: Pose, curvature: f64, length_m: f64, speed_limit: f64) -> Lane {
+    let n = (length_m / LANE_SAMPLE_STEP_M).ceil() as usize + 1;
+    let mut points = Vec::with_capacity(n);
+    let mut p = start;
+    for _ in 0..n {
+        points.push(p);
+        let dth = curvature * LANE_SAMPLE_STEP_M;
+        // advance along the arc
+        let (s, c) = p.theta.sin_cos();
+        p = Pose::new(
+            p.x + c * LANE_SAMPLE_STEP_M,
+            p.y + s * LANE_SAMPLE_STEP_M,
+            p.theta + dth,
+        );
+    }
+    Lane {
+        points,
+        curvature,
+        speed_limit,
+    }
+}
+
+impl LaneGraph {
+    /// Generate a random map around the origin: a mix of straight lanes,
+    /// arcs (left/right turns) and an optional crossing road, with
+    /// crosswalks and signals near the center.
+    pub fn generate(rng: &mut Rng) -> LaneGraph {
+        let mut lanes = Vec::new();
+        let main_heading = rng.range(-std::f64::consts::PI, std::f64::consts::PI);
+        let speed = rng.range(8.0, 15.0);
+
+        // main corridor: two parallel lanes through the origin
+        for off in [-2.0, 2.0] {
+            let (s, c) = main_heading.sin_cos();
+            let start = Pose::new(
+                -60.0 * c - off * s,
+                -60.0 * s + off * c,
+                main_heading,
+            );
+            lanes.push(trace_lane(start, 0.0, 120.0, speed));
+        }
+
+        // turning lane: an arc splitting off near the center
+        let turn_dir = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        let curvature = turn_dir / rng.range(12.0, 30.0); // radius 12-30 m
+        let (s, c) = main_heading.sin_cos();
+        let turn_start = Pose::new(-20.0 * c, -20.0 * s, main_heading);
+        lanes.push(trace_lane(turn_start, curvature, 45.0, speed * 0.6));
+
+        // crossing road through the origin (intersection)
+        if rng.bernoulli(0.7) {
+            let cross_heading = main_heading + std::f64::consts::FRAC_PI_2
+                + rng.range(-0.3, 0.3);
+            let (s2, c2) = cross_heading.sin_cos();
+            let start = Pose::new(-50.0 * c2, -50.0 * s2, cross_heading);
+            lanes.push(trace_lane(start, 0.0, 100.0, speed * 0.8));
+        }
+
+        // crosswalk poses near the intersection
+        let mut crosswalks = Vec::new();
+        for _ in 0..2 {
+            crosswalks.push(Pose::new(
+                rng.range(-12.0, 12.0),
+                rng.range(-12.0, 12.0),
+                rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+            ));
+        }
+
+        // signals with random state
+        let signals = vec![(
+            Pose::new(rng.range(-8.0, 8.0), rng.range(-8.0, 8.0), main_heading),
+            *rng.choice(&[0.0, 0.5, 1.0]),
+        )];
+
+        LaneGraph {
+            lanes,
+            crosswalks,
+            signals,
+        }
+    }
+
+    /// Flatten to exactly `n` tokenizable elements (stable order: lane
+    /// samples round-robin, then crosswalks, then signals, padded by
+    /// repeating the last element).
+    pub fn elements(&self, n: usize) -> Vec<MapElement> {
+        let mut out = Vec::with_capacity(n);
+        // sample each lane at a few arc positions
+        let lane_budget = n.saturating_sub(self.crosswalks.len() + self.signals.len());
+        let per_lane = (lane_budget / self.lanes.len().max(1)).max(1);
+        for lane in &self.lanes {
+            for i in 0..per_lane {
+                let s = lane.length() * (i as f64 + 0.5) / per_lane as f64;
+                out.push(MapElement {
+                    kind: MapElementKind::Lane,
+                    pose: lane.pose_at(s),
+                    curvature: lane.curvature,
+                    speed_limit: lane.speed_limit,
+                    signal_state: 0.0,
+                });
+            }
+        }
+        for cw in &self.crosswalks {
+            out.push(MapElement {
+                kind: MapElementKind::Crosswalk,
+                pose: *cw,
+                curvature: 0.0,
+                speed_limit: 0.0,
+                signal_state: 0.0,
+            });
+        }
+        for (pose, state) in &self.signals {
+            out.push(MapElement {
+                kind: MapElementKind::Signal,
+                pose: *pose,
+                curvature: 0.0,
+                speed_limit: 0.0,
+                signal_state: *state,
+            });
+        }
+        out.truncate(n);
+        while out.len() < n {
+            let last = out.last().cloned().unwrap_or(MapElement {
+                kind: MapElementKind::Lane,
+                pose: Pose::IDENTITY,
+                curvature: 0.0,
+                speed_limit: 10.0,
+                signal_state: 0.0,
+            });
+            out.push(last);
+        }
+        out
+    }
+
+    /// Closest lane (index, arc position, distance) to a world point.
+    pub fn nearest_lane(&self, x: f64, y: f64) -> Option<(usize, f64, f64)> {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (li, lane) in self.lanes.iter().enumerate() {
+            for (pi, p) in lane.points.iter().enumerate() {
+                let d = ((p.x - x).powi(2) + (p.y - y).powi(2)).sqrt();
+                if best.map_or(true, |(_, _, bd)| d < bd) {
+                    best = Some((li, pi as f64 * LANE_SAMPLE_STEP_M, d));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straight_lane_geometry() {
+        let lane = trace_lane(Pose::new(0.0, 0.0, 0.0), 0.0, 40.0, 10.0);
+        assert!(lane.length() >= 40.0);
+        let p = lane.pose_at(20.0);
+        assert!((p.x - 20.0).abs() < 1e-9 && p.y.abs() < 1e-9);
+    }
+
+    #[test]
+    fn arc_lane_turns() {
+        let curvature = 1.0 / 20.0;
+        let lane = trace_lane(Pose::new(0.0, 0.0, 0.0), curvature, 30.0, 8.0);
+        let end = lane.points.last().unwrap();
+        assert!(end.theta > 0.5, "arc should accumulate heading: {}", end.theta);
+    }
+
+    #[test]
+    fn generated_maps_have_structure() {
+        let mut rng = Rng::new(42);
+        for _ in 0..10 {
+            let map = LaneGraph::generate(&mut rng);
+            assert!(map.lanes.len() >= 3);
+            assert!(!map.crosswalks.is_empty());
+            let els = map.elements(16);
+            assert_eq!(els.len(), 16);
+            assert!(els.iter().any(|e| e.kind == MapElementKind::Lane));
+            assert!(els.iter().any(|e| e.kind == MapElementKind::Crosswalk));
+        }
+    }
+
+    #[test]
+    fn elements_pad_to_requested_size() {
+        let mut rng = Rng::new(1);
+        let map = LaneGraph::generate(&mut rng);
+        for n in [4usize, 16, 64] {
+            assert_eq!(map.elements(n).len(), n);
+        }
+    }
+
+    #[test]
+    fn nearest_lane_finds_origin_corridor() {
+        let mut rng = Rng::new(2);
+        let map = LaneGraph::generate(&mut rng);
+        let (_, _, d) = map.nearest_lane(0.0, 0.0).unwrap();
+        assert!(d < 10.0, "main corridor passes near origin, d={d}");
+    }
+
+    #[test]
+    fn lane_pose_interpolation_is_continuous() {
+        let lane = trace_lane(Pose::new(0.0, 0.0, 0.3), 0.01, 50.0, 10.0);
+        let mut prev = lane.pose_at(0.0);
+        for i in 1..100 {
+            let p = lane.pose_at(i as f64 * 0.5);
+            assert!(prev.dist(&p) < 1.0, "jump at {i}");
+            prev = p;
+        }
+    }
+}

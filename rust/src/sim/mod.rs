@@ -1,0 +1,19 @@
+//! Synthetic driving scenario simulator.
+//!
+//! Substitute for the paper's private 33M-scenario dataset (DESIGN.md §6):
+//! procedural lane-graph maps, kinematic-bicycle agents with lane-following
+//! / turning / stopping policies, and pedestrians near crosswalks.  The
+//! generator is seeded and fully deterministic, so dataset shards and
+//! Table-I runs are reproducible bit-for-bit.
+//!
+//! World units are meters/seconds; the tokenizer downscales positions into
+//! the model's |p| <= 4 band (paper Sec. IV-B).
+
+pub mod agent;
+pub mod map;
+pub mod render;
+pub mod scenario;
+
+pub use agent::{AgentKind, AgentState, KinematicAction};
+pub use map::{LaneGraph, MapElement, MapElementKind};
+pub use scenario::{Scenario, ScenarioGenerator, TrajectoryClass};

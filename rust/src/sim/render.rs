@@ -1,0 +1,218 @@
+//! ASCII scene renderer — debugging/inspection tool for scenarios and
+//! rollouts (the simulator's answer to a bird's-eye-view plot).
+
+use crate::geometry::Pose;
+
+use super::map::MapElementKind;
+use super::{AgentKind, Scenario};
+
+/// Fixed-size character canvas over a metric window.
+pub struct Canvas {
+    pub width: usize,
+    pub height: usize,
+    /// meters per character column (rows use 2x to offset font aspect).
+    pub scale: f64,
+    pub center: (f64, f64),
+    cells: Vec<char>,
+}
+
+impl Canvas {
+    pub fn new(width: usize, height: usize, scale: f64, center: (f64, f64)) -> Canvas {
+        Canvas {
+            width,
+            height,
+            scale,
+            center,
+            cells: vec![' '; width * height],
+        }
+    }
+
+    fn index(&self, x: f64, y: f64) -> Option<usize> {
+        let col = ((x - self.center.0) / self.scale + self.width as f64 / 2.0).round();
+        let row =
+            (-(y - self.center.1) / (self.scale * 2.0) + self.height as f64 / 2.0).round();
+        if col < 0.0 || row < 0.0 || col >= self.width as f64 || row >= self.height as f64 {
+            return None;
+        }
+        Some(row as usize * self.width + col as usize)
+    }
+
+    pub fn plot(&mut self, x: f64, y: f64, ch: char) {
+        if let Some(i) = self.index(x, y) {
+            self.cells[i] = ch;
+        }
+    }
+
+    /// Plot only if the cell is currently background.
+    pub fn plot_soft(&mut self, x: f64, y: f64, ch: char) {
+        if let Some(i) = self.index(x, y) {
+            if self.cells[i] == ' ' {
+                self.cells[i] = ch;
+            }
+        }
+    }
+
+    pub fn to_string_framed(&self) -> String {
+        let mut s = String::with_capacity((self.width + 3) * (self.height + 2));
+        s.push('+');
+        s.push_str(&"-".repeat(self.width));
+        s.push_str("+\n");
+        for r in 0..self.height {
+            s.push('|');
+            s.extend(self.cells[r * self.width..(r + 1) * self.width].iter());
+            s.push_str("|\n");
+        }
+        s.push('+');
+        s.push_str(&"-".repeat(self.width));
+        s.push('+');
+        s
+    }
+}
+
+/// Heading to one of 8 arrow glyphs.
+fn heading_glyph(theta: f64) -> char {
+    const GLYPHS: [char; 8] = ['>', '/', '^', '\\', '<', '/', 'v', '\\'];
+    let sector = ((theta + std::f64::consts::PI / 8.0).rem_euclid(std::f64::consts::TAU)
+        / (std::f64::consts::FRAC_PI_4)) as usize;
+    GLYPHS[sector.min(7)]
+}
+
+/// Render a scenario at step `t` (agents as arrows, map as dots) plus
+/// optional predicted trajectories (samples as '*').
+pub fn render_scenario(
+    s: &Scenario,
+    t: usize,
+    predictions: Option<&[Vec<Vec<(f64, f64)>>]>,
+    width: usize,
+    height: usize,
+) -> String {
+    let mut canvas = Canvas::new(width, height, 160.0 / width as f64, (0.0, 0.0));
+    // lanes
+    for lane in &s.map.lanes {
+        for p in &lane.points {
+            canvas.plot_soft(p.x, p.y, '.');
+        }
+    }
+    for e in &s.map_elements {
+        let ch = match e.kind {
+            MapElementKind::Lane => '.',
+            MapElementKind::Crosswalk => '=',
+            MapElementKind::Signal => '!',
+        };
+        canvas.plot_soft(e.pose.x, e.pose.y, ch);
+    }
+    // predicted futures (under the agents)
+    if let Some(samples) = predictions {
+        for sample in samples {
+            for track in sample {
+                for &(x, y) in track {
+                    canvas.plot_soft(x, y, '*');
+                }
+            }
+        }
+    }
+    // agents (robot = R)
+    for (a, st) in s.states[t].iter().enumerate() {
+        let ch = if a == 0 {
+            'R'
+        } else {
+            match st.kind {
+                AgentKind::Vehicle => heading_glyph(st.pose.theta),
+                AgentKind::Pedestrian => 'p',
+                AgentKind::Cyclist => 'c',
+            }
+        };
+        canvas.plot(st.pose.x, st.pose.y, ch);
+    }
+    canvas.to_string_framed()
+}
+
+/// Render the ground-truth future of every agent from step `t0` as a
+/// trajectory overlay (for eyeballing the stationary/straight/turning
+/// classes).
+pub fn render_futures(s: &Scenario, t0: usize, width: usize, height: usize) -> String {
+    let mut canvas = Canvas::new(width, height, 160.0 / width as f64, (0.0, 0.0));
+    for lane in &s.map.lanes {
+        for p in &lane.points {
+            canvas.plot_soft(p.x, p.y, '.');
+        }
+    }
+    for a in 0..s.n_agents() {
+        for (x, y) in s.future_positions(a, t0) {
+            canvas.plot_soft(x, y, char::from_digit(a as u32 % 10, 10).unwrap());
+        }
+    }
+    for (a, st) in s.states[t0].iter().enumerate() {
+        canvas.plot(st.pose.x, st.pose.y, if a == 0 { 'R' } else { 'A' });
+    }
+    canvas.to_string_framed()
+}
+
+/// Convenience used by tests: does the rendered scene contain glyph?
+pub fn contains_glyph(rendered: &str, ch: char) -> bool {
+    rendered.chars().any(|c| c == ch)
+}
+
+#[allow(dead_code)]
+fn _pose_debug(p: &Pose) -> String {
+    format!("({:.1}, {:.1}, {:.2})", p.x, p.y, p.theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::ScenarioGenerator;
+
+    #[test]
+    fn canvas_plots_inside_only() {
+        let mut c = Canvas::new(20, 10, 1.0, (0.0, 0.0));
+        c.plot(0.0, 0.0, 'X');
+        c.plot(1e9, 1e9, 'Y'); // out of bounds: ignored
+        let s = c.to_string_framed();
+        assert!(s.contains('X'));
+        assert!(!s.contains('Y'));
+        // frame is intact
+        assert_eq!(s.lines().count(), 12);
+    }
+
+    #[test]
+    fn soft_plot_does_not_overwrite() {
+        let mut c = Canvas::new(8, 4, 1.0, (0.0, 0.0));
+        c.plot(0.0, 0.0, 'A');
+        c.plot_soft(0.0, 0.0, 'B');
+        assert!(c.to_string_framed().contains('A'));
+        assert!(!c.to_string_framed().contains('B'));
+    }
+
+    #[test]
+    fn scenario_render_has_robot_and_map() {
+        let gen = ScenarioGenerator::new(SimConfig::default());
+        let s = gen.generate(4);
+        let r = render_scenario(&s, 0, None, 72, 24);
+        assert!(contains_glyph(&r, 'R'), "robot visible:\n{r}");
+        assert!(contains_glyph(&r, '.'), "lanes visible");
+    }
+
+    #[test]
+    fn future_render_shows_trajectories() {
+        let cfg = SimConfig::default();
+        let gen = ScenarioGenerator::new(cfg.clone());
+        let s = gen.generate(4);
+        let r = render_futures(&s, cfg.history_steps - 1, 72, 24);
+        // at least one agent's digit trail appears
+        assert!((0..6).any(|a| contains_glyph(&r, char::from_digit(a, 10).unwrap())), "{r}");
+    }
+
+    #[test]
+    fn heading_glyphs_cover_circle() {
+        let east = heading_glyph(0.0);
+        let north = heading_glyph(std::f64::consts::FRAC_PI_2);
+        let west = heading_glyph(std::f64::consts::PI);
+        let south = heading_glyph(-std::f64::consts::FRAC_PI_2);
+        assert_eq!(east, '>');
+        assert_eq!(north, '^');
+        assert_eq!(west, '<');
+        assert_eq!(south, 'v');
+    }
+}

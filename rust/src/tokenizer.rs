@@ -1,0 +1,387 @@
+//! Scene tokenization: map elements + agent-timestep states -> the
+//! (feature, pose, timestep, target) arrays the AOT model consumes, plus
+//! the discrete action codebook (paper Sec. IV-B).
+//!
+//! Conventions shared with `python/compile/model.py` (via config):
+//! * token order: `n_map_tokens` map tokens, then agent tokens ordered by
+//!   (history step, agent index);
+//! * map tokens carry visibility timestep -1 (visible to everyone), agent
+//!   tokens their history step; padding would carry `PAD_T`;
+//! * poses are expressed in the robot frame (agent 0 at the last history
+//!   step) and downscaled by `pos_scale` so |p| <= ~4 (paper downscaling);
+//! * features are frame-invariant (no absolute coordinates leak in).
+
+use crate::config::{ModelConfig, SimConfig};
+use crate::geometry::Pose;
+use crate::sim::agent::{KinematicAction, MAX_ACCEL, MAX_YAW_RATE};
+use crate::sim::{AgentKind, AgentState, MapElement, MapElementKind, Scenario};
+
+/// Visibility timestep for padding tokens (mirrors flash_sdpa.PAD_T).
+pub const PAD_T: i32 = 1 << 30;
+/// Visibility timestep for map tokens.
+pub const MAP_T: i32 = -1;
+/// Target value meaning "no loss at this token".
+pub const NO_TARGET: i32 = -1;
+
+/// Uniform (accel x yaw-rate) action grid.
+#[derive(Clone, Copy, Debug)]
+pub struct ActionCodebook {
+    pub n_accel: usize,
+    pub n_yaw: usize,
+}
+
+impl ActionCodebook {
+    /// 8 x 8 = 64 actions, matching `ModelConfig::n_actions`.
+    pub fn default_for(n_actions: usize) -> ActionCodebook {
+        let side = (n_actions as f64).sqrt().round() as usize;
+        assert_eq!(side * side, n_actions, "n_actions must be a square");
+        ActionCodebook {
+            n_accel: side,
+            n_yaw: side,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_accel * self.n_yaw
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn bin(v: f64, lo: f64, hi: f64, n: usize) -> usize {
+        let t = ((v - lo) / (hi - lo) * n as f64).floor();
+        (t.max(0.0) as usize).min(n - 1)
+    }
+
+    fn center(i: usize, lo: f64, hi: f64, n: usize) -> f64 {
+        lo + (i as f64 + 0.5) * (hi - lo) / n as f64
+    }
+
+    /// Continuous action -> discrete id.
+    pub fn encode(&self, a: &KinematicAction) -> usize {
+        let ia = Self::bin(a.accel, -MAX_ACCEL, MAX_ACCEL, self.n_accel);
+        let iy = Self::bin(a.yaw_rate, -MAX_YAW_RATE, MAX_YAW_RATE, self.n_yaw);
+        ia * self.n_yaw + iy
+    }
+
+    /// Discrete id -> bin-center continuous action.
+    pub fn decode(&self, id: usize) -> KinematicAction {
+        let ia = id / self.n_yaw;
+        let iy = id % self.n_yaw;
+        KinematicAction {
+            accel: Self::center(ia, -MAX_ACCEL, MAX_ACCEL, self.n_accel),
+            yaw_rate: Self::center(iy, -MAX_YAW_RATE, MAX_YAW_RATE, self.n_yaw),
+        }
+    }
+}
+
+/// One tokenized scene, ready to batch into the model.
+#[derive(Clone, Debug)]
+pub struct TokenizedScene {
+    /// Row-major (n_tokens, feat_dim).
+    pub feat: Vec<f32>,
+    /// Row-major (n_tokens, 3) — model units, robot frame.
+    pub pose: Vec<f32>,
+    /// (n_tokens,) visibility timesteps.
+    pub tq: Vec<i32>,
+    /// (n_tokens,) training targets (NO_TARGET where unlabeled).
+    pub target: Vec<i32>,
+    /// Robot frame used (world pose), needed to map outputs back.
+    pub frame: Pose,
+    pub n_map: usize,
+    pub n_agents: usize,
+    pub history_steps: usize,
+}
+
+impl TokenizedScene {
+    /// Token index of (history step t, agent a).
+    pub fn agent_token(&self, t: usize, a: usize) -> usize {
+        self.n_map + t * self.n_agents + a
+    }
+
+    /// Tokens whose predictions drive the rollout: last history step.
+    pub fn frontier_tokens(&self) -> Vec<usize> {
+        (0..self.n_agents)
+            .map(|a| self.agent_token(self.history_steps - 1, a))
+            .collect()
+    }
+}
+
+/// The tokenizer: holds the layout config and the action codebook.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub sim: SimConfig,
+    pub feat_dim: usize,
+    pub codebook: ActionCodebook,
+}
+
+impl Tokenizer {
+    pub fn new(model: &ModelConfig, sim: &SimConfig) -> Tokenizer {
+        Tokenizer {
+            sim: sim.clone(),
+            feat_dim: model.feat_dim,
+            codebook: ActionCodebook::default_for(model.n_actions),
+        }
+    }
+
+    /// World pose -> model pose (robot frame + downscale).
+    pub fn to_model_frame(&self, frame: &Pose, world: &Pose) -> Pose {
+        let rel = frame.relative_to(world);
+        Pose {
+            x: rel.x * self.sim.pos_scale,
+            y: rel.y * self.sim.pos_scale,
+            theta: rel.theta,
+        }
+    }
+
+    /// Model-frame position -> world position.
+    pub fn to_world(&self, frame: &Pose, mx: f64, my: f64) -> (f64, f64) {
+        frame.transform_point(mx / self.sim.pos_scale, my / self.sim.pos_scale)
+    }
+
+    fn map_features(&self, e: &MapElement, out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        match e.kind {
+            MapElementKind::Lane => out[3] = 1.0,
+            MapElementKind::Crosswalk => out[4] = 1.0,
+            MapElementKind::Signal => out[5] = 1.0,
+        }
+        out[11] = (e.curvature * 20.0) as f32;
+        out[12] = (e.speed_limit / 20.0) as f32;
+        out[13] = e.signal_state as f32;
+        out[15] = 1.0;
+    }
+
+    fn agent_features(&self, a: &AgentState, out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        match a.kind {
+            AgentKind::Vehicle => out[0] = 1.0,
+            AgentKind::Pedestrian => out[1] = 1.0,
+            AgentKind::Cyclist => out[2] = 1.0,
+        }
+        out[6] = (a.speed / 10.0) as f32;
+        out[7] = (a.length / 10.0) as f32;
+        out[8] = (a.width / 10.0) as f32;
+        out[9] = (a.last_action.accel / MAX_ACCEL) as f32;
+        out[10] = (a.last_action.yaw_rate / MAX_YAW_RATE) as f32;
+        out[14] = 1.0;
+        out[15] = 1.0;
+    }
+
+    /// Tokenize an arbitrary history window.  `window[t][a]` is agent `a`
+    /// at history step `t` (len == `sim.history_steps`); `targets[t][a]`
+    /// optionally labels the action taken from that state.
+    pub fn tokenize_window(
+        &self,
+        map_elements: &[MapElement],
+        window: &[Vec<AgentState>],
+        targets: Option<&[Vec<KinematicAction>]>,
+    ) -> TokenizedScene {
+        let h = self.sim.history_steps;
+        assert_eq!(window.len(), h, "window length");
+        let n_agents = window[0].len();
+        let n_map = map_elements.len();
+        let n_tokens = n_map + h * n_agents;
+        let frame = window[h - 1][0].pose; // robot at latest step
+
+        let mut feat = vec![0.0f32; n_tokens * self.feat_dim];
+        let mut pose = vec![0.0f32; n_tokens * 3];
+        let mut tq = vec![0i32; n_tokens];
+        let mut target = vec![NO_TARGET; n_tokens];
+
+        for (i, e) in map_elements.iter().enumerate() {
+            self.map_features(e, &mut feat[i * self.feat_dim..(i + 1) * self.feat_dim]);
+            let mp = self.to_model_frame(&frame, &e.pose);
+            pose[i * 3] = mp.x as f32;
+            pose[i * 3 + 1] = mp.y as f32;
+            pose[i * 3 + 2] = mp.theta as f32;
+            tq[i] = MAP_T;
+        }
+
+        for t in 0..h {
+            for a in 0..n_agents {
+                let idx = n_map + t * n_agents + a;
+                let st = &window[t][a];
+                self.agent_features(
+                    st,
+                    &mut feat[idx * self.feat_dim..(idx + 1) * self.feat_dim],
+                );
+                let mp = self.to_model_frame(&frame, &st.pose);
+                pose[idx * 3] = mp.x as f32;
+                pose[idx * 3 + 1] = mp.y as f32;
+                pose[idx * 3 + 2] = mp.theta as f32;
+                tq[idx] = t as i32;
+                if let Some(acts) = targets {
+                    target[idx] = self.codebook.encode(&acts[t][a]) as i32;
+                }
+            }
+        }
+
+        TokenizedScene {
+            feat,
+            pose,
+            tq,
+            target,
+            frame,
+            n_map,
+            n_agents,
+            history_steps: h,
+        }
+    }
+
+    /// Tokenize a training example from a scenario: the history window
+    /// ending at step `t0` (inclusive), targets from the recorded actions.
+    pub fn tokenize_scenario(&self, s: &Scenario, t0: usize) -> TokenizedScene {
+        let h = self.sim.history_steps;
+        assert!(t0 + 1 >= h, "not enough history before t0");
+        let window: Vec<Vec<AgentState>> =
+            (t0 + 1 - h..=t0).map(|t| s.states[t].clone()).collect();
+        let targets: Vec<Vec<KinematicAction>> =
+            (t0 + 1 - h..=t0).map(|t| s.actions[t].clone()).collect();
+        self.tokenize_window(&s.map_elements, &window, Some(&targets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::prng::Rng;
+    use crate::sim::ScenarioGenerator;
+
+    fn test_model_config() -> ModelConfig {
+        ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 48,
+            d_model: 96,
+            d_ff: 192,
+            n_tokens: 64,
+            feat_dim: 16,
+            n_actions: 64,
+            fourier_f: 12,
+            spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+            batch_size: 8,
+            learning_rate: 3e-4,
+            map_timestep: -1,
+            param_names: vec![],
+        }
+    }
+
+    #[test]
+    fn codebook_roundtrip_within_one_bin() {
+        let cb = ActionCodebook::default_for(64);
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let a = KinematicAction {
+                accel: rng.range(-MAX_ACCEL, MAX_ACCEL),
+                yaw_rate: rng.range(-MAX_YAW_RATE, MAX_YAW_RATE),
+            };
+            let id = cb.encode(&a);
+            assert!(id < 64);
+            let back = cb.decode(id);
+            assert!((back.accel - a.accel).abs() <= MAX_ACCEL / 8.0 + 1e-9);
+            assert!(
+                (back.yaw_rate - a.yaw_rate).abs() <= MAX_YAW_RATE / 8.0 + 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn codebook_decode_encode_is_identity() {
+        let cb = ActionCodebook::default_for(64);
+        for id in 0..64 {
+            assert_eq!(cb.encode(&cb.decode(id)), id);
+        }
+    }
+
+    #[test]
+    fn tokenized_scene_layout() {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        let s = ScenarioGenerator::new(sim.clone()).generate(3);
+        let ts = tok.tokenize_scenario(&s, sim.history_steps - 1 + 4);
+        let n_tokens = sim.tokens_per_scene();
+        assert_eq!(ts.feat.len(), n_tokens * 16);
+        assert_eq!(ts.pose.len(), n_tokens * 3);
+        assert_eq!(ts.tq.len(), n_tokens);
+        // map tokens first, timestep -1, no target
+        for i in 0..sim.n_map_tokens {
+            assert_eq!(ts.tq[i], MAP_T);
+            assert_eq!(ts.target[i], NO_TARGET);
+        }
+        // agent tokens have valid targets + increasing timesteps
+        for t in 0..sim.history_steps {
+            for a in 0..sim.n_agents {
+                let idx = ts.agent_token(t, a);
+                assert_eq!(ts.tq[idx], t as i32);
+                assert!(ts.target[idx] >= 0 && ts.target[idx] < 64);
+            }
+        }
+    }
+
+    #[test]
+    fn robot_pose_is_origin_in_model_frame() {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        let s = ScenarioGenerator::new(sim.clone()).generate(9);
+        let ts = tok.tokenize_scenario(&s, sim.history_steps - 1);
+        let idx = ts.agent_token(sim.history_steps - 1, 0);
+        assert!(ts.pose[idx * 3].abs() < 1e-6);
+        assert!(ts.pose[idx * 3 + 1].abs() < 1e-6);
+        assert!(ts.pose[idx * 3 + 2].abs() < 1e-6);
+    }
+
+    #[test]
+    fn positions_are_downscaled() {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        for seed in 0..5 {
+            let s = ScenarioGenerator::new(sim.clone()).generate(seed);
+            let ts = tok.tokenize_scenario(&s, sim.history_steps - 1);
+            for i in 0..ts.tq.len() {
+                let r = (ts.pose[i * 3].powi(2) + ts.pose[i * 3 + 1].powi(2)).sqrt();
+                assert!(r < 10.0, "|p|={r} too large (downscale broken?)");
+            }
+        }
+    }
+
+    #[test]
+    fn world_roundtrip() {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        let frame = Pose::new(12.0, -7.0, 0.8);
+        let world = Pose::new(20.0, 3.0, -0.4);
+        let m = tok.to_model_frame(&frame, &world);
+        let (wx, wy) = tok.to_world(&frame, m.x, m.y);
+        assert!((wx - world.x).abs() < 1e-9);
+        assert!((wy - world.y).abs() < 1e-9);
+    }
+
+    #[test]
+    fn features_are_frame_invariant() {
+        // identical scene content expressed in different world frames must
+        // produce identical features (only poses change).
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        let s = ScenarioGenerator::new(sim.clone()).generate(11);
+        let ts = tok.tokenize_scenario(&s, sim.history_steps - 1);
+        // shift the whole world by a rigid transform
+        let mut s2 = s.clone();
+        let z = Pose::new(100.0, -50.0, 1.0);
+        for step in s2.states.iter_mut() {
+            for a in step.iter_mut() {
+                a.pose = z.compose(&a.pose);
+            }
+        }
+        for e in s2.map_elements.iter_mut() {
+            e.pose = z.compose(&e.pose);
+        }
+        let ts2 = tok.tokenize_scenario(&s2, sim.history_steps - 1);
+        assert_eq!(ts.feat, ts2.feat, "features must not leak absolute pose");
+        for (a, b) in ts.pose.iter().zip(ts2.pose.iter()) {
+            assert!((a - b).abs() < 1e-4, "poses in robot frame match");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Failure-injection and edge-case tests for the non-PJRT layers: the
+//! system must fail loudly and cleanly, never silently.
+
+use se2attn::config::{Method, SimConfig, SystemConfig};
+use se2attn::coordinator::batcher::{Batcher, BatcherConfig};
+use se2attn::dataset;
+use se2attn::jsonio::Json;
+use se2attn::prng::Rng;
+use se2attn::proplite::check;
+use se2attn::runtime::Manifest;
+use se2attn::tokenizer::{ActionCodebook, Tokenizer};
+
+#[test]
+fn system_config_missing_dir_is_loud() {
+    let err = SystemConfig::load("/nonexistent/artifacts").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "actionable message: {msg}");
+}
+
+#[test]
+fn system_config_rejects_corrupt_index() {
+    let dir = std::env::temp_dir().join("se2attn_corrupt_index");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("index.json"), "{not json").unwrap();
+    assert!(SystemConfig::load(&dir).is_err());
+    std::fs::write(dir.join("index.json"), r#"{"artifacts": []}"#).unwrap();
+    let err = SystemConfig::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("config"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_rejects_malformed_entries() {
+    for bad in [
+        r#"{"inputs": [], "outputs": []}"#,                      // no name
+        r#"{"name": "x", "outputs": []}"#,                       // no inputs
+        r#"{"name": "x", "inputs": [{"name": "a"}], "outputs": []}"#, // no shape
+        r#"{"name":"x","inputs":[{"name":"a","shape":[1],"dtype":"bf16"}],"outputs":[]}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn shard_reader_survives_truncation_fuzz() {
+    // write a valid shard, then truncate at every prefix length band:
+    // must error, never panic or return wrong data silently.
+    let sim = SimConfig::default();
+    let model = test_model_config();
+    let tok = Tokenizer::new(&model, &sim);
+    let ex = dataset::generate_examples(&sim, &tok, 0, 3);
+    let dir = std::env::temp_dir().join("se2attn_fuzz_shard");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("full.shard");
+    dataset::write_shard(&path, &ex).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let mut rng = Rng::new(0);
+    for _ in 0..40 {
+        let cut = rng.below(bytes.len().max(1));
+        let trunc_path = dir.join("trunc.shard");
+        std::fs::write(&trunc_path, &bytes[..cut]).unwrap();
+        match dataset::read_shard(&trunc_path) {
+            Ok(got) => {
+                // only acceptable if truncation landed beyond all examples
+                assert_eq!(got, ex, "truncated read must not fabricate data");
+            }
+            Err(_) => {}
+        }
+    }
+    // bit-flip fuzz on the header
+    for i in 0..12.min(bytes.len()) {
+        let mut corrupted = bytes.clone();
+        corrupted[i] ^= 0xFF;
+        let p = dir.join("corrupt.shard");
+        std::fs::write(&p, &corrupted).unwrap();
+        let _ = dataset::read_shard(&p); // must not panic
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batcher_under_storm_conserves_and_rejects() {
+    check("batcher storm", 20, |rng| {
+        let cfg = BatcherConfig {
+            batch_size: 1 + rng.below(4),
+            max_wait: std::time::Duration::from_millis(0),
+            max_queue: 1 + rng.below(16),
+        };
+        let cap = cfg.max_queue;
+        let mut b: Batcher<usize> = Batcher::new(cfg);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..100 {
+            match b.push(i) {
+                Ok(()) => accepted.push(i),
+                Err(_) => rejected += 1,
+            }
+            // occasionally drain
+            if rng.bernoulli(0.3) {
+                let far = std::time::Instant::now()
+                    + std::time::Duration::from_secs(1);
+                while let Some(ready) = b.poll(far) {
+                    for item in ready.items {
+                        let pos = accepted.iter().position(|&x| x == item);
+                        match pos {
+                            Some(p) if p == 0 => {
+                                accepted.remove(0);
+                            }
+                            _ => return Err(format!("out of order: {item}")),
+                        }
+                    }
+                }
+            }
+            if b.len() > cap {
+                return Err("queue exceeded cap".into());
+            }
+        }
+        // conservation is the invariant; rejections happen whenever the
+        // storm outpaces draining (cannot be guaranteed per-seed, so only
+        // sanity-check that counting is consistent)
+        if rejected + accepted.len() + 0 > 100 {
+            return Err("accounting error".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn codebook_is_total_over_i32_range() {
+    let cb = ActionCodebook::default_for(64);
+    // decode must be safe for any id the model could emit
+    for id in 0..64 {
+        let a = cb.decode(id);
+        assert!(a.accel.is_finite() && a.yaw_rate.is_finite());
+    }
+    // encode must be safe for wild actions (clamps to edge bins)
+    for (acc, yaw) in [(1e9, -1e9), (f64::MIN, f64::MAX), (0.0, 0.0)] {
+        let id = cb.encode(&se2attn::sim::KinematicAction {
+            accel: acc,
+            yaw_rate: yaw,
+        });
+        assert!(id < 64);
+    }
+}
+
+#[test]
+fn json_parser_never_panics_on_fuzz() {
+    let mut rng = Rng::new(9);
+    let alphabet = b"{}[]\",:.0123456789eE+-truefalsenull \\n";
+    for _ in 0..2000 {
+        let len = rng.below(64);
+        let s: String = (0..len)
+            .map(|_| *rng.choice(alphabet) as char)
+            .collect();
+        let _ = Json::parse(&s); // must not panic
+    }
+}
+
+#[test]
+fn tokenizer_rejects_short_windows() {
+    let sim = SimConfig::default();
+    let model = test_model_config();
+    let tok = Tokenizer::new(&model, &sim);
+    let gen = se2attn::sim::ScenarioGenerator::new(sim.clone());
+    let s = gen.generate(0);
+    let result = std::panic::catch_unwind(|| {
+        // t0 too small for the history window: must assert, not corrupt
+        tok.tokenize_scenario(&s, 2)
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn router_rejection_counting() {
+    let mut r: se2attn::coordinator::Router<u8> = se2attn::coordinator::Router::new();
+    r.deploy(Method::Se2Fourier, 1);
+    assert!(r.route(Method::Abs).is_none());
+    assert!(r.route(Method::Abs).is_none());
+    assert_eq!(r.rejected.get(), 2);
+    assert_eq!(r.routed.get(), 0);
+}
+
+fn test_model_config() -> se2attn::config::ModelConfig {
+    se2attn::config::ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 48,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: 64,
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: 12,
+        spatial_scales: vec![1.0, 0.5],
+        batch_size: 4,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    }
+}
