@@ -1,0 +1,227 @@
+//! Per-step decode latency: cached incremental decode vs full-window
+//! recompute, across history-window sizes (DESIGN.md §10).
+//!
+//! Two layers are measured:
+//!
+//! 1. **Attention feature path** — one se2fourier head at the paper's
+//!    d=48, F=12.  The full-recompute step re-projects every context token
+//!    (Algorithm 2 from scratch); the cached step appends only the
+//!    frontier rows to an [`IncrementalAttention`] engine, attends through
+//!    the same flash kernel, and amortizes an SE(2) re-anchor every
+//!    `REANCHOR_EVERY` steps to stay inside the |p| <= ~4 accuracy band.
+//! 2. **Tokenization path** — full `tokenize_window` vs the serving
+//!    [`KvCachePool`] hit path (frontier-only tokenization + exact pose
+//!    re-anchor at emit).
+//!
+//! Expected shape: the cached step's projection cost is O(new tokens)
+//! instead of O(window), so it wins for every window larger than the
+//! frontier itself and the gap widens with the window; the acceptance
+//! check prints per-row verdicts for window >= 32.
+
+use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::{linear, AttnProblem};
+use se2attn::benchlib::{bench, record_row, Table};
+use se2attn::config::{Method, SimConfig};
+use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
+use se2attn::coordinator::telemetry::CacheStats;
+use se2attn::geometry::Pose;
+use se2attn::jsonio::Json;
+use se2attn::prng::Rng;
+use se2attn::sim::ScenarioGenerator;
+use se2attn::tokenizer::Tokenizer;
+
+const D: usize = 48;
+const F: usize = 12;
+/// Frontier tokens appended + queried per decode step.
+const N_NEW: usize = 8;
+/// Steps between cache re-anchors (drift re-centering).
+const REANCHOR_EVERY: usize = 32;
+
+struct Tokens {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    q: Vec<f32>,
+    poses: Vec<Pose>,
+    t: Vec<i32>,
+}
+
+fn tokens(rng: &mut Rng, n: usize, step: i32) -> Tokens {
+    Tokens {
+        k: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        v: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        q: (0..n * D).map(|_| rng.normal() as f32).collect(),
+        poses: (0..n)
+            .map(|_| Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.1, 3.1)))
+            .collect(),
+        t: (0..n).map(|_| step).collect(),
+    }
+}
+
+fn attention_path(full_mode: bool) {
+    let scales = [1.0, 0.5, 0.25, 0.125];
+    let sizes: &[usize] = if full_mode {
+        &[16, 32, 64, 128, 256, 512, 1024]
+    } else {
+        &[16, 32, 64, 128, 256]
+    };
+    let mut table = Table::new(&[
+        "window",
+        "full ms/step",
+        "cached ms/step",
+        "speedup",
+        "window>=32 verdict",
+    ]);
+    println!(
+        "== attention feature path: se2fourier d={D} F={F}, {N_NEW} frontier \
+         tokens/step, re-anchor every {REANCHOR_EVERY} steps =="
+    );
+    for &m in sizes {
+        let mut rng = Rng::new(m as u64 ^ 0xD15C);
+        let ctx = tokens(&mut rng, m, 0);
+        let new = tokens(&mut rng, N_NEW, 1);
+
+        // ---- full recompute: Algorithm 2 over the whole window ----------
+        let full = bench(2, 30, std::time::Duration::from_secs(3), || {
+            let p = AttnProblem {
+                method: Method::Se2Fourier,
+                d: D,
+                fourier_f: F,
+                scales: &scales,
+                q: &new.q,
+                k: &ctx.k,
+                v: &ctx.v,
+                pose_q: &new.poses,
+                pose_k: &ctx.poses,
+                tq: &new.t,
+                tk: &ctx.t,
+            };
+            std::hint::black_box(linear::attention(&p).out);
+        });
+
+        // ---- cached: append frontier + attend, amortized re-anchor ------
+        let mut eng = IncrementalAttention::new(IncrementalConfig {
+            method: Method::Se2Fourier,
+            d: D,
+            fourier_f: F,
+            scales: scales.to_vec(),
+        });
+        eng.append(&ctx.k, &ctx.v, &ctx.poses, &ctx.t);
+        let mut step = 0usize;
+        let drift = Pose::new(0.02, -0.01, 0.005);
+        let cached = bench(2, 30, std::time::Duration::from_secs(3), || {
+            eng.evict_front(N_NEW);
+            eng.append(&new.k, &new.v, &new.poses, &new.t);
+            std::hint::black_box(eng.attend(&new.q, &new.poses, &new.t).out);
+            step += 1;
+            if step % REANCHOR_EVERY == 0 {
+                eng.re_anchor(&drift).expect("se2fourier re-anchor");
+            }
+        });
+
+        let speedup = full.mean_ms() / cached.mean_ms();
+        let verdict = if m < 32 {
+            "-".to_string()
+        } else if speedup > 1.0 {
+            "PASS (cached faster)".to_string()
+        } else {
+            format!("FAIL ({speedup:.2}x)")
+        };
+        table.row(vec![
+            m.to_string(),
+            format!("{:.3}", full.mean_ms()),
+            format!("{:.3}", cached.mean_ms()),
+            format!("{speedup:.2}x"),
+            verdict,
+        ]);
+        record_row(
+            "decode_throughput",
+            Json::obj(vec![
+                ("path", Json::Str("attention".into())),
+                ("window", Json::Num(m as f64)),
+                ("n_new", Json::Num(N_NEW as f64)),
+                ("full_ms", Json::Num(full.mean_ms())),
+                ("cached_ms", Json::Num(cached.mean_ms())),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        );
+    }
+    table.print();
+}
+
+fn tokenization_path() {
+    let sim = SimConfig::default();
+    let model = se2attn::config::ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: D,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: sim.tokens_per_scene(),
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: F,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    };
+    let tok = Tokenizer::new(&model, &sim);
+    let s = ScenarioGenerator::new(sim.clone()).generate(11);
+    let h = sim.history_steps;
+    let window: Vec<Vec<se2attn::sim::AgentState>> =
+        (0..h).map(|t| s.states[t].clone()).collect();
+
+    println!(
+        "\n== tokenization path: {} map + {} agents x {} steps ==",
+        sim.n_map_tokens, sim.n_agents, h
+    );
+    // Both paths slide the window every iteration, as a real rollout does
+    // (pool.step's hit path advances the cached window by window.last(),
+    // so calling it with an unchanged window would violate its contract).
+    let slide = |w: &mut Vec<Vec<se2attn::sim::AgentState>>, t: &mut usize| {
+        w.remove(0);
+        w.push(s.states[*t % s.n_steps()].clone());
+        *t += 1;
+    };
+    let mut wf = window.clone();
+    let mut tf = h;
+    let full = bench(5, 200, std::time::Duration::from_secs(2), || {
+        std::hint::black_box(tok.tokenize_window(&s.map_elements, &wf, None));
+        slide(&mut wf, &mut tf);
+    });
+
+    let pool = KvCachePool::new(
+        CacheConfig::default(),
+        std::sync::Arc::new(CacheStats::default()),
+    );
+    let key = SessionKey { scene: s.seed, t0: h as u32 - 1, sample: 0 };
+    let mut wc = window.clone();
+    let mut tc = h;
+    pool.step(key, &tok, &s.map_elements, &wc); // warm (miss)
+    slide(&mut wc, &mut tc);
+    let cached = bench(5, 200, std::time::Duration::from_secs(2), || {
+        std::hint::black_box(pool.step(key, &tok, &s.map_elements, &wc));
+        slide(&mut wc, &mut tc);
+    });
+    let speedup = full.mean_ns / cached.mean_ns;
+    let mut table = Table::new(&["path", "us/step", "speedup"]);
+    table.row(vec!["full tokenize_window".into(), format!("{:.1}", full.mean_ns / 1e3), "1.00x".into()]);
+    table.row(vec!["cached pool.step (hit)".into(), format!("{:.1}", cached.mean_ns / 1e3), format!("{speedup:.2}x")]);
+    table.print();
+    record_row(
+        "decode_throughput",
+        Json::obj(vec![
+            ("path", Json::Str("tokenization".into())),
+            ("full_us", Json::Num(full.mean_ns / 1e3)),
+            ("cached_us", Json::Num(cached.mean_ns / 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ]),
+    );
+}
+
+fn main() {
+    let full_mode = std::env::var("SE2ATTN_BENCH_FULL").is_ok();
+    attention_path(full_mode);
+    tokenization_path();
+}

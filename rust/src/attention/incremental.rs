@@ -1,0 +1,718 @@
+//! Incremental decode engine: an append-only cache of pre-projected
+//! `phi_k k` / `phi_k v` feature rows for streaming autoregressive rollout
+//! (DESIGN.md §10).
+//!
+//! The paper's factorization (Eq. 19) anchors every projected key/value row
+//! to a *single global frame*: unlike pairwise architectures, the rows stay
+//! valid as the scene grows, so a decode step only has to
+//!
+//! 1. [`IncrementalAttention::append`] the newly tokenized frontier tokens
+//!    (O(new) projection work),
+//! 2. [`IncrementalAttention::attend`] the new queries against the cached
+//!    rows through the same flash/online-softmax path as Algorithm 2
+//!    ([`super::linear::flash_sdpa`]), and
+//! 3. [`IncrementalAttention::evict_front`] rows that slid out of the
+//!    history window,
+//!
+//! instead of re-projecting all `m` context tokens — O(window) → O(new)
+//! per step.
+//!
+//! ## Re-anchoring
+//!
+//! The cache's reference frame is fixed at construction.  As the rollout
+//! advances, token positions drift away from the anchor and eventually
+//! leave the |p| <= ~4 band where the Fourier truncation is accurate
+//! (paper Fig. 3).  [`IncrementalAttention::re_anchor`] re-centers the
+//! *cached features themselves* under a global SE(2) transform `g`
+//! (every cached key pose p becomes g∘p) without touching raw k/v:
+//!
+//! * **se2rep** — exact: psi is a homomorphism, so each 3-block is
+//!   left-multiplied by psi(g) (scaled per block).
+//! * **rope2d** — exact for translations (the method is not
+//!   rotation-equivariant; rotating re-anchors are rejected).
+//! * **se2fourier** — the theta pair rotates exactly by rho(g_theta); each
+//!   frequency bank is a truncated Fourier series in the quadrature angle
+//!   z, and the new bank is `e^{i u_g(z)} * psi(z - g_theta)` — an
+//!   argument shift (exact on the truncated series, which is bandlimited
+//!   below the 2F-point grid's Nyquist rate) followed by modulation with
+//!   the anchor shift's own phase function and re-projection through the
+//!   same 2F-point quadrature.  Error is bounded by the series tail beyond
+//!   frequency F/2, i.e. the same O(J_{F/2}(r)) envelope as the
+//!   factorization itself: negligible (< 1e-6) for |p| <= 2 at F >= 24,
+//!   and within the paper's fp16 working band at the production F = 12.
+//!
+//! Derivation for the frequency banks: a cached X bank stores coefficients
+//! A, B of Re/Im of psi(z) = (k0 + i k1) e^{i u_p(z)} with
+//! u_p(z) = x cos z + y sin z.  For p' = g∘p,
+//! u_{p'}(z) = u_g(z) + u_p(z - g_theta), hence
+//! psi'(z) = e^{i u_g(z)} psi(z - g_theta).  The Y bank is the same with
+//! u^Y(z) = u^X(z + pi/2).
+
+use anyhow::{bail, Result};
+
+use crate::config::Method;
+use crate::fourier::{basis_fn, quadrature_grid, QuadratureTable};
+use crate::geometry::Pose;
+
+use super::linear::{flash_sdpa, proj_dim};
+use super::projections as proj;
+use super::AttnOutput;
+
+/// Static description of one incremental attention head.
+#[derive(Clone, Debug)]
+pub struct IncrementalConfig {
+    pub method: Method,
+    /// Per-head feature width d (multiple of 6 for se2fourier, 4 for
+    /// rope2d, 3 for se2rep) — same convention as [`super::AttnProblem`].
+    pub d: usize,
+    /// Fourier basis size F (se2fourier only).
+    pub fourier_f: usize,
+    /// Spatial scale ladder, cycled across blocks.
+    pub scales: Vec<f64>,
+}
+
+impl IncrementalConfig {
+    fn validate(&self) {
+        assert!(!self.scales.is_empty(), "empty scale ladder");
+        match self.method {
+            Method::Se2Fourier => assert_eq!(self.d % 6, 0, "d % 6 for se2fourier"),
+            Method::Rope2d => assert_eq!(self.d % 4, 0, "d % 4 for rope2d"),
+            Method::Se2Rep => assert_eq!(self.d % 3, 0, "d % 3 for se2rep"),
+            Method::Abs => {}
+        }
+    }
+}
+
+/// The engine: cached projected rows plus the poses they were anchored at.
+pub struct IncrementalAttention {
+    cfg: IncrementalConfig,
+    /// Projected per-head width c.
+    c: usize,
+    /// Algorithm 2 prefactor (c/d)^(1/4), baked into q~ and k~.
+    pref: f32,
+    /// Cached `phi_k k` rows, row-major (m, c).
+    kt: Vec<f32>,
+    /// Cached `phi_k v` rows, row-major (m, c).
+    vt: Vec<f32>,
+    /// Visibility timesteps of the cached rows.
+    tk: Vec<i32>,
+    /// Anchor-frame poses of the cached rows (for drift policy and
+    /// re-anchor bookkeeping; raw k/v are *not* retained).
+    poses: Vec<Pose>,
+    key_scratch: Option<proj::Se2fKeyScratch>,
+}
+
+impl IncrementalAttention {
+    pub fn new(cfg: IncrementalConfig) -> IncrementalAttention {
+        cfg.validate();
+        let c = proj_dim(cfg.method, cfg.d, cfg.fourier_f);
+        let pref = ((c as f64) / (cfg.d as f64)).powf(0.25) as f32;
+        let key_scratch = match cfg.method {
+            Method::Se2Fourier => Some(proj::Se2fKeyScratch::new(cfg.fourier_f)),
+            _ => None,
+        };
+        IncrementalAttention {
+            cfg,
+            c,
+            pref,
+            kt: Vec::new(),
+            vt: Vec::new(),
+            tk: Vec::new(),
+            poses: Vec::new(),
+            key_scratch,
+        }
+    }
+
+    /// Number of cached context rows.
+    pub fn len(&self) -> usize {
+        self.tk.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tk.is_empty()
+    }
+
+    /// Projected per-head width c of the cached rows.
+    pub fn proj_width(&self) -> usize {
+        self.c
+    }
+
+    /// Resident bytes of the cache (projected rows + timesteps + poses);
+    /// matches [`crate::attention::memmodel::incremental_cache_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        (self.kt.len() + self.vt.len()) * std::mem::size_of::<f32>()
+            + self.tk.len() * std::mem::size_of::<i32>()
+            + self.poses.len() * std::mem::size_of::<Pose>()
+    }
+
+    /// Largest |scale * position| over cached rows — the quantity that
+    /// must stay inside the paper's |p| <= ~4 accuracy band.  Callers
+    /// trigger [`Self::re_anchor`] when this drifts too far.
+    pub fn max_scaled_radius(&self) -> f64 {
+        let amax = self
+            .cfg
+            .scales
+            .iter()
+            .fold(0.0f64, |m, a| m.max(a.abs()));
+        self.poses
+            .iter()
+            .fold(0.0f64, |m, p| m.max(p.radius() * amax))
+    }
+
+    /// Project and append `len(t)` new context tokens (Alg. 2 line 2,
+    /// restricted to the frontier).  `k`/`v` are row-major (n_new, d).
+    pub fn append(&mut self, k: &[f32], v: &[f32], poses: &[Pose], t: &[i32]) {
+        let (d, c) = (self.cfg.d, self.c);
+        let n_new = t.len();
+        assert_eq!(k.len(), n_new * d, "k shape");
+        assert_eq!(v.len(), n_new * d, "v shape");
+        assert_eq!(poses.len(), n_new, "poses shape");
+        self.kt.reserve(n_new * c);
+        self.vt.reserve(n_new * c);
+        match self.cfg.method {
+            Method::Abs => {
+                self.kt.extend_from_slice(k);
+                self.vt.extend_from_slice(v);
+            }
+            Method::Rope2d => {
+                let start = self.kt.len();
+                self.kt.extend_from_slice(k);
+                self.vt.extend_from_slice(v);
+                for (j, p) in poses.iter().enumerate() {
+                    let r = start + j * c;
+                    proj::rope2d_project(&mut self.kt[r..r + c], p, &self.cfg.scales);
+                    proj::rope2d_project(&mut self.vt[r..r + c], p, &self.cfg.scales);
+                }
+            }
+            Method::Se2Rep => {
+                let start = self.kt.len();
+                self.kt.extend_from_slice(k);
+                self.vt.extend_from_slice(v);
+                for (j, p) in poses.iter().enumerate() {
+                    let r = start + j * c;
+                    proj::se2rep_project_k(&mut self.kt[r..r + c], p, &self.cfg.scales);
+                    proj::se2rep_project_k(&mut self.vt[r..r + c], p, &self.cfg.scales);
+                }
+            }
+            Method::Se2Fourier => {
+                let scratch = self.key_scratch.as_mut().expect("se2f scratch");
+                let mut k_row: Vec<f32> = Vec::with_capacity(c);
+                let mut v_row: Vec<f32> = Vec::with_capacity(c);
+                for (j, p) in poses.iter().enumerate() {
+                    proj::se2f_project_kv_with(
+                        scratch,
+                        &k[j * d..(j + 1) * d],
+                        &v[j * d..(j + 1) * d],
+                        p,
+                        &self.cfg.scales,
+                        self.pref,
+                        &mut k_row,
+                        &mut v_row,
+                    );
+                    self.kt.extend_from_slice(&k_row);
+                    self.vt.extend_from_slice(&v_row);
+                }
+            }
+        }
+        self.tk.extend_from_slice(t);
+        self.poses.extend_from_slice(poses);
+    }
+
+    /// Drop the `n` oldest cached rows (sliding-window eviction).
+    pub fn evict_front(&mut self, n: usize) {
+        let n = n.min(self.len());
+        self.kt.drain(..n * self.c);
+        self.vt.drain(..n * self.c);
+        self.tk.drain(..n);
+        self.poses.drain(..n);
+    }
+
+    /// Attend `len(tq)` new queries (row-major (n, d), poses in the
+    /// cache's anchor frame) against every cached row, through the same
+    /// flash/online-softmax path as Algorithm 2.
+    pub fn attend(&self, q: &[f32], pose_q: &[Pose], tq: &[i32]) -> AttnOutput {
+        let (d, c, f) = (self.cfg.d, self.c, self.cfg.fourier_f);
+        let n = tq.len();
+        assert_eq!(q.len(), n * d, "q shape");
+        assert_eq!(pose_q.len(), n, "pose_q shape");
+        let scales = &self.cfg.scales;
+
+        // ---- query pre-projection (mirrors linear::attention) ----------
+        let mut qt = vec![0.0f32; n * c];
+        match self.cfg.method {
+            Method::Abs => qt.copy_from_slice(q),
+            Method::Rope2d => {
+                qt.copy_from_slice(q);
+                for i in 0..n {
+                    proj::rope2d_project(&mut qt[i * c..(i + 1) * c], &pose_q[i], scales);
+                }
+            }
+            Method::Se2Rep => {
+                qt.copy_from_slice(q);
+                for i in 0..n {
+                    proj::se2rep_project_q(&mut qt[i * c..(i + 1) * c], &pose_q[i], scales);
+                }
+            }
+            Method::Se2Fourier => {
+                let mut row: Vec<f32> = Vec::with_capacity(c);
+                for i in 0..n {
+                    proj::se2f_project_q(
+                        &q[i * d..(i + 1) * d],
+                        &pose_q[i],
+                        scales,
+                        f,
+                        self.pref,
+                        &mut row,
+                    );
+                    qt[i * c..(i + 1) * c].copy_from_slice(&row);
+                }
+            }
+        }
+
+        // ---- flash SDPA against the cached rows -------------------------
+        let eff_scale = match self.cfg.method {
+            Method::Se2Fourier => 1.0 / (c as f64).sqrt(),
+            _ => 1.0 / (d as f64).sqrt(),
+        };
+        let mut ot = vec![0.0f32; n * c];
+        flash_sdpa(&qt, &self.kt, &self.vt, tq, &self.tk, c, eff_scale, &mut ot);
+
+        // ---- post-projection (Alg. 2 line 4) ----------------------------
+        let mut out = vec![0.0f32; n * d];
+        match self.cfg.method {
+            Method::Abs => out.copy_from_slice(&ot),
+            Method::Rope2d => {
+                out.copy_from_slice(&ot);
+                for i in 0..n {
+                    let neg = Pose {
+                        x: -pose_q[i].x,
+                        y: -pose_q[i].y,
+                        theta: 0.0,
+                    };
+                    proj::rope2d_project(&mut out[i * d..(i + 1) * d], &neg, scales);
+                }
+            }
+            Method::Se2Rep => {
+                out.copy_from_slice(&ot);
+                for i in 0..n {
+                    proj::se2rep_unproject_o(&mut out[i * d..(i + 1) * d], &pose_q[i], scales);
+                }
+            }
+            Method::Se2Fourier => {
+                let mut row: Vec<f32> = Vec::with_capacity(d);
+                for i in 0..n {
+                    proj::se2f_unproject_o(&ot[i * c..(i + 1) * c], &pose_q[i], scales, f, &mut row);
+                    out[i * d..(i + 1) * d].copy_from_slice(&row);
+                }
+            }
+        }
+
+        AttnOutput {
+            out,
+            // transients only: projected queries + projected outputs; the
+            // cache itself is resident state, reported by resident_bytes().
+            peak_temp_bytes: (qt.len() + ot.len()) * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Re-center the cache under a global SE(2) transform: every cached
+    /// key pose p becomes g∘p, and the cached feature rows are rewritten
+    /// to what projecting at g∘p would have produced — without raw k/v.
+    /// Queries must subsequently be expressed in the new frame.
+    pub fn re_anchor(&mut self, g: &Pose) -> Result<()> {
+        match self.cfg.method {
+            Method::Abs => {}
+            Method::Rope2d => {
+                if g.theta.abs() > 1e-12 {
+                    bail!(
+                        "rope2d caches support translation-only re-anchoring \
+                         (got rotation {:.3} rad): the method is not \
+                         rotation-equivariant",
+                        g.theta
+                    );
+                }
+                let scales = self.cfg.scales.clone();
+                for row in self.kt.chunks_mut(self.c) {
+                    proj::rope2d_project(row, g, &scales);
+                }
+                for row in self.vt.chunks_mut(self.c) {
+                    proj::rope2d_project(row, g, &scales);
+                }
+            }
+            Method::Se2Rep => {
+                // psi(g∘p) = psi(g) psi(p): exact left multiplication,
+                // which is precisely the key projection applied at g.
+                let scales = self.cfg.scales.clone();
+                for row in self.kt.chunks_mut(self.c) {
+                    proj::se2rep_project_k(row, g, &scales);
+                }
+                for row in self.vt.chunks_mut(self.c) {
+                    proj::se2rep_project_k(row, g, &scales);
+                }
+            }
+            Method::Se2Fourier => self.re_anchor_se2f(g),
+        }
+        for p in self.poses.iter_mut() {
+            *p = g.compose(p);
+        }
+        Ok(())
+    }
+
+    /// The se2fourier feature-space re-anchor (see module docs): exact
+    /// rotation of the theta pair; per frequency bank, argument shift by
+    /// -g_theta, modulation by the anchor shift's phase, and re-projection
+    /// through the 2F-point quadrature.
+    fn re_anchor_se2f(&mut self, g: &Pose) {
+        let f = self.cfg.fourier_f;
+        let w = proj::se2f_block_width(f);
+        let nb = self.cfg.d / 6;
+        let scales = &self.cfg.scales;
+        let table = QuadratureTable::new(f);
+        let grid = quadrature_grid(f);
+        let (st, ct) = g.theta.sin_cos();
+
+        // Token-independent tables: the basis evaluated on the shifted
+        // grid, and the modulation phase per (scale, axis, grid point).
+        let mut gshift = vec![0.0f64; 2 * f * f];
+        for (j, &z) in grid.iter().enumerate() {
+            for i in 0..f {
+                gshift[j * f + i] = basis_fn(i, z - g.theta);
+            }
+        }
+        let ns = scales.len();
+        // modulation[(s * 2 + axis) * 2F + j] = (sin, cos) of u_g at z_j
+        let mut mod_sin = vec![0.0f64; ns * 2 * 2 * f];
+        let mut mod_cos = vec![0.0f64; ns * 2 * 2 * f];
+        for (s, &a) in scales.iter().enumerate() {
+            let (gx, gy) = (a * g.x, a * g.y);
+            for (j, &z) in grid.iter().enumerate() {
+                let (sz, cz) = z.sin_cos();
+                let ux = gx * cz + gy * sz;
+                let uy = -gx * sz + gy * cz;
+                let (sx, cx) = ux.sin_cos();
+                let (sy, cy) = uy.sin_cos();
+                mod_sin[(s * 2) * 2 * f + j] = sx;
+                mod_cos[(s * 2) * 2 * f + j] = cx;
+                mod_sin[(s * 2 + 1) * 2 * f + j] = sy;
+                mod_cos[(s * 2 + 1) * 2 * f + j] = cy;
+            }
+        }
+
+        let mut na = vec![0.0f64; f];
+        let mut nb_acc = vec![0.0f64; f];
+        let c = self.c;
+        for rows in [&mut self.kt, &mut self.vt] {
+            for row in rows.chunks_mut(c) {
+                for jb in 0..nb {
+                    let s = jb % ns;
+                    let blk = &mut row[jb * w..(jb + 1) * w];
+                    // the two frequency banks: X at offset 0, Y at 2F
+                    for (axis, off) in [(0usize, 0usize), (1, 2 * f)] {
+                        let msin = &mod_sin[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
+                        let mcos = &mod_cos[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
+                        na.iter_mut().for_each(|x| *x = 0.0);
+                        nb_acc.iter_mut().for_each(|x| *x = 0.0);
+                        for j in 0..2 * f {
+                            let gs = &gshift[j * f..(j + 1) * f];
+                            let mut re = 0.0f64;
+                            let mut im = 0.0f64;
+                            for i in 0..f {
+                                re += blk[off + i] as f64 * gs[i];
+                                im += blk[off + f + i] as f64 * gs[i];
+                            }
+                            let (su, cu) = (msin[j], mcos[j]);
+                            let re2 = cu * re - su * im;
+                            let im2 = su * re + cu * im;
+                            let wrow = &table.weights[j * f..(j + 1) * f];
+                            for i in 0..f {
+                                na[i] += re2 * wrow[i];
+                                nb_acc[i] += im2 * wrow[i];
+                            }
+                        }
+                        for i in 0..f {
+                            blk[off + i] = na[i] as f32;
+                            blk[off + f + i] = nb_acc[i] as f32;
+                        }
+                    }
+                    // theta pair: rho(g_theta + theta_p) = rho(g_theta) rho(theta_p)
+                    let (x0, x1) = (blk[4 * f] as f64, blk[4 * f + 1] as f64);
+                    blk[4 * f] = (ct * x0 - st * x1) as f32;
+                    blk[4 * f + 1] = (st * x0 + ct * x1) as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{linear, AttnProblem};
+    use crate::prng::Rng;
+    use crate::proplite::{all_close_f32, check};
+
+    fn rand_pose(rng: &mut Rng, r: f64) -> Pose {
+        Pose::new(
+            rng.range(-r, r),
+            rng.range(-r, r),
+            rng.range(-3.1, 3.1),
+        )
+    }
+
+    fn rand_data(rng: &mut Rng, n: usize, d: usize, r: f64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Pose>, Vec<i32>) {
+        let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..n).map(|_| rand_pose(rng, r)).collect();
+        let t: Vec<i32> = (0..n).map(|_| rng.int_range(0, 3) as i32).collect();
+        (q, k, v, poses, t)
+    }
+
+    /// Chunked append + attend reproduces Algorithm 2 on the same inputs
+    /// for every method (the ops are literally the same, in the same
+    /// order, so the tolerance is tight).
+    #[test]
+    fn incremental_matches_linear_all_methods() {
+        let scales = vec![1.0, 0.5];
+        let mut rng = Rng::new(41);
+        for (method, d) in [
+            (Method::Abs, 8),
+            (Method::Rope2d, 8),
+            (Method::Se2Rep, 9),
+            (Method::Se2Fourier, 12),
+        ] {
+            let n = 6;
+            let m = 17;
+            let (q, _, _, pq, tq) = rand_data(&mut rng, n, d, 1.5);
+            let (_, k, v, pk, tk) = rand_data(&mut rng, m, d, 1.5);
+            let p = AttnProblem {
+                method,
+                d,
+                fourier_f: 16,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            let want = linear::attention(&p).out;
+
+            let mut eng = IncrementalAttention::new(IncrementalConfig {
+                method,
+                d,
+                fourier_f: 16,
+                scales: scales.clone(),
+            });
+            // append in three uneven chunks, as a rollout would
+            for (lo, hi) in [(0usize, 5usize), (5, 6), (6, m)] {
+                eng.append(
+                    &k[lo * d..hi * d],
+                    &v[lo * d..hi * d],
+                    &pk[lo..hi],
+                    &tk[lo..hi],
+                );
+            }
+            assert_eq!(eng.len(), m);
+            let got = eng.attend(&q, &pq, &tq).out;
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-6, "{method:?} [{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Sliding-window eviction leaves a cache identical to one built from
+    /// the retained suffix only.
+    #[test]
+    fn eviction_matches_suffix_recompute() {
+        let scales = vec![1.0, 0.5];
+        let mut rng = Rng::new(42);
+        let (d, f, m, evict) = (12usize, 12usize, 20usize, 7usize);
+        let (q, k, v, pk, tk) = rand_data(&mut rng, m, d, 1.5);
+        let n = 4;
+        let pq = &pk[..n];
+        let tq = vec![10i32; n];
+
+        let cfg = IncrementalConfig {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: scales.clone(),
+        };
+        let mut eng = IncrementalAttention::new(cfg.clone());
+        eng.append(&k, &v, &pk, &tk);
+        eng.evict_front(evict);
+        assert_eq!(eng.len(), m - evict);
+
+        let mut suffix = IncrementalAttention::new(cfg);
+        suffix.append(
+            &k[evict * d..],
+            &v[evict * d..],
+            &pk[evict..],
+            &tk[evict..],
+        );
+        let a = eng.attend(&q[..n * d], pq, &tq).out;
+        let b = suffix.attend(&q[..n * d], pq, &tq).out;
+        assert_eq!(a, b, "evicted cache must equal suffix-built cache");
+        assert_eq!(eng.resident_bytes(), suffix.resident_bytes());
+    }
+
+    /// The se2fourier feature-space re-anchor reproduces a fresh
+    /// projection at the shifted poses to Fourier-tail accuracy.
+    #[test]
+    fn se2f_re_anchor_matches_fresh_projection() {
+        check("se2f re-anchor == fresh projection", 10, |rng| {
+            let (d, f) = (12usize, 24usize);
+            let scales = vec![1.0, 0.5];
+            let m = 5;
+            let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let poses: Vec<Pose> = (0..m).map(|_| rand_pose(rng, 1.2)).collect();
+            let t = vec![0i32; m];
+            let g = rand_pose(rng, 0.8);
+
+            let cfg = IncrementalConfig {
+                method: Method::Se2Fourier,
+                d,
+                fourier_f: f,
+                scales: scales.clone(),
+            };
+            let mut eng = IncrementalAttention::new(cfg.clone());
+            eng.append(&k, &v, &poses, &t);
+            eng.re_anchor(&g).map_err(|e| e.to_string())?;
+
+            let shifted: Vec<Pose> = poses.iter().map(|p| g.compose(p)).collect();
+            let mut fresh = IncrementalAttention::new(cfg);
+            fresh.append(&k, &v, &shifted, &t);
+
+            all_close_f32(&eng.kt, &fresh.kt, 1e-5, "re-anchored k rows")?;
+            all_close_f32(&eng.vt, &fresh.vt, 1e-5, "re-anchored v rows")
+        });
+    }
+
+    /// Attention outputs are invariant under re-anchoring cache + queries
+    /// by the same global transform (the paper's Eq. 2, streamed).
+    #[test]
+    fn outputs_invariant_under_re_anchor() {
+        check("re-anchor invariance", 8, |rng| {
+            let scales = vec![1.0, 0.5];
+            for (method, d, f) in [(Method::Se2Rep, 9usize, 8usize), (Method::Se2Fourier, 12, 24)] {
+                let (n, m) = (4usize, 12usize);
+                let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+                let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let pk: Vec<Pose> = (0..m).map(|_| rand_pose(rng, 1.2)).collect();
+                let pq: Vec<Pose> = (0..n).map(|_| rand_pose(rng, 1.2)).collect();
+                let tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, 3) as i32).collect();
+                let tq = vec![5i32; n];
+                let g = rand_pose(rng, 0.8);
+
+                let mut eng = IncrementalAttention::new(IncrementalConfig {
+                    method,
+                    d,
+                    fourier_f: f,
+                    scales: scales.clone(),
+                });
+                eng.append(&k, &v, &pk, &tk);
+                let before = eng.attend(&q, &pq, &tq).out;
+                eng.re_anchor(&g).map_err(|e| e.to_string())?;
+                let pq_shifted: Vec<Pose> = pq.iter().map(|p| g.compose(p)).collect();
+                let after = eng.attend(&q, &pq_shifted, &tq).out;
+                all_close_f32(&before, &after, 1e-5, &format!("{method:?} invariance"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Two successive re-anchors compose like a single one by the product
+    /// transform.
+    #[test]
+    fn re_anchor_composes() {
+        let mut rng = Rng::new(77);
+        let (d, f) = (6usize, 24usize);
+        let scales = vec![1.0];
+        let m = 4;
+        let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let v = k.clone();
+        let poses: Vec<Pose> = (0..m).map(|_| rand_pose(&mut rng, 1.0)).collect();
+        let t = vec![0i32; m];
+        let g1 = rand_pose(&mut rng, 0.5);
+        let g2 = rand_pose(&mut rng, 0.5);
+
+        let cfg = IncrementalConfig {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales,
+        };
+        let mut seq = IncrementalAttention::new(cfg.clone());
+        seq.append(&k, &v, &poses, &t);
+        seq.re_anchor(&g1).unwrap();
+        seq.re_anchor(&g2).unwrap();
+
+        let mut once = IncrementalAttention::new(cfg);
+        once.append(&k, &v, &poses, &t);
+        once.re_anchor(&g2.compose(&g1)).unwrap();
+
+        for (a, b) in seq.kt.iter().zip(once.kt.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for (pa, pb) in seq.poses.iter().zip(once.poses.iter()) {
+            assert!(pa.dist(pb) < 1e-9);
+        }
+    }
+
+    /// rope2d: translation-only re-anchors are exact; rotations rejected.
+    #[test]
+    fn rope2d_re_anchor_translation_only() {
+        let mut rng = Rng::new(5);
+        let (d, m) = (8usize, 6usize);
+        let scales = vec![1.0, 0.25];
+        let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..m).map(|_| rand_pose(&mut rng, 2.0)).collect();
+        let t = vec![0i32; m];
+        let cfg = IncrementalConfig {
+            method: Method::Rope2d,
+            d,
+            fourier_f: 4,
+            scales: scales.clone(),
+        };
+        let mut eng = IncrementalAttention::new(cfg.clone());
+        eng.append(&k, &v, &poses, &t);
+
+        let g = Pose::new(0.7, -0.3, 0.0);
+        eng.re_anchor(&g).unwrap();
+        let shifted: Vec<Pose> = poses.iter().map(|p| g.compose(p)).collect();
+        let mut fresh = IncrementalAttention::new(cfg);
+        fresh.append(&k, &v, &shifted, &t);
+        for (a, b) in eng.kt.iter().zip(fresh.kt.iter()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+
+        assert!(eng.re_anchor(&Pose::new(0.0, 0.0, 0.5)).is_err());
+    }
+
+    /// Drift bookkeeping: appending far-out tokens raises the radius, a
+    /// re-centering re-anchor brings it back down.
+    #[test]
+    fn drift_radius_tracks_re_anchor() {
+        let mut rng = Rng::new(6);
+        let d = 6;
+        let cfg = IncrementalConfig {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: 8,
+            scales: vec![1.0, 0.5],
+        };
+        let mut eng = IncrementalAttention::new(cfg);
+        let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        eng.append(&k, &k, &[Pose::new(3.0, 0.0, 0.2)], &[0]);
+        assert!((eng.max_scaled_radius() - 3.0).abs() < 1e-9);
+        // recenter onto the token
+        eng.re_anchor(&Pose::new(-3.0, 0.0, 0.0)).unwrap();
+        assert!(eng.max_scaled_radius() < 1e-9);
+    }
+}

@@ -14,7 +14,12 @@ use super::{AttnOutput, AttnProblem};
 /// Streaming SDPA over projected tensors: q (n x c), k/v (m x c), online
 /// softmax with visibility rule tq >= tk.  O(m*c) reads per row but O(c)
 /// transient state — the CPU mirror of the Pallas flash kernel.
-fn flash_sdpa(
+///
+/// Public so the incremental decode engine
+/// ([`super::incremental::IncrementalAttention`]) can answer new-query
+/// attention against its cached `phi_k k` / `phi_k v` rows through the
+/// exact same online-softmax path.
+pub fn flash_sdpa(
     q: &[f32],
     k: &[f32],
     v: &[f32],

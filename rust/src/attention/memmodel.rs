@@ -69,6 +69,59 @@ pub fn linear_bytes(
     }
 }
 
+/// Bytes of one cached incremental-decode row pair: projected `phi_k k`
+/// and `phi_k v` (width c each) plus the visibility timestep (i32) and the
+/// anchor-frame pose (3 f64) retained for drift/re-anchor bookkeeping.
+pub fn kv_row_bytes(method: Method, d: usize, fourier_f: usize, elem: usize) -> usize {
+    let c = proj_dim(method, d, fourier_f);
+    2 * c * elem + 4 + 3 * 8
+}
+
+/// Resident bytes of an m-token incremental KV cache
+/// ([`crate::attention::incremental::IncrementalAttention`]) — linear in
+/// the window, the whole point of the paper's construction.
+pub fn incremental_cache_bytes(
+    method: Method,
+    m: usize,
+    d: usize,
+    fourier_f: usize,
+    elem: usize,
+) -> usize {
+    m * kv_row_bytes(method, d, fourier_f, elem)
+}
+
+/// Per-session resident bytes of a tokenized-window cache entry
+/// ([`crate::coordinator::kvcache::WindowCache::resident_bytes`]): h
+/// agent-step rows of invariant features plus world poses.  Shared map
+/// rows are counted once per *scene* via [`map_tokens_bytes`], not per
+/// session.
+pub fn window_cache_bytes(
+    n_agents: usize,
+    history_steps: usize,
+    feat_dim: usize,
+    elem: usize,
+) -> usize {
+    n_agents * history_steps * (feat_dim * elem + 3 * 8)
+}
+
+/// Shared map-row bytes of one scene
+/// ([`crate::coordinator::kvcache::MapTokens::resident_bytes`]).
+pub fn map_tokens_bytes(n_map: usize, feat_dim: usize, elem: usize) -> usize {
+    n_map * (feat_dim * elem + 3 * 8)
+}
+
+/// Projection rows touched by one decode step: the full-recompute path
+/// re-projects the whole window plus the queries; the cached path projects
+/// only the appended frontier plus the queries.  The ratio is the paper's
+/// O(window) -> O(new) serving claim in closed form.
+pub fn decode_step_projection_rows(window: usize, n_new: usize, cached: bool) -> usize {
+    if cached {
+        2 * n_new // append frontier + project queries
+    } else {
+        window + n_new
+    }
+}
+
 /// N at which quadratic transient memory overtakes linear (self-attention,
 /// n == m) — the crossover the memory-scaling bench sweeps across.
 pub fn crossover_n(method: Method, d: usize, fourier_f: usize, elem: usize) -> usize {
@@ -115,6 +168,44 @@ mod tests {
         let ratio = lin_fourier.transient_bytes as f64
             / lin_rope.transient_bytes as f64;
         assert!((ratio - 50.0 / 6.0).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn incremental_cache_is_linear_in_window() {
+        let a = incremental_cache_bytes(Method::Se2Fourier, 64, 48, 12, BYTES_F32);
+        let b = incremental_cache_bytes(Method::Se2Fourier, 128, 48, 12, BYTES_F32);
+        assert_eq!(b, 2 * a);
+        // and matches the engine's own accounting
+        use crate::attention::incremental::{IncrementalAttention, IncrementalConfig};
+        let mut eng = IncrementalAttention::new(IncrementalConfig {
+            method: Method::Se2Fourier,
+            d: 12,
+            fourier_f: 12,
+            scales: vec![1.0],
+        });
+        let k = vec![0.0f32; 5 * 12];
+        let poses = vec![crate::geometry::Pose::IDENTITY; 5];
+        eng.append(&k, &k, &poses, &[0, 0, 0, 1, 1]);
+        assert_eq!(
+            eng.resident_bytes(),
+            incremental_cache_bytes(Method::Se2Fourier, 5, 12, 12, BYTES_F32)
+        );
+    }
+
+    #[test]
+    fn cached_decode_touches_o_new_rows() {
+        // window 256, 8 new tokens: 264 rows recomputed vs 16 cached.
+        assert_eq!(decode_step_projection_rows(256, 8, false), 264);
+        assert_eq!(decode_step_projection_rows(256, 8, true), 16);
+        let speedup = decode_step_projection_rows(256, 8, false) as f64
+            / decode_step_projection_rows(256, 8, true) as f64;
+        assert!(speedup > 16.0);
+    }
+
+    #[test]
+    fn window_cache_bytes_counts_rows() {
+        assert_eq!(window_cache_bytes(6, 8, 16, BYTES_F32), 48 * (16 * 4 + 24));
+        assert_eq!(map_tokens_bytes(16, 16, BYTES_F32), 16 * (16 * 4 + 24));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! Data layout: row-major `[N, d]` f32 slices, poses as `&[Pose]`,
 //! visibility timesteps as `&[i32]` (see the flash kernel's masking rule).
 
+pub mod incremental;
 pub mod linear;
 pub mod memmodel;
 pub mod projections;

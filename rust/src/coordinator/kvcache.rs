@@ -1,0 +1,679 @@
+//! Per-session KV/tokenization cache for streaming rollout (DESIGN.md §10).
+//!
+//! The rollout scheduler used to re-tokenize the whole history window on
+//! every decode step — O(window) work for O(new-tokens) of new
+//! information.  This module caches, per scene-sample session:
+//!
+//! * the **static map rows** (feature vectors + world poses), tokenized
+//!   once per *scene* and shared across all samples of that scene through
+//!   an [`Arc`] registry inside the pool;
+//! * the **agent-step rows** of the sliding history window: the
+//!   frame-invariant feature vectors are tokenized only for the frontier
+//!   step of each decode step, older steps are reused verbatim and evicted
+//!   as the window slides.
+//!
+//! Poses are cached in the *world* frame and re-anchored to the current
+//! robot frame at [`WindowCache::emit`] time — an exact 9-flop SE(2)
+//! compose per token, so the emitted batch is bit-identical to a full
+//! [`Tokenizer::tokenize_window`] while skipping all per-token feature
+//! work except the frontier.  (The approximate feature-space re-anchor for
+//! *projected attention rows* lives in
+//! [`crate::attention::incremental::IncrementalAttention`]; here nothing
+//! is approximated.)
+//!
+//! [`KvCachePool`] owns the session map: allocation by scene-sample key,
+//! LRU capacity eviction by per-session resident bytes (closed-form model
+//! in [`crate::attention::memmodel::window_cache_bytes`] /
+//! [`crate::attention::memmodel::map_tokens_bytes`]), and hit / miss /
+//! eviction / resident-byte counters exported through
+//! [`crate::coordinator::telemetry::CacheStats`].
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::geometry::Pose;
+use crate::sim::{AgentState, MapElement};
+use crate::tokenizer::{TokenizedScene, Tokenizer, MAP_T, NO_TARGET};
+
+use super::telemetry::CacheStats;
+
+/// Tokenized static map rows of one scene, shared across its samples.
+#[derive(Debug)]
+pub struct MapTokens {
+    /// Row-major (n_map, feat_dim) frame-invariant features.
+    pub feat: Vec<f32>,
+    /// World-frame poses, re-anchored per emit.
+    pub world_pose: Vec<Pose>,
+}
+
+impl MapTokens {
+    pub fn tokenize(tok: &Tokenizer, elements: &[MapElement]) -> MapTokens {
+        let fd = tok.feat_dim;
+        let mut feat = vec![0.0f32; elements.len() * fd];
+        let mut world_pose = Vec::with_capacity(elements.len());
+        for (i, e) in elements.iter().enumerate() {
+            tok.map_features(e, &mut feat[i * fd..(i + 1) * fd]);
+            world_pose.push(e.pose);
+        }
+        MapTokens { feat, world_pose }
+    }
+
+    pub fn len(&self) -> usize {
+        self.world_pose.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.world_pose.is_empty()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.feat.len() * std::mem::size_of::<f32>()
+            + self.world_pose.len() * std::mem::size_of::<Pose>()
+    }
+}
+
+/// One history step's agent rows.
+#[derive(Debug)]
+struct AgentStepRows {
+    feat: Vec<f32>,
+    world_pose: Vec<Pose>,
+}
+
+fn tokenize_step(tok: &Tokenizer, n_agents: usize, agents: &[AgentState]) -> AgentStepRows {
+    assert_eq!(agents.len(), n_agents, "agent count changed mid-session");
+    let fd = tok.feat_dim;
+    let mut feat = vec![0.0f32; agents.len() * fd];
+    let mut world_pose = Vec::with_capacity(agents.len());
+    for (a, st) in agents.iter().enumerate() {
+        tok.agent_features(st, &mut feat[a * fd..(a + 1) * fd]);
+        world_pose.push(st.pose);
+    }
+    AgentStepRows { feat, world_pose }
+}
+
+/// The cached sliding window of one scene-sample session.
+#[derive(Debug)]
+pub struct WindowCache {
+    map: Arc<MapTokens>,
+    steps: VecDeque<AgentStepRows>,
+    n_agents: usize,
+    feat_dim: usize,
+}
+
+impl WindowCache {
+    /// Build from a full window (the miss path): tokenizes every step.
+    pub fn from_window(
+        tok: &Tokenizer,
+        map: Arc<MapTokens>,
+        window: &[Vec<AgentState>],
+    ) -> WindowCache {
+        assert!(!window.is_empty(), "empty window");
+        let n_agents = window[0].len();
+        let mut steps = VecDeque::with_capacity(window.len());
+        for step in window {
+            steps.push_back(tokenize_step(tok, n_agents, step));
+        }
+        WindowCache {
+            map,
+            steps,
+            n_agents,
+            feat_dim: tok.feat_dim,
+        }
+    }
+
+    /// Slide the window one decode step: evict the oldest step's rows and
+    /// tokenize *only* the new frontier — the O(new) hot path.
+    pub fn advance(&mut self, tok: &Tokenizer, frontier: &[AgentState]) {
+        let rows = tokenize_step(tok, self.n_agents, frontier);
+        self.steps.pop_front();
+        self.steps.push_back(rows);
+    }
+
+    /// Number of cached window steps.
+    pub fn history_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// Assemble the model-ready tokenized scene: cached features are
+    /// copied verbatim, poses are re-anchored (exactly) to the current
+    /// robot frame (agent 0 at the latest step).  Bit-identical to
+    /// [`Tokenizer::tokenize_window`] on the same window, with no targets.
+    pub fn emit(&self, tok: &Tokenizer) -> TokenizedScene {
+        let h = self.steps.len();
+        let n_map = self.map.len();
+        let n_agents = self.n_agents;
+        let n_tokens = n_map + h * n_agents;
+        let fd = self.feat_dim;
+        let frame = self.steps.back().expect("empty window").world_pose[0];
+
+        let mut feat = vec![0.0f32; n_tokens * fd];
+        let mut pose = vec![0.0f32; n_tokens * 3];
+        let mut tq = vec![0i32; n_tokens];
+        let target = vec![NO_TARGET; n_tokens];
+
+        feat[..n_map * fd].copy_from_slice(&self.map.feat);
+        for (i, wp) in self.map.world_pose.iter().enumerate() {
+            let mp = tok.to_model_frame(&frame, wp);
+            pose[i * 3] = mp.x as f32;
+            pose[i * 3 + 1] = mp.y as f32;
+            pose[i * 3 + 2] = mp.theta as f32;
+            tq[i] = MAP_T;
+        }
+        for (t, step) in self.steps.iter().enumerate() {
+            let base = n_map + t * n_agents;
+            feat[base * fd..(base + n_agents) * fd].copy_from_slice(&step.feat);
+            for (a, wp) in step.world_pose.iter().enumerate() {
+                let idx = base + a;
+                let mp = tok.to_model_frame(&frame, wp);
+                pose[idx * 3] = mp.x as f32;
+                pose[idx * 3 + 1] = mp.y as f32;
+                pose[idx * 3 + 2] = mp.theta as f32;
+                tq[idx] = t as i32;
+            }
+        }
+
+        TokenizedScene {
+            feat,
+            pose,
+            tq,
+            target,
+            frame,
+            n_map,
+            n_agents,
+            history_steps: h,
+        }
+    }
+
+    /// Resident bytes (shared map rows are counted by the pool, once per
+    /// scene, not per session).
+    pub fn resident_bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| {
+                s.feat.len() * std::mem::size_of::<f32>()
+                    + s.world_pose.len() * std::mem::size_of::<Pose>()
+            })
+            .sum()
+    }
+}
+
+/// Identity of one scene-sample rollout session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SessionKey {
+    /// Scene identity (scenario seed).
+    pub scene: u64,
+    /// History window end at request time.
+    pub t0: u32,
+    /// Rollout sample index within the request.
+    pub sample: u32,
+}
+
+/// Capacity limits for a [`KvCachePool`].
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Max live sessions before LRU eviction.
+    pub max_sessions: usize,
+    /// Max resident bytes across sessions + shared map rows.
+    pub max_bytes: usize,
+    /// Max scenes whose map rows are kept for sharing.
+    pub max_map_scenes: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            max_sessions: 4096,
+            max_bytes: 256 << 20,
+            max_map_scenes: 1024,
+        }
+    }
+}
+
+struct SessionEntry {
+    cache: WindowCache,
+    bytes: usize,
+    tick: u64,
+}
+
+struct PoolInner {
+    sessions: HashMap<SessionKey, SessionEntry>,
+    maps: HashMap<u64, Arc<MapTokens>>,
+    /// FIFO of map-scene ids for capacity eviction.
+    map_order: VecDeque<u64>,
+    tick: u64,
+    /// Per-session window bytes — the pool can only reclaim these, so
+    /// `max_bytes` is enforced against this count alone (shared map
+    /// bytes are bounded separately by `max_map_scenes`; folding them
+    /// into one budget would make an unsatisfiable config thrash every
+    /// insert).
+    session_bytes: usize,
+    /// Shared map-row bytes, counted once per scene.
+    map_bytes: usize,
+}
+
+/// The server-owned pool of per-session window caches + shared map rows.
+pub struct KvCachePool {
+    cfg: CacheConfig,
+    pub stats: Arc<CacheStats>,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvCachePool {
+    pub fn new(cfg: CacheConfig, stats: Arc<CacheStats>) -> KvCachePool {
+        KvCachePool {
+            cfg,
+            stats,
+            inner: Mutex::new(PoolInner {
+                sessions: HashMap::new(),
+                maps: HashMap::new(),
+                map_order: VecDeque::new(),
+                tick: 0,
+                session_bytes: 0,
+                map_bytes: 0,
+            }),
+        }
+    }
+
+    /// Shared map rows for a scene: tokenized once, handed out by Arc to
+    /// every sample (and every later request) of the same scene.
+    pub fn map_tokens(
+        &self,
+        scene: u64,
+        tok: &Tokenizer,
+        elements: &[MapElement],
+    ) -> Arc<MapTokens> {
+        let mut inner = self.inner.lock().unwrap();
+        self.map_tokens_locked(&mut inner, scene, tok, elements)
+    }
+
+    fn map_tokens_locked(
+        &self,
+        inner: &mut PoolInner,
+        scene: u64,
+        tok: &Tokenizer,
+        elements: &[MapElement],
+    ) -> Arc<MapTokens> {
+        // A seed collision (same scene id, different map) must not
+        // silently substitute stale rows: validate the cheap invariant
+        // and re-tokenize on mismatch.
+        let already_known = match inner.maps.get(&scene) {
+            Some(m) if m.len() == elements.len() => {
+                self.stats.map_hits.inc();
+                return Arc::clone(m);
+            }
+            Some(_) => true,
+            None => false,
+        };
+        self.stats.map_misses.inc();
+        let m = Arc::new(MapTokens::tokenize(tok, elements));
+        inner.map_bytes += m.resident_bytes();
+        self.stats.resident_bytes.add(m.resident_bytes() as u64);
+        if let Some(stale) = inner.maps.insert(scene, Arc::clone(&m)) {
+            inner.map_bytes = inner.map_bytes.saturating_sub(stale.resident_bytes());
+            self.stats.resident_bytes.sub(stale.resident_bytes() as u64);
+        }
+        if !already_known {
+            inner.map_order.push_back(scene);
+        }
+        while inner.maps.len() > self.cfg.max_map_scenes {
+            if let Some(old) = inner.map_order.pop_front() {
+                if let Some(gone) = inner.maps.remove(&old) {
+                    inner.map_bytes = inner.map_bytes.saturating_sub(gone.resident_bytes());
+                    self.stats.resident_bytes.sub(gone.resident_bytes() as u64);
+                    self.stats.evictions.inc();
+                }
+            } else {
+                break;
+            }
+        }
+        m
+    }
+
+    /// One decode step for a session.  Hit: slide the cached window by the
+    /// frontier (`window.last()`) and emit — O(new) tokenization.  Miss
+    /// (first step, or evicted under pressure): rebuild from the caller's
+    /// full window.  Either way the result is bit-identical to
+    /// `tok.tokenize_window(map_elements, window, None)`.
+    pub fn step(
+        &self,
+        key: SessionKey,
+        tok: &Tokenizer,
+        map_elements: &[MapElement],
+        window: &[Vec<AgentState>],
+    ) -> TokenizedScene {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+
+        let mut entry = match inner.sessions.remove(&key) {
+            Some(mut e) if e.cache.n_agents() == window[0].len() => {
+                self.stats.hits.inc();
+                e.cache
+                    .advance(tok, window.last().expect("empty window"));
+                e
+            }
+            stale => {
+                // a shape-mismatched leftover (key reuse) is released
+                if let Some(gone) = stale {
+                    inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
+                    self.stats.resident_bytes.sub(gone.bytes as u64);
+                }
+                self.stats.misses.inc();
+                let map = self.map_tokens_locked(&mut inner, key.scene, tok, map_elements);
+                let cache = WindowCache::from_window(tok, map, window);
+                let bytes = cache.resident_bytes();
+                inner.session_bytes += bytes;
+                self.stats.resident_bytes.add(bytes as u64);
+                SessionEntry {
+                    cache,
+                    bytes,
+                    tick: 0,
+                }
+            }
+        };
+        entry.tick = tick;
+        let scene = entry.cache.emit(tok);
+        inner.sessions.insert(key, entry);
+        self.enforce_capacity(&mut inner, Some(key));
+        scene
+    }
+
+    fn enforce_capacity(&self, inner: &mut PoolInner, keep: Option<SessionKey>) {
+        while inner.sessions.len() > self.cfg.max_sessions
+            || inner.session_bytes > self.cfg.max_bytes
+        {
+            let victim = inner
+                .sessions
+                .iter()
+                .filter(|(k, _)| Some(**k) != keep)
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            if let Some(gone) = inner.sessions.remove(&victim) {
+                inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
+                self.stats.resident_bytes.sub(gone.bytes as u64);
+                self.stats.evictions.inc();
+            }
+        }
+    }
+
+    /// Drop a finished session (end of rollout).
+    pub fn end_session(&self, key: SessionKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(gone) = inner.sessions.remove(&key) {
+            inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
+            self.stats.resident_bytes.sub(gone.bytes as u64);
+        }
+    }
+
+    /// Live session count (tests / stats).
+    pub fn live_sessions(&self) -> usize {
+        self.inner.lock().unwrap().sessions.len()
+    }
+
+    /// Total resident bytes tracked by the pool (sessions + shared maps).
+    pub fn resident_bytes(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.session_bytes + inner.map_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, SimConfig};
+    use crate::sim::ScenarioGenerator;
+
+    fn test_model_config() -> ModelConfig {
+        ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 48,
+            d_model: 96,
+            d_ff: 192,
+            n_tokens: 64,
+            feat_dim: 16,
+            n_actions: 64,
+            fourier_f: 12,
+            spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+            batch_size: 8,
+            learning_rate: 3e-4,
+            map_timestep: -1,
+            param_names: vec![],
+        }
+    }
+
+    fn setup() -> (SimConfig, Tokenizer) {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&test_model_config(), &sim);
+        (sim, tok)
+    }
+
+    /// The cached emit must be bit-identical to a full re-tokenization at
+    /// every step of a sliding window walked across a real scenario.
+    #[test]
+    fn cached_emit_equals_full_tokenize_across_steps() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(17);
+        let h = sim.history_steps;
+        let mut window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+
+        let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
+        let mut cache = WindowCache::from_window(&tok, map, &window);
+        for t in h..s.n_steps() {
+            let want = tok.tokenize_window(&s.map_elements, &window, None);
+            let got = cache.emit(&tok);
+            assert_eq!(got.feat, want.feat, "step {t}: features");
+            assert_eq!(got.pose, want.pose, "step {t}: poses");
+            assert_eq!(got.tq, want.tq, "step {t}: timesteps");
+            assert_eq!(got.target, want.target, "step {t}: targets");
+            assert_eq!(got.frame, want.frame, "step {t}: frame");
+            // slide
+            window.remove(0);
+            window.push(s.states[t].clone());
+            cache.advance(&tok, &s.states[t]);
+        }
+    }
+
+    /// Re-anchoring at emit time is exact: shifting the whole world by a
+    /// rigid transform changes neither features nor emitted poses.
+    #[test]
+    fn cached_emit_invariant_under_world_shift() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(23);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let z = Pose::new(250.0, -80.0, 2.1);
+        let mut s2 = s.clone();
+        for step in s2.states.iter_mut() {
+            for a in step.iter_mut() {
+                a.pose = z.compose(&a.pose);
+            }
+        }
+        for e in s2.map_elements.iter_mut() {
+            e.pose = z.compose(&e.pose);
+        }
+        let window2: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s2.states[t].clone()).collect();
+
+        let c1 = WindowCache::from_window(
+            &tok,
+            Arc::new(MapTokens::tokenize(&tok, &s.map_elements)),
+            &window,
+        );
+        let c2 = WindowCache::from_window(
+            &tok,
+            Arc::new(MapTokens::tokenize(&tok, &s2.map_elements)),
+            &window2,
+        );
+        let (e1, e2) = (c1.emit(&tok), c2.emit(&tok));
+        assert_eq!(e1.feat, e2.feat, "features must not leak absolute pose");
+        for (a, b) in e1.pose.iter().zip(e2.pose.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pool_hits_misses_and_map_sharing() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(5);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+
+        let key_a = SessionKey { scene: 5, t0: 7, sample: 0 };
+        let key_b = SessionKey { scene: 5, t0: 7, sample: 1 };
+        // first touch of each session: miss; map tokenized once, shared
+        pool.step(key_a, &tok, &s.map_elements, &window);
+        pool.step(key_b, &tok, &s.map_elements, &window);
+        assert_eq!(stats.misses.get(), 2);
+        assert_eq!(stats.map_misses.get(), 1);
+        assert_eq!(stats.map_hits.get(), 1);
+        let m1 = pool.map_tokens(5, &tok, &s.map_elements);
+        let m2 = pool.map_tokens(5, &tok, &s.map_elements);
+        assert!(Arc::ptr_eq(&m1, &m2), "map rows must be shared");
+
+        // steady state: hits
+        let mut w = window.clone();
+        w.remove(0);
+        w.push(s.states[h].clone());
+        pool.step(key_a, &tok, &s.map_elements, &w);
+        assert_eq!(stats.hits.get(), 1);
+        assert!(stats.resident_bytes.get() > 0);
+        assert_eq!(pool.live_sessions(), 2);
+
+        pool.end_session(key_a);
+        pool.end_session(key_b);
+        assert_eq!(pool.live_sessions(), 0);
+    }
+
+    #[test]
+    fn pool_evicts_lru_under_session_pressure() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(9);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+
+        let stats = Arc::new(CacheStats::default());
+        let cfg = CacheConfig {
+            max_sessions: 2,
+            ..CacheConfig::default()
+        };
+        let pool = KvCachePool::new(cfg, Arc::clone(&stats));
+        for i in 0..4u32 {
+            pool.step(
+                SessionKey { scene: 9, t0: 7, sample: i },
+                &tok,
+                &s.map_elements,
+                &window,
+            );
+        }
+        assert_eq!(pool.live_sessions(), 2);
+        assert_eq!(stats.evictions.get(), 2);
+        // the evicted session re-misses and still produces a valid scene
+        let scene = pool.step(
+            SessionKey { scene: 9, t0: 7, sample: 0 },
+            &tok,
+            &s.map_elements,
+            &window,
+        );
+        let want = tok.tokenize_window(&s.map_elements, &window, None);
+        assert_eq!(scene.feat, want.feat);
+        assert_eq!(stats.misses.get(), 5);
+    }
+
+    #[test]
+    fn map_registry_revalidates_on_scene_id_collision() {
+        let (sim, tok) = setup();
+        let gen = ScenarioGenerator::new(sim.clone());
+        let s1 = gen.generate(40);
+        let mut s2 = gen.generate(41);
+        // same claimed scene id, different (shorter) map
+        s2.map_elements.truncate(s1.map_elements.len() - 3);
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let m1 = pool.map_tokens(7, &tok, &s1.map_elements);
+        let m2 = pool.map_tokens(7, &tok, &s2.map_elements);
+        assert_eq!(stats.map_misses.get(), 2, "collision must re-tokenize");
+        assert_eq!(m2.len(), s2.map_elements.len());
+        assert!(!Arc::ptr_eq(&m1, &m2));
+        // byte gauge reflects the replacement, not the sum of both
+        assert_eq!(pool.resident_bytes(), m2.resident_bytes());
+    }
+
+    #[test]
+    fn tiny_byte_budget_does_not_thrash_on_map_bytes() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(12);
+        let h = sim.history_steps;
+        let mut window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let stats = Arc::new(CacheStats::default());
+        // budget below even one session: sessions churn, but map bytes
+        // alone must never trigger evict-everything loops
+        let cfg = CacheConfig {
+            max_bytes: 1,
+            ..CacheConfig::default()
+        };
+        let pool = KvCachePool::new(cfg, Arc::clone(&stats));
+        let key = SessionKey { scene: 12, t0: 7, sample: 0 };
+        for t in h..h + 3 {
+            let got = pool.step(key, &tok, &s.map_elements, &window);
+            let want = tok.tokenize_window(&s.map_elements, &window, None);
+            assert_eq!(got.feat, want.feat, "output stays correct under churn");
+            window.remove(0);
+            window.push(s.states[t].clone());
+        }
+        // the just-inserted session is protected, so at most the previous
+        // one is evicted per step — never an unbounded loop
+        assert!(stats.evictions.get() <= 3);
+    }
+
+    #[test]
+    fn resident_bytes_match_memmodel() {
+        use crate::attention::memmodel::{map_tokens_bytes, window_cache_bytes, BYTES_F32};
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(2);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
+        assert_eq!(
+            map.resident_bytes(),
+            map_tokens_bytes(s.map_elements.len(), tok.feat_dim, BYTES_F32)
+        );
+        let cache = WindowCache::from_window(&tok, map, &window);
+        assert_eq!(
+            cache.resident_bytes(),
+            window_cache_bytes(sim.n_agents, h, tok.feat_dim, BYTES_F32)
+        );
+    }
+
+    #[test]
+    fn pool_byte_accounting_returns_to_map_only_after_release() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(3);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let key = SessionKey { scene: 3, t0: 7, sample: 0 };
+        pool.step(key, &tok, &s.map_elements, &window);
+        let map_bytes = pool.map_tokens(3, &tok, &s.map_elements).resident_bytes();
+        assert!(pool.resident_bytes() > map_bytes);
+        pool.end_session(key);
+        assert_eq!(pool.resident_bytes(), map_bytes, "only shared map rows remain");
+        assert_eq!(stats.resident_bytes.get() as usize, map_bytes);
+    }
+}

@@ -6,14 +6,18 @@
 //!   batch shape the artifacts were lowered at (deadline-based flush,
 //!   pad-and-slice).
 //! * [`router`] — routes requests across per-method model replicas.
+//! * [`kvcache`] — per-session incremental tokenization cache: shared map
+//!   rows, sliding-window agent rows, exact pose re-anchoring, capacity
+//!   eviction and hit/miss/bytes telemetry (DESIGN.md §10).
 //! * [`rollout`] — autoregressive simulation scheduler: decode -> action ->
-//!   kinematic integration -> re-tokenize, for minADE evaluation and
-//!   serving.
+//!   kinematic integration -> advance the token cache, for minADE
+//!   evaluation and serving.
 //! * [`trainer`] — training orchestrator over the dataset pipeline.
 //! * [`server`] — thread-based serving loop wiring the above together.
 //! * [`telemetry`] — lock-free counters/histograms for the hot path.
 
 pub mod batcher;
+pub mod kvcache;
 pub mod model;
 pub mod rollout;
 pub mod router;
@@ -22,6 +26,7 @@ pub mod telemetry;
 pub mod trainer;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use kvcache::{CacheConfig, KvCachePool, SessionKey, WindowCache};
 pub use model::ModelHandle;
 pub use rollout::{RolloutEngine, RolloutRequest, RolloutResult};
 pub use router::Router;

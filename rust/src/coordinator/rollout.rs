@@ -1,11 +1,23 @@
 //! Autoregressive rollout scheduler: decode actions for the frontier
 //! tokens, integrate the kinematic model, slide the history window,
-//! re-tokenize, repeat — the serving-path core of the agent-simulation
-//! task (paper Sec. IV-B) and the engine behind minADE evaluation.
+//! advance the token cache, repeat — the serving-path core of the
+//! agent-simulation task (paper Sec. IV-B) and the engine behind minADE
+//! evaluation.
+//!
+//! Tokenization is incremental (DESIGN.md §10): each decode step tokenizes
+//! only the frontier agent states and hits the per-session
+//! [`KvCachePool`] for everything else — map rows are tokenized once per
+//! scene and shared across samples, older window steps are reused verbatim
+//! and evicted as the window slides, and poses are re-anchored exactly to
+//! the moving robot frame at emit time.
 //!
 //! Batching: the decode artifact is lowered at batch size B, so up to B
 //! scene-samples advance per PJRT call; a group of scenes with S samples
-//! each is packed into ceil(scenes*S / B) slots per step.
+//! each is packed into ceil(scenes*S / B) slots per step.  Padding slots
+//! replicate the last real scene's already-assembled rows in the batch
+//! buffer instead of re-extending tokenizer output per slot.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -14,9 +26,11 @@ use crate::dataset::Batch;
 use crate::metrics;
 use crate::sim::agent::KinematicAction;
 use crate::sim::{AgentState, MapElement, Scenario, TrajectoryClass};
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{TokenizedScene, Tokenizer};
 
+use super::kvcache::{CacheConfig, KvCachePool, SessionKey};
 use super::model::ModelHandle;
+use super::telemetry::CacheStats;
 
 /// A request to roll one scenario forward.
 #[derive(Clone)]
@@ -41,12 +55,14 @@ pub struct RolloutResult {
     pub decode_ms: f64,
 }
 
-/// One in-flight scene-sample: mutable window state.
+/// One in-flight scene-sample: mutable window state plus its cache key.
 struct SampleState {
     map: Vec<MapElement>,
     window: Vec<Vec<AgentState>>,
     /// Recorded world positions per agent per emitted step.
     track: Vec<Vec<(f64, f64)>>,
+    /// Session identity in the KV cache pool.
+    key: SessionKey,
 }
 
 pub struct RolloutEngine {
@@ -64,7 +80,7 @@ impl RolloutEngine {
         }
     }
 
-    fn sample_state(&self, req: &RolloutRequest) -> SampleState {
+    fn sample_state(&self, req: &RolloutRequest, sample: u32) -> SampleState {
         let h = self.sim.history_steps;
         let window: Vec<Vec<AgentState>> = (req.t0 + 1 - h..=req.t0)
             .map(|t| req.scenario.states[t].clone())
@@ -74,6 +90,11 @@ impl RolloutEngine {
             map: req.scenario.map_elements.clone(),
             window,
             track: vec![Vec::new(); n_agents],
+            key: SessionKey {
+                scene: req.scenario.seed,
+                t0: req.t0 as u32,
+                sample,
+            },
         }
     }
 
@@ -82,6 +103,7 @@ impl RolloutEngine {
         &self,
         model: &ModelHandle,
         samples: &mut [SampleState],
+        pool: &KvCachePool,
         seed: i32,
         temperature: f32,
     ) -> Result<f64> {
@@ -94,10 +116,11 @@ impl RolloutEngine {
         let total = samples.len();
         for chunk_start in (0..total).step_by(b) {
             let chunk = &mut samples[chunk_start..(chunk_start + b).min(total)];
-            // tokenize each sample; pad batch by repeating the first scene
-            let scenes: Vec<crate::tokenizer::TokenizedScene> = chunk
+            // tokenize only the frontier of each sample; the pool supplies
+            // cached map rows and the reusable older window steps
+            let scenes: Vec<TokenizedScene> = chunk
                 .iter()
-                .map(|s| self.tokenizer.tokenize_window(&s.map, &s.window, None))
+                .map(|s| pool.step(s.key, &self.tokenizer, &s.map, &s.window))
                 .collect();
             let mut batch = Batch {
                 feat: Vec::with_capacity(b * n_tokens * feat_dim),
@@ -106,12 +129,23 @@ impl RolloutEngine {
                 target: Vec::with_capacity(b * n_tokens),
                 batch_size: b,
             };
-            for i in 0..b {
-                let s = &scenes[i.min(scenes.len() - 1)];
+            for s in &scenes {
                 batch.feat.extend_from_slice(&s.feat);
                 batch.pose.extend_from_slice(&s.pose);
                 batch.tq.extend_from_slice(&s.tq);
                 batch.target.extend_from_slice(&s.target);
+            }
+            // pad unused slots by replicating the last real scene's rows
+            // within the batch buffer (no redundant tokenizer walks)
+            for _ in scenes.len()..b {
+                let fb = batch.feat.len() - scenes.last().unwrap().feat.len();
+                let pb = batch.pose.len() - scenes.last().unwrap().pose.len();
+                let tb = batch.tq.len() - scenes.last().unwrap().tq.len();
+                let gb = batch.target.len() - scenes.last().unwrap().target.len();
+                batch.feat.extend_from_within(fb..);
+                batch.pose.extend_from_within(pb..);
+                batch.tq.extend_from_within(tb..);
+                batch.target.extend_from_within(gb..);
             }
             let t0 = std::time::Instant::now();
             let out = model.decode(
@@ -149,22 +183,45 @@ impl RolloutEngine {
         Ok(decode_ms / calls.max(1) as f64)
     }
 
-    /// Run a full rollout request: S samples x future_steps decode steps.
+    /// Run a full rollout request with a private, request-local cache
+    /// pool.  Serving goes through [`Self::rollout_with_cache`] so map
+    /// rows and telemetry are shared server-wide.
     pub fn rollout(&self, model: &ModelHandle, req: &RolloutRequest) -> Result<RolloutResult> {
-        let mut samples: Vec<SampleState> =
-            (0..req.n_samples).map(|_| self.sample_state(req)).collect();
-        let mut decode_ms = 0.0;
-        for step in 0..self.sim.future_steps {
-            decode_ms += self.step_samples(
-                model,
-                &mut samples,
-                req.seed
-                    .wrapping_mul(7919)
-                    .wrapping_add(step as i32 * 104_729),
-                req.temperature,
-            )?;
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::new(CacheStats::default()));
+        self.rollout_with_cache(model, req, &pool)
+    }
+
+    /// Run a full rollout request: S samples x future_steps decode steps,
+    /// tokenizing only frontier tokens against `pool`'s session caches.
+    pub fn rollout_with_cache(
+        &self,
+        model: &ModelHandle,
+        req: &RolloutRequest,
+        pool: &KvCachePool,
+    ) -> Result<RolloutResult> {
+        let mut samples: Vec<SampleState> = (0..req.n_samples)
+            .map(|i| self.sample_state(req, i as u32))
+            .collect();
+        let stepped = (|| -> Result<f64> {
+            let mut decode_ms = 0.0;
+            for step in 0..self.sim.future_steps {
+                decode_ms += self.step_samples(
+                    model,
+                    &mut samples,
+                    pool,
+                    req.seed
+                        .wrapping_mul(7919)
+                        .wrapping_add(step as i32 * 104_729),
+                    req.temperature,
+                )?;
+            }
+            Ok(decode_ms)
+        })();
+        // session lifecycle: release before propagating any decode error
+        for s in &samples {
+            pool.end_session(s.key);
         }
-        decode_ms /= self.sim.future_steps as f64;
+        let decode_ms = stepped? / self.sim.future_steps as f64;
 
         let n_agents = samples[0].track.len();
         let trajectories: Vec<Vec<Vec<(f64, f64)>>> =

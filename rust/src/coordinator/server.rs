@@ -18,6 +18,7 @@ use crate::config::{Method, SystemConfig};
 use crate::runtime::Engine;
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::kvcache::{CacheConfig, KvCachePool};
 use super::model::ModelHandle;
 use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
 use super::telemetry::ServerStats;
@@ -151,6 +152,12 @@ fn inference_thread(
         .map(|m| (m.name(), Batcher::new(batcher_cfg.clone())))
         .collect();
 
+    // The server owns the KV/tokenization cache pool: sessions are
+    // allocated per scene-sample as rollouts run, map rows are shared
+    // across requests for the same scene, and the pool's counters feed the
+    // ServerStats summary (hits/misses/evictions/resident bytes).
+    let kv_pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats.cache));
+
     let mut running = true;
     while running {
         // sleep until the nearest batcher deadline (or a short idle tick)
@@ -193,7 +200,7 @@ fn inference_thread(
                 let model = models.get_mut(name).unwrap();
                 for env in ready.items {
                     let t0 = Instant::now();
-                    let result = rollout.rollout(model, &env.request);
+                    let result = rollout.rollout_with_cache(model, &env.request, &kv_pool);
                     stats.decode_latency.record(t0.elapsed());
                     match &result {
                         Ok(_) => stats.requests_done.inc(),

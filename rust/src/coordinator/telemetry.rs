@@ -23,6 +23,80 @@ impl Counter {
     }
 }
 
+/// Up/down gauge (resident bytes, live sessions, ...).
+#[derive(Default, Debug)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (never wraps below zero).
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.v.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self
+                .v
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// KV/tokenization cache counters for the incremental decode engine
+/// (DESIGN.md §10): session and map-row hit rates, sliding-window and
+/// capacity evictions, and resident bytes across all live caches.
+#[derive(Default, Debug)]
+pub struct CacheStats {
+    pub hits: Counter,
+    pub misses: Counter,
+    pub evictions: Counter,
+    pub map_hits: Counter,
+    pub map_misses: Counter,
+    pub resident_bytes: Gauge,
+}
+
+impl CacheStats {
+    /// Session hit rate in [0, 1]; 0 when no lookups happened yet.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.get();
+        let total = h + self.misses.get();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "cache hits={} misses={} ({:.0}%) evict={} map_hits={} map_misses={} resident={}B",
+            self.hits.get(),
+            self.misses.get(),
+            self.hit_rate() * 100.0,
+            self.evictions.get(),
+            self.map_hits.get(),
+            self.map_misses.get(),
+            self.resident_bytes.get(),
+        )
+    }
+}
+
 /// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
 #[derive(Debug)]
 pub struct LatencyHistogram {
@@ -94,13 +168,15 @@ pub struct ServerStats {
     pub queue_rejections: Counter,
     pub e2e_latency: LatencyHistogram,
     pub decode_latency: LatencyHistogram,
+    /// Shared with the server's [`crate::coordinator::kvcache::KvCachePool`].
+    pub cache: std::sync::Arc<CacheStats>,
 }
 
 impl ServerStats {
     pub fn summary(&self) -> String {
         format!(
             "in={} done={} failed={} batches={} pad={} rej={} \
-             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms",
+             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {}",
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_failed.get(),
@@ -110,6 +186,7 @@ impl ServerStats {
             self.e2e_latency.mean_us() / 1e3,
             self.e2e_latency.percentile_us(95.0) as f64 / 1e3,
             self.decode_latency.mean_us() / 1e3,
+            self.cache.summary(),
         )
     }
 }
@@ -145,6 +222,30 @@ mod tests {
         assert_eq!(h.count(), 100);
         assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
         assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        let g = Gauge::default();
+        g.add(10);
+        g.sub(3);
+        assert_eq!(g.get(), 7);
+        g.sub(100);
+        assert_eq!(g.get(), 0);
+        g.set(42);
+        assert_eq!(g.get(), 42);
+    }
+
+    #[test]
+    fn cache_stats_hit_rate_and_summary() {
+        let c = CacheStats::default();
+        assert_eq!(c.hit_rate(), 0.0);
+        c.hits.add(3);
+        c.misses.inc();
+        c.resident_bytes.add(1024);
+        assert!((c.hit_rate() - 0.75).abs() < 1e-12);
+        let s = c.summary();
+        assert!(s.contains("hits=3") && s.contains("resident=1024B"), "{s}");
     }
 
     #[test]

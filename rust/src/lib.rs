@@ -9,13 +9,22 @@
 //!   (`python/compile/model.py`), four relative-attention variants.
 //! * **L3 (this crate)** — the serving/training coordinator and every
 //!   substrate: synthetic driving simulator, tokenizer, dataset pipeline,
-//!   PJRT runtime, batcher/router/rollout scheduler/trainer, metrics, and
-//!   CPU reference implementations of the paper's Algorithms 1 and 2.
+//!   PJRT runtime, batcher/router/rollout scheduler/trainer, metrics, the
+//!   CPU reference implementations of the paper's Algorithms 1 and 2, and
+//!   the incremental decode engine (SE(2)-anchored KV feature cache +
+//!   per-session tokenization cache) for streaming rollout.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
-//! `make artifacts` and loaded via the PJRT C API (`xla` crate).
+//! `make artifacts` and loaded via the PJRT C API (`xla` crate, behind the
+//! `pjrt` cargo feature; the default build ships a stub runtime so the
+//! whole CPU path works offline).
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
+
+// The numeric kernels deliberately use indexed loops that mirror the
+// paper's subscript notation (Alg. 1/2, Eq. 11-19); zipped iterators would
+// obscure the correspondence that the side-by-side review relies on.
+#![allow(clippy::needless_range_loop)]
 
 pub mod attention;
 pub mod benchlib;

@@ -1,10 +1,17 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
 //! the request path.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
-//! Text is the interchange format (xla_extension 0.5.1 rejects jax>=0.5
-//! serialized protos — see /opt/xla-example/README.md).
+//! Two backends behind one API (DESIGN.md §4):
+//!
+//! * **`pjrt` feature on** — wraps the `xla` crate (PJRT C API):
+//!   `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//!   `client.compile` -> `execute`.  Text is the interchange format
+//!   (xla_extension 0.5.1 rejects jax>=0.5 serialized protos).  Enabling
+//!   the feature requires adding the `xla` crate to `rust/Cargo.toml`.
+//! * **default (stub)** — every artifact load fails loudly with an
+//!   actionable message.  The whole CPU-path system (native attention,
+//!   incremental decode cache, simulator, tokenizer, dataset, batcher,
+//!   telemetry) builds and tests without the XLA toolchain installed.
 //!
 //! Every artifact carries a JSON manifest (input/output names, shapes,
 //! dtypes) emitted by `python/compile/aot.py`; the [`Engine`] validates
@@ -13,16 +20,15 @@
 
 pub mod tensor;
 
-use std::collections::HashMap;
-use std::path::PathBuf;
-use std::sync::Mutex;
-use std::time::Instant;
-
 use anyhow::{bail, Context, Result};
 
 use crate::jsonio::Json;
 
 pub use tensor::{Dtype, HostTensor};
+
+/// True when this build carries the real PJRT backend.  Integration tests
+/// and benches that need artifacts check this and skip otherwise.
+pub const PJRT_ENABLED: bool = cfg!(feature = "pjrt");
 
 /// One input or output slot of an artifact.
 #[derive(Clone, Debug, PartialEq)]
@@ -100,154 +106,247 @@ impl Manifest {
     }
 }
 
-/// A loaded, compiled artifact.
-pub struct Artifact {
-    pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
-    /// Cumulative execution statistics (for telemetry).
-    pub exec_count: std::sync::atomic::AtomicU64,
-    pub exec_nanos: std::sync::atomic::AtomicU64,
-}
-
-impl Artifact {
-    /// Execute with host tensors; returns outputs in manifest order.
-    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let m = &self.manifest;
-        if inputs.len() != m.inputs.len() {
+/// Validate a call's inputs against a manifest (shared by both backends).
+fn validate_inputs(m: &Manifest, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != m.inputs.len() {
+        bail!(
+            "{}: expected {} inputs, got {}",
+            m.name,
+            m.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (t, spec) in inputs.iter().zip(&m.inputs) {
+        if t.shape != spec.shape || t.dtype() != spec.dtype {
             bail!(
-                "{}: expected {} inputs, got {}",
+                "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
                 m.name,
-                m.inputs.len(),
-                inputs.len()
+                spec.name,
+                spec.dtype,
+                spec.shape,
+                t.dtype(),
+                t.shape
             );
         }
-        for (t, spec) in inputs.iter().zip(&m.inputs) {
-            if t.shape != spec.shape || t.dtype() != spec.dtype {
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! Real PJRT backend (requires the `xla` crate).
+
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::tensor::HostTensor;
+    use super::{validate_inputs, Manifest};
+
+    /// A loaded, compiled artifact.
+    pub struct Artifact {
+        pub manifest: Manifest,
+        exe: xla::PjRtLoadedExecutable,
+        /// Cumulative execution statistics (for telemetry).
+        pub exec_count: std::sync::atomic::AtomicU64,
+        pub exec_nanos: std::sync::atomic::AtomicU64,
+    }
+
+    impl Artifact {
+        /// Execute with host tensors; returns outputs in manifest order.
+        pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            let m = &self.manifest;
+            validate_inputs(m, inputs)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(HostTensor::to_literal)
+                .collect::<Result<_>>()?;
+            let t0 = Instant::now();
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            self.exec_count
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.exec_nanos.fetch_add(
+                t0.elapsed().as_nanos() as u64,
+                std::sync::atomic::Ordering::Relaxed,
+            );
+            let parts = tuple.to_tuple()?;
+            if parts.len() != m.outputs.len() {
                 bail!(
-                    "{}: input '{}' expects {:?}{:?}, got {:?}{:?}",
+                    "{}: expected {} outputs, got {}",
                     m.name,
-                    spec.name,
-                    spec.dtype,
-                    spec.shape,
-                    t.dtype(),
-                    t.shape
+                    m.outputs.len(),
+                    parts.len()
                 );
             }
+            parts
+                .into_iter()
+                .zip(&m.outputs)
+                .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+                .collect()
         }
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(HostTensor::to_literal)
-            .collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        self.exec_count
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.exec_nanos.fetch_add(
-            t0.elapsed().as_nanos() as u64,
-            std::sync::atomic::Ordering::Relaxed,
-        );
-        let parts = tuple.to_tuple()?;
-        if parts.len() != m.outputs.len() {
+
+        pub fn mean_exec_ms(&self) -> f64 {
+            let n = self.exec_count.load(std::sync::atomic::Ordering::Relaxed);
+            if n == 0 {
+                return 0.0;
+            }
+            self.exec_nanos.load(std::sync::atomic::Ordering::Relaxed) as f64
+                / n as f64
+                / 1e6
+        }
+    }
+
+    /// The runtime engine: one PJRT client + a lazy artifact cache.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        artifacts: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+    }
+
+    impl Engine {
+        /// Create a CPU engine over an artifact directory.
+        pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Engine {
+                client,
+                dir: artifact_dir.into(),
+                artifacts: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load (or fetch cached) artifact by name.
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+            if let Some(a) = self.artifacts.lock().unwrap().get(name) {
+                return Ok(std::sync::Arc::clone(a));
+            }
+            let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+            let man_path = self.dir.join(format!("{name}.manifest.json"));
+            let manifest = Manifest::parse(
+                &std::fs::read_to_string(&man_path)
+                    .with_context(|| format!("read {}", man_path.display()))?,
+            )?;
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            eprintln!(
+                "[runtime] compiled {name} in {:.2}s ({} in / {} out)",
+                t0.elapsed().as_secs_f64(),
+                manifest.inputs.len(),
+                manifest.outputs.len()
+            );
+            let artifact = std::sync::Arc::new(Artifact {
+                manifest,
+                exe,
+                exec_count: Default::default(),
+                exec_nanos: Default::default(),
+            });
+            self.artifacts
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), std::sync::Arc::clone(&artifact));
+            Ok(artifact)
+        }
+
+        /// Convenience: load + execute.
+        pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            self.load(name)?.execute(inputs)
+        }
+
+        /// Names of currently loaded artifacts.
+        pub fn loaded(&self) -> Vec<String> {
+            self.artifacts.lock().unwrap().keys().cloned().collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend: same API, artifact execution fails loudly.  Keeps the
+    //! default (offline) build of the CPU-path system compiling end to end.
+
+    use std::path::PathBuf;
+
+    use anyhow::{bail, Result};
+
+    use super::tensor::HostTensor;
+    use super::{validate_inputs, Manifest};
+
+    /// Stub artifact: carries a manifest, refuses to execute.
+    pub struct Artifact {
+        pub manifest: Manifest,
+        pub exec_count: std::sync::atomic::AtomicU64,
+        pub exec_nanos: std::sync::atomic::AtomicU64,
+    }
+
+    impl Artifact {
+        pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            validate_inputs(&self.manifest, inputs)?;
             bail!(
-                "{}: expected {} outputs, got {}",
-                m.name,
-                m.outputs.len(),
-                parts.len()
+                "artifact '{}': this build has no PJRT backend — rebuild \
+                 with `--features pjrt` (and the `xla` dependency)",
+                self.manifest.name
             );
         }
-        parts
-            .into_iter()
-            .zip(&m.outputs)
-            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
-            .collect()
-    }
 
-    pub fn mean_exec_ms(&self) -> f64 {
-        let n = self.exec_count.load(std::sync::atomic::Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
+        pub fn mean_exec_ms(&self) -> f64 {
+            0.0
         }
-        self.exec_nanos.load(std::sync::atomic::Ordering::Relaxed) as f64
-            / n as f64
-            / 1e6
-    }
-}
-
-/// The runtime engine: one PJRT client + a lazy artifact cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    artifacts: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
-}
-
-impl Engine {
-    /// Create a CPU engine over an artifact directory.
-    pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            dir: artifact_dir.into(),
-            artifacts: Mutex::new(HashMap::new()),
-        })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub engine: remembers the artifact directory, fails on load.
+    pub struct Engine {
+        dir: PathBuf,
     }
 
-    /// Load (or fetch cached) artifact by name.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
-        if let Some(a) = self.artifacts.lock().unwrap().get(name) {
-            return Ok(std::sync::Arc::clone(a));
+    impl Engine {
+        pub fn cpu(artifact_dir: impl Into<PathBuf>) -> Result<Engine> {
+            Ok(Engine {
+                dir: artifact_dir.into(),
+            })
         }
-        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
-        let man_path = self.dir.join(format!("{name}.manifest.json"));
-        let manifest = Manifest::parse(
-            &std::fs::read_to_string(&man_path)
-                .with_context(|| format!("read {}", man_path.display()))?,
-        )?;
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_path
-                .to_str()
-                .context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {name}"))?;
-        eprintln!(
-            "[runtime] compiled {name} in {:.2}s ({} in / {} out)",
-            t0.elapsed().as_secs_f64(),
-            manifest.inputs.len(),
-            manifest.outputs.len()
-        );
-        let artifact = std::sync::Arc::new(Artifact {
-            manifest,
-            exe,
-            exec_count: Default::default(),
-            exec_nanos: Default::default(),
-        });
-        self.artifacts
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), std::sync::Arc::clone(&artifact));
-        Ok(artifact)
-    }
 
-    /// Convenience: load + execute.
-    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.load(name)?.execute(inputs)
-    }
+        pub fn platform(&self) -> String {
+            "cpu (stub — built without the `pjrt` feature)".to_string()
+        }
 
-    /// Names of currently loaded artifacts.
-    pub fn loaded(&self) -> Vec<String> {
-        self.artifacts.lock().unwrap().keys().cloned().collect()
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Artifact>> {
+            bail!(
+                "cannot load artifact '{}' from {}: this build has no PJRT \
+                 backend — rebuild with `--features pjrt` (and the `xla` \
+                 dependency); the native CPU attention path does not need it",
+                name,
+                self.dir.display()
+            );
+        }
+
+        pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+            self.load(name)?.execute(inputs)
+        }
+
+        pub fn loaded(&self) -> Vec<String> {
+            Vec::new()
+        }
     }
 }
+
+pub use backend::{Artifact, Engine};
 
 #[cfg(test)]
 mod tests {
@@ -276,5 +375,27 @@ mod tests {
     fn manifest_rejects_unknown_dtype() {
         let text = r#"{"name":"x","inputs":[{"name":"a","shape":[1],"dtype":"float64"}],"outputs":[]}"#;
         assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn validate_inputs_catches_shape_drift() {
+        let m = Manifest::parse(
+            r#"{"name":"t","inputs":[{"name":"a","shape":[2],"dtype":"float32"}],"outputs":[]}"#,
+        )
+        .unwrap();
+        assert!(validate_inputs(&m, &[HostTensor::f32(vec![2], vec![0.0; 2])]).is_ok());
+        assert!(validate_inputs(&m, &[HostTensor::f32(vec![3], vec![0.0; 3])]).is_err());
+        assert!(validate_inputs(&m, &[HostTensor::i32(vec![2], vec![0; 2])]).is_err());
+        assert!(validate_inputs(&m, &[]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_fails_loudly() {
+        let e = Engine::cpu("artifacts").unwrap();
+        assert!(e.platform().contains("stub"));
+        let err = e.load("decode_se2fourier").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
+        assert!(e.loaded().is_empty());
     }
 }

@@ -1,6 +1,8 @@
-//! Host tensors and Literal conversion.
+//! Host tensors and (with the `pjrt` feature) XLA Literal conversion.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use super::IoSpec;
 
@@ -97,6 +99,7 @@ impl HostTensor {
     }
 
     /// Convert to an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -117,6 +120,7 @@ impl HostTensor {
     }
 
     /// Read back from an XLA literal, checking against the manifest spec.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<HostTensor> {
         let data = match spec.dtype {
             Dtype::F32 => TensorData::F32(

@@ -140,7 +140,9 @@ impl Tokenizer {
         frame.transform_point(mx / self.sim.pos_scale, my / self.sim.pos_scale)
     }
 
-    fn map_features(&self, e: &MapElement, out: &mut [f32]) {
+    /// Feature row of one map element (frame-invariant; public so the
+    /// incremental window cache can tokenize rows individually).
+    pub fn map_features(&self, e: &MapElement, out: &mut [f32]) {
         out.iter_mut().for_each(|v| *v = 0.0);
         match e.kind {
             MapElementKind::Lane => out[3] = 1.0,
@@ -153,7 +155,9 @@ impl Tokenizer {
         out[15] = 1.0;
     }
 
-    fn agent_features(&self, a: &AgentState, out: &mut [f32]) {
+    /// Feature row of one agent state (frame-invariant; public so the
+    /// incremental window cache can tokenize only the frontier step).
+    pub fn agent_features(&self, a: &AgentState, out: &mut [f32]) {
         out.iter_mut().for_each(|v| *v = 0.0);
         match a.kind {
             AgentKind::Vehicle => out[0] = 1.0,

@@ -31,6 +31,10 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn full_stack_integration() {
+    if !se2attn::runtime::PJRT_ENABLED {
+        eprintln!("SKIPPED: built without the `pjrt` feature (stub runtime)");
+        return;
+    }
     if !artifacts_available() {
         eprintln!("SKIPPED: run `make artifacts` first");
         return;

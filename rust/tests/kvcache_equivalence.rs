@@ -1,0 +1,205 @@
+//! Cache-correctness integration tests for the incremental decode
+//! subsystem (no PJRT needed): the acceptance properties of DESIGN.md §10.
+//!
+//! 1. Incremental decode output == full-window recompute within 1e-5,
+//!    stepped across a real scenario's sliding window.
+//! 2. Outputs stay invariant when the whole scene *and the cached state*
+//!    are re-anchored under a random global SE(2) transform.
+//! 3. The serving tokenization cache is bit-identical to full
+//!    re-tokenization through an entire simulated rollout.
+
+use std::sync::Arc;
+
+use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::{linear, AttnProblem};
+use se2attn::config::{Method, ModelConfig, SimConfig};
+use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
+use se2attn::coordinator::telemetry::CacheStats;
+use se2attn::geometry::Pose;
+use se2attn::prng::Rng;
+use se2attn::sim::{AgentState, ScenarioGenerator};
+use se2attn::tokenizer::Tokenizer;
+
+fn test_model_config(sim: &SimConfig) -> ModelConfig {
+    ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 48,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: sim.tokens_per_scene(),
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: 12,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Streaming decode over a growing token set equals Algorithm 2 recomputed
+/// from scratch at every step, within 1e-5.
+#[test]
+fn incremental_decode_matches_full_recompute() {
+    let (d, f) = (12usize, 16usize);
+    let scales = vec![1.0, 0.5];
+    let mut rng = Rng::new(314);
+    let steps = 10usize;
+    let per_step = 6usize;
+
+    let mut eng = IncrementalAttention::new(IncrementalConfig {
+        method: Method::Se2Fourier,
+        d,
+        fourier_f: f,
+        scales: scales.clone(),
+    });
+    let mut all_k: Vec<f32> = Vec::new();
+    let mut all_v: Vec<f32> = Vec::new();
+    let mut all_poses: Vec<Pose> = Vec::new();
+    let mut all_t: Vec<i32> = Vec::new();
+
+    for step in 0..steps {
+        let k: Vec<f32> = (0..per_step * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..per_step * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..per_step)
+            .map(|_| Pose::new(rng.range(-1.5, 1.5), rng.range(-1.5, 1.5), rng.range(-3.1, 3.1)))
+            .collect();
+        let t = vec![step as i32; per_step];
+        eng.append(&k, &v, &poses, &t);
+        all_k.extend_from_slice(&k);
+        all_v.extend_from_slice(&v);
+        all_poses.extend_from_slice(&poses);
+        all_t.extend_from_slice(&t);
+
+        // frontier queries = this step's tokens
+        let q: Vec<f32> = (0..per_step * d).map(|_| rng.normal() as f32).collect();
+        let got = eng.attend(&q, &poses, &t).out;
+        let want = linear::attention(&AttnProblem {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: &scales,
+            q: &q,
+            k: &all_k,
+            v: &all_v,
+            pose_q: &poses,
+            pose_k: &all_poses,
+            tq: &t,
+            tk: &all_t,
+        })
+        .out;
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-5, "step {step}: cached vs recompute diff {err}");
+    }
+}
+
+/// Re-anchoring the cached state under a random global SE(2) transform
+/// leaves decode outputs unchanged within 1e-5, and the re-anchored cache
+/// agrees with a full recompute in the new frame within 1e-5.
+#[test]
+fn incremental_decode_invariant_under_random_re_anchor() {
+    let (d, f) = (12usize, 24usize);
+    let scales = vec![1.0, 0.5];
+    let mut rng = Rng::new(2718);
+    for trial in 0..5 {
+        let m = 24usize;
+        let n = 6usize;
+        let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let pk: Vec<Pose> = (0..m)
+            .map(|_| Pose::new(rng.range(-1.2, 1.2), rng.range(-1.2, 1.2), rng.range(-3.1, 3.1)))
+            .collect();
+        let pq: Vec<Pose> = (0..n)
+            .map(|_| Pose::new(rng.range(-1.2, 1.2), rng.range(-1.2, 1.2), rng.range(-3.1, 3.1)))
+            .collect();
+        let tk: Vec<i32> = (0..m).map(|i| (i / 6) as i32).collect();
+        let tq = vec![9i32; n];
+        let g = Pose::new(rng.range(-0.8, 0.8), rng.range(-0.8, 0.8), rng.range(-3.1, 3.1));
+
+        let cfg = IncrementalConfig {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: scales.clone(),
+        };
+        let mut eng = IncrementalAttention::new(cfg);
+        eng.append(&k, &v, &pk, &tk);
+        let before = eng.attend(&q, &pq, &tq).out;
+
+        // re-anchor the whole scene AND the cached state by g
+        eng.re_anchor(&g).expect("se2fourier re-anchor");
+        let pq_new: Vec<Pose> = pq.iter().map(|p| g.compose(p)).collect();
+        let after = eng.attend(&q, &pq_new, &tq).out;
+        let err = max_abs_diff(&before, &after);
+        assert!(err < 1e-5, "trial {trial}: invariance diff {err}");
+
+        // and the cached path agrees with recomputing in the new frame
+        let pk_new: Vec<Pose> = pk.iter().map(|p| g.compose(p)).collect();
+        let recomputed = linear::attention(&AttnProblem {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: &scales,
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &pq_new,
+            pose_k: &pk_new,
+            tq: &tq,
+            tk: &tk,
+        })
+        .out;
+        let err = max_abs_diff(&after, &recomputed);
+        assert!(err < 1e-5, "trial {trial}: cached vs recomputed diff {err}");
+    }
+}
+
+/// Walk a full simulated rollout window: the pool's cached tokenization
+/// must stay bit-identical to full re-tokenization at every decode step,
+/// with the first step a miss and every later step a hit.
+#[test]
+fn pool_tokenization_matches_full_across_rollout() {
+    let sim = SimConfig::default();
+    let tok = Tokenizer::new(&test_model_config(&sim), &sim);
+    let gen = ScenarioGenerator::new(sim.clone());
+    let stats = Arc::new(CacheStats::default());
+    let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+
+    for seed in [1u64, 2] {
+        let s = gen.generate(seed);
+        let h = sim.history_steps;
+        for sample in 0..2u32 {
+            let key = SessionKey { scene: s.seed, t0: h as u32 - 1, sample };
+            let mut window: Vec<Vec<AgentState>> =
+                (0..h).map(|t| s.states[t].clone()).collect();
+            for t in h..s.n_steps() {
+                let got = pool.step(key, &tok, &s.map_elements, &window);
+                let want = tok.tokenize_window(&s.map_elements, &window, None);
+                assert_eq!(got.feat, want.feat, "seed {seed} sample {sample} step {t}");
+                assert_eq!(got.pose, want.pose, "seed {seed} sample {sample} step {t}");
+                assert_eq!(got.tq, want.tq);
+                assert_eq!(got.target, want.target);
+                window.remove(0);
+                window.push(s.states[t].clone());
+            }
+            pool.end_session(key);
+        }
+    }
+    // 2 scenes x 2 samples: one miss each, everything else hits; map rows
+    // tokenized once per scene.
+    assert_eq!(stats.misses.get(), 4);
+    assert!(stats.hits.get() > 0);
+    assert_eq!(stats.map_misses.get(), 2);
+    assert!(stats.map_hits.get() >= 2);
+    assert_eq!(pool.live_sessions(), 0);
+}

@@ -1,0 +1,220 @@
+//! Offline stand-in for the `anyhow` crate: the exact API subset this
+//! workspace uses (`Result`, `Error`, `anyhow!`, `bail!`, `Context` on
+//! `Result` and `Option`), implemented dependency-free so `cargo build`
+//! works with no network access.  Swapping back to crates.io anyhow is a
+//! one-line change in `rust/Cargo.toml`; no call site changes.
+//!
+//! Semantics mirrored from upstream:
+//! * `{}` displays the outermost message only;
+//! * `{:#}` displays the whole context chain, colon-separated;
+//! * `{:?}` displays the message plus a "Caused by:" list;
+//! * any `E: std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chain error: the outermost message plus the causes below it.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message (mirror of `Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: ctx.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The cause chain, outermost first (mirror of `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut stack = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            stack.push(e);
+            cur = e.source.as_deref();
+        }
+        stack.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated (anyhow-compatible).
+            let mut first = true;
+            for e in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", e.msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&Error> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, e) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {}", e.msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our context chain so `{:#}`
+        // keeps all the detail.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(match err {
+                None => Error::msg(m),
+                Some(inner) => inner.context(m),
+            });
+        }
+        err.unwrap()
+    }
+}
+
+/// Private dispatch trait so [`Context`] covers both `Result<T, E>` for
+/// std errors *and* `Result<T, Error>` (the same sealed-trait trick
+/// upstream anyhow uses).
+mod private {
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Mirror of `anyhow::Context`: attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Mirror of `anyhow::anyhow!`: format a message into an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Mirror of `anyhow::bail!`: early-return an error from the enclosing fn.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_display() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading index")
+            .unwrap_err()
+            .context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("loading config: reading index"), "{full}");
+        assert!(full.contains("gone"), "{full}");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing");
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 1");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("utf-8"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}
