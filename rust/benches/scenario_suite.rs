@@ -1,0 +1,90 @@
+//! Scenario-suite benchmark: per-family generation + tokenization
+//! throughput, plus a composition snapshot (agent kinds, trajectory
+//! classes) so regressions in world richness are visible next to the
+//! timing numbers.
+
+use se2attn::benchlib::{bench_quick, record_row, Table};
+use se2attn::config::{ModelConfig, SimConfig};
+use se2attn::jsonio::Json;
+use se2attn::sim::suite::registry;
+use se2attn::sim::AgentKind;
+use se2attn::tokenizer::Tokenizer;
+
+fn model_config() -> ModelConfig {
+    ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 48,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: 64,
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: 12,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    }
+}
+
+fn main() {
+    let sim = SimConfig::default();
+    let tok = Tokenizer::new(&model_config(), &sim);
+    let mut table = Table::new(&[
+        "family", "gen ms", "tokenize ms", "lanes", "V/P/C", "classes",
+    ]);
+
+    for fam in registry() {
+        // standalone path: each family's own advisory agent-count knob
+        // (the model-serving path pins the count to SimConfig::n_agents)
+        let n_agents = fam.knobs.n_agents;
+        let mut seed = 0u64;
+        let gen_stats = bench_quick(|| {
+            let s = fam.generate_n(&sim, n_agents, seed);
+            seed = seed.wrapping_add(1);
+            std::hint::black_box(s.n_steps());
+        });
+
+        let s = fam.generate_n(&sim, n_agents, 1);
+        let tok_stats = bench_quick(|| {
+            let ts = tok.tokenize_scenario(&s, sim.history_steps - 1);
+            std::hint::black_box(ts.feat.len());
+        });
+
+        let mut kinds = [0usize; 3];
+        for a in &s.states[0] {
+            match a.kind {
+                AgentKind::Vehicle => kinds[0] += 1,
+                AgentKind::Pedestrian => kinds[1] += 1,
+                AgentKind::Cyclist => kinds[2] += 1,
+            }
+        }
+        let mut classes = std::collections::BTreeSet::new();
+        for a in 0..s.n_agents() {
+            classes.insert(s.classify_future(a, sim.history_steps - 1).name());
+        }
+        let class_list: Vec<&str> = classes.into_iter().collect();
+
+        table.row(vec![
+            fam.id.name().to_string(),
+            format!("{:.3}", gen_stats.mean_ms()),
+            format!("{:.4}", tok_stats.mean_ms()),
+            format!("{}", s.map.lanes.len()),
+            format!("{}/{}/{}", kinds[0], kinds[1], kinds[2]),
+            class_list.join("+"),
+        ]);
+        record_row(
+            "scenario_suite",
+            Json::obj(vec![
+                ("family", Json::Str(fam.id.name().to_string())),
+                ("gen", gen_stats.to_json()),
+                ("tokenize", tok_stats.to_json()),
+                ("lanes", Json::Num(s.map.lanes.len() as f64)),
+            ]),
+        );
+    }
+    println!("scenario suite: generation + tokenization per family");
+    table.print();
+}

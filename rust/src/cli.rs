@@ -96,6 +96,17 @@ impl Matches {
     pub fn get_flag(&self, name: &str) -> bool {
         *self.flags.get(name).unwrap_or(&false)
     }
+
+    /// Optional string option: `None` when the value is empty — the idiom
+    /// for opts whose default is `""` (paths, mix specs, ...).
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        let v = self.get(name);
+        if v.is_empty() {
+            None
+        } else {
+            Some(v)
+        }
+    }
 }
 
 /// A multi-command CLI application.
@@ -261,6 +272,26 @@ mod tests {
             _ => panic!(),
         };
         assert_eq!(m.get_usize("port"), 9);
+    }
+
+    #[test]
+    fn get_opt_distinguishes_empty_from_set() {
+        let app = App::new("t", "x").command(
+            Command::new("run", "r")
+                .opt("data", "", "optional path")
+                .opt("port", "8080", "port"),
+        );
+        let m = match app.parse(&args(&["run"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.get_opt("data"), None);
+        assert_eq!(m.get_opt("port"), Some("8080"));
+        let m = match app.parse(&args(&["run", "--data", "x.shard"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!(),
+        };
+        assert_eq!(m.get_opt("data"), Some("x.shard"));
     }
 
     #[test]

@@ -162,6 +162,21 @@ impl SimConfig {
     }
 }
 
+/// Resolve the CLI's `--family` / `--mix` options into a workload mix:
+/// a non-empty `--mix` spec wins; `--family mixed` is a uniform mix over
+/// every registered family; otherwise the single named family.
+pub fn scenario_mix(family: &str, mix: &str) -> Result<crate::sim::suite::WorkloadMix> {
+    use crate::sim::suite::{registry, FamilyId, WorkloadMix};
+    if !mix.trim().is_empty() {
+        return WorkloadMix::parse(mix);
+    }
+    if family == "mixed" {
+        let ids: Vec<FamilyId> = registry().iter().map(|f| f.id).collect();
+        return Ok(WorkloadMix::uniform(&ids));
+    }
+    Ok(WorkloadMix::single(FamilyId::parse(family)?))
+}
+
 /// Whole-system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -233,6 +248,21 @@ mod tests {
         assert_eq!(mc.se2f_proj_dim(), 50 * 8);
         assert_eq!(mc.spatial_scales, vec![1.0, 0.5, 0.25, 2.0]);
         assert_eq!(mc.param_names.len(), 2);
+    }
+
+    #[test]
+    fn scenario_mix_resolution() {
+        use crate::sim::suite::FamilyId;
+        // --mix wins over --family
+        let m = scenario_mix("corridor", "roundabout:2,parking-lot:1").unwrap();
+        assert_eq!(m.entries().len(), 2);
+        // single family
+        let s = scenario_mix("highway-merge", "").unwrap();
+        assert_eq!(s.entries(), &[(FamilyId::HighwayMerge, 1.0)][..]);
+        // 'mixed' covers the whole registry
+        let all = scenario_mix("mixed", "").unwrap();
+        assert_eq!(all.entries().len(), FamilyId::ALL.len());
+        assert!(scenario_mix("bogus", "").is_err());
     }
 
     #[test]

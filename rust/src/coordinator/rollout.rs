@@ -51,6 +51,9 @@ pub struct RolloutResult {
     pub min_ade: Vec<f64>,
     /// Per-agent ground-truth class.
     pub classes: Vec<TrajectoryClass>,
+    /// Colliding agent pairs summed over samples (radius
+    /// [`metrics::COLLISION_RADIUS_M`]), for per-family safety metrics.
+    pub collisions: usize,
     /// Per-step mean decode latency (ms) observed for this request.
     pub decode_ms: f64,
 }
@@ -91,7 +94,11 @@ impl RolloutEngine {
             window,
             track: vec![Vec::new(); n_agents],
             key: SessionKey {
-                scene: req.scenario.seed,
+                // family-aware scene id: same-seed scenarios from different
+                // families must not share cached map rows (the pool's
+                // element-count collision guard cannot tell them apart —
+                // every family pads to the same sim.n_map_tokens)
+                scene: req.scenario.scene_id(),
                 t0: req.t0 as u32,
                 sample,
             },
@@ -226,6 +233,10 @@ impl RolloutEngine {
         let n_agents = samples[0].track.len();
         let trajectories: Vec<Vec<Vec<(f64, f64)>>> =
             samples.iter().map(|s| s.track.clone()).collect();
+        let collisions = trajectories
+            .iter()
+            .map(|s| metrics::sample_collisions(s, metrics::COLLISION_RADIUS_M))
+            .sum();
 
         // minADE vs recorded ground-truth future
         let mut min_ade = Vec::with_capacity(n_agents);
@@ -249,6 +260,7 @@ impl RolloutEngine {
             trajectories,
             min_ade,
             classes,
+            collisions,
             decode_ms,
         })
     }

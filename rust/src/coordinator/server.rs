@@ -5,7 +5,9 @@
 //!
 //! Flow: submit -> router (per-method batcher) -> deadline/size flush ->
 //! rollout engine -> respond.  Backpressure surfaces to callers as
-//! `Busy` rejections instead of unbounded queues.
+//! `Busy` rejections instead of unbounded queues.  Shutdown is graceful:
+//! partially filled batches drain *through the rollout engine*, so every
+//! already-accepted caller gets a real result rather than a drop.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -17,7 +19,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Method, SystemConfig};
 use crate::runtime::Engine;
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batcher, BatcherConfig, ReadyBatch};
 use super::kvcache::{CacheConfig, KvCachePool};
 use super::model::ModelHandle;
 use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
@@ -195,32 +197,53 @@ fn inference_thread(
         let now = Instant::now();
         for (name, b) in batchers.iter_mut() {
             while let Some(ready) = b.poll(now) {
-                stats.batches.inc();
-                stats.padded_slots.add(ready.padding as u64);
-                let model = models.get_mut(name).unwrap();
-                for env in ready.items {
-                    let t0 = Instant::now();
-                    let result = rollout.rollout_with_cache(model, &env.request, &kv_pool);
-                    stats.decode_latency.record(t0.elapsed());
-                    match &result {
-                        Ok(_) => stats.requests_done.inc(),
-                        Err(_) => stats.requests_failed.inc(),
-                    }
-                    stats
-                        .e2e_latency
-                        .record(env.submitted_at.elapsed());
-                    let _ = env.respond.send(result);
-                }
+                run_batch(name, ready, &mut models, &rollout, &kv_pool, &stats);
             }
         }
     }
 
-    // drain remaining queued requests with a shutdown error
-    for b in batchers.values_mut() {
-        for ready in b.drain() {
-            for env in ready.items {
-                let _ = env.respond.send(Err(anyhow!("server shutting down")));
-            }
+    // graceful shutdown: drain queued requests through the rollout engine
+    // so every already-accepted caller still gets a real result
+    for (name, b) in batchers.iter_mut() {
+        for mut ready in b.drain() {
+            // drained batches never hit the fixed-shape inference path, so
+            // their (large) padding must not skew the batching metric
+            ready.padding = 0;
+            run_batch(name, ready, &mut models, &rollout, &kv_pool, &stats);
         }
+    }
+}
+
+/// Execute one ready batch and respond to each request (shared by the
+/// steady-state flush and the shutdown drain).
+fn run_batch(
+    name: &str,
+    ready: ReadyBatch<Envelope>,
+    models: &mut BTreeMap<&'static str, ModelHandle>,
+    rollout: &RolloutEngine,
+    kv_pool: &KvCachePool,
+    stats: &ServerStats,
+) {
+    stats.batches.inc();
+    stats.padded_slots.add(ready.padding as u64);
+    let model = models.get_mut(name).unwrap();
+    for env in ready.items {
+        let t0 = Instant::now();
+        let result = rollout.rollout_with_cache(model, &env.request, kv_pool);
+        stats.decode_latency.record(t0.elapsed());
+        match &result {
+            Ok(res) => {
+                stats.requests_done.inc();
+                stats.families.record(
+                    env.request.scenario.family,
+                    &res.min_ade,
+                    res.collisions as u64,
+                    res.trajectories.len() as u64,
+                );
+            }
+            Err(_) => stats.requests_failed.inc(),
+        }
+        stats.e2e_latency.record(env.submitted_at.elapsed());
+        let _ = env.respond.send(result);
     }
 }

@@ -3,6 +3,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::sim::suite::FamilyId;
+
 /// Monotonic counter.
 #[derive(Default, Debug)]
 pub struct Counter {
@@ -97,6 +99,103 @@ impl CacheStats {
     }
 }
 
+/// Per-family serving counters: requests, minADE accumulation (micrometer
+/// integer atomics — no float CAS on the hot path) and collision counts,
+/// one fixed slot per registered [`FamilyId`] so recording stays
+/// allocation-free after construction.
+#[derive(Debug)]
+pub struct FamilyTelemetry {
+    requests: Vec<Counter>,
+    /// Sum of per-agent minADE in micrometers.
+    ade_um: Vec<Counter>,
+    ade_n: Vec<Counter>,
+    collisions: Vec<Counter>,
+    /// Joint trajectory samples served (collision-rate denominator, so
+    /// the reported rate is comparable across `--samples` settings).
+    samples: Vec<Counter>,
+}
+
+impl Default for FamilyTelemetry {
+    fn default() -> Self {
+        let slots = || (0..FamilyId::ALL.len()).map(|_| Counter::default()).collect();
+        FamilyTelemetry {
+            requests: slots(),
+            ade_um: slots(),
+            ade_n: slots(),
+            collisions: slots(),
+            samples: slots(),
+        }
+    }
+}
+
+impl FamilyTelemetry {
+    /// Fold one completed rollout into the family's slot.
+    pub fn record(&self, family: FamilyId, min_ade: &[f64], collisions: u64, samples: u64) {
+        let i = family.index();
+        self.requests[i].inc();
+        for &a in min_ade {
+            if a.is_finite() && a >= 0.0 {
+                self.ade_um[i].add((a * 1e6) as u64);
+                self.ade_n[i].inc();
+            }
+        }
+        self.collisions[i].add(collisions);
+        self.samples[i].add(samples);
+    }
+
+    pub fn requests(&self, family: FamilyId) -> u64 {
+        self.requests[family.index()].get()
+    }
+
+    pub fn collisions(&self, family: FamilyId) -> u64 {
+        self.collisions[family.index()].get()
+    }
+
+    /// Mean colliding pairs per joint sample (0 until something was
+    /// recorded).
+    pub fn collision_rate(&self, family: FamilyId) -> f64 {
+        let i = family.index();
+        let n = self.samples[i].get();
+        if n == 0 {
+            return 0.0;
+        }
+        self.collisions[i].get() as f64 / n as f64
+    }
+
+    /// Mean per-agent minADE in meters (0 until something was recorded).
+    pub fn mean_min_ade_m(&self, family: FamilyId) -> f64 {
+        let i = family.index();
+        let n = self.ade_n[i].get();
+        if n == 0 {
+            return 0.0;
+        }
+        self.ade_um[i].get() as f64 / 1e6 / n as f64
+    }
+
+    /// Compact per-family block for the stats line; only families that
+    /// actually served traffic appear.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = FamilyId::ALL
+            .iter()
+            .filter(|f| self.requests(**f) > 0)
+            .map(|f| {
+                format!(
+                    "{}:req={} minADE={:.2}m col/smp={:.2}",
+                    f.name(),
+                    self.requests(*f),
+                    self.mean_min_ade_m(*f),
+                    self.collision_rate(*f),
+                )
+            })
+            .collect();
+        if parts.is_empty() {
+            "families[-]".to_string()
+        } else {
+            format!("families[{}]", parts.join(" "))
+        }
+    }
+}
+
 /// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
 #[derive(Debug)]
 pub struct LatencyHistogram {
@@ -170,13 +269,15 @@ pub struct ServerStats {
     pub decode_latency: LatencyHistogram,
     /// Shared with the server's [`crate::coordinator::kvcache::KvCachePool`].
     pub cache: std::sync::Arc<CacheStats>,
+    /// Per-scenario-family request/minADE/collision counters.
+    pub families: FamilyTelemetry,
 }
 
 impl ServerStats {
     pub fn summary(&self) -> String {
         format!(
             "in={} done={} failed={} batches={} pad={} rej={} \
-             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {}",
+             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {} {}",
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_failed.get(),
@@ -187,6 +288,7 @@ impl ServerStats {
             self.e2e_latency.percentile_us(95.0) as f64 / 1e3,
             self.decode_latency.mean_us() / 1e3,
             self.cache.summary(),
+            self.families.summary(),
         )
     }
 }
@@ -246,6 +348,31 @@ mod tests {
         assert!((c.hit_rate() - 0.75).abs() < 1e-12);
         let s = c.summary();
         assert!(s.contains("hits=3") && s.contains("resident=1024B"), "{s}");
+    }
+
+    #[test]
+    fn family_telemetry_records_and_summarizes() {
+        let t = FamilyTelemetry::default();
+        assert_eq!(t.summary(), "families[-]");
+        t.record(FamilyId::Roundabout, &[1.5, 2.5], 1, 4);
+        t.record(FamilyId::Roundabout, &[f64::NAN], 0, 4);
+        t.record(FamilyId::ParkingLot, &[0.5], 2, 1);
+        assert_eq!(t.requests(FamilyId::Roundabout), 2);
+        assert_eq!(t.requests(FamilyId::ParkingLot), 1);
+        assert_eq!(t.requests(FamilyId::Corridor), 0);
+        assert!((t.mean_min_ade_m(FamilyId::Roundabout) - 2.0).abs() < 1e-6);
+        assert_eq!(t.collisions(FamilyId::ParkingLot), 2);
+        // per-sample collision rate: 1 pair over 8 samples
+        assert!((t.collision_rate(FamilyId::Roundabout) - 0.125).abs() < 1e-12);
+        assert_eq!(t.collision_rate(FamilyId::Corridor), 0.0);
+        let s = t.summary();
+        assert!(s.contains("roundabout:req=2"), "{s}");
+        assert!(s.contains("parking-lot:req=1"), "{s}");
+        assert!(!s.contains("corridor"), "{s}");
+        // the server stats line carries the per-family block
+        let stats = ServerStats::default();
+        stats.families.record(FamilyId::HighwayMerge, &[3.0], 0, 2);
+        assert!(stats.summary().contains("highway-merge:req=1"));
     }
 
     #[test]

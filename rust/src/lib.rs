@@ -8,11 +8,15 @@
 //! * **L2 (JAX)** — the agent-simulation transformer
 //!   (`python/compile/model.py`), four relative-attention variants.
 //! * **L3 (this crate)** — the serving/training coordinator and every
-//!   substrate: synthetic driving simulator, tokenizer, dataset pipeline,
-//!   PJRT runtime, batcher/router/rollout scheduler/trainer, metrics, the
-//!   CPU reference implementations of the paper's Algorithms 1 and 2, and
-//!   the incremental decode engine (SE(2)-anchored KV feature cache +
-//!   per-session tokenization cache) for streaming rollout.
+//!   substrate: synthetic driving simulator with a procedural scenario
+//!   suite (`sim::suite`: highway merges, signalized crossings,
+//!   roundabouts, parking lots, urban crossings + a weighted workload
+//!   mixer), tokenizer, dataset pipeline, PJRT runtime,
+//!   batcher/router/rollout scheduler/trainer, per-class and per-family
+//!   metrics, the CPU reference implementations of the paper's
+//!   Algorithms 1 and 2, and the incremental decode engine
+//!   (SE(2)-anchored KV feature cache + per-session tokenization cache)
+//!   for streaming rollout.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and loaded via the PJRT C API (`xla` crate, behind the

@@ -1,10 +1,11 @@
 //! `se2-attention` — leader binary: CLI over the coordinator.
 //!
 //! Subcommands:
-//!   info       platform + artifact inventory
-//!   gen-data   generate dataset shards from the synthetic simulator
+//!   info       platform + artifact inventory + scenario-family registry
+//!   gen-data   generate family-tagged dataset shards (--family / --mix)
 //!   train      train one attention variant, log the loss curve
-//!   simulate   batched rollout serving with latency/throughput report
+//!   render     ASCII-render any scenario family (debug)
+//!   simulate   batched rollout serving with per-family stats report
 //!   approx     SE(2) Fourier approximation error probe (Fig. 3 pointwise)
 
 use std::sync::Arc;
@@ -28,6 +29,8 @@ fn app() -> App {
             .opt("artifacts", "artifacts", "artifact directory")
             .opt("examples", "512", "number of examples")
             .opt("seed", "0", "generation seed")
+            .opt("family", "corridor", "scenario family (see `info`), or 'mixed'")
+            .opt("mix", "", "weighted family mix, e.g. 'highway-merge:2,roundabout:1'")
             .opt("out", "data/train.shard", "output shard path"))
         .command(Command::new("train", "train one attention variant")
             .opt("artifacts", "artifacts", "artifact directory")
@@ -41,6 +44,7 @@ fn app() -> App {
             .opt("augment", "0", "SE(2) frame-jitter augmentation magnitude (model units; 0 = off)"))
         .command(Command::new("render", "ASCII-render a scenario (debug)")
             .opt("artifacts", "artifacts", "artifact directory")
+            .opt("family", "corridor", "scenario family to render (see `info`)")
             .opt("seed", "42", "scenario seed")
             .opt("step", "7", "timestep to draw")
             .flag("futures", "overlay ground-truth futures"))
@@ -49,6 +53,8 @@ fn app() -> App {
             .opt("method", "se2fourier", "attention method")
             .opt("scenes", "16", "number of scenario requests")
             .opt("samples", "4", "rollout samples per scene")
+            .opt("family", "corridor", "scenario family (see `info`), or 'mixed'")
+            .opt("mix", "", "weighted family mix, e.g. 'urban-crossing:1,roundabout:3'")
             .opt("seed", "0", "scenario seed base"))
         .command(Command::new("approx", "Fourier approximation error probe")
             .opt("radius", "2.0", "key position radius")
@@ -106,6 +112,19 @@ fn cmd_info(m: &Matches) -> Result<()> {
         "sim           : dt={}s, {} history + {} future steps, {} agents",
         cfg.sim.dt, cfg.sim.history_steps, cfg.sim.future_steps, cfg.sim.n_agents
     );
+    println!("scenario suite:");
+    for f in se2attn::sim::suite::registry() {
+        println!(
+            "  {:<22} {} (standalone agents {}, extent {:.0} m, {:.0}-{:.0} m/s; \
+             serving uses sim n_agents)",
+            f.id.name(),
+            f.about,
+            f.knobs.n_agents,
+            f.knobs.map_extent,
+            f.knobs.speed_range.0,
+            f.knobs.speed_range.1
+        );
+    }
     Ok(())
 }
 
@@ -113,17 +132,28 @@ fn cmd_gen_data(m: &Matches) -> Result<()> {
     let cfg = SystemConfig::load(m.get("artifacts"))?;
     let tok = se2attn::tokenizer::Tokenizer::new(&cfg.model, &cfg.sim);
     let n = m.get_usize("examples");
+    let mix = se2attn::config::scenario_mix(m.get("family"), m.get("mix"))?;
     let t0 = std::time::Instant::now();
-    let examples = se2attn::dataset::generate_examples(&cfg.sim, &tok, m.get_u64("seed"), n);
+    let examples =
+        se2attn::dataset::generate_examples_mix(&cfg.sim, &tok, &mix, m.get_u64("seed"), n);
     let out = m.get("out");
     if let Some(parent) = std::path::Path::new(out).parent() {
         std::fs::create_dir_all(parent)?;
     }
     se2attn::dataset::write_shard(out, &examples)?;
+    // per-family shard composition
+    let mut counts: std::collections::BTreeMap<&'static str, usize> =
+        std::collections::BTreeMap::new();
+    for e in &examples {
+        *counts.entry(e.family_id().name()).or_insert(0) += 1;
+    }
+    let breakdown: Vec<String> =
+        counts.iter().map(|(k, v)| format!("{k}={v}")).collect();
     println!(
-        "wrote {} examples to {out} in {:.1}s",
+        "wrote {} examples to {out} in {:.1}s [{}]",
         examples.len(),
-        t0.elapsed().as_secs_f64()
+        t0.elapsed().as_secs_f64(),
+        breakdown.join(" ")
     );
     Ok(())
 }
@@ -133,10 +163,10 @@ fn cmd_train(m: &Matches) -> Result<()> {
     let method = Method::parse(m.get("method"))?;
     let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
     let mut model = ModelHandle::init(Arc::clone(&engine), method, m.get_u64("seed") as i32)?;
-    if !m.get("resume").is_empty() {
-        let ck = se2attn::checkpoint::Checkpoint::load(m.get("resume"))?;
+    if let Some(resume) = m.get_opt("resume") {
+        let ck = se2attn::checkpoint::Checkpoint::load(resume)?;
         model.restore(&ck, &cfg.model.param_names)?;
-        println!("resumed from {} (step {})", m.get("resume"), model.step);
+        println!("resumed from {resume} (step {})", model.step);
     }
     println!(
         "training {} ({} tensors, {} weights)",
@@ -144,20 +174,20 @@ fn cmd_train(m: &Matches) -> Result<()> {
         model.n_params(),
         model.n_weights()
     );
-    let mut trainer = if m.get("data").is_empty() {
-        Trainer::new(
-            cfg.model.clone(),
-            cfg.sim.clone(),
-            m.get_usize("examples"),
-            m.get_u64("seed"),
-        )
-    } else {
-        let examples = se2attn::dataset::read_shard(m.get("data"))?;
-        println!("loaded {} examples from {}", examples.len(), m.get("data"));
+    let mut trainer = if let Some(data) = m.get_opt("data") {
+        let examples = se2attn::dataset::read_shard(data)?;
+        println!("loaded {} examples from {data}", examples.len());
         Trainer::from_examples(
             cfg.model.clone(),
             cfg.sim.clone(),
             examples,
+            m.get_u64("seed"),
+        )
+    } else {
+        Trainer::new(
+            cfg.model.clone(),
+            cfg.sim.clone(),
+            m.get_usize("examples"),
             m.get_u64("seed"),
         )
     };
@@ -167,11 +197,11 @@ fn cmd_train(m: &Matches) -> Result<()> {
         println!("augmentation: SE(2) frame jitter up to {aug} model units");
     }
     let report = trainer.run(&mut model, m.get_u64("steps"))?;
-    if !m.get("save").is_empty() {
+    if let Some(save) = m.get_opt("save") {
         model
             .to_checkpoint(&cfg.model.param_names)?
-            .save(m.get("save"))?;
-        println!("checkpoint written to {}", m.get("save"));
+            .save(save)?;
+        println!("checkpoint written to {save}");
     }
     for (step, loss) in &report.loss_curve {
         println!("step {step:>5}  loss {loss:.4}");
@@ -188,24 +218,36 @@ fn cmd_train(m: &Matches) -> Result<()> {
 
 fn cmd_render(m: &Matches) -> Result<()> {
     let cfg = SystemConfig::load(m.get("artifacts"))?;
-    let gen = se2attn::sim::ScenarioGenerator::new(cfg.sim.clone());
-    let s = gen.generate(m.get_u64("seed"));
+    let family = se2attn::sim::FamilyId::parse(m.get("family"))?;
+    let s = se2attn::sim::Family::new(family).generate(&cfg.sim, m.get_u64("seed"));
     let step = m.get_usize("step").min(s.n_steps() - 1);
-    if m.get_flag("futures") {
+    println!("family: {} (seed {})", family.name(), s.seed);
+    let futures = m.get_flag("futures");
+    if futures {
         println!(
             "{}",
             se2attn::sim::render::render_futures(&s, step, 100, 30)
         );
-        for a in 0..s.n_agents() {
-            println!(
-                "agent {a}: class {}",
-                s.classify_future(a, step).name()
-            );
-        }
     } else {
         println!(
             "{}",
             se2attn::sim::render::render_scenario(&s, step, None, 100, 30)
+        );
+    }
+    // per-agent legend: kind + heading always (the canvas draws kinds,
+    // not directions); trajectory class when the futures overlay is shown
+    for (a, st) in s.states[step].iter().enumerate() {
+        let class = if futures {
+            format!("  class {}", s.classify_future(a, step).name())
+        } else {
+            String::new()
+        };
+        println!(
+            "agent {a}: {} {} v={:.1} m/s heading {}{class}",
+            if a == 0 { "R" } else { " " },
+            se2attn::sim::render::kind_glyph(st.kind),
+            st.speed,
+            se2attn::sim::render::heading_glyph(st.pose.theta),
         );
     }
     Ok(())
@@ -218,17 +260,20 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
     let samples = m.get_usize("samples");
     let seed = m.get_u64("seed");
 
+    let mix = se2attn::config::scenario_mix(m.get("family"), m.get("mix"))?;
+
     let server = Server::start(
         cfg.clone(),
         vec![method],
         seed as i32,
         BatcherConfig::default(),
     )?;
-    let gen = se2attn::sim::ScenarioGenerator::new(cfg.sim.clone());
+    let gen = se2attn::sim::MixGenerator::new(cfg.sim.clone(), mix);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..scenes {
         let scenario = gen.generate(seed + i as u64);
+        let family = scenario.family;
         let req = RolloutRequest {
             scenario,
             t0: cfg.sim.history_steps - 1,
@@ -236,11 +281,13 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
             temperature: 1.0,
             seed: i as i32,
         };
-        pending.push(server.submit(method, req));
+        pending.push((family, server.submit(method, req)));
     }
     let mut ades = Vec::new();
-    for rx in pending {
+    let mut breakdown = se2attn::metrics::FamilyBreakdown::default();
+    for (family, rx) in pending {
         let res = rx.recv().context("response channel closed")??;
+        breakdown.add_rollout(family, &res.min_ade, res.collisions, res.trajectories.len());
         ades.extend(res.min_ade);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -252,6 +299,9 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         scenes as f64 / wall,
         mean_ade
     );
+    for line in breakdown.summary_lines() {
+        println!("  {line}");
+    }
     println!("server stats: {}", server.stats.summary());
     Ok(())
 }

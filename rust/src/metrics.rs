@@ -1,10 +1,12 @@
 //! Evaluation metrics (paper Table I): negative log likelihood over the
 //! action codebook and minADE over sampled rollouts, broken down by
-//! ground-truth trajectory class (stationary / straight / turning).
+//! ground-truth trajectory class (stationary / straight / turning) and —
+//! for the scenario suite — by world family (minADE + collision rate).
 
 use std::collections::BTreeMap;
 
 use crate::linalg::logsumexp;
+use crate::sim::suite::FamilyId;
 use crate::sim::TrajectoryClass;
 
 /// Mean NLL of targets under logits.
@@ -92,6 +94,109 @@ impl TableOneRow {
     }
 }
 
+/// Center-to-center distance below which two agents count as colliding
+/// (a vehicle-width-scale proxy; the simulator has no contact physics).
+pub const COLLISION_RADIUS_M: f64 = 2.0;
+
+/// Colliding agent pairs in one joint trajectory sample
+/// (`tracks[agent][step]` = world position): a pair collides if the two
+/// agents come within `radius` meters at any common step.
+pub fn sample_collisions(tracks: &[Vec<(f64, f64)>], radius: f64) -> usize {
+    let r2 = radius * radius;
+    let mut pairs = 0;
+    for i in 0..tracks.len() {
+        for j in i + 1..tracks.len() {
+            let steps = tracks[i].len().min(tracks[j].len());
+            let hit = (0..steps).any(|t| {
+                let dx = tracks[i][t].0 - tracks[j][t].0;
+                let dy = tracks[i][t].1 - tracks[j][t].1;
+                dx * dx + dy * dy < r2
+            });
+            if hit {
+                pairs += 1;
+            }
+        }
+    }
+    pairs
+}
+
+#[derive(Clone, Debug, Default)]
+struct FamilyAccum {
+    ade_sum: f64,
+    ade_n: usize,
+    collisions: usize,
+    samples: usize,
+    rollouts: usize,
+}
+
+/// Per-family minADE / collision aggregation — the scenario-suite analogue
+/// of [`TableOneRow`], keyed by [`FamilyId`].
+#[derive(Clone, Debug, Default)]
+pub struct FamilyBreakdown {
+    per_family: BTreeMap<&'static str, FamilyAccum>,
+}
+
+impl FamilyBreakdown {
+    /// Fold one rollout result in: per-agent minADEs, colliding pairs
+    /// summed over the request's joint samples, and the sample count —
+    /// collision rates are normalized per sample so runs with different
+    /// `--samples` stay comparable.
+    pub fn add_rollout(
+        &mut self,
+        family: FamilyId,
+        min_ade: &[f64],
+        collisions: usize,
+        n_samples: usize,
+    ) {
+        let e = self.per_family.entry(family.name()).or_default();
+        for &a in min_ade {
+            if a.is_finite() {
+                e.ade_sum += a;
+                e.ade_n += 1;
+            }
+        }
+        e.collisions += collisions;
+        e.samples += n_samples;
+        e.rollouts += 1;
+    }
+
+    pub fn rollouts(&self, family: FamilyId) -> usize {
+        self.per_family.get(family.name()).map_or(0, |e| e.rollouts)
+    }
+
+    pub fn min_ade(&self, family: FamilyId) -> f64 {
+        match self.per_family.get(family.name()) {
+            Some(e) if e.ade_n > 0 => e.ade_sum / e.ade_n as f64,
+            _ => f64::NAN,
+        }
+    }
+
+    /// Mean colliding pairs per joint trajectory sample.
+    pub fn collision_rate(&self, family: FamilyId) -> f64 {
+        match self.per_family.get(family.name()) {
+            Some(e) if e.samples > 0 => e.collisions as f64 / e.samples as f64,
+            _ => f64::NAN,
+        }
+    }
+
+    /// One line per family that saw traffic, for report tails.
+    pub fn summary_lines(&self) -> Vec<String> {
+        FamilyId::ALL
+            .iter()
+            .filter(|f| self.rollouts(**f) > 0)
+            .map(|f| {
+                format!(
+                    "{:<22} n={:<4} minADE {:>6.2} m  collisions/sample {:.2}",
+                    f.name(),
+                    self.rollouts(*f),
+                    self.min_ade(*f),
+                    self.collision_rate(*f)
+                )
+            })
+            .collect()
+    }
+}
+
 /// Mean and sample-std over per-seed results (Table I reports means of 3
 /// seeds).
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
@@ -164,6 +269,37 @@ mod tests {
         assert!((row.min_ade(TrajectoryClass::Straight) - 1.0).abs() < 1e-12);
         assert!(row.min_ade(TrajectoryClass::Stationary).is_nan());
         assert_eq!(row.count(TrajectoryClass::Turning), 2);
+    }
+
+    #[test]
+    fn sample_collisions_counts_close_pairs() {
+        // agents 0/1 brush past each other at step 1; agent 2 stays away
+        let tracks = vec![
+            vec![(0.0, 0.0), (5.0, 0.0), (10.0, 0.0)],
+            vec![(10.0, 0.0), (5.5, 0.0), (0.0, 0.0)],
+            vec![(0.0, 50.0), (5.0, 50.0), (10.0, 50.0)],
+        ];
+        assert_eq!(sample_collisions(&tracks, 2.0), 1);
+        assert_eq!(sample_collisions(&tracks, 0.1), 0);
+        // ragged/empty tracks are safe
+        assert_eq!(sample_collisions(&[vec![], vec![(0.0, 0.0)]], 2.0), 0);
+    }
+
+    #[test]
+    fn family_breakdown_aggregates() {
+        let mut b = FamilyBreakdown::default();
+        b.add_rollout(FamilyId::Roundabout, &[2.0, 4.0], 2, 4);
+        b.add_rollout(FamilyId::Roundabout, &[6.0], 0, 4);
+        b.add_rollout(FamilyId::ParkingLot, &[1.0, f64::NAN], 0, 1);
+        assert_eq!(b.rollouts(FamilyId::Roundabout), 2);
+        assert!((b.min_ade(FamilyId::Roundabout) - 4.0).abs() < 1e-12);
+        // 2 colliding pairs over 8 joint samples: per-sample rate, so the
+        // number is comparable across different --samples settings
+        assert!((b.collision_rate(FamilyId::Roundabout) - 0.25).abs() < 1e-12);
+        assert!((b.min_ade(FamilyId::ParkingLot) - 1.0).abs() < 1e-12, "NaN skipped");
+        assert!(b.min_ade(FamilyId::HighwayMerge).is_nan());
+        assert!(b.collision_rate(FamilyId::HighwayMerge).is_nan());
+        assert_eq!(b.summary_lines().len(), 2);
     }
 
     #[test]

@@ -83,6 +83,25 @@ pub enum Policy {
         target_speed: f64,
         stop_at: Option<f64>,
     },
+    /// Follow `from`, then merge into `to` once past arc position
+    /// `trigger_s` on the source lane (highway on-ramps, overtakes).
+    LaneChange {
+        from: usize,
+        to: usize,
+        target_speed: f64,
+        trigger_s: f64,
+    },
+    /// Follow `lane` and hold at arc position `merge_s` while any moving
+    /// agent is within `clear_radius` of `merge_point`; once clear and at
+    /// the line, continue on `next_lane` (roundabout / ramp yield-on-entry).
+    YieldEntry {
+        lane: usize,
+        next_lane: usize,
+        target_speed: f64,
+        merge_s: f64,
+        merge_point: (f64, f64),
+        clear_radius: f64,
+    },
     /// Pedestrian: walk toward a goal point, then pick a new one.
     Wander { goal: (f64, f64), speed: f64 },
     /// Parked / stationary agent.
@@ -94,6 +113,84 @@ const LOOKAHEAD_M: f64 = 6.0;
 /// IDM-ish time headway (s) and minimum gap (m).
 const HEADWAY_S: f64 = 1.5;
 const MIN_GAP_M: f64 = 4.0;
+
+/// Nearest arc position of `pose` on lane `lane` (ties resolve to the
+/// earliest sample, so self-overlapping lanes — roundabout loops — keep a
+/// stable notion of progress).
+fn lane_progress(map: &LaneGraph, lane: usize, pose: &Pose) -> f64 {
+    let step = super::map::LANE_SAMPLE_STEP_M;
+    let mut best_s = 0.0;
+    let mut best_d = f64::INFINITY;
+    for (pi, p) in map.lanes[lane].points.iter().enumerate() {
+        let d = p.dist(pose);
+        if d < best_d {
+            best_d = d;
+            best_s = pi as f64 * step;
+        }
+    }
+    best_s
+}
+
+/// Pure-pursuit steering + IDM-style speed control toward `lane`,
+/// optionally stopping at arc position `stop_at`.  Shared by every
+/// lane-tracking policy (follow, change, yield).
+fn lane_follow_action(
+    agent: &AgentState,
+    others: &[AgentState],
+    map: &LaneGraph,
+    lane: usize,
+    target_speed: f64,
+    stop_at: Option<f64>,
+) -> KinematicAction {
+    let best_s = lane_progress(map, lane, &agent.pose);
+    lane_follow_action_at(agent, others, map, lane, best_s, target_speed, stop_at)
+}
+
+/// [`lane_follow_action`] with the agent's arc progress on `lane` already
+/// known — policies that computed it for their own transition logic
+/// (lane change trigger, yield line) skip the second O(lane-points) scan.
+fn lane_follow_action_at(
+    agent: &AgentState,
+    others: &[AgentState],
+    map: &LaneGraph,
+    lane: usize,
+    best_s: f64,
+    target_speed: f64,
+    stop_at: Option<f64>,
+) -> KinematicAction {
+    let lane_ref = &map.lanes[lane];
+    // pure pursuit toward a lookahead point
+    let target = lane_ref.pose_at(best_s + LOOKAHEAD_M);
+    let dx = target.x - agent.pose.x;
+    let dy = target.y - agent.pose.y;
+    let desired_heading = dy.atan2(dx);
+    let herr = wrap_angle(desired_heading - agent.pose.theta);
+    let yaw_rate = (1.5 * herr).clamp(-MAX_YAW_RATE, MAX_YAW_RATE);
+
+    // speed control: target speed, reduced by leader and stop line
+    let mut desired = target_speed;
+    // leader: nearest other agent ahead within a cone
+    for o in others {
+        let rel = agent.pose.relative_to(&o.pose);
+        if rel.x > 0.0 && rel.x < 30.0 && rel.y.abs() < 2.5 {
+            let gap = rel.x - MIN_GAP_M;
+            let safe = (gap / HEADWAY_S).max(0.0);
+            desired = desired.min(safe.min(o.speed + gap * 0.3));
+        }
+    }
+    // stop line (if any) and the end of the lane both cap speed
+    // with a comfortable braking profile v = sqrt(2 a d)
+    let route_end = lane_ref.length() - LOOKAHEAD_M;
+    let stop_s = stop_at.map_or(route_end, |s| s.min(route_end));
+    let dist_to_stop = stop_s - best_s;
+    if dist_to_stop > 0.0 {
+        desired = desired.min((2.0 * 2.0 * dist_to_stop).sqrt());
+    } else {
+        desired = 0.0;
+    }
+    let accel = ((desired - agent.speed) * 1.2).clamp(-MAX_ACCEL, 2.5);
+    KinematicAction { accel, yaw_rate }.clamped()
+}
 
 /// Compute the policy's action for `agent` given the world state.
 pub fn plan(
@@ -137,69 +234,127 @@ pub fn plan(
             lane,
             target_speed,
             stop_at,
+        } => (
+            lane_follow_action(agent, others, map, *lane, *target_speed, *stop_at),
+            policy.clone(),
+        ),
+        Policy::LaneChange {
+            from,
+            to,
+            target_speed,
+            trigger_s,
         } => {
-            let lane_ref = &map.lanes[*lane];
-            // progress: nearest arc position on own lane
-            let mut best_s = 0.0;
-            let mut best_d = f64::INFINITY;
-            let step = super::map::LANE_SAMPLE_STEP_M;
-            for (pi, p) in lane_ref.points.iter().enumerate() {
-                let d = p.dist(&agent.pose);
-                if d < best_d {
-                    best_d = d;
-                    best_s = pi as f64 * step;
-                }
-            }
-            // pure pursuit toward a lookahead point
-            let target = lane_ref.pose_at(best_s + LOOKAHEAD_M);
-            let dx = target.x - agent.pose.x;
-            let dy = target.y - agent.pose.y;
-            let desired_heading = dy.atan2(dx);
-            let herr = wrap_angle(desired_heading - agent.pose.theta);
-            let yaw_rate = (1.5 * herr).clamp(-MAX_YAW_RATE, MAX_YAW_RATE);
-
-            // speed control: target speed, reduced by leader and stop line
-            let mut desired = *target_speed;
-            // leader: nearest other agent ahead within a cone
-            for o in others {
-                let rel = agent.pose.relative_to(&o.pose);
-                if rel.x > 0.0 && rel.x < 30.0 && rel.y.abs() < 2.5 {
-                    let gap = rel.x - MIN_GAP_M;
-                    let safe = (gap / HEADWAY_S).max(0.0);
-                    desired = desired.min(safe.min(o.speed + gap * 0.3));
-                }
-            }
-            // stop line (if any) and the end of the lane both cap speed
-            // with a comfortable braking profile v = sqrt(2 a d)
-            let route_end = lane_ref.length() - LOOKAHEAD_M;
-            let stop_s = stop_at.map_or(route_end, |s| s.min(route_end));
-            let dist_to_stop = stop_s - best_s;
-            if dist_to_stop > 0.0 {
-                desired = desired.min((2.0 * 2.0 * dist_to_stop).sqrt());
+            let s_from = lane_progress(map, *from, &agent.pose);
+            if s_from >= *trigger_s {
+                // past the trigger: commit to the target lane for good
+                (
+                    lane_follow_action(agent, others, map, *to, *target_speed, None),
+                    Policy::LaneFollow {
+                        lane: *to,
+                        target_speed: *target_speed,
+                        stop_at: None,
+                    },
+                )
             } else {
-                desired = 0.0;
+                (
+                    lane_follow_action_at(
+                        agent,
+                        others,
+                        map,
+                        *from,
+                        s_from,
+                        *target_speed,
+                        None,
+                    ),
+                    policy.clone(),
+                )
             }
-            let accel = ((desired - agent.speed) * 1.2).clamp(-MAX_ACCEL, 2.5);
-            (KinematicAction { accel, yaw_rate }.clamped(), policy.clone())
+        }
+        Policy::YieldEntry {
+            lane,
+            next_lane,
+            target_speed,
+            merge_s,
+            merge_point,
+            clear_radius,
+        } => {
+            let conflict = others.iter().any(|o| {
+                let dx = o.pose.x - merge_point.0;
+                let dy = o.pose.y - merge_point.1;
+                (dx * dx + dy * dy).sqrt() < *clear_radius && o.speed > 0.5
+            });
+            let s_own = lane_progress(map, *lane, &agent.pose);
+            if !conflict && s_own + LOOKAHEAD_M >= *merge_s {
+                // gap accepted: enter the target lane
+                (
+                    lane_follow_action(agent, others, map, *next_lane, *target_speed, None),
+                    Policy::LaneFollow {
+                        lane: *next_lane,
+                        target_speed: *target_speed,
+                        stop_at: None,
+                    },
+                )
+            } else {
+                // approach (or hold at) the yield line on the entry lane
+                (
+                    lane_follow_action_at(
+                        agent,
+                        others,
+                        map,
+                        *lane,
+                        s_own,
+                        *target_speed,
+                        Some(*merge_s),
+                    ),
+                    policy.clone(),
+                )
+            }
         }
     }
+}
+
+/// Vehicle state at a pose with an explicit initial speed — the single
+/// home of the vehicle dimension distributions, shared by the legacy
+/// spawner and the family builders in [`super::suite`].
+pub fn vehicle_state(pose: Pose, speed: f64, rng: &mut Rng) -> AgentState {
+    AgentState {
+        pose,
+        speed,
+        kind: AgentKind::Vehicle,
+        length: rng.range(4.2, 5.4),
+        width: rng.range(1.8, 2.2),
+        last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+    }
+}
+
+/// Vehicle placed on a lane at arc position `s0`, rolling at a random
+/// fraction of `target_speed` (the legacy spawn distribution).
+pub fn vehicle_on_lane(
+    map: &LaneGraph,
+    lane: usize,
+    s0: f64,
+    target_speed: f64,
+    rng: &mut Rng,
+) -> AgentState {
+    let pose = map.lanes[lane].pose_at(s0);
+    let speed = rng.range(0.3, 1.0) * target_speed;
+    vehicle_state(pose, speed, rng)
 }
 
 /// Spawn an agent appropriate for the policy.
 pub fn spawn(policy: &Policy, map: &LaneGraph, rng: &mut Rng) -> AgentState {
     match policy {
         Policy::LaneFollow { lane, target_speed, .. } => {
-            let lane_ref = &map.lanes[*lane];
-            let s0 = rng.range(0.0, lane_ref.length() * 0.5);
-            let pose = lane_ref.pose_at(s0);
-            AgentState {
-                pose,
-                speed: rng.range(0.3, 1.0) * target_speed,
-                kind: AgentKind::Vehicle,
-                length: rng.range(4.2, 5.4),
-                width: rng.range(1.8, 2.2),
-                last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
-            }
+            let s0 = rng.range(0.0, map.lanes[*lane].length() * 0.5);
+            vehicle_on_lane(map, *lane, s0, *target_speed, rng)
+        }
+        Policy::LaneChange { from, target_speed, trigger_s, .. } => {
+            let s0 = rng.range(0.0, trigger_s.min(map.lanes[*from].length()) * 0.6);
+            vehicle_on_lane(map, *from, s0, *target_speed, rng)
+        }
+        Policy::YieldEntry { lane, target_speed, merge_s, .. } => {
+            let s0 = rng.range(0.0, merge_s.min(map.lanes[*lane].length()) * 0.6);
+            vehicle_on_lane(map, *lane, s0, *target_speed, rng)
         }
         Policy::Wander { .. } => {
             let cw = rng.choice(&map.crosswalks);
@@ -316,6 +471,92 @@ mod tests {
             p = np;
         }
         assert!(agent.speed < 0.8, "vehicle should stop, v={}", agent.speed);
+    }
+
+    /// Two parallel straight lanes 4 m apart (synthetic lane-change arena).
+    fn two_lane_map() -> LaneGraph {
+        LaneGraph {
+            lanes: vec![
+                super::super::map::trace_lane(Pose::new(0.0, 0.0, 0.0), 0.0, 120.0, 12.0),
+                super::super::map::trace_lane(Pose::new(0.0, 4.0, 0.0), 0.0, 120.0, 12.0),
+            ],
+            crosswalks: vec![],
+            signals: vec![],
+        }
+    }
+
+    #[test]
+    fn lane_change_merges_into_target_lane() {
+        let map = two_lane_map();
+        let mut rng = Rng::new(11);
+        let mut agent = vehicle_at(Pose::new(2.0, 0.0, 0.0), 8.0);
+        let mut p = Policy::LaneChange {
+            from: 0,
+            to: 1,
+            target_speed: 10.0,
+            trigger_s: 16.0,
+        };
+        let mut switched = false;
+        for _ in 0..40 {
+            let (action, np) = plan(&p, &agent, &[], &map, &mut rng);
+            agent = agent.step(action, 0.5);
+            if matches!(np, Policy::LaneFollow { lane: 1, .. }) {
+                switched = true;
+            }
+            p = np;
+        }
+        assert!(switched, "lane change must trigger past trigger_s");
+        assert!(
+            (agent.pose.y - 4.0).abs() < 1.5,
+            "vehicle should settle on the target lane, y={}",
+            agent.pose.y
+        );
+    }
+
+    #[test]
+    fn yield_entry_waits_for_conflict_then_merges() {
+        let map = two_lane_map();
+        let mut rng = Rng::new(12);
+        let merge_point = (40.0, 4.0);
+        let policy = Policy::YieldEntry {
+            lane: 0,
+            next_lane: 1,
+            target_speed: 9.0,
+            merge_s: 36.0,
+            merge_point,
+            clear_radius: 10.0,
+        };
+        // a mover parked on the merge point keeps the entry blocked
+        let blocker = vehicle_at(Pose::new(merge_point.0, merge_point.1, 0.0), 6.0);
+        let mut agent = vehicle_at(Pose::new(0.0, 0.0, 0.0), 8.0);
+        let mut p = policy.clone();
+        for _ in 0..60 {
+            let (action, np) = plan(&p, &agent, &[blocker], &map, &mut rng);
+            agent = agent.step(action, 0.5);
+            p = np;
+        }
+        assert!(
+            matches!(p, Policy::YieldEntry { .. }),
+            "blocked entry must keep yielding"
+        );
+        assert!(
+            agent.pose.x < merge_point.0 + LOOKAHEAD_M,
+            "blocked vehicle must hold near the line, x={}",
+            agent.pose.x
+        );
+        assert!(agent.speed < 1.0, "held vehicle stops, v={}", agent.speed);
+
+        // conflict gone: the same agent accepts the gap and merges
+        for _ in 0..40 {
+            let (action, np) = plan(&p, &agent, &[], &map, &mut rng);
+            agent = agent.step(action, 0.5);
+            p = np;
+        }
+        assert!(
+            matches!(p, Policy::LaneFollow { lane: 1, .. }),
+            "cleared entry must transition to the target lane: {p:?}"
+        );
+        assert!(agent.speed > 2.0, "merged vehicle is moving again");
     }
 
     #[test]

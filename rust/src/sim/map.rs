@@ -68,8 +68,10 @@ pub struct LaneGraph {
     pub signals: Vec<(Pose, f64)>,
 }
 
-/// Build a lane from a start pose with constant curvature.
-fn trace_lane(start: Pose, curvature: f64, length_m: f64, speed_limit: f64) -> Lane {
+/// Build a lane from a start pose with constant curvature (public so the
+/// scenario-suite map builders in [`super::suite`] can assemble family
+/// geometries from the same primitive the legacy generator uses).
+pub fn trace_lane(start: Pose, curvature: f64, length_m: f64, speed_limit: f64) -> Lane {
     let n = (length_m / LANE_SAMPLE_STEP_M).ceil() as usize + 1;
     let mut points = Vec::with_capacity(n);
     let mut p = start;
@@ -92,6 +94,39 @@ fn trace_lane(start: Pose, curvature: f64, length_m: f64, speed_limit: f64) -> L
 }
 
 impl LaneGraph {
+    /// An empty graph (synthetic-test substrate).
+    pub fn empty() -> LaneGraph {
+        LaneGraph {
+            lanes: Vec::new(),
+            crosswalks: Vec::new(),
+            signals: Vec::new(),
+        }
+    }
+
+    /// The graph with every pose pushed through a rigid transform `z`
+    /// (lane geometry, crosswalks and signals alike).  Family builders
+    /// construct maps in a canonical frame and then scatter them over
+    /// SE(2) with this, so no family is axis-aligned in world coordinates.
+    pub fn transformed(&self, z: &Pose) -> LaneGraph {
+        LaneGraph {
+            lanes: self
+                .lanes
+                .iter()
+                .map(|l| Lane {
+                    points: l.points.iter().map(|p| z.compose(p)).collect(),
+                    curvature: l.curvature,
+                    speed_limit: l.speed_limit,
+                })
+                .collect(),
+            crosswalks: self.crosswalks.iter().map(|p| z.compose(p)).collect(),
+            signals: self
+                .signals
+                .iter()
+                .map(|(p, s)| (z.compose(p), *s))
+                .collect(),
+        }
+    }
+
     /// Generate a random map around the origin: a mix of straight lanes,
     /// arcs (left/right turns) and an optional crossing road, with
     /// crosswalks and signals near the center.
@@ -266,6 +301,26 @@ mod tests {
         let map = LaneGraph::generate(&mut rng);
         let (_, _, d) = map.nearest_lane(0.0, 0.0).unwrap();
         assert!(d < 10.0, "main corridor passes near origin, d={d}");
+    }
+
+    #[test]
+    fn transformed_preserves_intrinsic_geometry() {
+        let mut rng = Rng::new(6);
+        let map = LaneGraph::generate(&mut rng);
+        let z = Pose::new(40.0, -25.0, 1.3);
+        let moved = map.transformed(&z);
+        assert_eq!(moved.lanes.len(), map.lanes.len());
+        assert_eq!(moved.crosswalks.len(), map.crosswalks.len());
+        assert_eq!(moved.signals.len(), map.signals.len());
+        for (a, b) in map.lanes.iter().zip(moved.lanes.iter()) {
+            assert_eq!(a.points.len(), b.points.len());
+            // pairwise distances along the lane are rigid-invariant
+            for w in 0..a.points.len() - 1 {
+                let da = a.points[w].dist(&a.points[w + 1]);
+                let db = b.points[w].dist(&b.points[w + 1]);
+                assert!((da - db).abs() < 1e-9);
+            }
+        }
     }
 
     #[test]

@@ -2,9 +2,13 @@
 //!
 //! Substitute for the paper's private 33M-scenario dataset (DESIGN.md §6):
 //! procedural lane-graph maps, kinematic-bicycle agents with lane-following
-//! / turning / stopping policies, and pedestrians near crosswalks.  The
-//! generator is seeded and fully deterministic, so dataset shards and
-//! Table-I runs are reproducible bit-for-bit.
+//! / changing / yielding / stopping policies, and pedestrians near
+//! crosswalks.  The [`suite`] module generalizes the single corridor map
+//! into a registry of named scenario families (merges, signalized
+//! crossings, roundabouts, parking lots, urban crossings) plus a weighted
+//! workload mixer (DESIGN.md §11).  Every generator is seeded and fully
+//! deterministic, so dataset shards and Table-I runs are reproducible
+//! bit-for-bit.
 //!
 //! World units are meters/seconds; the tokenizer downscales positions into
 //! the model's |p| <= 4 band (paper Sec. IV-B).
@@ -13,7 +17,9 @@ pub mod agent;
 pub mod map;
 pub mod render;
 pub mod scenario;
+pub mod suite;
 
 pub use agent::{AgentKind, AgentState, KinematicAction};
 pub use map::{LaneGraph, MapElement, MapElementKind};
 pub use scenario::{Scenario, ScenarioGenerator, TrajectoryClass};
+pub use suite::{Family, FamilyId, MixGenerator, WorkloadMix};

@@ -69,12 +69,22 @@ impl Canvas {
     }
 }
 
-/// Heading to one of 8 arrow glyphs.
-fn heading_glyph(theta: f64) -> char {
+/// Heading to one of 8 arrow glyphs (agent captions under the canvas).
+pub fn heading_glyph(theta: f64) -> char {
     const GLYPHS: [char; 8] = ['>', '/', '^', '\\', '<', '/', 'v', '\\'];
     let sector = ((theta + std::f64::consts::PI / 8.0).rem_euclid(std::f64::consts::TAU)
         / (std::f64::consts::FRAC_PI_4)) as usize;
     GLYPHS[sector.min(7)]
+}
+
+/// Agent-kind glyph: V vehicle, P pedestrian, C cyclist — every scenario
+/// family is visually debuggable by composition alone.
+pub fn kind_glyph(kind: AgentKind) -> char {
+    match kind {
+        AgentKind::Vehicle => 'V',
+        AgentKind::Pedestrian => 'P',
+        AgentKind::Cyclist => 'C',
+    }
 }
 
 /// Render a scenario at step `t` (agents as arrows, map as dots) plus
@@ -111,17 +121,9 @@ pub fn render_scenario(
             }
         }
     }
-    // agents (robot = R)
+    // agents (robot = R, others by kind: V/P/C)
     for (a, st) in s.states[t].iter().enumerate() {
-        let ch = if a == 0 {
-            'R'
-        } else {
-            match st.kind {
-                AgentKind::Vehicle => heading_glyph(st.pose.theta),
-                AgentKind::Pedestrian => 'p',
-                AgentKind::Cyclist => 'c',
-            }
-        };
+        let ch = if a == 0 { 'R' } else { kind_glyph(st.kind) };
         canvas.plot(st.pose.x, st.pose.y, ch);
     }
     canvas.to_string_framed()
@@ -202,6 +204,32 @@ mod tests {
         let r = render_futures(&s, cfg.history_steps - 1, 72, 24);
         // at least one agent's digit trail appears
         assert!((0..6).any(|a| contains_glyph(&r, char::from_digit(a, 10).unwrap())), "{r}");
+    }
+
+    #[test]
+    fn scenario_render_uses_kind_glyphs() {
+        let gen = ScenarioGenerator::new(SimConfig::default());
+        let any_vehicle_glyph = (0..8).any(|seed| {
+            let s = gen.generate(seed);
+            contains_glyph(&render_scenario(&s, 0, None, 100, 30), 'V')
+        });
+        assert!(any_vehicle_glyph, "vehicles drawn as V");
+    }
+
+    #[test]
+    fn family_scenarios_render_their_kinds() {
+        use crate::sim::suite::{Family, FamilyId};
+        let sim = SimConfig::default();
+        let s = Family::new(FamilyId::UrbanCrossing).generate(&sim, 2);
+        let r = render_scenario(&s, 0, None, 120, 40);
+        assert!(contains_glyph(&r, 'R'), "robot visible:\n{r}");
+        assert!(
+            contains_glyph(&r, 'P') || contains_glyph(&r, 'C'),
+            "pedestrians/cyclists visible:\n{r}"
+        );
+        assert_eq!(kind_glyph(AgentKind::Vehicle), 'V');
+        assert_eq!(kind_glyph(AgentKind::Pedestrian), 'P');
+        assert_eq!(kind_glyph(AgentKind::Cyclist), 'C');
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::prng::Rng;
 
 use super::agent::{plan, spawn, AgentState, KinematicAction, Policy};
 use super::map::{LaneGraph, MapElement};
+use super::suite::FamilyId;
 
 /// Ground-truth trajectory category (paper Table I columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -37,6 +38,8 @@ pub struct Scenario {
     /// actions[t][a]: the action agent `a` took between steps t and t+1.
     pub actions: Vec<Vec<KinematicAction>>,
     pub seed: u64,
+    /// Which scenario family generated this world (per-family evaluation).
+    pub family: FamilyId,
 }
 
 impl Scenario {
@@ -52,6 +55,11 @@ impl Scenario {
     /// (paper Sec. IV-B: stationary / straight / turning).
     pub fn classify_future(&self, a: usize, t0: usize) -> TrajectoryClass {
         let last = self.n_steps() - 1;
+        // an empty future (t0 at or past the last recorded step) is pinned
+        // to Stationary rather than indexing out of range
+        if t0 >= last {
+            return TrajectoryClass::Stationary;
+        }
         let start = &self.states[t0][a];
         let end = &self.states[last][a];
         let displacement = start.pose.dist(&end.pose);
@@ -64,6 +72,16 @@ impl Scenario {
         } else {
             TrajectoryClass::Straight
         }
+    }
+
+    /// Stable scene identity for cache keying: mixes the family into the
+    /// seed, so same-seed scenarios from *different* families never share
+    /// cached map rows (the KV pool's map registry is keyed by this).
+    pub fn scene_id(&self) -> u64 {
+        crate::prng::SplitMix64::new(
+            self.seed ^ ((self.family.index() as u64 + 1) << 48),
+        )
+        .next_u64()
     }
 
     /// Ground-truth future positions of agent `a` after `t0` (world frame).
@@ -136,40 +154,68 @@ impl ScenarioGenerator {
             policies.push(p);
         }
 
-        let mut agents: Vec<AgentState> =
+        let agents: Vec<AgentState> =
             policies.iter().map(|p| spawn(p, &map, &mut rng)).collect();
 
-        let total_steps = self.sim.history_steps + self.sim.future_steps;
-        let mut states = Vec::with_capacity(total_steps + 1);
-        let mut actions = Vec::with_capacity(total_steps);
-        states.push(agents.clone());
-        for _ in 0..total_steps {
-            let snapshot = agents.clone();
-            let mut step_actions = Vec::with_capacity(agents.len());
-            for (i, agent) in agents.iter_mut().enumerate() {
-                let others: Vec<AgentState> = snapshot
-                    .iter()
-                    .enumerate()
-                    .filter(|(j, _)| *j != i)
-                    .map(|(_, s)| *s)
-                    .collect();
-                let (action, new_policy) =
-                    plan(&policies[i], agent, &others, &map, &mut rng);
-                *agent = agent.step(action, self.sim.dt);
-                policies[i] = new_policy;
-                step_actions.push(action);
-            }
-            states.push(agents.clone());
-            actions.push(step_actions);
-        }
-
-        Scenario {
+        roll_forward(
             map,
             map_elements,
-            states,
-            actions,
+            policies,
+            agents,
+            &self.sim,
+            &mut rng,
             seed,
+            FamilyId::Corridor,
+        )
+    }
+}
+
+/// Roll a fully assembled world (map + policies + initial agent states)
+/// forward for `history + future` steps, recording every state and action.
+/// Shared by the legacy [`ScenarioGenerator`] and every
+/// [`super::suite::Family`] generator.
+#[allow(clippy::too_many_arguments)]
+pub fn roll_forward(
+    map: LaneGraph,
+    map_elements: Vec<MapElement>,
+    mut policies: Vec<Policy>,
+    mut agents: Vec<AgentState>,
+    sim: &SimConfig,
+    rng: &mut Rng,
+    seed: u64,
+    family: FamilyId,
+) -> Scenario {
+    assert_eq!(policies.len(), agents.len(), "one policy per agent");
+    let total_steps = sim.history_steps + sim.future_steps;
+    let mut states = Vec::with_capacity(total_steps + 1);
+    let mut actions = Vec::with_capacity(total_steps);
+    states.push(agents.clone());
+    for _ in 0..total_steps {
+        let snapshot = agents.clone();
+        let mut step_actions = Vec::with_capacity(agents.len());
+        for (i, agent) in agents.iter_mut().enumerate() {
+            let others: Vec<AgentState> = snapshot
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| *j != i)
+                .map(|(_, s)| *s)
+                .collect();
+            let (action, new_policy) = plan(&policies[i], agent, &others, &map, rng);
+            *agent = agent.step(action, sim.dt);
+            policies[i] = new_policy;
+            step_actions.push(action);
         }
+        states.push(agents.clone());
+        actions.push(step_actions);
+    }
+
+    Scenario {
+        map,
+        map_elements,
+        states,
+        actions,
+        seed,
+        family,
     }
 }
 
@@ -219,6 +265,85 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 3, "classes seen: {seen:?}");
+    }
+
+    /// Minimal scenario from raw per-step poses of a single agent.
+    fn synthetic(poses: Vec<crate::geometry::Pose>) -> Scenario {
+        use super::super::agent::AgentKind;
+        let states: Vec<Vec<AgentState>> = poses
+            .into_iter()
+            .map(|pose| {
+                vec![AgentState {
+                    pose,
+                    speed: 0.0,
+                    kind: AgentKind::Vehicle,
+                    length: 4.8,
+                    width: 2.0,
+                    last_action: KinematicAction { accel: 0.0, yaw_rate: 0.0 },
+                }]
+            })
+            .collect();
+        Scenario {
+            map: LaneGraph::empty(),
+            map_elements: vec![],
+            states,
+            actions: vec![],
+            seed: 0,
+            family: FamilyId::Corridor,
+        }
+    }
+
+    #[test]
+    fn classify_future_pins_empty_future_to_stationary() {
+        use crate::geometry::Pose;
+        let s = synthetic(vec![
+            Pose::new(0.0, 0.0, 0.0),
+            Pose::new(10.0, 0.0, 0.0),
+            Pose::new(20.0, 0.0, 0.0),
+        ]);
+        // t0 at the last step: no future steps exist
+        assert_eq!(s.classify_future(0, 2), TrajectoryClass::Stationary);
+        // t0 past the last step must not panic either
+        assert_eq!(s.classify_future(0, 99), TrajectoryClass::Stationary);
+        // a real future from the first step is Straight
+        assert_eq!(s.classify_future(0, 0), TrajectoryClass::Straight);
+    }
+
+    #[test]
+    fn classify_future_handles_heading_wrap_near_pi() {
+        use crate::geometry::Pose;
+        let pi = std::f64::consts::PI;
+        // heading drifts 3.10 -> -3.10 across the +-pi seam: the wrapped
+        // delta is ~0.08 rad, NOT ~6.2 — this must classify as Straight
+        let s = synthetic(vec![
+            Pose::new(0.0, 0.0, 3.10),
+            Pose::new(-10.0, 0.5, pi),
+            Pose::new(-20.0, 1.0, -3.10),
+        ]);
+        assert_eq!(s.classify_future(0, 0), TrajectoryClass::Straight);
+        // a genuine turn that crosses the seam stays Turning
+        let t = synthetic(vec![
+            Pose::new(0.0, 0.0, 2.6),
+            Pose::new(-8.0, 4.0, pi),
+            Pose::new(-14.0, 10.0, -2.6),
+        ]);
+        assert_eq!(t.classify_future(0, 0), TrajectoryClass::Turning);
+    }
+
+    #[test]
+    fn classify_future_displacement_threshold() {
+        use crate::geometry::Pose;
+        // displacement just under 1 m is Stationary, just over is not
+        let under = synthetic(vec![
+            Pose::new(0.0, 0.0, 0.0),
+            Pose::new(0.99, 0.0, 0.0),
+        ]);
+        assert_eq!(under.classify_future(0, 0), TrajectoryClass::Stationary);
+        let over = synthetic(vec![
+            Pose::new(0.0, 0.0, 0.0),
+            Pose::new(1.01, 0.0, 0.0),
+        ]);
+        assert_eq!(over.classify_future(0, 0), TrajectoryClass::Straight);
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Family-parameterized map + traffic builders (refactored out of the
+//! single hardcoded `sim/map.rs` world).  Each builder assembles a
+//! canonical-frame `LaneGraph` plus one policy and one initial state per
+//! agent; [`apply_world_frame`] then scatters the whole world over a
+//! random SE(2) pose so absolute coordinates carry no family signature.
+
+use crate::geometry::Pose;
+use crate::prng::Rng;
+
+use super::super::agent::{vehicle_state as vehicle, AgentKind, AgentState, KinematicAction, Policy};
+use super::super::map::{trace_lane, LaneGraph};
+use super::FamilyKnobs;
+
+const STILL: KinematicAction = KinematicAction { accel: 0.0, yaw_rate: 0.0 };
+
+/// The builder output: world geometry, one policy per agent, one initial
+/// state per agent (same index).
+pub(super) type World = (LaneGraph, Vec<Policy>, Vec<AgentState>);
+
+fn pedestrian(pose: Pose, speed: f64) -> AgentState {
+    AgentState {
+        pose,
+        speed,
+        kind: AgentKind::Pedestrian,
+        length: 0.6,
+        width: 0.6,
+        last_action: STILL,
+    }
+}
+
+fn cyclist(pose: Pose, speed: f64) -> AgentState {
+    AgentState {
+        pose,
+        speed,
+        kind: AgentKind::Cyclist,
+        length: 1.8,
+        width: 0.6,
+        last_action: STILL,
+    }
+}
+
+/// Push the whole canonical-frame world through a rigid transform `z`:
+/// the lane graph, every agent pose, and every world-coordinate waypoint
+/// a policy carries (wander goals, merge points).
+pub(super) fn apply_world_frame(
+    z: &Pose,
+    map: &mut LaneGraph,
+    policies: &mut [Policy],
+    agents: &mut [AgentState],
+) {
+    *map = map.transformed(z);
+    for a in agents.iter_mut() {
+        a.pose = z.compose(&a.pose);
+    }
+    for p in policies.iter_mut() {
+        match p {
+            Policy::Wander { goal, .. } => {
+                *goal = z.transform_point(goal.0, goal.1);
+            }
+            Policy::YieldEntry { merge_point, .. } => {
+                *merge_point = z.transform_point(merge_point.0, merge_point.1);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// 3+ parallel mainline lanes with an on-ramp; ramp traffic lane-changes
+/// into lane 0, mainline traffic occasionally changes between lanes.
+pub(super) fn highway_merge(knobs: &FamilyKnobs, n_agents: usize, rng: &mut Rng) -> World {
+    let e = knobs.map_extent;
+    let speed = rng.range(knobs.speed_range.0, knobs.speed_range.1);
+    let mut lanes = Vec::new();
+    // mainline lanes 0..2 at lateral offsets 0 / 4 / 8, driving +x
+    for off in [0.0, 4.0, 8.0] {
+        lanes.push(trace_lane(Pose::new(-e, off, 0.0), 0.0, 2.0 * e, speed));
+    }
+    // on-ramp (lane 3): starts angled toward the mainline, straightens out
+    // and ends next to lane 0 — a constant-curvature arc
+    let ramp_len = 55.0;
+    let entry_heading = 0.25;
+    let curvature = -entry_heading / ramp_len;
+    // the arc gains ~ramp_len * sin(heading/2) of lateral distance
+    let dy = ramp_len * (entry_heading / 2.0).sin();
+    let ramp_start = Pose::new(-e * 0.5, -dy, entry_heading);
+    lanes.push(trace_lane(ramp_start, curvature, ramp_len, speed * 0.7));
+    let map = LaneGraph { lanes, crosswalks: vec![], signals: vec![] };
+
+    let mut policies = Vec::with_capacity(n_agents);
+    let mut agents = Vec::with_capacity(n_agents);
+    for i in 0..n_agents {
+        let (policy, state) = if i == 0 {
+            // robot: mainline lane 0 through the merge zone
+            let p = Policy::LaneFollow { lane: 0, target_speed: speed, stop_at: None };
+            let st = vehicle(map.lanes[0].pose_at(e * 0.4), speed * 0.8, rng);
+            (p, st)
+        } else if i % 3 == 1 {
+            // ramp traffic: follow the ramp, then change into lane 0
+            let trigger = rng.range(0.5, 0.8) * ramp_len;
+            let p = Policy::LaneChange {
+                from: 3,
+                to: 0,
+                target_speed: speed * rng.range(0.7, 0.95),
+                trigger_s: trigger,
+            };
+            // stagger ramp spawns so queued entries never overlap
+            let s0 = (i as f64 * 5.0) % (ramp_len * 0.4) + rng.range(0.0, 3.0);
+            let st = vehicle(map.lanes[3].pose_at(s0), speed * 0.5, rng);
+            (p, st)
+        } else if i % 3 == 2 {
+            // mainline lane-changer between parallel lanes
+            let from = 1 + rng.below(2);
+            let to = if from == 1 { 2 } else { 1 };
+            let p = Policy::LaneChange {
+                from,
+                to,
+                target_speed: speed * rng.range(0.8, 1.0),
+                trigger_s: rng.range(0.3, 0.6) * 2.0 * e,
+            };
+            let s0 = rng.range(0.1, 0.45) * 2.0 * e;
+            let st = vehicle(map.lanes[from].pose_at(s0), speed * 0.8, rng);
+            (p, st)
+        } else {
+            // plain mainline follower, staggered to avoid spawn collisions
+            let lane = rng.below(3);
+            let p = Policy::LaneFollow {
+                lane,
+                target_speed: speed * rng.range(0.75, 1.0),
+                stop_at: None,
+            };
+            let s0 = (i as f64 * 17.0 + rng.range(0.0, 8.0)) % (1.2 * e);
+            let st = vehicle(map.lanes[lane].pose_at(s0), speed * 0.7, rng);
+            (p, st)
+        };
+        policies.push(policy);
+        agents.push(state);
+    }
+    (map, policies, agents)
+}
+
+/// Two crossing corridors through the origin, gated by a sampled signal
+/// phase: the red side queues at its stop line (stop-and-go emerges from
+/// the leader-following controller), the green side flows.
+pub(super) fn four_way_signalized(
+    knobs: &FamilyKnobs,
+    n_agents: usize,
+    rng: &mut Rng,
+) -> World {
+    let e = knobs.map_extent;
+    let speed = rng.range(knobs.speed_range.0, knobs.speed_range.1);
+    // lanes 0/1: east-west corridor (one lane per direction);
+    // lanes 2/3: north-south corridor
+    let lanes = vec![
+        trace_lane(Pose::new(-e, -2.0, 0.0), 0.0, 2.0 * e, speed),
+        trace_lane(Pose::new(e, 2.0, std::f64::consts::PI), 0.0, 2.0 * e, speed),
+        trace_lane(Pose::new(2.0, -e, std::f64::consts::FRAC_PI_2), 0.0, 2.0 * e, speed * 0.9),
+        trace_lane(Pose::new(-2.0, e, -std::f64::consts::FRAC_PI_2), 0.0, 2.0 * e, speed * 0.9),
+    ];
+    // phase: 0 = EW green, 1 = NS green, 2 = all-stop (yellow clearance)
+    let phase = rng.below(3);
+    let signal_state = match phase {
+        0 => 1.0,
+        1 => 0.0,
+        _ => 0.5,
+    };
+    let crosswalks = vec![
+        Pose::new(0.0, 9.0, 0.0),
+        Pose::new(0.0, -9.0, 0.0),
+        Pose::new(9.0, 0.0, std::f64::consts::FRAC_PI_2),
+        Pose::new(-9.0, 0.0, std::f64::consts::FRAC_PI_2),
+    ];
+    let signals = vec![(Pose::new(6.0, 6.0, 0.0), signal_state)];
+    let map = LaneGraph { lanes, crosswalks, signals };
+
+    // stop line: just before the intersection box, measured along the lane
+    let stop_s = e - 10.0;
+    let ew_stops = phase != 0;
+    let ns_stops = phase != 1;
+    let mut policies = Vec::with_capacity(n_agents);
+    let mut agents = Vec::with_capacity(n_agents);
+    for i in 0..n_agents {
+        let (policy, state) = if i == 0 {
+            // robot: always on the flowing corridor (or approaching the
+            // line during all-stop — still moving through history)
+            let lane = if !ew_stops { 0 } else if !ns_stops { 2 } else { 0 };
+            let stop = if phase == 2 { Some(stop_s) } else { None };
+            let p = Policy::LaneFollow { lane, target_speed: speed, stop_at: stop };
+            let st = vehicle(map.lanes[lane].pose_at(e * 0.3), speed * 0.8, rng);
+            (p, st)
+        } else if i % 4 == 3 && !map.crosswalks.is_empty() {
+            // corner pedestrian
+            let cw = *rng.choice(&map.crosswalks);
+            let p = Policy::Wander {
+                goal: (cw.x + rng.range(-8.0, 8.0), cw.y + rng.range(-8.0, 8.0)),
+                speed: rng.range(0.8, 1.6),
+            };
+            let st = pedestrian(
+                Pose::new(
+                    cw.x + rng.range(-3.0, 3.0),
+                    cw.y + rng.range(-3.0, 3.0),
+                    rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+                ),
+                rng.range(0.6, 1.4),
+            );
+            (p, st)
+        } else {
+            // corridor traffic: queue on red, flow on green
+            let lane = rng.below(4);
+            let stops = if lane < 2 { ew_stops } else { ns_stops };
+            let p = Policy::LaneFollow {
+                lane,
+                target_speed: speed * rng.range(0.7, 1.0),
+                stop_at: if stops { Some(stop_s) } else { None },
+            };
+            // stagger approach positions so red corridors form a queue
+            let s0 = ((i * 13) % 40) as f64 + 4.0 + rng.range(0.0, 3.0);
+            let st = vehicle(map.lanes[lane].pose_at(s0), speed * 0.6, rng);
+            (p, st)
+        };
+        policies.push(policy);
+        agents.push(state);
+    }
+    (map, policies, agents)
+}
+
+/// A circulating lane (2.5 loops: the farthest spawn plus a whole
+/// episode of max-speed travel still ends >1 loop short of the polyline
+/// end, so the end-of-lane braking cap can never fire mid-roundabout)
+/// with tangential entry lanes yielding on entry.
+pub(super) fn roundabout(knobs: &FamilyKnobs, n_agents: usize, rng: &mut Rng) -> World {
+    let radius = rng.range(16.0, 24.0) * (knobs.map_extent / 50.0);
+    let speed = rng.range(knobs.speed_range.0, knobs.speed_range.1);
+    let circumference = std::f64::consts::TAU * radius;
+    let mut lanes = vec![trace_lane(
+        Pose::new(radius, 0.0, std::f64::consts::FRAC_PI_2),
+        1.0 / radius,
+        2.5 * circumference,
+        speed,
+    )];
+    // tangential entry lanes at sampled angles
+    let n_entries = 2 + rng.below(2);
+    let entry_len = 42.0;
+    let mut merges = Vec::new(); // (entry lane idx, merge_s, merge point)
+    for k in 0..n_entries {
+        let phi = k as f64 * std::f64::consts::TAU / n_entries as f64 + rng.range(-0.2, 0.2);
+        let (tx, ty) = (-phi.sin(), phi.cos()); // tangent direction (ccw)
+        let (px, py) = (radius * phi.cos(), radius * phi.sin());
+        let start = Pose::new(px - entry_len * tx, py - entry_len * ty, ty.atan2(tx));
+        lanes.push(trace_lane(start, 0.0, entry_len, speed * 0.7));
+        merges.push((lanes.len() - 1, entry_len - 4.0, (px, py)));
+    }
+    let map = LaneGraph { lanes, crosswalks: vec![], signals: vec![] };
+
+    let mut policies = Vec::with_capacity(n_agents);
+    let mut agents = Vec::with_capacity(n_agents);
+    for i in 0..n_agents {
+        let (policy, state) = if i % 2 == 0 {
+            // circulating traffic (agent 0 = robot rides the circle)
+            let p = Policy::LaneFollow { lane: 0, target_speed: speed, stop_at: None };
+            let s0 = (i as f64 / n_agents as f64) * circumference + rng.range(0.0, 10.0);
+            let st = vehicle(map.lanes[0].pose_at(s0), speed * 0.7, rng);
+            (p, st)
+        } else {
+            // entering traffic: yield at the merge point
+            let (lane, merge_s, merge_point) = merges[(i / 2) % merges.len()];
+            let p = Policy::YieldEntry {
+                lane,
+                next_lane: 0,
+                target_speed: speed * rng.range(0.7, 0.95),
+                merge_s,
+                merge_point,
+                clear_radius: 11.0,
+            };
+            let s0 = rng.range(0.0, merge_s * 0.5);
+            let st = vehicle(map.lanes[lane].pose_at(s0), speed * 0.5, rng);
+            (p, st)
+        };
+        policies.push(policy);
+        agents.push(state);
+    }
+    (map, policies, agents)
+}
+
+/// Two crawl-speed aisles flanked by a dense grid of parked vehicles.
+pub(super) fn parking_lot(knobs: &FamilyKnobs, n_agents: usize, rng: &mut Rng) -> World {
+    let e = knobs.map_extent;
+    let crawl = rng.range(knobs.speed_range.0, knobs.speed_range.1);
+    let lanes = vec![
+        trace_lane(Pose::new(-e * 0.6, 0.0, 0.0), 0.0, 1.2 * e, crawl),
+        trace_lane(Pose::new(e * 0.6, 12.0, std::f64::consts::PI), 0.0, 1.2 * e, crawl),
+    ];
+    let map = LaneGraph { lanes, crosswalks: vec![], signals: vec![] };
+
+    // parked slots: rows offset from each aisle, stalls every 3.5 m
+    let rows = [-5.0, 5.0, 7.0, 17.0];
+    let stalls_per_row = ((1.2 * e) / 3.5) as usize;
+    let mut policies = Vec::with_capacity(n_agents);
+    let mut agents = Vec::with_capacity(n_agents);
+    for i in 0..n_agents {
+        let (policy, state) = if i < 2 {
+            // crawling vehicles on the aisles (agent 0 = robot)
+            let lane = i % 2;
+            let p = Policy::LaneFollow {
+                lane,
+                target_speed: crawl * rng.range(0.8, 1.0),
+                stop_at: None,
+            };
+            let s0 = rng.range(0.05, 0.4) * 1.2 * e;
+            let st = vehicle(map.lanes[lane].pose_at(s0), crawl * 0.6, rng);
+            (p, st)
+        } else {
+            // stationary grid fill: deterministic stall per agent index
+            let row = rows[i % rows.len()];
+            let stall = (i * 5) % stalls_per_row.max(1);
+            let x = -e * 0.6 + stall as f64 * 3.5;
+            let heading = if row < 6.0 {
+                std::f64::consts::FRAC_PI_2
+            } else {
+                -std::f64::consts::FRAC_PI_2
+            };
+            let st = AgentState {
+                pose: Pose::new(x, row, heading),
+                speed: 0.0,
+                kind: AgentKind::Vehicle,
+                length: 4.8,
+                width: 2.0,
+                last_action: STILL,
+            };
+            (Policy::Stationary, st)
+        };
+        policies.push(policy);
+        agents.push(state);
+    }
+    (map, policies, agents)
+}
+
+/// A two-lane corridor gated by crosswalks, dominated by pedestrians and
+/// cyclists.
+pub(super) fn urban_crossing(knobs: &FamilyKnobs, n_agents: usize, rng: &mut Rng) -> World {
+    let e = knobs.map_extent;
+    let speed = rng.range(knobs.speed_range.0 + 2.0, knobs.speed_range.1);
+    let lanes = vec![
+        trace_lane(Pose::new(-e, -2.0, 0.0), 0.0, 2.0 * e, speed),
+        trace_lane(Pose::new(e, 2.0, std::f64::consts::PI), 0.0, 2.0 * e, speed),
+    ];
+    let crosswalks: Vec<Pose> = [-0.4, 0.0, 0.4]
+        .iter()
+        .map(|f| Pose::new(f * e + rng.range(-4.0, 4.0), 0.0, std::f64::consts::FRAC_PI_2))
+        .collect();
+    let map = LaneGraph { lanes, crosswalks, signals: vec![] };
+
+    let mut policies = Vec::with_capacity(n_agents);
+    let mut agents = Vec::with_capacity(n_agents);
+    for i in 0..n_agents {
+        let (policy, state) = if i == 0 {
+            // robot: corridor vehicle, free-flowing
+            let p = Policy::LaneFollow { lane: 0, target_speed: speed, stop_at: None };
+            let st = vehicle(map.lanes[0].pose_at(e * 0.2), speed * 0.7, rng);
+            (p, st)
+        } else if i % 4 == 1 {
+            // crosswalk-gated vehicle: stops short of the middle crosswalk
+            let lane = rng.below(2);
+            let cw_s = e - 8.0; // crosswalks sit near the corridor middle
+            let p = Policy::LaneFollow {
+                lane,
+                target_speed: speed * rng.range(0.7, 1.0),
+                stop_at: Some(cw_s),
+            };
+            let s0 = rng.range(0.1, 0.5) * cw_s;
+            let st = vehicle(map.lanes[lane].pose_at(s0), speed * 0.6, rng);
+            (p, st)
+        } else if i % 4 == 2 {
+            // cyclist sharing the corridor
+            let lane = rng.below(2);
+            let bike_speed = rng.range(3.0, 5.5);
+            let p = Policy::LaneFollow {
+                lane,
+                target_speed: bike_speed,
+                stop_at: None,
+            };
+            let s0 = rng.range(0.1, 0.8) * 2.0 * e;
+            let mut st = cyclist(map.lanes[lane].pose_at(s0), bike_speed * 0.8);
+            st.pose = Pose::new(st.pose.x, st.pose.y + rng.range(-0.8, 0.8), st.pose.theta);
+            (p, st)
+        } else {
+            // pedestrians clustered around the crosswalks
+            let cw = *rng.choice(&map.crosswalks);
+            let p = Policy::Wander {
+                goal: (cw.x + rng.range(-10.0, 10.0), cw.y + rng.range(-10.0, 10.0)),
+                speed: rng.range(0.8, 1.8),
+            };
+            let st = pedestrian(
+                Pose::new(
+                    cw.x + rng.range(-4.0, 4.0),
+                    cw.y + rng.range(-4.0, 4.0),
+                    rng.range(-std::f64::consts::PI, std::f64::consts::PI),
+                ),
+                rng.range(0.6, 1.6),
+            );
+            (p, st)
+        };
+        policies.push(policy);
+        agents.push(state);
+    }
+    (map, policies, agents)
+}

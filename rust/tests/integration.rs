@@ -49,6 +49,7 @@ fn full_stack_integration() {
     rollout_produces_plausible_futures(&cfg, &engine);
     checkpoint_roundtrip_through_model(&cfg, &engine);
     server_end_to_end(&cfg);
+    server_shutdown_drains_queued(&cfg);
 }
 
 /// Save a trained model's state, restore it into a fresh handle, and check
@@ -317,5 +318,56 @@ fn server_end_to_end(cfg: &SystemConfig) {
         Ok(Ok(_)) => panic!("undeployed method must not succeed"),
     }
     assert_eq!(server.stats.requests_done.get(), 3);
-    eprintln!("server OK: {}", server.stats.summary());
+    // per-family counters appear in the stats line (corridor traffic)
+    let summary = server.stats.summary();
+    assert!(summary.contains("corridor:req=3"), "{summary}");
+    eprintln!("server OK: {summary}");
+}
+
+/// Regression: requests still queued in a partially filled batch at
+/// shutdown must drain through the rollout engine (real results), not be
+/// dropped or answered with a shutdown error.
+fn server_shutdown_drains_queued(cfg: &SystemConfig) {
+    let stats = {
+        // a batch that can never fill or deadline-flush on its own
+        let server = Server::start(
+            cfg.clone(),
+            vec![Method::Rope2d],
+            0,
+            BatcherConfig {
+                batch_size: 64,
+                max_wait: std::time::Duration::from_secs(3600),
+                max_queue: 64,
+            },
+        )
+        .expect("server start");
+        let gen = ScenarioGenerator::new(cfg.sim.clone());
+        let mut pending = Vec::new();
+        for i in 0..2u64 {
+            pending.push(server.submit(
+                Method::Rope2d,
+                RolloutRequest {
+                    scenario: gen.generate(700 + i),
+                    t0: cfg.sim.history_steps - 1,
+                    n_samples: 2,
+                    temperature: 1.0,
+                    seed: i as i32,
+                },
+            ));
+        }
+        let stats = std::sync::Arc::clone(&server.stats);
+        drop(server); // shutdown with the batch still partially filled
+        for rx in pending {
+            let res = rx
+                .recv()
+                .expect("queued caller must get a response")
+                .expect("drained request must produce a real rollout");
+            assert_eq!(res.min_ade.len(), cfg.sim.n_agents);
+            assert_eq!(res.trajectories.len(), 2);
+        }
+        stats
+    };
+    assert_eq!(stats.requests_done.get(), 2, "both drained through rollout");
+    assert_eq!(stats.requests_failed.get(), 0);
+    eprintln!("shutdown drain OK: {}", stats.summary());
 }
