@@ -9,13 +9,14 @@ use anyhow::Result;
 
 use se2attn::config::{Method, SystemConfig};
 use se2attn::coordinator::batcher::BatcherConfig;
-use se2attn::coordinator::{RolloutRequest, Server};
+use se2attn::coordinator::{RolloutRequest, ServeConfig, Server};
 use se2attn::sim::ScenarioGenerator;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let scenes: usize = args.first().map_or(12, |s| s.parse().unwrap());
     let samples: usize = args.get(1).map_or(4, |s| s.parse().unwrap());
+    let workers: usize = args.get(2).map_or(0, |s| s.parse().unwrap());
 
     let cfg = SystemConfig::load("artifacts")?;
     let method = Method::Se2Fourier;
@@ -25,17 +26,20 @@ fn main() -> Result<()> {
     );
 
     let t_start = std::time::Instant::now();
-    let server = Server::start(
-        cfg.clone(),
-        vec![method],
-        0,
-        BatcherConfig {
+    let serve = ServeConfig {
+        batcher: BatcherConfig {
             batch_size: 4,
             max_wait: std::time::Duration::from_millis(10),
             max_queue: 64,
         },
-    )?;
-    println!("server up in {:.1}s (artifact compile included)", t_start.elapsed().as_secs_f64());
+        ..ServeConfig::with_workers(workers)
+    };
+    let server = Server::start(cfg.clone(), vec![method], 0, serve)?;
+    println!(
+        "server up in {:.1}s on {} shard(s) (artifact compile included)",
+        t_start.elapsed().as_secs_f64(),
+        server.n_shards()
+    );
 
     let gen = ScenarioGenerator::new(cfg.sim.clone());
     let t0 = std::time::Instant::now();

@@ -198,10 +198,10 @@ fn tokenization_path() {
     let key = SessionKey { scene: s.seed, t0: h as u32 - 1, sample: 0 };
     let mut wc = window.clone();
     let mut tc = h;
-    pool.step(key, &tok, &s.map_elements, &wc); // warm (miss)
+    pool.step(key, &tok, &s.map_elements, &wc).unwrap(); // warm (miss)
     slide(&mut wc, &mut tc);
     let cached = bench(5, 200, std::time::Duration::from_secs(2), || {
-        std::hint::black_box(pool.step(key, &tok, &s.map_elements, &wc));
+        std::hint::black_box(pool.step(key, &tok, &s.map_elements, &wc).unwrap());
         slide(&mut wc, &mut tc);
     });
     let speedup = full.mean_ns / cached.mean_ns;

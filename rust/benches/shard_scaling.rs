@@ -1,0 +1,162 @@
+//! Aggregate rollout throughput vs worker-shard count (ISSUE 3
+//! acceptance): the same mixed-family workload is served end to end
+//! through the sharded coordinator — shard router, per-shard batchers,
+//! per-shard KV-cache pools over the shared map registry, rollout
+//! scheduler — at 1, 2 and 4 workers, and the aggregate scenes/s must
+//! grow with the worker count (strictly, 1 -> 4, on a multi-core host).
+//!
+//! The backend is the artifact-free [`SyntheticDecoder`] with a tuned
+//! `work_per_token`, emulating a model-latency-bound decode so the bench
+//! runs (and scales) in the default stub-runtime build.
+//!
+//! Run: `cargo bench --bench shard_scaling`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use se2attn::benchlib::{record_row, Table};
+use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
+use se2attn::coordinator::batcher::BatcherConfig;
+use se2attn::coordinator::{
+    Backend, BackendFactory, CacheConfig, RolloutRequest, Router, ServeConfig, Server,
+    SyntheticDecoder,
+};
+use se2attn::jsonio::Json;
+use se2attn::sim::MixGenerator;
+
+const METHOD: Method = Method::Se2Fourier;
+const SCENES: usize = 48;
+const SAMPLES: usize = 2;
+/// Extra hash rounds per token emulating model latency (decode-bound).
+const WORK_PER_TOKEN: usize = 800;
+
+fn model_config() -> ModelConfig {
+    ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 48,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: 64,
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: 12,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    }
+}
+
+fn factory() -> BackendFactory {
+    Arc::new(|_shard: usize| -> anyhow::Result<Backend> {
+        let mut backend: Backend = Router::new();
+        backend.deploy(
+            METHOD,
+            Box::new(SyntheticDecoder::with_work(
+                model_config().n_actions,
+                WORK_PER_TOKEN,
+            )),
+        );
+        Ok(backend)
+    })
+}
+
+/// Serve the whole mixed-family workload once; returns (wall s, scenes/s).
+fn run(workers: usize) -> (f64, f64) {
+    let cfg = SystemConfig {
+        artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        model: model_config(),
+        sim: SimConfig::default(),
+        threads: workers,
+    };
+    let sim = cfg.sim.clone();
+    let server = Server::start_with_backend(
+        cfg,
+        vec![METHOD],
+        ServeConfig {
+            workers,
+            batcher: BatcherConfig {
+                batch_size: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                max_queue: 4096,
+            },
+            cache: CacheConfig::default(),
+        },
+        factory(),
+    )
+    .expect("server start");
+
+    let mix = se2attn::config::scenario_mix("mixed", "").expect("mix");
+    let gen = MixGenerator::new(sim.clone(), mix);
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..SCENES)
+        .map(|i| {
+            let scenario = gen.generate(3000 + i as u64);
+            server.submit(
+                METHOD,
+                RolloutRequest {
+                    scenario,
+                    t0: sim.history_steps - 1,
+                    n_samples: SAMPLES,
+                    temperature: 1.0,
+                    seed: i as i32,
+                },
+            )
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().expect("shard alive").expect("rollout ok");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (wall, SCENES as f64 / wall)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    println!(
+        "\n== shard scaling: {SCENES} mixed-family scenes x {SAMPLES} samples, \
+         decode-bound synthetic backend ({cores} cores) =="
+    );
+    // warm one pass so allocator/page-cache effects don't bias workers=1
+    let _ = run(1);
+
+    let mut table = Table::new(&["workers", "wall s", "scenes/s", "speedup vs 1"]);
+    let mut throughput = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let (wall, tput) = run(workers);
+        throughput.push((workers, tput));
+        let speedup = tput / throughput[0].1;
+        table.row(vec![
+            workers.to_string(),
+            format!("{wall:.2}"),
+            format!("{tput:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        record_row(
+            "shard_scaling",
+            Json::obj(vec![
+                ("workers", Json::Num(workers as f64)),
+                ("scenes", Json::Num(SCENES as f64)),
+                ("samples", Json::Num(SAMPLES as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("scenes_per_s", Json::Num(tput)),
+            ]),
+        );
+    }
+    table.print();
+
+    let strictly_increasing = throughput.windows(2).all(|w| w[1].1 > w[0].1);
+    if strictly_increasing {
+        println!("strictly increasing aggregate throughput 1 -> 4 workers: PASS");
+    } else if cores < 4 {
+        println!(
+            "throughput not strictly increasing — expected on a {cores}-core host; \
+             re-run on >=4 cores for the acceptance check"
+        );
+    } else {
+        println!("strictly increasing aggregate throughput 1 -> 4 workers: FAIL");
+        std::process::exit(1);
+    }
+}

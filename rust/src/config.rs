@@ -11,7 +11,8 @@ use anyhow::{bail, Context, Result};
 use crate::jsonio::Json;
 
 /// Attention method — kept in sync with `python/compile/config.py`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// (`Ord` so per-method tables can live in deterministic `BTreeMap`s.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Method {
     Abs,
     Rope2d,
@@ -177,6 +178,17 @@ pub fn scenario_mix(family: &str, mix: &str) -> Result<crate::sim::suite::Worklo
     Ok(WorkloadMix::single(FamilyId::parse(family)?))
 }
 
+/// Default worker-shard count for the serving pool: one per available
+/// core, clamped to [1, 8] — beyond that the per-shard model replicas
+/// cost more memory than the extra threads buy on this workload.  CLI
+/// `--workers` / `ServeConfig.workers` override it.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 8)
+}
+
 /// Whole-system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -269,5 +281,11 @@ mod tests {
     fn sim_token_budget_matches_default_model() {
         let sim = SimConfig::default();
         assert_eq!(sim.tokens_per_scene(), 64);
+    }
+
+    #[test]
+    fn default_workers_is_bounded() {
+        let w = default_workers();
+        assert!((1..=8).contains(&w), "got {w}");
     }
 }

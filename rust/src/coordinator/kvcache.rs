@@ -27,9 +27,19 @@
 //! [`crate::attention::memmodel::map_tokens_bytes`]), and hit / miss /
 //! eviction / resident-byte counters exported through
 //! [`crate::coordinator::telemetry::CacheStats`].
+//!
+//! Sharded serving (DESIGN.md §12) runs one pool per worker shard —
+//! sessions are pinned to their shard by the front end's affinity router
+//! and never migrate — while the static map rows live in a
+//! [`MapRegistry`] that the shards *share*, so one scene's map is
+//! tokenized once server-wide no matter which shard first touches it.
+//! Lock order is always pool -> registry; the registry never calls back
+//! into a pool.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
 
 use crate::geometry::Pose;
 use crate::sim::{AgentState, MapElement};
@@ -102,23 +112,28 @@ pub struct WindowCache {
 
 impl WindowCache {
     /// Build from a full window (the miss path): tokenizes every step.
+    /// An empty window (no steps, or steps with no agents) is a
+    /// recoverable request error, not a panic — the serving path surfaces
+    /// it to the caller instead of taking the worker down.
     pub fn from_window(
         tok: &Tokenizer,
         map: Arc<MapTokens>,
         window: &[Vec<AgentState>],
-    ) -> WindowCache {
-        assert!(!window.is_empty(), "empty window");
+    ) -> Result<WindowCache> {
+        if window.is_empty() || window[0].is_empty() {
+            bail!("cannot build a session window cache from an empty window");
+        }
         let n_agents = window[0].len();
         let mut steps = VecDeque::with_capacity(window.len());
         for step in window {
             steps.push_back(tokenize_step(tok, n_agents, step));
         }
-        WindowCache {
+        Ok(WindowCache {
             map,
             steps,
             n_agents,
             feat_dim: tok.feat_dim,
-        }
+        })
     }
 
     /// Slide the window one decode step: evict the oldest step's rows and
@@ -142,13 +157,23 @@ impl WindowCache {
     /// copied verbatim, poses are re-anchored (exactly) to the current
     /// robot frame (agent 0 at the latest step).  Bit-identical to
     /// [`Tokenizer::tokenize_window`] on the same window, with no targets.
-    pub fn emit(&self, tok: &Tokenizer) -> TokenizedScene {
+    ///
+    /// An empty cached window (a corrupted or stale session) is a
+    /// recoverable error: [`KvCachePool::step`] treats it as a cache miss
+    /// and rebuilds from the caller's full window instead of panicking on
+    /// the serving path.
+    pub fn emit(&self, tok: &Tokenizer) -> Result<TokenizedScene> {
+        let Some(latest) = self.steps.back() else {
+            bail!("session window cache is empty — a cache-miss rebuild is required");
+        };
+        let Some(&frame) = latest.world_pose.first() else {
+            bail!("session window cache has no agents — a cache-miss rebuild is required");
+        };
         let h = self.steps.len();
         let n_map = self.map.len();
         let n_agents = self.n_agents;
         let n_tokens = n_map + h * n_agents;
         let fd = self.feat_dim;
-        let frame = self.steps.back().expect("empty window").world_pose[0];
 
         let mut feat = vec![0.0f32; n_tokens * fd];
         let mut pose = vec![0.0f32; n_tokens * 3];
@@ -176,7 +201,7 @@ impl WindowCache {
             }
         }
 
-        TokenizedScene {
+        Ok(TokenizedScene {
             feat,
             pose,
             tq,
@@ -185,7 +210,7 @@ impl WindowCache {
             n_map,
             n_agents,
             history_steps: h,
-        }
+        })
     }
 
     /// Resident bytes (shared map rows are counted by the pool, once per
@@ -239,64 +264,46 @@ struct SessionEntry {
     tick: u64,
 }
 
-struct PoolInner {
-    sessions: HashMap<SessionKey, SessionEntry>,
+struct MapRegistryInner {
     maps: HashMap<u64, Arc<MapTokens>>,
     /// FIFO of map-scene ids for capacity eviction.
-    map_order: VecDeque<u64>,
-    tick: u64,
-    /// Per-session window bytes — the pool can only reclaim these, so
-    /// `max_bytes` is enforced against this count alone (shared map
-    /// bytes are bounded separately by `max_map_scenes`; folding them
-    /// into one budget would make an unsatisfiable config thrash every
-    /// insert).
-    session_bytes: usize,
+    order: VecDeque<u64>,
     /// Shared map-row bytes, counted once per scene.
-    map_bytes: usize,
+    bytes: usize,
 }
 
-/// The server-owned pool of per-session window caches + shared map rows.
-pub struct KvCachePool {
-    cfg: CacheConfig,
-    pub stats: Arc<CacheStats>,
-    inner: Mutex<PoolInner>,
+/// Shared static-map row registry: tokenized once per scene, handed out by
+/// `Arc` to every session.  In a sharded server one registry is shared by
+/// all shard pools (map rows are immutable, so cross-shard sharing is
+/// safe), bounded by `max_scenes` with FIFO eviction.
+pub struct MapRegistry {
+    max_scenes: usize,
+    stats: Arc<CacheStats>,
+    inner: Mutex<MapRegistryInner>,
 }
 
-impl KvCachePool {
-    pub fn new(cfg: CacheConfig, stats: Arc<CacheStats>) -> KvCachePool {
-        KvCachePool {
-            cfg,
+impl MapRegistry {
+    pub fn new(max_scenes: usize, stats: Arc<CacheStats>) -> MapRegistry {
+        MapRegistry {
+            max_scenes,
             stats,
-            inner: Mutex::new(PoolInner {
-                sessions: HashMap::new(),
+            inner: Mutex::new(MapRegistryInner {
                 maps: HashMap::new(),
-                map_order: VecDeque::new(),
-                tick: 0,
-                session_bytes: 0,
-                map_bytes: 0,
+                order: VecDeque::new(),
+                bytes: 0,
             }),
         }
     }
 
     /// Shared map rows for a scene: tokenized once, handed out by Arc to
     /// every sample (and every later request) of the same scene.
-    pub fn map_tokens(
+    pub fn get_or_tokenize(
         &self,
         scene: u64,
         tok: &Tokenizer,
         elements: &[MapElement],
     ) -> Arc<MapTokens> {
         let mut inner = self.inner.lock().unwrap();
-        self.map_tokens_locked(&mut inner, scene, tok, elements)
-    }
-
-    fn map_tokens_locked(
-        &self,
-        inner: &mut PoolInner,
-        scene: u64,
-        tok: &Tokenizer,
-        elements: &[MapElement],
-    ) -> Arc<MapTokens> {
         // A seed collision (same scene id, different map) must not
         // silently substitute stale rows: validate the cheap invariant
         // and re-tokenize on mismatch.
@@ -310,19 +317,19 @@ impl KvCachePool {
         };
         self.stats.map_misses.inc();
         let m = Arc::new(MapTokens::tokenize(tok, elements));
-        inner.map_bytes += m.resident_bytes();
+        inner.bytes += m.resident_bytes();
         self.stats.resident_bytes.add(m.resident_bytes() as u64);
         if let Some(stale) = inner.maps.insert(scene, Arc::clone(&m)) {
-            inner.map_bytes = inner.map_bytes.saturating_sub(stale.resident_bytes());
+            inner.bytes = inner.bytes.saturating_sub(stale.resident_bytes());
             self.stats.resident_bytes.sub(stale.resident_bytes() as u64);
         }
         if !already_known {
-            inner.map_order.push_back(scene);
+            inner.order.push_back(scene);
         }
-        while inner.maps.len() > self.cfg.max_map_scenes {
-            if let Some(old) = inner.map_order.pop_front() {
+        while inner.maps.len() > self.max_scenes {
+            if let Some(old) = inner.order.pop_front() {
                 if let Some(gone) = inner.maps.remove(&old) {
-                    inner.map_bytes = inner.map_bytes.saturating_sub(gone.resident_bytes());
+                    inner.bytes = inner.bytes.saturating_sub(gone.resident_bytes());
                     self.stats.resident_bytes.sub(gone.resident_bytes() as u64);
                     self.stats.evictions.inc();
                 }
@@ -333,38 +340,134 @@ impl KvCachePool {
         m
     }
 
+    /// Bytes held by the shared map rows.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Number of scenes with registered map rows.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().maps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct PoolInner {
+    sessions: HashMap<SessionKey, SessionEntry>,
+    tick: u64,
+    /// Per-session window bytes — the pool can only reclaim these, so
+    /// `max_bytes` is enforced against this count alone (shared map
+    /// bytes are bounded separately by `max_map_scenes`; folding them
+    /// into one budget would make an unsatisfiable config thrash every
+    /// insert).
+    session_bytes: usize,
+}
+
+/// A shard-owned pool of per-session window caches over a (possibly
+/// shared) map-row registry.
+pub struct KvCachePool {
+    cfg: CacheConfig,
+    pub stats: Arc<CacheStats>,
+    maps: Arc<MapRegistry>,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvCachePool {
+    /// Standalone pool with a private map registry (single-shard servers,
+    /// request-local pools, tests).
+    pub fn new(cfg: CacheConfig, stats: Arc<CacheStats>) -> KvCachePool {
+        let maps = Arc::new(MapRegistry::new(cfg.max_map_scenes, Arc::clone(&stats)));
+        KvCachePool::with_map_registry(cfg, stats, maps)
+    }
+
+    /// Shard pool over a registry shared with the other shards.
+    pub fn with_map_registry(
+        cfg: CacheConfig,
+        stats: Arc<CacheStats>,
+        maps: Arc<MapRegistry>,
+    ) -> KvCachePool {
+        KvCachePool {
+            cfg,
+            stats,
+            maps,
+            inner: Mutex::new(PoolInner {
+                sessions: HashMap::new(),
+                tick: 0,
+                session_bytes: 0,
+            }),
+        }
+    }
+
+    /// This pool's map registry (for sharing with sibling shard pools).
+    pub fn map_registry(&self) -> Arc<MapRegistry> {
+        Arc::clone(&self.maps)
+    }
+
+    /// Shared map rows for a scene (delegates to the registry).
+    pub fn map_tokens(
+        &self,
+        scene: u64,
+        tok: &Tokenizer,
+        elements: &[MapElement],
+    ) -> Arc<MapTokens> {
+        self.maps.get_or_tokenize(scene, tok, elements)
+    }
+
     /// One decode step for a session.  Hit: slide the cached window by the
     /// frontier (`window.last()`) and emit — O(new) tokenization.  Miss
-    /// (first step, or evicted under pressure): rebuild from the caller's
-    /// full window.  Either way the result is bit-identical to
-    /// `tok.tokenize_window(map_elements, window, None)`.
+    /// (first step, evicted under pressure, or a corrupt/stale cached
+    /// window): rebuild from the caller's full window.  Either way the
+    /// result is bit-identical to
+    /// `tok.tokenize_window(map_elements, window, None)`.  An empty caller
+    /// window is a recoverable `Err`, never a panic on the serving path.
     pub fn step(
         &self,
         key: SessionKey,
         tok: &Tokenizer,
         map_elements: &[MapElement],
         window: &[Vec<AgentState>],
-    ) -> TokenizedScene {
+    ) -> Result<TokenizedScene> {
+        if window.is_empty() || window[0].is_empty() {
+            bail!(
+                "session {key:?}: the request carries an empty history window — \
+                 nothing to tokenize"
+            );
+        }
+        // a ragged window would trip tokenize_step's agent-count invariant
+        // further down; reject it here as a caller error instead
+        if window.iter().any(|step| step.len() != window[0].len()) {
+            bail!(
+                "session {key:?}: ragged history window — agent count varies \
+                 across steps"
+            );
+        }
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
 
         let mut entry = match inner.sessions.remove(&key) {
-            Some(mut e) if e.cache.n_agents() == window[0].len() => {
+            // only a healthy cached window advances in O(new); a corrupt
+            // (empty) or shape-mismatched entry falls through to the miss
+            // arm and is rebuilt — recoverable, never a panic
+            Some(mut e)
+                if e.cache.n_agents() == window[0].len() && e.cache.history_steps() > 0 =>
+            {
                 self.stats.hits.inc();
-                e.cache
-                    .advance(tok, window.last().expect("empty window"));
+                e.cache.advance(tok, window.last().unwrap());
                 e
             }
             stale => {
-                // a shape-mismatched leftover (key reuse) is released
+                // a shape-mismatched or corrupt leftover is released
                 if let Some(gone) = stale {
                     inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
                     self.stats.resident_bytes.sub(gone.bytes as u64);
                 }
                 self.stats.misses.inc();
-                let map = self.map_tokens_locked(&mut inner, key.scene, tok, map_elements);
-                let cache = WindowCache::from_window(tok, map, window);
+                let map = self.maps.get_or_tokenize(key.scene, tok, map_elements);
+                let cache = WindowCache::from_window(tok, map, window)?;
                 let bytes = cache.resident_bytes();
                 inner.session_bytes += bytes;
                 self.stats.resident_bytes.add(bytes as u64);
@@ -376,10 +479,18 @@ impl KvCachePool {
             }
         };
         entry.tick = tick;
-        let scene = entry.cache.emit(tok);
+        let scene = match entry.cache.emit(tok) {
+            Ok(scene) => scene,
+            Err(e) => {
+                // drop the entry but keep the byte accounting honest
+                inner.session_bytes = inner.session_bytes.saturating_sub(entry.bytes);
+                self.stats.resident_bytes.sub(entry.bytes as u64);
+                return Err(e);
+            }
+        };
         inner.sessions.insert(key, entry);
         self.enforce_capacity(&mut inner, Some(key));
-        scene
+        Ok(scene)
     }
 
     fn enforce_capacity(&self, inner: &mut PoolInner, keep: Option<SessionKey>) {
@@ -415,10 +526,17 @@ impl KvCachePool {
         self.inner.lock().unwrap().sessions.len()
     }
 
-    /// Total resident bytes tracked by the pool (sessions + shared maps).
+    /// Total resident bytes tracked by the pool (sessions + shared maps;
+    /// the map bytes cover the registry, which may be shared with other
+    /// shard pools).
     pub fn resident_bytes(&self) -> usize {
-        let inner = self.inner.lock().unwrap();
-        inner.session_bytes + inner.map_bytes
+        let session_bytes = self.inner.lock().unwrap().session_bytes;
+        session_bytes + self.maps.resident_bytes()
+    }
+
+    /// This pool's session-window bytes alone (per-shard capacity view).
+    pub fn session_bytes(&self) -> usize {
+        self.inner.lock().unwrap().session_bytes
     }
 }
 
@@ -464,10 +582,10 @@ mod tests {
             (0..h).map(|t| s.states[t].clone()).collect();
 
         let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
-        let mut cache = WindowCache::from_window(&tok, map, &window);
+        let mut cache = WindowCache::from_window(&tok, map, &window).unwrap();
         for t in h..s.n_steps() {
             let want = tok.tokenize_window(&s.map_elements, &window, None);
-            let got = cache.emit(&tok);
+            let got = cache.emit(&tok).unwrap();
             assert_eq!(got.feat, want.feat, "step {t}: features");
             assert_eq!(got.pose, want.pose, "step {t}: poses");
             assert_eq!(got.tq, want.tq, "step {t}: timesteps");
@@ -506,13 +624,15 @@ mod tests {
             &tok,
             Arc::new(MapTokens::tokenize(&tok, &s.map_elements)),
             &window,
-        );
+        )
+        .unwrap();
         let c2 = WindowCache::from_window(
             &tok,
             Arc::new(MapTokens::tokenize(&tok, &s2.map_elements)),
             &window2,
-        );
-        let (e1, e2) = (c1.emit(&tok), c2.emit(&tok));
+        )
+        .unwrap();
+        let (e1, e2) = (c1.emit(&tok).unwrap(), c2.emit(&tok).unwrap());
         assert_eq!(e1.feat, e2.feat, "features must not leak absolute pose");
         for (a, b) in e1.pose.iter().zip(e2.pose.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
@@ -533,8 +653,8 @@ mod tests {
         let key_a = SessionKey { scene: 5, t0: 7, sample: 0 };
         let key_b = SessionKey { scene: 5, t0: 7, sample: 1 };
         // first touch of each session: miss; map tokenized once, shared
-        pool.step(key_a, &tok, &s.map_elements, &window);
-        pool.step(key_b, &tok, &s.map_elements, &window);
+        pool.step(key_a, &tok, &s.map_elements, &window).unwrap();
+        pool.step(key_b, &tok, &s.map_elements, &window).unwrap();
         assert_eq!(stats.misses.get(), 2);
         assert_eq!(stats.map_misses.get(), 1);
         assert_eq!(stats.map_hits.get(), 1);
@@ -546,7 +666,7 @@ mod tests {
         let mut w = window.clone();
         w.remove(0);
         w.push(s.states[h].clone());
-        pool.step(key_a, &tok, &s.map_elements, &w);
+        pool.step(key_a, &tok, &s.map_elements, &w).unwrap();
         assert_eq!(stats.hits.get(), 1);
         assert!(stats.resident_bytes.get() > 0);
         assert_eq!(pool.live_sessions(), 2);
@@ -576,7 +696,8 @@ mod tests {
                 &tok,
                 &s.map_elements,
                 &window,
-            );
+            )
+            .unwrap();
         }
         assert_eq!(pool.live_sessions(), 2);
         assert_eq!(stats.evictions.get(), 2);
@@ -586,7 +707,8 @@ mod tests {
             &tok,
             &s.map_elements,
             &window,
-        );
+        )
+        .unwrap();
         let want = tok.tokenize_window(&s.map_elements, &window, None);
         assert_eq!(scene.feat, want.feat);
         assert_eq!(stats.misses.get(), 5);
@@ -628,7 +750,7 @@ mod tests {
         let pool = KvCachePool::new(cfg, Arc::clone(&stats));
         let key = SessionKey { scene: 12, t0: 7, sample: 0 };
         for t in h..h + 3 {
-            let got = pool.step(key, &tok, &s.map_elements, &window);
+            let got = pool.step(key, &tok, &s.map_elements, &window).unwrap();
             let want = tok.tokenize_window(&s.map_elements, &window, None);
             assert_eq!(got.feat, want.feat, "output stays correct under churn");
             window.remove(0);
@@ -652,10 +774,116 @@ mod tests {
             map.resident_bytes(),
             map_tokens_bytes(s.map_elements.len(), tok.feat_dim, BYTES_F32)
         );
-        let cache = WindowCache::from_window(&tok, map, &window);
+        let cache = WindowCache::from_window(&tok, map, &window).unwrap();
         assert_eq!(
             cache.resident_bytes(),
             window_cache_bytes(sim.n_agents, h, tok.feat_dim, BYTES_F32)
+        );
+    }
+
+    /// Regression (serving-path panic): an empty request window used to
+    /// hit `expect("empty window")` / out-of-range indexing inside the
+    /// pool; it must now surface as a recoverable error.
+    #[test]
+    fn empty_window_is_a_recoverable_error_not_a_panic() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(31);
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let key = SessionKey { scene: 31, t0: 7, sample: 0 };
+
+        // no steps at all
+        let err = pool.step(key, &tok, &s.map_elements, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+        // steps but no agents
+        let err = pool
+            .step(key, &tok, &s.map_elements, &[Vec::new()])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+        // ragged window (agent count varies across steps)
+        let ragged = vec![s.states[0].clone(), s.states[1][..2].to_vec()];
+        let err = pool
+            .step(key, &tok, &s.map_elements, &ragged)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("ragged"), "{err:#}");
+        // the pool stays clean and usable for real traffic afterwards
+        assert_eq!(pool.live_sessions(), 0);
+        assert_eq!(stats.resident_bytes.get(), 0);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        pool.step(key, &tok, &s.map_elements, &window).unwrap();
+
+        // the building blocks are recoverable too
+        let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
+        assert!(WindowCache::from_window(&tok, Arc::clone(&map), &[]).is_err());
+        assert!(WindowCache::from_window(&tok, map, &[Vec::new()]).is_err());
+    }
+
+    /// Regression: a corrupted cached session (empty window) must force a
+    /// cache-miss rebuild from the caller's full window, not panic in
+    /// `emit`/`advance`.
+    #[test]
+    fn corrupt_cached_session_forces_miss_rebuild() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(37);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let key = SessionKey { scene: 37, t0: 7, sample: 0 };
+        pool.step(key, &tok, &s.map_elements, &window).unwrap();
+        assert_eq!(stats.misses.get(), 1);
+
+        // corrupt the cached window behind the pool's back
+        pool.inner
+            .lock()
+            .unwrap()
+            .sessions
+            .get_mut(&key)
+            .unwrap()
+            .cache
+            .steps
+            .clear();
+
+        let got = pool.step(key, &tok, &s.map_elements, &window).unwrap();
+        let want = tok.tokenize_window(&s.map_elements, &window, None);
+        assert_eq!(got.feat, want.feat, "rebuilt output must be exact");
+        assert_eq!(stats.misses.get(), 2, "corruption must count as a miss");
+        assert_eq!(stats.hits.get(), 0);
+    }
+
+    /// Regression: eviction paths subtract raw byte counts from the
+    /// shared `resident_bytes` gauge.  If the gauge under-counts (e.g.
+    /// another shard's pool already drained it), releasing more bytes
+    /// than recorded must saturate at zero — never wrap to ~u64::MAX in
+    /// the stats line.
+    #[test]
+    fn resident_bytes_gauge_saturates_on_over_release() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(41);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let key = SessionKey { scene: 41, t0: 7, sample: 0 };
+        pool.step(key, &tok, &s.map_elements, &window).unwrap();
+        let recorded = stats.resident_bytes.get();
+        assert!(recorded > 0);
+        // drain the gauge below what the pool will release
+        stats.resident_bytes.sub(recorded - 1);
+        pool.end_session(key); // releases far more bytes than the gauge holds
+        assert_eq!(
+            stats.resident_bytes.get(),
+            0,
+            "gauge must saturate at zero, not wrap"
+        );
+        assert!(
+            stats.summary().contains("resident=0B"),
+            "{}",
+            stats.summary()
         );
     }
 
@@ -669,7 +897,7 @@ mod tests {
         let stats = Arc::new(CacheStats::default());
         let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
         let key = SessionKey { scene: 3, t0: 7, sample: 0 };
-        pool.step(key, &tok, &s.map_elements, &window);
+        pool.step(key, &tok, &s.map_elements, &window).unwrap();
         let map_bytes = pool.map_tokens(3, &tok, &s.map_elements).resident_bytes();
         assert!(pool.resident_bytes() > map_bytes);
         pool.end_session(key);

@@ -5,16 +5,22 @@
 //! * [`batcher`] — dynamic batching of rollout requests into the fixed
 //!   batch shape the artifacts were lowered at (deadline-based flush,
 //!   pad-and-slice).
-//! * [`router`] — routes requests across per-method model replicas.
+//! * [`router`] — two routing layers: worker-shard selection with session
+//!   affinity (`ShardRouter`) and per-method model-replica routing inside
+//!   one shard (`Router`).
 //! * [`kvcache`] — per-session incremental tokenization cache: shared map
-//!   rows, sliding-window agent rows, exact pose re-anchoring, capacity
-//!   eviction and hit/miss/bytes telemetry (DESIGN.md §10).
+//!   rows (`MapRegistry`, one registry across shards), sliding-window
+//!   agent rows, exact pose re-anchoring, capacity eviction and
+//!   hit/miss/bytes telemetry (DESIGN.md §10).
 //! * [`rollout`] — autoregressive simulation scheduler: decode -> action ->
 //!   kinematic integration -> advance the token cache, for minADE
-//!   evaluation and serving.
+//!   evaluation and serving; generic over the [`model::ActionDecoder`]
+//!   boundary.
 //! * [`trainer`] — training orchestrator over the dataset pipeline.
-//! * [`server`] — thread-based serving loop wiring the above together.
-//! * [`telemetry`] — lock-free counters/histograms for the hot path.
+//! * [`server`] — sharded worker-pool serving front end wiring the above
+//!   together (DESIGN.md §12).
+//! * [`telemetry`] — lock-free counters/histograms for the hot path,
+//!   including per-shard breakdowns.
 
 pub mod batcher;
 pub mod kvcache;
@@ -26,9 +32,9 @@ pub mod telemetry;
 pub mod trainer;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use kvcache::{CacheConfig, KvCachePool, SessionKey, WindowCache};
-pub use model::ModelHandle;
+pub use kvcache::{CacheConfig, KvCachePool, MapRegistry, SessionKey, WindowCache};
+pub use model::{ActionDecoder, ModelHandle, SyntheticDecoder};
 pub use rollout::{RolloutEngine, RolloutRequest, RolloutResult};
-pub use router::Router;
-pub use server::Server;
+pub use router::{shard_of, Router, ShardRouter};
+pub use server::{Backend, BackendFactory, ServeConfig, Server};
 pub use trainer::Trainer;

@@ -24,6 +24,98 @@ pub struct DecodeOutput {
     pub logits: Vec<f32>,
 }
 
+/// Anything that can sample per-token actions for a tokenized batch: the
+/// PJRT-backed [`ModelHandle`] in production, or an artifact-free
+/// [`SyntheticDecoder`] in tests and benches.  The rollout scheduler and
+/// the sharded server are generic over this boundary, so the whole
+/// serving stack (router -> batcher -> KV-cache pool -> rollout) can be
+/// exercised without compiled XLA artifacts.
+pub trait ActionDecoder {
+    fn decode(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        seed: i32,
+        temperature: f32,
+    ) -> Result<DecodeOutput>;
+}
+
+/// Deterministic artifact-free decoder: each token's action is a stateless
+/// hash of that token's feature row and the decode seed.  Two properties
+/// the serving tests rely on:
+///
+/// * **batch-packing independence** — a token's action depends only on its
+///   own row, never on which other scenes share the batch or how much
+///   padding was appended, so per-request results are identical no matter
+///   how requests are sharded across workers;
+/// * **determinism** — same request, same actions, every time.
+///
+/// `work_per_token` adds extra hash rounds per token to emulate real model
+/// latency in throughput benchmarks.
+pub struct SyntheticDecoder {
+    pub n_actions: usize,
+    pub work_per_token: usize,
+}
+
+impl SyntheticDecoder {
+    pub fn new(n_actions: usize) -> SyntheticDecoder {
+        SyntheticDecoder {
+            n_actions,
+            work_per_token: 0,
+        }
+    }
+
+    pub fn with_work(n_actions: usize, work_per_token: usize) -> SyntheticDecoder {
+        SyntheticDecoder {
+            n_actions,
+            work_per_token,
+        }
+    }
+}
+
+impl ActionDecoder for SyntheticDecoder {
+    fn decode(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        seed: i32,
+        _temperature: f32,
+    ) -> Result<DecodeOutput> {
+        use crate::prng::SplitMix64;
+        let bs = b.batch_size;
+        if b.feat.len() != bs * n_tokens * feat_dim {
+            bail!(
+                "synthetic decode: batch carries {} features, expected {}",
+                b.feat.len(),
+                bs * n_tokens * feat_dim
+            );
+        }
+        let mut actions = Vec::with_capacity(bs * n_tokens);
+        for s in 0..bs {
+            for t in 0..n_tokens {
+                let row = &b.feat[(s * n_tokens + t) * feat_dim..(s * n_tokens + t + 1) * feat_dim];
+                let mut h = (seed as i64 as u64) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                for &f in row {
+                    h = SplitMix64::new(h ^ u64::from(f.to_bits())).next_u64();
+                }
+                for _ in 0..self.work_per_token {
+                    h = SplitMix64::new(h).next_u64();
+                }
+                actions.push((h % self.n_actions.max(1) as u64) as i32);
+            }
+        }
+        // diagnostics (logp/logits) are not produced on this path; the
+        // rollout scheduler consumes actions only
+        Ok(DecodeOutput {
+            actions,
+            logp: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+}
+
 pub struct ModelHandle {
     pub method: Method,
     engine: Arc<Engine>,
@@ -201,5 +293,76 @@ impl ModelHandle {
         self.opt_v = v;
         self.step = ck.step;
         Ok(())
+    }
+}
+
+impl ActionDecoder for ModelHandle {
+    fn decode(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        seed: i32,
+        temperature: f32,
+    ) -> Result<DecodeOutput> {
+        ModelHandle::decode(self, b, n_tokens, feat_dim, seed, temperature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(bs: usize, n_tokens: usize, feat_dim: usize, salt: f32) -> Batch {
+        Batch {
+            feat: (0..bs * n_tokens * feat_dim)
+                .map(|i| (i % 13) as f32 * 0.25 + salt)
+                .collect(),
+            pose: vec![0.0; bs * n_tokens * 3],
+            tq: vec![0; bs * n_tokens],
+            target: vec![-100; bs * n_tokens],
+            batch_size: bs,
+        }
+    }
+
+    #[test]
+    fn synthetic_decode_is_deterministic_and_in_range() {
+        let d = SyntheticDecoder::new(64);
+        let b = toy_batch(2, 8, 4, 0.0);
+        let a1 = d.decode(&b, 8, 4, 7, 1.0).unwrap();
+        let a2 = d.decode(&b, 8, 4, 7, 0.1).unwrap();
+        assert_eq!(a1.actions, a2.actions, "temperature-independent");
+        assert_eq!(a1.actions.len(), 16);
+        assert!(a1.actions.iter().all(|&a| (0..64).contains(&a)));
+        // the seed perturbs the sample
+        let a3 = d.decode(&b, 8, 4, 8, 1.0).unwrap();
+        assert_ne!(a1.actions, a3.actions);
+    }
+
+    /// The property the cross-shard equivalence test rests on: a token's
+    /// action depends only on its own feature row (and the seed), not on
+    /// which other scenes share the batch.
+    #[test]
+    fn synthetic_decode_is_batch_packing_independent() {
+        let d = SyntheticDecoder::new(32);
+        let (n_tokens, fd) = (4, 3);
+        let alone = toy_batch(1, n_tokens, fd, 1.5);
+        // same rows, packed behind a different leading scene
+        let mut packed = toy_batch(2, n_tokens, fd, 9.0);
+        packed.feat[n_tokens * fd..].copy_from_slice(&alone.feat);
+        let a = d.decode(&alone, n_tokens, fd, 3, 1.0).unwrap();
+        let p = d.decode(&packed, n_tokens, fd, 3, 1.0).unwrap();
+        assert_eq!(
+            a.actions,
+            p.actions[n_tokens..],
+            "actions must not depend on batch packing"
+        );
+    }
+
+    #[test]
+    fn synthetic_decode_rejects_shape_drift() {
+        let d = SyntheticDecoder::new(8);
+        let b = toy_batch(1, 4, 3, 0.0);
+        assert!(d.decode(&b, 5, 3, 0, 1.0).is_err());
     }
 }

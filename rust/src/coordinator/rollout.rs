@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::{ModelConfig, SimConfig};
 use crate::dataset::Batch;
@@ -29,7 +29,7 @@ use crate::sim::{AgentState, MapElement, Scenario, TrajectoryClass};
 use crate::tokenizer::{TokenizedScene, Tokenizer};
 
 use super::kvcache::{CacheConfig, KvCachePool, SessionKey};
-use super::model::ModelHandle;
+use super::model::{ActionDecoder, ModelHandle};
 use super::telemetry::CacheStats;
 
 /// A request to roll one scenario forward.
@@ -44,6 +44,7 @@ pub struct RolloutRequest {
 }
 
 /// World-frame sampled futures plus evaluation metrics.
+#[derive(Clone, Debug)]
 pub struct RolloutResult {
     /// trajectories[sample][agent][step] = world (x, y).
     pub trajectories: Vec<Vec<Vec<(f64, f64)>>>,
@@ -105,10 +106,12 @@ impl RolloutEngine {
         }
     }
 
-    /// Advance a group of samples one decode step.
+    /// Advance a group of samples one decode step.  The decode boundary
+    /// is the [`ActionDecoder`] trait, so any backend (PJRT artifacts or
+    /// an artifact-free synthetic decoder) drives the same scheduler.
     fn step_samples(
         &self,
-        model: &ModelHandle,
+        model: &dyn ActionDecoder,
         samples: &mut [SampleState],
         pool: &KvCachePool,
         seed: i32,
@@ -128,7 +131,7 @@ impl RolloutEngine {
             let scenes: Vec<TokenizedScene> = chunk
                 .iter()
                 .map(|s| pool.step(s.key, &self.tokenizer, &s.map, &s.window))
-                .collect();
+                .collect::<Result<_>>()?;
             let mut batch = Batch {
                 feat: Vec::with_capacity(b * n_tokens * feat_dim),
                 pose: Vec::with_capacity(b * n_tokens * 3),
@@ -193,7 +196,11 @@ impl RolloutEngine {
     /// Run a full rollout request with a private, request-local cache
     /// pool.  Serving goes through [`Self::rollout_with_cache`] so map
     /// rows and telemetry are shared server-wide.
-    pub fn rollout(&self, model: &ModelHandle, req: &RolloutRequest) -> Result<RolloutResult> {
+    pub fn rollout(
+        &self,
+        model: &dyn ActionDecoder,
+        req: &RolloutRequest,
+    ) -> Result<RolloutResult> {
         let pool = KvCachePool::new(CacheConfig::default(), Arc::new(CacheStats::default()));
         self.rollout_with_cache(model, req, &pool)
     }
@@ -202,10 +209,15 @@ impl RolloutEngine {
     /// tokenizing only frontier tokens against `pool`'s session caches.
     pub fn rollout_with_cache(
         &self,
-        model: &ModelHandle,
+        model: &dyn ActionDecoder,
         req: &RolloutRequest,
         pool: &KvCachePool,
     ) -> Result<RolloutResult> {
+        // a zero-sample request is a recoverable caller error, not a
+        // `samples[0]` panic on the serving thread
+        if req.n_samples == 0 {
+            bail!("rollout request asks for zero samples — nothing to roll out");
+        }
         let mut samples: Vec<SampleState> = (0..req.n_samples)
             .map(|i| self.sample_state(req, i as u32))
             .collect();

@@ -1,12 +1,67 @@
-//! Request router: maps each request to the model replica serving its
-//! attention method, tracking in-flight counts and rejecting methods that
-//! are not deployed (vLLM-router-style, scaled to this system).
+//! Request routing, two layers:
+//!
+//! * [`ShardRouter`] — the serving front end's worker-shard picker:
+//!   session-affinity traffic is hashed by family-aware scene id so every
+//!   request touching one scene's cached KV rows lands on the shard that
+//!   owns them; stateless traffic goes to the least-loaded shard.
+//! * [`Router`] — inside one shard: maps each request to the model
+//!   replica serving its attention method, tracking routed/rejected
+//!   counts (vLLM-router-style, scaled to this system).
 
 use std::collections::BTreeMap;
 
 use crate::config::Method;
+use crate::prng::SplitMix64;
 
 use super::telemetry::Counter;
+
+/// Stable shard assignment for a scene: a SplitMix64 finalizer over the
+/// (already family-aware) scene id, mod the shard count.  Pure function —
+/// the cross-shard equivalence test relies on the same scene mapping to
+/// the same shard on every submit, so a session's cached KV rows never
+/// migrate mid-rollout.
+pub fn shard_of(scene_id: u64, n_shards: usize) -> usize {
+    debug_assert!(n_shards > 0);
+    (SplitMix64::new(scene_id).next_u64() % n_shards.max(1) as u64) as usize
+}
+
+/// Front-end router over worker shards.  Stateless by design: routing
+/// must stay a pure function of the request (plus the live load snapshot
+/// for stateless traffic), so no atomics are touched on the submit path.
+/// Per-shard acceptance counts live in
+/// [`crate::coordinator::telemetry::ShardStats`] instead.
+pub struct ShardRouter {
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(n_shards: usize) -> ShardRouter {
+        assert!(n_shards > 0, "a server needs at least one shard");
+        ShardRouter { n_shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Session-affinity route: every request for `scene_id` lands on the
+    /// same shard, so its cached map rows and window sessions stay local.
+    pub fn shard_for_scene(&self, scene_id: u64) -> usize {
+        shard_of(scene_id, self.n_shards)
+    }
+
+    /// Least-loaded route for stateless requests; `loads` is the current
+    /// per-shard inflight depth in shard order.  Ties break to the lowest
+    /// shard index (deterministic).
+    pub fn least_loaded(&self, loads: impl IntoIterator<Item = u64>) -> usize {
+        loads
+            .into_iter()
+            .enumerate()
+            .min_by_key(|&(i, load)| (load, i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
 
 /// Routing table over per-method replicas of `T` (model handles on the
 /// inference thread; anything in tests).
@@ -97,5 +152,38 @@ mod tests {
         r.deploy(Method::Abs, 1);
         r.deploy(Method::Se2Fourier, 2);
         assert_eq!(r.methods(), vec!["abs", "se2fourier"]);
+    }
+
+    #[test]
+    fn shard_assignment_is_deterministic_and_spread() {
+        let r = ShardRouter::new(4);
+        let mut counts = [0usize; 4];
+        for scene in 0..256u64 {
+            let s = r.shard_for_scene(scene);
+            assert_eq!(s, r.shard_for_scene(scene), "stable per scene");
+            assert_eq!(s, shard_of(scene, 4), "matches the pure function");
+            counts[s] += 1;
+        }
+        // the SplitMix64 finalizer must not collapse sequential ids onto
+        // one shard: every shard serves a healthy share of 256 scenes
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 24, "shard {i} got only {c}/256 scenes");
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let r = ShardRouter::new(1);
+        for scene in [0u64, 7, u64::MAX] {
+            assert_eq!(r.shard_for_scene(scene), 0);
+        }
+    }
+
+    #[test]
+    fn least_loaded_picks_min_with_stable_ties() {
+        let r = ShardRouter::new(3);
+        assert_eq!(r.least_loaded([5u64, 1, 3]), 1);
+        assert_eq!(r.least_loaded([2u64, 2, 2]), 0, "ties break low");
+        assert_eq!(r.least_loaded([4u64, 0, 0]), 1, "first minimum wins");
     }
 }

@@ -1,13 +1,24 @@
-//! Serving loop: a dedicated inference thread owns the PJRT engine (the
-//! `xla` crate's client is `Rc`-based and must not cross threads) and all
-//! model replicas; request producers on any thread submit through an mpsc
-//! channel and receive results on per-request channels.
+//! Sharded serving front end (DESIGN.md §12): N worker threads, each
+//! owning its own inference backend (the PJRT engine and the `xla`
+//! crate's client are `Rc`-based and must not cross threads, so every
+//! worker builds its replicas on its own thread), its own per-method
+//! `Batcher` set, and its own `KvCachePool` shard over a *shared* map-row
+//! registry.
 //!
-//! Flow: submit -> router (per-method batcher) -> deadline/size flush ->
-//! rollout engine -> respond.  Backpressure surfaces to callers as
-//! `Busy` rejections instead of unbounded queues.  Shutdown is graceful:
-//! partially filled batches drain *through the rollout engine*, so every
-//! already-accepted caller gets a real result rather than a drop.
+//! Routing: session traffic is hashed by family-aware
+//! `Scenario::scene_id()` so every request touching one scene's cached KV
+//! rows lands on the shard that owns them — sessions never migrate
+//! mid-rollout.  Stateless traffic (`submit_stateless`) goes to the
+//! least-loaded shard by inflight depth.
+//!
+//! Flow per shard: submit -> shard router -> per-method batcher ->
+//! deadline/size flush -> replica router -> rollout engine -> respond.
+//! Backpressure is **per shard**: a hot scene family fills only its own
+//! shard's queues and surfaces `Busy` to its own callers; the other
+//! shards keep serving.  Shutdown is graceful on every shard: partially
+//! filled batches drain *through the rollout engine*, so every
+//! already-accepted caller gets a real result rather than a drop, and a
+//! submit after shutdown gets an explicit "server is shut down" error.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -18,12 +29,60 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{Method, SystemConfig};
 use crate::runtime::Engine;
+use crate::sim::Scenario;
 
 use super::batcher::{Batcher, BatcherConfig, ReadyBatch};
-use super::kvcache::{CacheConfig, KvCachePool};
-use super::model::ModelHandle;
+use super::kvcache::{CacheConfig, KvCachePool, MapRegistry};
+use super::model::{ActionDecoder, ModelHandle};
 use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
-use super::telemetry::ServerStats;
+use super::router::{shard_of, Router, ShardRouter};
+use super::telemetry::{ServerStats, ShardStats};
+
+/// Per-worker inference backend: a replica router over boxed decoders,
+/// built on the worker's own thread by a [`BackendFactory`].
+pub type Backend = Router<Box<dyn ActionDecoder>>;
+
+/// Builds one shard's backend *on that shard's thread* (argument: shard
+/// id).  The default factory loads PJRT artifacts; tests and benches
+/// inject artifact-free synthetic decoders through
+/// [`Server::start_with_backend`].
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Backend> + Send + Sync>;
+
+/// Serving-layer configuration: worker shard count plus the per-shard
+/// batching and KV-cache budgets.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker shards (each its own thread + model replicas + batchers +
+    /// cache pool).  `Default` derives this from the host's parallelism.
+    pub workers: usize,
+    /// Batcher knobs, applied per shard per method — `max_queue` is a
+    /// per-shard bound, so backpressure isolates hot shards.
+    pub batcher: BatcherConfig,
+    /// KV/tokenization cache budget, applied per shard pool (the shared
+    /// map-row registry is bounded by `max_map_scenes` once, server-wide).
+    pub cache: CacheConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: crate::config::default_workers(),
+            batcher: BatcherConfig::default(),
+            cache: CacheConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Config with an explicit worker count (`0` = keep the default).
+    pub fn with_workers(workers: usize) -> ServeConfig {
+        let mut cfg = ServeConfig::default();
+        if workers > 0 {
+            cfg.workers = workers;
+        }
+        cfg
+    }
+}
 
 /// A rollout request plus its response channel.
 struct Envelope {
@@ -38,15 +97,22 @@ enum Message {
     Shutdown,
 }
 
-/// Client-side handle to the serving thread.
-pub struct Server {
+struct Shard {
     tx: mpsc::Sender<Message>,
     thread: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<ShardStats>,
+}
+
+/// Client-side handle to the sharded serving pool.
+pub struct Server {
+    shards: Vec<Shard>,
+    router: ShardRouter,
     pub stats: Arc<ServerStats>,
 }
 
 impl Server {
-    /// Start the inference thread: loads artifacts for `methods`, each
+    /// Start the worker pool on the PJRT backend: each shard loads the
+    /// artifacts for `methods` on its own thread, with replicas
     /// initialized from `param_seed` (examples train them first via the
     /// Trainer; serving freshly initialized weights is allowed for
     /// latency benchmarking).
@@ -54,47 +120,162 @@ impl Server {
         cfg: SystemConfig,
         methods: Vec<Method>,
         param_seed: i32,
-        batcher_cfg: BatcherConfig,
+        serve: ServeConfig,
     ) -> Result<Server> {
-        let stats = Arc::new(ServerStats::default());
-        let stats_thread = Arc::clone(&stats);
-        let (tx, rx) = mpsc::channel::<Message>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-
-        let thread = std::thread::Builder::new()
-            .name("se2attn-inference".into())
-            .spawn(move || {
-                inference_thread(cfg, methods, param_seed, batcher_cfg, rx, ready_tx, stats_thread)
-            })?;
-
-        // wait for model load/compile before accepting traffic
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("inference thread died during startup"))??;
-
-        Ok(Server {
-            tx,
-            thread: Some(thread),
-            stats,
-        })
+        let factory: BackendFactory = {
+            let cfg = cfg.clone();
+            let methods = methods.clone();
+            Arc::new(move |_shard| {
+                // engine + models on the calling (worker) thread: the
+                // PjRtClient is thread-local by construction
+                let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
+                let mut backend = Router::new();
+                for m in &methods {
+                    // touch the decode artifact so compilation happens at
+                    // startup, not on the first request
+                    engine.load(&format!("decode_{}", m.name()))?;
+                    let handle = ModelHandle::init(Arc::clone(&engine), *m, param_seed)?;
+                    backend.deploy(*m, Box::new(handle) as Box<dyn ActionDecoder>);
+                }
+                Ok(backend)
+            })
+        };
+        Server::start_with_backend(cfg, methods, serve, factory)
     }
 
-    /// Submit a rollout; returns the channel the result will arrive on.
+    /// Start the worker pool on an injected backend factory (called once
+    /// per shard, on that shard's thread).  This is how tests and benches
+    /// serve real traffic through the full shard/batch/cache machinery
+    /// without compiled artifacts.
+    pub fn start_with_backend(
+        cfg: SystemConfig,
+        methods: Vec<Method>,
+        serve: ServeConfig,
+        factory: BackendFactory,
+    ) -> Result<Server> {
+        let workers = serve.workers.max(1);
+        let stats = Arc::new(ServerStats::with_shards(workers));
+        let maps = Arc::new(MapRegistry::new(
+            serve.cache.max_map_scenes,
+            Arc::clone(&stats.cache),
+        ));
+
+        let mut shards = Vec::with_capacity(workers);
+        let mut ready_rxs = Vec::with_capacity(workers);
+        for shard_id in 0..workers {
+            let (tx, rx) = mpsc::channel::<Message>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let ctx = ShardCtx {
+                id: shard_id,
+                cfg: cfg.clone(),
+                methods: methods.clone(),
+                batcher_cfg: serve.batcher.clone(),
+                cache_cfg: serve.cache.clone(),
+                maps: Arc::clone(&maps),
+                stats: Arc::clone(&stats),
+                shard: Arc::clone(&stats.shards[shard_id]),
+                factory: Arc::clone(&factory),
+            };
+            let thread = std::thread::Builder::new()
+                .name(format!("se2attn-shard-{shard_id}"))
+                .spawn(move || shard_worker(ctx, rx, ready_tx))?;
+            shards.push(Shard {
+                tx,
+                thread: Some(thread),
+                stats: Arc::clone(&stats.shards[shard_id]),
+            });
+            ready_rxs.push(ready_rx);
+        }
+
+        let server = Server {
+            shards,
+            router: ShardRouter::new(workers),
+            stats,
+        };
+        // wait for every shard's model load/compile before accepting
+        // traffic; on any failure the early return drops `server`, whose
+        // Drop shuts the healthy shards down cleanly
+        for (i, ready) in ready_rxs.into_iter().enumerate() {
+            ready
+                .recv()
+                .map_err(|_| anyhow!("shard {i} died during startup"))??;
+        }
+        Ok(server)
+    }
+
+    /// Worker shard count.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that session-affinity routing pins `scenario` to (pure
+    /// function of the family-aware scene id — exposed for tests).
+    pub fn shard_for(&self, scenario: &Scenario) -> usize {
+        shard_of(scenario.scene_id(), self.shards.len())
+    }
+
+    /// Submit a rollout with session affinity: requests for the same
+    /// scene always land on the shard owning that scene's cached KV rows.
+    /// Returns the channel the result will arrive on.
     pub fn submit(
         &self,
         method: Method,
         request: RolloutRequest,
     ) -> mpsc::Receiver<Result<RolloutResult>> {
+        let shard = self.router.shard_for_scene(request.scenario.scene_id());
+        self.submit_to(shard, method, request)
+    }
+
+    /// Submit a rollout with no cache affinity (one-shot evaluation
+    /// traffic): routed to the least-loaded shard by inflight depth.
+    pub fn submit_stateless(
+        &self,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
+        let shard = self
+            .router
+            .least_loaded(self.shards.iter().map(|s| s.stats.inflight.get()));
+        self.submit_to(shard, method, request)
+    }
+
+    fn submit_to(
+        &self,
+        shard: usize,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
         let (rtx, rrx) = mpsc::channel();
-        self.stats.requests_in.inc();
         let env = Envelope {
             method,
             request,
             submitted_at: Instant::now(),
             respond: rtx,
         };
-        if self.tx.send(Message::Request(env)).is_err() {
-            // inference thread gone; the receiver will see a disconnect
+        // inflight goes up BEFORE the send: the worker decrements when it
+        // answers, and its (saturating) sub must never be able to run
+        // ahead of this add or the gauge would stick one too high
+        let sh = &self.shards[shard].stats;
+        sh.inflight.add(1);
+        match self.shards[shard].tx.send(Message::Request(env)) {
+            Ok(()) => {
+                // count the request only once the shard has accepted it
+                self.stats.requests_in.inc();
+                sh.requests.inc();
+            }
+            Err(mpsc::SendError(msg)) => {
+                // the shard has exited (shutdown): answer explicitly
+                // instead of silently dropping the channel, and do NOT
+                // count the request as accepted.  The worker never saw
+                // the envelope, so undoing the add here cannot race a
+                // worker-side decrement for it.
+                sh.inflight.sub(1);
+                if let Message::Request(env) = msg {
+                    let _ = env
+                        .respond
+                        .send(Err(anyhow!("server is shut down — request not accepted")));
+                }
+            }
         }
         rrx
     }
@@ -105,60 +286,73 @@ impl Server {
             .recv()
             .map_err(|_| anyhow!("server dropped the request"))?
     }
-}
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(t) = self.thread.take() {
-            let _ = t.join();
+    /// Graceful shutdown: every shard drains its partially filled batches
+    /// through its rollout engine before the worker exits, so every
+    /// accepted caller still gets a real result.  Idempotent; also runs
+    /// on Drop.  After shutdown, `submit` answers "server is shut down".
+    pub fn shutdown(&mut self) {
+        for s in &self.shards {
+            let _ = s.tx.send(Message::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(t) = s.thread.take() {
+                let _ = t.join();
+            }
         }
     }
 }
 
-fn inference_thread(
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Everything one worker shard owns or shares, bundled for the spawn.
+struct ShardCtx {
+    id: usize,
     cfg: SystemConfig,
     methods: Vec<Method>,
-    param_seed: i32,
     batcher_cfg: BatcherConfig,
-    rx: mpsc::Receiver<Message>,
-    ready_tx: mpsc::Sender<Result<()>>,
+    cache_cfg: CacheConfig,
+    /// Map-row registry shared across shards (immutable rows, scene-keyed).
+    maps: Arc<MapRegistry>,
+    /// Global counters (shared atomics — every shard increments the same
+    /// bundle, so the stats line aggregates for free).
     stats: Arc<ServerStats>,
-) {
-    // build engine + models on THIS thread (PjRtClient is thread-local)
-    let setup = (|| -> Result<(BTreeMap<&'static str, ModelHandle>, RolloutEngine)> {
-        let engine = Arc::new(Engine::cpu(&cfg.artifact_dir)?);
-        let mut models = BTreeMap::new();
-        for m in &methods {
-            // touch the decode artifact so compilation happens at startup
-            engine.load(&format!("decode_{}", m.name()))?;
-            models.insert(m.name(), ModelHandle::init(Arc::clone(&engine), *m, param_seed)?);
-        }
-        let rollout = RolloutEngine::new(cfg.model.clone(), cfg.sim.clone());
-        Ok((models, rollout))
-    })();
+    /// This shard's breakdown slot.
+    shard: Arc<ShardStats>,
+    factory: BackendFactory,
+}
 
-    let (mut models, rollout) = match setup {
-        Ok(v) => {
+fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Sender<Result<()>>) {
+    // build the backend on THIS thread (PJRT clients are thread-local)
+    let mut backend = match (ctx.factory)(ctx.id) {
+        Ok(b) => {
             let _ = ready_tx.send(Ok(()));
-            v
+            b
         }
         Err(e) => {
             let _ = ready_tx.send(Err(e));
             return;
         }
     };
-
-    let mut batchers: BTreeMap<&'static str, Batcher<Envelope>> = methods
+    let rollout = RolloutEngine::new(ctx.cfg.model.clone(), ctx.cfg.sim.clone());
+    let mut batchers: BTreeMap<Method, Batcher<Envelope>> = ctx
+        .methods
         .iter()
-        .map(|m| (m.name(), Batcher::new(batcher_cfg.clone())))
+        .map(|m| (*m, Batcher::new(ctx.batcher_cfg.clone())))
         .collect();
 
-    // The server owns the KV/tokenization cache pool: sessions are
-    // allocated per scene-sample as rollouts run, map rows are shared
-    // across requests for the same scene, and the pool's counters feed the
-    // ServerStats summary (hits/misses/evictions/resident bytes).
-    let kv_pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats.cache));
+    // This shard's slice of the KV/tokenization cache: private sessions
+    // (the affinity router guarantees a session only ever lands here),
+    // shared map rows, counters aggregated into the server-wide bundle.
+    let kv_pool = KvCachePool::with_map_registry(
+        ctx.cache_cfg.clone(),
+        Arc::clone(&ctx.stats.cache),
+        Arc::clone(&ctx.maps),
+    );
 
     let mut running = true;
     while running {
@@ -171,17 +365,23 @@ fn inference_thread(
             .unwrap_or(Duration::from_millis(50));
 
         match rx.recv_timeout(timeout) {
-            Ok(Message::Request(env)) => match batchers.get_mut(env.method.name()) {
+            Ok(Message::Request(env)) => match batchers.get_mut(&env.method) {
                 Some(b) => {
                     if let Err(rejected) = b.push(env) {
-                        stats.queue_rejections.inc();
+                        // per-shard backpressure: only this shard's
+                        // callers see Busy; siblings keep serving
+                        ctx.stats.queue_rejections.inc();
+                        ctx.shard.rejected.inc();
+                        ctx.shard.inflight.sub(1);
                         let _ = rejected
                             .respond
-                            .send(Err(anyhow!("server busy (queue full)")));
+                            .send(Err(anyhow!("server busy (shard {} queue full)", ctx.id)));
                     }
                 }
                 None => {
-                    stats.queue_rejections.inc();
+                    ctx.stats.queue_rejections.inc();
+                    ctx.shard.rejected.inc();
+                    ctx.shard.inflight.sub(1);
                     let _ = env.respond.send(Err(anyhow!(
                         "method '{}' is not deployed on this server",
                         env.method.name()
@@ -195,21 +395,21 @@ fn inference_thread(
 
         // flush any ready batches
         let now = Instant::now();
-        for (name, b) in batchers.iter_mut() {
+        for (method, b) in batchers.iter_mut() {
             while let Some(ready) = b.poll(now) {
-                run_batch(name, ready, &mut models, &rollout, &kv_pool, &stats);
+                run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
             }
         }
     }
 
     // graceful shutdown: drain queued requests through the rollout engine
     // so every already-accepted caller still gets a real result
-    for (name, b) in batchers.iter_mut() {
+    for (method, b) in batchers.iter_mut() {
         for mut ready in b.drain() {
             // drained batches never hit the fixed-shape inference path, so
             // their (large) padding must not skew the batching metric
             ready.padding = 0;
-            run_batch(name, ready, &mut models, &rollout, &kv_pool, &stats);
+            run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
         }
     }
 }
@@ -217,23 +417,40 @@ fn inference_thread(
 /// Execute one ready batch and respond to each request (shared by the
 /// steady-state flush and the shutdown drain).
 fn run_batch(
-    name: &str,
+    method: Method,
     ready: ReadyBatch<Envelope>,
-    models: &mut BTreeMap<&'static str, ModelHandle>,
+    backend: &mut Backend,
     rollout: &RolloutEngine,
     kv_pool: &KvCachePool,
-    stats: &ServerStats,
+    ctx: &ShardCtx,
 ) {
+    let stats = &*ctx.stats;
     stats.batches.inc();
+    ctx.shard.batches.inc();
     stats.padded_slots.add(ready.padding as u64);
-    let model = models.get_mut(name).unwrap();
+    let Some(model) = backend.route(method) else {
+        // deployed method with no live replica on this shard: answer
+        // every caller instead of wedging the batch
+        for env in ready.items {
+            stats.requests_failed.inc();
+            ctx.shard.failed.inc();
+            ctx.shard.inflight.sub(1);
+            let _ = env.respond.send(Err(anyhow!(
+                "method '{}' has no replica on shard {}",
+                method.name(),
+                ctx.id
+            )));
+        }
+        return;
+    };
     for env in ready.items {
         let t0 = Instant::now();
-        let result = rollout.rollout_with_cache(model, &env.request, kv_pool);
+        let result = rollout.rollout_with_cache(model.as_ref(), &env.request, kv_pool);
         stats.decode_latency.record(t0.elapsed());
         match &result {
             Ok(res) => {
                 stats.requests_done.inc();
+                ctx.shard.done.inc();
                 stats.families.record(
                     env.request.scenario.family,
                     &res.min_ade,
@@ -241,9 +458,13 @@ fn run_batch(
                     res.trajectories.len() as u64,
                 );
             }
-            Err(_) => stats.requests_failed.inc(),
+            Err(_) => {
+                stats.requests_failed.inc();
+                ctx.shard.failed.inc();
+            }
         }
         stats.e2e_latency.record(env.submitted_at.elapsed());
+        ctx.shard.inflight.sub(1);
         let _ = env.respond.send(result);
     }
 }

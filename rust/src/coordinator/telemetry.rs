@@ -256,6 +256,42 @@ impl LatencyHistogram {
     }
 }
 
+/// Counters of one serving shard (worker thread).  The cross-shard sums
+/// live in [`ServerStats`] (every shard also increments the shared global
+/// atomics); these slots expose the per-shard breakdown so a hot or
+/// starved shard is visible in the stats line.
+#[derive(Default, Debug)]
+pub struct ShardStats {
+    /// Requests received by this shard (counted at routing time, before
+    /// the queue-capacity check — a Busy-bounced request still counts
+    /// here and additionally in `rejected`).
+    pub requests: Counter,
+    /// Requests answered with a real rollout result.
+    pub done: Counter,
+    /// Requests answered with an error (decode failure, undeployed method).
+    pub failed: Counter,
+    /// Per-shard backpressure rejections (this shard's queue was full).
+    pub rejected: Counter,
+    /// Batches this shard executed.
+    pub batches: Counter,
+    /// Requests submitted but not yet answered (the least-loaded routing
+    /// signal for stateless traffic).
+    pub inflight: Gauge,
+}
+
+impl ShardStats {
+    /// Compact `s<i>:` fragment for the stats line.
+    pub fn summary_fragment(&self, shard: usize) -> String {
+        format!(
+            "s{shard}:req={} done={} rej={} inflight={}",
+            self.requests.get(),
+            self.done.get(),
+            self.rejected.get(),
+            self.inflight.get(),
+        )
+    }
+}
+
 /// Serving metrics bundle.
 #[derive(Default, Debug)]
 pub struct ServerStats {
@@ -267,17 +303,43 @@ pub struct ServerStats {
     pub queue_rejections: Counter,
     pub e2e_latency: LatencyHistogram,
     pub decode_latency: LatencyHistogram,
-    /// Shared with the server's [`crate::coordinator::kvcache::KvCachePool`].
+    /// Shared with every shard's [`crate::coordinator::kvcache::KvCachePool`]
+    /// (one gauge/counter set aggregated across shards).
     pub cache: std::sync::Arc<CacheStats>,
     /// Per-scenario-family request/minADE/collision counters.
     pub families: FamilyTelemetry,
+    /// Per-shard counters (empty for a non-sharded bundle, e.g. in unit
+    /// tests that only exercise the global counters).
+    pub shards: Vec<std::sync::Arc<ShardStats>>,
 }
 
 impl ServerStats {
+    /// Stats bundle for a server with `n` shards.
+    pub fn with_shards(n: usize) -> ServerStats {
+        ServerStats {
+            shards: (0..n).map(|_| std::sync::Arc::default()).collect(),
+            ..ServerStats::default()
+        }
+    }
+
+    /// Per-shard breakdown block, empty when no shards are registered.
+    fn shard_summary(&self) -> String {
+        if self.shards.is_empty() {
+            return String::new();
+        }
+        let parts: Vec<String> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.summary_fragment(i))
+            .collect();
+        format!(" shards[{}]", parts.join(" "))
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "in={} done={} failed={} batches={} pad={} rej={} \
-             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {} {}",
+             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {} {}{}",
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_failed.get(),
@@ -289,6 +351,7 @@ impl ServerStats {
             self.decode_latency.mean_us() / 1e3,
             self.cache.summary(),
             self.families.summary(),
+            self.shard_summary(),
         )
     }
 }
@@ -373,6 +436,20 @@ mod tests {
         let stats = ServerStats::default();
         stats.families.record(FamilyId::HighwayMerge, &[3.0], 0, 2);
         assert!(stats.summary().contains("highway-merge:req=1"));
+    }
+
+    #[test]
+    fn shard_stats_appear_in_summary() {
+        let stats = ServerStats::with_shards(2);
+        stats.shards[0].requests.add(3);
+        stats.shards[0].done.add(2);
+        stats.shards[0].inflight.add(1);
+        stats.shards[1].rejected.inc();
+        let s = stats.summary();
+        assert!(s.contains("s0:req=3 done=2 rej=0 inflight=1"), "{s}");
+        assert!(s.contains("s1:req=0 done=0 rej=1 inflight=0"), "{s}");
+        // a shard-less bundle keeps the legacy line shape
+        assert!(!ServerStats::default().summary().contains("shards["));
     }
 
     #[test]

@@ -14,8 +14,7 @@ use anyhow::{Context, Result};
 
 use se2attn::cli::{App, Command, Matches, ParseOutcome};
 use se2attn::config::{Method, SystemConfig};
-use se2attn::coordinator::batcher::BatcherConfig;
-use se2attn::coordinator::{ModelHandle, RolloutRequest, Server, Trainer};
+use se2attn::coordinator::{ModelHandle, RolloutRequest, ServeConfig, Server, Trainer};
 use se2attn::fourier;
 use se2attn::geometry::Pose;
 use se2attn::prng::Rng;
@@ -55,7 +54,8 @@ fn app() -> App {
             .opt("samples", "4", "rollout samples per scene")
             .opt("family", "corridor", "scenario family (see `info`), or 'mixed'")
             .opt("mix", "", "weighted family mix, e.g. 'urban-crossing:1,roundabout:3'")
-            .opt("seed", "0", "scenario seed base"))
+            .opt("seed", "0", "scenario seed base")
+            .opt("workers", "0", "serving worker shards (0 = one per core, max 8)"))
         .command(Command::new("approx", "Fourier approximation error probe")
             .opt("radius", "2.0", "key position radius")
             .opt("basis", "12", "basis size F")
@@ -262,12 +262,12 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
 
     let mix = se2attn::config::scenario_mix(m.get("family"), m.get("mix"))?;
 
-    let server = Server::start(
-        cfg.clone(),
-        vec![method],
-        seed as i32,
-        BatcherConfig::default(),
-    )?;
+    let serve = ServeConfig::with_workers(m.get_usize("workers"));
+    let server = Server::start(cfg.clone(), vec![method], seed as i32, serve)?;
+    println!(
+        "serving on {} worker shard(s), session-affinity routing by scene id",
+        server.n_shards()
+    );
     let gen = se2attn::sim::MixGenerator::new(cfg.sim.clone(), mix);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();

@@ -1,0 +1,12 @@
+//! Helpers shared by the integration test binaries.
+
+/// Worker-shard count for server tests, threaded through the environment
+/// so CI exercises both the single-shard and the multi-shard serving
+/// path (`SE2ATTN_TEST_WORKERS=1` / `=4`) on every push.  `default`
+/// applies when the variable is unset or unparsable.
+pub fn test_workers(default: usize) -> usize {
+    std::env::var("SE2ATTN_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

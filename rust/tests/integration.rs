@@ -14,15 +14,25 @@ use std::sync::Arc;
 use se2attn::attention::{quadratic, AttnProblem};
 use se2attn::config::{Method, SystemConfig};
 use se2attn::coordinator::batcher::BatcherConfig;
-use se2attn::coordinator::{ModelHandle, RolloutEngine, RolloutRequest, Server, Trainer};
+use se2attn::coordinator::{
+    ModelHandle, RolloutEngine, RolloutRequest, ServeConfig, Server, Trainer,
+};
 use se2attn::geometry::Pose;
 use se2attn::metrics::TableOneRow;
 use se2attn::prng::Rng;
 use se2attn::runtime::{Engine, HostTensor};
 use se2attn::sim::ScenarioGenerator;
 
+mod common;
+
 fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/index.json").exists()
+}
+
+/// Serving shard count under test (PJRT replicas are per-shard, so the
+/// legacy single-shard layout is the default).
+fn test_workers() -> usize {
+    common::test_workers(1)
 }
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -274,13 +284,18 @@ fn server_end_to_end(cfg: &SystemConfig) {
         cfg.clone(),
         vec![Method::Rope2d],
         0,
-        BatcherConfig {
-            batch_size: 2,
-            max_wait: std::time::Duration::from_millis(5),
-            max_queue: 16,
+        ServeConfig {
+            workers: test_workers(),
+            batcher: BatcherConfig {
+                batch_size: 2,
+                max_wait: std::time::Duration::from_millis(5),
+                max_queue: 16,
+            },
+            ..ServeConfig::default()
         },
     )
     .expect("server start");
+    assert_eq!(server.n_shards(), test_workers());
     let gen = ScenarioGenerator::new(cfg.sim.clone());
     let mut pending = Vec::new();
     for i in 0..3 {
@@ -318,9 +333,11 @@ fn server_end_to_end(cfg: &SystemConfig) {
         Ok(Ok(_)) => panic!("undeployed method must not succeed"),
     }
     assert_eq!(server.stats.requests_done.get(), 3);
-    // per-family counters appear in the stats line (corridor traffic)
+    // per-family counters appear in the stats line (corridor traffic),
+    // and so does the per-shard breakdown block
     let summary = server.stats.summary();
     assert!(summary.contains("corridor:req=3"), "{summary}");
+    assert!(summary.contains("shards[s0:"), "{summary}");
     eprintln!("server OK: {summary}");
 }
 
@@ -334,10 +351,14 @@ fn server_shutdown_drains_queued(cfg: &SystemConfig) {
             cfg.clone(),
             vec![Method::Rope2d],
             0,
-            BatcherConfig {
-                batch_size: 64,
-                max_wait: std::time::Duration::from_secs(3600),
-                max_queue: 64,
+            ServeConfig {
+                workers: test_workers(),
+                batcher: BatcherConfig {
+                    batch_size: 64,
+                    max_wait: std::time::Duration::from_secs(3600),
+                    max_queue: 64,
+                },
+                ..ServeConfig::default()
             },
         )
         .expect("server start");

@@ -183,7 +183,7 @@ fn pool_tokenization_matches_full_across_rollout() {
             let mut window: Vec<Vec<AgentState>> =
                 (0..h).map(|t| s.states[t].clone()).collect();
             for t in h..s.n_steps() {
-                let got = pool.step(key, &tok, &s.map_elements, &window);
+                let got = pool.step(key, &tok, &s.map_elements, &window).unwrap();
                 let want = tok.tokenize_window(&s.map_elements, &window, None);
                 assert_eq!(got.feat, want.feat, "seed {seed} sample {sample} step {t}");
                 assert_eq!(got.pose, want.pose, "seed {seed} sample {sample} step {t}");

@@ -1,0 +1,350 @@
+//! Sharded-serving tests that run WITHOUT compiled PJRT artifacts: the
+//! worker pool is started on a deterministic [`SyntheticDecoder`] backend,
+//! so the full serving stack — shard router, per-method batchers,
+//! per-shard KV-cache pools over the shared map registry, the rollout
+//! scheduler, graceful drain — is exercised in the default (stub-runtime)
+//! build on every `cargo test`.
+//!
+//! The headline check is **cross-shard equivalence**: the same
+//! mixed-family workload through 1 worker and through 4 workers must
+//! produce identical per-request `RolloutResult`s, with zero KV-pool
+//! session migrations (a migrated session would re-miss on its new shard
+//! and show up in the cache counters).
+
+use std::sync::Arc;
+
+use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
+
+mod common;
+use se2attn::coordinator::batcher::BatcherConfig;
+use se2attn::coordinator::{
+    Backend, BackendFactory, CacheConfig, RolloutRequest, RolloutResult, Router, ServeConfig,
+    Server, SyntheticDecoder,
+};
+use se2attn::sim::{MixGenerator, Scenario, ScenarioGenerator};
+
+const METHOD: Method = Method::Se2Fourier;
+
+fn test_model_config() -> ModelConfig {
+    ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 48,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: 64,
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: 12,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+    }
+}
+
+fn test_system_config() -> SystemConfig {
+    SystemConfig {
+        artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        model: test_model_config(),
+        sim: SimConfig::default(),
+        threads: 1,
+    }
+}
+
+/// Factory deploying one synthetic replica of `METHOD` per shard.
+fn synthetic_factory() -> BackendFactory {
+    Arc::new(|_shard: usize| -> anyhow::Result<Backend> {
+        let mut backend: Backend = Router::new();
+        let decoder = SyntheticDecoder::new(test_model_config().n_actions);
+        backend.deploy(METHOD, Box::new(decoder));
+        Ok(backend)
+    })
+}
+
+fn synthetic_server(workers: usize, batcher: BatcherConfig) -> Server {
+    Server::start_with_backend(
+        test_system_config(),
+        vec![METHOD],
+        ServeConfig {
+            workers,
+            batcher,
+            cache: CacheConfig::default(),
+        },
+        synthetic_factory(),
+    )
+    .expect("synthetic server start")
+}
+
+fn request_for(scenario: Scenario, i: usize, n_samples: usize) -> RolloutRequest {
+    let sim = SimConfig::default();
+    RolloutRequest {
+        scenario,
+        t0: sim.history_steps - 1,
+        n_samples,
+        temperature: 1.0,
+        seed: i as i32,
+    }
+}
+
+/// Run the same mixed-family workload through a server and return the
+/// per-request results in submission order.
+fn run_workload(server: &Server, scenes: usize, n_samples: usize) -> Vec<RolloutResult> {
+    let sim = SimConfig::default();
+    let mix = se2attn::config::scenario_mix("mixed", "").unwrap();
+    let gen = MixGenerator::new(sim, mix);
+    let mut pending = Vec::new();
+    for i in 0..scenes {
+        let scenario = gen.generate(1000 + i as u64);
+        pending.push(server.submit(METHOD, request_for(scenario, i, n_samples)));
+    }
+    pending
+        .into_iter()
+        .map(|rx| rx.recv().expect("shard alive").expect("rollout ok"))
+        .collect()
+}
+
+/// Acceptance gate: identical per-request results through 1 vs 4 workers,
+/// zero session migrations, deterministic shard pinning.
+#[test]
+fn cross_shard_equivalence_on_mixed_workload() {
+    let scenes = 24;
+    let samples = 2;
+    let sim = SimConfig::default();
+    let batcher = BatcherConfig {
+        batch_size: 2,
+        max_wait: std::time::Duration::from_millis(1),
+        max_queue: 1024,
+    };
+
+    let server1 = synthetic_server(1, batcher.clone());
+    let results1 = run_workload(&server1, scenes, samples);
+    let stats1 = Arc::clone(&server1.stats);
+    drop(server1);
+
+    let server4 = synthetic_server(4, batcher);
+    // shard pinning is a pure function of the scene id: record the
+    // expected per-shard request counts before submitting
+    let mix = se2attn::config::scenario_mix("mixed", "").unwrap();
+    let gen = MixGenerator::new(sim.clone(), mix);
+    let mut expected_per_shard = [0u64; 4];
+    for i in 0..scenes {
+        expected_per_shard[server4.shard_for(&gen.generate(1000 + i as u64))] += 1;
+    }
+    let results4 = run_workload(&server4, scenes, samples);
+    let stats4 = Arc::clone(&server4.stats);
+
+    // identical per-request results (decode_ms is wall-clock, excluded)
+    assert_eq!(results1.len(), results4.len());
+    for (i, (a, b)) in results1.iter().zip(results4.iter()).enumerate() {
+        assert_eq!(a.trajectories, b.trajectories, "request {i}: trajectories");
+        assert_eq!(a.min_ade, b.min_ade, "request {i}: minADE");
+        assert_eq!(a.classes, b.classes, "request {i}: classes");
+        assert_eq!(a.collisions, b.collisions, "request {i}: collisions");
+    }
+
+    // the workload actually spread over shards, exactly as the affinity
+    // hash predicts
+    for (i, s) in stats4.shards.iter().enumerate() {
+        assert_eq!(
+            s.requests.get(),
+            expected_per_shard[i],
+            "shard {i} request count"
+        );
+    }
+    assert!(
+        expected_per_shard.iter().filter(|&&c| c > 0).count() >= 2,
+        "mixed workload must hit at least two shards: {expected_per_shard:?}"
+    );
+
+    // zero session migrations: every (request, sample) session misses
+    // exactly once (its first decode step) and hits on every later step —
+    // a migrated session would re-miss on its new shard's pool
+    let n_sessions = (scenes * samples) as u64;
+    let hits_per_session = (sim.future_steps - 1) as u64;
+    for (label, stats) in [("1 worker", &stats1), ("4 workers", &stats4)] {
+        assert_eq!(stats.requests_done.get(), scenes as u64, "{label}: done");
+        assert_eq!(stats.requests_failed.get(), 0, "{label}: failed");
+        assert_eq!(stats.cache.misses.get(), n_sessions, "{label}: misses");
+        assert_eq!(
+            stats.cache.hits.get(),
+            n_sessions * hits_per_session,
+            "{label}: hits"
+        );
+        assert_eq!(stats.cache.evictions.get(), 0, "{label}: evictions");
+        // shared map registry: one tokenization per scene server-wide,
+        // regardless of which shard first touched the scene
+        assert_eq!(stats.cache.map_misses.get(), scenes as u64, "{label}: map misses");
+    }
+}
+
+/// A malformed request (zero rollout samples) must come back as a
+/// per-request error — the shard worker keeps serving, its inflight
+/// gauge settles, and the next request on the same shard succeeds.
+#[test]
+fn zero_sample_request_is_a_recoverable_error() {
+    let server = synthetic_server(
+        common::test_workers(2),
+        BatcherConfig {
+            batch_size: 1,
+            max_wait: std::time::Duration::from_millis(1),
+            max_queue: 16,
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let scenario = gen.generate(11);
+    let err = server
+        .call(METHOD, request_for(scenario.clone(), 0, 0))
+        .expect_err("zero samples must error, not panic the shard");
+    assert!(format!("{err:#}").contains("zero samples"), "{err:#}");
+    assert_eq!(server.stats.requests_failed.get(), 1);
+    // the same shard (same scene -> same pin) still serves real traffic
+    let res = server
+        .call(METHOD, request_for(scenario, 1, 1))
+        .expect("shard must survive the bad request");
+    assert_eq!(res.trajectories.len(), 1);
+    for s in &server.stats.shards {
+        assert_eq!(s.inflight.get(), 0);
+    }
+}
+
+/// Regression (ISSUE 3 satellite): a submit after shutdown used to
+/// silently swallow the send but still count `requests_in`; it must now
+/// answer with an explicit error and leave the counters untouched.
+#[test]
+fn submit_after_shutdown_errors_and_is_not_counted() {
+    // default to 2 shards so the synthetic suite covers multi-shard
+    // shutdown even without the CI env override
+    let workers = common::test_workers(2);
+    let mut server = synthetic_server(
+        workers,
+        BatcherConfig {
+            batch_size: 1,
+            max_wait: std::time::Duration::from_millis(1),
+            max_queue: 16,
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let res = server
+        .call(METHOD, request_for(gen.generate(7), 0, 1))
+        .expect("live server must serve");
+    assert_eq!(res.min_ade.len(), SimConfig::default().n_agents);
+    assert_eq!(server.stats.requests_in.get(), 1);
+
+    server.shutdown();
+
+    let rx = server.submit(METHOD, request_for(gen.generate(8), 1, 1));
+    let err = rx
+        .recv()
+        .expect("rejection must arrive as an explicit message, not a hangup")
+        .expect_err("a shut-down server must not serve");
+    assert!(format!("{err:#}").contains("shut down"), "{err:#}");
+    assert_eq!(
+        server.stats.requests_in.get(),
+        1,
+        "a rejected submit must not count as accepted"
+    );
+    assert_eq!(server.stats.requests_done.get(), 1);
+
+    // shutdown is idempotent
+    server.shutdown();
+}
+
+/// Per-shard backpressure: a hot shard fills its own queue and rejects
+/// its own overflow, while a sibling shard keeps accepting — one hot
+/// scene family cannot starve the others.
+#[test]
+fn per_shard_backpressure_isolates_the_hot_shard() {
+    // a batcher that can never flush on its own: requests sit queued
+    // until the shutdown drain, so queue occupancy is fully deterministic
+    let server = synthetic_server(
+        2,
+        BatcherConfig {
+            batch_size: 64,
+            max_wait: std::time::Duration::from_secs(3600),
+            max_queue: 4,
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+
+    // find scenarios pinned to shard 0 (hot) and shard 1 (cold)
+    let mut hot = Vec::new();
+    let mut cold = Vec::new();
+    let mut seed = 0u64;
+    while hot.len() < 5 || cold.is_empty() {
+        let s = gen.generate(seed);
+        match server.shard_for(&s) {
+            0 if hot.len() < 5 => hot.push(s),
+            1 if cold.is_empty() => cold.push(s),
+            _ => {}
+        }
+        seed += 1;
+    }
+
+    // 4 fill shard 0's queue; the 5th must bounce with a Busy error
+    let hot_rxs: Vec<_> = hot
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| server.submit(METHOD, request_for(s, i, 1)))
+        .collect();
+    // the cold shard still accepts
+    let cold_rx = server.submit(METHOD, request_for(cold.pop().unwrap(), 9, 1));
+
+    let stats = Arc::clone(&server.stats);
+    drop(server); // shutdown: queued requests drain through the rollout engine
+
+    let outcomes: Vec<Result<RolloutResult, anyhow::Error>> = hot_rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("answered"))
+        .collect();
+    for (i, o) in outcomes[..4].iter().enumerate() {
+        assert!(o.is_ok(), "queued hot request {i} must drain to a result");
+    }
+    let busy = outcomes[4].as_ref().expect_err("overflow must bounce");
+    assert!(format!("{busy:#}").contains("busy"), "{busy:#}");
+    assert!(
+        cold_rx.recv().expect("answered").is_ok(),
+        "the cold shard must be unaffected by the hot shard's backpressure"
+    );
+
+    assert_eq!(stats.shards[0].rejected.get(), 1);
+    assert_eq!(stats.shards[1].rejected.get(), 0);
+    assert_eq!(stats.queue_rejections.get(), 1);
+    assert_eq!(stats.requests_done.get(), 5, "4 hot drained + 1 cold");
+    assert_eq!(stats.requests_failed.get(), 0);
+    for s in &stats.shards {
+        assert_eq!(s.inflight.get(), 0, "drain must settle inflight to zero");
+    }
+}
+
+/// Stateless submits ignore scene affinity and spread by inflight depth:
+/// with no completions (the batcher cannot flush), 8 submits round-robin
+/// 2 onto each of 4 shards deterministically.
+#[test]
+fn stateless_requests_balance_across_shards() {
+    let server = synthetic_server(
+        4,
+        BatcherConfig {
+            batch_size: 64,
+            max_wait: std::time::Duration::from_secs(3600),
+            max_queue: 64,
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    // all 8 requests share one scene: affinity would pile them onto a
+    // single shard, least-loaded must spread them 2-2-2-2
+    let scenario = gen.generate(42);
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.submit_stateless(METHOD, request_for(scenario.clone(), i, 1)))
+        .collect();
+    for (i, s) in server.stats.shards.iter().enumerate() {
+        assert_eq!(s.requests.get(), 2, "shard {i} load");
+    }
+    let stats = Arc::clone(&server.stats);
+    drop(server);
+    for rx in rxs {
+        rx.recv().expect("answered").expect("drained to a real result");
+    }
+    assert_eq!(stats.requests_done.get(), 8);
+}
