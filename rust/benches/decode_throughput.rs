@@ -19,8 +19,9 @@
 //! check prints per-row verdicts for window >= 32.
 
 use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::kernel::KernelConfig;
 use se2attn::attention::{linear, AttnProblem};
-use se2attn::benchlib::{bench, record_row, Table};
+use se2attn::benchlib::{bench, record_row, write_bench_json, BenchMode, Table};
 use se2attn::config::{Method, SimConfig};
 use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
 use se2attn::coordinator::telemetry::CacheStats;
@@ -57,13 +58,45 @@ fn tokens(rng: &mut Rng, n: usize, step: i32) -> Tokens {
     }
 }
 
-fn attention_path(full_mode: bool) {
-    let scales = [1.0, 0.5, 0.25, 0.125];
-    let sizes: &[usize] = if full_mode {
-        &[16, 32, 64, 128, 256, 512, 1024]
+/// The model configuration both paths derive from (head shape matches
+/// the paper's d=48, F=12; `kernel` is what `ServeConfig`/CLI plumb).
+fn model_config(sim: &SimConfig) -> se2attn::config::ModelConfig {
+    se2attn::config::ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: D,
+        d_model: 96,
+        d_ff: 192,
+        n_tokens: sim.tokens_per_scene(),
+        feat_dim: 16,
+        n_actions: 64,
+        fourier_f: F,
+        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+        batch_size: 8,
+        learning_rate: 3e-4,
+        map_timestep: -1,
+        param_names: vec![],
+        kernel: KernelConfig::default(),
+    }
+}
+
+/// Mode-scaled per-step timing loop (smoke keeps the CI gate quick).
+fn step_bench<F: FnMut()>(mode: BenchMode, f: F) -> se2attn::benchlib::Stats {
+    if mode.is_smoke() {
+        bench(1, 8, std::time::Duration::from_millis(500), f)
     } else {
-        &[16, 32, 64, 128, 256]
-    };
+        bench(2, 30, std::time::Duration::from_secs(3), f)
+    }
+}
+
+fn attention_path(mode: BenchMode, rows: &mut Vec<Json>) {
+    let model = model_config(&SimConfig::default());
+    let scales = [1.0, 0.5, 0.25, 0.125];
+    let sizes: &[usize] = mode.pick(
+        &[16, 32, 64],
+        &[16, 32, 64, 128, 256],
+        &[16, 32, 64, 128, 256, 512, 1024],
+    );
     let mut table = Table::new(&[
         "window",
         "full ms/step",
@@ -81,7 +114,7 @@ fn attention_path(full_mode: bool) {
         let new = tokens(&mut rng, N_NEW, 1);
 
         // ---- full recompute: Algorithm 2 over the whole window ----------
-        let full = bench(2, 30, std::time::Duration::from_secs(3), || {
+        let full = step_bench(mode, || {
             let p = AttnProblem {
                 method: Method::Se2Fourier,
                 d: D,
@@ -99,16 +132,16 @@ fn attention_path(full_mode: bool) {
         });
 
         // ---- cached: append frontier + attend, amortized re-anchor ------
-        let mut eng = IncrementalAttention::new(IncrementalConfig {
-            method: Method::Se2Fourier,
-            d: D,
-            fourier_f: F,
-            scales: scales.to_vec(),
-        });
+        // the engine derives from ModelConfig, so the serving-layer
+        // kernel knob reaches this path exactly as it does in a shard
+        let mut eng = IncrementalAttention::new(IncrementalConfig::for_model(
+            &model,
+            Method::Se2Fourier,
+        ));
         eng.append(&ctx.k, &ctx.v, &ctx.poses, &ctx.t);
         let mut step = 0usize;
         let drift = Pose::new(0.02, -0.01, 0.005);
-        let cached = bench(2, 30, std::time::Duration::from_secs(3), || {
+        let cached = step_bench(mode, || {
             eng.evict_front(N_NEW);
             eng.append(&new.k, &new.v, &new.poses, &new.t);
             std::hint::black_box(eng.attend(&new.q, &new.poses, &new.t).out);
@@ -133,39 +166,25 @@ fn attention_path(full_mode: bool) {
             format!("{speedup:.2}x"),
             verdict,
         ]);
-        record_row(
-            "decode_throughput",
-            Json::obj(vec![
-                ("path", Json::Str("attention".into())),
-                ("window", Json::Num(m as f64)),
-                ("n_new", Json::Num(N_NEW as f64)),
-                ("full_ms", Json::Num(full.mean_ms())),
-                ("cached_ms", Json::Num(cached.mean_ms())),
-                ("speedup", Json::Num(speedup)),
-            ]),
-        );
+        let row = Json::obj(vec![
+            ("path", Json::Str("attention".into())),
+            ("window", Json::Num(m as f64)),
+            ("n_new", Json::Num(N_NEW as f64)),
+            ("full", full.to_json()),
+            ("cached", cached.to_json()),
+            ("full_ms", Json::Num(full.mean_ms())),
+            ("cached_ms", Json::Num(cached.mean_ms())),
+            ("speedup", Json::Num(speedup)),
+        ]);
+        record_row("decode_throughput", row.clone());
+        rows.push(row);
     }
     table.print();
 }
 
-fn tokenization_path() {
+fn tokenization_path(mode: BenchMode, rows: &mut Vec<Json>) {
     let sim = SimConfig::default();
-    let model = se2attn::config::ModelConfig {
-        n_layers: 2,
-        n_heads: 2,
-        head_dim: D,
-        d_model: 96,
-        d_ff: 192,
-        n_tokens: sim.tokens_per_scene(),
-        feat_dim: 16,
-        n_actions: 64,
-        fourier_f: F,
-        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
-        batch_size: 8,
-        learning_rate: 3e-4,
-        map_timestep: -1,
-        param_names: vec![],
-    };
+    let model = model_config(&sim);
     let tok = Tokenizer::new(&model, &sim);
     let s = ScenarioGenerator::new(sim.clone()).generate(11);
     let h = sim.history_steps;
@@ -184,9 +203,16 @@ fn tokenization_path() {
         w.push(s.states[*t % s.n_steps()].clone());
         *t += 1;
     };
+    let tok_bench = |f: &mut dyn FnMut()| {
+        if mode.is_smoke() {
+            bench(2, 50, std::time::Duration::from_millis(500), f)
+        } else {
+            bench(5, 200, std::time::Duration::from_secs(2), f)
+        }
+    };
     let mut wf = window.clone();
     let mut tf = h;
-    let full = bench(5, 200, std::time::Duration::from_secs(2), || {
+    let full = tok_bench(&mut || {
         std::hint::black_box(tok.tokenize_window(&s.map_elements, &wf, None));
         slide(&mut wf, &mut tf);
     });
@@ -200,7 +226,7 @@ fn tokenization_path() {
     let mut tc = h;
     pool.step(key, &tok, &s.map_elements, &wc).unwrap(); // warm (miss)
     slide(&mut wc, &mut tc);
-    let cached = bench(5, 200, std::time::Duration::from_secs(2), || {
+    let cached = tok_bench(&mut || {
         std::hint::black_box(pool.step(key, &tok, &s.map_elements, &wc).unwrap());
         slide(&mut wc, &mut tc);
     });
@@ -209,19 +235,23 @@ fn tokenization_path() {
     table.row(vec!["full tokenize_window".into(), format!("{:.1}", full.mean_ns / 1e3), "1.00x".into()]);
     table.row(vec!["cached pool.step (hit)".into(), format!("{:.1}", cached.mean_ns / 1e3), format!("{speedup:.2}x")]);
     table.print();
-    record_row(
-        "decode_throughput",
-        Json::obj(vec![
-            ("path", Json::Str("tokenization".into())),
-            ("full_us", Json::Num(full.mean_ns / 1e3)),
-            ("cached_us", Json::Num(cached.mean_ns / 1e3)),
-            ("speedup", Json::Num(speedup)),
-        ]),
-    );
+    let row = Json::obj(vec![
+        ("path", Json::Str("tokenization".into())),
+        ("full", full.to_json()),
+        ("cached", cached.to_json()),
+        ("full_us", Json::Num(full.mean_ns / 1e3)),
+        ("cached_us", Json::Num(cached.mean_ns / 1e3)),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    record_row("decode_throughput", row.clone());
+    rows.push(row);
 }
 
 fn main() {
-    let full_mode = std::env::var("SE2ATTN_BENCH_FULL").is_ok();
-    attention_path(full_mode);
-    tokenization_path();
+    let mode = BenchMode::from_env();
+    let mut rows: Vec<Json> = Vec::new();
+    attention_path(mode, &mut rows);
+    tokenization_path(mode, &mut rows);
+    write_bench_json("BENCH_decode.json", rows).expect("write BENCH_decode.json");
+    println!("\nwrote BENCH_decode.json");
 }

@@ -26,6 +26,7 @@ fn model_config() -> ModelConfig {
         learning_rate: 3e-4,
         map_timestep: -1,
         param_names: vec![],
+        kernel: se2attn::attention::kernel::KernelConfig::default(),
     }
 }
 

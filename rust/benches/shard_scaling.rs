@@ -46,6 +46,7 @@ fn model_config() -> ModelConfig {
         learning_rate: 3e-4,
         map_timestep: -1,
         param_names: vec![],
+        kernel: se2attn::attention::kernel::KernelConfig::default(),
     }
 }
 
@@ -83,6 +84,7 @@ fn run(workers: usize) -> (f64, f64) {
                 max_queue: 4096,
             },
             cache: CacheConfig::default(),
+            kernel: se2attn::attention::kernel::KernelConfig::default(),
         },
         factory(),
     )

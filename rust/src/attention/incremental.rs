@@ -50,11 +50,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::Method;
+use crate::config::{Method, ModelConfig};
 use crate::fourier::{basis_fn, quadrature_grid, QuadratureTable};
 use crate::geometry::Pose;
 
-use super::linear::{flash_sdpa, proj_dim};
+use super::kernel::{flash_sdpa_blocked, KernelConfig};
+use super::linear::proj_dim;
 use super::projections as proj;
 use super::AttnOutput;
 
@@ -69,9 +70,28 @@ pub struct IncrementalConfig {
     pub fourier_f: usize,
     /// Spatial scale ladder, cycled across blocks.
     pub scales: Vec<f64>,
+    /// Blocked flash-kernel shape for [`IncrementalAttention::attend`]
+    /// (bit-stable across `threads`, so cached-decode results do not
+    /// depend on the serving host's core count).
+    pub kernel: KernelConfig,
 }
 
 impl IncrementalConfig {
+    /// One per-head incremental engine config derived from a model's
+    /// configuration — the consumer of `ModelConfig.kernel`, so the
+    /// serving-layer kernel knob (`ServeConfig.kernel`, CLI
+    /// `--kernel-threads`, which `Server::start*` copy into each shard's
+    /// `ModelConfig`) reaches every cached-row attend built this way.
+    pub fn for_model(m: &ModelConfig, method: Method) -> IncrementalConfig {
+        IncrementalConfig {
+            method,
+            d: m.head_dim,
+            fourier_f: m.fourier_f,
+            scales: m.spatial_scales.clone(),
+            kernel: m.kernel,
+        }
+    }
+
     fn validate(&self) {
         assert!(!self.scales.is_empty(), "empty scale ladder");
         match self.method {
@@ -269,13 +289,23 @@ impl IncrementalAttention {
             }
         }
 
-        // ---- flash SDPA against the cached rows -------------------------
+        // ---- flash SDPA against the cached rows (blocked kernel) --------
         let eff_scale = match self.cfg.method {
             Method::Se2Fourier => 1.0 / (c as f64).sqrt(),
             _ => 1.0 / (d as f64).sqrt(),
         };
         let mut ot = vec![0.0f32; n * c];
-        flash_sdpa(&qt, &self.kt, &self.vt, tq, &self.tk, c, eff_scale, &mut ot);
+        let kernel_scratch = flash_sdpa_blocked(
+            &qt,
+            &self.kt,
+            &self.vt,
+            tq,
+            &self.tk,
+            c,
+            eff_scale,
+            &mut ot,
+            &self.cfg.kernel,
+        );
 
         // ---- post-projection (Alg. 2 line 4) ----------------------------
         let mut out = vec![0.0f32; n * d];
@@ -309,9 +339,11 @@ impl IncrementalAttention {
 
         AttnOutput {
             out,
-            // transients only: projected queries + projected outputs; the
-            // cache itself is resident state, reported by resident_bytes().
-            peak_temp_bytes: (qt.len() + ot.len()) * std::mem::size_of::<f32>(),
+            // transients only: projected queries + projected outputs +
+            // per-thread kernel scratch; the cache itself is resident
+            // state, reported by resident_bytes().
+            peak_temp_bytes: (qt.len() + ot.len()) * std::mem::size_of::<f32>()
+                + kernel_scratch,
         }
     }
 
@@ -468,6 +500,38 @@ mod tests {
         (q, k, v, poses, t)
     }
 
+    /// `ModelConfig.kernel` (the ServeConfig/CLI plumbing target) must
+    /// reach the engine built from it.
+    #[test]
+    fn for_model_threads_the_kernel_config_through() {
+        let mut m = ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 48,
+            d_model: 96,
+            d_ff: 192,
+            n_tokens: 64,
+            feat_dim: 16,
+            n_actions: 64,
+            fourier_f: 12,
+            spatial_scales: vec![1.0, 0.5],
+            batch_size: 8,
+            learning_rate: 3e-4,
+            map_timestep: -1,
+            param_names: vec![],
+            kernel: KernelConfig::default(),
+        };
+        m.kernel = KernelConfig::fixed(16, 4, 2);
+        let cfg = IncrementalConfig::for_model(&m, Method::Se2Fourier);
+        assert_eq!(cfg.kernel, KernelConfig::fixed(16, 4, 2));
+        assert_eq!(cfg.d, 48);
+        assert_eq!(cfg.fourier_f, 12);
+        assert_eq!(cfg.scales, vec![1.0, 0.5]);
+        // and the engine accepts it
+        let eng = IncrementalAttention::new(cfg);
+        assert_eq!(eng.proj_width(), (4 * 12 + 2) * 8);
+    }
+
     /// Chunked append + attend reproduces Algorithm 2 on the same inputs
     /// for every method (the ops are literally the same, in the same
     /// order, so the tolerance is tight).
@@ -505,6 +569,7 @@ mod tests {
                 d,
                 fourier_f: 16,
                 scales: scales.clone(),
+                kernel: KernelConfig::default(),
             });
             // append in three uneven chunks, as a rollout would
             for (lo, hi) in [(0usize, 5usize), (5, 6), (6, m)] {
@@ -540,6 +605,7 @@ mod tests {
             d,
             fourier_f: f,
             scales: scales.clone(),
+            kernel: KernelConfig::default(),
         };
         let mut eng = IncrementalAttention::new(cfg.clone());
         eng.append(&k, &v, &pk, &tk);
@@ -578,6 +644,7 @@ mod tests {
                 d,
                 fourier_f: f,
                 scales: scales.clone(),
+                kernel: KernelConfig::default(),
             };
             let mut eng = IncrementalAttention::new(cfg.clone());
             eng.append(&k, &v, &poses, &t);
@@ -614,6 +681,7 @@ mod tests {
                     d,
                     fourier_f: f,
                     scales: scales.clone(),
+                    kernel: KernelConfig::default(),
                 });
                 eng.append(&k, &v, &pk, &tk);
                 let before = eng.attend(&q, &pq, &tq).out;
@@ -646,6 +714,7 @@ mod tests {
             d,
             fourier_f: f,
             scales,
+            kernel: KernelConfig::default(),
         };
         let mut seq = IncrementalAttention::new(cfg.clone());
         seq.append(&k, &v, &poses, &t);
@@ -679,6 +748,7 @@ mod tests {
             d,
             fourier_f: 4,
             scales: scales.clone(),
+            kernel: KernelConfig::default(),
         };
         let mut eng = IncrementalAttention::new(cfg.clone());
         eng.append(&k, &v, &poses, &t);
@@ -706,6 +776,7 @@ mod tests {
             d,
             fourier_f: 8,
             scales: vec![1.0, 0.5],
+            kernel: KernelConfig::default(),
         };
         let mut eng = IncrementalAttention::new(cfg);
         let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();

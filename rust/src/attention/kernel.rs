@@ -1,0 +1,599 @@
+//! Blocked, cache-tiled, multithreaded flash-SDPA kernel — the CPU mirror
+//! of the Pallas kernel's grid/block structure (DESIGN.md §13).
+//!
+//! Every native attention path in the repo (Algorithm 2 in
+//! [`super::linear`], the quadratic oracle's row partition in
+//! [`super::quadratic`], and the incremental decode engine's cached-row
+//! attend in [`super::incremental`]) funnels through this module, behind a
+//! [`KernelConfig`].  Two implementations share one contract:
+//!
+//! * [`flash_sdpa_scalar`] — the original scalar, single-threaded,
+//!   per-element loop.  Kept verbatim as the **oracle reference**: the
+//!   equivalence suite and the CI perf gate compare the blocked kernel
+//!   against it.
+//! * [`flash_sdpa_blocked`] — key/value rows processed in fixed-size
+//!   blocks of `block_m` rows (the Pallas `kv` grid axis), with
+//!   vectorizer-friendly fixed-lane inner loops over the feature width
+//!   `c` (f32 block math feeding the existing f64 online-softmax running
+//!   state), query rows partitioned across the reusable scoped thread
+//!   pool ([`crate::exec::shared_pool`]), and a precomputed per-block
+//!   causal-visibility table so fully masked key blocks are never read.
+//!
+//! ## Determinism
+//!
+//! For a fixed `(block_m, lanes)` the blocked kernel is **bit-stable
+//! across thread counts**: threads partition *query rows*, and each row's
+//! reduction order (key blocks in order, lanes chunked in fixed sizes,
+//! rows within a block in order) is a pure function of the inputs — no
+//! cross-thread reduction exists.  `threads` only changes wall-clock,
+//! never output bits.  Changing `block_m` or `lanes` changes the rounding
+//! order and may perturb outputs within the f32 noise floor (the
+//! equivalence suite bounds it at 1e-5 against the scalar oracle).
+//!
+//! ## All-masked query rows (pinned behavior)
+//!
+//! A query row whose timestamp precedes every key (`tq[i] < tk[j]` for all
+//! j) has an empty softmax: `l_i == 0`.  Both kernels define its output as
+//! an exact **zero row** — never `0/0 = NaN`.  `tests/kernel_equivalence.rs`
+//! pins this for both paths.
+
+use std::cell::RefCell;
+
+use crate::config::default_workers;
+use crate::exec::{run_chunked, SendPtr};
+
+/// Query rows claimed per pool task: small enough to load-balance ragged
+/// visibility masks, large enough to amortize the work-stealing counter.
+const ROWS_PER_TASK: usize = 8;
+
+/// Configuration of the blocked flash kernel.  `Default` resolves the
+/// `SE2ATTN_KERNEL_{BLOCK_M,LANES,THREADS}` environment overrides once
+/// per process and otherwise uses `block_m = 64`, `lanes = 8`,
+/// `threads =` [`default_workers`] — so every call site that does not
+/// plumb an explicit config still agrees on one kernel shape (bit-stable
+/// results between e.g. `linear::attention` and the incremental engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Key/value rows per block (the Pallas `kv` block dimension).
+    pub block_m: usize,
+    /// f32 lanes in the fixed-lane inner loops (4, 8 or 16 — anything
+    /// else is normalized to 8).
+    pub lanes: usize,
+    /// Worker threads the query-row partition may use (the calling
+    /// thread counts as one; `threads - 1` come from the shared pool).
+    pub threads: usize,
+}
+
+impl KernelConfig {
+    pub const DEFAULT_BLOCK_M: usize = 64;
+    pub const DEFAULT_LANES: usize = 8;
+
+    /// Fully explicit config (tests and benches — no env, no host probing).
+    pub fn fixed(block_m: usize, lanes: usize, threads: usize) -> KernelConfig {
+        KernelConfig {
+            block_m,
+            lanes,
+            threads,
+        }
+        .normalized()
+    }
+
+    /// The default shape with an explicit thread count (`0` = keep the
+    /// default) — the CLI / `ServeConfig` plumbing entry point.
+    pub fn with_threads(threads: usize) -> KernelConfig {
+        let mut cfg = KernelConfig::default();
+        if threads > 0 {
+            cfg.threads = threads;
+        }
+        cfg.normalized()
+    }
+
+    /// Read `SE2ATTN_KERNEL_{BLOCK_M,LANES,THREADS}` (each optional) on
+    /// top of the built-in defaults.  Called once per process by
+    /// `Default`; call directly to re-read the environment.
+    pub fn from_env() -> KernelConfig {
+        let var = |name: &str, fallback: usize| -> usize {
+            std::env::var(name)
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .filter(|&v| v > 0)
+                .unwrap_or(fallback)
+        };
+        KernelConfig {
+            block_m: var("SE2ATTN_KERNEL_BLOCK_M", Self::DEFAULT_BLOCK_M),
+            lanes: var("SE2ATTN_KERNEL_LANES", Self::DEFAULT_LANES),
+            threads: var("SE2ATTN_KERNEL_THREADS", default_workers()),
+        }
+        .normalized()
+    }
+
+    /// Clamp to shapes the kernel supports (lanes ∈ {4, 8, 16}; at least
+    /// one key row per block; 1..=32 threads).
+    pub fn normalized(&self) -> KernelConfig {
+        KernelConfig {
+            block_m: self.block_m.max(1),
+            lanes: match self.lanes {
+                4 | 8 | 16 => self.lanes,
+                _ => Self::DEFAULT_LANES,
+            },
+            threads: self.threads.clamp(1, 32),
+        }
+    }
+
+    /// Transient bytes of one worker thread's scratch (scores block +
+    /// f32 value-block accumulator + f64 running accumulator) — the
+    /// per-thread term of the linear-memory claim.
+    pub fn scratch_bytes_per_thread(&self, c: usize, m: usize) -> usize {
+        let bm = self.block_m.max(1).min(m.max(1));
+        bm * std::mem::size_of::<f64>()
+            + c * std::mem::size_of::<f32>()
+            + c * std::mem::size_of::<f64>()
+    }
+}
+
+impl Default for KernelConfig {
+    fn default() -> KernelConfig {
+        static AUTO: std::sync::OnceLock<KernelConfig> = std::sync::OnceLock::new();
+        *AUTO.get_or_init(KernelConfig::from_env)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar oracle
+// ---------------------------------------------------------------------------
+
+/// Streaming SDPA over projected tensors: q (n x c), k/v (m x c), online
+/// softmax with visibility rule `tq >= tk`, O(c) transient state.  The
+/// scalar, single-threaded oracle the blocked kernel is verified against;
+/// an all-masked query row is a defined zero row.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_sdpa_scalar(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    tq: &[i32],
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    out: &mut [f32],
+) {
+    let n = tq.len();
+    let m = tk.len();
+    debug_assert_eq!(q.len(), n * c, "q shape");
+    debug_assert_eq!(k.len(), m * c, "k shape");
+    debug_assert_eq!(v.len(), m * c, "v shape");
+    debug_assert_eq!(out.len(), n * c, "out shape");
+    let mut acc = vec![0.0f64; c];
+    for i in 0..n {
+        let qi = &q[i * c..(i + 1) * c];
+        let mut m_i = f64::NEG_INFINITY;
+        let mut l_i = 0.0f64;
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for j in 0..m {
+            if tq[i] < tk[j] {
+                continue;
+            }
+            let kj = &k[j * c..(j + 1) * c];
+            let s: f64 = qi
+                .iter()
+                .zip(kj.iter())
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum::<f64>()
+                * scale;
+            let m_new = m_i.max(s);
+            let alpha = if m_i == f64::NEG_INFINITY {
+                0.0
+            } else {
+                (m_i - m_new).exp()
+            };
+            let p = (s - m_new).exp();
+            l_i = l_i * alpha + p;
+            let vj = &v[j * c..(j + 1) * c];
+            for (a, &vv) in acc.iter_mut().zip(vj.iter()) {
+                *a = *a * alpha + p * vv as f64;
+            }
+            m_i = m_new;
+        }
+        let oi = &mut out[i * c..(i + 1) * c];
+        if l_i > 0.0 {
+            for (o, &a) in oi.iter_mut().zip(acc.iter()) {
+                *o = (a / l_i) as f32;
+            }
+        } else {
+            // all-masked query row: defined as zero, never 0/0 = NaN
+            oi.iter_mut().for_each(|o| *o = 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked multithreaded kernel
+// ---------------------------------------------------------------------------
+
+/// Precomputed visibility envelope of one key block: with the rule
+/// `visible(i, j) = tq[i] >= tk[j]`, a query with `tq < min_tk` sees
+/// nothing in the block (skip — k/v rows never touched) and one with
+/// `tq >= max_tk` sees everything (no per-row mask test in the hot loop).
+#[derive(Clone, Copy, Debug)]
+struct KeyBlock {
+    start: usize,
+    end: usize,
+    min_tk: i32,
+    max_tk: i32,
+}
+
+fn key_blocks(tk: &[i32], block_m: usize) -> Vec<KeyBlock> {
+    let m = tk.len();
+    let bm = block_m.max(1);
+    let mut blocks = Vec::with_capacity(m.div_ceil(bm));
+    let mut start = 0;
+    while start < m {
+        let end = (start + bm).min(m);
+        let mut min_tk = i32::MAX;
+        let mut max_tk = i32::MIN;
+        for &t in &tk[start..end] {
+            min_tk = min_tk.min(t);
+            max_tk = max_tk.max(t);
+        }
+        blocks.push(KeyBlock {
+            start,
+            end,
+            min_tk,
+            max_tk,
+        });
+        start = end;
+    }
+    blocks
+}
+
+/// Per-thread scratch, reused across calls through a thread-local so pool
+/// workers allocate once and keep their buffers warm.
+#[derive(Default)]
+struct RowScratch {
+    /// Scores of one key block (f64 — the online-softmax state dtype).
+    s: Vec<f64>,
+    /// f32 block accumulator for `sum_j p_j * v_j` (the "f32 block math").
+    vacc: Vec<f32>,
+    /// f64 running output accumulator (carried across blocks).
+    acc: Vec<f64>,
+}
+
+impl RowScratch {
+    fn ensure(&mut self, block_m: usize, c: usize) {
+        if self.s.len() < block_m {
+            self.s.resize(block_m, 0.0);
+        }
+        if self.vacc.len() != c {
+            self.vacc.resize(c, 0.0);
+        }
+        if self.acc.len() != c {
+            self.acc.resize(c, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<RowScratch> = RefCell::new(RowScratch::default());
+}
+
+/// Fixed-lane dot product: L parallel f32 partial sums (vectorizer
+/// fodder), combined left-to-right in f64, plus a scalar tail.  The
+/// reduction order depends only on `L` and the slice length — never on
+/// the executing thread.
+#[inline]
+fn dot_lanes<const L: usize>(a: &[f32], b: &[f32]) -> f64 {
+    let chunks = a.len() / L;
+    let mut acc = [0.0f32; L];
+    for ch in 0..chunks {
+        let ab = &a[ch * L..ch * L + L];
+        let bb = &b[ch * L..ch * L + L];
+        for l in 0..L {
+            acc[l] += ab[l] * bb[l];
+        }
+    }
+    let mut s = 0.0f64;
+    for &x in acc.iter() {
+        s += x as f64;
+    }
+    for t in chunks * L..a.len() {
+        s += (a[t] * b[t]) as f64;
+    }
+    s
+}
+
+/// Fixed-lane `acc += x * v` over f32 (the value-block accumulation).
+#[inline]
+fn axpy_lanes<const L: usize>(acc: &mut [f32], x: f32, v: &[f32]) {
+    let chunks = acc.len() / L;
+    for ch in 0..chunks {
+        let ab = &mut acc[ch * L..ch * L + L];
+        let vb = &v[ch * L..ch * L + L];
+        for l in 0..L {
+            ab[l] += x * vb[l];
+        }
+    }
+    for t in chunks * L..acc.len() {
+        acc[t] += x * v[t];
+    }
+}
+
+/// One query row against every key block: flash online softmax with one
+/// rescale per *block* instead of per element.
+#[allow(clippy::too_many_arguments)]
+fn attend_row<const L: usize>(
+    qi: &[f32],
+    k: &[f32],
+    v: &[f32],
+    tqi: i32,
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    blocks: &[KeyBlock],
+    sc: &mut RowScratch,
+    out_row: &mut [f32],
+) {
+    let mut m_i = f64::NEG_INFINITY;
+    let mut l_i = 0.0f64;
+    sc.acc.iter_mut().for_each(|a| *a = 0.0);
+    for b in blocks {
+        if tqi < b.min_tk {
+            // fully masked block: skipped before any k/v row is read
+            continue;
+        }
+        let fully_visible = tqi >= b.max_tk;
+        // ---- scores (f32 lane math -> f64 block max) --------------------
+        let mut bmax = f64::NEG_INFINITY;
+        for (jj, j) in (b.start..b.end).enumerate() {
+            sc.s[jj] = if fully_visible || tqi >= tk[j] {
+                let s = dot_lanes::<L>(qi, &k[j * c..(j + 1) * c]) * scale;
+                if s > bmax {
+                    bmax = s;
+                }
+                s
+            } else {
+                f64::NEG_INFINITY
+            };
+        }
+        // tqi >= b.min_tk guarantees at least one visible key, so bmax is
+        // finite and `alpha` below can never be exp(-inf - -inf) = NaN
+        let m_new = if bmax > m_i { bmax } else { m_i };
+        let alpha = (m_i - m_new).exp(); // m_i == -inf  =>  alpha == 0
+        // ---- probabilities + f32 value-block accumulation ---------------
+        sc.vacc.iter_mut().for_each(|x| *x = 0.0);
+        let mut l_b = 0.0f64;
+        for (jj, j) in (b.start..b.end).enumerate() {
+            let s = sc.s[jj];
+            if s == f64::NEG_INFINITY {
+                continue;
+            }
+            let p = (s - m_new).exp();
+            l_b += p;
+            axpy_lanes::<L>(&mut sc.vacc, p as f32, &v[j * c..(j + 1) * c]);
+        }
+        // ---- fold the block into the f64 running state ------------------
+        l_i = l_i * alpha + l_b;
+        for (a, &vb) in sc.acc.iter_mut().zip(sc.vacc.iter()) {
+            *a = *a * alpha + vb as f64;
+        }
+        m_i = m_new;
+    }
+    if l_i > 0.0 {
+        for (o, &a) in out_row.iter_mut().zip(sc.acc.iter()) {
+            *o = (a / l_i) as f32;
+        }
+    } else {
+        // all-masked query row: defined as zero, never 0/0 = NaN
+        out_row.iter_mut().for_each(|o| *o = 0.0);
+    }
+}
+
+/// Blocked, multithreaded flash SDPA (see module docs).  Same contract as
+/// [`flash_sdpa_scalar`]; returns the total transient scratch bytes of
+/// the participating worker threads (for `peak_temp_bytes` accounting —
+/// the resident per-thread cost stays O(c), preserving the linear-memory
+/// claim per worker).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_sdpa_blocked(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    tq: &[i32],
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) -> usize {
+    let n = tq.len();
+    let m = tk.len();
+    assert_eq!(q.len(), n * c, "q shape");
+    assert_eq!(k.len(), m * c, "k shape");
+    assert_eq!(v.len(), m * c, "v shape");
+    assert_eq!(out.len(), n * c, "out shape");
+    let cfg = cfg.normalized();
+    if n == 0 {
+        return 0;
+    }
+    let blocks = key_blocks(tk, cfg.block_m);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    let block_m = cfg.block_m.min(m.max(1));
+
+    let threads = run_chunked(n, ROWS_PER_TASK, cfg.threads, &|lo, hi| {
+        SCRATCH.with(|cell| {
+            let mut sc = cell.borrow_mut();
+            sc.ensure(block_m, c);
+            for i in lo..hi {
+                // disjoint per-row output slice — the only mutable state
+                let out_row = unsafe { out_ptr.slice_mut(i * c, c) };
+                let qi = &q[i * c..(i + 1) * c];
+                match cfg.lanes {
+                    4 => attend_row::<4>(
+                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                    ),
+                    16 => attend_row::<16>(
+                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                    ),
+                    _ => attend_row::<8>(
+                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                    ),
+                }
+            }
+        });
+    });
+    threads * cfg.scratch_bytes_per_thread(c, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn rand_inputs(
+        rng: &mut Rng,
+        n: usize,
+        m: usize,
+        c: usize,
+        tmax: i64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>) {
+        let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let q = gen(rng, n * c);
+        let k = gen(rng, m * c);
+        let v = gen(rng, m * c);
+        let tq: Vec<i32> = (0..n).map(|_| rng.int_range(0, tmax) as i32).collect();
+        let tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, tmax) as i32).collect();
+        (q, k, v, tq, tk)
+    }
+
+    fn run_blocked(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        tq: &[i32],
+        tk: &[i32],
+        c: usize,
+        cfg: &KernelConfig,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; tq.len() * c];
+        let scale = 1.0 / (c as f64).sqrt();
+        flash_sdpa_blocked(q, k, v, tq, tk, c, scale, &mut out, cfg);
+        out
+    }
+
+    #[test]
+    fn blocked_matches_scalar_on_random_inputs() {
+        let mut rng = Rng::new(1234);
+        for (n, m, c) in [(1usize, 1usize, 8usize), (7, 13, 24), (33, 65, 40)] {
+            let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 4);
+            let scale = 1.0 / (c as f64).sqrt();
+            let mut want = vec![0.0f32; n * c];
+            flash_sdpa_scalar(&q, &k, &v, &tq, &tk, c, scale, &mut want);
+            for block_m in [1usize, 3, 64, 1024] {
+                let got = run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(block_m, 8, 2));
+                for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "n={n} m={m} c={c} block_m={block_m} [{i}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(99);
+        let (n, m, c) = (37, 53, 20);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 3);
+        let base = run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(16, 8, 1));
+        for threads in [2usize, 4, 8] {
+            let got = run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(16, 8, threads));
+            assert_eq!(base, got, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn all_masked_rows_are_zero_not_nan() {
+        let mut rng = Rng::new(7);
+        let (n, m, c) = (5, 9, 12);
+        let (q, k, v, _, _) = rand_inputs(&mut rng, n, m, c, 1);
+        let tq = vec![-10i32; n]; // precede every key
+        let tk: Vec<i32> = (0..m as i32).collect();
+        let scale = 1.0 / (c as f64).sqrt();
+        let mut scalar = vec![f32::NAN; n * c];
+        flash_sdpa_scalar(&q, &k, &v, &tq, &tk, c, scale, &mut scalar);
+        assert!(scalar.iter().all(|&x| x == 0.0), "scalar: zero, not NaN");
+        let mut blocked = vec![f32::NAN; n * c];
+        let cfg = KernelConfig::fixed(4, 8, 2);
+        flash_sdpa_blocked(&q, &k, &v, &tq, &tk, c, scale, &mut blocked, &cfg);
+        assert!(blocked.iter().all(|&x| x == 0.0), "blocked: zero, not NaN");
+    }
+
+    #[test]
+    fn empty_key_set_yields_zero_rows() {
+        let c = 6;
+        let q = vec![1.0f32; 3 * c];
+        let tq = vec![0i32; 3];
+        let mut out = vec![f32::NAN; 3 * c];
+        flash_sdpa_blocked(&q, &[], &[], &tq, &[], c, 1.0, &mut out, &KernelConfig::default());
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_skip_table_is_correct() {
+        let tk = vec![5, 1, 3, 9, 9, 9, 0, 2];
+        let blocks = key_blocks(&tk, 3);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!((blocks[0].min_tk, blocks[0].max_tk), (1, 5));
+        assert_eq!((blocks[1].min_tk, blocks[1].max_tk), (9, 9));
+        assert_eq!((blocks[2].min_tk, blocks[2].max_tk), (0, 2));
+        assert_eq!((blocks[2].start, blocks[2].end), (6, 8));
+    }
+
+    #[test]
+    fn lane_variants_agree_with_scalar() {
+        let mut rng = Rng::new(31);
+        let (n, m, c) = (9, 17, 26); // ragged: c % every lane width != 0
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 2);
+        let scale = 1.0 / (c as f64).sqrt();
+        let mut want = vec![0.0f32; n * c];
+        flash_sdpa_scalar(&q, &k, &v, &tq, &tk, c, scale, &mut want);
+        for lanes in [4usize, 8, 16] {
+            let got = run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(8, lanes, 2));
+            for (a, b) in want.iter().zip(got.iter()) {
+                assert!((a - b).abs() < 1e-5, "lanes={lanes}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn config_normalization() {
+        let cfg = KernelConfig {
+            block_m: 0,
+            lanes: 7,
+            threads: 10_000,
+        }
+        .normalized();
+        assert_eq!(cfg.block_m, 1);
+        assert_eq!(cfg.lanes, KernelConfig::DEFAULT_LANES);
+        assert_eq!(cfg.threads, 32);
+        let d = KernelConfig::default();
+        assert!(d.threads >= 1);
+        assert!(d.block_m >= 1);
+        assert_eq!(KernelConfig::with_threads(0).block_m, d.block_m);
+        assert_eq!(KernelConfig::with_threads(3).threads, 3);
+    }
+
+    #[test]
+    fn scratch_accounting_is_o_c_per_thread() {
+        let cfg = KernelConfig::fixed(64, 8, 4);
+        let per = cfg.scratch_bytes_per_thread(100, 1000);
+        assert_eq!(per, 64 * 8 + 100 * 4 + 100 * 8);
+        // block capped by m
+        assert_eq!(
+            cfg.scratch_bytes_per_thread(100, 16),
+            16 * 8 + 100 * 4 + 100 * 8
+        );
+    }
+}

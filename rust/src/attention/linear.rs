@@ -4,74 +4,23 @@
 //! flash-style SDPA (online softmax, O(c) per row), then per-token
 //! post-projection.  No N x M tensor is ever materialized — the
 //! `peak_temp_bytes` accounting proves it.
+//!
+//! The SDPA core is the blocked multithreaded kernel in
+//! [`super::kernel`]; [`attention_ref`] runs the same projections over the
+//! scalar oracle ([`super::kernel::flash_sdpa_scalar`]) and is what the
+//! equivalence tests and the CI perf gate compare against.
 
 use crate::config::Method;
 use crate::geometry::Pose;
 
+use super::kernel::{flash_sdpa_blocked, flash_sdpa_scalar, KernelConfig};
 use super::projections as proj;
 use super::{AttnOutput, AttnProblem};
 
-/// Streaming SDPA over projected tensors: q (n x c), k/v (m x c), online
-/// softmax with visibility rule tq >= tk.  O(m*c) reads per row but O(c)
-/// transient state — the CPU mirror of the Pallas flash kernel.
-///
-/// Public so the incremental decode engine
-/// ([`super::incremental::IncrementalAttention`]) can answer new-query
-/// attention against its cached `phi_k k` / `phi_k v` rows through the
-/// exact same online-softmax path.
-pub fn flash_sdpa(
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    tq: &[i32],
-    tk: &[i32],
-    c: usize,
-    scale: f64,
-    out: &mut [f32],
-) {
-    let n = tq.len();
-    let m = tk.len();
-    let mut acc = vec![0.0f64; c];
-    for i in 0..n {
-        let qi = &q[i * c..(i + 1) * c];
-        let mut m_i = f64::NEG_INFINITY;
-        let mut l_i = 0.0f64;
-        acc.iter_mut().for_each(|a| *a = 0.0);
-        for j in 0..m {
-            if tq[i] < tk[j] {
-                continue;
-            }
-            let kj = &k[j * c..(j + 1) * c];
-            let s: f64 = qi
-                .iter()
-                .zip(kj.iter())
-                .map(|(a, b)| *a as f64 * *b as f64)
-                .sum::<f64>()
-                * scale;
-            let m_new = m_i.max(s);
-            let alpha = if m_i == f64::NEG_INFINITY {
-                0.0
-            } else {
-                (m_i - m_new).exp()
-            };
-            let p = (s - m_new).exp();
-            l_i = l_i * alpha + p;
-            let vj = &v[j * c..(j + 1) * c];
-            for (a, &vv) in acc.iter_mut().zip(vj.iter()) {
-                *a = *a * alpha + p * vv as f64;
-            }
-            m_i = m_new;
-        }
-        let oi = &mut out[i * c..(i + 1) * c];
-        if l_i > 0.0 {
-            for (o, &a) in oi.iter_mut().zip(acc.iter()) {
-                *o = (a / l_i) as f32;
-            }
-        } else {
-            oi.iter_mut().for_each(|o| *o = 0.0);
-        }
-    }
-}
+/// The scalar flash-SDPA oracle, re-exported under its historical name so
+/// callers of `linear::flash_sdpa` keep compiling (the blocked kernel
+/// lives in [`super::kernel::flash_sdpa_blocked`]).
+pub use super::kernel::flash_sdpa_scalar as flash_sdpa;
 
 /// Projected per-head width c for a problem.
 pub fn proj_dim(method: Method, d: usize, fourier_f: usize) -> usize {
@@ -81,13 +30,32 @@ pub fn proj_dim(method: Method, d: usize, fourier_f: usize) -> usize {
     }
 }
 
-/// Algorithm 2.  Linear transient memory: three projected tensors of width
-/// c plus O(c) online-softmax state.
-pub fn attention(p: &AttnProblem) -> AttnOutput {
-    p.validate();
+/// The projected tensors of Algorithm 2 lines 1–2 (q~, k~, v~), plus the
+/// SDPA scale they must be attended with.  Public so benches and tests
+/// can time / verify the SDPA core on its own, without re-projecting per
+/// iteration.
+pub struct Projected {
+    pub qt: Vec<f32>,
+    pub kt: Vec<f32>,
+    pub vt: Vec<f32>,
+    /// Projected per-head width.
+    pub c: usize,
+    /// Effective SDPA scale (1/sqrt(d) for the width-preserving methods;
+    /// 1/sqrt(c) for se2fourier, whose (c/d)^(1/4) prefactor on q~/k~
+    /// makes the composition equal 1/sqrt(d)).
+    pub eff_scale: f64,
+}
+
+impl Projected {
+    pub fn bytes(&self) -> usize {
+        (self.qt.len() + self.kt.len() + self.vt.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Pre-projection (Alg. 2 lines 1–2): linear in N + M.
+pub fn project(p: &AttnProblem) -> Projected {
     let (n, m, d, f) = (p.n(), p.m(), p.d, p.fourier_f);
     let c = proj_dim(p.method, d, f);
-    let scale = 1.0 / (c as f64).sqrt();
     // Alg. 2 prefactor (c/d)^(1/4) on q~ and k~ makes the effective scale
     // 1/sqrt(d) after SDPA's 1/sqrt(c).
     let pref = ((c as f64) / (d as f64)).powf(0.25) as f32;
@@ -97,7 +65,6 @@ pub fn attention(p: &AttnProblem) -> AttnOutput {
     let mut vt = vec![0.0f32; m * c];
     let mut scratch: Vec<f32> = Vec::with_capacity(c);
 
-    // ---- pre-projection (linear in N+M) --------------------------------
     match p.method {
         Method::Abs => {
             qt.copy_from_slice(p.q);
@@ -162,21 +129,28 @@ pub fn attention(p: &AttnProblem) -> AttnOutput {
         }
     }
 
-    // ---- standard SDPA (flash-style, linear memory) ---------------------
-    let mut ot = vec![0.0f32; n * c];
     let eff_scale = match p.method {
+        Method::Se2Fourier => 1.0 / (c as f64).sqrt(),
         // abs/rope2d/se2rep use 1/sqrt(d) directly (c == d)
-        Method::Se2Fourier => scale,
         _ => 1.0 / (d as f64).sqrt(),
     };
-    flash_sdpa(&qt, &kt, &vt, p.tq, p.tk, c, eff_scale, &mut ot);
+    Projected {
+        qt,
+        kt,
+        vt,
+        c,
+        eff_scale,
+    }
+}
 
-    // ---- post-projection (Alg. 2 line 4) --------------------------------
+/// Post-projection (Alg. 2 line 4): map attended o~ rows back to width d.
+fn unproject(p: &AttnProblem, ot: &[f32], c: usize) -> Vec<f32> {
+    let (n, d, f) = (p.n(), p.d, p.fourier_f);
     let mut out = vec![0.0f32; n * d];
     match p.method {
-        Method::Abs => out.copy_from_slice(&ot),
+        Method::Abs => out.copy_from_slice(ot),
         Method::Rope2d => {
-            out.copy_from_slice(&ot);
+            out.copy_from_slice(ot);
             // phi_q(p_n) = rho(-a x_n) blocks: rotate by the negated own
             // coordinates (Alg. 2 line 4).
             for i in 0..n {
@@ -189,12 +163,13 @@ pub fn attention(p: &AttnProblem) -> AttnOutput {
             }
         }
         Method::Se2Rep => {
-            out.copy_from_slice(&ot);
+            out.copy_from_slice(ot);
             for i in 0..n {
                 proj::se2rep_unproject_o(&mut out[i * d..(i + 1) * d], &p.pose_q[i], p.scales);
             }
         }
         Method::Se2Fourier => {
+            let mut scratch: Vec<f32> = Vec::with_capacity(d);
             for i in 0..n {
                 proj::se2f_unproject_o(
                     &ot[i * c..(i + 1) * c],
@@ -207,10 +182,47 @@ pub fn attention(p: &AttnProblem) -> AttnOutput {
             }
         }
     }
+    out
+}
 
-    // projected q~/k~/v~/o~ are the largest transients: 4 * max(n,m) * c f32
-    let peak = (qt.len() + kt.len() + vt.len() + ot.len())
-        * std::mem::size_of::<f32>();
+/// Algorithm 2 with the default kernel configuration (env-overridable —
+/// see [`KernelConfig`]).  Linear transient memory: three projected
+/// tensors of width c plus O(c) online-softmax state per worker thread.
+pub fn attention(p: &AttnProblem) -> AttnOutput {
+    attention_with(p, &KernelConfig::default())
+}
+
+/// Algorithm 2 over the blocked multithreaded flash kernel.
+pub fn attention_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
+    p.validate();
+    let prj = project(p);
+    let n = p.n();
+    let mut ot = vec![0.0f32; n * prj.c];
+    let kernel_scratch = flash_sdpa_blocked(
+        &prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, prj.c, prj.eff_scale, &mut ot, kcfg,
+    );
+    let out = unproject(p, &ot, prj.c);
+    // projected q~/k~/v~/o~ are the largest transients: 4 * max(n,m) * c
+    // f32, plus O(c) flash scratch per participating worker thread — still
+    // linear in N + M per worker.
+    let peak = prj.bytes() + ot.len() * std::mem::size_of::<f32>() + kernel_scratch;
+    AttnOutput {
+        out,
+        peak_temp_bytes: peak,
+    }
+}
+
+/// Algorithm 2 over the scalar oracle kernel — the reference the blocked
+/// path is verified against (`tests/kernel_equivalence.rs`) and the
+/// baseline the CI perf-smoke gate must beat.
+pub fn attention_ref(p: &AttnProblem) -> AttnOutput {
+    p.validate();
+    let prj = project(p);
+    let n = p.n();
+    let mut ot = vec![0.0f32; n * prj.c];
+    flash_sdpa_scalar(&prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, prj.c, prj.eff_scale, &mut ot);
+    let out = unproject(p, &ot, prj.c);
+    let peak = prj.bytes() + ot.len() * std::mem::size_of::<f32>();
     AttnOutput {
         out,
         peak_temp_bytes: peak,
@@ -248,6 +260,41 @@ mod tests {
         };
         let out = attention(&p).out;
         assert!(out.iter().all(|&x| x == 0.0));
+        let out_ref = attention_ref(&p).out;
+        assert!(out_ref.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn blocked_path_matches_scalar_reference() {
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(4242);
+        for (method, d) in [
+            (Method::Abs, 8),
+            (Method::Rope2d, 8),
+            (Method::Se2Rep, 9),
+            (Method::Se2Fourier, 12),
+        ] {
+            let (q, k, v, pq, pk, tq, tk) =
+                crate::attention::tests::random_problem_data(&mut rng, 12, 19, d, 1.5, 3);
+            let p = AttnProblem {
+                method,
+                d,
+                fourier_f: 16,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            let want = attention_ref(&p).out;
+            let got = attention_with(&p, &KernelConfig::fixed(5, 8, 4)).out;
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-5, "{method:?} [{i}]: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

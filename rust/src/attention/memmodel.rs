@@ -182,6 +182,7 @@ mod tests {
             d: 12,
             fourier_f: 12,
             scales: vec![1.0],
+            kernel: crate::attention::kernel::KernelConfig::default(),
         });
         let k = vec![0.0f32; 5 * 12];
         let poses = vec![crate::geometry::Pose::IDENTITY; 5];

@@ -12,6 +12,7 @@
 //! visibility timesteps as `&[i32]` (see the flash kernel's masking rule).
 
 pub mod incremental;
+pub mod kernel;
 pub mod linear;
 pub mod memmodel;
 pub mod projections;

@@ -5,8 +5,10 @@
 //! baseline for the benches.
 
 use crate::config::Method;
+use crate::exec::{run_chunked, SendPtr};
 use crate::geometry::{rotate_pair, Pose};
 
+use super::kernel::KernelConfig;
 use super::{AttnOutput, AttnProblem};
 
 /// Apply the method's phi(p_rel) to a d-vector (block-stacked).
@@ -78,53 +80,75 @@ fn relative(method: Method, pn: &Pose, pm: &Pose) -> Pose {
     }
 }
 
-/// Algorithm 1.  O(N*M*d) time, O(N*M) transient memory (the bias and
-/// weight matrices plus a phi-transformed copy of V per row).
+/// Query rows per pool task — quadratic rows are heavy (m pairwise phi
+/// applications each), so small chunks load-balance better.
+const ROWS_PER_TASK: usize = 4;
+
+/// Algorithm 1 with the default kernel configuration (the `threads` knob
+/// partitions query rows across the same scoped pool as the blocked
+/// flash kernel; `block_m`/`lanes` do not apply — every pair materializes
+/// its own phi).
 pub fn attention(p: &AttnProblem) -> AttnOutput {
+    attention_with(p, &KernelConfig::default())
+}
+
+/// Algorithm 1.  O(N*M*d) time, O(N*M) transient memory (the bias and
+/// weight matrices plus a phi-transformed copy of V per row).  Each query
+/// row is computed exactly as the single-threaded original — row
+/// partitioning never changes reduction order, so outputs are
+/// bit-identical across thread counts.
+pub fn attention_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
     p.validate();
     let (n, m, d) = (p.n(), p.m(), p.d);
     let mut out = vec![0.0f32; n * d];
     // The full n x m score matrix IS the quadratic cost being measured.
     let mut scores = vec![0.0f64; n * m];
-    let mut phik = vec![0.0f32; d];
     let inv_sqrt_d = 1.0 / (d as f64).sqrt();
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    let scores_ptr = SendPtr::new(scores.as_mut_ptr());
 
-    for i in 0..n {
-        let qi = &p.q[i * d..(i + 1) * d];
-        let row = &mut scores[i * m..(i + 1) * m];
-        for j in 0..m {
-            if p.tq[i] < p.tk[j] {
-                row[j] = f64::NEG_INFINITY;
-                continue;
+    let body = |lo: usize, hi: usize| {
+        let mut phik = vec![0.0f32; d];
+        for i in lo..hi {
+            let qi = &p.q[i * d..(i + 1) * d];
+            // disjoint per-row slices — the only mutable state
+            let row = unsafe { scores_ptr.slice_mut(i * m, m) };
+            let oi = unsafe { out_ptr.slice_mut(i * d, d) };
+            for j in 0..m {
+                if p.tq[i] < p.tk[j] {
+                    row[j] = f64::NEG_INFINITY;
+                    continue;
+                }
+                let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+                apply_phi_rel(p.method, &rel, p.scales, &p.k[j * d..(j + 1) * d], &mut phik);
+                let dot: f64 = qi
+                    .iter()
+                    .zip(phik.iter())
+                    .map(|(a, b)| *a as f64 * *b as f64)
+                    .sum();
+                row[j] = dot * inv_sqrt_d;
             }
-            let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
-            apply_phi_rel(p.method, &rel, p.scales, &p.k[j * d..(j + 1) * d], &mut phik);
-            let dot: f64 = qi
-                .iter()
-                .zip(phik.iter())
-                .map(|(a, b)| *a as f64 * *b as f64)
-                .sum();
-            row[j] = dot * inv_sqrt_d;
+            crate::linalg::softmax_inplace(row);
+            // o_i = sum_j a_ij phi(rel_ij) v_j   (Alg. 1 line 3)
+            for j in 0..m {
+                let a = row[j];
+                if a == 0.0 {
+                    continue;
+                }
+                let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+                apply_phi_rel(p.method, &rel, p.scales, &p.v[j * d..(j + 1) * d], &mut phik);
+                for (o, &pv) in oi.iter_mut().zip(phik.iter()) {
+                    *o += (a * pv as f64) as f32;
+                }
+            }
         }
-        crate::linalg::softmax_inplace(row);
-        // o_i = sum_j a_ij phi(rel_ij) v_j   (Alg. 1 line 3)
-        let oi = &mut out[i * d..(i + 1) * d];
-        for j in 0..m {
-            let a = row[j];
-            if a == 0.0 {
-                continue;
-            }
-            let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
-            apply_phi_rel(p.method, &rel, p.scales, &p.v[j * d..(j + 1) * d], &mut phik);
-            for (o, &pv) in oi.iter_mut().zip(phik.iter()) {
-                *o += (a * pv as f64) as f32;
-            }
-        }
-    }
+    };
+    let threads = run_chunked(n, ROWS_PER_TASK, kcfg.normalized().threads, &body);
 
     AttnOutput {
         out,
-        peak_temp_bytes: scores.len() * std::mem::size_of::<f64>(),
+        peak_temp_bytes: scores.len() * std::mem::size_of::<f64>()
+            + threads * d * std::mem::size_of::<f32>(),
     }
 }
 
@@ -227,6 +251,30 @@ mod tests {
                     .sum();
                 assert!((got[i * d + c] as f64 - expect).abs() < 1e-5);
             }
+        }
+    }
+
+    #[test]
+    fn row_partition_is_bit_identical_across_threads() {
+        let mut rng = Rng::new(11);
+        let (q, k, v, poses, t) = problem_data(&mut rng, 10, 12);
+        let p = AttnProblem {
+            method: Method::Se2Fourier,
+            d: 12,
+            fourier_f: 8,
+            scales: &[1.0, 0.5],
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &poses,
+            pose_k: &poses,
+            tq: &t,
+            tk: &t,
+        };
+        let one = attention_with(&p, &KernelConfig::fixed(64, 8, 1)).out;
+        for threads in [2usize, 4] {
+            let par = attention_with(&p, &KernelConfig::fixed(64, 8, threads)).out;
+            assert_eq!(one, par, "threads={threads}");
         }
     }
 

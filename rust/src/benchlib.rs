@@ -95,6 +95,71 @@ pub fn bench_quick<F: FnMut()>(f: F) -> Stats {
     bench(3, 50, Duration::from_secs(5), f)
 }
 
+/// How much work a bench run should do.  `Smoke` (env
+/// `SE2ATTN_BENCH_SMOKE=1`) is the CI perf-regression gate: small sizes,
+/// few iterations, JSON rows still emitted so the trajectory is archived
+/// per commit.  `Full` (env `SE2ATTN_BENCH_FULL=1`) is the paper-scale
+/// sweep; `Default` is the local developer run.  Smoke wins if both env
+/// vars are set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchMode {
+    Smoke,
+    Default,
+    Full,
+}
+
+impl BenchMode {
+    pub fn from_env() -> BenchMode {
+        let on = |name: &str| {
+            std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+        };
+        if on("SE2ATTN_BENCH_SMOKE") {
+            BenchMode::Smoke
+        } else if on("SE2ATTN_BENCH_FULL") {
+            BenchMode::Full
+        } else {
+            BenchMode::Default
+        }
+    }
+
+    pub fn is_smoke(self) -> bool {
+        self == BenchMode::Smoke
+    }
+
+    pub fn is_full(self) -> bool {
+        self == BenchMode::Full
+    }
+
+    /// Pick the mode's variant of a size/iteration list.
+    pub fn pick<'a, T>(self, smoke: &'a [T], default: &'a [T], full: &'a [T]) -> &'a [T] {
+        match self {
+            BenchMode::Smoke => smoke,
+            BenchMode::Default => default,
+            BenchMode::Full => full,
+        }
+    }
+}
+
+/// Mode-scaled timing: smoke runs 1 warmup + <=8 iters in <=500 ms so the
+/// CI gate finishes in seconds; other modes defer to [`bench_quick`].
+pub fn bench_mode<F: FnMut()>(mode: BenchMode, f: F) -> Stats {
+    match mode {
+        BenchMode::Smoke => bench(1, 8, Duration::from_millis(500), f),
+        _ => bench_quick(f),
+    }
+}
+
+/// Write one whole-run JSON document (`{"rows": [...]}`) — the
+/// `BENCH_<name>.json` artifacts the CI perf-smoke job uploads.  Unlike
+/// [`record_row`]'s append-only `.jsonl`, this file is overwritten per
+/// run so each CI run archives exactly its own rows.  Errors propagate:
+/// a bench that cannot archive its rows must exit nonzero, not go green
+/// with the perf trajectory silently missing.
+pub fn write_bench_json(path: &str, rows: Vec<Json>) -> std::io::Result<()> {
+    let doc = Json::obj(vec![("rows", Json::Arr(rows))]);
+    std::fs::write(path, format!("{doc}\n"))
+}
+
 /// Fixed-width table printer for paper-style result tables.
 pub struct Table {
     headers: Vec<String>,
@@ -203,5 +268,39 @@ mod tests {
     #[test]
     fn peak_rss_available_on_linux() {
         assert!(peak_rss_kb().unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn bench_mode_picks_size_lists() {
+        assert_eq!(BenchMode::Smoke.pick(&[1], &[2], &[3]), &[1]);
+        assert_eq!(BenchMode::Default.pick(&[1], &[2], &[3]), &[2]);
+        assert_eq!(BenchMode::Full.pick(&[1], &[2], &[3]), &[3]);
+        assert!(BenchMode::Smoke.is_smoke() && !BenchMode::Smoke.is_full());
+    }
+
+    #[test]
+    fn bench_mode_smoke_is_bounded() {
+        let s = bench_mode(BenchMode::Smoke, || {});
+        assert!(s.iters >= 5 && s.iters <= 8, "{}", s.iters);
+    }
+
+    #[test]
+    fn write_bench_json_roundtrips() {
+        let dir = std::env::temp_dir().join("se2attn_benchlib_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_test.json");
+        let path = path.to_str().unwrap();
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0]);
+        write_bench_json(path, vec![Json::obj(vec![("stats", s.to_json())])]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let rows = doc.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        let mean = rows[0]
+            .get("stats")
+            .and_then(|s| s.get("mean_ns"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert_eq!(mean, 2.0);
     }
 }

@@ -73,6 +73,13 @@ pub struct ModelConfig {
     pub learning_rate: f64,
     pub map_timestep: i32,
     pub param_names: Vec<String>,
+    /// Blocked flash-kernel shape for every *native* (CPU) attention this
+    /// model performs — Algorithm 2, the quadratic oracle's row partition
+    /// and the incremental decode engine.  Not read from `index.json`
+    /// (it is a host-execution knob, not a model-shape one): defaults to
+    /// [`crate::attention::kernel::KernelConfig::default`] and is
+    /// overridden by `ServeConfig`/CLI on the serving path.
+    pub kernel: crate::attention::kernel::KernelConfig,
 }
 
 impl ModelConfig {
@@ -113,6 +120,7 @@ impl ModelConfig {
             learning_rate: num("learning_rate")?,
             map_timestep: num("map_timestep")? as i32,
             param_names,
+            kernel: crate::attention::kernel::KernelConfig::default(),
         })
     }
 

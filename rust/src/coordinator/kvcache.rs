@@ -562,6 +562,7 @@ mod tests {
             learning_rate: 3e-4,
             map_timestep: -1,
             param_names: vec![],
+            kernel: crate::attention::kernel::KernelConfig::default(),
         }
     }
 

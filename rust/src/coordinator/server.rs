@@ -61,6 +61,17 @@ pub struct ServeConfig {
     /// KV/tokenization cache budget, applied per shard pool (the shared
     /// map-row registry is bounded by `max_map_scenes` once, server-wide).
     pub cache: CacheConfig,
+    /// Blocked flash-kernel shape for *native CPU* attention derived
+    /// from this server's model config — normalized into each shard's
+    /// `ModelConfig.kernel` at startup and consumed through
+    /// [`crate::attention::incremental::IncrementalConfig::for_model`]
+    /// (the incremental feature-cache engines; PJRT artifact decode is
+    /// internally threaded by XLA and unaffected).  The kernel is
+    /// bit-stable across `threads`, so this knob trades latency for CPU
+    /// without perturbing results; all shard threads share one scoped
+    /// pool, and each attention call's transient state stays O(c) per
+    /// participating worker.
+    pub kernel: crate::attention::kernel::KernelConfig,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +80,7 @@ impl Default for ServeConfig {
             workers: crate::config::default_workers(),
             batcher: BatcherConfig::default(),
             cache: CacheConfig::default(),
+            kernel: crate::attention::kernel::KernelConfig::default(),
         }
     }
 }
@@ -122,6 +134,12 @@ impl Server {
         param_seed: i32,
         serve: ServeConfig,
     ) -> Result<Server> {
+        // apply the serving-layer kernel override BEFORE the factory
+        // captures its clone, so backends built from this config (and
+        // any `IncrementalConfig::for_model` engine derived from it)
+        // see the ServeConfig/CLI kernel shape
+        let mut cfg = cfg;
+        cfg.model.kernel = serve.kernel.normalized();
         let factory: BackendFactory = {
             let cfg = cfg.clone();
             let methods = methods.clone();
@@ -153,6 +171,10 @@ impl Server {
         serve: ServeConfig,
         factory: BackendFactory,
     ) -> Result<Server> {
+        // the serving-layer kernel knob wins over whatever the model
+        // config carried in, so every shard agrees with the CLI/ServeConfig
+        let mut cfg = cfg;
+        cfg.model.kernel = serve.kernel.normalized();
         let workers = serve.workers.max(1);
         let stats = Arc::new(ServerStats::with_shards(workers));
         let maps = Arc::new(MapRegistry::new(

@@ -7,6 +7,7 @@
 //! pre/post-processing and batching concurrency).
 
 use std::collections::VecDeque;
+use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -117,6 +118,294 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Reusable *scoped* worker pool
+// ---------------------------------------------------------------------------
+
+/// Hard ceiling on pool workers — a runaway `threads` request must not
+/// fork-bomb the host.  The kernel layer additionally derives its default
+/// from [`crate::config::default_workers`].
+const MAX_SCOPED_WORKERS: usize = 32;
+
+/// One parallel-for job: a work-stealing index counter plus a retirement
+/// barrier.  Participants (pool workers holding a ticket, and the calling
+/// thread itself) repeatedly claim the next index until the range is
+/// exhausted; `pending` counts unretired tickets so the caller knows when
+/// every borrowed reference has been dropped.
+struct ScopedJob {
+    next: AtomicUsize,
+    n: usize,
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: std::sync::atomic::AtomicBool,
+}
+
+/// A participation ticket for one pool worker.  The raw closure pointer is
+/// sound because [`ScopedPool::run`] does not return until every ticket is
+/// retired (executed or reclaimed) — the borrow can never outlive the
+/// caller's stack frame, even on panic.
+struct Ticket {
+    f: *const (dyn Fn(usize) + Sync),
+    job: Arc<ScopedJob>,
+}
+
+unsafe impl Send for Ticket {}
+
+struct ScopedShared {
+    queue: Mutex<VecDeque<Ticket>>,
+    cv: Condvar,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// A **reusable scoped** thread pool: long-lived parked workers that
+/// execute closures borrowing the caller's stack.  Unlike
+/// [`ThreadPool`] (whose jobs must be `'static`) or [`par_for`] (which
+/// spawns fresh OS threads per call), `ScopedPool::run` hands borrowed
+/// work to already-running workers and blocks until all of it retires —
+/// the per-call cost is a queue push + condvar wake, not a `clone(2)`.
+///
+/// This is the substrate for the blocked flash-attention kernel
+/// ([`crate::attention::kernel`]), which partitions query rows across the
+/// pool on every attention call and therefore cannot afford per-call
+/// thread spawns.
+pub struct ScopedPool {
+    shared: Arc<ScopedShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    max_workers: usize,
+}
+
+impl ScopedPool {
+    pub fn new(max_workers: usize) -> ScopedPool {
+        ScopedPool {
+            shared: Arc::new(ScopedShared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                shutdown: std::sync::atomic::AtomicBool::new(false),
+            }),
+            workers: Mutex::new(Vec::new()),
+            max_workers: max_workers.clamp(1, MAX_SCOPED_WORKERS),
+        }
+    }
+
+    /// Workers currently spawned (grows lazily up to the cap).
+    pub fn n_workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Execute `f(0..n)` with up to `threads` participants (the calling
+    /// thread plus `threads - 1` pool workers), blocking until every index
+    /// has been processed.  Indices are claimed through an atomic counter,
+    /// so WHICH thread runs an index is nondeterministic — callers must
+    /// make per-index work independent of the executing thread (the kernel
+    /// does: each index owns a disjoint slice of the output).
+    ///
+    /// Panics in `f` propagate to the caller — but only after the
+    /// retirement barrier, so no worker can still hold a borrow of `f`
+    /// when `run` unwinds.
+    pub fn run(&self, n: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let helpers = threads.min(n).min(self.max_workers + 1).saturating_sub(1);
+        if helpers == 0 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.ensure_workers(helpers);
+        let job = Arc::new(ScopedJob {
+            next: AtomicUsize::new(0),
+            n,
+            pending: Mutex::new(helpers),
+            done_cv: Condvar::new(),
+            panicked: std::sync::atomic::AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                q.push_back(Ticket {
+                    f: f as *const (dyn Fn(usize) + Sync),
+                    job: Arc::clone(&job),
+                });
+            }
+        }
+        self.shared.cv.notify_all();
+
+        // The caller is a full participant: progress is guaranteed even if
+        // every pool worker is busy with another caller's job.
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scoped_drain(f, &job);
+        }));
+
+        // Reclaim tickets no worker picked up (they would find the counter
+        // exhausted anyway).  This also makes nested `run` calls from
+        // inside a pool worker deadlock-free: the nested caller never
+        // waits on a ticket that only it could have served.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            let before = q.len();
+            q.retain(|t| !Arc::ptr_eq(&t.job, &job));
+            let reclaimed = before - q.len();
+            if reclaimed > 0 {
+                let mut pending = job.pending.lock().unwrap();
+                *pending -= reclaimed;
+            }
+        }
+
+        // Retirement barrier: after this, no thread holds a borrow of `f`.
+        let mut pending = job.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = job.done_cv.wait(pending).unwrap();
+        }
+        drop(pending);
+
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+        if job.panicked.load(std::sync::atomic::Ordering::SeqCst) {
+            panic!("ScopedPool worker panicked while executing a scoped job");
+        }
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let mut ws = self.workers.lock().unwrap();
+        while ws.len() < want.min(self.max_workers) {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("se2attn-kernel-{}", ws.len()))
+                .spawn(move || scoped_worker(shared))
+                .expect("spawn scoped-pool worker");
+            ws.push(handle);
+        }
+    }
+}
+
+fn scoped_drain(f: &(dyn Fn(usize) + Sync), job: &ScopedJob) {
+    loop {
+        let i = job.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if i >= job.n {
+            return;
+        }
+        f(i);
+    }
+}
+
+fn scoped_worker(shared: Arc<ScopedShared>) {
+    loop {
+        let ticket = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let Some(t) = ticket else { return };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            scoped_drain(unsafe { &*t.f }, &t.job);
+        }));
+        if r.is_err() {
+            t.job
+                .panicked
+                .store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+        let mut pending = t.job.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            t.job.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        self.shared
+            .shutdown
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.lock().unwrap().drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The process-wide scoped pool shared by every CPU kernel call (all
+/// shard workers included — each attention call borrows participants and
+/// returns them, so one pool serves any number of concurrent callers).
+pub fn shared_pool() -> &'static ScopedPool {
+    static POOL: std::sync::OnceLock<ScopedPool> = std::sync::OnceLock::new();
+    POOL.get_or_init(|| ScopedPool::new(MAX_SCOPED_WORKERS))
+}
+
+/// Raw mutable pointer that may cross task boundaries — THE shared
+/// wrapper for disjoint-row-partition kernels (one audited `unsafe`
+/// surface instead of one per kernel).  The caller contract: every task
+/// must touch a range no other concurrent task touches, and the pointee
+/// must outlive the `run`/`run_chunked` call (both block until all tasks
+/// retire, so buffers owned by the calling frame qualify).
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    /// Reborrow `[offset, offset + len)` as a mutable slice.
+    ///
+    /// # Safety
+    /// The range must be in-bounds of the original allocation and
+    /// disjoint from every range any other thread accesses while the
+    /// returned borrow lives.
+    // &mut-from-&self is the entire point of this wrapper: the shared
+    // reference is what crosses threads, and the safety contract above
+    // (disjoint ranges) is what makes the derived &mut sound.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Partition `0..n` into contiguous chunks of `chunk` items and run
+/// `f(lo, hi)` for each, using up to `threads` participants from the
+/// shared pool (inline when one thread suffices).  The common driver for
+/// row-partitioned kernels: callers only supply the per-chunk body, so
+/// the disjoint-slice reasoning lives at one call depth and the
+/// inline-vs-pool dispatch in one place.  Returns the number of
+/// participating threads (for per-thread scratch accounting).
+pub fn run_chunked(
+    n: usize,
+    chunk: usize,
+    threads: usize,
+    f: &(dyn Fn(usize, usize) + Sync),
+) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let chunk = chunk.max(1);
+    let tasks = n.div_ceil(chunk);
+    let threads = threads.clamp(1, tasks);
+    let body = |task: usize| {
+        let lo = task * chunk;
+        f(lo, (lo + chunk).min(n));
+    };
+    if threads <= 1 {
+        for t in 0..tasks {
+            body(t);
+        }
+    } else {
+        shared_pool().run(tasks, threads, &body);
+    }
+    threads
+}
+
 /// Simple parallel-for over an index range using scoped threads (no pool).
 pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     if n == 0 {
@@ -182,5 +471,111 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn scoped_pool_covers_range_and_reuses_workers() {
+        let pool = ScopedPool::new(4);
+        for round in 0..3 {
+            let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(100, 4, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "round {round}: every index exactly once"
+            );
+        }
+        // workers persist between runs (reusable, not respawned)
+        assert!(pool.n_workers() >= 1 && pool.n_workers() <= 3);
+    }
+
+    #[test]
+    fn scoped_pool_single_thread_runs_inline() {
+        let pool = ScopedPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(17, 1, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 17);
+        assert_eq!(pool.n_workers(), 0, "threads=1 must not spawn workers");
+    }
+
+    #[test]
+    fn scoped_pool_nested_run_does_not_deadlock() {
+        // a pool job that itself calls run() on the SAME pool — the
+        // reclaim path must keep the nested caller from waiting on a
+        // ticket only it could serve (its one worker is the caller)
+        let pool = ScopedPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(2, 2, &|_| {
+            pool.run(8, 2, &|_| {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+        // the global pool exists and serves the same protocol
+        shared_pool().run(4, 2, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn scoped_pool_propagates_panics_after_barrier() {
+        let pool = ScopedPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(10, 2, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // and the pool must still be usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run(10, 2, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn run_chunked_covers_range_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        let threads = run_chunked(37, 8, 4, &|lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert!((1..=4).contains(&threads));
+        assert_eq!(run_chunked(0, 8, 4, &|_, _| panic!("no work")), 0);
+        // threads clamp to the task count
+        assert_eq!(run_chunked(3, 8, 4, &|_, _| {}), 1);
+    }
+
+    #[test]
+    fn scoped_pool_concurrent_callers() {
+        // two OS threads hammering the same pool: jobs must not cross wires
+        let pool = Arc::new(ScopedPool::new(3));
+        let mut handles = Vec::new();
+        for salt in 0..2usize {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let sums: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+                    pool.run(32, 3, &|i| {
+                        sums[i].fetch_add(i + salt, Ordering::SeqCst);
+                    });
+                    for (i, s) in sums.iter().enumerate() {
+                        assert_eq!(s.load(Ordering::SeqCst), i + salt);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

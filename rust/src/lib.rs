@@ -14,9 +14,11 @@
 //!   mixer), tokenizer, dataset pipeline, PJRT runtime,
 //!   batcher/router/rollout scheduler/trainer, per-class and per-family
 //!   metrics, the CPU reference implementations of the paper's
-//!   Algorithms 1 and 2, and the incremental decode engine
-//!   (SE(2)-anchored KV feature cache + per-session tokenization cache)
-//!   for streaming rollout.
+//!   Algorithms 1 and 2 (backed by the blocked multithreaded flash
+//!   kernel in `attention::kernel`, with the scalar path kept as the
+//!   oracle), and the incremental decode engine (SE(2)-anchored KV
+//!   feature cache + per-session tokenization cache) for streaming
+//!   rollout.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and loaded via the PJRT C API (`xla` crate, behind the

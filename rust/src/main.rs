@@ -55,7 +55,12 @@ fn app() -> App {
             .opt("family", "corridor", "scenario family (see `info`), or 'mixed'")
             .opt("mix", "", "weighted family mix, e.g. 'urban-crossing:1,roundabout:3'")
             .opt("seed", "0", "scenario seed base")
-            .opt("workers", "0", "serving worker shards (0 = one per core, max 8)"))
+            .opt("workers", "0", "serving worker shards (0 = one per core, max 8)")
+            .opt("kernel-threads", "0",
+                 "threads per native CPU flash-attention call, for engines \
+                  derived from this server's model config (0 = one per core; \
+                  bit-identical at any setting; PJRT artifact decode is \
+                  threaded by XLA and unaffected)"))
         .command(Command::new("approx", "Fourier approximation error probe")
             .opt("radius", "2.0", "key position radius")
             .opt("basis", "12", "basis size F")
@@ -262,7 +267,9 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
 
     let mix = se2attn::config::scenario_mix(m.get("family"), m.get("mix"))?;
 
-    let serve = ServeConfig::with_workers(m.get_usize("workers"));
+    let mut serve = ServeConfig::with_workers(m.get_usize("workers"));
+    serve.kernel =
+        se2attn::attention::kernel::KernelConfig::with_threads(m.get_usize("kernel-threads"));
     let server = Server::start(cfg.clone(), vec![method], seed as i32, serve)?;
     println!(
         "serving on {} worker shard(s), session-affinity routing by scene id",

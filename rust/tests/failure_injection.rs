@@ -196,5 +196,6 @@ fn test_model_config() -> se2attn::config::ModelConfig {
         learning_rate: 3e-4,
         map_timestep: -1,
         param_names: vec![],
+        kernel: se2attn::attention::kernel::KernelConfig::default(),
     }
 }

@@ -1,0 +1,254 @@
+//! Blocked-kernel equivalence suite (ISSUE 4): the blocked multithreaded
+//! flash kernel must agree with the scalar oracle within 1e-5 on every
+//! `Method`, under ragged timestamp masks and random SE(2) re-anchors,
+//! and must be **bit-identical across thread counts** for a fixed
+//! `block_m` — so results never depend on the serving host's core count.
+//!
+//! Runs in the default stub build (no artifacts, no XLA).
+
+use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::kernel::{flash_sdpa_blocked, flash_sdpa_scalar, KernelConfig};
+use se2attn::attention::{linear, quadratic, AttnProblem};
+use se2attn::config::Method;
+use se2attn::geometry::Pose;
+use se2attn::prng::Rng;
+
+const METHODS: [(Method, usize); 4] = [
+    (Method::Abs, 8),
+    (Method::Rope2d, 8),
+    (Method::Se2Rep, 9),
+    (Method::Se2Fourier, 12),
+];
+
+struct ProblemData {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pq: Vec<Pose>,
+    pk: Vec<Pose>,
+    tq: Vec<i32>,
+    tk: Vec<i32>,
+}
+
+/// Random problem with a deliberately ragged visibility mask: timestamps
+/// span a wide range, a few query rows precede every key (all-masked),
+/// and a few keys are in the future of every query.
+fn ragged_data(rng: &mut Rng, n: usize, m: usize, d: usize) -> ProblemData {
+    let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    };
+    let pose = |rng: &mut Rng| {
+        Pose::new(rng.range(-1.5, 1.5), rng.range(-1.5, 1.5), rng.range(-3.1, 3.1))
+    };
+    let mut tq: Vec<i32> = (0..n).map(|_| rng.int_range(0, 6) as i32).collect();
+    let mut tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, 6) as i32).collect();
+    tq[0] = -100; // all-masked query row (must be a zero row, not NaN)
+    if n > 1 {
+        tq[n - 1] = 100; // fully visible query row
+    }
+    tk[m - 1] = 50; // key invisible to every normal query
+    ProblemData {
+        q: gen(rng, n * d),
+        k: gen(rng, m * d),
+        v: gen(rng, m * d),
+        pq: (0..n).map(|_| pose(rng)).collect(),
+        pk: (0..m).map(|_| pose(rng)).collect(),
+        tq,
+        tk,
+    }
+}
+
+fn problem<'a>(
+    method: Method,
+    d: usize,
+    data: &'a ProblemData,
+    scales: &'a [f64],
+) -> AttnProblem<'a> {
+    AttnProblem {
+        method,
+        d,
+        fourier_f: 16,
+        scales,
+        q: &data.q,
+        k: &data.k,
+        v: &data.v,
+        pose_q: &data.pq,
+        pose_k: &data.pk,
+        tq: &data.tq,
+        tk: &data.tk,
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(x.is_finite() && y.is_finite(), "{what} [{i}]: {x} vs {y}");
+        assert!((x - y).abs() < tol, "{what} [{i}]: {x} vs {y}");
+    }
+}
+
+/// Blocked kernel vs scalar oracle, end to end through Algorithm 2, for
+/// every method and a sweep of (ragged) block sizes and thread counts.
+#[test]
+fn blocked_matches_scalar_all_methods() {
+    let scales = [1.0, 0.5];
+    let mut rng = Rng::new(2024);
+    for (method, d) in METHODS {
+        let data = ragged_data(&mut rng, 13, 29, d);
+        let p = problem(method, d, &data, &scales);
+        let want = linear::attention_ref(&p).out;
+        assert!(want.iter().all(|x| x.is_finite()), "{method:?}: oracle finite");
+        for block_m in [1usize, 7, 64] {
+            for threads in [1usize, 4] {
+                let got = linear::attention_with(&p, &KernelConfig::fixed(block_m, 8, threads)).out;
+                assert_close(
+                    &want,
+                    &got,
+                    1e-5,
+                    &format!("{method:?} block_m={block_m} threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+/// For a fixed block_m the blocked kernel is bit-identical across thread
+/// counts — at the raw kernel level and through Algorithm 2.
+#[test]
+fn thread_counts_are_bit_identical() {
+    let scales = [1.0, 0.5, 0.25];
+    let mut rng = Rng::new(7);
+    for (method, d) in METHODS {
+        let data = ragged_data(&mut rng, 21, 43, d);
+        let p = problem(method, d, &data, &scales);
+        let one = linear::attention_with(&p, &KernelConfig::fixed(16, 8, 1)).out;
+        let four = linear::attention_with(&p, &KernelConfig::fixed(16, 8, 4)).out;
+        assert_eq!(one, four, "{method:?}: attention bit-identity");
+    }
+    // raw kernel on unprojected tensors
+    let d = 24;
+    let data = ragged_data(&mut rng, 33, 57, d);
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut one = vec![0.0f32; 33 * d];
+    let mut four = vec![0.0f32; 33 * d];
+    flash_sdpa_blocked(
+        &data.q, &data.k, &data.v, &data.tq, &data.tk, d, scale, &mut one,
+        &KernelConfig::fixed(8, 8, 1),
+    );
+    flash_sdpa_blocked(
+        &data.q, &data.k, &data.v, &data.tq, &data.tk, d, scale, &mut four,
+        &KernelConfig::fixed(8, 8, 4),
+    );
+    assert_eq!(one, four, "raw kernel bit-identity");
+}
+
+/// Pinned all-masked behavior (ISSUE 4 bugfix): a query row whose
+/// timestamp precedes every key is a defined zero row in BOTH kernels —
+/// never a `0/0 = NaN` row.
+#[test]
+fn all_masked_query_rows_are_zero_in_both_kernels() {
+    let mut rng = Rng::new(55);
+    let (n, m, c) = (6usize, 11usize, 18usize);
+    let q: Vec<f32> = (0..n * c).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..m * c).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..m * c).map(|_| rng.normal() as f32).collect();
+    let tq = vec![-1i32; n]; // every query precedes every key
+    let tk: Vec<i32> = (0..m as i32).collect();
+    let scale = 1.0 / (c as f64).sqrt();
+
+    let mut scalar = vec![f32::NAN; n * c];
+    flash_sdpa_scalar(&q, &k, &v, &tq, &tk, c, scale, &mut scalar);
+    assert!(scalar.iter().all(|&x| x == 0.0), "scalar kernel: zero, not NaN");
+
+    let mut blocked = vec![f32::NAN; n * c];
+    flash_sdpa_blocked(
+        &q, &k, &v, &tq, &tk, c, scale, &mut blocked,
+        &KernelConfig::fixed(4, 8, 2),
+    );
+    assert!(blocked.iter().all(|&x| x == 0.0), "blocked kernel: zero, not NaN");
+
+    // mixed: one visible key only for the last query
+    let mut tq2 = tq.clone();
+    tq2[n - 1] = 0;
+    let mut out = vec![f32::NAN; n * c];
+    flash_sdpa_blocked(
+        &q, &k, &v, &tq2, &tk, c, scale, &mut out,
+        &KernelConfig::fixed(4, 8, 2),
+    );
+    assert!(out[..(n - 1) * c].iter().all(|&x| x == 0.0));
+    assert!(out[(n - 1) * c..].iter().all(|x| x.is_finite()));
+    // the visible row attends exactly one key (tk == 0): output == v_0
+    for (o, &vv) in out[(n - 1) * c..].iter().zip(v[..c].iter()) {
+        assert!((o - vv).abs() < 1e-6);
+    }
+}
+
+/// The incremental decode engine's cached-row attend runs on the blocked
+/// kernel: after random SE(2) re-anchors it must still agree with the
+/// scalar-oracle Algorithm 2 on the shifted poses, and stay bit-identical
+/// across thread counts.
+#[test]
+fn re_anchored_cache_attend_matches_oracle() {
+    let scales = vec![1.0, 0.5];
+    let mut rng = Rng::new(31);
+    for trial in 0..5 {
+        let (d, f, n, m) = (12usize, 24usize, 5usize, 17usize);
+        let data = ragged_data(&mut rng, n, m, d);
+        let g = Pose::new(rng.range(-0.8, 0.8), rng.range(-0.8, 0.8), rng.range(-3.1, 3.1));
+
+        let mk_engine = |threads: usize| {
+            let mut eng = IncrementalAttention::new(IncrementalConfig {
+                method: Method::Se2Fourier,
+                d,
+                fourier_f: f,
+                scales: scales.clone(),
+                kernel: KernelConfig::fixed(8, 8, threads),
+            });
+            eng.append(&data.k, &data.v, &data.pk, &data.tk);
+            eng.re_anchor(&g).expect("se2fourier re-anchor");
+            eng
+        };
+        let pq_shifted: Vec<Pose> = data.pq.iter().map(|p| g.compose(p)).collect();
+        let got = mk_engine(4).attend(&data.q, &pq_shifted, &data.tq).out;
+
+        // oracle: fresh Algorithm 2 over the scalar kernel at the
+        // shifted poses (re-anchor exactness is F-limited; F=24 at
+        // |p| <= ~2 keeps it below the 1e-5 equivalence budget)
+        let pk_shifted: Vec<Pose> = data.pk.iter().map(|p| g.compose(p)).collect();
+        let want = linear::attention_ref(&AttnProblem {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: &scales,
+            q: &data.q,
+            k: &data.k,
+            v: &data.v,
+            pose_q: &pq_shifted,
+            pose_k: &pk_shifted,
+            tq: &data.tq,
+            tk: &data.tk,
+        })
+        .out;
+        assert_close(&want, &got, 1e-4, &format!("re-anchor trial {trial}"));
+
+        // thread count must not change a single bit
+        let one = mk_engine(1).attend(&data.q, &pq_shifted, &data.tq).out;
+        assert_eq!(one, got, "re-anchored attend bit-identity (trial {trial})");
+    }
+}
+
+/// The quadratic oracle's row partition is also bit-stable across thread
+/// counts and unchanged vs the linear path's agreement bound.
+#[test]
+fn quadratic_row_partition_is_bit_identical() {
+    let scales = [1.0, 0.5];
+    let mut rng = Rng::new(91);
+    for (method, d) in METHODS {
+        let data = ragged_data(&mut rng, 9, 15, d);
+        let p = problem(method, d, &data, &scales);
+        let one = quadratic::attention_with(&p, &KernelConfig::fixed(64, 8, 1)).out;
+        let four = quadratic::attention_with(&p, &KernelConfig::fixed(64, 8, 4)).out;
+        assert_eq!(one, four, "{method:?}: quadratic bit-identity");
+        assert!(one.iter().all(|x| x.is_finite()), "{method:?}: finite");
+    }
+}

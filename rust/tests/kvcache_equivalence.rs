@@ -11,6 +11,7 @@
 use std::sync::Arc;
 
 use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::kernel::KernelConfig;
 use se2attn::attention::{linear, AttnProblem};
 use se2attn::config::{Method, ModelConfig, SimConfig};
 use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
@@ -36,6 +37,7 @@ fn test_model_config(sim: &SimConfig) -> ModelConfig {
         learning_rate: 3e-4,
         map_timestep: -1,
         param_names: vec![],
+        kernel: se2attn::attention::kernel::KernelConfig::default(),
     }
 }
 
@@ -61,6 +63,7 @@ fn incremental_decode_matches_full_recompute() {
         d,
         fourier_f: f,
         scales: scales.clone(),
+        kernel: KernelConfig::default(),
     });
     let mut all_k: Vec<f32> = Vec::new();
     let mut all_v: Vec<f32> = Vec::new();
@@ -131,6 +134,7 @@ fn incremental_decode_invariant_under_random_re_anchor() {
             d,
             fourier_f: f,
             scales: scales.clone(),
+            kernel: KernelConfig::default(),
         };
         let mut eng = IncrementalAttention::new(cfg);
         eng.append(&k, &v, &pk, &tk);

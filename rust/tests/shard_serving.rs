@@ -41,6 +41,7 @@ fn test_model_config() -> ModelConfig {
         learning_rate: 3e-4,
         map_timestep: -1,
         param_names: vec![],
+        kernel: se2attn::attention::kernel::KernelConfig::default(),
     }
 }
 
@@ -71,6 +72,7 @@ fn synthetic_server(workers: usize, batcher: BatcherConfig) -> Server {
             workers,
             batcher,
             cache: CacheConfig::default(),
+            kernel: se2attn::attention::kernel::KernelConfig::default(),
         },
         synthetic_factory(),
     )
