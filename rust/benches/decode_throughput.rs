@@ -12,6 +12,15 @@
 //! 2. **Tokenization path** — full `tokenize_window` vs the serving
 //!    [`KvCachePool`] hit path (frontier-only tokenization + exact pose
 //!    re-anchor at emit).
+//! 3. **Cache precision** — resident bytes of the same cached session
+//!    population at f32 vs f16 (DESIGN.md §14).  In smoke mode this is a
+//!    CI gate: the bench exits nonzero if f16 resident bytes exceed 60%
+//!    of f32 at the largest smoke size.
+//!
+//! `--cache-precision f16|bf16` (after `cargo bench ... --`) runs the
+//! cached attention path on a quantized feature cache and writes
+//! `BENCH_decode_<precision>.json` instead of `BENCH_decode.json`, so
+//! the CI perf-smoke job archives both tiers side by side.
 //!
 //! Expected shape: the cached step's projection cost is O(new tokens)
 //! instead of O(window), so it wins for every window larger than the
@@ -19,10 +28,9 @@
 //! check prints per-row verdicts for window >= 32.
 
 use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
-use se2attn::attention::kernel::KernelConfig;
 use se2attn::attention::{linear, AttnProblem};
 use se2attn::benchlib::{bench, record_row, write_bench_json, BenchMode, Table};
-use se2attn::config::{Method, SimConfig};
+use se2attn::config::{CachePrecision, Method, SimConfig};
 use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
 use se2attn::coordinator::telemetry::CacheStats;
 use se2attn::geometry::Pose;
@@ -62,21 +70,10 @@ fn tokens(rng: &mut Rng, n: usize, step: i32) -> Tokens {
 /// the paper's d=48, F=12; `kernel` is what `ServeConfig`/CLI plumb).
 fn model_config(sim: &SimConfig) -> se2attn::config::ModelConfig {
     se2attn::config::ModelConfig {
-        n_layers: 2,
-        n_heads: 2,
         head_dim: D,
-        d_model: 96,
-        d_ff: 192,
-        n_tokens: sim.tokens_per_scene(),
-        feat_dim: 16,
-        n_actions: 64,
         fourier_f: F,
-        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
-        batch_size: 8,
-        learning_rate: 3e-4,
-        map_timestep: -1,
-        param_names: vec![],
-        kernel: KernelConfig::default(),
+        n_tokens: sim.tokens_per_scene(),
+        ..se2attn::config::ModelConfig::synthetic()
     }
 }
 
@@ -89,8 +86,9 @@ fn step_bench<F: FnMut()>(mode: BenchMode, f: F) -> se2attn::benchlib::Stats {
     }
 }
 
-fn attention_path(mode: BenchMode, rows: &mut Vec<Json>) {
-    let model = model_config(&SimConfig::default());
+fn attention_path(mode: BenchMode, precision: CachePrecision, rows: &mut Vec<Json>) {
+    let mut model = model_config(&SimConfig::default());
+    model.cache_precision = precision;
     let scales = [1.0, 0.5, 0.25, 0.125];
     let sizes: &[usize] = mode.pick(
         &[16, 32, 64],
@@ -106,7 +104,9 @@ fn attention_path(mode: BenchMode, rows: &mut Vec<Json>) {
     ]);
     println!(
         "== attention feature path: se2fourier d={D} F={F}, {N_NEW} frontier \
-         tokens/step, re-anchor every {REANCHOR_EVERY} steps =="
+         tokens/step, re-anchor every {REANCHOR_EVERY} steps, cache \
+         precision {} ==",
+        precision.name()
     );
     for &m in sizes {
         let mut rng = Rng::new(m as u64 ^ 0xD15C);
@@ -168,6 +168,7 @@ fn attention_path(mode: BenchMode, rows: &mut Vec<Json>) {
         ]);
         let row = Json::obj(vec![
             ("path", Json::Str("attention".into())),
+            ("precision", Json::Str(precision.name().into())),
             ("window", Json::Num(m as f64)),
             ("n_new", Json::Num(N_NEW as f64)),
             ("full", full.to_json()),
@@ -247,11 +248,93 @@ fn tokenization_path(mode: BenchMode, rows: &mut Vec<Json>) {
     rows.push(row);
 }
 
+/// Resident bytes of the same cached session population at f32 vs f16:
+/// the serving capacity claim of DESIGN.md §14 in measured (not modeled)
+/// bytes, with the CI gate at the largest size.  Returns `false` when
+/// the gate fails.
+fn cache_precision_section(mode: BenchMode, rows: &mut Vec<Json>) -> bool {
+    let model = model_config(&SimConfig::default());
+    let sizes: &[usize] = mode.pick(&[16, 32, 64], &[16, 64, 256], &[16, 64, 256, 1024]);
+    println!("\n== cache precision: resident bytes of an m-row se2fourier feature cache ==");
+    let mut table = Table::new(&["window", "f32 bytes", "f16 bytes", "f16/f32", "gate (<=60%)"]);
+    let mut ok = true;
+    for (idx, &m) in sizes.iter().enumerate() {
+        let mut rng = Rng::new(m as u64 ^ 0xBEEF);
+        let ctx = tokens(&mut rng, m, 0);
+        let bytes_at = |precision: CachePrecision| -> usize {
+            let mut cfg = model.clone();
+            cfg.cache_precision = precision;
+            let mut eng = IncrementalAttention::new(IncrementalConfig::for_model(
+                &cfg,
+                Method::Se2Fourier,
+            ));
+            eng.append(&ctx.k, &ctx.v, &ctx.poses, &ctx.t);
+            eng.resident_bytes()
+        };
+        let f32_bytes = bytes_at(CachePrecision::F32);
+        let f16_bytes = bytes_at(CachePrecision::F16);
+        let ratio = f16_bytes as f64 / f32_bytes as f64;
+        // the gate applies at the largest size of the sweep
+        let gated = idx == sizes.len() - 1;
+        let pass = ratio <= 0.60;
+        if gated && !pass {
+            ok = false;
+        }
+        table.row(vec![
+            m.to_string(),
+            f32_bytes.to_string(),
+            f16_bytes.to_string(),
+            format!("{:.0}%", ratio * 100.0),
+            if !gated {
+                "-".into()
+            } else if pass {
+                "PASS".into()
+            } else {
+                format!("FAIL ({:.0}% > 60%)", ratio * 100.0)
+            },
+        ]);
+        let row = Json::obj(vec![
+            ("path", Json::Str("cache_precision".into())),
+            ("window", Json::Num(m as f64)),
+            ("f32_bytes", Json::Num(f32_bytes as f64)),
+            ("f16_bytes", Json::Num(f16_bytes as f64)),
+            ("ratio", Json::Num(ratio)),
+        ]);
+        record_row("decode_throughput", row.clone());
+        rows.push(row);
+    }
+    table.print();
+    ok
+}
+
 fn main() {
     let mode = BenchMode::from_env();
+    // `cargo bench --bench decode_throughput -- --cache-precision f16`
+    let mut precision = CachePrecision::F32;
+    let args: Vec<String> = std::env::args().collect();
+    for (i, a) in args.iter().enumerate() {
+        if a == "--cache-precision" {
+            let v = args.get(i + 1).expect("--cache-precision needs a value");
+            precision = CachePrecision::parse(v).expect("bad --cache-precision");
+        } else if let Some(v) = a.strip_prefix("--cache-precision=") {
+            precision = CachePrecision::parse(v).expect("bad --cache-precision");
+        }
+    }
     let mut rows: Vec<Json> = Vec::new();
-    attention_path(mode, &mut rows);
+    attention_path(mode, precision, &mut rows);
     tokenization_path(mode, &mut rows);
-    write_bench_json("BENCH_decode.json", rows).expect("write BENCH_decode.json");
-    println!("\nwrote BENCH_decode.json");
+    let bytes_ok = cache_precision_section(mode, &mut rows);
+    let out = match precision {
+        CachePrecision::F32 => "BENCH_decode.json".to_string(),
+        p => format!("BENCH_decode_{}.json", p.name()),
+    };
+    write_bench_json(&out, rows).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("\nwrote {out}");
+    if mode.is_smoke() && !bytes_ok {
+        eprintln!(
+            "perf-smoke gate: f16 resident cache bytes exceed 60% of f32 \
+             at the largest smoke size"
+        );
+        std::process::exit(1);
+    }
 }

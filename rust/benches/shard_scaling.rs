@@ -31,23 +31,7 @@ const SAMPLES: usize = 2;
 const WORK_PER_TOKEN: usize = 800;
 
 fn model_config() -> ModelConfig {
-    ModelConfig {
-        n_layers: 2,
-        n_heads: 2,
-        head_dim: 48,
-        d_model: 96,
-        d_ff: 192,
-        n_tokens: 64,
-        feat_dim: 16,
-        n_actions: 64,
-        fourier_f: 12,
-        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
-        batch_size: 8,
-        learning_rate: 3e-4,
-        map_timestep: -1,
-        param_names: vec![],
-        kernel: se2attn::attention::kernel::KernelConfig::default(),
-    }
+    ModelConfig::synthetic()
 }
 
 fn factory() -> BackendFactory {

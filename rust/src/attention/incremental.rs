@@ -47,16 +47,34 @@
 //! u_{p'}(z) = u_g(z) + u_p(z - g_theta), hence
 //! psi'(z) = e^{i u_g(z)} psi(z - g_theta).  The Y bank is the same with
 //! u^Y(z) = u^X(z + pi/2).
+//!
+//! ## Quantized storage tier
+//!
+//! The cached rows can be stored at a reduced
+//! [`crate::config::CachePrecision`] (f16/bf16 codes with per-row
+//! scale/offset, [`super::quant`]): [`IncrementalAttention::attend`]
+//! dequantizes visible rows on the fly inside the blocked kernel's
+//! key-block loop, so no full-width f32 copy of the cache ever exists
+//! and resident bytes drop to ~51% of f32 at the paper head (DESIGN.md
+//! §14).  Re-anchoring is **quantization-safe**: the transform runs on
+//! dequantized values at full f64 table precision and the result is
+//! re-encoded once with a freshly computed row scale
+//! ([`super::quant::FeatureRows::for_each_row_mut`]), so each re-anchor
+//! adds at most one storage rounding (errors accumulate additively, never
+//! multiplicatively), and the pose/timestamp bookkeeping that defines the
+//! frame is plain f64 — the re-anchor *geometry* is exactly as accurate
+//! as on the f32 path no matter how compressed the features are.
 
 use anyhow::{bail, Result};
 
-use crate::config::{Method, ModelConfig};
+use crate::config::{CachePrecision, Method, ModelConfig};
 use crate::fourier::{basis_fn, quadrature_grid, QuadratureTable};
 use crate::geometry::Pose;
 
-use super::kernel::{flash_sdpa_blocked, KernelConfig};
+use super::kernel::{flash_sdpa_rows, KernelConfig};
 use super::linear::proj_dim;
 use super::projections as proj;
+use super::quant::FeatureRows;
 use super::AttnOutput;
 
 /// Static description of one incremental attention head.
@@ -74,6 +92,10 @@ pub struct IncrementalConfig {
     /// (bit-stable across `threads`, so cached-decode results do not
     /// depend on the serving host's core count).
     pub kernel: KernelConfig,
+    /// Storage precision of the cached `phi_k k` / `phi_k v` rows
+    /// (f16/bf16 halve resident bytes; f32 keeps the seed's bit-exact
+    /// behavior).  See the module docs for the accuracy argument.
+    pub precision: CachePrecision,
 }
 
 impl IncrementalConfig {
@@ -89,6 +111,7 @@ impl IncrementalConfig {
             fourier_f: m.fourier_f,
             scales: m.spatial_scales.clone(),
             kernel: m.kernel,
+            precision: m.cache_precision,
         }
     }
 
@@ -103,21 +126,23 @@ impl IncrementalConfig {
     }
 }
 
-/// The engine: cached projected rows plus the poses they were anchored at.
+/// The engine: cached projected rows (at the configured storage
+/// precision) plus the poses they were anchored at.
 pub struct IncrementalAttention {
     cfg: IncrementalConfig,
     /// Projected per-head width c.
     c: usize,
     /// Algorithm 2 prefactor (c/d)^(1/4), baked into q~ and k~.
     pref: f32,
-    /// Cached `phi_k k` rows, row-major (m, c).
-    kt: Vec<f32>,
-    /// Cached `phi_k v` rows, row-major (m, c).
-    vt: Vec<f32>,
-    /// Visibility timesteps of the cached rows.
+    /// Cached `phi_k k` rows, row-major (m, c), possibly quantized.
+    kt: FeatureRows,
+    /// Cached `phi_k v` rows, row-major (m, c), possibly quantized.
+    vt: FeatureRows,
+    /// Visibility timesteps of the cached rows (never quantized).
     tk: Vec<i32>,
     /// Anchor-frame poses of the cached rows (for drift policy and
-    /// re-anchor bookkeeping; raw k/v are *not* retained).
+    /// re-anchor bookkeeping; raw k/v are *not* retained; never
+    /// quantized, so the frame stays exact at any storage precision).
     poses: Vec<Pose>,
     key_scratch: Option<proj::Se2fKeyScratch>,
 }
@@ -132,15 +157,20 @@ impl IncrementalAttention {
             _ => None,
         };
         IncrementalAttention {
+            kt: FeatureRows::new(cfg.precision, c),
+            vt: FeatureRows::new(cfg.precision, c),
             cfg,
             c,
             pref,
-            kt: Vec::new(),
-            vt: Vec::new(),
             tk: Vec::new(),
             poses: Vec::new(),
             key_scratch,
         }
+    }
+
+    /// Storage precision of the cached rows.
+    pub fn precision(&self) -> CachePrecision {
+        self.cfg.precision
     }
 
     /// Number of cached context rows.
@@ -157,10 +187,15 @@ impl IncrementalAttention {
         self.c
     }
 
-    /// Resident bytes of the cache (projected rows + timesteps + poses);
-    /// matches [`crate::attention::memmodel::incremental_cache_bytes`].
+    /// Resident bytes of the cache (projected rows at their storage
+    /// precision, incl. per-row scale/offset when quantized, + timesteps
+    /// + poses); equal to
+    /// [`crate::attention::memmodel::incremental_cache_bytes`] at this
+    /// engine's precision — the one byte model the telemetry gauges
+    /// report (regression-tested in `tests/quantized_cache.rs`).
     pub fn resident_bytes(&self) -> usize {
-        (self.kt.len() + self.vt.len()) * std::mem::size_of::<f32>()
+        self.kt.resident_bytes()
+            + self.vt.resident_bytes()
             + self.tk.len() * std::mem::size_of::<i32>()
             + self.poses.len() * std::mem::size_of::<Pose>()
     }
@@ -181,59 +216,60 @@ impl IncrementalAttention {
 
     /// Project and append `len(t)` new context tokens (Alg. 2 line 2,
     /// restricted to the frontier).  `k`/`v` are row-major (n_new, d).
+    /// Rows are projected in f32 and then handed to the storage tier —
+    /// a verbatim extend at f32, one row-wise quantization otherwise.
     pub fn append(&mut self, k: &[f32], v: &[f32], poses: &[Pose], t: &[i32]) {
         let (d, c) = (self.cfg.d, self.c);
         let n_new = t.len();
         assert_eq!(k.len(), n_new * d, "k shape");
         assert_eq!(v.len(), n_new * d, "v shape");
         assert_eq!(poses.len(), n_new, "poses shape");
-        self.kt.reserve(n_new * c);
-        self.vt.reserve(n_new * c);
-        match self.cfg.method {
-            Method::Abs => {
-                self.kt.extend_from_slice(k);
-                self.vt.extend_from_slice(v);
-            }
+        let scales = &self.cfg.scales;
+        let (k_rows, v_rows) = match self.cfg.method {
+            Method::Abs => (k.to_vec(), v.to_vec()),
             Method::Rope2d => {
-                let start = self.kt.len();
-                self.kt.extend_from_slice(k);
-                self.vt.extend_from_slice(v);
+                let mut kr = k.to_vec();
+                let mut vr = v.to_vec();
                 for (j, p) in poses.iter().enumerate() {
-                    let r = start + j * c;
-                    proj::rope2d_project(&mut self.kt[r..r + c], p, &self.cfg.scales);
-                    proj::rope2d_project(&mut self.vt[r..r + c], p, &self.cfg.scales);
+                    proj::rope2d_project(&mut kr[j * c..(j + 1) * c], p, scales);
+                    proj::rope2d_project(&mut vr[j * c..(j + 1) * c], p, scales);
                 }
+                (kr, vr)
             }
             Method::Se2Rep => {
-                let start = self.kt.len();
-                self.kt.extend_from_slice(k);
-                self.vt.extend_from_slice(v);
+                let mut kr = k.to_vec();
+                let mut vr = v.to_vec();
                 for (j, p) in poses.iter().enumerate() {
-                    let r = start + j * c;
-                    proj::se2rep_project_k(&mut self.kt[r..r + c], p, &self.cfg.scales);
-                    proj::se2rep_project_k(&mut self.vt[r..r + c], p, &self.cfg.scales);
+                    proj::se2rep_project_k(&mut kr[j * c..(j + 1) * c], p, scales);
+                    proj::se2rep_project_k(&mut vr[j * c..(j + 1) * c], p, scales);
                 }
+                (kr, vr)
             }
             Method::Se2Fourier => {
                 let scratch = self.key_scratch.as_mut().expect("se2f scratch");
                 let mut k_row: Vec<f32> = Vec::with_capacity(c);
                 let mut v_row: Vec<f32> = Vec::with_capacity(c);
+                let mut kr = Vec::with_capacity(n_new * c);
+                let mut vr = Vec::with_capacity(n_new * c);
                 for (j, p) in poses.iter().enumerate() {
                     proj::se2f_project_kv_with(
                         scratch,
                         &k[j * d..(j + 1) * d],
                         &v[j * d..(j + 1) * d],
                         p,
-                        &self.cfg.scales,
+                        scales,
                         self.pref,
                         &mut k_row,
                         &mut v_row,
                     );
-                    self.kt.extend_from_slice(&k_row);
-                    self.vt.extend_from_slice(&v_row);
+                    kr.extend_from_slice(&k_row);
+                    vr.extend_from_slice(&v_row);
                 }
+                (kr, vr)
             }
-        }
+        };
+        self.kt.push_rows(&k_rows);
+        self.vt.push_rows(&v_rows);
         self.tk.extend_from_slice(t);
         self.poses.extend_from_slice(poses);
     }
@@ -241,8 +277,8 @@ impl IncrementalAttention {
     /// Drop the `n` oldest cached rows (sliding-window eviction).
     pub fn evict_front(&mut self, n: usize) {
         let n = n.min(self.len());
-        self.kt.drain(..n * self.c);
-        self.vt.drain(..n * self.c);
+        self.kt.drain_front(n);
+        self.vt.drain_front(n);
         self.tk.drain(..n);
         self.poses.drain(..n);
     }
@@ -289,16 +325,18 @@ impl IncrementalAttention {
             }
         }
 
-        // ---- flash SDPA against the cached rows (blocked kernel) --------
+        // ---- flash SDPA against the cached rows (blocked kernel; rows
+        // dequantized on the fly inside the key-block loop when the
+        // storage tier is f16/bf16) ---------------------------------------
         let eff_scale = match self.cfg.method {
             Method::Se2Fourier => 1.0 / (c as f64).sqrt(),
             _ => 1.0 / (d as f64).sqrt(),
         };
         let mut ot = vec![0.0f32; n * c];
-        let kernel_scratch = flash_sdpa_blocked(
+        let kernel_scratch = flash_sdpa_rows(
             &qt,
-            &self.kt,
-            &self.vt,
+            self.kt.as_kv(),
+            self.vt.as_kv(),
             tq,
             &self.tk,
             c,
@@ -351,6 +389,13 @@ impl IncrementalAttention {
     /// key pose p becomes g∘p, and the cached feature rows are rewritten
     /// to what projecting at g∘p would have produced — without raw k/v.
     /// Queries must subsequently be expressed in the new frame.
+    ///
+    /// On quantized storage the rewrite is quantization-safe (module
+    /// docs): rows are dequantized, transformed at full precision, and
+    /// re-encoded once against a fresh per-row scale, so repeated
+    /// re-anchors add at most one storage rounding each — they never
+    /// compound multiplicatively — and the pose update below is exact
+    /// f64 at every precision.
     pub fn re_anchor(&mut self, g: &Pose) -> Result<()> {
         match self.cfg.method {
             Method::Abs => {}
@@ -364,23 +409,19 @@ impl IncrementalAttention {
                     );
                 }
                 let scales = self.cfg.scales.clone();
-                for row in self.kt.chunks_mut(self.c) {
-                    proj::rope2d_project(row, g, &scales);
-                }
-                for row in self.vt.chunks_mut(self.c) {
-                    proj::rope2d_project(row, g, &scales);
-                }
+                self.kt
+                    .for_each_row_mut(|row| proj::rope2d_project(row, g, &scales));
+                self.vt
+                    .for_each_row_mut(|row| proj::rope2d_project(row, g, &scales));
             }
             Method::Se2Rep => {
                 // psi(g∘p) = psi(g) psi(p): exact left multiplication,
                 // which is precisely the key projection applied at g.
                 let scales = self.cfg.scales.clone();
-                for row in self.kt.chunks_mut(self.c) {
-                    proj::se2rep_project_k(row, g, &scales);
-                }
-                for row in self.vt.chunks_mut(self.c) {
-                    proj::se2rep_project_k(row, g, &scales);
-                }
+                self.kt
+                    .for_each_row_mut(|row| proj::se2rep_project_k(row, g, &scales));
+                self.vt
+                    .for_each_row_mut(|row| proj::se2rep_project_k(row, g, &scales));
             }
             Method::Se2Fourier => self.re_anchor_se2f(g),
         }
@@ -432,47 +473,50 @@ impl IncrementalAttention {
 
         let mut na = vec![0.0f64; f];
         let mut nb_acc = vec![0.0f64; f];
-        let c = self.c;
-        for rows in [&mut self.kt, &mut self.vt] {
-            for row in rows.chunks_mut(c) {
-                for jb in 0..nb {
-                    let s = jb % ns;
-                    let blk = &mut row[jb * w..(jb + 1) * w];
-                    // the two frequency banks: X at offset 0, Y at 2F
-                    for (axis, off) in [(0usize, 0usize), (1, 2 * f)] {
-                        let msin = &mod_sin[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
-                        let mcos = &mod_cos[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
-                        na.iter_mut().for_each(|x| *x = 0.0);
-                        nb_acc.iter_mut().for_each(|x| *x = 0.0);
-                        for j in 0..2 * f {
-                            let gs = &gshift[j * f..(j + 1) * f];
-                            let mut re = 0.0f64;
-                            let mut im = 0.0f64;
-                            for i in 0..f {
-                                re += blk[off + i] as f64 * gs[i];
-                                im += blk[off + f + i] as f64 * gs[i];
-                            }
-                            let (su, cu) = (msin[j], mcos[j]);
-                            let re2 = cu * re - su * im;
-                            let im2 = su * re + cu * im;
-                            let wrow = &table.weights[j * f..(j + 1) * f];
-                            for i in 0..f {
-                                na[i] += re2 * wrow[i];
-                                nb_acc[i] += im2 * wrow[i];
-                            }
-                        }
+        // One row-wise transform applied through the storage tier: on
+        // quantized rows this dequantizes, runs the f64 table math below,
+        // and re-encodes once with a fresh per-row scale — the
+        // quantization-safe formulation (module docs).
+        let mut transform = |row: &mut [f32]| {
+            for jb in 0..nb {
+                let s = jb % ns;
+                let blk = &mut row[jb * w..(jb + 1) * w];
+                // the two frequency banks: X at offset 0, Y at 2F
+                for (axis, off) in [(0usize, 0usize), (1, 2 * f)] {
+                    let msin = &mod_sin[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
+                    let mcos = &mod_cos[(s * 2 + axis) * 2 * f..(s * 2 + axis + 1) * 2 * f];
+                    na.iter_mut().for_each(|x| *x = 0.0);
+                    nb_acc.iter_mut().for_each(|x| *x = 0.0);
+                    for j in 0..2 * f {
+                        let gs = &gshift[j * f..(j + 1) * f];
+                        let mut re = 0.0f64;
+                        let mut im = 0.0f64;
                         for i in 0..f {
-                            blk[off + i] = na[i] as f32;
-                            blk[off + f + i] = nb_acc[i] as f32;
+                            re += blk[off + i] as f64 * gs[i];
+                            im += blk[off + f + i] as f64 * gs[i];
+                        }
+                        let (su, cu) = (msin[j], mcos[j]);
+                        let re2 = cu * re - su * im;
+                        let im2 = su * re + cu * im;
+                        let wrow = &table.weights[j * f..(j + 1) * f];
+                        for i in 0..f {
+                            na[i] += re2 * wrow[i];
+                            nb_acc[i] += im2 * wrow[i];
                         }
                     }
-                    // theta pair: rho(g_theta + theta_p) = rho(g_theta) rho(theta_p)
-                    let (x0, x1) = (blk[4 * f] as f64, blk[4 * f + 1] as f64);
-                    blk[4 * f] = (ct * x0 - st * x1) as f32;
-                    blk[4 * f + 1] = (st * x0 + ct * x1) as f32;
+                    for i in 0..f {
+                        blk[off + i] = na[i] as f32;
+                        blk[off + f + i] = nb_acc[i] as f32;
+                    }
                 }
+                // theta pair: rho(g_theta + theta_p) = rho(g_theta) rho(theta_p)
+                let (x0, x1) = (blk[4 * f] as f64, blk[4 * f + 1] as f64);
+                blk[4 * f] = (ct * x0 - st * x1) as f32;
+                blk[4 * f + 1] = (st * x0 + ct * x1) as f32;
             }
-        }
+        };
+        self.kt.for_each_row_mut(&mut transform);
+        self.vt.for_each_row_mut(&mut transform);
     }
 }
 
@@ -491,6 +535,14 @@ mod tests {
         )
     }
 
+    /// Materialize a store's rows as f32 (tests compare row contents
+    /// across engines regardless of the storage representation).
+    fn dump(rows: &FeatureRows) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows.len() * rows.width()];
+        rows.read_all_into(&mut out);
+        out
+    }
+
     fn rand_data(rng: &mut Rng, n: usize, d: usize, r: f64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Pose>, Vec<i32>) {
         let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let k: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
@@ -505,21 +557,8 @@ mod tests {
     #[test]
     fn for_model_threads_the_kernel_config_through() {
         let mut m = ModelConfig {
-            n_layers: 2,
-            n_heads: 2,
-            head_dim: 48,
-            d_model: 96,
-            d_ff: 192,
-            n_tokens: 64,
-            feat_dim: 16,
-            n_actions: 64,
-            fourier_f: 12,
             spatial_scales: vec![1.0, 0.5],
-            batch_size: 8,
-            learning_rate: 3e-4,
-            map_timestep: -1,
-            param_names: vec![],
-            kernel: KernelConfig::default(),
+            ..ModelConfig::synthetic()
         };
         m.kernel = KernelConfig::fixed(16, 4, 2);
         let cfg = IncrementalConfig::for_model(&m, Method::Se2Fourier);
@@ -570,6 +609,7 @@ mod tests {
                 fourier_f: 16,
                 scales: scales.clone(),
                 kernel: KernelConfig::default(),
+                precision: CachePrecision::F32,
             });
             // append in three uneven chunks, as a rollout would
             for (lo, hi) in [(0usize, 5usize), (5, 6), (6, m)] {
@@ -606,6 +646,7 @@ mod tests {
             fourier_f: f,
             scales: scales.clone(),
             kernel: KernelConfig::default(),
+            precision: CachePrecision::F32,
         };
         let mut eng = IncrementalAttention::new(cfg.clone());
         eng.append(&k, &v, &pk, &tk);
@@ -645,6 +686,7 @@ mod tests {
                 fourier_f: f,
                 scales: scales.clone(),
                 kernel: KernelConfig::default(),
+                precision: CachePrecision::F32,
             };
             let mut eng = IncrementalAttention::new(cfg.clone());
             eng.append(&k, &v, &poses, &t);
@@ -654,8 +696,8 @@ mod tests {
             let mut fresh = IncrementalAttention::new(cfg);
             fresh.append(&k, &v, &shifted, &t);
 
-            all_close_f32(&eng.kt, &fresh.kt, 1e-5, "re-anchored k rows")?;
-            all_close_f32(&eng.vt, &fresh.vt, 1e-5, "re-anchored v rows")
+            all_close_f32(&dump(&eng.kt), &dump(&fresh.kt), 1e-5, "re-anchored k rows")?;
+            all_close_f32(&dump(&eng.vt), &dump(&fresh.vt), 1e-5, "re-anchored v rows")
         });
     }
 
@@ -682,6 +724,7 @@ mod tests {
                     fourier_f: f,
                     scales: scales.clone(),
                     kernel: KernelConfig::default(),
+                    precision: CachePrecision::F32,
                 });
                 eng.append(&k, &v, &pk, &tk);
                 let before = eng.attend(&q, &pq, &tq).out;
@@ -715,6 +758,7 @@ mod tests {
             fourier_f: f,
             scales,
             kernel: KernelConfig::default(),
+            precision: CachePrecision::F32,
         };
         let mut seq = IncrementalAttention::new(cfg.clone());
         seq.append(&k, &v, &poses, &t);
@@ -725,7 +769,7 @@ mod tests {
         once.append(&k, &v, &poses, &t);
         once.re_anchor(&g2.compose(&g1)).unwrap();
 
-        for (a, b) in seq.kt.iter().zip(once.kt.iter()) {
+        for (a, b) in dump(&seq.kt).iter().zip(dump(&once.kt).iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
         for (pa, pb) in seq.poses.iter().zip(once.poses.iter()) {
@@ -749,6 +793,7 @@ mod tests {
             fourier_f: 4,
             scales: scales.clone(),
             kernel: KernelConfig::default(),
+            precision: CachePrecision::F32,
         };
         let mut eng = IncrementalAttention::new(cfg.clone());
         eng.append(&k, &v, &poses, &t);
@@ -758,11 +803,49 @@ mod tests {
         let shifted: Vec<Pose> = poses.iter().map(|p| g.compose(p)).collect();
         let mut fresh = IncrementalAttention::new(cfg);
         fresh.append(&k, &v, &shifted, &t);
-        for (a, b) in eng.kt.iter().zip(fresh.kt.iter()) {
+        for (a, b) in dump(&eng.kt).iter().zip(dump(&fresh.kt).iter()) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
 
         assert!(eng.re_anchor(&Pose::new(0.0, 0.0, 0.5)).is_err());
+    }
+
+    /// A quantized engine fed the same stream tracks the f32 engine
+    /// within the storage rounding, halves (–ish) resident bytes, and
+    /// evicts/attends through the same paths.
+    #[test]
+    fn quantized_engine_tracks_f32_and_shrinks_bytes() {
+        let scales = vec![1.0, 0.5];
+        let mut rng = Rng::new(1717);
+        let (d, f, m, n) = (12usize, 16usize, 24usize, 5usize);
+        let (q, _, _, pq, tq) = rand_data(&mut rng, n, d, 1.5);
+        let (_, k, v, pk, tk) = rand_data(&mut rng, m, d, 1.5);
+        let build = |precision: CachePrecision| {
+            let mut eng = IncrementalAttention::new(IncrementalConfig {
+                method: Method::Se2Fourier,
+                d,
+                fourier_f: f,
+                scales: scales.clone(),
+                kernel: KernelConfig::default(),
+                precision,
+            });
+            eng.append(&k, &v, &pk, &tk);
+            eng.evict_front(3);
+            eng
+        };
+        let exact = build(CachePrecision::F32);
+        let want = exact.attend(&q, &pq, &tq).out;
+        for (precision, tol) in [(CachePrecision::F16, 1e-2f32), (CachePrecision::Bf16, 5e-2)] {
+            let qeng = build(precision);
+            assert_eq!(qeng.precision(), precision);
+            assert_eq!(qeng.len(), exact.len());
+            let got = qeng.attend(&q, &pq, &tq).out;
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!((a - b).abs() < tol, "{precision:?} [{i}]: {a} vs {b}");
+            }
+            let ratio = qeng.resident_bytes() as f64 / exact.resident_bytes() as f64;
+            assert!(ratio <= 0.60, "{precision:?} byte ratio {ratio}");
+        }
     }
 
     /// Drift bookkeeping: appending far-out tokens raises the radius, a
@@ -777,6 +860,7 @@ mod tests {
             fourier_f: 8,
             scales: vec![1.0, 0.5],
             kernel: KernelConfig::default(),
+            precision: CachePrecision::F32,
         };
         let mut eng = IncrementalAttention::new(cfg);
         let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();

@@ -19,6 +19,17 @@
 //!   pool ([`crate::exec::shared_pool`]), and a precomputed per-block
 //!   causal-visibility table so fully masked key blocks are never read.
 //!
+//! ## Row sources
+//!
+//! The blocked kernel reads k/v rows through
+//! [`KvRowSource`] (see [`super::quant`]), so the *same*
+//! tiled loop serves raw f32 matrices (zero-copy row borrows — the f32
+//! path is bit-identical to a kernel hard-coded on slices) and the
+//! quantized f16/bf16 feature caches (each visible row is dequantized on
+//! the fly into O(c) per-thread scratch inside the key-block loop).
+//! [`flash_sdpa_rows`] is the row-source entry point;
+//! [`flash_sdpa_blocked`] wraps it for plain slices.
+//!
 //! ## Determinism
 //!
 //! For a fixed `(block_m, lanes)` the blocked kernel is **bit-stable
@@ -41,6 +52,8 @@ use std::cell::RefCell;
 
 use crate::config::default_workers;
 use crate::exec::{run_chunked, SendPtr};
+
+use super::quant::KvRowSource;
 
 /// Query rows claimed per pool task: small enough to load-balance ragged
 /// visibility masks, large enough to amortize the work-stealing counter.
@@ -122,12 +135,26 @@ impl KernelConfig {
 
     /// Transient bytes of one worker thread's scratch (scores block +
     /// f32 value-block accumulator + f64 running accumulator) — the
-    /// per-thread term of the linear-memory claim.
+    /// per-thread term of the linear-memory claim.  Quantized row
+    /// sources add two c-wide f32 dequantization buffers per thread
+    /// ([`Self::scratch_bytes_per_thread_rows`]); either way the
+    /// per-thread cost stays O(c), independent of the context length m.
     pub fn scratch_bytes_per_thread(&self, c: usize, m: usize) -> usize {
         let bm = self.block_m.max(1).min(m.max(1));
         bm * std::mem::size_of::<f64>()
             + c * std::mem::size_of::<f32>()
             + c * std::mem::size_of::<f64>()
+    }
+
+    /// [`Self::scratch_bytes_per_thread`] plus the k/v dequantization
+    /// buffers a quantized row source needs (2 c-wide f32 rows).
+    pub fn scratch_bytes_per_thread_rows(&self, c: usize, m: usize, quantized: bool) -> usize {
+        self.scratch_bytes_per_thread(c, m)
+            + if quantized {
+                2 * c * std::mem::size_of::<f32>()
+            } else {
+                0
+            }
     }
 }
 
@@ -256,6 +283,11 @@ struct RowScratch {
     vacc: Vec<f32>,
     /// f64 running output accumulator (carried across blocks).
     acc: Vec<f64>,
+    /// Dequantization buffer for one key row (quantized sources only;
+    /// stays empty on the f32 path, which borrows rows zero-copy).
+    krow: Vec<f32>,
+    /// Dequantization buffer for one value row (quantized sources only).
+    vrow: Vec<f32>,
 }
 
 impl RowScratch {
@@ -318,12 +350,15 @@ fn axpy_lanes<const L: usize>(acc: &mut [f32], x: f32, v: &[f32]) {
 }
 
 /// One query row against every key block: flash online softmax with one
-/// rescale per *block* instead of per element.
+/// rescale per *block* instead of per element.  `k`/`v` rows come
+/// through a [`KvRowSource`]: borrowed zero-copy for f32 storage,
+/// dequantized into the per-thread `sc.krow`/`sc.vrow` scratch for
+/// quantized storage — the tiled loop is otherwise identical.
 #[allow(clippy::too_many_arguments)]
 fn attend_row<const L: usize>(
     qi: &[f32],
-    k: &[f32],
-    v: &[f32],
+    k: &KvRowSource<'_>,
+    v: &KvRowSource<'_>,
     tqi: i32,
     tk: &[i32],
     c: usize,
@@ -332,9 +367,18 @@ fn attend_row<const L: usize>(
     sc: &mut RowScratch,
     out_row: &mut [f32],
 ) {
+    // split the scratch into disjoint field borrows once, so a row
+    // dequantized into `krow` can be read while `s` is being written
+    let RowScratch {
+        s,
+        vacc,
+        acc,
+        krow,
+        vrow,
+    } = sc;
     let mut m_i = f64::NEG_INFINITY;
     let mut l_i = 0.0f64;
-    sc.acc.iter_mut().for_each(|a| *a = 0.0);
+    acc.iter_mut().for_each(|a| *a = 0.0);
     for b in blocks {
         if tqi < b.min_tk {
             // fully masked block: skipped before any k/v row is read
@@ -344,12 +388,13 @@ fn attend_row<const L: usize>(
         // ---- scores (f32 lane math -> f64 block max) --------------------
         let mut bmax = f64::NEG_INFINITY;
         for (jj, j) in (b.start..b.end).enumerate() {
-            sc.s[jj] = if fully_visible || tqi >= tk[j] {
-                let s = dot_lanes::<L>(qi, &k[j * c..(j + 1) * c]) * scale;
-                if s > bmax {
-                    bmax = s;
+            s[jj] = if fully_visible || tqi >= tk[j] {
+                let kj = k.row(j, c, krow);
+                let sv = dot_lanes::<L>(qi, kj) * scale;
+                if sv > bmax {
+                    bmax = sv;
                 }
-                s
+                sv
             } else {
                 f64::NEG_INFINITY
             };
@@ -359,26 +404,27 @@ fn attend_row<const L: usize>(
         let m_new = if bmax > m_i { bmax } else { m_i };
         let alpha = (m_i - m_new).exp(); // m_i == -inf  =>  alpha == 0
         // ---- probabilities + f32 value-block accumulation ---------------
-        sc.vacc.iter_mut().for_each(|x| *x = 0.0);
+        vacc.iter_mut().for_each(|x| *x = 0.0);
         let mut l_b = 0.0f64;
         for (jj, j) in (b.start..b.end).enumerate() {
-            let s = sc.s[jj];
-            if s == f64::NEG_INFINITY {
+            let sv = s[jj];
+            if sv == f64::NEG_INFINITY {
                 continue;
             }
-            let p = (s - m_new).exp();
+            let p = (sv - m_new).exp();
             l_b += p;
-            axpy_lanes::<L>(&mut sc.vacc, p as f32, &v[j * c..(j + 1) * c]);
+            let vj = v.row(j, c, vrow);
+            axpy_lanes::<L>(vacc, p as f32, vj);
         }
         // ---- fold the block into the f64 running state ------------------
         l_i = l_i * alpha + l_b;
-        for (a, &vb) in sc.acc.iter_mut().zip(sc.vacc.iter()) {
+        for (a, &vb) in acc.iter_mut().zip(vacc.iter()) {
             *a = *a * alpha + vb as f64;
         }
         m_i = m_new;
     }
     if l_i > 0.0 {
-        for (o, &a) in out_row.iter_mut().zip(sc.acc.iter()) {
+        for (o, &a) in out_row.iter_mut().zip(acc.iter()) {
             *o = (a / l_i) as f32;
         }
     } else {
@@ -387,16 +433,17 @@ fn attend_row<const L: usize>(
     }
 }
 
-/// Blocked, multithreaded flash SDPA (see module docs).  Same contract as
-/// [`flash_sdpa_scalar`]; returns the total transient scratch bytes of
-/// the participating worker threads (for `peak_temp_bytes` accounting —
-/// the resident per-thread cost stays O(c), preserving the linear-memory
-/// claim per worker).
+/// Blocked, multithreaded flash SDPA over [`KvRowSource`] k/v rows (see
+/// module docs).  Same masking/softmax contract as [`flash_sdpa_scalar`];
+/// returns the total transient scratch bytes of the participating worker
+/// threads (for `peak_temp_bytes` accounting — the resident per-thread
+/// cost stays O(c), preserving the linear-memory claim per worker, with
+/// quantized sources adding only the two c-wide dequantization rows).
 #[allow(clippy::too_many_arguments)]
-pub fn flash_sdpa_blocked(
+pub fn flash_sdpa_rows(
     q: &[f32],
-    k: &[f32],
-    v: &[f32],
+    k: KvRowSource<'_>,
+    v: KvRowSource<'_>,
     tq: &[i32],
     tk: &[i32],
     c: usize,
@@ -407,13 +454,14 @@ pub fn flash_sdpa_blocked(
     let n = tq.len();
     let m = tk.len();
     assert_eq!(q.len(), n * c, "q shape");
-    assert_eq!(k.len(), m * c, "k shape");
-    assert_eq!(v.len(), m * c, "v shape");
+    k.assert_shape(c, m, "k");
+    v.assert_shape(c, m, "v");
     assert_eq!(out.len(), n * c, "out shape");
     let cfg = cfg.normalized();
     if n == 0 {
         return 0;
     }
+    let quantized = k.is_quantized() || v.is_quantized();
     let blocks = key_blocks(tk, cfg.block_m);
     let out_ptr = SendPtr::new(out.as_mut_ptr());
     let block_m = cfg.block_m.min(m.max(1));
@@ -428,19 +476,47 @@ pub fn flash_sdpa_blocked(
                 let qi = &q[i * c..(i + 1) * c];
                 match cfg.lanes {
                     4 => attend_row::<4>(
-                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
                     ),
                     16 => attend_row::<16>(
-                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
                     ),
                     _ => attend_row::<8>(
-                        qi, k, v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
                     ),
                 }
             }
         });
     });
-    threads * cfg.scratch_bytes_per_thread(c, m)
+    threads * cfg.scratch_bytes_per_thread_rows(c, m, quantized)
+}
+
+/// Blocked, multithreaded flash SDPA over plain f32 slices — the
+/// historical entry point, now a zero-copy wrapper over
+/// [`flash_sdpa_rows`] (bit-identical to it on the same inputs).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_sdpa_blocked(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    tq: &[i32],
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) -> usize {
+    flash_sdpa_rows(
+        q,
+        KvRowSource::F32(k),
+        KvRowSource::F32(v),
+        tq,
+        tk,
+        c,
+        scale,
+        out,
+        cfg,
+    )
 }
 
 #[cfg(test)]
@@ -595,5 +671,98 @@ mod tests {
             cfg.scratch_bytes_per_thread(100, 16),
             16 * 8 + 100 * 4 + 100 * 8
         );
+        // quantized sources add exactly the two c-wide dequant rows
+        assert_eq!(
+            cfg.scratch_bytes_per_thread_rows(100, 16, true),
+            cfg.scratch_bytes_per_thread(100, 16) + 2 * 100 * 4
+        );
+        assert_eq!(
+            cfg.scratch_bytes_per_thread_rows(100, 16, false),
+            cfg.scratch_bytes_per_thread(100, 16)
+        );
+    }
+
+    #[test]
+    fn f32_row_source_is_bit_identical_to_slice_entry_point() {
+        use crate::attention::quant::KvRowSource;
+        let mut rng = Rng::new(21);
+        let (n, m, c) = (9, 23, 18);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 3);
+        let scale = 1.0 / (c as f64).sqrt();
+        let cfg = KernelConfig::fixed(7, 8, 2);
+        let mut a = vec![0.0f32; n * c];
+        flash_sdpa_blocked(&q, &k, &v, &tq, &tk, c, scale, &mut a, &cfg);
+        let mut b = vec![0.0f32; n * c];
+        flash_sdpa_rows(
+            &q,
+            KvRowSource::F32(&k),
+            KvRowSource::F32(&v),
+            &tq,
+            &tk,
+            c,
+            scale,
+            &mut b,
+            &cfg,
+        );
+        assert_eq!(a, b, "wrapper and row-source path must agree bitwise");
+    }
+
+    #[test]
+    fn quantized_row_source_tracks_the_f32_kernel() {
+        use crate::attention::quant::FeatureRows;
+        use crate::config::CachePrecision;
+        let mut rng = Rng::new(22);
+        let (n, m, c) = (11, 37, 26);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 3);
+        let scale = 1.0 / (c as f64).sqrt();
+        let cfg = KernelConfig::fixed(8, 8, 2);
+        let mut want = vec![0.0f32; n * c];
+        flash_sdpa_blocked(&q, &k, &v, &tq, &tk, c, scale, &mut want, &cfg);
+        for (codec, tol) in [(CachePrecision::F16, 2e-2f32), (CachePrecision::Bf16, 1e-1)] {
+            let mut kq = FeatureRows::new(codec, c);
+            kq.push_rows(&k);
+            let mut vq = FeatureRows::new(codec, c);
+            vq.push_rows(&v);
+            let mut got = vec![f32::NAN; n * c];
+            flash_sdpa_rows(
+                &q,
+                kq.as_kv(),
+                vq.as_kv(),
+                &tq,
+                &tk,
+                c,
+                scale,
+                &mut got,
+                &cfg,
+            );
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!((a - b).abs() < tol, "{codec:?} [{i}]: {a} vs {b}");
+            }
+        }
+        // quantized all-masked rows are still exact zeros, never NaN
+        let tq_masked = vec![-10i32; n];
+        let kq = {
+            let mut s = FeatureRows::new(CachePrecision::F16, c);
+            s.push_rows(&k);
+            s
+        };
+        let vq = {
+            let mut s = FeatureRows::new(CachePrecision::F16, c);
+            s.push_rows(&v);
+            s
+        };
+        let mut out = vec![f32::NAN; n * c];
+        flash_sdpa_rows(
+            &q,
+            kq.as_kv(),
+            vq.as_kv(),
+            &tq_masked,
+            &tk,
+            c,
+            scale,
+            &mut out,
+            &cfg,
+        );
+        assert!(out.iter().all(|&x| x == 0.0));
     }
 }

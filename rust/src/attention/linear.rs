@@ -20,6 +20,22 @@ use super::{AttnOutput, AttnProblem};
 /// The scalar flash-SDPA oracle, re-exported under its historical name so
 /// callers of `linear::flash_sdpa` keep compiling (the blocked kernel
 /// lives in [`super::kernel::flash_sdpa_blocked`]).
+///
+/// One query row (`tq = [1]`) attending two key rows (`tk = [0, 0]`) of
+/// width `c = 4`; both values rows are constant 2.0, so the softmax mix
+/// must return exactly 2.0 in every output slot:
+///
+/// ```
+/// use se2attn::attention::linear::flash_sdpa;
+///
+/// let q = vec![1.0f32; 4]; // (n=1, c=4)
+/// let k = vec![1.0f32; 8]; // (m=2, c=4)
+/// let v = vec![2.0f32; 8];
+/// let (tq, tk) = (vec![1i32], vec![0i32, 0]);
+/// let mut out = vec![0.0f32; 4];
+/// flash_sdpa(&q, &k, &v, &tq, &tk, 4, 0.5, &mut out);
+/// assert!(out.iter().all(|&o| (o - 2.0).abs() < 1e-6));
+/// ```
 pub use super::kernel::flash_sdpa_scalar as flash_sdpa;
 
 /// Projected per-head width c for a problem.

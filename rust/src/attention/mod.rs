@@ -10,6 +10,12 @@
 //!
 //! Data layout: row-major `[N, d]` f32 slices, poses as `&[Pose]`,
 //! visibility timesteps as `&[i32]` (see the flash kernel's masking rule).
+//!
+//! Cached feature rows (the incremental decode engine and the serving
+//! tokenization cache) can additionally be stored at a reduced
+//! [`crate::config::CachePrecision`] (f16/bf16 with per-row
+//! scale/offset, [`quant`]); the blocked kernel dequantizes them on the
+//! fly and [`memmodel`] prices both precisions.
 
 pub mod incremental;
 pub mod kernel;
@@ -17,6 +23,7 @@ pub mod linear;
 pub mod memmodel;
 pub mod projections;
 pub mod quadratic;
+pub mod quant;
 
 use crate::config::Method;
 use crate::geometry::Pose;

@@ -160,6 +160,165 @@ pub fn write_bench_json(path: &str, rows: Vec<Json>) -> std::io::Result<()> {
     std::fs::write(path, format!("{doc}\n"))
 }
 
+/// Markdown table builder for [`render_bench_report`].
+fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = format!("| {} |\n", headers.join(" | "));
+    s.push_str(&format!(
+        "|{}\n",
+        headers.iter().map(|_| "---|").collect::<String>()
+    ));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+fn row_num(row: &Json, key: &str) -> Option<f64> {
+    row.get(key).and_then(Json::as_f64).filter(|x| x.is_finite())
+}
+
+fn doc_rows(doc: &Json) -> Vec<&Json> {
+    doc.get("rows")
+        .and_then(Json::as_arr)
+        .map(|r| r.iter().collect())
+        .unwrap_or_default()
+}
+
+/// Render the README "Benchmarks" section from the `BENCH_attention.json`
+/// / `BENCH_decode.json` documents the benches write (and the CI
+/// perf-smoke job uploads) — the `se2attn bench-report` CLI command, so
+/// README performance numbers are generated from archived measurements
+/// instead of hand-written claims.  Either document may be absent; a
+/// note is emitted for whatever is missing.
+pub fn render_bench_report(attention: Option<&Json>, decode: Option<&Json>) -> String {
+    let mut out = String::from(
+        "## Benchmarks\n\n\
+         <!-- generated by `se2-attention bench-report` from \
+         BENCH_attention.json / BENCH_decode.json (written by \
+         `cargo bench --bench attention_throughput` / `--bench \
+         decode_throughput`, uploaded by the CI perf-smoke job). \
+         Do not hand-edit the tables. -->\n\n",
+    );
+
+    match attention {
+        None => out.push_str("*BENCH_attention.json not found — run `cargo bench --bench attention_throughput` first.*\n\n"),
+        Some(doc) => {
+            let rows = doc_rows(doc);
+            let kernel: Vec<Vec<String>> = rows
+                .iter()
+                .filter(|r| r.get("bench").and_then(|b| b.as_str()) == Some("kernel"))
+                .filter_map(|r| {
+                    let scalar = r.get("scalar").and_then(|s| row_num(s, "mean_ns"))?;
+                    let b4 = r.get("blocked_t4").and_then(|s| row_num(s, "mean_ns"))?;
+                    Some(vec![
+                        format!("{}", row_num(r, "n")? as u64),
+                        format!("{}", row_num(r, "c")? as u64),
+                        format!("{:.3}", scalar / 1e6),
+                        format!("{:.3}", b4 / 1e6),
+                        format!("{:.2}x", row_num(r, "speedup_t4")?),
+                    ])
+                })
+                .collect();
+            if !kernel.is_empty() {
+                out.push_str("### Blocked flash kernel vs scalar oracle (se2fourier)\n\n");
+                out.push_str(&md_table(
+                    &["N=M", "c", "scalar ms", "blocked x4 ms", "speedup"],
+                    &kernel,
+                ));
+                out.push('\n');
+            }
+            let algo: Vec<Vec<String>> = rows
+                .iter()
+                .filter(|r| {
+                    r.get("bench").and_then(|b| b.as_str()) == Some("algorithms")
+                        && r.get("method").and_then(|m| m.as_str()) == Some("se2fourier")
+                })
+                .filter_map(|r| {
+                    let lin = row_num(r, "linear_ms")?;
+                    let quad = row_num(r, "quadratic_ms");
+                    Some(vec![
+                        format!("{}", row_num(r, "n")? as u64),
+                        format!("{lin:.3}"),
+                        quad.map_or("-".into(), |q| format!("{q:.3}")),
+                        quad.map_or("-".into(), |q| format!("{:.1}x", q / lin)),
+                    ])
+                })
+                .collect();
+            if !algo.is_empty() {
+                out.push_str("### Algorithm 2 (linear) vs Algorithm 1 (quadratic), se2fourier\n\n");
+                out.push_str(&md_table(
+                    &["N", "linear ms", "quadratic ms", "quad/lin"],
+                    &algo,
+                ));
+                out.push('\n');
+            }
+        }
+    }
+
+    match decode {
+        None => out.push_str("*BENCH_decode.json not found — run `cargo bench --bench decode_throughput` first.*\n\n"),
+        Some(doc) => {
+            let rows = doc_rows(doc);
+            let attn: Vec<Vec<String>> = rows
+                .iter()
+                .filter(|r| r.get("path").and_then(|p| p.as_str()) == Some("attention"))
+                .filter_map(|r| {
+                    Some(vec![
+                        format!("{}", row_num(r, "window")? as u64),
+                        format!("{:.3}", row_num(r, "full_ms")?),
+                        format!("{:.3}", row_num(r, "cached_ms")?),
+                        format!("{:.2}x", row_num(r, "speedup")?),
+                    ])
+                })
+                .collect();
+            if !attn.is_empty() {
+                out.push_str("### Incremental decode: cached vs full-recompute per step\n\n");
+                out.push_str(&md_table(
+                    &["window", "full ms/step", "cached ms/step", "speedup"],
+                    &attn,
+                ));
+                out.push('\n');
+            }
+            let bytes: Vec<Vec<String>> = rows
+                .iter()
+                .filter(|r| r.get("path").and_then(|p| p.as_str()) == Some("cache_precision"))
+                .filter_map(|r| {
+                    Some(vec![
+                        format!("{}", row_num(r, "window")? as u64),
+                        format!("{}", row_num(r, "f32_bytes")? as u64),
+                        format!("{}", row_num(r, "f16_bytes")? as u64),
+                        format!("{:.0}%", row_num(r, "ratio")? * 100.0),
+                    ])
+                })
+                .collect();
+            if !bytes.is_empty() {
+                out.push_str("### Quantized KV cache: resident bytes, f16 vs f32\n\n");
+                out.push_str(&md_table(
+                    &["window", "f32 bytes", "f16 bytes", "f16/f32"],
+                    &bytes,
+                ));
+                out.push('\n');
+            }
+            if let Some(tok) = rows
+                .iter()
+                .find(|r| r.get("path").and_then(|p| p.as_str()) == Some("tokenization"))
+            {
+                if let (Some(full), Some(cached), Some(sp)) = (
+                    row_num(tok, "full_us"),
+                    row_num(tok, "cached_us"),
+                    row_num(tok, "speedup"),
+                ) {
+                    out.push_str(&format!(
+                        "Tokenization path: full `tokenize_window` {full:.1} us/step vs \
+                         cached pool hit {cached:.1} us/step ({sp:.2}x).\n\n"
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Fixed-width table printer for paper-style result tables.
 pub struct Table {
     headers: Vec<String>,
@@ -282,6 +441,56 @@ mod tests {
     fn bench_mode_smoke_is_bounded() {
         let s = bench_mode(BenchMode::Smoke, || {});
         assert!(s.iters >= 5 && s.iters <= 8, "{}", s.iters);
+    }
+
+    #[test]
+    fn bench_report_renders_known_rows_and_flags_missing_inputs() {
+        let attention = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("bench", Json::Str("kernel".into())),
+                ("n", Json::Num(1024.0)),
+                ("c", Json::Num(400.0)),
+                (
+                    "scalar",
+                    Json::obj(vec![("mean_ns", Json::Num(4.0e6))]),
+                ),
+                (
+                    "blocked_t4",
+                    Json::obj(vec![("mean_ns", Json::Num(1.0e6))]),
+                ),
+                ("speedup_t4", Json::Num(4.0)),
+            ])]),
+        )]);
+        let decode = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("path", Json::Str("attention".into())),
+                    ("window", Json::Num(64.0)),
+                    ("full_ms", Json::Num(2.0)),
+                    ("cached_ms", Json::Num(0.5)),
+                    ("speedup", Json::Num(4.0)),
+                ]),
+                Json::obj(vec![
+                    ("path", Json::Str("cache_precision".into())),
+                    ("window", Json::Num(64.0)),
+                    ("f32_bytes", Json::Num(1000.0)),
+                    ("f16_bytes", Json::Num(510.0)),
+                    ("ratio", Json::Num(0.51)),
+                ]),
+            ]),
+        )]);
+        let md = render_bench_report(Some(&attention), Some(&decode));
+        assert!(md.contains("## Benchmarks"), "{md}");
+        assert!(md.contains("| 1024 | 400 | 4.000 | 1.000 | 4.00x |"), "{md}");
+        assert!(md.contains("| 64 | 2.000 | 0.500 | 4.00x |"), "{md}");
+        assert!(md.contains("| 64 | 1000 | 510 | 51% |"), "{md}");
+        assert!(md.contains("generated by"), "{md}");
+        // missing inputs are called out, not silently dropped
+        let md = render_bench_report(None, None);
+        assert!(md.contains("BENCH_attention.json not found"), "{md}");
+        assert!(md.contains("BENCH_decode.json not found"), "{md}");
     }
 
     #[test]

@@ -55,6 +55,80 @@ impl Method {
     }
 }
 
+/// Storage precision of cached feature rows (the incremental decode
+/// engine's projected `phi_k k` / `phi_k v` rows and the per-session
+/// tokenization cache's agent-step rows).
+///
+/// `F32` stores rows verbatim (bit-exact cache round-trips).  `F16` and
+/// `Bf16` store rows as 16-bit codes with a per-row scale/offset
+/// (block floating point), halving the dominant resident-bytes term so
+/// the same `KvCachePool` byte budget holds roughly twice the sessions
+/// (DESIGN.md §14).  Quantized rows are dequantized on the fly inside
+/// the blocked flash kernel's key-block loop; poses and timestamps are
+/// **never** quantized, so SE(2) re-anchoring stays exact in the frame
+/// even when the stored features are compressed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CachePrecision {
+    /// 4 bytes/value, exact (the seed behavior and the default).
+    #[default]
+    F32,
+    /// IEEE binary16 codes (10 mantissa bits): ~2^-11 relative rounding
+    /// after per-row normalization.
+    F16,
+    /// bfloat16 codes (7 mantissa bits): ~2^-8 relative rounding after
+    /// per-row normalization; same bytes as `F16`, wider exponent (moot
+    /// here — rows are normalized before encoding).
+    Bf16,
+}
+
+impl CachePrecision {
+    pub const ALL: [CachePrecision; 3] =
+        [CachePrecision::F32, CachePrecision::F16, CachePrecision::Bf16];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePrecision::F32 => "f32",
+            CachePrecision::F16 => "f16",
+            CachePrecision::Bf16 => "bf16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CachePrecision> {
+        Ok(match s {
+            "f32" => CachePrecision::F32,
+            "f16" => CachePrecision::F16,
+            "bf16" => CachePrecision::Bf16,
+            _ => bail!("unknown cache precision '{s}' (expected f32|f16|bf16)"),
+        })
+    }
+
+    /// Bytes of one stored feature value.
+    pub fn bytes_per_value(&self) -> usize {
+        match self {
+            CachePrecision::F32 => 4,
+            CachePrecision::F16 | CachePrecision::Bf16 => 2,
+        }
+    }
+
+    /// Whether rows of this precision carry a per-row scale/offset pair
+    /// and need dequantization on read.
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, CachePrecision::F32)
+    }
+
+    /// Worst-case |decode(encode(y)) - y| for a normalized value
+    /// |y| <= 1 (half-ulp at 1 under round-to-nearest-even).  The
+    /// absolute row error bound is this times the row's quantization
+    /// scale.
+    pub fn unit_rounding(&self) -> f64 {
+        match self {
+            CachePrecision::F32 => 0.0,
+            CachePrecision::F16 => 1.0 / 2048.0, // 2^-11
+            CachePrecision::Bf16 => 1.0 / 256.0, // 2^-8
+        }
+    }
+}
+
 /// Model configuration baked into the artifacts (mirror of the Python
 /// `ModelConfig`).
 #[derive(Clone, Debug)]
@@ -80,6 +154,14 @@ pub struct ModelConfig {
     /// [`crate::attention::kernel::KernelConfig::default`] and is
     /// overridden by `ServeConfig`/CLI on the serving path.
     pub kernel: crate::attention::kernel::KernelConfig,
+    /// Storage precision of cached feature rows for engines derived from
+    /// this model config
+    /// ([`crate::attention::incremental::IncrementalConfig::for_model`]).
+    /// Like `kernel`, a host-execution knob, not a model-shape one: not
+    /// read from `index.json`, defaults to [`CachePrecision::F32`], and
+    /// overridden by `ServeConfig`/CLI (`simulate --cache-precision`) on
+    /// the serving path.
+    pub cache_precision: CachePrecision,
 }
 
 impl ModelConfig {
@@ -121,12 +203,38 @@ impl ModelConfig {
             map_timestep: num("map_timestep")? as i32,
             param_names,
             kernel: crate::attention::kernel::KernelConfig::default(),
+            cache_precision: CachePrecision::F32,
         })
     }
 
     /// Per-head projected width c for SE(2) Fourier (Sec. III-C).
     pub fn se2f_proj_dim(&self) -> usize {
         (4 * self.fourier_f + 2) * (self.head_dim / 6)
+    }
+
+    /// The artifact-free model shape used by tests, benches and doc
+    /// examples: the paper's d=48, F=12 head on the default
+    /// [`SimConfig`] token budget (64 tokens).  Matches what `make
+    /// artifacts` would bake, with no `index.json` required.
+    pub fn synthetic() -> ModelConfig {
+        ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 48,
+            d_model: 96,
+            d_ff: 192,
+            n_tokens: 64,
+            feat_dim: 16,
+            n_actions: 64,
+            fourier_f: 12,
+            spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
+            batch_size: 8,
+            learning_rate: 3e-4,
+            map_timestep: -1,
+            param_names: vec![],
+            kernel: crate::attention::kernel::KernelConfig::default(),
+            cache_precision: CachePrecision::F32,
+        }
     }
 }
 
@@ -241,6 +349,29 @@ impl SystemConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_precision_roundtrip_and_bytes() {
+        for p in CachePrecision::ALL {
+            assert_eq!(CachePrecision::parse(p.name()).unwrap(), p);
+        }
+        assert!(CachePrecision::parse("f64").is_err());
+        assert_eq!(CachePrecision::F32.bytes_per_value(), 4);
+        assert_eq!(CachePrecision::F16.bytes_per_value(), 2);
+        assert_eq!(CachePrecision::Bf16.bytes_per_value(), 2);
+        assert!(!CachePrecision::F32.is_quantized());
+        assert!(CachePrecision::F16.is_quantized());
+        assert_eq!(CachePrecision::default(), CachePrecision::F32);
+        assert!(CachePrecision::F16.unit_rounding() < CachePrecision::Bf16.unit_rounding());
+    }
+
+    #[test]
+    fn synthetic_model_config_matches_sim_budget() {
+        let m = ModelConfig::synthetic();
+        assert_eq!(m.n_tokens, SimConfig::default().tokens_per_scene());
+        assert_eq!(m.se2f_proj_dim(), 50 * 8);
+        assert_eq!(m.cache_precision, CachePrecision::F32);
+    }
 
     #[test]
     fn method_roundtrip() {

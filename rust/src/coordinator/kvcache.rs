@@ -28,6 +28,16 @@
 //! eviction / resident-byte counters exported through
 //! [`crate::coordinator::telemetry::CacheStats`].
 //!
+//! Sessions can store their cached agent-step feature rows at a reduced
+//! [`CachePrecision`] (f16/bf16 with per-row scale/offset — DESIGN.md
+//! §14): [`WindowCache::emit`] dequantizes features on read while poses
+//! stay exact f64, so the emit-time re-anchor is **exact at every
+//! precision** and only feature mantissas round.  The pool's LRU byte
+//! eviction prices each session at its true stored bytes, so a mixed
+//! f32/f16 population shares one byte budget fairly (bytes, not rows).
+//! Shared map rows stay f32: they are counted once per scene and shared
+//! across sessions of every precision.
+//!
 //! Sharded serving (DESIGN.md §12) runs one pool per worker shard —
 //! sessions are pinned to their shard by the front end's affinity router
 //! and never migrate — while the static map rows live in a
@@ -41,6 +51,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::attention::quant::FeatureRows;
+use crate::config::CachePrecision;
 use crate::geometry::Pose;
 use crate::sim::{AgentState, MapElement};
 use crate::tokenizer::{TokenizedScene, Tokenizer, MAP_T, NO_TARGET};
@@ -82,22 +94,29 @@ impl MapTokens {
     }
 }
 
-/// One history step's agent rows.
+/// One history step's agent rows, stored at the session's precision.
 #[derive(Debug)]
 struct AgentStepRows {
-    feat: Vec<f32>,
+    feat: FeatureRows,
     world_pose: Vec<Pose>,
 }
 
-fn tokenize_step(tok: &Tokenizer, n_agents: usize, agents: &[AgentState]) -> AgentStepRows {
+fn tokenize_step(
+    tok: &Tokenizer,
+    n_agents: usize,
+    agents: &[AgentState],
+    precision: CachePrecision,
+) -> AgentStepRows {
     assert_eq!(agents.len(), n_agents, "agent count changed mid-session");
     let fd = tok.feat_dim;
-    let mut feat = vec![0.0f32; agents.len() * fd];
+    let mut rows = vec![0.0f32; agents.len() * fd];
     let mut world_pose = Vec::with_capacity(agents.len());
     for (a, st) in agents.iter().enumerate() {
-        tok.agent_features(st, &mut feat[a * fd..(a + 1) * fd]);
+        tok.agent_features(st, &mut rows[a * fd..(a + 1) * fd]);
         world_pose.push(st.pose);
     }
+    let mut feat = FeatureRows::new(precision, fd);
+    feat.push_rows(&rows);
     AgentStepRows { feat, world_pose }
 }
 
@@ -108,17 +127,31 @@ pub struct WindowCache {
     steps: VecDeque<AgentStepRows>,
     n_agents: usize,
     feat_dim: usize,
+    precision: CachePrecision,
 }
 
 impl WindowCache {
-    /// Build from a full window (the miss path): tokenizes every step.
-    /// An empty window (no steps, or steps with no agents) is a
-    /// recoverable request error, not a panic — the serving path surfaces
-    /// it to the caller instead of taking the worker down.
+    /// Build from a full window (the miss path) at f32 — bit-exact cache
+    /// round-trips, the seed behavior.  See [`Self::from_window_with`]
+    /// for the quantized tier.
     pub fn from_window(
         tok: &Tokenizer,
         map: Arc<MapTokens>,
         window: &[Vec<AgentState>],
+    ) -> Result<WindowCache> {
+        WindowCache::from_window_with(tok, map, window, CachePrecision::F32)
+    }
+
+    /// Build from a full window (the miss path): tokenizes every step,
+    /// storing feature rows at `precision`.  An empty window (no steps,
+    /// or steps with no agents) is a recoverable request error, not a
+    /// panic — the serving path surfaces it to the caller instead of
+    /// taking the worker down.
+    pub fn from_window_with(
+        tok: &Tokenizer,
+        map: Arc<MapTokens>,
+        window: &[Vec<AgentState>],
+        precision: CachePrecision,
     ) -> Result<WindowCache> {
         if window.is_empty() || window[0].is_empty() {
             bail!("cannot build a session window cache from an empty window");
@@ -126,20 +159,26 @@ impl WindowCache {
         let n_agents = window[0].len();
         let mut steps = VecDeque::with_capacity(window.len());
         for step in window {
-            steps.push_back(tokenize_step(tok, n_agents, step));
+            steps.push_back(tokenize_step(tok, n_agents, step, precision));
         }
         Ok(WindowCache {
             map,
             steps,
             n_agents,
             feat_dim: tok.feat_dim,
+            precision,
         })
+    }
+
+    /// Storage precision of this session's cached feature rows.
+    pub fn precision(&self) -> CachePrecision {
+        self.precision
     }
 
     /// Slide the window one decode step: evict the oldest step's rows and
     /// tokenize *only* the new frontier — the O(new) hot path.
     pub fn advance(&mut self, tok: &Tokenizer, frontier: &[AgentState]) {
-        let rows = tokenize_step(tok, self.n_agents, frontier);
+        let rows = tokenize_step(tok, self.n_agents, frontier, self.precision);
         self.steps.pop_front();
         self.steps.push_back(rows);
     }
@@ -154,9 +193,12 @@ impl WindowCache {
     }
 
     /// Assemble the model-ready tokenized scene: cached features are
-    /// copied verbatim, poses are re-anchored (exactly) to the current
-    /// robot frame (agent 0 at the latest step).  Bit-identical to
-    /// [`Tokenizer::tokenize_window`] on the same window, with no targets.
+    /// copied verbatim (f32) or dequantized (f16/bf16, within the
+    /// per-row rounding bound), and poses are re-anchored — **exactly,
+    /// at every precision** (poses are never quantized) — to the current
+    /// robot frame (agent 0 at the latest step).  At f32, bit-identical
+    /// to [`Tokenizer::tokenize_window`] on the same window, with no
+    /// targets.
     ///
     /// An empty cached window (a corrupted or stale session) is a
     /// recoverable error: [`KvCachePool::step`] treats it as a cache miss
@@ -190,7 +232,8 @@ impl WindowCache {
         }
         for (t, step) in self.steps.iter().enumerate() {
             let base = n_map + t * n_agents;
-            feat[base * fd..(base + n_agents) * fd].copy_from_slice(&step.feat);
+            step.feat
+                .read_all_into(&mut feat[base * fd..(base + n_agents) * fd]);
             for (a, wp) in step.world_pose.iter().enumerate() {
                 let idx = base + a;
                 let mp = tok.to_model_frame(&frame, wp);
@@ -213,14 +256,17 @@ impl WindowCache {
         })
     }
 
-    /// Resident bytes (shared map rows are counted by the pool, once per
-    /// scene, not per session).
+    /// Resident bytes at this session's true storage precision (shared
+    /// map rows are counted by the pool, once per scene, not per
+    /// session).  Equal to
+    /// [`crate::attention::memmodel::window_cache_bytes`] — the one byte
+    /// model the telemetry gauge reports (regression-tested in
+    /// `tests/quantized_cache.rs`).
     pub fn resident_bytes(&self) -> usize {
         self.steps
             .iter()
             .map(|s| {
-                s.feat.len() * std::mem::size_of::<f32>()
-                    + s.world_pose.len() * std::mem::size_of::<Pose>()
+                s.feat.resident_bytes() + s.world_pose.len() * std::mem::size_of::<Pose>()
             })
             .sum()
     }
@@ -242,10 +288,16 @@ pub struct SessionKey {
 pub struct CacheConfig {
     /// Max live sessions before LRU eviction.
     pub max_sessions: usize,
-    /// Max resident bytes across sessions + shared map rows.
+    /// Max resident bytes across sessions + shared map rows.  Sessions
+    /// are priced at their true stored bytes, so quantized sessions fit
+    /// roughly twice as many under the same budget.
     pub max_bytes: usize,
     /// Max scenes whose map rows are kept for sharing.
     pub max_map_scenes: usize,
+    /// Storage precision for sessions built by [`KvCachePool::step`]
+    /// (per-session overrides go through
+    /// [`KvCachePool::step_with_precision`]).
+    pub precision: CachePrecision,
 }
 
 impl Default for CacheConfig {
@@ -254,6 +306,7 @@ impl Default for CacheConfig {
             max_sessions: 4096,
             max_bytes: 256 << 20,
             max_map_scenes: 1024,
+            precision: CachePrecision::F32,
         }
     }
 }
@@ -368,6 +421,37 @@ struct PoolInner {
 
 /// A shard-owned pool of per-session window caches over a (possibly
 /// shared) map-row registry.
+///
+/// The serving hot path is [`KvCachePool::step`]: a cache hit tokenizes
+/// only the frontier agent states and re-anchors cached poses exactly;
+/// the result is bit-identical (at f32) to a full
+/// [`Tokenizer::tokenize_window`]:
+///
+/// ```
+/// use std::sync::Arc;
+/// use se2attn::config::{ModelConfig, SimConfig};
+/// use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
+/// use se2attn::coordinator::telemetry::CacheStats;
+/// use se2attn::sim::ScenarioGenerator;
+/// use se2attn::tokenizer::Tokenizer;
+///
+/// let sim = SimConfig::default();
+/// let tok = Tokenizer::new(&ModelConfig::synthetic(), &sim);
+/// let scenario = ScenarioGenerator::new(sim.clone()).generate(7);
+/// let window: Vec<_> = (0..sim.history_steps)
+///     .map(|t| scenario.states[t].clone())
+///     .collect();
+///
+/// let stats = Arc::new(CacheStats::default());
+/// let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+/// let key = SessionKey { scene: scenario.seed, t0: 7, sample: 0 };
+///
+/// let scene = pool.step(key, &tok, &scenario.map_elements, &window).unwrap();
+/// let full = tok.tokenize_window(&scenario.map_elements, &window, None);
+/// assert_eq!(scene.feat, full.feat); // f32 sessions are bit-identical
+/// assert_eq!(stats.misses.get(), 1); // first touch is a miss
+/// pool.end_session(key);
+/// ```
 pub struct KvCachePool {
     cfg: CacheConfig,
     pub stats: Arc<CacheStats>,
@@ -416,16 +500,35 @@ impl KvCachePool {
         self.maps.get_or_tokenize(scene, tok, elements)
     }
 
-    /// One decode step for a session.  Hit: slide the cached window by the
+    /// One decode step for a session at the pool's configured precision
+    /// (`CacheConfig::precision`).  Hit: slide the cached window by the
     /// frontier (`window.last()`) and emit — O(new) tokenization.  Miss
     /// (first step, evicted under pressure, or a corrupt/stale cached
-    /// window): rebuild from the caller's full window.  Either way the
+    /// window): rebuild from the caller's full window.  At f32 the
     /// result is bit-identical to
-    /// `tok.tokenize_window(map_elements, window, None)`.  An empty caller
-    /// window is a recoverable `Err`, never a panic on the serving path.
+    /// `tok.tokenize_window(map_elements, window, None)`; quantized
+    /// sessions dequantize features within the per-row rounding bound
+    /// while poses stay exact.  An empty caller window is a recoverable
+    /// `Err`, never a panic on the serving path.
     pub fn step(
         &self,
         key: SessionKey,
+        tok: &Tokenizer,
+        map_elements: &[MapElement],
+        window: &[Vec<AgentState>],
+    ) -> Result<TokenizedScene> {
+        self.step_with_precision(key, self.cfg.precision, tok, map_elements, window)
+    }
+
+    /// [`Self::step`] with an explicit per-session storage precision —
+    /// sessions of different precisions coexist in one pool under one
+    /// LRU byte budget.  A cached session whose stored precision differs
+    /// from the requested one is rebuilt (counted as a miss), so the
+    /// requested precision always wins.
+    pub fn step_with_precision(
+        &self,
+        key: SessionKey,
+        precision: CachePrecision,
         tok: &Tokenizer,
         map_elements: &[MapElement],
         window: &[Vec<AgentState>],
@@ -450,10 +553,13 @@ impl KvCachePool {
 
         let mut entry = match inner.sessions.remove(&key) {
             // only a healthy cached window advances in O(new); a corrupt
-            // (empty) or shape-mismatched entry falls through to the miss
-            // arm and is rebuilt — recoverable, never a panic
+            // (empty), shape-mismatched or precision-mismatched entry
+            // falls through to the miss arm and is rebuilt —
+            // recoverable, never a panic
             Some(mut e)
-                if e.cache.n_agents() == window[0].len() && e.cache.history_steps() > 0 =>
+                if e.cache.n_agents() == window[0].len()
+                    && e.cache.history_steps() > 0
+                    && e.cache.precision() == precision =>
             {
                 self.stats.hits.inc();
                 e.cache.advance(tok, window.last().unwrap());
@@ -467,7 +573,7 @@ impl KvCachePool {
                 }
                 self.stats.misses.inc();
                 let map = self.maps.get_or_tokenize(key.scene, tok, map_elements);
-                let cache = WindowCache::from_window(tok, map, window)?;
+                let cache = WindowCache::from_window_with(tok, map, window, precision)?;
                 let bytes = cache.resident_bytes();
                 inner.session_bytes += bytes;
                 self.stats.resident_bytes.add(bytes as u64);
@@ -546,29 +652,9 @@ mod tests {
     use crate::config::{ModelConfig, SimConfig};
     use crate::sim::ScenarioGenerator;
 
-    fn test_model_config() -> ModelConfig {
-        ModelConfig {
-            n_layers: 2,
-            n_heads: 2,
-            head_dim: 48,
-            d_model: 96,
-            d_ff: 192,
-            n_tokens: 64,
-            feat_dim: 16,
-            n_actions: 64,
-            fourier_f: 12,
-            spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
-            batch_size: 8,
-            learning_rate: 3e-4,
-            map_timestep: -1,
-            param_names: vec![],
-            kernel: crate::attention::kernel::KernelConfig::default(),
-        }
-    }
-
     fn setup() -> (SimConfig, Tokenizer) {
         let sim = SimConfig::default();
-        let tok = Tokenizer::new(&test_model_config(), &sim);
+        let tok = Tokenizer::new(&ModelConfig::synthetic(), &sim);
         (sim, tok)
     }
 
@@ -764,7 +850,7 @@ mod tests {
 
     #[test]
     fn resident_bytes_match_memmodel() {
-        use crate::attention::memmodel::{map_tokens_bytes, window_cache_bytes, BYTES_F32};
+        use crate::attention::memmodel::{map_tokens_bytes, window_cache_bytes};
         let (sim, tok) = setup();
         let s = ScenarioGenerator::new(sim.clone()).generate(2);
         let h = sim.history_steps;
@@ -773,13 +859,58 @@ mod tests {
         let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
         assert_eq!(
             map.resident_bytes(),
-            map_tokens_bytes(s.map_elements.len(), tok.feat_dim, BYTES_F32)
+            map_tokens_bytes(s.map_elements.len(), tok.feat_dim)
         );
-        let cache = WindowCache::from_window(&tok, map, &window).unwrap();
-        assert_eq!(
-            cache.resident_bytes(),
-            window_cache_bytes(sim.n_agents, h, tok.feat_dim, BYTES_F32)
+        for p in CachePrecision::ALL {
+            let cache =
+                WindowCache::from_window_with(&tok, Arc::clone(&map), &window, p).unwrap();
+            assert_eq!(cache.precision(), p);
+            assert_eq!(
+                cache.resident_bytes(),
+                window_cache_bytes(sim.n_agents, h, tok.feat_dim, p),
+                "{p:?}"
+            );
+        }
+    }
+
+    /// A quantized session's emit keeps poses/timesteps/frame bit-exact
+    /// and features within the per-row rounding bound; a per-session
+    /// precision override rebuilds a cached session of the wrong
+    /// precision instead of silently serving it.
+    #[test]
+    fn quantized_emit_is_close_and_precision_mismatch_rebuilds() {
+        let (sim, tok) = setup();
+        let s = ScenarioGenerator::new(sim.clone()).generate(19);
+        let h = sim.history_steps;
+        let window: Vec<Vec<crate::sim::AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::clone(&stats));
+        let key = SessionKey { scene: 19, t0: 7, sample: 0 };
+
+        let want = tok.tokenize_window(&s.map_elements, &window, None);
+        let got = pool
+            .step_with_precision(key, CachePrecision::F16, &tok, &s.map_elements, &window)
+            .unwrap();
+        assert_eq!(got.pose, want.pose, "poses are never quantized");
+        assert_eq!(got.tq, want.tq);
+        assert_eq!(got.frame, want.frame);
+        // map rows stay f32-exact; agent rows are within the f16 bound
+        assert!(
+            got.feat
+                .iter()
+                .zip(want.feat.iter())
+                .all(|(a, b)| (a - b).abs() < 5e-2),
+            "quantized features must stay close"
         );
+        assert_eq!(got.feat[..want.n_map * tok.feat_dim], want.feat[..want.n_map * tok.feat_dim]);
+        assert_eq!(stats.misses.get(), 1);
+
+        // same key at f32: the f16 entry must not serve — rebuild as miss
+        let exact = pool.step(key, &tok, &s.map_elements, &window).unwrap();
+        assert_eq!(exact.feat, want.feat, "f32 emit stays bit-identical");
+        assert_eq!(stats.misses.get(), 2, "precision mismatch is a miss");
+        assert_eq!(stats.hits.get(), 0);
     }
 
     /// Regression (serving-path panic): an empty request window used to

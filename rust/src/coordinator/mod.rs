@@ -10,8 +10,10 @@
 //!   one shard (`Router`).
 //! * [`kvcache`] — per-session incremental tokenization cache: shared map
 //!   rows (`MapRegistry`, one registry across shards), sliding-window
-//!   agent rows, exact pose re-anchoring, capacity eviction and
-//!   hit/miss/bytes telemetry (DESIGN.md §10).
+//!   agent rows at a per-session storage precision (f32 exact, or
+//!   quantized f16/bf16 — DESIGN.md §14), exact pose re-anchoring,
+//!   precision-aware LRU byte eviction and hit/miss/bytes telemetry
+//!   (DESIGN.md §10).
 //! * [`rollout`] — autoregressive simulation scheduler: decode -> action ->
 //!   kinematic integration -> advance the token cache, for minADE
 //!   evaluation and serving; generic over the [`model::ActionDecoder`]

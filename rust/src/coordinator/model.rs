@@ -116,13 +116,19 @@ impl ActionDecoder for SyntheticDecoder {
     }
 }
 
+/// Owns one attention variant's parameters + Adam state and drives its
+/// AOT artifacts (`fwd_*` / `train_step_*` / `decode_*`) through the
+/// PJRT [`Engine`].  The production [`ActionDecoder`]; see
+/// [`SyntheticDecoder`] for the artifact-free test/bench counterpart.
 pub struct ModelHandle {
+    /// Attention method this handle's artifacts were lowered for.
     pub method: Method,
     engine: Arc<Engine>,
     /// Parameters, Adam first and second moments (manifest order).
     params: Vec<HostTensor>,
     opt_m: Vec<HostTensor>,
     opt_v: Vec<HostTensor>,
+    /// Optimizer steps taken (checkpointed and restored).
     pub step: u64,
     n_params: usize,
 }

@@ -35,11 +35,15 @@ use super::telemetry::CacheStats;
 /// A request to roll one scenario forward.
 #[derive(Clone)]
 pub struct RolloutRequest {
+    /// The scene to roll forward (map + recorded agent history).
     pub scenario: Scenario,
     /// History window end (inclusive) in scenario steps.
     pub t0: usize,
+    /// Joint trajectory samples to draw (the minADE "K").
     pub n_samples: usize,
+    /// Decode softmax temperature.
     pub temperature: f32,
+    /// Base seed for action sampling (combined with the step index).
     pub seed: i32,
 }
 
@@ -69,9 +73,14 @@ struct SampleState {
     key: SessionKey,
 }
 
+/// The autoregressive rollout scheduler (see module docs): generic over
+/// [`ActionDecoder`] backends, cache-pooled via [`KvCachePool`].
 pub struct RolloutEngine {
+    /// Scene tokenizer (shared layout with training).
     pub tokenizer: Tokenizer,
+    /// Model shape the decode artifacts were lowered at.
     pub model_cfg: ModelConfig,
+    /// Simulator timing/shape knobs.
     pub sim: SimConfig,
 }
 

@@ -60,6 +60,12 @@ pub struct ServeConfig {
     pub batcher: BatcherConfig,
     /// KV/tokenization cache budget, applied per shard pool (the shared
     /// map-row registry is bounded by `max_map_scenes` once, server-wide).
+    /// Its `precision` field (CLI `simulate --cache-precision`) selects
+    /// the storage tier of every session cache on this server — f16/bf16
+    /// roughly halve resident bytes per session, so the same per-shard
+    /// `max_bytes` holds about twice the sessions (DESIGN.md §14) — and
+    /// is copied into each shard's `ModelConfig.cache_precision` at
+    /// startup so incremental engines derived from it agree.
     pub cache: CacheConfig,
     /// Blocked flash-kernel shape for *native CPU* attention derived
     /// from this server's model config — normalized into each shard's
@@ -134,12 +140,13 @@ impl Server {
         param_seed: i32,
         serve: ServeConfig,
     ) -> Result<Server> {
-        // apply the serving-layer kernel override BEFORE the factory
-        // captures its clone, so backends built from this config (and
-        // any `IncrementalConfig::for_model` engine derived from it)
-        // see the ServeConfig/CLI kernel shape
+        // apply the serving-layer kernel + cache-precision overrides
+        // BEFORE the factory captures its clone, so backends built from
+        // this config (and any `IncrementalConfig::for_model` engine
+        // derived from it) see the ServeConfig/CLI knobs
         let mut cfg = cfg;
         cfg.model.kernel = serve.kernel.normalized();
+        cfg.model.cache_precision = serve.cache.precision;
         let factory: BackendFactory = {
             let cfg = cfg.clone();
             let methods = methods.clone();
@@ -171,10 +178,12 @@ impl Server {
         serve: ServeConfig,
         factory: BackendFactory,
     ) -> Result<Server> {
-        // the serving-layer kernel knob wins over whatever the model
-        // config carried in, so every shard agrees with the CLI/ServeConfig
+        // the serving-layer kernel and cache-precision knobs win over
+        // whatever the model config carried in, so every shard agrees
+        // with the CLI/ServeConfig
         let mut cfg = cfg;
         cfg.model.kernel = serve.kernel.normalized();
+        cfg.model.cache_precision = serve.cache.precision;
         let workers = serve.workers.max(1);
         let stats = Arc::new(ServerStats::with_shards(workers));
         let maps = Arc::new(MapRegistry::new(

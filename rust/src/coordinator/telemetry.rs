@@ -63,6 +63,17 @@ impl Gauge {
 /// KV/tokenization cache counters for the incremental decode engine
 /// (DESIGN.md §10): session and map-row hit rates, sliding-window and
 /// capacity evictions, and resident bytes across all live caches.
+///
+/// `resident_bytes` is fed exclusively from the caches' own
+/// `resident_bytes()` accessors, which price rows at their **true
+/// storage precision** (f16/bf16 codes + per-row scale/offset, or raw
+/// f32) using the closed-form byte model in
+/// [`crate::attention::memmodel`] — one byte model for the gauge, the
+/// eviction budget and the capacity-planning formulas, so the stats
+/// line, `max_bytes` enforcement and DESIGN.md §14 arithmetic can never
+/// drift apart (regression-tested in `tests/quantized_cache.rs`).  The
+/// hit/miss/eviction counters are precision-independent: the same
+/// workload produces the same counts at any [`crate::config::CachePrecision`].
 #[derive(Default, Debug)]
 pub struct CacheStats {
     pub hits: Counter,

@@ -372,21 +372,9 @@ mod tests {
     fn tokenizer() -> (SimConfig, Tokenizer) {
         let sim = SimConfig::default();
         let model = ModelConfig {
-            n_layers: 2,
-            n_heads: 2,
-            head_dim: 48,
-            d_model: 96,
-            d_ff: 192,
-            n_tokens: 64,
-            feat_dim: 16,
-            n_actions: 64,
-            fourier_f: 12,
             spatial_scales: vec![1.0],
             batch_size: 4,
-            learning_rate: 3e-4,
-            map_timestep: -1,
-            param_names: vec![],
-            kernel: crate::attention::kernel::KernelConfig::default(),
+            ..ModelConfig::synthetic()
         };
         let tok = Tokenizer::new(&model, &sim);
         (sim, tok)

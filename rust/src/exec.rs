@@ -168,6 +168,19 @@ struct ScopedShared {
 /// ([`crate::attention::kernel`]), which partitions query rows across the
 /// pool on every attention call and therefore cannot afford per-call
 /// thread spawns.
+///
+/// ```
+/// use std::sync::atomic::{AtomicUsize, Ordering};
+/// use se2attn::exec::ScopedPool;
+///
+/// let pool = ScopedPool::new(2);
+/// let sum = AtomicUsize::new(0); // stack state, borrowed by the workers
+/// pool.run(10, 2, &|i| {
+///     sum.fetch_add(i, Ordering::Relaxed);
+/// });
+/// // run() blocks until every index is processed, so the borrow is done
+/// assert_eq!(sum.load(Ordering::Relaxed), 45);
+/// ```
 pub struct ScopedPool {
     shared: Arc<ScopedShared>,
     workers: Mutex<Vec<JoinHandle<()>>>,

@@ -17,8 +17,9 @@
 //!   Algorithms 1 and 2 (backed by the blocked multithreaded flash
 //!   kernel in `attention::kernel`, with the scalar path kept as the
 //!   oracle), and the incremental decode engine (SE(2)-anchored KV
-//!   feature cache + per-session tokenization cache) for streaming
-//!   rollout.
+//!   feature cache + per-session tokenization cache, storable at a
+//!   quantized f16/bf16 tier with dequant-on-attend —
+//!   `attention::quant`, DESIGN.md §14) for streaming rollout.
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and loaded via the PJRT C API (`xla` crate, behind the

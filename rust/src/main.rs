@@ -7,6 +7,7 @@
 //!   render     ASCII-render any scenario family (debug)
 //!   simulate   batched rollout serving with per-family stats report
 //!   approx     SE(2) Fourier approximation error probe (Fig. 3 pointwise)
+//!   bench-report  render the README Benchmarks section from BENCH_*.json
 
 use std::sync::Arc;
 
@@ -60,11 +61,23 @@ fn app() -> App {
                  "threads per native CPU flash-attention call, for engines \
                   derived from this server's model config (0 = one per core; \
                   bit-identical at any setting; PJRT artifact decode is \
-                  threaded by XLA and unaffected)"))
+                  threaded by XLA and unaffected)")
+            .opt("cache-precision", "f32",
+                 "storage precision of cached session feature rows \
+                  (f32|f16|bf16): f16/bf16 roughly halve resident cache \
+                  bytes per session — about twice the sessions per byte \
+                  budget — at a bounded feature rounding; poses and \
+                  re-anchoring stay exact"))
         .command(Command::new("approx", "Fourier approximation error probe")
             .opt("radius", "2.0", "key position radius")
             .opt("basis", "12", "basis size F")
             .opt("trials", "256", "random (key, query) pairs"))
+        .command(Command::new("bench-report",
+                              "render the README Benchmarks section from BENCH_*.json")
+            .opt("attention", "BENCH_attention.json",
+                 "attention_throughput JSON document (written by `cargo bench`)")
+            .opt("decode", "BENCH_decode.json",
+                 "decode_throughput JSON document (written by `cargo bench`)"))
 }
 
 fn main() -> Result<()> {
@@ -90,6 +103,7 @@ fn dispatch(m: &Matches) -> Result<()> {
         "render" => cmd_render(m),
         "simulate" => cmd_simulate(m),
         "approx" => cmd_approx(m),
+        "bench-report" => cmd_bench_report(m),
         other => anyhow::bail!("unhandled command {other}"),
     }
 }
@@ -270,10 +284,14 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
     let mut serve = ServeConfig::with_workers(m.get_usize("workers"));
     serve.kernel =
         se2attn::attention::kernel::KernelConfig::with_threads(m.get_usize("kernel-threads"));
+    serve.cache.precision =
+        se2attn::config::CachePrecision::parse(m.get("cache-precision"))?;
     let server = Server::start(cfg.clone(), vec![method], seed as i32, serve)?;
     println!(
-        "serving on {} worker shard(s), session-affinity routing by scene id",
-        server.n_shards()
+        "serving on {} worker shard(s), session-affinity routing by scene id, \
+         cache precision {}",
+        server.n_shards(),
+        m.get("cache-precision"),
     );
     let gen = se2attn::sim::MixGenerator::new(cfg.sim.clone(), mix);
     let t0 = std::time::Instant::now();
@@ -310,6 +328,22 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         println!("  {line}");
     }
     println!("server stats: {}", server.stats.summary());
+    Ok(())
+}
+
+fn cmd_bench_report(m: &Matches) -> Result<()> {
+    // missing inputs are reported inside the rendered markdown (the
+    // benches may not have run yet), not as a hard error
+    let load = |path: &str| -> Option<se2attn::jsonio::Json> {
+        let text = std::fs::read_to_string(path).ok()?;
+        se2attn::jsonio::Json::parse(&text).ok()
+    };
+    let attention = load(m.get("attention"));
+    let decode = load(m.get("decode"));
+    print!(
+        "{}",
+        se2attn::benchlib::render_bench_report(attention.as_ref(), decode.as_ref())
+    );
     Ok(())
 }
 

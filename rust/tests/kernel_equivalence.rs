@@ -203,6 +203,7 @@ fn re_anchored_cache_attend_matches_oracle() {
                 fourier_f: f,
                 scales: scales.clone(),
                 kernel: KernelConfig::fixed(8, 8, threads),
+                precision: se2attn::config::CachePrecision::F32,
             });
             eng.append(&data.k, &data.v, &data.pk, &data.tk);
             eng.re_anchor(&g).expect("se2fourier re-anchor");

@@ -23,21 +23,8 @@ use se2attn::tokenizer::Tokenizer;
 
 fn test_model_config(sim: &SimConfig) -> ModelConfig {
     ModelConfig {
-        n_layers: 2,
-        n_heads: 2,
-        head_dim: 48,
-        d_model: 96,
-        d_ff: 192,
         n_tokens: sim.tokens_per_scene(),
-        feat_dim: 16,
-        n_actions: 64,
-        fourier_f: 12,
-        spatial_scales: vec![1.0, 0.5, 0.25, 0.125],
-        batch_size: 8,
-        learning_rate: 3e-4,
-        map_timestep: -1,
-        param_names: vec![],
-        kernel: se2attn::attention::kernel::KernelConfig::default(),
+        ..ModelConfig::synthetic()
     }
 }
 
@@ -64,6 +51,7 @@ fn incremental_decode_matches_full_recompute() {
         fourier_f: f,
         scales: scales.clone(),
         kernel: KernelConfig::default(),
+        precision: se2attn::config::CachePrecision::F32,
     });
     let mut all_k: Vec<f32> = Vec::new();
     let mut all_v: Vec<f32> = Vec::new();
@@ -135,6 +123,7 @@ fn incremental_decode_invariant_under_random_re_anchor() {
             fourier_f: f,
             scales: scales.clone(),
             kernel: KernelConfig::default(),
+            precision: se2attn::config::CachePrecision::F32,
         };
         let mut eng = IncrementalAttention::new(cfg);
         eng.append(&k, &v, &pk, &tk);

@@ -1,0 +1,403 @@
+//! Acceptance suite for the quantized KV feature cache (DESIGN.md §14):
+//!
+//! * cached-quantized attend vs full f32 recompute stays within 1e-2
+//!   (f16) across random SE(2) re-anchors, and the f32 cached path stays
+//!   within 1e-5;
+//! * f16 resident bytes are <= 60% of f32 for the same rows, and every
+//!   `resident_bytes()` gauge equals the closed-form
+//!   [`se2attn::attention::memmodel`] byte model (one source of truth);
+//! * a mixed f32/f16 session population under a tight byte budget evicts
+//!   strictly in LRU order priced by true bytes, and every surviving
+//!   session still round-trips `step`/`emit`;
+//! * cache hit/miss/eviction counters are identical across precisions
+//!   for the same workload.
+
+use std::sync::Arc;
+
+use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::kernel::KernelConfig;
+use se2attn::attention::memmodel::{
+    incremental_cache_bytes, map_tokens_bytes, window_cache_bytes,
+};
+use se2attn::attention::{linear, AttnProblem};
+use se2attn::config::{CachePrecision, Method, ModelConfig, SimConfig};
+use se2attn::coordinator::kvcache::{CacheConfig, KvCachePool, SessionKey};
+use se2attn::coordinator::telemetry::CacheStats;
+use se2attn::geometry::Pose;
+use se2attn::prng::Rng;
+use se2attn::proplite::check;
+use se2attn::sim::{AgentState, ScenarioGenerator};
+use se2attn::tokenizer::Tokenizer;
+
+const D: usize = 12;
+const F: usize = 24;
+
+fn rand_pose(rng: &mut Rng, r: f64) -> Pose {
+    Pose::new(rng.range(-r, r), rng.range(-r, r), rng.range(-3.1, 3.1))
+}
+
+/// Build a cached engine at `precision`, apply `n_reanchors` random
+/// SE(2) re-anchors, and return the max abs error of its attend output
+/// against a full f32 recompute (Algorithm 2 from the raw k/v at the
+/// current — exactly tracked — poses).
+fn attend_error_vs_full_recompute(
+    precision: CachePrecision,
+    n_reanchors: usize,
+    rng: &mut Rng,
+) -> f32 {
+    let scales = vec![1.0, 0.5];
+    let (n, m) = (4usize, 14usize);
+    let q: Vec<f32> = (0..n * D).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..m * D).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..m * D).map(|_| rng.normal() as f32).collect();
+    let pk: Vec<Pose> = (0..m).map(|_| rand_pose(rng, 1.0)).collect();
+    let pq: Vec<Pose> = (0..n).map(|_| rand_pose(rng, 1.0)).collect();
+    let tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, 3) as i32).collect();
+    let tq = vec![5i32; n];
+
+    let mut eng = IncrementalAttention::new(IncrementalConfig {
+        method: Method::Se2Fourier,
+        d: D,
+        fourier_f: F,
+        scales: scales.clone(),
+        kernel: KernelConfig::default(),
+        precision,
+    });
+    eng.append(&k, &v, &pk, &tk);
+
+    // poses tracked exactly on the test side, mirroring the engine's
+    // own (f64-exact) pose bookkeeping
+    let mut cur_k = pk;
+    let mut cur_q = pq;
+    for _ in 0..n_reanchors {
+        let g = rand_pose(rng, 0.35);
+        eng.re_anchor(&g).expect("se2fourier re-anchor");
+        cur_k = cur_k.iter().map(|p| g.compose(p)).collect();
+        cur_q = cur_q.iter().map(|p| g.compose(p)).collect();
+    }
+
+    let got = eng.attend(&q, &cur_q, &tq).out;
+    let want = linear::attention(&AttnProblem {
+        method: Method::Se2Fourier,
+        d: D,
+        fourier_f: F,
+        scales: &scales,
+        q: &q,
+        k: &k,
+        v: &v,
+        pose_q: &cur_q,
+        pose_k: &cur_k,
+        tq: &tq,
+        tk: &tk,
+    })
+    .out;
+    want.iter()
+        .zip(got.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Acceptance: f16 cached + re-anchored vs full recompute <= 1e-2.
+#[test]
+fn f16_cached_attend_within_1e2_of_full_recompute() {
+    check("f16 cached attend vs full recompute", 6, |rng| {
+        let err = attend_error_vs_full_recompute(CachePrecision::F16, 2, rng);
+        if err <= 1e-2 {
+            Ok(())
+        } else {
+            Err(format!("f16 max abs error {err} > 1e-2"))
+        }
+    });
+}
+
+/// Acceptance: the f32 cached path stays at 1e-5 under re-anchoring.
+#[test]
+fn f32_cached_attend_within_1e5_of_full_recompute() {
+    check("f32 cached attend vs full recompute", 6, |rng| {
+        let err = attend_error_vs_full_recompute(CachePrecision::F32, 1, rng);
+        if err <= 1e-5 {
+            Ok(())
+        } else {
+            Err(format!("f32 max abs error {err} > 1e-5"))
+        }
+    });
+}
+
+/// bf16 trades ~8x the rounding of f16 for the same bytes; it must stay
+/// within its own (wider) band.
+#[test]
+fn bf16_cached_attend_stays_bounded() {
+    check("bf16 cached attend vs full recompute", 4, |rng| {
+        let err = attend_error_vs_full_recompute(CachePrecision::Bf16, 2, rng);
+        if err <= 6e-2 {
+            Ok(())
+        } else {
+            Err(format!("bf16 max abs error {err} > 6e-2"))
+        }
+    });
+}
+
+/// Re-anchors that compose back to the identity leave a quantized cache
+/// within a few storage roundings of the untouched f32 cache: error
+/// grows additively with the number of re-anchors, never compounds.
+#[test]
+fn repeated_re_anchors_do_not_compound_quantization_error() {
+    let mut rng = Rng::new(4711);
+    let scales = vec![1.0, 0.5];
+    let (n, m) = (4usize, 10usize);
+    let q: Vec<f32> = (0..n * D).map(|_| rng.normal() as f32).collect();
+    let k: Vec<f32> = (0..m * D).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..m * D).map(|_| rng.normal() as f32).collect();
+    let pk: Vec<Pose> = (0..m).map(|_| rand_pose(&mut rng, 1.0)).collect();
+    let pq: Vec<Pose> = (0..n).map(|_| rand_pose(&mut rng, 1.0)).collect();
+    let tk = vec![0i32; m];
+    let tq = vec![5i32; n];
+    let build = |precision: CachePrecision| {
+        let mut eng = IncrementalAttention::new(IncrementalConfig {
+            method: Method::Se2Fourier,
+            d: D,
+            fourier_f: F,
+            scales: scales.clone(),
+            kernel: KernelConfig::default(),
+            precision,
+        });
+        eng.append(&k, &v, &pk, &tk);
+        eng
+    };
+    let exact = build(CachePrecision::F32);
+    let mut eng = build(CachePrecision::F16);
+    // 4 round trips = 8 re-anchors composing to the identity
+    for _ in 0..4 {
+        let g = rand_pose(&mut rng, 0.3);
+        eng.re_anchor(&g).unwrap();
+        eng.re_anchor(&g.inverse()).unwrap();
+    }
+    let want = exact.attend(&q, &pq, &tq).out;
+    let got = eng.attend(&q, &pq, &tq).out;
+    for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-2,
+            "[{i}] after 8 re-anchors: {a} vs {b} — quantization error compounded"
+        );
+    }
+}
+
+/// Acceptance: f16 resident bytes <= 60% of f32 for the same rows, and
+/// both match the closed-form memmodel — the single byte model the
+/// telemetry gauge reports.
+#[test]
+fn f16_resident_bytes_le_60_percent_and_match_memmodel() {
+    let mut rng = Rng::new(99);
+    let (d, f, m) = (48usize, 12usize, 256usize);
+    let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let poses: Vec<Pose> = (0..m).map(|_| rand_pose(&mut rng, 1.0)).collect();
+    let t = vec![0i32; m];
+    let bytes_at = |precision: CachePrecision| {
+        let mut eng = IncrementalAttention::new(IncrementalConfig {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: f,
+            scales: vec![1.0, 0.5, 0.25, 0.125],
+            kernel: KernelConfig::default(),
+            precision,
+        });
+        eng.append(&k, &k, &poses, &t);
+        let got = eng.resident_bytes();
+        assert_eq!(
+            got,
+            incremental_cache_bytes(Method::Se2Fourier, m, d, f, precision),
+            "{precision:?}: engine accounting must equal the memmodel"
+        );
+        got
+    };
+    let f32_bytes = bytes_at(CachePrecision::F32);
+    let f16_bytes = bytes_at(CachePrecision::F16);
+    let ratio = f16_bytes as f64 / f32_bytes as f64;
+    assert!(ratio <= 0.60, "f16/f32 resident ratio {ratio} > 60%");
+}
+
+fn setup() -> (SimConfig, Tokenizer) {
+    let sim = SimConfig::default();
+    let tok = Tokenizer::new(&ModelConfig::synthetic(), &sim);
+    (sim, tok)
+}
+
+fn slide(window: &mut Vec<Vec<AgentState>>, next: &[AgentState]) {
+    window.remove(0);
+    window.push(next.to_vec());
+}
+
+/// Satellite fix regression: the shared resident-bytes gauge equals the
+/// memmodel closed form for quantized sessions (true stored bytes, not
+/// the f32-equivalent).
+#[test]
+fn telemetry_gauge_prices_quantized_sessions_with_the_memmodel() {
+    let (sim, tok) = setup();
+    let s = ScenarioGenerator::new(sim.clone()).generate(61);
+    let h = sim.history_steps;
+    let window: Vec<Vec<AgentState>> = (0..h).map(|t| s.states[t].clone()).collect();
+    for precision in [CachePrecision::F16, CachePrecision::Bf16, CachePrecision::F32] {
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(
+            CacheConfig {
+                precision,
+                ..CacheConfig::default()
+            },
+            Arc::clone(&stats),
+        );
+        let key = SessionKey { scene: 61, t0: 7, sample: 0 };
+        pool.step(key, &tok, &s.map_elements, &window).unwrap();
+        let want = window_cache_bytes(sim.n_agents, h, tok.feat_dim, precision)
+            + map_tokens_bytes(s.map_elements.len(), tok.feat_dim);
+        assert_eq!(
+            stats.resident_bytes.get() as usize,
+            want,
+            "{precision:?}: gauge must equal memmodel session + map bytes"
+        );
+    }
+}
+
+/// Satellite: hit/miss/eviction counters are a pure function of the
+/// workload — identical at every storage precision.
+#[test]
+fn cache_counters_agree_across_precisions() {
+    let (sim, tok) = setup();
+    let s = ScenarioGenerator::new(sim.clone()).generate(71);
+    let h = sim.history_steps;
+    let run = |precision: CachePrecision| -> (u64, u64, u64) {
+        let stats = Arc::new(CacheStats::default());
+        let pool = KvCachePool::new(
+            CacheConfig {
+                precision,
+                max_sessions: 2, // force evictions
+                ..CacheConfig::default()
+            },
+            Arc::clone(&stats),
+        );
+        let mut window: Vec<Vec<AgentState>> =
+            (0..h).map(|t| s.states[t].clone()).collect();
+        for t in h..h + 3 {
+            for sample in 0..3u32 {
+                pool.step(
+                    SessionKey { scene: 71, t0: 7, sample },
+                    &tok,
+                    &s.map_elements,
+                    &window,
+                )
+                .unwrap();
+            }
+            slide(&mut window, &s.states[t]);
+        }
+        (stats.hits.get(), stats.misses.get(), stats.evictions.get())
+    };
+    let f32_counts = run(CachePrecision::F32);
+    let f16_counts = run(CachePrecision::F16);
+    let bf16_counts = run(CachePrecision::Bf16);
+    assert_eq!(f32_counts, f16_counts, "f16 counters diverged from f32");
+    assert_eq!(f32_counts, bf16_counts, "bf16 counters diverged from f32");
+    assert!(f32_counts.2 > 0, "workload must actually evict");
+}
+
+/// Satellite property test: under a tight byte budget a mixed f32/f16
+/// population evicts strictly in LRU order priced by true bytes, and
+/// every surviving session still round-trips step/emit correctly.
+#[test]
+fn mixed_precision_eviction_is_lru_by_true_bytes() {
+    let (sim, tok) = setup();
+    let s = ScenarioGenerator::new(sim.clone()).generate(83);
+    let h = sim.history_steps;
+    let window: Vec<Vec<AgentState>> = (0..h).map(|t| s.states[t].clone()).collect();
+
+    let f32_bytes = window_cache_bytes(sim.n_agents, h, tok.feat_dim, CachePrecision::F32);
+    let f16_bytes = window_cache_bytes(sim.n_agents, h, tok.feat_dim, CachePrecision::F16);
+    assert!(f16_bytes < f32_bytes);
+
+    // budget fits the last two f16 sessions plus one f32 — computed from
+    // the same byte model the pool enforces
+    let precisions = [
+        CachePrecision::F32, // s0
+        CachePrecision::F16, // s1
+        CachePrecision::F32, // s2
+        CachePrecision::F16, // s3
+        CachePrecision::F16, // s4
+    ];
+    let bytes_of = |p: CachePrecision| match p {
+        CachePrecision::F32 => f32_bytes,
+        _ => f16_bytes,
+    };
+    let budget = f32_bytes + 2 * f16_bytes;
+    let stats = Arc::new(CacheStats::default());
+    let pool = KvCachePool::new(
+        CacheConfig {
+            max_bytes: budget,
+            ..CacheConfig::default()
+        },
+        Arc::clone(&stats),
+    );
+    let key = |sample: u32| SessionKey { scene: 83, t0: 7, sample };
+    for (i, &p) in precisions.iter().enumerate() {
+        pool.step_with_precision(key(i as u32), p, &tok, &s.map_elements, &window)
+            .unwrap();
+    }
+
+    // simulate LRU-by-bytes over the insertion order: evict oldest until
+    // the total fits the budget
+    let mut survivors: Vec<usize> = (0..precisions.len()).collect();
+    let mut total: usize = precisions.iter().map(|&p| bytes_of(p)).sum();
+    while total > budget {
+        let evicted = survivors.remove(0);
+        total -= bytes_of(precisions[evicted]);
+    }
+    assert_eq!(
+        stats.evictions.get() as usize,
+        precisions.len() - survivors.len(),
+        "eviction count must match the byte-model simulation"
+    );
+    assert_eq!(pool.live_sessions(), survivors.len());
+    assert_eq!(
+        pool.session_bytes(),
+        total,
+        "pool session bytes must equal the survivors' true byte sum"
+    );
+
+    // every surviving session round-trips step/emit: stepping it is a
+    // HIT (proving which sessions survived — strict LRU order), and the
+    // emitted scene matches a full re-tokenization of the slid window
+    let mut next = window.clone();
+    slide(&mut next, &s.states[h]);
+    let want = tok.tokenize_window(&s.map_elements, &next, None);
+    for &i in &survivors {
+        let hits_before = stats.hits.get();
+        let got = pool
+            .step_with_precision(key(i as u32), precisions[i], &tok, &s.map_elements, &next)
+            .unwrap();
+        assert_eq!(
+            stats.hits.get(),
+            hits_before + 1,
+            "survivor s{i} must hit — LRU evicted the wrong session"
+        );
+        assert_eq!(got.pose, want.pose, "s{i}: poses exact at every precision");
+        assert_eq!(got.tq, want.tq);
+        if precisions[i] == CachePrecision::F32 {
+            assert_eq!(got.feat, want.feat, "s{i}: f32 emit is bit-identical");
+        } else {
+            for (a, b) in got.feat.iter().zip(want.feat.iter()) {
+                assert!((a - b).abs() < 5e-2, "s{i}: {a} vs {b}");
+            }
+        }
+    }
+    // and the evicted sessions are gone: stepping one is a miss
+    if survivors.len() < precisions.len() {
+        let gone = 0u32;
+        let misses_before = stats.misses.get();
+        pool.step_with_precision(
+            key(gone),
+            precisions[0],
+            &tok,
+            &s.map_elements,
+            &next,
+        )
+        .unwrap();
+        assert_eq!(stats.misses.get(), misses_before + 1, "evicted session must miss");
+    }
+}
