@@ -197,6 +197,96 @@ fn kernel_section(mode: BenchMode, rows: &mut Vec<Json>) -> Option<bool> {
     last_ok
 }
 
+/// Observability overhead on the hot kernel path: the same blocked call
+/// benched with the tracing/profiling gates off, then with a live tracer
+/// (thread ctx installed, Attend spans landing in a ring) plus profiling
+/// counters.  Returns the on/off mean ratio; the smoke gate caps it at
+/// 1.05x (DESIGN.md §15 overhead budget).  Each leg takes the better of
+/// two runs to damp scheduler noise on shared CI runners.
+fn overhead_section(mode: BenchMode, rows: &mut Vec<Json>) -> f64 {
+    use se2attn::trace::{ProfileGuard, TraceConfig, Tracer};
+    let n = *mode.pick(&[256], &[512], &[1024]).first().unwrap();
+    let scales = [1.0, 0.5, 0.25, 0.125];
+    let d = data(n);
+    let p = problem(Method::Se2Fourier, &d, &scales);
+    let prj = linear::project(&p);
+    let c = prj.c;
+    let mut out = vec![0.0f32; n * c];
+    let cfg = KernelConfig::fixed(KernelConfig::DEFAULT_BLOCK_M, KernelConfig::DEFAULT_LANES, 4);
+
+    println!("\n# Observability overhead: blocked kernel, tracing+profiling off vs on\n");
+    assert!(
+        !se2attn::trace::enabled(),
+        "tracing must be disabled before the off leg"
+    );
+    let off_a = bench_mode(mode, || {
+        flash_sdpa_blocked(
+            &prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, c, prj.eff_scale, &mut out, &cfg,
+        );
+        std::hint::black_box(&out);
+    });
+    let off_b = bench_mode(mode, || {
+        flash_sdpa_blocked(
+            &prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, c, prj.eff_scale, &mut out, &cfg,
+        );
+        std::hint::black_box(&out);
+    });
+    let off_ns = off_a.mean_ns.min(off_b.mean_ns);
+
+    let tracer = Tracer::new(
+        1,
+        TraceConfig {
+            enabled: true,
+            ring_spans: 4096,
+        },
+    );
+    let _profile = ProfileGuard::enable();
+    let ctx = se2attn::trace::install(tracer.shard_ring(0), tracer.epoch());
+    let on_a = bench_mode(mode, || {
+        flash_sdpa_blocked(
+            &prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, c, prj.eff_scale, &mut out, &cfg,
+        );
+        std::hint::black_box(&out);
+    });
+    let on_b = bench_mode(mode, || {
+        flash_sdpa_blocked(
+            &prj.qt, &prj.kt, &prj.vt, p.tq, p.tk, c, prj.eff_scale, &mut out, &cfg,
+        );
+        std::hint::black_box(&out);
+    });
+    let on_ns = on_a.mean_ns.min(on_b.mean_ns);
+    let (spans, dropped) = tracer.totals();
+    drop(ctx);
+    drop(tracer);
+    assert!(spans > 0, "the on leg must record Attend spans");
+
+    let ratio = on_ns / off_ns;
+    let mut table = Table::new(&["N=M", "c", "off ms", "on ms", "on/off", "spans"]);
+    table.row(vec![
+        n.to_string(),
+        c.to_string(),
+        format!("{:.3}", off_ns / 1e6),
+        format!("{:.3}", on_ns / 1e6),
+        format!("{ratio:.3}x"),
+        format!("{spans} (+{dropped} dropped)"),
+    ]);
+    table.print();
+    let row = Json::obj(vec![
+        ("bench", Json::Str("observability_overhead".into())),
+        ("n", Json::Num(n as f64)),
+        ("c", Json::Num(c as f64)),
+        ("off", off_a.to_json()),
+        ("on", on_a.to_json()),
+        ("off_ns", Json::Num(off_ns)),
+        ("on_ns", Json::Num(on_ns)),
+        ("ratio", Json::Num(ratio)),
+        ("spans", Json::Num(spans as f64)),
+    ]);
+    record_row("attention_throughput", row.clone());
+    rows.push(row);
+    ratio
+}
+
 /// AOT artifact timing (the production path) — unchanged from the
 /// original bench; skipped gracefully in the offline stub build.
 fn artifact_section(rows: &mut Vec<Json>) {
@@ -256,6 +346,7 @@ fn main() {
     let mut rows: Vec<Json> = Vec::new();
     algorithms_section(mode, &mut rows);
     let kernel_ok = kernel_section(mode, &mut rows);
+    let overhead = overhead_section(mode, &mut rows);
     if !mode.is_smoke() {
         artifact_section(&mut rows);
     }
@@ -268,6 +359,15 @@ fn main() {
         eprintln!(
             "PERF REGRESSION: blocked flash kernel slower than the scalar \
              oracle at the largest smoke size — see BENCH_attention.json"
+        );
+        std::process::exit(1);
+    }
+    // observability gate: enabled tracing+profiling must cost <= 5% on
+    // the kernel hot path (DESIGN.md §15 overhead budget)
+    if mode.is_smoke() && overhead > 1.05 {
+        eprintln!(
+            "PERF REGRESSION: observability overhead {overhead:.3}x > 1.05x \
+             on the blocked kernel — see BENCH_attention.json"
         );
         std::process::exit(1);
     }

@@ -69,6 +69,7 @@ fn run(workers: usize) -> (f64, f64) {
             },
             cache: CacheConfig::default(),
             kernel: se2attn::attention::kernel::KernelConfig::default(),
+            ..ServeConfig::default()
         },
         factory(),
     )

@@ -308,6 +308,19 @@ thread_local! {
     static SCRATCH: RefCell<RowScratch> = RefCell::new(RowScratch::default());
 }
 
+/// Per-chunk profiling accumulator: plain register counters, incremented
+/// unconditionally (the increments are free next to the row math) and
+/// flushed to the global [`crate::trace::kernel_profile`] atomics once per
+/// chunk *only* when profiling is enabled — the disabled path pays one
+/// branch per chunk, nothing per row.
+#[derive(Clone, Copy, Default)]
+struct RowProfile {
+    blocks_visited: u64,
+    blocks_skipped: u64,
+    k_rows_read: u64,
+    v_rows_read: u64,
+}
+
 /// Fixed-lane dot product: L parallel f32 partial sums (vectorizer
 /// fodder), combined left-to-right in f64, plus a scalar tail.  The
 /// reduction order depends only on `L` and the slice length — never on
@@ -366,6 +379,7 @@ fn attend_row<const L: usize>(
     blocks: &[KeyBlock],
     sc: &mut RowScratch,
     out_row: &mut [f32],
+    prof: &mut RowProfile,
 ) {
     // split the scratch into disjoint field borrows once, so a row
     // dequantized into `krow` can be read while `s` is being written
@@ -382,13 +396,16 @@ fn attend_row<const L: usize>(
     for b in blocks {
         if tqi < b.min_tk {
             // fully masked block: skipped before any k/v row is read
+            prof.blocks_skipped += 1;
             continue;
         }
+        prof.blocks_visited += 1;
         let fully_visible = tqi >= b.max_tk;
         // ---- scores (f32 lane math -> f64 block max) --------------------
         let mut bmax = f64::NEG_INFINITY;
         for (jj, j) in (b.start..b.end).enumerate() {
             s[jj] = if fully_visible || tqi >= tk[j] {
+                prof.k_rows_read += 1;
                 let kj = k.row(j, c, krow);
                 let sv = dot_lanes::<L>(qi, kj) * scale;
                 if sv > bmax {
@@ -413,6 +430,7 @@ fn attend_row<const L: usize>(
             }
             let p = (sv - m_new).exp();
             l_b += p;
+            prof.v_rows_read += 1;
             let vj = v.row(j, c, vrow);
             axpy_lanes::<L>(vacc, p as f32, vj);
         }
@@ -465,30 +483,56 @@ pub fn flash_sdpa_rows(
     let blocks = key_blocks(tk, cfg.block_m);
     let out_ptr = SendPtr::new(out.as_mut_ptr());
     let block_m = cfg.block_m.min(m.max(1));
+    // the span clock is only read when tracing is live (one branch off)
+    let attend_t0 = crate::trace::enabled().then(std::time::Instant::now);
 
     let threads = run_chunked(n, ROWS_PER_TASK, cfg.threads, &|lo, hi| {
         SCRATCH.with(|cell| {
             let mut sc = cell.borrow_mut();
             sc.ensure(block_m, c);
+            let mut prof = RowProfile::default();
             for i in lo..hi {
                 // disjoint per-row output slice — the only mutable state
                 let out_row = unsafe { out_ptr.slice_mut(i * c, c) };
                 let qi = &q[i * c..(i + 1) * c];
                 match cfg.lanes {
                     4 => attend_row::<4>(
-                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row, &mut prof,
                     ),
                     16 => attend_row::<16>(
-                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row, &mut prof,
                     ),
                     _ => attend_row::<8>(
-                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row,
+                        qi, &k, &v, tq[i], tk, c, scale, &blocks, &mut sc, out_row, &mut prof,
                     ),
                 }
             }
+            // one branch per chunk on the disabled path
+            if crate::trace::profiling() {
+                use std::sync::atomic::Ordering::Relaxed;
+                let p = crate::trace::kernel_profile();
+                p.chunks.fetch_add(1, Relaxed);
+                p.rows.fetch_add((hi - lo) as u64, Relaxed);
+                p.key_blocks_visited.fetch_add(prof.blocks_visited, Relaxed);
+                p.key_blocks_skipped.fetch_add(prof.blocks_skipped, Relaxed);
+                let dequant = prof.k_rows_read * k.is_quantized() as u64
+                    + prof.v_rows_read * v.is_quantized() as u64;
+                p.rows_dequantized.fetch_add(dequant, Relaxed);
+            }
         });
     });
-    threads * cfg.scratch_bytes_per_thread_rows(c, m, quantized)
+    let scratch = threads * cfg.scratch_bytes_per_thread_rows(c, m, quantized);
+    if crate::trace::profiling() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = crate::trace::kernel_profile();
+        p.calls.fetch_add(1, Relaxed);
+        p.participants.fetch_add(threads as u64, Relaxed);
+        p.scratch_bytes.fetch_add(scratch as u64, Relaxed);
+    }
+    if let Some(t0) = attend_t0 {
+        crate::trace::record_since(crate::trace::Stage::Attend, t0, n as u64);
+    }
+    scratch
 }
 
 /// Blocked, multithreaded flash SDPA over plain f32 slices — the
@@ -680,6 +724,57 @@ mod tests {
             cfg.scratch_bytes_per_thread_rows(100, 16, false),
             cfg.scratch_bytes_per_thread(100, 16)
         );
+    }
+
+    #[test]
+    fn profiling_counters_accumulate_when_enabled() {
+        use crate::trace::{KernelProfile, ProfileGuard};
+        let mut rng = Rng::new(77);
+        let (n, m, c) = (16usize, 32usize, 8usize);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 4);
+        let before = KernelProfile::snapshot();
+        let _g = ProfileGuard::enable();
+        run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(8, 8, 2));
+        let d = KernelProfile::snapshot().delta(&before);
+        assert!(d.calls >= 1, "calls: {}", d.calls);
+        assert!(d.rows >= n as u64, "rows: {}", d.rows);
+        assert!(d.chunks >= 1);
+        assert!(d.participants >= 1);
+        assert!(d.key_blocks_visited + d.key_blocks_skipped >= 1);
+        assert!(d.scratch_bytes > 0);
+        // f32 sources never dequantize (no quantized-row reads recorded
+        // by THIS call; concurrent tests can only add, not subtract)
+    }
+
+    #[test]
+    fn quantized_profiling_counts_dequantized_rows() {
+        use crate::attention::quant::FeatureRows;
+        use crate::config::CachePrecision;
+        use crate::trace::{KernelProfile, ProfileGuard};
+        let mut rng = Rng::new(78);
+        let (n, m, c) = (8usize, 16usize, 8usize);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 4);
+        let mut kq = FeatureRows::new(CachePrecision::F16, c);
+        kq.push_rows(&k);
+        let mut vq = FeatureRows::new(CachePrecision::F16, c);
+        vq.push_rows(&v);
+        let before = KernelProfile::snapshot();
+        let _g = ProfileGuard::enable();
+        let mut out = vec![0.0f32; n * c];
+        let scale = 1.0 / (c as f64).sqrt();
+        flash_sdpa_rows(
+            &q,
+            kq.as_kv(),
+            vq.as_kv(),
+            &tq,
+            &tk,
+            c,
+            scale,
+            &mut out,
+            &KernelConfig::fixed(8, 8, 1),
+        );
+        let d = KernelProfile::snapshot().delta(&before);
+        assert!(d.rows_dequantized >= 1, "dequant rows: {}", d.rows_dequantized);
     }
 
     #[test]

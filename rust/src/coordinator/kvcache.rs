@@ -385,6 +385,15 @@ impl MapRegistry {
                     inner.bytes = inner.bytes.saturating_sub(gone.resident_bytes());
                     self.stats.resident_bytes.sub(gone.resident_bytes() as u64);
                     self.stats.evictions.inc();
+                    if crate::trace::profiling() {
+                        crate::trace::kernel_profile()
+                            .cache_map_evictions
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        crate::trace::instant(
+                            crate::trace::Stage::CacheEvict,
+                            gone.resident_bytes() as u64,
+                        );
+                    }
                 }
             } else {
                 break;
@@ -614,6 +623,12 @@ impl KvCachePool {
                 inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
                 self.stats.resident_bytes.sub(gone.bytes as u64);
                 self.stats.evictions.inc();
+                if crate::trace::profiling() {
+                    crate::trace::kernel_profile()
+                        .cache_session_evictions
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    crate::trace::instant(crate::trace::Stage::CacheEvict, gone.bytes as u64);
+                }
             }
         }
     }

@@ -20,7 +20,8 @@
 //!   boundary.
 //! * [`trainer`] — training orchestrator over the dataset pipeline.
 //! * [`server`] — sharded worker-pool serving front end wiring the above
-//!   together (DESIGN.md §12).
+//!   together (DESIGN.md §12), with optional span tracing and kernel
+//!   profiling via [`crate::trace`] (DESIGN.md §15).
 //! * [`telemetry`] — lock-free counters/histograms for the hot path,
 //!   including per-shard breakdowns.
 
@@ -35,7 +36,7 @@ pub mod trainer;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kvcache::{CacheConfig, KvCachePool, MapRegistry, SessionKey, WindowCache};
-pub use model::{ActionDecoder, ModelHandle, SyntheticDecoder};
+pub use model::{ActionDecoder, ModelHandle, NativeSdpaDecoder, SyntheticDecoder};
 pub use rollout::{RolloutEngine, RolloutRequest, RolloutResult};
 pub use router::{shard_of, Router, ShardRouter};
 pub use server::{Backend, BackendFactory, ServeConfig, Server};

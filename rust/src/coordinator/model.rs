@@ -116,6 +116,92 @@ impl ActionDecoder for SyntheticDecoder {
     }
 }
 
+/// Artifact-free decoder that drives the **native blocked flash kernel**
+/// on every decode call: each scene slot self-attends its own feature
+/// rows (q = k = v, visibility from the batch's `tq` timestamps) through
+/// [`crate::attention::kernel::flash_sdpa_blocked`], and the action per
+/// token is a stateless hash of the attended row.  This is what
+/// `simulate --synthetic` and the observability CI smoke serve with, so a
+/// traced run exercises the Attend stage (spans + profiling counters)
+/// without compiled XLA artifacts.
+///
+/// The [`SyntheticDecoder`] properties carry over: attention never
+/// crosses scene-slot boundaries, so actions are batch-packing
+/// independent, and the kernel is bit-stable across thread counts, so
+/// results are deterministic for a fixed kernel shape.
+pub struct NativeSdpaDecoder {
+    pub n_actions: usize,
+    pub kernel: crate::attention::kernel::KernelConfig,
+}
+
+impl NativeSdpaDecoder {
+    pub fn new(n_actions: usize, kernel: crate::attention::kernel::KernelConfig) -> Self {
+        NativeSdpaDecoder { n_actions, kernel }
+    }
+}
+
+impl ActionDecoder for NativeSdpaDecoder {
+    fn decode(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        seed: i32,
+        _temperature: f32,
+    ) -> Result<DecodeOutput> {
+        use crate::attention::kernel::flash_sdpa_blocked;
+        use crate::prng::SplitMix64;
+        let bs = b.batch_size;
+        if b.feat.len() != bs * n_tokens * feat_dim {
+            bail!(
+                "native decode: batch carries {} features, expected {}",
+                b.feat.len(),
+                bs * n_tokens * feat_dim
+            );
+        }
+        if b.tq.len() != bs * n_tokens {
+            bail!(
+                "native decode: batch carries {} timestamps, expected {}",
+                b.tq.len(),
+                bs * n_tokens
+            );
+        }
+        let scale = 1.0 / (feat_dim.max(1) as f64).sqrt();
+        let mut attended = vec![0.0f32; n_tokens * feat_dim];
+        let mut actions = Vec::with_capacity(bs * n_tokens);
+        for s in 0..bs {
+            let rows = &b.feat[s * n_tokens * feat_dim..(s + 1) * n_tokens * feat_dim];
+            let tq = &b.tq[s * n_tokens..(s + 1) * n_tokens];
+            flash_sdpa_blocked(
+                rows,
+                rows,
+                rows,
+                tq,
+                tq,
+                feat_dim,
+                scale,
+                &mut attended,
+                &self.kernel,
+            );
+            for t in 0..n_tokens {
+                let row = &attended[t * feat_dim..(t + 1) * feat_dim];
+                let mut h = (seed as i64 as u64) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                for &f in row {
+                    h = SplitMix64::new(h ^ u64::from(f.to_bits())).next_u64();
+                }
+                actions.push((h % self.n_actions.max(1) as u64) as i32);
+            }
+        }
+        // diagnostics (logp/logits) are not produced on this path; the
+        // rollout scheduler consumes actions only
+        Ok(DecodeOutput {
+            actions,
+            logp: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+}
+
 /// Owns one attention variant's parameters + Adam state and drives its
 /// AOT artifacts (`fwd_*` / `train_step_*` / `decode_*`) through the
 /// PJRT [`Engine`].  The production [`ActionDecoder`]; see
@@ -368,6 +454,49 @@ mod tests {
     #[test]
     fn synthetic_decode_rejects_shape_drift() {
         let d = SyntheticDecoder::new(8);
+        let b = toy_batch(1, 4, 3, 0.0);
+        assert!(d.decode(&b, 5, 3, 0, 1.0).is_err());
+    }
+
+    #[test]
+    fn native_sdpa_decode_is_deterministic_and_in_range() {
+        use crate::attention::kernel::KernelConfig;
+        let d = NativeSdpaDecoder::new(64, KernelConfig::fixed(8, 8, 1));
+        let b = toy_batch(2, 8, 4, 0.5);
+        let a1 = d.decode(&b, 8, 4, 7, 1.0).unwrap();
+        let a2 = d.decode(&b, 8, 4, 7, 0.1).unwrap();
+        assert_eq!(a1.actions, a2.actions, "temperature-independent");
+        assert_eq!(a1.actions.len(), 16);
+        assert!(a1.actions.iter().all(|&a| (0..64).contains(&a)));
+        let a3 = d.decode(&b, 8, 4, 8, 1.0).unwrap();
+        assert_ne!(a1.actions, a3.actions, "seed perturbs the sample");
+        // kernel bit-stability across threads => identical actions
+        let d4 = NativeSdpaDecoder::new(64, KernelConfig::fixed(8, 8, 4));
+        let a4 = d4.decode(&b, 8, 4, 7, 1.0).unwrap();
+        assert_eq!(a1.actions, a4.actions, "thread count must not perturb");
+    }
+
+    #[test]
+    fn native_sdpa_decode_is_batch_packing_independent() {
+        use crate::attention::kernel::KernelConfig;
+        let d = NativeSdpaDecoder::new(32, KernelConfig::fixed(4, 8, 2));
+        let (n_tokens, fd) = (4, 3);
+        let alone = toy_batch(1, n_tokens, fd, 1.5);
+        let mut packed = toy_batch(2, n_tokens, fd, 9.0);
+        packed.feat[n_tokens * fd..].copy_from_slice(&alone.feat);
+        let a = d.decode(&alone, n_tokens, fd, 3, 1.0).unwrap();
+        let p = d.decode(&packed, n_tokens, fd, 3, 1.0).unwrap();
+        assert_eq!(
+            a.actions,
+            p.actions[n_tokens..],
+            "self-attention never crosses scene-slot boundaries"
+        );
+    }
+
+    #[test]
+    fn native_sdpa_decode_rejects_shape_drift() {
+        use crate::attention::kernel::KernelConfig;
+        let d = NativeSdpaDecoder::new(8, KernelConfig::fixed(4, 8, 1));
         let b = toy_batch(1, 4, 3, 0.0);
         assert!(d.decode(&b, 5, 3, 0, 1.0).is_err());
     }

@@ -137,10 +137,12 @@ impl RolloutEngine {
             let chunk = &mut samples[chunk_start..(chunk_start + b).min(total)];
             // tokenize only the frontier of each sample; the pool supplies
             // cached map rows and the reusable older window steps
+            let tok_t0 = std::time::Instant::now();
             let scenes: Vec<TokenizedScene> = chunk
                 .iter()
                 .map(|s| pool.step(s.key, &self.tokenizer, &s.map, &s.window))
                 .collect::<Result<_>>()?;
+            crate::trace::record_since(crate::trace::Stage::Tokenize, tok_t0, chunk.len() as u64);
             let mut batch = Batch {
                 feat: Vec::with_capacity(b * n_tokens * feat_dim),
                 pose: Vec::with_capacity(b * n_tokens * 3),
@@ -175,6 +177,7 @@ impl RolloutEngine {
                 temperature,
             )?;
             decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+            crate::trace::record_since(crate::trace::Stage::Decode, t0, chunk.len() as u64);
             calls += 1;
 
             // apply sampled frontier actions per (real) sample

@@ -37,6 +37,7 @@ use super::model::{ActionDecoder, ModelHandle};
 use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
 use super::router::{shard_of, Router, ShardRouter};
 use super::telemetry::{ServerStats, ShardStats};
+use crate::trace::{self, ProfileConfig, ProfileGuard, Stage, TraceConfig, Tracer};
 
 /// Per-worker inference backend: a replica router over boxed decoders,
 /// built on the worker's own thread by a [`BackendFactory`].
@@ -78,6 +79,11 @@ pub struct ServeConfig {
     /// pool, and each attention call's transient state stays O(c) per
     /// participating worker.
     pub kernel: crate::attention::kernel::KernelConfig,
+    /// Request tracing (DESIGN.md §15).  Off by default: no rings are
+    /// allocated and every span site costs one branch.
+    pub trace: TraceConfig,
+    /// Kernel/cache profiling counters (DESIGN.md §15).  Off by default.
+    pub profile: ProfileConfig,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +93,8 @@ impl Default for ServeConfig {
             batcher: BatcherConfig::default(),
             cache: CacheConfig::default(),
             kernel: crate::attention::kernel::KernelConfig::default(),
+            trace: TraceConfig::default(),
+            profile: ProfileConfig::default(),
         }
     }
 }
@@ -107,6 +115,8 @@ struct Envelope {
     method: Method,
     request: RolloutRequest,
     submitted_at: Instant,
+    /// Tracing id minted at submit (0 when tracing is off).
+    trace_id: u64,
     respond: mpsc::Sender<Result<RolloutResult>>,
 }
 
@@ -126,6 +136,10 @@ pub struct Server {
     shards: Vec<Shard>,
     router: ShardRouter,
     pub stats: Arc<ServerStats>,
+    /// Span recorder, present when `ServeConfig::trace.enabled`.
+    tracer: Option<Arc<Tracer>>,
+    /// Holds the global profiling gate up while the server lives.
+    _profile: Option<ProfileGuard>,
 }
 
 impl Server {
@@ -186,6 +200,8 @@ impl Server {
         cfg.model.cache_precision = serve.cache.precision;
         let workers = serve.workers.max(1);
         let stats = Arc::new(ServerStats::with_shards(workers));
+        let tracer = serve.trace.enabled.then(|| Tracer::new(workers, serve.trace));
+        let profile = serve.profile.enabled.then(ProfileGuard::enable);
         let maps = Arc::new(MapRegistry::new(
             serve.cache.max_map_scenes,
             Arc::clone(&stats.cache),
@@ -206,6 +222,7 @@ impl Server {
                 stats: Arc::clone(&stats),
                 shard: Arc::clone(&stats.shards[shard_id]),
                 factory: Arc::clone(&factory),
+                tracer: tracer.clone(),
             };
             let thread = std::thread::Builder::new()
                 .name(format!("se2attn-shard-{shard_id}"))
@@ -222,6 +239,8 @@ impl Server {
             shards,
             router: ShardRouter::new(workers),
             stats,
+            tracer,
+            _profile: profile,
         };
         // wait for every shard's model load/compile before accepting
         // traffic; on any failure the early return drops `server`, whose
@@ -237,6 +256,13 @@ impl Server {
     /// Worker shard count.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The span recorder, when this server was started with
+    /// `ServeConfig::trace.enabled` (export via
+    /// [`Tracer::write_chrome_trace`] / [`Tracer::to_chrome_trace`]).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
     }
 
     /// The shard that session-affinity routing pins `scenario` to (pure
@@ -277,10 +303,16 @@ impl Server {
         request: RolloutRequest,
     ) -> mpsc::Receiver<Result<RolloutResult>> {
         let (rtx, rrx) = mpsc::channel();
+        let submitted_at = Instant::now();
+        // Trace-id minting is the only atomic the submit path touches,
+        // and only when tracing is on — the ShardRouter's "no atomics on
+        // the submit path" contract still holds for untraced servers.
+        let trace_id = self.tracer.as_ref().map_or(0, |t| t.mint());
         let env = Envelope {
             method,
             request,
-            submitted_at: Instant::now(),
+            submitted_at,
+            trace_id,
             respond: rtx,
         };
         // inflight goes up BEFORE the send: the worker decrements when it
@@ -293,6 +325,10 @@ impl Server {
                 // count the request only once the shard has accepted it
                 self.stats.requests_in.inc();
                 sh.requests.inc();
+                if let Some(t) = &self.tracer {
+                    // front-end ring (track 0); arg = target shard
+                    t.record_frontend(Stage::Route, submitted_at, trace_id, shard as u64);
+                }
             }
             Err(mpsc::SendError(msg)) => {
                 // the shard has exited (shutdown): answer explicitly
@@ -355,9 +391,17 @@ struct ShardCtx {
     /// This shard's breakdown slot.
     shard: Arc<ShardStats>,
     factory: BackendFactory,
+    /// Present when tracing is on; the worker installs its ring as the
+    /// thread-local span sink at startup.
+    tracer: Option<Arc<Tracer>>,
 }
 
 fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Sender<Result<()>>) {
+    // bind this thread to its span ring for the worker's whole lifetime
+    let _trace_ctx = ctx
+        .tracer
+        .as_ref()
+        .map(|t| trace::install(t.shard_ring(ctx.id), t.epoch()));
     // build the backend on THIS thread (PJRT clients are thread-local)
     let mut backend = match (ctx.factory)(ctx.id) {
         Ok(b) => {
@@ -456,6 +500,8 @@ fn run_batch(
     ctx: &ShardCtx,
 ) {
     let stats = &*ctx.stats;
+    let batch_t0 = Instant::now();
+    let batch_size = ready.items.len();
     stats.batches.inc();
     ctx.shard.batches.inc();
     stats.padded_slots.add(ready.padding as u64);
@@ -475,6 +521,11 @@ fn run_batch(
         return;
     };
     for env in ready.items {
+        // queue residency: submit time -> this batch starting to run
+        trace::record_between(Stage::Enqueue, env.submitted_at, batch_t0, env.trace_id, 0);
+        // spans recorded below (tokenize/decode/attend, in the rollout
+        // and kernel layers) attribute to this request
+        trace::set_trace_id(env.trace_id);
         let t0 = Instant::now();
         let result = rollout.rollout_with_cache(model.as_ref(), &env.request, kv_pool);
         stats.decode_latency.record(t0.elapsed());
@@ -496,6 +547,10 @@ fn run_batch(
         }
         stats.e2e_latency.record(env.submitted_at.elapsed());
         ctx.shard.inflight.sub(1);
+        let respond_t0 = Instant::now();
         let _ = env.respond.send(result);
+        trace::record_since(Stage::Respond, respond_t0, 0);
     }
+    trace::set_trace_id(0);
+    trace::record_since(Stage::Batch, batch_t0, batch_size as u64);
 }

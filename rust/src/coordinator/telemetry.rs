@@ -20,6 +20,26 @@ impl Counter {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Saturating add: sticks at `u64::MAX` instead of wrapping.  Used for
+    /// accumulators fed by unbounded external values (e.g. minADE sums),
+    /// where a single pathological sample must not reset the counter.
+    pub fn saturating_add(&self, n: u64) {
+        let mut cur = self.v.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(n);
+            if next == cur {
+                return;
+            }
+            match self
+                .v
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     pub fn get(&self) -> u64 {
         self.v.load(Ordering::Relaxed)
     }
@@ -146,7 +166,10 @@ impl FamilyTelemetry {
         self.requests[i].inc();
         for &a in min_ade {
             if a.is_finite() && a >= 0.0 {
-                self.ade_um[i].add((a * 1e6) as u64);
+                // The f64→u64 cast saturates at u64::MAX for pathological
+                // minADE values; the accumulator must saturate too, or one
+                // such sample wraps the sum and corrupts every later mean.
+                self.ade_um[i].saturating_add((a * 1e6) as u64);
                 self.ade_n[i].inc();
             }
         }
@@ -156,6 +179,21 @@ impl FamilyTelemetry {
 
     pub fn requests(&self, family: FamilyId) -> u64 {
         self.requests[family.index()].get()
+    }
+
+    /// Raw accumulated minADE in micrometers (saturates at `u64::MAX`).
+    pub fn ade_micrometers(&self, family: FamilyId) -> u64 {
+        self.ade_um[family.index()].get()
+    }
+
+    /// Samples folded into the minADE accumulator.
+    pub fn ade_samples(&self, family: FamilyId) -> u64 {
+        self.ade_n[family.index()].get()
+    }
+
+    /// Joint trajectory samples served for `family`.
+    pub fn samples(&self, family: FamilyId) -> u64 {
+        self.samples[family.index()].get()
     }
 
     pub fn collisions(&self, family: FamilyId) -> u64 {
@@ -207,12 +245,18 @@ impl FamilyTelemetry {
     }
 }
 
-/// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds.
+/// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds,
+/// plus exact observed min/max atomics so the extreme percentiles report
+/// real values rather than power-of-two bucket bounds.
 #[derive(Debug)]
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
     sum_us: AtomicU64,
     count: AtomicU64,
+    /// Exact smallest recorded value (`u64::MAX` until first record).
+    min_us: AtomicU64,
+    /// Exact largest recorded value.
+    max_us: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
@@ -221,6 +265,8 @@ impl Default for LatencyHistogram {
             buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
             sum_us: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
         }
     }
 }
@@ -230,6 +276,8 @@ impl LatencyHistogram {
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -241,29 +289,67 @@ impl LatencyHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Exact smallest recorded value (0 before anything was recorded).
+    pub fn min_us(&self) -> u64 {
+        let v = self.min_us.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            0
+        } else {
+            v
+        }
+    }
+
+    /// Exact largest recorded value (0 before anything was recorded).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-bucket counts (bucket i covers
+    /// `[2^i, 2^(i+1))` µs), for exporters.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+
     pub fn mean_us(&self) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
-        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.sum_us() as f64 / n as f64
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound).
+    /// Approximate percentile.  Interior percentiles use the bucket upper
+    /// bound clamped to the exact observed maximum (a power-of-two bound
+    /// can overshoot the true value by ~2x); p ≤ 0 returns the exact
+    /// observed minimum and p ≥ 100 the exact observed maximum.
     pub fn percentile_us(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
+        }
+        if p <= 0.0 {
+            return self.min_us();
+        }
+        let max = self.max_us();
+        if p >= 100.0 {
+            return max;
         }
         let target = (p / 100.0 * total as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b.load(Ordering::Relaxed);
             if acc >= target {
-                return 1u64 << (i + 1);
+                return (1u64 << (i + 1)).min(max);
             }
         }
-        u64::MAX
+        max
     }
 }
 
@@ -350,7 +436,8 @@ impl ServerStats {
     pub fn summary(&self) -> String {
         format!(
             "in={} done={} failed={} batches={} pad={} rej={} \
-             e2e_mean={:.1}ms e2e_p95<={:.1}ms decode_mean={:.1}ms {} {}{}",
+             e2e_mean={:.1}ms e2e_p95={:.1}ms decode_mean={:.1}ms \
+             decode_p95={:.1}ms decode_p99={:.1}ms {} {}{}",
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_failed.get(),
@@ -360,6 +447,8 @@ impl ServerStats {
             self.e2e_latency.mean_us() / 1e3,
             self.e2e_latency.percentile_us(95.0) as f64 / 1e3,
             self.decode_latency.mean_us() / 1e3,
+            self.decode_latency.percentile_us(95.0) as f64 / 1e3,
+            self.decode_latency.percentile_us(99.0) as f64 / 1e3,
             self.cache.summary(),
             self.families.summary(),
             self.shard_summary(),
@@ -469,5 +558,58 @@ mod tests {
         h.record_us(1000);
         // p100 upper bound must be >= the recorded value
         assert!(h.percentile_us(100.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_extremes_report_observed_values() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.min_us(), 0);
+        assert_eq!(h.max_us(), 0);
+        h.record_us(700);
+        h.record_us(900);
+        h.record_us(1000);
+        // 1000 lands in bucket [512, 1024): the old upper-bound answer was
+        // 1024 for p100 (and 2048 for a 1025 µs sample — ~2x overshoot).
+        assert_eq!(h.min_us(), 700);
+        assert_eq!(h.max_us(), 1000);
+        assert_eq!(h.percentile_us(0.0), 700);
+        assert_eq!(h.percentile_us(100.0), 1000);
+        // interior percentiles are clamped to the observed max
+        assert!(h.percentile_us(99.0) <= 1000);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+    }
+
+    #[test]
+    fn histogram_interior_percentile_clamps_to_max() {
+        let h = LatencyHistogram::default();
+        h.record_us(1025); // bucket [1024, 2048) — upper bound 2048
+        assert_eq!(h.percentile_us(95.0), 1025);
+        assert_eq!(h.percentile_us(100.0), 1025);
+        assert_eq!(h.percentile_us(0.0), 1025);
+    }
+
+    #[test]
+    fn family_ade_accumulation_saturates_on_pathological_values() {
+        let t = FamilyTelemetry::default();
+        // f64::MAX * 1e6 saturates to u64::MAX at the cast; a second such
+        // sample must stick there rather than wrap the accumulator.
+        t.record(FamilyId::Roundabout, &[f64::MAX], 0, 1);
+        assert_eq!(t.ade_micrometers(FamilyId::Roundabout), u64::MAX);
+        t.record(FamilyId::Roundabout, &[f64::MAX], 0, 1);
+        assert_eq!(t.ade_micrometers(FamilyId::Roundabout), u64::MAX);
+        assert_eq!(t.ade_samples(FamilyId::Roundabout), 2);
+        assert!(t.mean_min_ade_m(FamilyId::Roundabout).is_finite());
+    }
+
+    #[test]
+    fn summary_line_reports_decode_percentiles() {
+        let stats = ServerStats::default();
+        stats.e2e_latency.record_us(2000);
+        stats.decode_latency.record_us(1500);
+        let s = stats.summary();
+        assert!(s.contains("e2e_p95="), "{s}");
+        assert!(!s.contains("p95<="), "{s}");
+        assert!(s.contains("decode_p95=1.5ms"), "{s}");
+        assert!(s.contains("decode_p99=1.5ms"), "{s}");
     }
 }

@@ -19,7 +19,10 @@
 //!   oracle), and the incremental decode engine (SE(2)-anchored KV
 //!   feature cache + per-session tokenization cache, storable at a
 //!   quantized f16/bf16 tier with dequant-on-attend —
-//!   `attention::quant`, DESIGN.md §14) for streaming rollout.
+//!   `attention::quant`, DESIGN.md §14) for streaming rollout, plus the
+//!   observability layer (`trace` span rings + Chrome trace export,
+//!   `metrics_export` Prometheus/JSON snapshots, kernel profiling —
+//!   DESIGN.md §15).
 //!
 //! Python never runs on the request path: artifacts are compiled once by
 //! `make artifacts` and loaded via the PJRT C API (`xla` crate, behind the
@@ -46,8 +49,10 @@ pub mod geometry;
 pub mod jsonio;
 pub mod linalg;
 pub mod metrics;
+pub mod metrics_export;
 pub mod prng;
 pub mod proplite;
 pub mod runtime;
 pub mod sim;
 pub mod tokenizer;
+pub mod trace;

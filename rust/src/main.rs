@@ -6,6 +6,9 @@
 //!   train      train one attention variant, log the loss curve
 //!   render     ASCII-render any scenario family (debug)
 //!   simulate   batched rollout serving with per-family stats report
+//!              (--trace-out / --metrics-out / --profile / --synthetic)
+//!   stats      render a metrics snapshot as Prometheus text; validate
+//!              trace/metrics exports (CI observability smoke)
 //!   approx     SE(2) Fourier approximation error probe (Fig. 3 pointwise)
 //!   bench-report  render the README Benchmarks section from BENCH_*.json
 
@@ -67,7 +70,39 @@ fn app() -> App {
                   (f32|f16|bf16): f16/bf16 roughly halve resident cache \
                   bytes per session — about twice the sessions per byte \
                   budget — at a bounded feature rounding; poses and \
-                  re-anchoring stay exact"))
+                  re-anchoring stay exact")
+            .opt("trace-out", "",
+                 "write a Chrome trace_event JSON timeline of every \
+                  request's route/enqueue/batch/tokenize/decode/attend/\
+                  respond spans here (enables span tracing; open in \
+                  chrome://tracing or Perfetto)")
+            .opt("metrics-out", "",
+                 "write a JSON metrics snapshot here (render/validate it \
+                  with `stats`)")
+            .opt("trace-spans", "16384",
+                 "span-ring slots per shard when tracing (32 B each; the \
+                  ring overwrites oldest spans when full)")
+            .flag("profile",
+                  "enable kernel/cache profiling counters (block skips, \
+                   dequantized rows, scratch bytes, evictions) — \
+                   reported at exit and in the metrics snapshot")
+            .flag("synthetic",
+                  "serve the native-kernel synthetic decoder instead of \
+                   PJRT artifacts (no artifact directory needed; used by \
+                   the CI observability smoke)"))
+        .command(Command::new("stats",
+                              "render a metrics snapshot as Prometheus text")
+            .opt("in", "metrics.json",
+                 "metrics snapshot JSON written by `simulate --metrics-out`")
+            .opt("prev", "",
+                 "earlier snapshot: report the interval delta (counters \
+                  and histograms subtract; gauges keep current values)")
+            .opt("trace", "",
+                 "also validate this Chrome trace JSON: it must parse and \
+                  contain spans for every pipeline stage")
+            .flag("check",
+                  "validate the Prometheus exposition format and report \
+                   the sample count on stderr"))
         .command(Command::new("approx", "Fourier approximation error probe")
             .opt("radius", "2.0", "key position radius")
             .opt("basis", "12", "basis size F")
@@ -102,6 +137,7 @@ fn dispatch(m: &Matches) -> Result<()> {
         "train" => cmd_train(m),
         "render" => cmd_render(m),
         "simulate" => cmd_simulate(m),
+        "stats" => cmd_stats(m),
         "approx" => cmd_approx(m),
         "bench-report" => cmd_bench_report(m),
         other => anyhow::bail!("unhandled command {other}"),
@@ -273,7 +309,18 @@ fn cmd_render(m: &Matches) -> Result<()> {
 }
 
 fn cmd_simulate(m: &Matches) -> Result<()> {
-    let cfg = SystemConfig::load(m.get("artifacts"))?;
+    let synthetic = m.get_flag("synthetic");
+    let cfg = if synthetic {
+        // artifact-free: the native-kernel decoder needs no PJRT programs
+        SystemConfig {
+            artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+            model: se2attn::config::ModelConfig::synthetic(),
+            sim: se2attn::config::SimConfig::default(),
+            threads: m.get_usize("workers").max(1),
+        }
+    } else {
+        SystemConfig::load(m.get("artifacts"))?
+    };
     let method = Method::parse(m.get("method"))?;
     let scenes = m.get_usize("scenes");
     let samples = m.get_usize("samples");
@@ -286,7 +333,30 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         se2attn::attention::kernel::KernelConfig::with_threads(m.get_usize("kernel-threads"));
     serve.cache.precision =
         se2attn::config::CachePrecision::parse(m.get("cache-precision"))?;
-    let server = Server::start(cfg.clone(), vec![method], seed as i32, serve)?;
+    serve.trace.enabled = m.get_opt("trace-out").is_some();
+    serve.trace.ring_spans = m.get_usize("trace-spans").max(1);
+    serve.profile.enabled = m.get_flag("profile");
+    let profile_before = serve
+        .profile
+        .enabled
+        .then(se2attn::trace::KernelProfile::snapshot);
+    let server = if synthetic {
+        let n_actions = cfg.model.n_actions;
+        let kernel = serve.kernel;
+        let factory: se2attn::coordinator::BackendFactory =
+            Arc::new(move |_shard: usize| -> anyhow::Result<se2attn::coordinator::Backend> {
+                let mut backend: se2attn::coordinator::Backend =
+                    se2attn::coordinator::Router::new();
+                backend.deploy(
+                    method,
+                    Box::new(se2attn::coordinator::NativeSdpaDecoder::new(n_actions, kernel)),
+                );
+                Ok(backend)
+            });
+        Server::start_with_backend(cfg.clone(), vec![method], serve, factory)?
+    } else {
+        Server::start(cfg.clone(), vec![method], seed as i32, serve)?
+    };
     println!(
         "serving on {} worker shard(s), session-affinity routing by scene id, \
          cache precision {}",
@@ -328,6 +398,86 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         println!("  {line}");
     }
     println!("server stats: {}", server.stats.summary());
+
+    // exports: join the workers first so every in-flight span and counter
+    // update lands before we snapshot the rings
+    let tracer = server.tracer().cloned();
+    let stats = Arc::clone(&server.stats);
+    drop(server);
+    if let Some(before) = profile_before {
+        let prof = se2attn::trace::KernelProfile::snapshot().delta(&before);
+        println!("kernel profile (this run):");
+        for (name, value) in prof.rows() {
+            println!("  {name:<28} {value}");
+        }
+    }
+    if let Some(path) = m.get_opt("trace-out") {
+        let t = tracer.as_ref().expect("tracing was enabled by --trace-out");
+        t.write_chrome_trace(std::path::Path::new(path))
+            .with_context(|| format!("writing trace to {path}"))?;
+        let (recorded, dropped) = t.totals();
+        println!("trace written to {path} ({recorded} spans, {dropped} dropped)");
+    }
+    if let Some(path) = m.get_opt("metrics-out") {
+        let snap = se2attn::metrics_export::MetricsSnapshot::collect(&stats, tracer.as_deref());
+        std::fs::write(path, snap.to_json().to_string())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        println!(
+            "metrics snapshot written to {path} ({} scalars, {} histograms)",
+            snap.scalars.len(),
+            snap.histograms.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(m: &Matches) -> Result<()> {
+    use se2attn::metrics_export::{validate_prometheus, MetricsSnapshot};
+    let path = m.get("in");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = se2attn::jsonio::Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let mut snap = MetricsSnapshot::from_json(&doc)?;
+    if let Some(prev) = m.get_opt("prev") {
+        let ptext = std::fs::read_to_string(prev).with_context(|| format!("reading {prev}"))?;
+        let pdoc =
+            se2attn::jsonio::Json::parse(&ptext).with_context(|| format!("parsing {prev}"))?;
+        snap = snap.delta(&MetricsSnapshot::from_json(&pdoc)?);
+    }
+    let exposition = snap.to_prometheus();
+    if m.get_flag("check") {
+        let samples = validate_prometheus(&exposition)?;
+        eprintln!("prometheus OK: {samples} samples");
+    }
+    print!("{exposition}");
+    if let Some(trace_path) = m.get_opt("trace") {
+        validate_trace_file(trace_path)?;
+    }
+    Ok(())
+}
+
+/// CI smoke check: the Chrome trace must parse and contain at least one
+/// span for every pipeline stage (Route..Respond).
+fn validate_trace_file(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = se2attn::jsonio::Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("trace document has no traceEvents array")?;
+    let mut counts: std::collections::BTreeMap<&str, usize> = std::collections::BTreeMap::new();
+    for ev in events {
+        if let Some(name) = ev.get("name").and_then(|n| n.as_str()) {
+            *counts.entry(name).or_insert(0) += 1;
+        }
+    }
+    for stage in se2attn::trace::Stage::PIPELINE {
+        let n = counts.get(stage.name()).copied().unwrap_or(0);
+        if n == 0 {
+            anyhow::bail!("trace {path} has no {} spans", stage.name());
+        }
+        eprintln!("trace: {:<9} {n} spans", stage.name());
+    }
+    eprintln!("trace OK: {path} covers all pipeline stages");
     Ok(())
 }
 

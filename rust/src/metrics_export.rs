@@ -1,0 +1,657 @@
+//! Metrics snapshot + export (DESIGN.md §15).
+//!
+//! [`MetricsSnapshot::collect`] walks every live telemetry primitive —
+//! [`Counter`]/[`Gauge`]/[`LatencyHistogram`]/`CacheStats`/`ShardStats`/
+//! `FamilyTelemetry` from [`crate::coordinator::telemetry`], the global
+//! [`crate::trace::KernelProfile`], and span-ring totals — into a plain
+//! data snapshot that can be rendered two ways:
+//!
+//! * [`MetricsSnapshot::to_prometheus`] — Prometheus text exposition
+//!   (`# TYPE` headers, `name{label="v"} value` samples, cumulative
+//!   `_bucket{le=...}` histogram series), scrape-ready.
+//! * [`MetricsSnapshot::to_json`] / [`MetricsSnapshot::from_json`] — a
+//!   JSON document that round-trips, so `se2attn stats --prev` can diff
+//!   two snapshots into interval deltas ([`MetricsSnapshot::delta`]).
+//!
+//! Collection is read-only over relaxed atomics: it never blocks the
+//! serving hot path, and the concurrent-consistency contract (exported
+//! histogram count == Σ bucket counts even while writers hammer the
+//! histogram) is regression-tested in `tests/observability.rs`.
+
+use crate::coordinator::telemetry::{LatencyHistogram, ServerStats};
+use crate::jsonio::Json;
+use crate::sim::suite::FamilyId;
+use crate::trace::{KernelProfile, Tracer};
+
+/// Scalar metric kind, mapped onto the Prometheus `# TYPE` header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+impl MetricKind {
+    fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+
+    fn parse(s: &str) -> Option<MetricKind> {
+        match s {
+            "counter" => Some(MetricKind::Counter),
+            "gauge" => Some(MetricKind::Gauge),
+            _ => None,
+        }
+    }
+}
+
+/// One scalar sample: `name{labels} value`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scalar {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub kind: MetricKind,
+    pub value: u64,
+}
+
+/// One latency histogram, exported with its exact observed extremes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub name: String,
+    /// Per-bucket counts; bucket i covers `[2^i, 2^(i+1))` µs.
+    pub buckets: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+    pub min_us: u64,
+    pub max_us: u64,
+}
+
+impl HistogramSnapshot {
+    fn of(name: &str, h: &LatencyHistogram) -> HistogramSnapshot {
+        HistogramSnapshot {
+            name: name.to_string(),
+            buckets: h.bucket_counts(),
+            sum_us: h.sum_us(),
+            count: h.count(),
+            min_us: h.min_us(),
+            max_us: h.max_us(),
+        }
+    }
+}
+
+/// Point-in-time copy of every metric the serving stack exposes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub scalars: Vec<Scalar>,
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot `stats` plus the global kernel profile; `tracer` adds
+    /// span-ring totals when tracing is on.  Read-only relaxed loads —
+    /// safe to call concurrently with the serving path.
+    pub fn collect(stats: &ServerStats, tracer: Option<&Tracer>) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        let no_labels: Vec<(String, String)> = Vec::new();
+        let mut push = |name: &str, labels: &[(String, String)], kind, value| {
+            s.scalars.push(Scalar {
+                name: name.to_string(),
+                labels: labels.to_vec(),
+                kind,
+                value,
+            });
+        };
+
+        use MetricKind::{Counter, Gauge};
+        push("se2attn_requests_in_total", &no_labels, Counter, stats.requests_in.get());
+        push("se2attn_requests_done_total", &no_labels, Counter, stats.requests_done.get());
+        push(
+            "se2attn_requests_failed_total",
+            &no_labels,
+            Counter,
+            stats.requests_failed.get(),
+        );
+        push("se2attn_batches_total", &no_labels, Counter, stats.batches.get());
+        push("se2attn_padded_slots_total", &no_labels, Counter, stats.padded_slots.get());
+        push(
+            "se2attn_queue_rejections_total",
+            &no_labels,
+            Counter,
+            stats.queue_rejections.get(),
+        );
+
+        push("se2attn_cache_hits_total", &no_labels, Counter, stats.cache.hits.get());
+        push("se2attn_cache_misses_total", &no_labels, Counter, stats.cache.misses.get());
+        push(
+            "se2attn_cache_evictions_total",
+            &no_labels,
+            Counter,
+            stats.cache.evictions.get(),
+        );
+        push("se2attn_cache_map_hits_total", &no_labels, Counter, stats.cache.map_hits.get());
+        push(
+            "se2attn_cache_map_misses_total",
+            &no_labels,
+            Counter,
+            stats.cache.map_misses.get(),
+        );
+        push(
+            "se2attn_cache_resident_bytes",
+            &no_labels,
+            Gauge,
+            stats.cache.resident_bytes.get(),
+        );
+
+        for (i, sh) in stats.shards.iter().enumerate() {
+            let labels = vec![("shard".to_string(), i.to_string())];
+            push("se2attn_shard_requests_total", &labels, Counter, sh.requests.get());
+            push("se2attn_shard_done_total", &labels, Counter, sh.done.get());
+            push("se2attn_shard_failed_total", &labels, Counter, sh.failed.get());
+            push("se2attn_shard_rejected_total", &labels, Counter, sh.rejected.get());
+            push("se2attn_shard_batches_total", &labels, Counter, sh.batches.get());
+            push("se2attn_shard_inflight", &labels, Gauge, sh.inflight.get());
+        }
+
+        for f in FamilyId::ALL {
+            let labels = vec![("family".to_string(), f.name().to_string())];
+            push("se2attn_family_requests_total", &labels, Counter, stats.families.requests(f));
+            push(
+                "se2attn_family_ade_micrometers_total",
+                &labels,
+                Counter,
+                stats.families.ade_micrometers(f),
+            );
+            push(
+                "se2attn_family_ade_samples_total",
+                &labels,
+                Counter,
+                stats.families.ade_samples(f),
+            );
+            push(
+                "se2attn_family_collisions_total",
+                &labels,
+                Counter,
+                stats.families.collisions(f),
+            );
+            push("se2attn_family_samples_total", &labels, Counter, stats.families.samples(f));
+        }
+
+        let profile = KernelProfile::snapshot();
+        for (name, value) in profile.rows() {
+            push(&format!("se2attn_{name}_total"), &no_labels, Counter, value);
+        }
+
+        if let Some(t) = tracer {
+            let (recorded, dropped) = t.totals();
+            push("se2attn_trace_spans_recorded_total", &no_labels, Counter, recorded);
+            push("se2attn_trace_spans_dropped_total", &no_labels, Counter, dropped);
+        }
+
+        s.histograms.push(HistogramSnapshot::of("se2attn_e2e_latency_us", &stats.e2e_latency));
+        s.histograms.push(HistogramSnapshot::of(
+            "se2attn_decode_latency_us",
+            &stats.decode_latency,
+        ));
+        s
+    }
+
+    /// Interval delta `self - prev`: counters and histogram series
+    /// subtract (saturating), gauges and observed extremes keep their
+    /// current values.  Entries absent from `prev` pass through unchanged.
+    pub fn delta(&self, prev: &MetricsSnapshot) -> MetricsSnapshot {
+        let scalars = self
+            .scalars
+            .iter()
+            .map(|cur| {
+                let mut out = cur.clone();
+                if cur.kind == MetricKind::Counter {
+                    if let Some(p) = prev
+                        .scalars
+                        .iter()
+                        .find(|p| p.name == cur.name && p.labels == cur.labels)
+                    {
+                        out.value = cur.value.saturating_sub(p.value);
+                    }
+                }
+                out
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|cur| {
+                let mut out = cur.clone();
+                if let Some(p) = prev.histograms.iter().find(|p| p.name == cur.name) {
+                    for (i, b) in out.buckets.iter_mut().enumerate() {
+                        *b = b.saturating_sub(p.buckets.get(i).copied().unwrap_or(0));
+                    }
+                    out.sum_us = cur.sum_us.saturating_sub(p.sum_us);
+                    out.count = cur.count.saturating_sub(p.count);
+                }
+                out
+            })
+            .collect();
+        MetricsSnapshot { scalars, histograms }
+    }
+
+    // -- Prometheus text exposition ---------------------------------------
+
+    /// Render as Prometheus text format.  `# TYPE` is emitted once per
+    /// metric name; histogram series use cumulative `le` buckets ending
+    /// in `+Inf`, with exact observed extremes as companion gauges.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = String::new();
+        for s in &self.scalars {
+            if s.name != last_name {
+                out.push_str(&format!("# TYPE {} {}\n", s.name, s.kind.name()));
+                last_name = s.name.clone();
+            }
+            out.push_str(&format!("{}{} {}\n", s.name, render_labels(&s.labels), s.value));
+        }
+        for h in &self.histograms {
+            out.push_str(&format!("# TYPE {} histogram\n", h.name));
+            let mut cum = 0u64;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum += b;
+                out.push_str(&format!(
+                    "{}_bucket{{le=\"{}\"}} {}\n",
+                    h.name,
+                    1u64 << (i + 1),
+                    cum
+                ));
+            }
+            out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", h.name, cum));
+            out.push_str(&format!("{}_sum {}\n", h.name, h.sum_us));
+            out.push_str(&format!("{}_count {}\n", h.name, h.count));
+            out.push_str(&format!("# TYPE {}_min_us gauge\n", h.name));
+            out.push_str(&format!("{}_min_us {}\n", h.name, h.min_us));
+            out.push_str(&format!("# TYPE {}_max_us gauge\n", h.name));
+            out.push_str(&format!("{}_max_us {}\n", h.name, h.max_us));
+        }
+        out
+    }
+
+    // -- JSON round-trip --------------------------------------------------
+
+    /// JSON document (schema `se2attn-metrics-v1`) that round-trips
+    /// through [`MetricsSnapshot::from_json`].  Values are stored as JSON
+    /// numbers, exact up to 2^53.
+    pub fn to_json(&self) -> Json {
+        let scalars = self
+            .scalars
+            .iter()
+            .map(|s| {
+                let labels: std::collections::BTreeMap<String, Json> = s
+                    .labels
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("labels", Json::Obj(labels)),
+                    ("kind", Json::Str(s.kind.name().to_string())),
+                    ("value", Json::Num(s.value as f64)),
+                ])
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|h| {
+                let buckets = h.buckets.iter().map(|b| Json::Num(*b as f64)).collect();
+                Json::obj(vec![
+                    ("name", Json::Str(h.name.clone())),
+                    ("buckets", Json::Arr(buckets)),
+                    ("sum_us", Json::Num(h.sum_us as f64)),
+                    ("count", Json::Num(h.count as f64)),
+                    ("min_us", Json::Num(h.min_us as f64)),
+                    ("max_us", Json::Num(h.max_us as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str("se2attn-metrics-v1".to_string())),
+            ("scalars", Json::Arr(scalars)),
+            ("histograms", Json::Arr(histograms)),
+        ])
+    }
+
+    /// Parse a document produced by [`MetricsSnapshot::to_json`].
+    pub fn from_json(doc: &Json) -> anyhow::Result<MetricsSnapshot> {
+        let schema = doc.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        if schema != "se2attn-metrics-v1" {
+            anyhow::bail!("unsupported metrics schema {schema:?}");
+        }
+        let mut out = MetricsSnapshot::default();
+        for s in doc
+            .get("scalars")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("metrics json missing 'scalars' array"))?
+        {
+            let name = s
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("scalar missing name"))?;
+            let kind = s
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .and_then(MetricKind::parse)
+                .ok_or_else(|| anyhow::anyhow!("scalar {name} has bad kind"))?;
+            let mut labels = Vec::new();
+            if let Some(Json::Obj(m)) = s.get("labels") {
+                for (k, v) in m {
+                    let v = v
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("scalar {name} label {k} not a string"))?;
+                    labels.push((k.clone(), v.to_string()));
+                }
+            }
+            let value = s
+                .get("value")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("scalar {name} missing value"))? as u64;
+            out.scalars.push(Scalar {
+                name: name.to_string(),
+                labels,
+                kind,
+                value,
+            });
+        }
+        for h in doc
+            .get("histograms")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("metrics json missing 'histograms' array"))?
+        {
+            let name = h
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("histogram missing name"))?;
+            let buckets = h
+                .get("buckets")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("histogram {name} missing buckets"))?
+                .iter()
+                .map(|b| b.as_f64().unwrap_or(0.0) as u64)
+                .collect();
+            let field = |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            out.histograms.push(HistogramSnapshot {
+                name: name.to_string(),
+                buckets,
+                sum_us: field("sum_us"),
+                count: field("count"),
+                min_us: field("min_us"),
+                max_us: field("max_us"),
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn render_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+// --------------------------------------------------------------------------
+// line-format validation
+// --------------------------------------------------------------------------
+
+/// Sanity-check a Prometheus text-exposition document: every non-comment
+/// line must be `name[{labels}] value`, names must be legal, every sample
+/// must be preceded by a `# TYPE` for its base metric name.  Returns the
+/// number of samples on success.
+pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut it = decl.split_whitespace();
+                let name = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: TYPE without name", lineno + 1))?;
+                let kind = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: TYPE without kind", lineno + 1))?;
+                if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    anyhow::bail!("line {}: unknown TYPE kind {kind:?}", lineno + 1);
+                }
+                if !valid_metric_name(name) {
+                    anyhow::bail!("line {}: bad metric name {name:?}", lineno + 1);
+                }
+                typed.push(name.to_string());
+            }
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (ident, value) = split_sample(line)
+            .ok_or_else(|| anyhow::anyhow!("line {}: malformed sample {line:?}", lineno + 1))?;
+        let name = ident.split('{').next().unwrap_or(ident);
+        if !valid_metric_name(name) {
+            anyhow::bail!("line {}: bad metric name {name:?}", lineno + 1);
+        }
+        if value != "+Inf" && value != "-Inf" && value != "NaN" && value.parse::<f64>().is_err() {
+            anyhow::bail!("line {}: bad sample value {value:?}", lineno + 1);
+        }
+        // histogram series (_bucket/_sum/_count and the exact-extreme
+        // companions) are declared under their base or companion name
+        if !typed.iter().any(|t| {
+            name == t
+                || name == format!("{t}_bucket")
+                || name == format!("{t}_sum")
+                || name == format!("{t}_count")
+        }) {
+            anyhow::bail!("line {}: sample {name:?} has no preceding # TYPE", lineno + 1);
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        anyhow::bail!("no samples found");
+    }
+    Ok(samples)
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split `name{labels} value` into (`name{labels}`, `value`), honouring
+/// quotes inside label values (a quoted `} ` must not end the ident).
+fn split_sample(line: &str) -> Option<(&str, &str)> {
+    let bytes = line.as_bytes();
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\\' if in_quotes && !escaped => {
+                escaped = true;
+                continue;
+            }
+            b'"' if !escaped => in_quotes = !in_quotes,
+            b' ' | b'\t' if !in_quotes => {
+                let value = line[i..].trim();
+                if value.is_empty() {
+                    return None;
+                }
+                return Some((&line[..i], value));
+            }
+            _ => {}
+        }
+        escaped = false;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::ServerStats;
+
+    fn sample_stats() -> ServerStats {
+        let stats = ServerStats::with_shards(2);
+        stats.requests_in.add(10);
+        stats.requests_done.add(9);
+        stats.requests_failed.add(1);
+        stats.batches.add(4);
+        stats.e2e_latency.record_us(1500);
+        stats.e2e_latency.record_us(900);
+        stats.decode_latency.record_us(700);
+        stats.cache.hits.add(5);
+        stats.cache.resident_bytes.set(4096);
+        stats.shards[0].requests.add(6);
+        stats.shards[1].requests.add(4);
+        stats.shards[1].inflight.add(2);
+        stats.families.record(FamilyId::Roundabout, &[1.25], 1, 4);
+        stats
+    }
+
+    #[test]
+    fn collect_covers_all_primitives() {
+        let stats = sample_stats();
+        let snap = MetricsSnapshot::collect(&stats, None);
+        let get = |name: &str| {
+            snap.scalars
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing {name}"))
+                .value
+        };
+        assert_eq!(get("se2attn_requests_in_total"), 10);
+        assert_eq!(get("se2attn_cache_hits_total"), 5);
+        assert_eq!(get("se2attn_cache_resident_bytes"), 4096);
+        let shard1_inflight = snap
+            .scalars
+            .iter()
+            .find(|s| {
+                s.name == "se2attn_shard_inflight"
+                    && s.labels == vec![("shard".to_string(), "1".to_string())]
+            })
+            .unwrap();
+        assert_eq!(shard1_inflight.value, 2);
+        let fam = snap
+            .scalars
+            .iter()
+            .find(|s| {
+                s.name == "se2attn_family_requests_total"
+                    && s.labels
+                        == vec![("family".to_string(), FamilyId::Roundabout.name().to_string())]
+            })
+            .unwrap();
+        assert_eq!(fam.value, 1);
+        assert!(snap.scalars.iter().any(|s| s.name == "se2attn_kernel_calls_total"));
+        let e2e = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == "se2attn_e2e_latency_us")
+            .unwrap();
+        assert_eq!(e2e.count, 2);
+        assert_eq!(e2e.sum_us, 2400);
+        assert_eq!(e2e.min_us, 900);
+        assert_eq!(e2e.max_us, 1500);
+        assert_eq!(e2e.buckets.iter().sum::<u64>(), e2e.count);
+    }
+
+    #[test]
+    fn prometheus_output_validates_and_is_cumulative() {
+        let stats = sample_stats();
+        let snap = MetricsSnapshot::collect(&stats, None);
+        let text = snap.to_prometheus();
+        let n = validate_prometheus(&text).expect("exposition must validate");
+        assert!(n > 20, "expected a rich sample count, got {n}");
+        assert!(text.contains("# TYPE se2attn_requests_in_total counter"));
+        assert!(text.contains("se2attn_shard_inflight{shard=\"1\"} 2"));
+        assert!(text.contains("# TYPE se2attn_e2e_latency_us histogram"));
+        assert!(text.contains("se2attn_e2e_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("se2attn_e2e_latency_us_count 2"));
+        assert!(text.contains("se2attn_e2e_latency_us_max_us 1500"));
+        // cumulative le series: every bucket count <= the +Inf count
+        let inf = 2u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v <= inf, "{line}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_snapshot() {
+        let stats = sample_stats();
+        let snap = MetricsSnapshot::collect(&stats, None);
+        let doc = snap.to_json();
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let back = MetricsSnapshot::from_json(&parsed).unwrap();
+        assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn from_json_rejects_other_schemas() {
+        let doc = Json::obj(vec![("schema", Json::Str("bogus".into()))]);
+        assert!(MetricsSnapshot::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn delta_subtracts_counters_keeps_gauges() {
+        let stats = sample_stats();
+        let prev = MetricsSnapshot::collect(&stats, None);
+        stats.requests_in.add(5);
+        stats.cache.resident_bytes.set(8192);
+        stats.e2e_latency.record_us(3000);
+        let cur = MetricsSnapshot::collect(&stats, None);
+        let d = cur.delta(&prev);
+        let get = |name: &str| d.scalars.iter().find(|s| s.name == name).unwrap().value;
+        assert_eq!(get("se2attn_requests_in_total"), 5);
+        assert_eq!(get("se2attn_requests_done_total"), 0);
+        // gauges report the current level, not a difference
+        assert_eq!(get("se2attn_cache_resident_bytes"), 8192);
+        let e2e = d
+            .histograms
+            .iter()
+            .find(|h| h.name == "se2attn_e2e_latency_us")
+            .unwrap();
+        assert_eq!(e2e.count, 1);
+        assert_eq!(e2e.sum_us, 3000);
+        assert_eq!(e2e.buckets.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_prometheus("").is_err());
+        assert!(validate_prometheus("no_type_header 1\n").is_err());
+        assert!(
+            validate_prometheus("# TYPE m counter\nm not-a-number\n").is_err(),
+            "bad value must fail"
+        );
+        assert!(
+            validate_prometheus("# TYPE 9bad counter\n9bad 1\n").is_err(),
+            "bad name must fail"
+        );
+        let ok = "# TYPE m counter\nm{a=\"x y\"} 3\nm 4\n";
+        assert_eq!(validate_prometheus(ok).unwrap(), 2);
+    }
+
+    #[test]
+    fn split_sample_honours_quoted_spaces() {
+        let (ident, value) = split_sample("m{a=\"x } y\"} 7").unwrap();
+        assert_eq!(ident, "m{a=\"x } y\"}");
+        assert_eq!(value, "7");
+        assert!(split_sample("novalue").is_none());
+    }
+}

@@ -1,0 +1,907 @@
+//! Structured tracing for the serving path (DESIGN.md §15).
+//!
+//! Every request admitted through [`crate::coordinator::Server::submit`] is
+//! assigned a **trace id**, and each pipeline stage it passes through —
+//! route → enqueue → batch → tokenize → decode → attend → respond — records
+//! a [`Span`] into a lock-free per-thread ring buffer.  The rings are
+//! pre-allocated ([`TraceConfig::ring_spans`] slots each), so the hot path
+//! never allocates: recording a span is one `fetch_add` on the ring head
+//! plus four relaxed atomic stores.  When a ring wraps, the oldest spans
+//! are overwritten and a `dropped` counter is bumped — memory stays bounded
+//! no matter how long the server runs.
+//!
+//! Exported traces use the Chrome `trace_event` JSON format (an object with
+//! a `traceEvents` array of complete `"ph":"X"` events, timestamps in
+//! microseconds), which loads directly into `chrome://tracing` or Perfetto:
+//! each shard worker appears as one track (`tid` = shard + 1, `tid` 0 is
+//! the front-end submit path), and the `args.trace` field on every slice
+//! carries the request's trace id so a single request can be followed
+//! across tracks.
+//!
+//! The whole subsystem is off by default.  Disabled cost is a single
+//! relaxed atomic load + branch per potential span (the global [`enabled`]
+//! gate); no thread-local is touched until tracing is actually on.
+//!
+//! Kernel profiling ([`ProfileConfig`], [`KernelProfile`]) lives here too:
+//! the flash kernel and the KV cache flush per-call counters (blocks
+//! skipped, rows dequantized, scratch bytes, per-thread work share,
+//! evictions) into a global profile when profiling is enabled, again behind
+//! one branch when it is not.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::jsonio::Json;
+
+// --------------------------------------------------------------------------
+// stages
+// --------------------------------------------------------------------------
+
+/// Pipeline stage a span belongs to.  The discriminant is packed into the
+/// span's meta word, so variants must stay `< 256`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// Front-end: shard selection + channel send in `Server::submit`.
+    Route = 0,
+    /// Queue residency: submit time → the shard worker picking the
+    /// envelope out of its batch (recorded when the batch runs).
+    Enqueue = 1,
+    /// One `run_batch` invocation on a shard worker (all envelopes).
+    Batch = 2,
+    /// Per-step cache lookup + tokenization for a batch chunk.
+    Tokenize = 3,
+    /// One `ActionDecoder::decode` call for a batch chunk.
+    Decode = 4,
+    /// One `flash_sdpa_rows` kernel invocation.
+    Attend = 5,
+    /// Serialization + response channel send for one envelope.
+    Respond = 6,
+    /// Instant event: a KV-cache session or map eviction.
+    CacheEvict = 7,
+}
+
+impl Stage {
+    /// All stages, in pipeline order (used by trace validation).
+    pub const ALL: [Stage; 8] = [
+        Stage::Route,
+        Stage::Enqueue,
+        Stage::Batch,
+        Stage::Tokenize,
+        Stage::Decode,
+        Stage::Attend,
+        Stage::Respond,
+        Stage::CacheEvict,
+    ];
+
+    /// Stages every traced `simulate` run must produce (CacheEvict only
+    /// appears under cache pressure, so it is excluded).
+    pub const PIPELINE: [Stage; 7] = [
+        Stage::Route,
+        Stage::Enqueue,
+        Stage::Batch,
+        Stage::Tokenize,
+        Stage::Decode,
+        Stage::Attend,
+        Stage::Respond,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Route => "route",
+            Stage::Enqueue => "enqueue",
+            Stage::Batch => "batch",
+            Stage::Tokenize => "tokenize",
+            Stage::Decode => "decode",
+            Stage::Attend => "attend",
+            Stage::Respond => "respond",
+            Stage::CacheEvict => "cache_evict",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|s| *s as u8 == v)
+    }
+}
+
+// --------------------------------------------------------------------------
+// span ring
+// --------------------------------------------------------------------------
+
+/// A decoded span, as returned by [`SpanRing::drain`] / [`Tracer::spans`].
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub stage: Stage,
+    /// Trace id of the request this span belongs to (0 = not tied to a
+    /// single request, e.g. a whole-batch span).
+    pub trace_id: u64,
+    /// Ring (track) the span was recorded on: 0 = front-end, `s + 1` =
+    /// shard `s`.
+    pub track: usize,
+    /// Start offset from the tracer epoch, microseconds.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Stage-specific payload: batch size for `Batch`, rows for `Attend`,
+    /// bytes for `CacheEvict`, 0 otherwise.
+    pub arg: u64,
+}
+
+/// One pre-allocated slot: four atomics written with relaxed stores.  A
+/// slot is published by the meta word (bit 63 set = occupied); a
+/// torn read under wrap can at worst misattribute one span, never corrupt
+/// memory — acceptable for a lossy diagnostic ring.
+struct Slot {
+    trace_id: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    /// `occupied<<63 | arg<<16 | stage` (arg truncated to 47 bits).
+    meta: AtomicU64,
+}
+
+const META_OCCUPIED: u64 = 1 << 63;
+
+/// Lock-free bounded span recorder.  Single-producer per shard ring (the
+/// shard worker thread); the front-end ring is multi-producer, which the
+/// `fetch_add` head makes safe (each producer claims a distinct slot).
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(1);
+        let slots = (0..cap)
+            .map(|_| Slot {
+                trace_id: AtomicU64::new(0),
+                start_us: AtomicU64::new(0),
+                dur_us: AtomicU64::new(0),
+                meta: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        SpanRing {
+            slots,
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one span.  Allocation-free; overwrites the oldest slot once
+    /// the ring has wrapped (counted in [`SpanRing::dropped`]).
+    pub fn record(&self, stage: Stage, trace_id: u64, start_us: u64, dur_us: u64, arg: u64) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        if seq >= self.slots.len() as u64 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        slot.trace_id.store(trace_id, Ordering::Relaxed);
+        slot.start_us.store(start_us, Ordering::Relaxed);
+        slot.dur_us.store(dur_us, Ordering::Relaxed);
+        let meta = META_OCCUPIED | ((arg & ((1 << 47) - 1)) << 16) | stage as u64;
+        slot.meta.store(meta, Ordering::Release);
+    }
+
+    /// Spans overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Total spans ever recorded on this ring (including overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every occupied slot, oldest first.
+    fn drain(&self, track: usize, out: &mut Vec<Span>) {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        for seq in start..head {
+            let slot = &self.slots[(seq % cap) as usize];
+            let meta = slot.meta.load(Ordering::Acquire);
+            if meta & META_OCCUPIED == 0 {
+                continue;
+            }
+            let Some(stage) = Stage::from_u8((meta & 0xff) as u8) else {
+                continue;
+            };
+            out.push(Span {
+                stage,
+                trace_id: slot.trace_id.load(Ordering::Relaxed),
+                track,
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+                arg: (meta >> 16) & ((1 << 47) - 1),
+            });
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// global gate + thread context
+// --------------------------------------------------------------------------
+
+/// Number of live [`Tracer`]s.  The fast-path check for "is tracing on at
+/// all" is a relaxed load of this counter — one branch when disabled, no
+/// thread-local access.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Kernel/cache profiling gate (see [`ProfileConfig`]).
+static PROFILING: AtomicUsize = AtomicUsize::new(0);
+
+/// True when at least one tracer is live.  This is the one-branch disabled
+/// path: callers must check it before touching the thread-local context.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed) != 0
+}
+
+/// True when kernel profiling is on.
+#[inline]
+pub fn profiling() -> bool {
+    PROFILING.load(Ordering::Relaxed) != 0
+}
+
+struct ThreadCtx {
+    ring: Arc<SpanRing>,
+    epoch: Instant,
+    /// Trace id attributed to subsequently recorded spans (0 = none).
+    trace_id: u64,
+}
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<ThreadCtx>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Bind the calling thread to `ring` for the lifetime of the returned
+/// guard.  Shard workers call this once at startup; span helpers are
+/// no-ops on threads with no installed context.
+pub fn install(ring: Arc<SpanRing>, epoch: Instant) -> CtxGuard {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(ThreadCtx {
+            ring,
+            epoch,
+            trace_id: 0,
+        });
+    });
+    CtxGuard
+}
+
+/// Uninstalls the thread context on drop (keeps rings from outliving the
+/// tracer through detached thread-locals).
+pub struct CtxGuard;
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+/// Set the trace id attributed to spans recorded by this thread until the
+/// next call (0 clears).  Cheap; called per envelope inside a batch.
+pub fn set_trace_id(trace_id: u64) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.trace_id = trace_id;
+        }
+    });
+}
+
+#[inline]
+fn micros_since(epoch: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(epoch).as_micros() as u64
+}
+
+/// Record a complete span covering `t0 → now` on the calling thread's
+/// ring.  One branch + early return when tracing is disabled.
+#[inline]
+pub fn record_since(stage: Stage, t0: Instant, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    record_since_slow(stage, t0, arg);
+}
+
+#[cold]
+fn record_since_slow(stage: Stage, t0: Instant, arg: u64) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            let start = micros_since(ctx.epoch, t0);
+            let end = micros_since(ctx.epoch, Instant::now());
+            ctx.ring
+                .record(stage, ctx.trace_id, start, end.saturating_sub(start), arg);
+        }
+    });
+}
+
+/// Record a complete span with explicit endpoints (used for queue
+/// residency, where the start predates the worker picking up the item).
+pub fn record_between(stage: Stage, t0: Instant, t1: Instant, trace_id: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            let start = micros_since(ctx.epoch, t0);
+            let end = micros_since(ctx.epoch, t1);
+            ctx.ring
+                .record(stage, trace_id, start, end.saturating_sub(start), arg);
+        }
+    });
+}
+
+/// Record an instant (zero-duration) event on the calling thread's ring.
+#[inline]
+pub fn instant(stage: Stage, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    instant_slow(stage, arg);
+}
+
+#[cold]
+fn instant_slow(stage: Stage, arg: u64) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            let now = micros_since(ctx.epoch, Instant::now());
+            ctx.ring.record(stage, ctx.trace_id, now, 0, arg);
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// tracer
+// --------------------------------------------------------------------------
+
+/// Tracing configuration carried by `ServeConfig`.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Master switch.  Off by default; when off the server allocates no
+    /// rings and the per-span cost is one branch.
+    pub enabled: bool,
+    /// Slots per ring (one ring per shard + one front-end ring).  Each
+    /// slot is 32 bytes, so the default 16384 costs 512 KiB per ring.
+    pub ring_spans: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig {
+            enabled: false,
+            ring_spans: 16_384,
+        }
+    }
+}
+
+/// Owns the span rings for one server: ring 0 is the front-end (submit
+/// path, multi-producer), rings `1..=shards` belong to shard workers.
+/// Construction bumps the global [`enabled`] gate; drop releases it.
+pub struct Tracer {
+    epoch: Instant,
+    rings: Vec<Arc<SpanRing>>,
+    next_trace: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(shards: usize, cfg: TraceConfig) -> Arc<Tracer> {
+        let rings = (0..shards + 1)
+            .map(|_| Arc::new(SpanRing::new(cfg.ring_spans)))
+            .collect();
+        ACTIVE.fetch_add(1, Ordering::Relaxed);
+        Arc::new(Tracer {
+            epoch: Instant::now(),
+            rings,
+            next_trace: AtomicU64::new(1),
+        })
+    }
+
+    /// Mint a fresh per-request trace id.  This is the only atomic the
+    /// submit path touches, and only when tracing is enabled — the
+    /// `ShardRouter` itself stays stateless.
+    pub fn mint(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// The front-end ring (track 0).
+    pub fn frontend_ring(&self) -> Arc<SpanRing> {
+        self.rings[0].clone()
+    }
+
+    /// Shard `s`'s ring (track `s + 1`).
+    pub fn shard_ring(&self, shard: usize) -> Arc<SpanRing> {
+        self.rings[shard + 1].clone()
+    }
+
+    /// Record a span on the front-end ring from an arbitrary caller
+    /// thread (no thread-local context required).
+    pub fn record_frontend(&self, stage: Stage, t0: Instant, trace_id: u64, arg: u64) {
+        let start = micros_since(self.epoch, t0);
+        let end = micros_since(self.epoch, Instant::now());
+        self.rings[0].record(stage, trace_id, start, end.saturating_sub(start), arg);
+    }
+
+    /// Total spans recorded / dropped across all rings.
+    pub fn totals(&self) -> (u64, u64) {
+        let mut rec = 0;
+        let mut drop = 0;
+        for r in &self.rings {
+            rec += r.recorded();
+            drop += r.dropped();
+        }
+        (rec, drop)
+    }
+
+    /// Snapshot all retained spans, oldest-first per track.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for (track, ring) in self.rings.iter().enumerate() {
+            ring.drain(track, &mut out);
+        }
+        out
+    }
+
+    /// Export as a Chrome `trace_event` document (`chrome://tracing` /
+    /// Perfetto).  Complete events (`"ph":"X"`), timestamps in µs, one
+    /// `tid` per track; `args.trace` carries the request trace id.
+    pub fn to_chrome_trace(&self) -> Json {
+        let (recorded, dropped) = self.totals();
+        let mut events: Vec<Json> = Vec::new();
+        for (track, name) in self.track_names() {
+            events.push(Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(track as f64)),
+                ("args", Json::obj(vec![("name", Json::Str(name))])),
+            ]));
+        }
+        for s in self.spans() {
+            let ph = if s.stage == Stage::CacheEvict { "i" } else { "X" };
+            events.push(Json::obj(vec![
+                ("name", Json::Str(s.stage.name().into())),
+                ("cat", Json::Str("serve".into())),
+                ("ph", Json::Str(ph.into())),
+                ("ts", Json::Num(s.start_us as f64)),
+                ("dur", Json::Num(s.dur_us as f64)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(s.track as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("trace", Json::Num(s.trace_id as f64)),
+                        ("arg", Json::Num(s.arg as f64)),
+                    ]),
+                ),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".into())),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("spans_recorded", Json::Num(recorded as f64)),
+                    ("spans_dropped", Json::Num(dropped as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    fn track_names(&self) -> Vec<(usize, String)> {
+        (0..self.rings.len())
+            .map(|t| {
+                let name = if t == 0 {
+                    "frontend".to_string()
+                } else {
+                    format!("shard-{}", t - 1)
+                };
+                (t, name)
+            })
+            .collect()
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn write_chrome_trace(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_trace().to_string())
+    }
+}
+
+impl Drop for Tracer {
+    fn drop(&mut self) {
+        ACTIVE.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+// --------------------------------------------------------------------------
+// kernel profiling
+// --------------------------------------------------------------------------
+
+/// Kernel/cache profiling switch carried by `ServeConfig` and the CLI.
+/// When disabled, the kernel's per-call accounting costs one branch at
+/// flush time (counters live in registers either way).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProfileConfig {
+    pub enabled: bool,
+}
+
+/// RAII guard enabling the global profiling gate.
+pub struct ProfileGuard;
+
+impl ProfileGuard {
+    pub fn enable() -> ProfileGuard {
+        PROFILING.fetch_add(1, Ordering::Relaxed);
+        ProfileGuard
+    }
+}
+
+impl Drop for ProfileGuard {
+    fn drop(&mut self) {
+        PROFILING.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Global flash-kernel + cache profile.  All counters are cumulative since
+/// process start; [`KernelProfile::snapshot`] copies them, and deltas
+/// between snapshots isolate a measurement window.
+#[derive(Default)]
+pub struct KernelProfileAtomics {
+    pub calls: AtomicU64,
+    pub rows: AtomicU64,
+    pub key_blocks_visited: AtomicU64,
+    pub key_blocks_skipped: AtomicU64,
+    pub rows_dequantized: AtomicU64,
+    pub scratch_bytes: AtomicU64,
+    /// Work chunks executed (per-thread work share = chunks / participants).
+    pub chunks: AtomicU64,
+    /// Threads that participated across all calls.
+    pub participants: AtomicU64,
+    pub cache_session_evictions: AtomicU64,
+    pub cache_map_evictions: AtomicU64,
+}
+
+static KERNEL_PROFILE: KernelProfileAtomics = KernelProfileAtomics {
+    calls: AtomicU64::new(0),
+    rows: AtomicU64::new(0),
+    key_blocks_visited: AtomicU64::new(0),
+    key_blocks_skipped: AtomicU64::new(0),
+    rows_dequantized: AtomicU64::new(0),
+    scratch_bytes: AtomicU64::new(0),
+    chunks: AtomicU64::new(0),
+    participants: AtomicU64::new(0),
+    cache_session_evictions: AtomicU64::new(0),
+    cache_map_evictions: AtomicU64::new(0),
+};
+
+/// Access the global profile counters (kernel flush path).
+pub fn kernel_profile() -> &'static KernelProfileAtomics {
+    &KERNEL_PROFILE
+}
+
+/// A point-in-time copy of the global kernel profile.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelProfile {
+    pub calls: u64,
+    pub rows: u64,
+    pub key_blocks_visited: u64,
+    pub key_blocks_skipped: u64,
+    pub rows_dequantized: u64,
+    pub scratch_bytes: u64,
+    pub chunks: u64,
+    pub participants: u64,
+    pub cache_session_evictions: u64,
+    pub cache_map_evictions: u64,
+}
+
+impl KernelProfile {
+    pub fn snapshot() -> KernelProfile {
+        let p = &KERNEL_PROFILE;
+        KernelProfile {
+            calls: p.calls.load(Ordering::Relaxed),
+            rows: p.rows.load(Ordering::Relaxed),
+            key_blocks_visited: p.key_blocks_visited.load(Ordering::Relaxed),
+            key_blocks_skipped: p.key_blocks_skipped.load(Ordering::Relaxed),
+            rows_dequantized: p.rows_dequantized.load(Ordering::Relaxed),
+            scratch_bytes: p.scratch_bytes.load(Ordering::Relaxed),
+            chunks: p.chunks.load(Ordering::Relaxed),
+            participants: p.participants.load(Ordering::Relaxed),
+            cache_session_evictions: p.cache_session_evictions.load(Ordering::Relaxed),
+            cache_map_evictions: p.cache_map_evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counter-wise difference (`self - earlier`), saturating at zero.
+    pub fn delta(&self, earlier: &KernelProfile) -> KernelProfile {
+        KernelProfile {
+            calls: self.calls.saturating_sub(earlier.calls),
+            rows: self.rows.saturating_sub(earlier.rows),
+            key_blocks_visited: self
+                .key_blocks_visited
+                .saturating_sub(earlier.key_blocks_visited),
+            key_blocks_skipped: self
+                .key_blocks_skipped
+                .saturating_sub(earlier.key_blocks_skipped),
+            rows_dequantized: self
+                .rows_dequantized
+                .saturating_sub(earlier.rows_dequantized),
+            scratch_bytes: self.scratch_bytes.saturating_sub(earlier.scratch_bytes),
+            chunks: self.chunks.saturating_sub(earlier.chunks),
+            participants: self.participants.saturating_sub(earlier.participants),
+            cache_session_evictions: self
+                .cache_session_evictions
+                .saturating_sub(earlier.cache_session_evictions),
+            cache_map_evictions: self
+                .cache_map_evictions
+                .saturating_sub(earlier.cache_map_evictions),
+        }
+    }
+
+    /// `(name, value)` rows for export, stable order.
+    pub fn rows(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("kernel_calls", self.calls),
+            ("kernel_rows", self.rows),
+            ("kernel_key_blocks_visited", self.key_blocks_visited),
+            ("kernel_key_blocks_skipped", self.key_blocks_skipped),
+            ("kernel_rows_dequantized", self.rows_dequantized),
+            ("kernel_scratch_bytes", self.scratch_bytes),
+            ("kernel_chunks", self.chunks),
+            ("kernel_participants", self.participants),
+            ("cache_session_evictions", self.cache_session_evictions),
+            ("cache_map_evictions", self.cache_map_evictions),
+        ]
+    }
+}
+
+// --------------------------------------------------------------------------
+// tests
+// --------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Tests share the process-global ACTIVE gate, so every test that
+    /// needs tracing-on holds a tracer for its whole body; this lock
+    /// keeps gate-sensitive tests from interleaving.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let ring = SpanRing::new(8);
+        for i in 0..5u64 {
+            ring.record(Stage::Decode, i, i * 10, 5, i);
+        }
+        let mut out = Vec::new();
+        ring.drain(3, &mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(ring.dropped(), 0);
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(s.stage, Stage::Decode);
+            assert_eq!(s.trace_id, i as u64);
+            assert_eq!(s.start_us, i as u64 * 10);
+            assert_eq!(s.dur_us, 5);
+            assert_eq!(s.arg, i as u64);
+            assert_eq!(s.track, 3);
+        }
+    }
+
+    #[test]
+    fn ring_wraps_with_bounded_memory() {
+        let ring = SpanRing::new(4);
+        for i in 0..10u64 {
+            ring.record(Stage::Batch, i, i, 1, 0);
+        }
+        let mut out = Vec::new();
+        ring.drain(0, &mut out);
+        assert_eq!(out.len(), 4, "ring retains exactly its capacity");
+        assert_eq!(ring.dropped(), 6);
+        assert_eq!(ring.recorded(), 10);
+        // the retained spans are the newest four
+        let ids: Vec<u64> = out.iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn stage_meta_roundtrip_includes_large_args() {
+        let ring = SpanRing::new(2);
+        let big_arg = (1u64 << 47) - 1;
+        ring.record(Stage::CacheEvict, 7, 1, 0, big_arg);
+        // args wider than 47 bits are truncated, not corrupted
+        ring.record(Stage::Attend, 8, 2, 3, u64::MAX);
+        let mut out = Vec::new();
+        ring.drain(0, &mut out);
+        assert_eq!(out[0].arg, big_arg);
+        assert_eq!(out[1].arg, big_arg);
+        assert_eq!(out[0].stage, Stage::CacheEvict);
+        assert_eq!(out[1].stage, Stage::Attend);
+    }
+
+    #[test]
+    fn tracer_gate_counts_live_tracers() {
+        let _guard = GATE.lock().unwrap();
+        let before = enabled();
+        let t = Tracer::new(2, TraceConfig::default());
+        assert!(enabled());
+        drop(t);
+        assert_eq!(enabled(), before);
+    }
+
+    #[test]
+    fn thread_context_records_spans_with_trace_ids() {
+        let _guard = GATE.lock().unwrap();
+        let t = Tracer::new(1, TraceConfig::default());
+        let _ctx = install(t.shard_ring(0), t.epoch());
+        set_trace_id(42);
+        let t0 = Instant::now();
+        record_since(Stage::Decode, t0, 16);
+        instant(Stage::CacheEvict, 128);
+        set_trace_id(0);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].stage, Stage::Decode);
+        assert_eq!(spans[0].trace_id, 42);
+        assert_eq!(spans[0].track, 1);
+        assert_eq!(spans[1].stage, Stage::CacheEvict);
+        assert_eq!(spans[1].dur_us, 0);
+        assert_eq!(spans[1].arg, 128);
+    }
+
+    #[test]
+    fn record_between_uses_explicit_endpoints() {
+        let _guard = GATE.lock().unwrap();
+        let t = Tracer::new(1, TraceConfig::default());
+        let _ctx = install(t.shard_ring(0), t.epoch());
+        let t0 = t.epoch() + Duration::from_micros(100);
+        let t1 = t.epoch() + Duration::from_micros(350);
+        record_between(Stage::Enqueue, t0, t1, 9, 0);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].start_us, 100);
+        assert_eq!(spans[0].dur_us, 250);
+        assert_eq!(spans[0].trace_id, 9);
+    }
+
+    #[test]
+    fn helpers_are_noops_when_disabled_or_uninstalled() {
+        // No tracer live on this thread and (usually) none globally: the
+        // helpers must not panic and must not record anywhere.
+        let t0 = Instant::now();
+        record_since(Stage::Decode, t0, 1);
+        instant(Stage::CacheEvict, 1);
+        set_trace_id(3);
+
+        // Even with the global gate up, a thread without an installed
+        // context records nothing.
+        let _guard = GATE.lock().unwrap();
+        let t = Tracer::new(1, TraceConfig::default());
+        record_since(Stage::Decode, t0, 1);
+        assert_eq!(t.spans().len(), 0);
+    }
+
+    #[test]
+    fn mint_is_unique_and_nonzero() {
+        let _guard = GATE.lock().unwrap();
+        let t = Tracer::new(1, TraceConfig::default());
+        let a = t.mint();
+        let b = t.mint();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chrome_trace_export_parses_and_covers_tracks() {
+        let _guard = GATE.lock().unwrap();
+        let t = Tracer::new(2, TraceConfig::default());
+        t.record_frontend(Stage::Route, Instant::now(), 5, 0);
+        {
+            let _ctx = install(t.shard_ring(1), t.epoch());
+            set_trace_id(5);
+            record_since(Stage::Batch, Instant::now(), 4);
+        }
+        let doc = t.to_chrome_trace();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 thread_name metadata events + 2 spans
+        assert_eq!(events.len(), 5);
+        let route = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("route"))
+            .unwrap();
+        assert_eq!(route.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(route.get("tid").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(
+            route
+                .get("args")
+                .unwrap()
+                .get("trace")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            5
+        );
+        let batch = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("batch"))
+            .unwrap();
+        assert_eq!(batch.get("tid").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn concurrent_frontend_recording_loses_nothing_under_capacity() {
+        let ring = Arc::new(SpanRing::new(4096));
+        let threads = 8;
+        let per = 128;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        ring.record(Stage::Route, (t * per + i) as u64 + 1, 0, 1, 0);
+                    }
+                });
+            }
+        });
+        let mut out = Vec::new();
+        ring.drain(0, &mut out);
+        assert_eq!(out.len(), threads * per);
+        assert_eq!(ring.dropped(), 0);
+        let mut ids: Vec<u64> = out.iter().map(|s| s.trace_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), threads * per, "every span retained exactly once");
+    }
+
+    #[test]
+    fn kernel_profile_snapshot_and_delta() {
+        let p = kernel_profile();
+        let before = KernelProfile::snapshot();
+        p.calls.fetch_add(2, Ordering::Relaxed);
+        p.rows.fetch_add(100, Ordering::Relaxed);
+        p.key_blocks_skipped.fetch_add(7, Ordering::Relaxed);
+        let after = KernelProfile::snapshot();
+        let d = after.delta(&before);
+        assert!(d.calls >= 2);
+        assert!(d.rows >= 100);
+        assert!(d.key_blocks_skipped >= 7);
+        let rows = d.rows();
+        assert_eq!(rows.len(), 10);
+        assert!(rows.iter().any(|(n, _)| *n == "kernel_key_blocks_skipped"));
+    }
+
+    #[test]
+    fn profile_guard_toggles_gate() {
+        let was = profiling();
+        {
+            let _g = ProfileGuard::enable();
+            assert!(profiling());
+        }
+        assert_eq!(profiling(), was);
+    }
+
+    #[test]
+    fn pipeline_stage_names_are_unique() {
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len());
+    }
+}

@@ -1,0 +1,293 @@
+//! Observability end-to-end tests (ISSUE 6): a traced synthetic server
+//! run must export a Chrome `trace_event` timeline that reconstructs
+//! every request's route -> enqueue -> batch -> tokenize -> decode ->
+//! attend -> respond path across worker shards, the metrics snapshot
+//! must agree exactly with the recorded events under an 8-thread
+//! hammer, and the Prometheus exposition must round-trip through the
+//! JSON snapshot format.
+//!
+//! The server runs on [`NativeSdpaDecoder`] — the artifact-free backend
+//! that drives the real blocked flash kernel — so Attend spans and the
+//! kernel profiling counters come from the production code path.
+
+use std::sync::Arc;
+
+use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
+use se2attn::coordinator::batcher::BatcherConfig;
+use se2attn::coordinator::telemetry::ServerStats;
+use se2attn::coordinator::{
+    Backend, BackendFactory, NativeSdpaDecoder, RolloutRequest, Router, ServeConfig, Server,
+};
+use se2attn::jsonio::Json;
+use se2attn::metrics_export::{validate_prometheus, MetricsSnapshot};
+use se2attn::sim::ScenarioGenerator;
+use se2attn::trace::Stage;
+
+const METHOD: Method = Method::Se2Fourier;
+
+fn native_factory(n_actions: usize) -> BackendFactory {
+    let kernel = se2attn::attention::kernel::KernelConfig::fixed(16, 8, 1);
+    Arc::new(move |_shard: usize| -> anyhow::Result<Backend> {
+        let mut backend: Backend = Router::new();
+        backend.deploy(METHOD, Box::new(NativeSdpaDecoder::new(n_actions, kernel)));
+        Ok(backend)
+    })
+}
+
+fn traced_server(workers: usize) -> Server {
+    let model = ModelConfig::synthetic();
+    let n_actions = model.n_actions;
+    let cfg = SystemConfig {
+        artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        model,
+        sim: SimConfig::default(),
+        threads: 1,
+    };
+    let mut serve = ServeConfig::with_workers(workers);
+    serve.workers = workers;
+    serve.batcher = BatcherConfig {
+        batch_size: 2,
+        max_wait: std::time::Duration::from_millis(2),
+        max_queue: 256,
+    };
+    serve.trace.enabled = true;
+    serve.trace.ring_spans = 4096;
+    serve.profile.enabled = true;
+    Server::start_with_backend(cfg, vec![METHOD], serve, native_factory(n_actions))
+        .expect("traced server start")
+}
+
+/// The headline end-to-end check: serve a traced workload pinned to both
+/// shards, then reconstruct per-request timelines from the exported
+/// Chrome trace and cross-check the metrics snapshot.
+#[test]
+fn traced_run_reconstructs_per_request_timelines_across_shards() {
+    let server = traced_server(2);
+    let sim = SimConfig::default();
+    let gen = ScenarioGenerator::new(sim.clone());
+
+    // pick seeds until session-affinity routing covers both shards
+    let mut picked = Vec::new();
+    let mut per_shard = [0usize; 2];
+    let mut seed = 0u64;
+    while picked.len() < 6 {
+        let s = gen.generate(700 + seed);
+        seed += 1;
+        let shard = server.shard_for(&s);
+        if per_shard[shard] < 3 {
+            per_shard[shard] += 1;
+            picked.push(s);
+        }
+    }
+    assert_eq!(per_shard, [3, 3], "workload must cover both shards");
+
+    let mut pending = Vec::new();
+    for (i, scenario) in picked.into_iter().enumerate() {
+        pending.push(server.submit(
+            METHOD,
+            RolloutRequest {
+                scenario,
+                t0: sim.history_steps - 1,
+                n_samples: 1,
+                temperature: 1.0,
+                seed: i as i32,
+            },
+        ));
+    }
+    for rx in pending {
+        rx.recv().expect("server alive").expect("rollout ok");
+    }
+
+    // join the workers so every span (incl. the final Batch/Respond) has
+    // landed before the rings are drained
+    let tracer = server.tracer().expect("tracing enabled").clone();
+    let stats = Arc::clone(&server.stats);
+    drop(server);
+
+    // the export must survive a serialize -> parse round trip
+    let doc = Json::parse(&tracer.to_chrome_trace().to_string()).expect("trace json parses");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let recorded = doc
+        .get("otherData")
+        .and_then(|o| o.get("spans_recorded"))
+        .and_then(|n| n.as_f64())
+        .unwrap_or(0.0);
+    assert!(recorded > 0.0, "no spans recorded");
+
+    // stage name -> count, and trace id -> stages + (first ts, last ts)
+    let mut stage_counts: std::collections::BTreeMap<&str, usize> =
+        std::collections::BTreeMap::new();
+    let mut by_trace: std::collections::BTreeMap<u64, Vec<(&str, f64, usize)>> =
+        std::collections::BTreeMap::new();
+    let mut shard_tracks: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph != "X" && ph != "i" {
+            continue;
+        }
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("event name");
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("event ts");
+        let tid = ev.get("tid").and_then(|t| t.as_usize()).expect("event tid");
+        let trace = ev
+            .get("args")
+            .and_then(|a| a.get("trace"))
+            .and_then(|t| t.as_f64())
+            .unwrap_or(0.0) as u64;
+        *stage_counts.entry(name).or_insert(0) += 1;
+        if trace > 0 {
+            by_trace.entry(trace).or_default().push((name, ts, tid));
+        }
+        if tid >= 1 {
+            shard_tracks.insert(tid);
+        }
+    }
+    for stage in Stage::PIPELINE {
+        assert!(
+            stage_counts.get(stage.name()).copied().unwrap_or(0) > 0,
+            "no {} spans in the trace",
+            stage.name()
+        );
+    }
+    assert!(
+        shard_tracks.len() >= 2,
+        "spans must land on both shard tracks, got {shard_tracks:?}"
+    );
+
+    // every traced request reconstructs its full pipeline, in order
+    assert_eq!(by_trace.len(), 6, "one timeline per request");
+    for (trace, spans) in &by_trace {
+        let stages: std::collections::BTreeSet<&str> =
+            spans.iter().map(|(name, _, _)| *name).collect();
+        for need in ["route", "enqueue", "tokenize", "decode", "attend", "respond"] {
+            assert!(stages.contains(need), "request {trace} is missing {need}");
+        }
+        let ts_of = |stage: &str| -> f64 {
+            spans
+                .iter()
+                .filter(|(name, _, _)| *name == stage)
+                .map(|(_, ts, _)| *ts)
+                .fold(f64::NAN, f64::max)
+        };
+        assert!(
+            ts_of("respond") >= ts_of("route"),
+            "request {trace}: respond before route"
+        );
+        // route is frontend-side (track 0), the rest shard-side
+        let route_track = spans
+            .iter()
+            .find(|(name, _, _)| *name == "route")
+            .map(|(_, _, tid)| *tid)
+            .unwrap();
+        assert_eq!(route_track, 0, "route spans live on the frontend track");
+        assert!(
+            spans.iter().any(|(name, _, tid)| *name == "decode" && *tid >= 1),
+            "request {trace}: decode must run on a shard track"
+        );
+    }
+
+    // metrics snapshot agrees with the run and the profiling counters saw
+    // real kernel work (NativeSdpaDecoder drives flash_sdpa_blocked)
+    assert_eq!(stats.requests_done.get(), 6);
+    let snap = MetricsSnapshot::collect(&stats, Some(&tracer));
+    let scalar = |name: &str| -> u64 {
+        snap.scalars
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.value)
+            .sum()
+    };
+    assert_eq!(scalar("se2attn_requests_done_total"), 6);
+    assert!(scalar("se2attn_trace_spans_recorded_total") > 0);
+    assert!(scalar("se2attn_kernel_calls_total") > 0, "profiling counters idle");
+    let e2e = snap
+        .histograms
+        .iter()
+        .find(|h| h.name == "se2attn_e2e_latency_us")
+        .expect("e2e histogram exported");
+    assert_eq!(e2e.count, 6);
+    assert_eq!(e2e.buckets.iter().sum::<u64>(), 6);
+    validate_prometheus(&snap.to_prometheus()).expect("exposition valid");
+}
+
+/// Satellite: hammer the histogram + counters from 8 threads while a 9th
+/// snapshots concurrently; exported totals must equal the recorded
+/// events exactly (count == sum of buckets, exact min/max).
+#[test]
+fn concurrent_recording_and_snapshots_stay_exact() {
+    const THREADS: u64 = 8;
+    const PER: u64 = 5_000;
+    let stats = Arc::new(ServerStats::with_shards(1));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let s = Arc::clone(&stats);
+        handles.push(std::thread::spawn(move || {
+            for i in 1..=PER {
+                s.requests_in.inc();
+                s.e2e_latency.record_us(i);
+                s.decode_latency.record_us(1 + i % 4096);
+            }
+        }));
+    }
+    let snapper = {
+        let s = Arc::clone(&stats);
+        std::thread::spawn(move || {
+            // mid-flight snapshots must always be internally valid
+            for _ in 0..50 {
+                let snap = MetricsSnapshot::collect(&s, None);
+                validate_prometheus(&snap.to_prometheus()).expect("mid-flight exposition valid");
+                std::thread::yield_now();
+            }
+        })
+    };
+    for h in handles {
+        h.join().unwrap();
+    }
+    snapper.join().unwrap();
+
+    let total = THREADS * PER;
+    assert_eq!(stats.requests_in.get(), total);
+    assert_eq!(stats.e2e_latency.count(), total);
+    assert_eq!(stats.e2e_latency.bucket_counts().iter().sum::<u64>(), total);
+    assert_eq!(stats.e2e_latency.min_us(), 1);
+    assert_eq!(stats.e2e_latency.max_us(), PER);
+    assert_eq!(stats.e2e_latency.sum_us(), THREADS * PER * (PER + 1) / 2);
+
+    let snap = MetricsSnapshot::collect(&stats, None);
+    let requests = snap
+        .scalars
+        .iter()
+        .find(|s| s.name == "se2attn_requests_in_total")
+        .unwrap();
+    assert_eq!(requests.value, total);
+    for name in ["se2attn_e2e_latency_us", "se2attn_decode_latency_us"] {
+        let h = snap.histograms.iter().find(|h| h.name == name).unwrap();
+        assert_eq!(h.count, total, "{name} count");
+        assert_eq!(h.buckets.iter().sum::<u64>(), total, "{name} buckets");
+    }
+}
+
+/// Satellite: the JSON snapshot round-trips losslessly and re-renders to
+/// an identical, validator-clean Prometheus exposition.
+#[test]
+fn snapshot_roundtrip_preserves_prometheus_exposition() {
+    let stats = ServerStats::with_shards(2);
+    stats.requests_in.add(17);
+    stats.requests_done.add(16);
+    stats.e2e_latency.record_us(250);
+    stats.e2e_latency.record_us(80_000);
+    stats.decode_latency.record_us(1_024);
+    stats.shards[1].requests.add(9);
+
+    let snap = MetricsSnapshot::collect(&stats, None);
+    let text = snap.to_json().to_string();
+    let back = MetricsSnapshot::from_json(&Json::parse(&text).expect("snapshot json parses"))
+        .expect("snapshot deserializes");
+    assert_eq!(snap, back);
+    let exposition = back.to_prometheus();
+    assert_eq!(exposition, snap.to_prometheus());
+    let samples = validate_prometheus(&exposition).expect("round-tripped exposition valid");
+    assert!(samples > 0);
+}

@@ -57,6 +57,7 @@ fn synthetic_server(workers: usize, batcher: BatcherConfig) -> Server {
             batcher,
             cache: CacheConfig::default(),
             kernel: se2attn::attention::kernel::KernelConfig::default(),
+            ..ServeConfig::default()
         },
         synthetic_factory(),
     )
