@@ -488,6 +488,10 @@ pub fn flash_sdpa_rows(
 
     let threads = run_chunked(n, ROWS_PER_TASK, cfg.threads, &|lo, hi| {
         SCRATCH.with(|cell| {
+            // per-thread scratch growth (`ensure` plus quantized-row
+            // dequantization buffers) is charged to the kernel_scratch
+            // scope — one scope enter per chunk, not per row
+            let _mem = crate::obs::alloc::MemScope::enter("kernel_scratch");
             let mut sc = cell.borrow_mut();
             sc.ensure(block_m, c);
             let mut prof = RowProfile::default();

@@ -305,6 +305,32 @@ pub fn default_workers() -> usize {
         .clamp(1, 8)
 }
 
+/// Live introspection server settings (`simulate --obs-addr`;
+/// [`crate::obs::http`], DESIGN.md §16).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Bind address, e.g. `127.0.0.1:9464` (port 0 picks an ephemeral
+    /// port — the server reports the bound address).
+    pub addr: String,
+    /// Polling interval of the background watermark sampler feeding
+    /// `/vars`.
+    pub sample_interval: std::time::Duration,
+    /// Sample-ring capacity: `/vars?watch=N` serves at most this many
+    /// trailing samples (600 × 100 ms ≈ one minute of history).
+    pub history: usize,
+}
+
+impl ObsConfig {
+    /// Config for a bind address with default sampler cadence.
+    pub fn at(addr: &str) -> ObsConfig {
+        ObsConfig {
+            addr: addr.to_string(),
+            sample_interval: std::time::Duration::from_millis(100),
+            history: 600,
+        }
+    }
+}
+
 /// Whole-system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {

@@ -66,6 +66,9 @@ impl<T> Batcher<T> {
         if self.queue.len() >= self.cfg.max_queue {
             return Err(item);
         }
+        // queue growth (VecDeque doublings up to max_queue slots) is
+        // charged to the batcher scope in the memory attribution table
+        let _mem = crate::obs::alloc::MemScope::enter("batcher");
         self.queue.push_back(Queued {
             item,
             enqueued_at: Instant::now(),

@@ -369,6 +369,9 @@ impl MapRegistry {
             None => false,
         };
         self.stats.map_misses.inc();
+        // shared map rows are charged to the map_registry scope in the
+        // memory attribution table (DESIGN.md §16)
+        let _mem = crate::obs::alloc::MemScope::enter("map_registry");
         let m = Arc::new(MapTokens::tokenize(tok, elements));
         inner.bytes += m.resident_bytes();
         self.stats.resident_bytes.add(m.resident_bytes() as u64);
@@ -571,6 +574,8 @@ impl KvCachePool {
                     && e.cache.precision() == precision =>
             {
                 self.stats.hits.inc();
+                // frontier rows are charged to the kvcache scope
+                let _mem = crate::obs::alloc::MemScope::enter("kvcache");
                 e.cache.advance(tok, window.last().unwrap());
                 e
             }
@@ -581,7 +586,11 @@ impl KvCachePool {
                     self.stats.resident_bytes.sub(gone.bytes as u64);
                 }
                 self.stats.misses.inc();
+                // map rows enter their own map_registry scope inside
+                // get_or_tokenize; only the per-session window rows built
+                // below are charged to kvcache
                 let map = self.maps.get_or_tokenize(key.scene, tok, map_elements);
+                let _mem = crate::obs::alloc::MemScope::enter("kvcache");
                 let cache = WindowCache::from_window_with(tok, map, window, precision)?;
                 let bytes = cache.resident_bytes();
                 inner.session_bytes += bytes;

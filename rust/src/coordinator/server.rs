@@ -138,6 +138,9 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     /// Span recorder, present when `ServeConfig::trace.enabled`.
     tracer: Option<Arc<Tracer>>,
+    /// Per-shard queue capacity, retained for the introspection
+    /// server's saturation check ([`Server::obs_sources`]).
+    max_queue: usize,
     /// Holds the global profiling gate up while the server lives.
     _profile: Option<ProfileGuard>,
 }
@@ -240,6 +243,7 @@ impl Server {
             router: ShardRouter::new(workers),
             stats,
             tracer,
+            max_queue: serve.batcher.max_queue,
             _profile: profile,
         };
         // wait for every shard's model load/compile before accepting
@@ -269,6 +273,19 @@ impl Server {
     /// function of the family-aware scene id — exposed for tests).
     pub fn shard_for(&self, scenario: &Scenario) -> usize {
         shard_of(scenario.scene_id(), self.shards.len())
+    }
+
+    /// Data sources for a live introspection server
+    /// ([`crate::obs::http::ObsServer::start`]): shared stats, the span
+    /// rings, and this server's per-shard queue capacity for the
+    /// `/healthz` saturation check.  Everything is `Arc`-shared, so the
+    /// introspection server may outlive this handle.
+    pub fn obs_sources(&self) -> crate::obs::http::ObsSources {
+        crate::obs::http::ObsSources {
+            stats: Arc::clone(&self.stats),
+            tracer: self.tracer.clone(),
+            max_queue: self.max_queue,
+        }
     }
 
     /// Submit a rollout with session affinity: requests for the same
@@ -396,7 +413,21 @@ struct ShardCtx {
     tracer: Option<Arc<Tracer>>,
 }
 
+/// Clears a shard's liveness gauge when its worker exits — by returning
+/// *or by panicking* (Drop runs on unwind), so `/healthz` reports dead
+/// shards either way.
+struct LiveGuard(Arc<ShardStats>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.live.set(0);
+        self.0.queue_depth.set(0);
+    }
+}
+
 fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Sender<Result<()>>) {
+    ctx.shard.live.set(1);
+    let _live = LiveGuard(Arc::clone(&ctx.shard));
     // bind this thread to its span ring for the worker's whole lifetime
     let _trace_ctx = ctx
         .tracer
@@ -467,6 +498,9 @@ fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Send
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
         }
+        // saturation is visible to /healthz the moment the queues fill,
+        // not only after the next flush completes
+        refresh_queue_depth(&ctx, &batchers);
 
         // flush any ready batches
         let now = Instant::now();
@@ -475,6 +509,7 @@ fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Send
                 run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
             }
         }
+        refresh_queue_depth(&ctx, &batchers);
     }
 
     // graceful shutdown: drain queued requests through the rollout engine
@@ -487,6 +522,15 @@ fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Send
             run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
         }
     }
+}
+
+/// Publish the shard's total queued-envelope count to its gauge (the
+/// batchers live on the worker thread; the gauge is how `/healthz` and
+/// the `/vars` sampler observe queue depth without touching them).
+fn refresh_queue_depth(ctx: &ShardCtx, batchers: &BTreeMap<Method, Batcher<Envelope>>) {
+    ctx.shard
+        .queue_depth
+        .set(batchers.values().map(|b| b.len() as u64).sum());
 }
 
 /// Execute one ready batch and respond to each request (shared by the

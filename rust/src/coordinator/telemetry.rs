@@ -374,17 +374,26 @@ pub struct ShardStats {
     /// Requests submitted but not yet answered (the least-loaded routing
     /// signal for stateless traffic).
     pub inflight: Gauge,
+    /// Envelopes currently waiting in this shard's batcher queues
+    /// (refreshed by the worker loop; the `/healthz` saturation signal
+    /// and the `/vars` sampler read it without touching the queues).
+    pub queue_depth: Gauge,
+    /// 1 while the shard worker thread is running, 0 once it exits
+    /// (normally or by panic — maintained by a drop guard, so
+    /// `/healthz` sees dead shards either way).
+    pub live: Gauge,
 }
 
 impl ShardStats {
     /// Compact `s<i>:` fragment for the stats line.
     pub fn summary_fragment(&self, shard: usize) -> String {
         format!(
-            "s{shard}:req={} done={} rej={} inflight={}",
+            "s{shard}:req={} done={} rej={} inflight={} q={}",
             self.requests.get(),
             self.done.get(),
             self.rejected.get(),
             self.inflight.get(),
+            self.queue_depth.get(),
         )
     }
 }
@@ -545,9 +554,10 @@ mod tests {
         stats.shards[0].done.add(2);
         stats.shards[0].inflight.add(1);
         stats.shards[1].rejected.inc();
+        stats.shards[0].queue_depth.set(5);
         let s = stats.summary();
-        assert!(s.contains("s0:req=3 done=2 rej=0 inflight=1"), "{s}");
-        assert!(s.contains("s1:req=0 done=0 rej=1 inflight=0"), "{s}");
+        assert!(s.contains("s0:req=3 done=2 rej=0 inflight=1 q=5"), "{s}");
+        assert!(s.contains("s1:req=0 done=0 rej=1 inflight=0 q=0"), "{s}");
         // a shard-less bundle keeps the legacy line shape
         assert!(!ServerStats::default().summary().contains("shards["));
     }

@@ -147,6 +147,10 @@ struct ScopedJob {
 struct Ticket {
     f: *const (dyn Fn(usize) + Sync),
     job: Arc<ScopedJob>,
+    /// The submitter's memory-attribution scope: pool workers allocate on
+    /// behalf of the caller (e.g. kernel scratch), so their allocations
+    /// are charged to the caller's scope, not the worker's default.
+    scope: crate::obs::alloc::Scope,
 }
 
 unsafe impl Send for Ticket {}
@@ -234,12 +238,14 @@ impl ScopedPool {
             done_cv: Condvar::new(),
             panicked: std::sync::atomic::AtomicBool::new(false),
         });
+        let scope = crate::obs::alloc::current_scope();
         {
             let mut q = self.shared.queue.lock().unwrap();
             for _ in 0..helpers {
                 q.push_back(Ticket {
                     f: f as *const (dyn Fn(usize) + Sync),
                     job: Arc::clone(&job),
+                    scope,
                 });
             }
         }
@@ -320,6 +326,9 @@ fn scoped_worker(shared: Arc<ScopedShared>) {
         };
         let Some(t) = ticket else { return };
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // run the borrowed closure under the submitter's scope so
+            // worker-side allocations land in the caller's ledger row
+            let _mem = crate::obs::alloc::MemScope::enter_scope(t.scope);
             scoped_drain(unsafe { &*t.f }, &t.job);
         }));
         if r.is_err() {
@@ -426,14 +435,20 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
     }
     let threads = threads.max(1).min(n);
     let next = std::sync::atomic::AtomicUsize::new(0);
+    // fresh OS threads start in the untagged scope; carry the caller's
+    // attribution scope across the spawn boundary
+    let scope = crate::obs::alloc::current_scope();
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    return;
+            s.spawn(|| {
+                let _mem = crate::obs::alloc::MemScope::enter_scope(scope);
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    f(i);
                 }
-                f(i);
             });
         }
     });

@@ -50,6 +50,7 @@ pub mod jsonio;
 pub mod linalg;
 pub mod metrics;
 pub mod metrics_export;
+pub mod obs;
 pub mod prng;
 pub mod proplite;
 pub mod runtime;

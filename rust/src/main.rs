@@ -82,6 +82,17 @@ fn app() -> App {
             .opt("trace-spans", "16384",
                  "span-ring slots per shard when tracing (32 B each; the \
                   ring overwrites oldest spans when full)")
+            .opt("obs-addr", "",
+                 "serve live introspection HTTP on this address while the \
+                  run is in flight (e.g. 127.0.0.1:9464): GET /metrics \
+                  (Prometheus), /metrics.json, /memory (allocator \
+                  attribution), /trace (Chrome trace), /healthz, \
+                  /vars?watch=N")
+            .opt("obs-hold-ms", "0",
+                 "keep the server and the --obs-addr endpoints alive this \
+                  many ms after the request loop drains, so external \
+                  scrapers can land a mid-run read (used by the CI \
+                  observability smoke)")
             .flag("profile",
                   "enable kernel/cache profiling counters (block skips, \
                    dequantized rows, scratch bytes, evictions) — \
@@ -363,6 +374,19 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         server.n_shards(),
         m.get("cache-precision"),
     );
+    let obs = if let Some(addr) = m.get_opt("obs-addr") {
+        let obs_cfg = se2attn::config::ObsConfig::at(addr);
+        let obs = se2attn::obs::http::ObsServer::start(&obs_cfg, server.obs_sources())
+            .with_context(|| format!("starting introspection server on {addr}"))?;
+        println!(
+            "introspection server on http://{} \
+             (/metrics /metrics.json /memory /trace /healthz /vars)",
+            obs.addr()
+        );
+        Some(obs)
+    } else {
+        None
+    };
     let gen = se2attn::sim::MixGenerator::new(cfg.sim.clone(), mix);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -399,11 +423,23 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
     }
     println!("server stats: {}", server.stats.summary());
 
+    // give external scrapers a window where the server (and the obs
+    // endpoints) are still fully live — the CI smoke curls /metrics and
+    // /healthz inside this hold
+    let hold_ms = m.get_u64("obs-hold-ms");
+    if obs.is_some() && hold_ms > 0 {
+        println!("holding {hold_ms} ms for live scrapes (--obs-hold-ms)");
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
+
     // exports: join the workers first so every in-flight span and counter
     // update lands before we snapshot the rings
     let tracer = server.tracer().cloned();
     let stats = Arc::clone(&server.stats);
     drop(server);
+    if let Some(obs) = obs {
+        obs.stop();
+    }
     if let Some(before) = profile_before {
         let prof = se2attn::trace::KernelProfile::snapshot().delta(&before);
         println!("kernel profile (this run):");

@@ -189,6 +189,43 @@ impl MetricsSnapshot {
             push("se2attn_trace_spans_dropped_total", &no_labels, Counter, dropped);
         }
 
+        // memory attribution (DESIGN.md §16): the tracking allocator's
+        // per-scope ledger, one label per subsystem, grouped per metric
+        // family so each `# TYPE` header covers its whole series
+        let mem = crate::obs::alloc::snapshot_all();
+        let scope_labels = |sc: &crate::obs::alloc::ScopeSnapshot| {
+            vec![("scope".to_string(), sc.scope.name().to_string())]
+        };
+        for sc in &mem {
+            push("se2attn_mem_live_bytes", &scope_labels(sc), Gauge, sc.live_bytes);
+        }
+        for sc in &mem {
+            push("se2attn_mem_peak_bytes", &scope_labels(sc), Gauge, sc.peak_bytes);
+        }
+        for sc in &mem {
+            push("se2attn_mem_allocs_total", &scope_labels(sc), Counter, sc.allocs);
+        }
+        for sc in &mem {
+            push("se2attn_mem_frees_total", &scope_labels(sc), Counter, sc.frees);
+        }
+        push(
+            "se2attn_mem_resident_bytes",
+            &no_labels,
+            Gauge,
+            crate::obs::alloc::total_live_bytes(),
+        );
+        if let Some(audit) = crate::obs::memreport::audit() {
+            // the fitted growth exponent, in hundredths (gauges are u64;
+            // 100 = exactly linear, 200 = quadratic)
+            push(
+                "se2attn_mem_audit_exponent_centi",
+                &no_labels,
+                Gauge,
+                (audit.exponent * 100.0).round().max(0.0) as u64,
+            );
+            push("se2attn_mem_audit_samples", &no_labels, Gauge, audit.samples as u64);
+        }
+
         s.histograms.push(HistogramSnapshot::of("se2attn_e2e_latency_us", &stats.e2e_latency));
         s.histograms.push(HistogramSnapshot::of(
             "se2attn_decode_latency_us",
@@ -349,10 +386,13 @@ impl MetricsSnapshot {
                     labels.push((k.clone(), v.to_string()));
                 }
             }
+            // clamp below at zero: a hand-edited or corrupted document
+            // must not wrap a negative value to u64::MAX-ish garbage
             let value = s
                 .get("value")
                 .and_then(|v| v.as_f64())
-                .ok_or_else(|| anyhow::anyhow!("scalar {name} missing value"))? as u64;
+                .ok_or_else(|| anyhow::anyhow!("scalar {name} missing value"))?
+                .max(0.0) as u64;
             out.scalars.push(Scalar {
                 name: name.to_string(),
                 labels,
@@ -374,9 +414,10 @@ impl MetricsSnapshot {
                 .and_then(|v| v.as_arr())
                 .ok_or_else(|| anyhow::anyhow!("histogram {name} missing buckets"))?
                 .iter()
-                .map(|b| b.as_f64().unwrap_or(0.0) as u64)
+                .map(|b| b.as_f64().unwrap_or(0.0).max(0.0) as u64)
                 .collect();
-            let field = |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            let field =
+                |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0).max(0.0) as u64;
             out.histograms.push(HistogramSnapshot {
                 name: name.to_string(),
                 buckets,
@@ -394,9 +435,16 @@ fn render_labels(labels: &[(String, String)]) -> String {
     if labels.is_empty() {
         return String::new();
     }
+    // Prometheus label values escape exactly `\`, `"`, and newline; the
+    // backslash must go first so later escapes are not double-escaped.
     let parts: Vec<String> = labels
         .iter()
-        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .map(|(k, v)| {
+            format!(
+                "{k}=\"{}\"",
+                v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+            )
+        })
         .collect();
     format!("{{{}}}", parts.join(","))
 }
@@ -440,6 +488,12 @@ pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
         // sample line: name[{labels}] value
         let (ident, value) = split_sample(line)
             .ok_or_else(|| anyhow::anyhow!("line {}: malformed sample {line:?}", lineno + 1))?;
+        if !valid_label_escapes(ident) {
+            anyhow::bail!(
+                "line {}: invalid escape or unterminated label value in {ident:?}",
+                lineno + 1
+            );
+        }
         let name = ident.split('{').next().unwrap_or(ident);
         if !valid_metric_name(name) {
             anyhow::bail!("line {}: bad metric name {name:?}", lineno + 1);
@@ -463,6 +517,25 @@ pub fn validate_prometheus(text: &str) -> anyhow::Result<usize> {
         anyhow::bail!("no samples found");
     }
     Ok(samples)
+}
+
+/// Reject label values with invalid escape sequences: inside quotes a
+/// backslash may only introduce `\\`, `\"`, or `\n` (the exact set
+/// [`render_labels`] emits); quotes must be balanced.
+fn valid_label_escapes(ident: &str) -> bool {
+    let mut in_quotes = false;
+    let mut chars = ident.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '\\' if in_quotes => match chars.next() {
+                Some('\\') | Some('"') | Some('n') => {}
+                _ => return false,
+            },
+            _ => {}
+        }
+    }
+    !in_quotes
 }
 
 fn valid_metric_name(name: &str) -> bool {
@@ -645,6 +718,88 @@ mod tests {
         );
         let ok = "# TYPE m counter\nm{a=\"x y\"} 3\nm 4\n";
         assert_eq!(validate_prometheus(ok).unwrap(), 2);
+    }
+
+    #[test]
+    fn collect_exports_memory_attribution_families() {
+        let stats = ServerStats::with_shards(1);
+        let snap = MetricsSnapshot::collect(&stats, None);
+        for scope in crate::obs::alloc::Scope::ALL {
+            let labels = vec![("scope".to_string(), scope.name().to_string())];
+            for name in ["se2attn_mem_live_bytes", "se2attn_mem_peak_bytes"] {
+                assert!(
+                    snap.scalars.iter().any(|s| s.name == name && s.labels == labels),
+                    "missing {name} for scope {:?}",
+                    scope.name()
+                );
+            }
+        }
+        assert!(snap.scalars.iter().any(|s| s.name == "se2attn_mem_resident_bytes"));
+        let text = snap.to_prometheus();
+        validate_prometheus(&text).expect("mem families must render valid exposition");
+        assert!(text.contains("se2attn_mem_live_bytes{scope=\"kvcache\"}"));
+        assert!(text.contains("# TYPE se2attn_mem_allocs_total counter"));
+    }
+
+    #[test]
+    fn delta_clamps_counter_resets_to_zero() {
+        // a restarted process hands `stats --prev` a snapshot whose
+        // counters are AHEAD of the current ones; the interval delta must
+        // clamp at zero, never wrap to ~u64::MAX
+        let stats = sample_stats();
+        let cur = MetricsSnapshot::collect(&stats, None);
+        let mut prev = cur.clone();
+        for s in &mut prev.scalars {
+            if s.kind == MetricKind::Counter {
+                s.value += 1000;
+            }
+        }
+        for h in &mut prev.histograms {
+            h.count += 10;
+            h.sum_us += 10_000;
+            for b in &mut h.buckets {
+                *b += 1;
+            }
+        }
+        let d = cur.delta(&prev);
+        for s in d.scalars.iter().filter(|s| s.kind == MetricKind::Counter) {
+            assert_eq!(s.value, 0, "{} must clamp to zero", s.name);
+        }
+        for h in &d.histograms {
+            assert_eq!(h.count, 0);
+            assert_eq!(h.sum_us, 0);
+            assert!(h.buckets.iter().all(|&b| b == 0));
+        }
+    }
+
+    #[test]
+    fn from_json_clamps_negative_values_to_zero() {
+        let doc = Json::parse(
+            r#"{"schema":"se2attn-metrics-v1",
+                "scalars":[{"name":"m","labels":{},"kind":"counter","value":-5}],
+                "histograms":[{"name":"h","buckets":[-1,2],"sum_us":-9,"count":-3,
+                               "min_us":0,"max_us":0}]}"#,
+        )
+        .unwrap();
+        let snap = MetricsSnapshot::from_json(&doc).unwrap();
+        assert_eq!(snap.scalars[0].value, 0);
+        assert_eq!(snap.histograms[0].buckets, vec![0, 2]);
+        assert_eq!(snap.histograms[0].sum_us, 0);
+        assert_eq!(snap.histograms[0].count, 0);
+    }
+
+    #[test]
+    fn labels_escape_backslash_quote_and_newline() {
+        let labels = vec![("path".to_string(), "a\\b\"c\nd".to_string())];
+        let r = render_labels(&labels);
+        assert_eq!(r, "{path=\"a\\\\b\\\"c\\nd\"}");
+        // a document carrying that label round-trips the validator
+        let text = format!("# TYPE m counter\nm{r} 1\n");
+        assert_eq!(validate_prometheus(&text).unwrap(), 1);
+        // but an invalid escape sequence is rejected
+        assert!(validate_prometheus("# TYPE m counter\nm{a=\"x\\q\"} 1\n").is_err());
+        // and so is an unterminated label value
+        assert!(validate_prometheus("# TYPE m counter\nm{a=\"x} 1\n").is_err());
     }
 
     #[test]

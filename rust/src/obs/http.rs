@@ -1,0 +1,499 @@
+//! Live introspection server: hand-rolled HTTP/1.1 over
+//! `std::net::TcpListener` (the substrate for the absent `hyper`).
+//!
+//! Started by `simulate --obs-addr 127.0.0.1:9464`, or embedded via
+//! [`ObsServer::start`].  One accept thread (non-blocking poll so
+//! shutdown never hangs on `accept`), one short-lived handler thread
+//! per connection (bodies are small, endpoints are operator-driven),
+//! and one background **watermark sampler** polling
+//! inflight/queue-depth/resident-bytes into a bounded ring for
+//! `/vars`.  `Connection: close` on every response — no keep-alive
+//! state machine.
+//!
+//! | endpoint          | body                                             |
+//! |-------------------|--------------------------------------------------|
+//! | `/metrics`        | Prometheus text exposition (live snapshot)       |
+//! | `/metrics.json`   | JSON snapshot (schema `se2attn-metrics-v1`)      |
+//! | `/memory`         | allocator scope table (`?format=json` for JSON)  |
+//! | `/trace`          | Chrome trace of the span rings so far            |
+//! | `/healthz`        | 200 `ok` / 503 `degraded` (liveness+saturation)  |
+//! | `/vars?watch=N`   | last N sampler readings + watermarks (JSON)      |
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ObsConfig;
+use crate::coordinator::telemetry::ServerStats;
+use crate::jsonio::Json;
+use crate::metrics_export::MetricsSnapshot;
+use crate::obs::{alloc, memreport};
+use crate::trace::Tracer;
+
+/// Data sources the endpoints read from.  Everything is shared-ownership
+/// and lock-free to read, so the server can outlive (or predate) the
+/// serving [`crate::coordinator::Server`] that populates it.
+pub struct ObsSources {
+    pub stats: Arc<ServerStats>,
+    /// Span rings for `/trace` (`None` when tracing is disabled).
+    pub tracer: Option<Arc<Tracer>>,
+    /// Per-shard batcher queue capacity
+    /// ([`crate::coordinator::batcher::BatcherConfig::max_queue`]);
+    /// `queue_depth >= max_queue` flips `/healthz` to 503.  0 disables
+    /// the saturation check.
+    pub max_queue: usize,
+}
+
+/// One `/vars` sampler reading.
+#[derive(Clone, Copy, Debug)]
+struct Sample {
+    /// Milliseconds since the server started.
+    t_ms: u64,
+    inflight: u64,
+    queue_depth: u64,
+    /// Total live Rust-heap bytes (all allocator scopes).
+    resident_bytes: u64,
+    /// Live bytes attributed to the kvcache scope.
+    kvcache_bytes: u64,
+}
+
+#[derive(Default)]
+struct Watermarks {
+    inflight: AtomicU64,
+    queue_depth: AtomicU64,
+    resident_bytes: AtomicU64,
+    kvcache_bytes: AtomicU64,
+}
+
+struct Shared {
+    sources: ObsSources,
+    started: Instant,
+    interval: Duration,
+    history: usize,
+    samples: Mutex<VecDeque<Sample>>,
+    watermarks: Watermarks,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    fn take_sample(&self) {
+        let shards = &self.sources.stats.shards;
+        let s = Sample {
+            t_ms: self.started.elapsed().as_millis() as u64,
+            inflight: shards.iter().map(|s| s.inflight.get()).sum(),
+            queue_depth: shards.iter().map(|s| s.queue_depth.get()).sum(),
+            resident_bytes: alloc::total_live_bytes(),
+            kvcache_bytes: alloc::snapshot(alloc::Scope::KvCache).live_bytes,
+        };
+        let w = &self.watermarks;
+        w.inflight.fetch_max(s.inflight, Ordering::Relaxed);
+        w.queue_depth.fetch_max(s.queue_depth, Ordering::Relaxed);
+        w.resident_bytes.fetch_max(s.resident_bytes, Ordering::Relaxed);
+        w.kvcache_bytes.fetch_max(s.kvcache_bytes, Ordering::Relaxed);
+        let mut ring = self.samples.lock().unwrap();
+        if ring.len() >= self.history.max(1) {
+            ring.pop_front();
+        }
+        ring.push_back(s);
+    }
+}
+
+/// Running introspection server.  [`ObsServer::stop`] (or drop) joins
+/// the accept and sampler threads; in-flight connection handlers finish
+/// on their own (they hold only `Arc<Shared>`).
+pub struct ObsServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    sampler: Option<JoinHandle<()>>,
+}
+
+impl ObsServer {
+    /// Bind `cfg.addr` and start serving.  Port 0 binds an ephemeral
+    /// port; read the result back from [`ObsServer::addr`].
+    pub fn start(cfg: &ObsConfig, sources: ObsSources) -> std::io::Result<ObsServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        // Non-blocking accept + poll loop: shutdown is a flag check away,
+        // no self-connect trick needed to unblock `accept`.
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            sources,
+            started: Instant::now(),
+            interval: cfg.sample_interval.max(Duration::from_millis(10)),
+            history: cfg.history.max(1),
+            samples: Mutex::new(VecDeque::new()),
+            watermarks: Watermarks::default(),
+            stop: AtomicBool::new(false),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("se2attn-obs".to_string())
+                .spawn(move || accept_loop(listener, shared))?
+        };
+        let sampler = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("se2attn-obs-sampler".to_string())
+                .spawn(move || sampler_loop(shared))?
+        };
+        Ok(ObsServer {
+            addr,
+            shared,
+            accept: Some(accept),
+            sampler: Some(sampler),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, join the server threads.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sampler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let shared = Arc::clone(&shared);
+                // Handler threads are detached: they only touch
+                // Arc<Shared>, so they may safely outlive stop().
+                let _ = std::thread::Builder::new()
+                    .name("se2attn-obs-conn".to_string())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &shared);
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn sampler_loop(shared: Arc<Shared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        shared.take_sample();
+        // sleep in small steps so stop() never waits a full interval
+        let mut left = shared.interval;
+        while !left.is_zero() && !shared.stop.load(Ordering::SeqCst) {
+            let step = left.min(Duration::from_millis(20));
+            std::thread::sleep(step);
+            left = left.saturating_sub(step);
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    // read until end of headers (we ignore them) or a sane cap
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > 8192 {
+            return respond(&mut stream, 431, "Request Header Fields Too Large", "text/plain", "");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()), // peer went away
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(_) => return Ok(()), // timeout / reset: nothing to answer
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let request_line = text.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => return respond(&mut stream, 400, "Bad Request", "text/plain", "bad request line\n"),
+    };
+    if method != "GET" {
+        return respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            "only GET is supported\n",
+        );
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    route(&mut stream, shared, path, query)
+}
+
+fn route(stream: &mut TcpStream, shared: &Shared, path: &str, query: &str) -> std::io::Result<()> {
+    let src = &shared.sources;
+    match path {
+        "/metrics" => {
+            let snap = MetricsSnapshot::collect(&src.stats, src.tracer.as_deref());
+            respond(
+                stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &snap.to_prometheus(),
+            )
+        }
+        "/metrics.json" => {
+            let snap = MetricsSnapshot::collect(&src.stats, src.tracer.as_deref());
+            respond(stream, 200, "OK", "application/json", &snap.to_json().to_string())
+        }
+        "/memory" => {
+            let report = memreport::collect();
+            if query_param(query, "format") == Some("json") {
+                respond(stream, 200, "OK", "application/json", &report.to_json().to_string())
+            } else {
+                respond(stream, 200, "OK", "text/plain; charset=utf-8", &report.render_table())
+            }
+        }
+        "/trace" => match &src.tracer {
+            Some(t) => respond(stream, 200, "OK", "application/json", &t.to_chrome_trace().to_string()),
+            None => respond(
+                stream,
+                404,
+                "Not Found",
+                "text/plain",
+                "tracing disabled (start with trace enabled, e.g. simulate --trace-out)\n",
+            ),
+        },
+        "/healthz" => {
+            let (ok, body) = health_report(src);
+            if ok {
+                respond(stream, 200, "OK", "text/plain; charset=utf-8", &body)
+            } else {
+                respond(stream, 503, "Service Unavailable", "text/plain; charset=utf-8", &body)
+            }
+        }
+        "/vars" => {
+            let watch = query_param(query, "watch")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(1)
+                .clamp(1, shared.history);
+            respond(stream, 200, "OK", "application/json", &vars_json(shared, watch).to_string())
+        }
+        "/" => respond(
+            stream,
+            200,
+            "OK",
+            "text/plain; charset=utf-8",
+            "se2attn introspection endpoints:\n\
+             /metrics        Prometheus text exposition\n\
+             /metrics.json   JSON metrics snapshot\n\
+             /memory         allocator scope table (?format=json)\n\
+             /trace          Chrome trace of the span rings\n\
+             /healthz        liveness + queue saturation (503 on degradation)\n\
+             /vars?watch=N   sampler time series + watermarks\n",
+        ),
+        _ => respond(stream, 404, "Not Found", "text/plain", "unknown endpoint (try /)\n"),
+    }
+}
+
+/// Shard liveness + queue saturation.  Degraded when any shard's worker
+/// is not running, or any shard's queue sits at capacity.
+fn health_report(src: &ObsSources) -> (bool, String) {
+    let shards = &src.stats.shards;
+    let mut problems = Vec::new();
+    if shards.is_empty() {
+        problems.push("no shards registered".to_string());
+    }
+    for (i, sh) in shards.iter().enumerate() {
+        if sh.live.get() == 0 {
+            problems.push(format!("shard {i}: worker not running"));
+        }
+        let depth = sh.queue_depth.get();
+        if src.max_queue > 0 && depth >= src.max_queue as u64 {
+            problems.push(format!("shard {i}: queue saturated ({depth}/{})", src.max_queue));
+        }
+    }
+    if problems.is_empty() {
+        (true, format!("ok: {} shards live\n", shards.len()))
+    } else {
+        (false, format!("degraded:\n{}\n", problems.join("\n")))
+    }
+}
+
+fn sample_json(s: &Sample) -> Json {
+    Json::obj(vec![
+        ("t_ms", Json::Num(s.t_ms as f64)),
+        ("inflight", Json::Num(s.inflight as f64)),
+        ("queue_depth", Json::Num(s.queue_depth as f64)),
+        ("resident_bytes", Json::Num(s.resident_bytes as f64)),
+        ("kvcache_bytes", Json::Num(s.kvcache_bytes as f64)),
+    ])
+}
+
+fn vars_json(shared: &Shared, watch: usize) -> Json {
+    let ring = shared.samples.lock().unwrap();
+    let tail: Vec<Json> = ring
+        .iter()
+        .skip(ring.len().saturating_sub(watch))
+        .map(sample_json)
+        .collect();
+    let w = &shared.watermarks;
+    drop(ring);
+    Json::obj(vec![
+        ("interval_ms", Json::Num(shared.interval.as_millis() as f64)),
+        ("samples", Json::Arr(tail)),
+        (
+            "watermarks",
+            Json::obj(vec![
+                ("inflight", Json::Num(w.inflight.load(Ordering::Relaxed) as f64)),
+                ("queue_depth", Json::Num(w.queue_depth.load(Ordering::Relaxed) as f64)),
+                ("resident_bytes", Json::Num(w.resident_bytes.load(Ordering::Relaxed) as f64)),
+                ("kvcache_bytes", Json::Num(w.kvcache_bytes.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_params_parse() {
+        assert_eq!(query_param("watch=5", "watch"), Some("5"));
+        assert_eq!(query_param("a=1&watch=12&b=2", "watch"), Some("12"));
+        assert_eq!(query_param("", "watch"), None);
+        assert_eq!(query_param("watch", "watch"), None);
+        assert_eq!(query_param("format=json", "format"), Some("json"));
+    }
+
+    #[test]
+    fn health_flips_on_saturation_and_death() {
+        let stats = Arc::new(ServerStats::with_shards(2));
+        let src = ObsSources {
+            stats: Arc::clone(&stats),
+            tracer: None,
+            max_queue: 8,
+        };
+        // both workers up, queues empty -> healthy
+        stats.shards[0].live.set(1);
+        stats.shards[1].live.set(1);
+        let (ok, body) = health_report(&src);
+        assert!(ok, "{body}");
+        assert!(body.contains("2 shards live"));
+        // one queue at capacity -> degraded
+        stats.shards[1].queue_depth.set(8);
+        let (ok, body) = health_report(&src);
+        assert!(!ok);
+        assert!(body.contains("shard 1: queue saturated (8/8)"), "{body}");
+        // drain the queue, kill a worker -> still degraded
+        stats.shards[1].queue_depth.set(0);
+        stats.shards[0].live.set(0);
+        let (ok, body) = health_report(&src);
+        assert!(!ok);
+        assert!(body.contains("shard 0: worker not running"), "{body}");
+        // recovery
+        stats.shards[0].live.set(1);
+        assert!(health_report(&src).0);
+    }
+
+    #[test]
+    fn health_with_no_shards_is_degraded() {
+        let src = ObsSources {
+            stats: Arc::new(ServerStats::default()),
+            tracer: None,
+            max_queue: 8,
+        };
+        let (ok, body) = health_report(&src);
+        assert!(!ok);
+        assert!(body.contains("no shards registered"), "{body}");
+    }
+
+    #[test]
+    fn sampler_ring_is_bounded_and_watermarked() {
+        let stats = Arc::new(ServerStats::with_shards(1));
+        stats.shards[0].inflight.set(3);
+        stats.shards[0].queue_depth.set(2);
+        let shared = Shared {
+            sources: ObsSources {
+                stats: Arc::clone(&stats),
+                tracer: None,
+                max_queue: 8,
+            },
+            started: Instant::now(),
+            interval: Duration::from_millis(10),
+            history: 4,
+            samples: Mutex::new(VecDeque::new()),
+            watermarks: Watermarks::default(),
+            stop: AtomicBool::new(false),
+        };
+        for _ in 0..10 {
+            shared.take_sample();
+        }
+        stats.shards[0].inflight.set(1); // drops below the watermark
+        shared.take_sample();
+        assert_eq!(shared.samples.lock().unwrap().len(), 4, "ring must cap at history");
+        let doc = Json::parse(&vars_json(&shared, 3).to_string()).expect("vars json parses");
+        let samples = doc.get("samples").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(samples.len(), 3);
+        let last = samples.last().unwrap();
+        assert_eq!(last.get("inflight").and_then(|v| v.as_f64()), Some(1.0));
+        let peak = doc
+            .get("watermarks")
+            .and_then(|w| w.get("inflight"))
+            .and_then(|v| v.as_f64());
+        assert_eq!(peak, Some(3.0), "watermark must retain the peak");
+        assert!(
+            last.get("resident_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "resident bytes should never read zero on a live process"
+        );
+    }
+}

@@ -1,0 +1,313 @@
+//! Memory attribution report: scope table rendering, `memmodel`
+//! cross-checks, and the linear-memory growth audit.
+//!
+//! The tracking allocator ([`super::alloc`]) answers *"how many bytes
+//! does subsystem X hold right now?"*; this module answers the two
+//! questions the paper's claim actually needs:
+//!
+//! 1. **Do measured bytes agree with the byte model?**
+//!    [`crosscheck`] compares a scope's live bytes against a
+//!    [`crate::attention::memmodel`] prediction (e.g. the kvcache scope
+//!    against `Σ window_cache_bytes(session)`), with a tolerance that
+//!    absorbs allocator headers and container capacity rounding.
+//! 2. **Does the measured peak grow linearly in scene size?**
+//!    [`record_peak_sample`] accumulates `(N, measured peak bytes)`
+//!    pairs from sweeps (benches, tests, operators poking `/memory`);
+//!    [`audit`] fits a log-log growth exponent over them — ~1 for the
+//!    paper's Algorithm 2, ~2 for an accidental O(N·M) materialization.
+//!    The exponent is exported as `se2attn_mem_audit_exponent_centi`
+//!    and shown by the `/memory` endpoint.
+
+use std::sync::Mutex;
+
+use crate::jsonio::Json;
+
+use super::alloc::{self, Scope, ScopeSnapshot, N_SCOPES};
+
+// ---------------------------------------------------------------------------
+// Scope table report
+// ---------------------------------------------------------------------------
+
+/// A point-in-time view of the allocator's scope table plus the growth
+/// audit, renderable as an aligned text table (`/memory`) or JSON
+/// (`/memory?format=json`).
+#[derive(Clone, Debug)]
+pub struct MemReport {
+    pub scopes: [ScopeSnapshot; N_SCOPES],
+    pub total_live_bytes: u64,
+    pub audit: Option<GrowthAudit>,
+}
+
+/// Collect the current report (relaxed atomic loads — safe while
+/// serving).
+pub fn collect() -> MemReport {
+    MemReport {
+        scopes: alloc::snapshot_all(),
+        total_live_bytes: alloc::total_live_bytes(),
+        audit: audit(),
+    }
+}
+
+impl MemReport {
+    /// Plain-text attribution table (the `/memory` endpoint body).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16} {:>14} {:>14} {:>12} {:>12}\n",
+            "scope", "live_bytes", "peak_bytes", "allocs", "frees"
+        ));
+        for s in &self.scopes {
+            out.push_str(&format!(
+                "{:<16} {:>14} {:>14} {:>12} {:>12}\n",
+                s.scope.name(),
+                s.live_bytes,
+                s.peak_bytes,
+                s.allocs,
+                s.frees
+            ));
+        }
+        out.push_str(&format!("{:<16} {:>14}\n", "total_live", self.total_live_bytes));
+        match &self.audit {
+            Some(a) => out.push_str(&format!(
+                "linear_audit: exponent {:.2} over {} samples — {}\n",
+                a.exponent,
+                a.samples,
+                if a.is_linear() {
+                    "linear (O(N))"
+                } else {
+                    "SUPERLINEAR — possible O(N*M) materialization"
+                }
+            )),
+            None => out.push_str("linear_audit: no peak samples recorded\n"),
+        }
+        out
+    }
+
+    /// JSON rendering of the same table.
+    pub fn to_json(&self) -> Json {
+        let scopes = self
+            .scopes
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("scope", Json::Str(s.scope.name().to_string())),
+                    ("live_bytes", Json::Num(s.live_bytes as f64)),
+                    ("peak_bytes", Json::Num(s.peak_bytes as f64)),
+                    ("allocs", Json::Num(s.allocs as f64)),
+                    ("frees", Json::Num(s.frees as f64)),
+                ])
+            })
+            .collect();
+        let audit = match &self.audit {
+            Some(a) => Json::obj(vec![
+                ("exponent", Json::Num(a.exponent)),
+                ("samples", Json::Num(a.samples as f64)),
+                ("linear", Json::Bool(a.is_linear())),
+            ]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("scopes", Json::Arr(scopes)),
+            ("total_live_bytes", Json::Num(self.total_live_bytes as f64)),
+            ("linear_audit", audit),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// memmodel cross-check
+// ---------------------------------------------------------------------------
+
+/// Measured-vs-modeled comparison for one scope.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossCheck {
+    pub scope: Scope,
+    /// Live bytes the allocator attributes to the scope.
+    pub measured_bytes: u64,
+    /// Bytes the `memmodel` formulas predict for the same contents.
+    pub modeled_bytes: u64,
+}
+
+impl CrossCheck {
+    /// measured / modeled (∞ when the model predicts zero but bytes
+    /// exist; 1.0 when both are zero).
+    pub fn ratio(&self) -> f64 {
+        if self.modeled_bytes == 0 {
+            if self.measured_bytes == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.measured_bytes as f64 / self.modeled_bytes as f64
+        }
+    }
+
+    /// True when measured is within `tol` relative error of modeled
+    /// (`tol = 0.1` is the shipped gate: allocator headers and Vec
+    /// capacity rounding live inside it).
+    pub fn within(&self, tol: f64) -> bool {
+        (self.ratio() - 1.0).abs() <= tol
+    }
+}
+
+/// Compare a scope's current live bytes against a byte-model
+/// prediction computed by the caller (the caller knows which sessions/
+/// rings/windows are resident; the allocator only knows bytes).
+pub fn crosscheck(scope: Scope, modeled_bytes: usize) -> CrossCheck {
+    CrossCheck {
+        scope,
+        measured_bytes: alloc::snapshot(scope).live_bytes,
+        modeled_bytes: modeled_bytes as u64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear-memory growth audit
+// ---------------------------------------------------------------------------
+
+/// Result of fitting `peak_bytes ~ N^exponent` over recorded samples.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GrowthAudit {
+    /// Least-squares slope of `ln(peak)` vs `ln(N)`.
+    pub exponent: f64,
+    pub samples: usize,
+}
+
+impl GrowthAudit {
+    /// The verdict threshold sits halfway between O(N) and O(N²):
+    /// constant offsets pull real linear sweeps slightly above 1, and
+    /// sub-quadratic-but-superlinear blowups still deserve a flag.
+    pub fn is_linear(&self) -> bool {
+        self.exponent < 1.5
+    }
+}
+
+/// Least-squares growth exponent over `(n, bytes)` points in log-log
+/// space.  Returns `None` without at least two distinct positive `n`.
+pub fn fit_growth_exponent(samples: &[(f64, f64)]) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|(n, b)| *n > 0.0 && *b > 0.0)
+        .map(|(n, b)| (n.ln(), b.ln()))
+        .collect();
+    let k = pts.len() as f64;
+    if pts.len() < 2 {
+        return None;
+    }
+    let mean_x = pts.iter().map(|(x, _)| x).sum::<f64>() / k;
+    let mean_y = pts.iter().map(|(_, y)| y).sum::<f64>() / k;
+    let sxx: f64 = pts.iter().map(|(x, _)| (x - mean_x) * (x - mean_x)).sum();
+    let sxy: f64 = pts.iter().map(|(x, y)| (x - mean_x) * (y - mean_y)).sum();
+    if sxx <= 0.0 {
+        return None; // all samples at the same N
+    }
+    Some(sxy / sxx)
+}
+
+/// Global `(N, peak bytes)` sample store feeding [`audit`].  Bounded so
+/// a looping caller cannot grow it without bound.
+const MAX_AUDIT_SAMPLES: usize = 64;
+
+static AUDIT_SAMPLES: Mutex<Vec<(u64, u64)>> = Mutex::new(Vec::new());
+
+/// Record one `(scene size, measured peak bytes)` observation for the
+/// process-wide linear-memory audit (oldest samples are dropped past
+/// [`MAX_AUDIT_SAMPLES`]).
+pub fn record_peak_sample(n: usize, peak_bytes: u64) {
+    let mut s = AUDIT_SAMPLES.lock().unwrap();
+    if s.len() >= MAX_AUDIT_SAMPLES {
+        s.remove(0);
+    }
+    s.push((n as u64, peak_bytes));
+}
+
+/// The recorded samples (test/report introspection).
+pub fn peak_samples() -> Vec<(u64, u64)> {
+    AUDIT_SAMPLES.lock().unwrap().clone()
+}
+
+/// Drop all recorded samples (tests isolate their sweeps with this).
+pub fn clear_peak_samples() {
+    AUDIT_SAMPLES.lock().unwrap().clear();
+}
+
+/// Fit the growth exponent over the recorded samples, if any.
+pub fn audit() -> Option<GrowthAudit> {
+    let samples = peak_samples();
+    let pts: Vec<(f64, f64)> = samples
+        .iter()
+        .map(|(n, b)| (*n as f64, *b as f64))
+        .collect();
+    fit_growth_exponent(&pts).map(|exponent| GrowthAudit {
+        exponent,
+        samples: samples.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_linear_and_quadratic_slopes() {
+        let lin: Vec<(f64, f64)> = [64.0, 128.0, 256.0, 512.0]
+            .iter()
+            .map(|n| (*n, 1000.0 * n + 50_000.0))
+            .collect();
+        let e = fit_growth_exponent(&lin).unwrap();
+        assert!(e < 1.5, "linear sweep fit {e}");
+
+        let quad: Vec<(f64, f64)> = [64.0, 128.0, 256.0, 512.0]
+            .iter()
+            .map(|n| (*n, 12.0 * n * n))
+            .collect();
+        let e = fit_growth_exponent(&quad).unwrap();
+        assert!((e - 2.0).abs() < 0.05, "quadratic sweep fit {e}");
+        assert!(!GrowthAudit { exponent: e, samples: 4 }.is_linear());
+    }
+
+    #[test]
+    fn fit_needs_two_distinct_ns() {
+        assert_eq!(fit_growth_exponent(&[]), None);
+        assert_eq!(fit_growth_exponent(&[(64.0, 1.0)]), None);
+        assert_eq!(fit_growth_exponent(&[(64.0, 1.0), (64.0, 2.0)]), None);
+        assert_eq!(fit_growth_exponent(&[(0.0, 1.0), (64.0, 2.0)]), None);
+    }
+
+    #[test]
+    fn crosscheck_ratio_edges() {
+        let c = CrossCheck {
+            scope: Scope::KvCache,
+            measured_bytes: 105,
+            modeled_bytes: 100,
+        };
+        assert!(c.within(0.1));
+        assert!(!c.within(0.01));
+        let zero = CrossCheck {
+            scope: Scope::KvCache,
+            measured_bytes: 0,
+            modeled_bytes: 0,
+        };
+        assert!(zero.within(0.1));
+        let inf = CrossCheck {
+            scope: Scope::KvCache,
+            measured_bytes: 7,
+            modeled_bytes: 0,
+        };
+        assert!(!inf.within(0.1));
+    }
+
+    #[test]
+    fn report_renders_every_scope_and_round_trips_json() {
+        let report = collect();
+        let table = report.render_table();
+        for s in Scope::ALL {
+            assert!(table.contains(s.name()), "table missing {}", s.name());
+        }
+        let doc = Json::parse(&report.to_json().to_string()).expect("report json parses");
+        let scopes = doc.get("scopes").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(scopes.len(), N_SCOPES);
+        assert!(doc.get("total_live_bytes").and_then(|t| t.as_f64()).is_some());
+    }
+}

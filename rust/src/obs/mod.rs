@@ -1,0 +1,28 @@
+//! Live observability: runtime memory attribution + introspection server.
+//!
+//! PR 6 gave the stack *post-hoc* observability (trace/metrics files
+//! written after a run ends).  This module makes the serving process
+//! observable *while it serves*:
+//!
+//! - [`alloc`] — a `#[global_allocator]` tracking allocator (zero
+//!   dependencies) that attributes every heap byte to a small fixed set
+//!   of subsystem scopes (`kvcache`, `kernel_scratch`, `map_registry`,
+//!   `batcher`, `trace`, plus `untagged` for everything else) via
+//!   thread-local scope tags, maintaining per-scope live bytes,
+//!   allocation counts and high-water marks.
+//! - [`memreport`] — renders the scope table, cross-checks measured
+//!   bytes against the [`crate::attention::memmodel`] formulas, and
+//!   fits a growth exponent to `(N, measured peak)` samples so the
+//!   paper's linear-memory claim is auditable against the *allocator*,
+//!   not just the byte model.
+//! - [`http`] — a hand-rolled HTTP/1.1 introspection server over
+//!   `std::net::TcpListener` (`simulate --obs-addr 127.0.0.1:9464`)
+//!   serving `/metrics`, `/metrics.json`, `/memory`, `/trace`,
+//!   `/healthz` and `/vars?watch=N` from the live telemetry, tracer
+//!   rings and allocator scope table.
+//!
+//! See DESIGN.md §16 for the attribution invariants and endpoint table.
+
+pub mod alloc;
+pub mod http;
+pub mod memreport;

@@ -396,6 +396,9 @@ pub struct Tracer {
 
 impl Tracer {
     pub fn new(shards: usize, cfg: TraceConfig) -> Arc<Tracer> {
+        // span rings are the tracer's only resident allocation; charge
+        // them to the trace scope in the memory attribution table
+        let _mem = crate::obs::alloc::MemScope::enter("trace");
         let rings = (0..shards + 1)
             .map(|_| Arc::new(SpanRing::new(cfg.ring_spans)))
             .collect();

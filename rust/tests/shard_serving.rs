@@ -305,6 +305,72 @@ fn per_shard_backpressure_isolates_the_hot_shard() {
     }
 }
 
+/// Regression (ISSUE 7 satellite): the Busy/queue-rejection path must
+/// decrement `inflight` exactly once per bounced envelope, observable
+/// **while the server is still serving** — the gauge is the
+/// least-loaded routing signal and the `/vars` sampler input, so a
+/// rejection that left it stuck high would skew both for the rest of
+/// the process lifetime, not just until shutdown.
+#[test]
+fn rejected_envelopes_settle_inflight_while_serving() {
+    // a batcher that can never flush on its own: occupancy and overflow
+    // are fully deterministic
+    let server = synthetic_server(
+        1,
+        BatcherConfig {
+            batch_size: 64,
+            max_wait: std::time::Duration::from_secs(3600),
+            max_queue: 2,
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let scenario = gen.generate(5);
+    // 6 submits onto the single shard: the first 2 queue, the last 4
+    // bounce Busy (the channel and the worker both preserve order)
+    let mut rxs = (0..6)
+        .map(|i| server.submit(METHOD, request_for(scenario.clone(), i, 1)))
+        .collect::<Vec<_>>()
+        .into_iter();
+    let queued: Vec<_> = rxs.by_ref().take(2).collect();
+    for (i, rx) in rxs.enumerate() {
+        let err = rx
+            .recv()
+            .expect("bounce must be answered, not dropped")
+            .expect_err("overflow past max_queue must be Busy");
+        assert!(format!("{err:#}").contains("busy"), "overflow {i}: {err:#}");
+    }
+    // the worker decrements BEFORE sending each Busy answer, so with all
+    // 4 answers in hand the gauge must read exactly the queued count
+    let shard = &server.stats.shards[0];
+    assert_eq!(shard.inflight.get(), 2, "inflight must settle to the queued count");
+    assert_eq!(shard.rejected.get(), 4);
+    assert_eq!(server.stats.queue_rejections.get(), 4);
+    // the saturation gauge follows one worker-loop beat behind the
+    // rejection answers
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    while shard.queue_depth.get() != 2 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "queue_depth stuck at {} (want 2)",
+            shard.queue_depth.get()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(shard.live.get(), 1, "the worker must survive a rejection storm");
+
+    let stats = Arc::clone(&server.stats);
+    drop(server); // shutdown drain answers the 2 queued requests
+    for rx in queued {
+        rx.recv()
+            .expect("answered")
+            .expect("queued requests drain to real results");
+    }
+    assert_eq!(stats.requests_done.get(), 2);
+    assert_eq!(stats.shards[0].inflight.get(), 0, "drain settles inflight to zero");
+    assert_eq!(stats.shards[0].queue_depth.get(), 0, "LiveGuard clears the gauge");
+    assert_eq!(stats.shards[0].live.get(), 0, "worker exit clears liveness");
+}
+
 /// Stateless submits ignore scene affinity and spread by inflight depth:
 /// with no completions (the batcher cannot flush), 8 submits round-robin
 /// 2 onto each of 4 shards deterministically.
