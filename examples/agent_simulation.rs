@@ -1,15 +1,14 @@
 //! Serving driver: batched rollout requests through the full coordinator
-//! (router -> dynamic batcher -> rollout scheduler -> PJRT decode), with a
-//! latency / throughput report — the "multi-agent behavior simulation"
-//! workload the paper's introduction motivates.
+//! (router -> admission queue -> continuous step scheduler -> PJRT
+//! decode), with a latency / throughput report — the "multi-agent
+//! behavior simulation" workload the paper's introduction motivates.
 //!
 //! Run: `cargo run --release --example agent_simulation [scenes] [samples]`
 
 use anyhow::Result;
 
 use se2attn::config::{Method, SystemConfig};
-use se2attn::coordinator::batcher::BatcherConfig;
-use se2attn::coordinator::{RolloutRequest, ServeConfig, Server};
+use se2attn::coordinator::{AdmissionConfig, RolloutRequest, ServeConfig, Server};
 use se2attn::sim::ScenarioGenerator;
 
 fn main() -> Result<()> {
@@ -27,10 +26,10 @@ fn main() -> Result<()> {
 
     let t_start = std::time::Instant::now();
     let serve = ServeConfig {
-        batcher: BatcherConfig {
-            batch_size: 4,
-            max_wait: std::time::Duration::from_millis(10),
+        admission: AdmissionConfig {
             max_queue: 64,
+            max_live_sessions: 4,
+            ..AdmissionConfig::default()
         },
         ..ServeConfig::with_workers(workers)
     };

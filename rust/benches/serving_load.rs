@@ -1,0 +1,495 @@
+//! Open-loop serving load bench: continuous batching vs the legacy
+//! fixed-deadline batcher under Poisson arrivals (DESIGN.md §17).
+//!
+//! An open-loop generator submits rollout requests at a fixed offered
+//! rate — arrivals never wait for completions, so overload actually
+//! overloads the server instead of self-throttling.  Three load factors
+//! (below / at / above the calibrated single-worker capacity) are run
+//! through two schedulers over the same synthetic decode backend:
+//!
+//! - **continuous** — the real [`Server`]: per-shard admission queue
+//!   with a queue-wait deadline, sessions join and leave the in-flight
+//!   step batch every decode step, expired waiters are shed with a
+//!   typed error instead of being served stale.
+//! - **fixed** — the legacy [`Batcher`] driven the way the pre-refactor
+//!   server drove it: one worker thread, deadline-flushed fixed batches,
+//!   requests served whole and in order, binary queue-full rejection
+//!   and no deadline shedding.
+//!
+//! Reported per (mode, rate): completion latency p50/p99/p999,
+//! completed / shed / rejected counts, and **goodput** — completions
+//! that met the end-to-end SLO, per second of wall time.  The headline
+//! claim (and the CI smoke gate): at the overload point the continuous
+//! scheduler sustains goodput >= the fixed batcher, because it spends
+//! its capacity on requests that can still meet the SLO while the fixed
+//! batcher burns it serving stale queue entries.
+//!
+//! Writes `BENCH_serving.json`; `bench-report` renders it into the
+//! README "Serving under load" section.
+//!
+//! Run: `cargo bench --bench serving_load`
+//! (CI smoke: `SE2ATTN_BENCH_SMOKE=1 cargo bench --bench serving_load`)
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use se2attn::benchlib::{write_bench_json, BenchMode, Table};
+use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
+use se2attn::coordinator::telemetry::CacheStats;
+use se2attn::coordinator::{
+    AdmissionConfig, Backend, BackendFactory, Batcher, BatcherConfig, CacheConfig, KvCachePool,
+    RolloutEngine, RolloutRequest, Router, ServeConfig, Server, SyntheticDecoder,
+};
+use se2attn::jsonio::Json;
+use se2attn::prng::Rng;
+use se2attn::sim::ScenarioGenerator;
+
+const METHOD: Method = Method::Se2Fourier;
+/// Live sessions interleaved per decode step on the continuous path and
+/// batch size on the fixed path — the same degree of batching for both.
+const BATCH: usize = 4;
+/// Bounded wait queue, identical for both schedulers.
+const MAX_QUEUE: usize = 256;
+/// Threads blocking on response channels; each records the completion
+/// timestamp the moment its request resolves.
+const COLLECTORS: usize = 8;
+
+fn model_config() -> ModelConfig {
+    ModelConfig::synthetic()
+}
+
+fn factory(work_per_token: usize) -> BackendFactory {
+    Arc::new(move |_shard: usize| -> anyhow::Result<Backend> {
+        let mut backend: Backend = Router::new();
+        backend.deploy(
+            METHOD,
+            Box::new(SyntheticDecoder::with_work(
+                model_config().n_actions,
+                work_per_token,
+            )),
+        );
+        Ok(backend)
+    })
+}
+
+fn request(scenario: se2attn::sim::Scenario, sim: &SimConfig, seed: i32) -> RolloutRequest {
+    RolloutRequest {
+        scenario,
+        t0: sim.history_steps - 1,
+        n_samples: 1,
+        temperature: 1.0,
+        seed,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// outcome accounting
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Status {
+    Done,
+    Shed,
+    Rejected,
+    Failed,
+}
+
+#[derive(Clone, Copy)]
+struct Outcome {
+    latency_ms: f64,
+    status: Status,
+}
+
+/// Per-(mode, rate) aggregate of an open-loop run.
+struct RunStats {
+    offered_rps: f64,
+    goodput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    completed: usize,
+    within_slo: usize,
+    shed: usize,
+    rejected: usize,
+    failed: usize,
+}
+
+fn pctl(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+fn summarize(outcomes: &[Outcome], offered_rps: f64, wall: Duration, slo_ms: f64) -> RunStats {
+    let mut done_ms: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.status == Status::Done)
+        .map(|o| o.latency_ms)
+        .collect();
+    done_ms.sort_by(|a, b| a.total_cmp(b));
+    let within_slo = done_ms.iter().filter(|&&ms| ms <= slo_ms).count();
+    let count = |s: Status| outcomes.iter().filter(|o| o.status == s).count();
+    RunStats {
+        offered_rps,
+        goodput_rps: within_slo as f64 / wall.as_secs_f64().max(1e-9),
+        p50_ms: pctl(&done_ms, 0.50),
+        p99_ms: pctl(&done_ms, 0.99),
+        p999_ms: pctl(&done_ms, 0.999),
+        completed: done_ms.len(),
+        within_slo,
+        shed: count(Status::Shed),
+        rejected: count(Status::Rejected),
+        failed: count(Status::Failed),
+    }
+}
+
+/// A submitted request waiting to be timed: submit timestamp plus the
+/// response channel the scheduler will answer on.
+type Pending = (Instant, mpsc::Receiver<anyhow::Result<se2attn::coordinator::RolloutResult>>);
+
+/// Spawn the collector pool: threads pull pending requests as they are
+/// submitted and block on each response channel, so every completion is
+/// timestamped when it lands (not when a post-hoc drain reaches it).
+fn spawn_collectors(
+    jobs: mpsc::Receiver<Pending>,
+) -> (Arc<Mutex<Vec<Outcome>>>, Vec<std::thread::JoinHandle<()>>) {
+    let jobs = Arc::new(Mutex::new(jobs));
+    let outcomes = Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for _ in 0..COLLECTORS {
+        let jobs = Arc::clone(&jobs);
+        let outcomes = Arc::clone(&outcomes);
+        handles.push(std::thread::spawn(move || loop {
+            let job = jobs.lock().expect("collector queue").recv();
+            let (submitted, rx) = match job {
+                Ok(j) => j,
+                Err(_) => break,
+            };
+            let res = rx.recv();
+            let latency_ms = submitted.elapsed().as_secs_f64() * 1e3;
+            let status = match res {
+                Ok(Ok(_)) => Status::Done,
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    if msg.contains("shed") {
+                        Status::Shed
+                    } else if msg.contains("busy") {
+                        Status::Rejected
+                    } else {
+                        Status::Failed
+                    }
+                }
+                Err(_) => Status::Failed,
+            };
+            outcomes
+                .lock()
+                .expect("outcome sink")
+                .push(Outcome { latency_ms, status });
+        }));
+    }
+    (outcomes, handles)
+}
+
+/// Drive `submit` at `offered_rps` with exponential inter-arrival gaps
+/// (Poisson process), never waiting on completions; returns the wall
+/// time from first arrival to last collected outcome.
+fn open_loop<F>(
+    scenarios: Vec<se2attn::sim::Scenario>,
+    sim: &SimConfig,
+    offered_rps: f64,
+    mut submit: F,
+) -> (Vec<Outcome>, Duration)
+where
+    F: FnMut(RolloutRequest) -> Pending,
+{
+    let (jobs_tx, jobs_rx) = mpsc::channel();
+    let (outcomes, handles) = spawn_collectors(jobs_rx);
+    let mut rng = Rng::new(0x5e2a);
+    let t0 = Instant::now();
+    let mut next = t0;
+    for (i, scenario) in scenarios.into_iter().enumerate() {
+        let gap = -(1.0 - rng.uniform()).ln() / offered_rps;
+        next += Duration::from_secs_f64(gap);
+        if let Some(wait) = next.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        let pending = submit(request(scenario, sim, i as i32));
+        jobs_tx.send(pending).expect("collector pool alive");
+    }
+    drop(jobs_tx);
+    for h in handles {
+        h.join().expect("collector thread");
+    }
+    let wall = t0.elapsed();
+    let outcomes = Arc::try_unwrap(outcomes)
+        .map(|m| m.into_inner().expect("outcome sink"))
+        .unwrap_or_default();
+    (outcomes, wall)
+}
+
+// ---------------------------------------------------------------------------
+// continuous mode: the real Server
+// ---------------------------------------------------------------------------
+
+fn run_continuous(
+    scenarios: Vec<se2attn::sim::Scenario>,
+    offered_rps: f64,
+    deadline_ms: f64,
+    slo_ms: f64,
+    work_per_token: usize,
+) -> RunStats {
+    let sim = SimConfig::default();
+    let cfg = SystemConfig {
+        artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        model: model_config(),
+        sim: sim.clone(),
+        threads: 1,
+    };
+    let server = Server::start_with_backend(
+        cfg,
+        vec![METHOD],
+        ServeConfig {
+            workers: 1,
+            admission: AdmissionConfig {
+                max_queue: MAX_QUEUE,
+                deadline: Duration::from_secs_f64(deadline_ms / 1e3),
+                max_live_sessions: BATCH,
+                ..AdmissionConfig::default()
+            },
+            cache: CacheConfig::default(),
+            kernel: se2attn::attention::kernel::KernelConfig::default(),
+            ..ServeConfig::default()
+        },
+        factory(work_per_token),
+    )
+    .expect("server start");
+
+    let (outcomes, wall) = open_loop(scenarios, &sim, offered_rps, |req| {
+        let submitted = Instant::now();
+        (submitted, server.submit(METHOD, req))
+    });
+    drop(server);
+    summarize(&outcomes, offered_rps, wall, slo_ms)
+}
+
+// ---------------------------------------------------------------------------
+// fixed mode: the legacy deadline-flushed batcher, pre-refactor shape
+// ---------------------------------------------------------------------------
+
+struct FixedJob {
+    req: RolloutRequest,
+    respond: mpsc::Sender<anyhow::Result<se2attn::coordinator::RolloutResult>>,
+}
+
+/// One worker thread around the legacy [`Batcher`]: recv until the
+/// flush deadline, then serve the whole batch in order — exactly how
+/// the server drove it before the continuous scheduler replaced it.
+fn start_fixed(
+    max_wait: Duration,
+    work_per_token: usize,
+) -> (mpsc::Sender<FixedJob>, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<FixedJob>();
+    let handle = std::thread::spawn(move || {
+        let model = model_config();
+        let decoder = SyntheticDecoder::with_work(model.n_actions, work_per_token);
+        let engine = RolloutEngine::new(model, SimConfig::default());
+        let pool = KvCachePool::new(CacheConfig::default(), Arc::new(CacheStats::default()));
+        let mut batcher: Batcher<FixedJob> = Batcher::new(BatcherConfig {
+            batch_size: BATCH,
+            max_wait,
+            max_queue: MAX_QUEUE,
+        });
+        let serve = |batch: se2attn::coordinator::batcher::ReadyBatch<FixedJob>| {
+            for job in batch.items {
+                let res = engine.rollout_with_cache(&decoder, &job.req, &pool);
+                let _ = job.respond.send(res);
+            }
+        };
+        loop {
+            let timeout = batcher
+                .next_deadline(Instant::now())
+                .unwrap_or(Duration::from_millis(5));
+            match rx.recv_timeout(timeout) {
+                Ok(job) => {
+                    if let Err((job, err)) = batcher.push(job) {
+                        let _ = job.respond.send(Err(anyhow::Error::new(err)));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            while let Some(batch) = batcher.poll(Instant::now()) {
+                serve(batch);
+            }
+        }
+        for batch in batcher.drain() {
+            serve(batch);
+        }
+    });
+    (tx, handle)
+}
+
+fn run_fixed(
+    scenarios: Vec<se2attn::sim::Scenario>,
+    offered_rps: f64,
+    max_wait: Duration,
+    slo_ms: f64,
+    work_per_token: usize,
+) -> RunStats {
+    let sim = SimConfig::default();
+    let (tx, handle) = start_fixed(max_wait, work_per_token);
+    let (outcomes, wall) = open_loop(scenarios, &sim, offered_rps, |req| {
+        let (respond, rx) = mpsc::channel();
+        let submitted = Instant::now();
+        tx.send(FixedJob { req, respond }).expect("fixed worker alive");
+        (submitted, rx)
+    });
+    drop(tx);
+    handle.join().expect("fixed worker");
+    summarize(&outcomes, offered_rps, wall, slo_ms)
+}
+
+// ---------------------------------------------------------------------------
+// calibration + harness
+// ---------------------------------------------------------------------------
+
+/// Mean unloaded per-request service time (ms): the same rollout the
+/// schedulers run, measured solo on this host so offered rates and SLO
+/// scale with the machine instead of hard-coding milliseconds.
+fn calibrate(work_per_token: usize, probes: usize) -> f64 {
+    let sim = SimConfig::default();
+    let model = model_config();
+    let decoder = SyntheticDecoder::with_work(model.n_actions, work_per_token);
+    let engine = RolloutEngine::new(model, sim.clone());
+    let gen = ScenarioGenerator::new(sim.clone());
+    let t0 = Instant::now();
+    for i in 0..probes {
+        let req = request(gen.generate(9_000 + i as u64), &sim, i as i32);
+        engine.rollout(&decoder, &req).expect("calibration rollout");
+    }
+    (t0.elapsed().as_secs_f64() * 1e3 / probes as f64).max(0.05)
+}
+
+fn main() {
+    let mode = BenchMode::from_env();
+    let n_requests = *mode.pick(&[48usize], &[160], &[400]).first().unwrap();
+    let load_factors: &[f64] = mode.pick(&[0.5, 2.5], &[0.5, 1.0, 2.5], &[0.5, 1.0, 1.5, 2.5]);
+    let work_per_token = 48;
+    let probes = *mode.pick(&[6usize], &[12], &[24]).first().unwrap();
+
+    let base_ms = calibrate(work_per_token, probes);
+    let capacity_rps = 1e3 / base_ms;
+    // admitted requests share the step batch with up to BATCH peers, so
+    // in-service latency inflates ~BATCH x over the solo service time;
+    // the SLO budgets that plus a queue wait of the same order, and the
+    // continuous scheduler sheds anything that waited longer than the
+    // queue-wait budget (it could no longer meet the SLO anyway)
+    let deadline_ms = 2.0 * base_ms;
+    let slo_ms = deadline_ms + 2.0 * BATCH as f64 * base_ms;
+
+    println!(
+        "\n== serving load: open-loop Poisson arrivals, {n_requests} requests/rate, \
+         1 worker, batch {BATCH} ==\n\
+         calibrated solo service {base_ms:.2} ms -> capacity ~{capacity_rps:.0} rps, \
+         SLO {slo_ms:.1} ms, queue-wait deadline {deadline_ms:.1} ms"
+    );
+
+    let sim = SimConfig::default();
+    let gen = ScenarioGenerator::new(sim.clone());
+    let mut table = Table::new(&[
+        "mode",
+        "load",
+        "offered rps",
+        "goodput rps",
+        "p50 ms",
+        "p99 ms",
+        "p999 ms",
+        "done",
+        "in-SLO",
+        "shed",
+        "rej",
+    ]);
+    let mut rows = Vec::new();
+    let mut overload_goodput: Option<(f64, f64)> = None; // (continuous, fixed)
+
+    for &factor in load_factors {
+        let offered = factor * capacity_rps;
+        // same arrival schedule seed and scenario population for both
+        // modes: the comparison differs only in the scheduler
+        let scenarios: Vec<_> = (0..n_requests)
+            .map(|i| gen.generate(3_000 + i as u64))
+            .collect();
+        let cont = run_continuous(
+            scenarios.clone(),
+            offered,
+            deadline_ms,
+            slo_ms,
+            work_per_token,
+        );
+        let fixed = run_fixed(
+            scenarios,
+            offered,
+            Duration::from_secs_f64(base_ms / 1e3),
+            slo_ms,
+            work_per_token,
+        );
+        for (name, r) in [("continuous", &cont), ("fixed", &fixed)] {
+            assert_eq!(
+                r.completed + r.shed + r.rejected + r.failed,
+                n_requests,
+                "{name}: every request must resolve exactly once"
+            );
+            assert_eq!(r.failed, 0, "{name}: no request may fail outright");
+            table.row(vec![
+                name.to_string(),
+                format!("{factor:.1}x"),
+                format!("{:.1}", r.offered_rps),
+                format!("{:.1}", r.goodput_rps),
+                format!("{:.1}", r.p50_ms),
+                format!("{:.1}", r.p99_ms),
+                format!("{:.1}", r.p999_ms),
+                r.completed.to_string(),
+                r.within_slo.to_string(),
+                r.shed.to_string(),
+                r.rejected.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("mode", Json::Str(name.to_string())),
+                ("load_factor", Json::Num(factor)),
+                ("offered_rps", Json::Num(r.offered_rps)),
+                ("goodput_rps", Json::Num(r.goodput_rps)),
+                ("p50_ms", Json::Num(r.p50_ms)),
+                ("p99_ms", Json::Num(r.p99_ms)),
+                ("p999_ms", Json::Num(r.p999_ms)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("within_slo", Json::Num(r.within_slo as f64)),
+                ("shed", Json::Num(r.shed as f64)),
+                ("rejected", Json::Num(r.rejected as f64)),
+                ("slo_ms", Json::Num(slo_ms)),
+            ]));
+        }
+        overload_goodput = Some((cont.goodput_rps, fixed.goodput_rps));
+    }
+    table.print();
+
+    write_bench_json("BENCH_serving.json", rows)
+        .unwrap_or_else(|e| panic!("write BENCH_serving.json: {e}"));
+    println!("wrote BENCH_serving.json (render: `se2-attention bench-report`)");
+
+    // acceptance gate: at the overload point (last = highest factor) the
+    // continuous scheduler must not lose goodput to the fixed batcher
+    let (cont, fixed) = overload_goodput.expect("at least one load factor");
+    println!(
+        "overload goodput: continuous {cont:.1} rps vs fixed {fixed:.1} rps -> {}",
+        if cont >= fixed { "PASS" } else { "FAIL" }
+    );
+    if cont < fixed {
+        eprintln!(
+            "continuous batching lost goodput to the fixed batcher under overload — \
+             scheduler regression"
+        );
+        std::process::exit(1);
+    }
+}

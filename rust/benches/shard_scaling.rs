@@ -1,9 +1,10 @@
 //! Aggregate rollout throughput vs worker-shard count (ISSUE 3
 //! acceptance): the same mixed-family workload is served end to end
-//! through the sharded coordinator — shard router, per-shard batchers,
-//! per-shard KV-cache pools over the shared map registry, rollout
-//! scheduler — at 1, 2 and 4 workers, and the aggregate scenes/s must
-//! grow with the worker count (strictly, 1 -> 4, on a multi-core host).
+//! through the sharded coordinator — shard router, per-shard admission
+//! queues + continuous step loops, per-shard KV-cache pools over the
+//! shared map registry, rollout scheduler — at 1, 2 and 4 workers, and
+//! the aggregate scenes/s must grow with the worker count (strictly,
+//! 1 -> 4, on a multi-core host).
 //!
 //! The backend is the artifact-free [`SyntheticDecoder`] with a tuned
 //! `work_per_token`, emulating a model-latency-bound decode so the bench
@@ -16,10 +17,9 @@ use std::time::Instant;
 
 use se2attn::benchlib::{record_row, Table};
 use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
-use se2attn::coordinator::batcher::BatcherConfig;
 use se2attn::coordinator::{
-    Backend, BackendFactory, CacheConfig, RolloutRequest, Router, ServeConfig, Server,
-    SyntheticDecoder,
+    AdmissionConfig, Backend, BackendFactory, CacheConfig, RolloutRequest, Router, ServeConfig,
+    Server, SyntheticDecoder,
 };
 use se2attn::jsonio::Json;
 use se2attn::sim::MixGenerator;
@@ -62,10 +62,9 @@ fn run(workers: usize) -> (f64, f64) {
         vec![METHOD],
         ServeConfig {
             workers,
-            batcher: BatcherConfig {
-                batch_size: 4,
-                max_wait: std::time::Duration::from_millis(1),
+            admission: AdmissionConfig {
                 max_queue: 4096,
+                ..AdmissionConfig::default()
             },
             cache: CacheConfig::default(),
             kernel: se2attn::attention::kernel::KernelConfig::default(),

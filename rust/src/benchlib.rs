@@ -185,19 +185,24 @@ fn doc_rows(doc: &Json) -> Vec<&Json> {
 }
 
 /// Render the README "Benchmarks" section from the `BENCH_attention.json`
-/// / `BENCH_decode.json` documents the benches write (and the CI
-/// perf-smoke job uploads) — the `se2attn bench-report` CLI command, so
-/// README performance numbers are generated from archived measurements
-/// instead of hand-written claims.  Either document may be absent; a
-/// note is emitted for whatever is missing.
-pub fn render_bench_report(attention: Option<&Json>, decode: Option<&Json>) -> String {
+/// / `BENCH_decode.json` / `BENCH_serving.json` documents the benches
+/// write (and the CI perf-smoke job uploads) — the `se2attn
+/// bench-report` CLI command, so README performance numbers are
+/// generated from archived measurements instead of hand-written claims.
+/// Any document may be absent; a note is emitted for whatever is
+/// missing.
+pub fn render_bench_report(
+    attention: Option<&Json>,
+    decode: Option<&Json>,
+    serving: Option<&Json>,
+) -> String {
     let mut out = String::from(
         "## Benchmarks\n\n\
          <!-- generated by `se2-attention bench-report` from \
-         BENCH_attention.json / BENCH_decode.json (written by \
-         `cargo bench --bench attention_throughput` / `--bench \
-         decode_throughput`, uploaded by the CI perf-smoke job). \
-         Do not hand-edit the tables. -->\n\n",
+         BENCH_attention.json / BENCH_decode.json / BENCH_serving.json \
+         (written by `cargo bench --bench attention_throughput` / \
+         `--bench decode_throughput` / `--bench serving_load`, uploaded \
+         by the CI perf-smoke job). Do not hand-edit the tables. -->\n\n",
     );
 
     match attention {
@@ -313,6 +318,48 @@ pub fn render_bench_report(attention: Option<&Json>, decode: Option<&Json>) -> S
                          cached pool hit {cached:.1} us/step ({sp:.2}x).\n\n"
                     ));
                 }
+            }
+        }
+    }
+
+    match serving {
+        None => out.push_str("*BENCH_serving.json not found — run `cargo bench --bench serving_load` first.*\n\n"),
+        Some(doc) => {
+            let rows = doc_rows(doc);
+            let load: Vec<Vec<String>> = rows
+                .iter()
+                .filter_map(|r| {
+                    Some(vec![
+                        r.get("mode").and_then(|m| m.as_str())?.to_string(),
+                        format!("{:.1}x", row_num(r, "load_factor")?),
+                        format!("{:.1}", row_num(r, "offered_rps")?),
+                        format!("{:.1}", row_num(r, "goodput_rps")?),
+                        format!("{:.1}", row_num(r, "p50_ms")?),
+                        format!("{:.1}", row_num(r, "p99_ms")?),
+                        format!("{:.1}", row_num(r, "p999_ms")?),
+                        format!("{}", row_num(r, "shed")? as u64),
+                        format!("{}", row_num(r, "rejected")? as u64),
+                    ])
+                })
+                .collect();
+            if !load.is_empty() {
+                out.push_str(
+                    "### Serving under load: continuous batching vs fixed batcher\n\n",
+                );
+                out.push_str(&md_table(
+                    &[
+                        "mode", "load", "offered rps", "goodput rps", "p50 ms", "p99 ms",
+                        "p999 ms", "shed", "rejected",
+                    ],
+                    &load,
+                ));
+                if let Some(slo) = rows.first().and_then(|r| row_num(r, "slo_ms")) {
+                    out.push_str(&format!(
+                        "\nGoodput counts completions inside the {slo:.0} ms end-to-end \
+                         SLO; open-loop Poisson arrivals, one worker shard per mode.\n",
+                    ));
+                }
+                out.push('\n');
             }
         }
     }
@@ -481,16 +528,56 @@ mod tests {
                 ]),
             ]),
         )]);
-        let md = render_bench_report(Some(&attention), Some(&decode));
+        let serving = Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("mode", Json::Str("continuous".into())),
+                    ("load_factor", Json::Num(2.0)),
+                    ("offered_rps", Json::Num(200.0)),
+                    ("goodput_rps", Json::Num(95.5)),
+                    ("p50_ms", Json::Num(12.0)),
+                    ("p99_ms", Json::Num(31.0)),
+                    ("p999_ms", Json::Num(40.0)),
+                    ("shed", Json::Num(50.0)),
+                    ("rejected", Json::Num(0.0)),
+                    ("slo_ms", Json::Num(48.0)),
+                ]),
+                Json::obj(vec![
+                    ("mode", Json::Str("fixed".into())),
+                    ("load_factor", Json::Num(2.0)),
+                    ("offered_rps", Json::Num(200.0)),
+                    ("goodput_rps", Json::Num(20.1)),
+                    ("p50_ms", Json::Num(300.0)),
+                    ("p99_ms", Json::Num(900.0)),
+                    ("p999_ms", Json::Num(950.0)),
+                    ("shed", Json::Num(0.0)),
+                    ("rejected", Json::Num(40.0)),
+                    ("slo_ms", Json::Num(48.0)),
+                ]),
+            ]),
+        )]);
+        let md = render_bench_report(Some(&attention), Some(&decode), Some(&serving));
         assert!(md.contains("## Benchmarks"), "{md}");
         assert!(md.contains("| 1024 | 400 | 4.000 | 1.000 | 4.00x |"), "{md}");
         assert!(md.contains("| 64 | 2.000 | 0.500 | 4.00x |"), "{md}");
         assert!(md.contains("| 64 | 1000 | 510 | 51% |"), "{md}");
+        assert!(md.contains("Serving under load"), "{md}");
+        assert!(
+            md.contains("| continuous | 2.0x | 200.0 | 95.5 | 12.0 | 31.0 | 40.0 | 50 | 0 |"),
+            "{md}"
+        );
+        assert!(
+            md.contains("| fixed | 2.0x | 200.0 | 20.1 | 300.0 | 900.0 | 950.0 | 0 | 40 |"),
+            "{md}"
+        );
+        assert!(md.contains("48 ms end-to-end"), "{md}");
         assert!(md.contains("generated by"), "{md}");
         // missing inputs are called out, not silently dropped
-        let md = render_bench_report(None, None);
+        let md = render_bench_report(None, None, None);
         assert!(md.contains("BENCH_attention.json not found"), "{md}");
         assert!(md.contains("BENCH_decode.json not found"), "{md}");
+        assert!(md.contains("BENCH_serving.json not found"), "{md}");
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! Async admission control for the continuous-batching scheduler
+//! (DESIGN.md §17): a bounded per-shard wait queue with request
+//! deadlines, per-tenant token-bucket pacing, and deadline-miss
+//! shedding.
+//!
+//! The fixed-batch serving path used to answer overload with a binary
+//! `Busy` bounce the moment a queue filled.  The admission controller
+//! splits that into two distinct, separately counted outcomes:
+//!
+//! * **rejection** ([`AdmissionError::QueueFull`]) — the bounded wait
+//!   queue is at capacity, the request never enters the system;
+//! * **shed** ([`AdmissionError::DeadlineExceeded`]) — the request was
+//!   queued but waited past its deadline before a step-batch slot opened,
+//!   so serving it would only produce a stale answer.  Shedding keeps
+//!   the in-flight batch full of requests that can still meet their
+//!   latency target, which is what holds goodput up under overload
+//!   (`benches/serving_load.rs`).
+//!
+//! Tenant QoS: requests carry a tenant class (`0..TENANT_CLASSES`), and
+//! each class is paced by a token bucket (`tenant_rate` tokens/s,
+//! `tenant_burst` depth).  [`AdmissionQueue::admit`] scans past
+//! rate-limited waiters, so a flooding tenant queues behind its own
+//! bucket without head-of-line-blocking compliant tenants.  Shutdown
+//! drain uses [`AdmissionQueue::admit_unpaced`]: every accepted caller
+//! still gets a real result, regardless of pacing or deadline state.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Tenant QoS classes (fixed so per-tenant telemetry and the bucket
+/// array stay allocation-free).  Tenant ids map onto classes modulo
+/// this count.
+pub const TENANT_CLASSES: usize = 8;
+
+/// Typed admission outcome for a request that will not be served.
+/// Propagated through `Server::submit` on the response channel, so
+/// callers can `downcast_ref::<AdmissionError>()` instead of parsing
+/// message text.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The shard's bounded wait queue is at capacity; the request was
+    /// never accepted into the system.
+    QueueFull {
+        shard: usize,
+        capacity: usize,
+    },
+    /// The request waited in the admission queue past its deadline and
+    /// was shed instead of served stale.
+    DeadlineExceeded {
+        shard: usize,
+        waited: Duration,
+        deadline: Duration,
+    },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // "busy" is load-bearing: callers (and the serving tests)
+            // have matched on it since the fixed-batch Busy bounce
+            AdmissionError::QueueFull { shard, capacity } => write!(
+                f,
+                "server busy (shard {shard} queue full at {capacity})"
+            ),
+            AdmissionError::DeadlineExceeded {
+                shard,
+                waited,
+                deadline,
+            } => write!(
+                f,
+                "request shed on shard {shard}: waited {:.1} ms past its {:.1} ms deadline",
+                waited.as_secs_f64() * 1e3,
+                deadline.as_secs_f64() * 1e3,
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Admission-controller knobs, applied per shard.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Bounded wait-queue depth; a push beyond this is a
+    /// [`AdmissionError::QueueFull`] rejection.
+    pub max_queue: usize,
+    /// Max time a request may wait for admission before it is shed with
+    /// [`AdmissionError::DeadlineExceeded`].  `Duration::ZERO` disables
+    /// deadline shedding (requests wait indefinitely).
+    pub deadline: Duration,
+    /// Cap on decode sessions resident in one shard's in-flight step
+    /// batch.  A single request whose `n_samples` exceeds the remaining
+    /// headroom is still admitted alone (the cap bounds concurrency, it
+    /// must not deadlock large requests).
+    pub max_live_sessions: usize,
+    /// Token-bucket refill rate per tenant class, requests/second.
+    /// `<= 0` disables pacing (every tenant is unlimited).
+    pub tenant_rate: f64,
+    /// Token-bucket depth (burst allowance) per tenant class.
+    pub tenant_burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            max_queue: 256,
+            deadline: Duration::ZERO,
+            // 4x the default model batch shape: enough concurrency to keep
+            // padding negligible without unbounded resident session state
+            max_live_sessions: 32,
+            tenant_rate: 0.0,
+            tenant_burst: 8.0,
+        }
+    }
+}
+
+/// A queued request awaiting admission to the step batch.
+pub struct Waiting<T> {
+    pub item: T,
+    /// Tenant class (`0..TENANT_CLASSES`, pre-wrapped by [`AdmissionQueue::push`]).
+    pub tenant: u8,
+    pub enqueued_at: Instant,
+}
+
+/// Classic token bucket over `Instant` time; level refills lazily on
+/// observation so no timer thread is needed.
+#[derive(Clone, Copy, Debug)]
+struct TokenBucket {
+    level: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(cfg: &AdmissionConfig, now: Instant) -> TokenBucket {
+        TokenBucket {
+            level: cfg.tenant_burst.max(0.0),
+            last: now,
+        }
+    }
+
+    fn refill(&mut self, cfg: &AdmissionConfig, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.level = (self.level + dt * cfg.tenant_rate).min(cfg.tenant_burst.max(0.0));
+        self.last = now;
+    }
+
+    fn try_take(&mut self) -> bool {
+        if self.level >= 1.0 {
+            self.level -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Time until this bucket holds one token (`None` = never at the
+    /// current rate).
+    fn eta_to_token(&self, cfg: &AdmissionConfig) -> Option<Duration> {
+        if self.level >= 1.0 {
+            return Some(Duration::ZERO);
+        }
+        if cfg.tenant_rate <= 0.0 || cfg.tenant_burst < 1.0 {
+            return None;
+        }
+        let secs = (1.0 - self.level) / cfg.tenant_rate;
+        // clamp: a pathological rate must not overflow Duration
+        Some(Duration::from_secs_f64(secs.min(3600.0)))
+    }
+}
+
+/// Bounded admission queue with deadline shedding and per-tenant pacing
+/// (generic over the queued request type, like the legacy [`super::batcher::Batcher`],
+/// so the policy is unit-testable without a server).
+pub struct AdmissionQueue<T> {
+    cfg: AdmissionConfig,
+    shard: usize,
+    queue: VecDeque<Waiting<T>>,
+    buckets: [TokenBucket; TENANT_CLASSES],
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cfg: AdmissionConfig, shard: usize, now: Instant) -> AdmissionQueue<T> {
+        let buckets = [TokenBucket::new(&cfg, now); TENANT_CLASSES];
+        AdmissionQueue {
+            cfg,
+            shard,
+            queue: VecDeque::new(),
+            buckets,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a request for admission.  `Err` hands the item back with
+    /// the typed rejection so the caller can answer its response channel.
+    pub fn push(&mut self, item: T, tenant: u8, now: Instant) -> Result<(), (T, AdmissionError)> {
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err((
+                item,
+                AdmissionError::QueueFull {
+                    shard: self.shard,
+                    capacity: self.cfg.max_queue,
+                },
+            ));
+        }
+        // queue growth is charged to the batcher scope in the memory
+        // attribution table (the admission queue replaced the per-method
+        // batcher queues on the serving path)
+        let _mem = crate::obs::alloc::MemScope::enter("batcher");
+        self.queue.push_back(Waiting {
+            item,
+            tenant: (tenant as usize % TENANT_CLASSES) as u8,
+            enqueued_at: now,
+        });
+        Ok(())
+    }
+
+    /// Remove and return every waiter whose deadline has passed, paired
+    /// with its typed shed error.  No-op when deadlines are disabled.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<(Waiting<T>, AdmissionError)> {
+        if self.cfg.deadline.is_zero() {
+            return Vec::new();
+        }
+        let mut shed = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let waited = now.saturating_duration_since(self.queue[i].enqueued_at);
+            if waited > self.cfg.deadline {
+                let w = self.queue.remove(i).unwrap();
+                let err = AdmissionError::DeadlineExceeded {
+                    shard: self.shard,
+                    waited,
+                    deadline: self.cfg.deadline,
+                };
+                shed.push((w, err));
+            } else {
+                i += 1;
+            }
+        }
+        shed
+    }
+
+    /// Admit the first waiter whose tenant bucket has a token (FIFO
+    /// within a tenant; rate-limited waiters are skipped, not blocking).
+    /// `None` = queue empty or every queued tenant is out of tokens.
+    pub fn admit(&mut self, now: Instant) -> Option<Waiting<T>> {
+        if self.cfg.tenant_rate <= 0.0 {
+            return self.queue.pop_front();
+        }
+        for b in &mut self.buckets {
+            b.refill(&self.cfg, now);
+        }
+        let pos = self
+            .queue
+            .iter()
+            .position(|w| self.buckets[w.tenant as usize].level >= 1.0)?;
+        let w = self.queue.remove(pos).unwrap();
+        let took = self.buckets[w.tenant as usize].try_take();
+        debug_assert!(took, "position() guaranteed a token");
+        Some(w)
+    }
+
+    /// FIFO admission ignoring pacing and deadlines — the shutdown-drain
+    /// path, where every already-accepted caller must still be served.
+    pub fn admit_unpaced(&mut self) -> Option<Waiting<T>> {
+        self.queue.pop_front()
+    }
+
+    /// How long the oldest waiter has been queued.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue
+            .front()
+            .map(|w| now.saturating_duration_since(w.enqueued_at))
+    }
+
+    /// Time until the earliest queued deadline expires (`None` when
+    /// deadlines are off or the queue is empty).  Drives the worker's
+    /// sleep so sheds happen on time without idle-tick polling.
+    pub fn next_shed_in(&self, now: Instant) -> Option<Duration> {
+        if self.cfg.deadline.is_zero() {
+            return None;
+        }
+        self.queue
+            .iter()
+            .map(|w| {
+                self.cfg
+                    .deadline
+                    .saturating_sub(now.saturating_duration_since(w.enqueued_at))
+            })
+            .min()
+    }
+
+    /// Time until some queued tenant's bucket refills to a whole token
+    /// (`None` when the queue is empty or no queued tenant can ever
+    /// refill).  Drives the worker's sleep when everything queued is
+    /// rate-limited.
+    pub fn refill_wait(&self, now: Instant) -> Option<Duration> {
+        if self.cfg.tenant_rate <= 0.0 {
+            return self.queue.front().map(|_| Duration::ZERO);
+        }
+        self.queue
+            .iter()
+            .filter_map(|w| {
+                let mut b = self.buckets[w.tenant as usize];
+                b.refill(&self.cfg, now);
+                b.eta_to_token(&self.cfg)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdmissionConfig {
+        AdmissionConfig::default()
+    }
+
+    #[test]
+    fn queue_full_is_a_typed_rejection() {
+        let now = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                max_queue: 2,
+                ..cfg()
+            },
+            3,
+            now,
+        );
+        assert!(q.push(1, 0, now).is_ok());
+        assert!(q.push(2, 0, now).is_ok());
+        let (item, err) = q.push(3, 0, now).unwrap_err();
+        assert_eq!(item, 3, "the rejected item comes back to answer its caller");
+        assert_eq!(
+            err,
+            AdmissionError::QueueFull {
+                shard: 3,
+                capacity: 2
+            }
+        );
+        // the Display keeps the historical "busy" marker
+        assert!(err.to_string().contains("busy"), "{err}");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn deadline_expiry_sheds_in_fifo_order() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                deadline: Duration::from_millis(10),
+                ..cfg()
+            },
+            0,
+            t0,
+        );
+        q.push(1, 0, t0).unwrap();
+        q.push(2, 0, t0 + Duration::from_millis(8)).unwrap();
+        // at t0+11ms only the first waiter is past its deadline
+        let shed = q.shed_expired(t0 + Duration::from_millis(11));
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].0.item, 1);
+        match &shed[0].1 {
+            AdmissionError::DeadlineExceeded { waited, .. } => {
+                assert!(*waited >= Duration::from_millis(11));
+            }
+            other => panic!("wrong shed error: {other:?}"),
+        }
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.admit(t0 + Duration::from_millis(12)).unwrap().item, 2);
+    }
+
+    #[test]
+    fn no_deadline_means_no_shedding() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(), 0, t0);
+        q.push(1, 0, t0).unwrap();
+        assert!(q.shed_expired(t0 + Duration::from_secs(3600)).is_empty());
+        assert!(q.next_shed_in(t0).is_none());
+    }
+
+    #[test]
+    fn token_bucket_paces_admissions() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                tenant_rate: 10.0, // one token per 100ms
+                tenant_burst: 1.0,
+                ..cfg()
+            },
+            0,
+            t0,
+        );
+        q.push(1, 0, t0).unwrap();
+        q.push(2, 0, t0).unwrap();
+        // burst of 1: the first admit drains the bucket
+        assert_eq!(q.admit(t0).unwrap().item, 1);
+        assert!(q.admit(t0).is_none(), "bucket empty, second must wait");
+        let eta = q.refill_wait(t0).expect("refill eta");
+        assert!(eta > Duration::ZERO && eta <= Duration::from_millis(101), "{eta:?}");
+        // after a refill interval the second waiter admits
+        assert_eq!(q.admit(t0 + Duration::from_millis(150)).unwrap().item, 2);
+    }
+
+    #[test]
+    fn rate_limited_tenant_does_not_block_compliant_tenants() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                tenant_rate: 10.0,
+                tenant_burst: 1.0,
+                ..cfg()
+            },
+            0,
+            t0,
+        );
+        // tenant 0 floods the head of the queue, tenant 1 queues behind
+        q.push(10, 0, t0).unwrap();
+        q.push(11, 0, t0).unwrap();
+        q.push(20, 1, t0).unwrap();
+        assert_eq!(q.admit(t0).unwrap().item, 10, "tenant 0 spends its burst");
+        // tenant 0 is out of tokens: admission skips to tenant 1 instead
+        // of head-of-line blocking on the flooding tenant
+        assert_eq!(q.admit(t0).unwrap().item, 20);
+        assert!(q.admit(t0).is_none());
+        // drain ignores pacing entirely
+        assert_eq!(q.admit_unpaced().unwrap().item, 11);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_burst_never_admits_paced_but_drains_unpaced() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                tenant_rate: 1e-9,
+                tenant_burst: 0.0,
+                ..cfg()
+            },
+            0,
+            t0,
+        );
+        q.push(7, 0, t0).unwrap();
+        assert!(q.admit(t0 + Duration::from_secs(3600)).is_none());
+        assert!(q.refill_wait(t0).is_none(), "no refill eta at zero burst");
+        assert_eq!(q.admit_unpaced().unwrap().item, 7);
+    }
+
+    #[test]
+    fn unlimited_rate_is_strict_fifo() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(), 0, t0);
+        for (i, tenant) in [(0u32, 0u8), (1, 3), (2, 1), (3, 3)] {
+            q.push(i, tenant, t0).unwrap();
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.admit(t0).map(|w| w.item)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3], "deterministic submit-order admission");
+    }
+
+    #[test]
+    fn tenant_ids_wrap_onto_classes() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(), 0, t0);
+        q.push(1, (TENANT_CLASSES + 2) as u8, t0).unwrap();
+        assert_eq!(q.admit(t0).unwrap().tenant, 2);
+    }
+
+    #[test]
+    fn next_shed_in_tracks_the_earliest_deadline() {
+        let t0 = Instant::now();
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(
+            AdmissionConfig {
+                deadline: Duration::from_millis(100),
+                ..cfg()
+            },
+            0,
+            t0,
+        );
+        q.push(1, 0, t0).unwrap();
+        q.push(2, 0, t0 + Duration::from_millis(50)).unwrap();
+        let eta = q.next_shed_in(t0 + Duration::from_millis(30)).unwrap();
+        assert_eq!(eta, Duration::from_millis(70), "oldest waiter drives the sleep");
+        assert!(q.oldest_wait(t0 + Duration::from_millis(30)).unwrap() >= Duration::from_millis(30));
+    }
+}

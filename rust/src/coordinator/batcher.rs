@@ -4,10 +4,19 @@
 //!
 //! Flush policy: a batch is emitted when full, or when the oldest queued
 //! request has waited `max_wait`; `max_queue` bounds memory (backpressure:
-//! callers get a rejection instead of unbounded queuing).
+//! callers get a typed [`AdmissionError::QueueFull`] instead of unbounded
+//! queuing).
+//!
+//! The serving path no longer uses this type — shard workers schedule
+//! continuously through [`super::admission::AdmissionQueue`] (DESIGN.md
+//! §17).  The fixed batcher remains for trainer-style callers that need
+//! deadline-flushed whole batches, and as the fixed-batch baseline in
+//! `benches/serving_load.rs`.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use super::admission::AdmissionError;
 
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
@@ -61,10 +70,17 @@ impl<T> Batcher<T> {
         self.queue.is_empty()
     }
 
-    /// Enqueue a request; `Err(item)` = queue full (backpressure).
-    pub fn push(&mut self, item: T) -> Result<(), T> {
+    /// Enqueue a request; `Err` hands the item back with a typed
+    /// [`AdmissionError::QueueFull`] (backpressure).  The `shard` label is
+    /// 0: the fixed batcher serves non-sharded callers (trainer path,
+    /// benches).
+    pub fn push(&mut self, item: T) -> Result<(), (T, AdmissionError)> {
         if self.queue.len() >= self.cfg.max_queue {
-            return Err(item);
+            let err = AdmissionError::QueueFull {
+                shard: 0,
+                capacity: self.cfg.max_queue,
+            };
+            return Err((item, err));
         }
         // queue growth (VecDeque doublings up to max_queue slots) is
         // charged to the batcher scope in the memory attribution table
@@ -168,7 +184,13 @@ mod tests {
         assert!(b.push(1).is_ok());
         assert!(b.push(2).is_ok());
         assert!(b.push(3).is_ok());
-        assert_eq!(b.push(4), Err(4));
+        let (item, err) = b.push(4).unwrap_err();
+        assert_eq!(item, 4, "rejected item is handed back");
+        assert!(
+            matches!(err, AdmissionError::QueueFull { capacity: 3, .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("busy"), "{err}");
     }
 
     #[test]

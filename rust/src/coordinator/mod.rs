@@ -2,9 +2,14 @@
 //!
 //! * [`model`] — `ModelHandle`: parameter state + fwd/train/decode calls
 //!   against the AOT artifacts (manifest-driven parameter threading).
-//! * [`batcher`] — dynamic batching of rollout requests into the fixed
-//!   batch shape the artifacts were lowered at (deadline-based flush,
-//!   pad-and-slice).
+//! * [`admission`] — async admission control for the serving path
+//!   (DESIGN.md §17): bounded wait queue with request deadlines
+//!   (deadline-miss shedding), per-tenant token-bucket QoS, and typed
+//!   [`admission::AdmissionError`]s replacing binary busy-bounces.
+//! * [`batcher`] — dynamic batching of requests into a fixed batch shape
+//!   (deadline-based flush, pad-and-slice).  Retained for the trainer
+//!   path; the serving path now schedules continuously via [`admission`]
+//!   + the step loop in [`server`].
 //! * [`router`] — two routing layers: worker-shard selection with session
 //!   affinity (`ShardRouter`) and per-method model-replica routing inside
 //!   one shard (`Router`).
@@ -17,14 +22,19 @@
 //! * [`rollout`] — autoregressive simulation scheduler: decode -> action ->
 //!   kinematic integration -> advance the token cache, for minADE
 //!   evaluation and serving; generic over the [`model::ActionDecoder`]
-//!   boundary.
+//!   boundary, with single-step session advancement
+//!   ([`rollout::RolloutEngine::step_sessions`]) as a first-class
+//!   operation for the continuous scheduler.
 //! * [`trainer`] — training orchestrator over the dataset pipeline.
 //! * [`server`] — sharded worker-pool serving front end wiring the above
-//!   together (DESIGN.md §12), with optional span tracing and kernel
-//!   profiling via [`crate::trace`] (DESIGN.md §15).
+//!   together (DESIGN.md §12): per-shard continuous-batching step loop
+//!   behind an [`admission::AdmissionQueue`] (DESIGN.md §17), with
+//!   optional span tracing and kernel profiling via [`crate::trace`]
+//!   (DESIGN.md §15).
 //! * [`telemetry`] — lock-free counters/histograms for the hot path,
-//!   including per-shard breakdowns.
+//!   including per-shard and per-tenant breakdowns.
 
+pub mod admission;
 pub mod batcher;
 pub mod kvcache;
 pub mod model;
@@ -34,6 +44,7 @@ pub mod server;
 pub mod telemetry;
 pub mod trainer;
 
+pub use admission::{AdmissionConfig, AdmissionError, AdmissionQueue};
 pub use batcher::{Batcher, BatcherConfig};
 pub use kvcache::{CacheConfig, KvCachePool, MapRegistry, SessionKey, WindowCache};
 pub use model::{ActionDecoder, ModelHandle, NativeSdpaDecoder, SyntheticDecoder};

@@ -24,12 +24,33 @@ pub struct DecodeOutput {
     pub logits: Vec<f32>,
 }
 
+/// Per-slot decode parameters for a continuous step batch
+/// (DESIGN.md §17): each scene slot carries the seed/temperature of the
+/// *request* it belongs to, so sessions from different requests can
+/// share one decode call without perturbing each other's sampling
+/// stream.  `trace` is the owning request's trace id (0 = untraced);
+/// per-slot backends attribute their kernel spans to it.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotParams {
+    pub seed: i32,
+    pub temperature: f32,
+    pub trace: u64,
+}
+
+impl SlotParams {
+    /// Whether two slots can share one [`ActionDecoder::decode`] call
+    /// (trace attribution never splits a batch).
+    fn same_decode(&self, other: &SlotParams) -> bool {
+        self.seed == other.seed && self.temperature == other.temperature
+    }
+}
+
 /// Anything that can sample per-token actions for a tokenized batch: the
 /// PJRT-backed [`ModelHandle`] in production, or an artifact-free
 /// [`SyntheticDecoder`] in tests and benches.  The rollout scheduler and
 /// the sharded server are generic over this boundary, so the whole
-/// serving stack (router -> batcher -> KV-cache pool -> rollout) can be
-/// exercised without compiled XLA artifacts.
+/// serving stack (router -> admission -> KV-cache pool -> rollout) can
+/// be exercised without compiled XLA artifacts.
 pub trait ActionDecoder {
     fn decode(
         &self,
@@ -39,6 +60,108 @@ pub trait ActionDecoder {
         seed: i32,
         temperature: f32,
     ) -> Result<DecodeOutput>;
+
+    /// Decode a batch whose slots carry individual [`SlotParams`] — the
+    /// single-step primitive of the continuous scheduler, where one step
+    /// batch mixes sessions from several requests.
+    ///
+    /// `slots[s]` parameterizes scene slot `s`; padding slots
+    /// (`s >= slots.len()`) reuse the last real slot's parameters and
+    /// their outputs are unspecified (the caller slices them away).
+    ///
+    /// The default implementation splits the batch into maximal runs of
+    /// equal `(seed, temperature)`, re-packs each run into a full
+    /// fixed-shape batch (replicating the run's last slot, exactly like
+    /// the rollout scheduler pads) and decodes it through
+    /// [`ActionDecoder::decode`] — correct for any backend whose decode
+    /// artifact takes one scalar seed, at the cost of one call per run.
+    /// Backends that sample per row ([`SyntheticDecoder`],
+    /// [`NativeSdpaDecoder`]) override this with a single-pass
+    /// implementation.  A uniform batch always takes the one-call fast
+    /// path, so single-request chunks decode bit-identically to the
+    /// legacy fixed-batch path.
+    fn decode_slots(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        slots: &[SlotParams],
+    ) -> Result<DecodeOutput> {
+        let bs = b.batch_size;
+        if slots.is_empty() || slots.len() > bs {
+            bail!(
+                "decode_slots: {} slot params for a batch of {}",
+                slots.len(),
+                bs
+            );
+        }
+        if slots.iter().all(|s| s.same_decode(&slots[0])) {
+            return self.decode(b, n_tokens, feat_dim, slots[0].seed, slots[0].temperature);
+        }
+        let mut actions = vec![0i32; bs * n_tokens];
+        let mut logp: Vec<f32> = Vec::new();
+        let mut logits: Vec<f32> = Vec::new();
+        let mut i = 0;
+        while i < slots.len() {
+            let mut j = i + 1;
+            while j < slots.len() && slots[j].same_decode(&slots[i]) {
+                j += 1;
+            }
+            let sub = repack_run(b, i, j, n_tokens, feat_dim);
+            let out = self.decode(&sub, n_tokens, feat_dim, slots[i].seed, slots[i].temperature)?;
+            let n = (j - i) * n_tokens;
+            if out.actions.len() < n {
+                bail!(
+                    "decode_slots: backend returned {} actions for a run of {}",
+                    out.actions.len(),
+                    n
+                );
+            }
+            actions[i * n_tokens..i * n_tokens + n].copy_from_slice(&out.actions[..n]);
+            if !out.logp.is_empty() && out.logp.len() >= n {
+                logp.resize(bs * n_tokens, 0.0);
+                logp[i * n_tokens..i * n_tokens + n].copy_from_slice(&out.logp[..n]);
+            }
+            let a_dim = out.logits.len() / (bs * n_tokens).max(1);
+            if a_dim > 0 && out.logits.len() >= n * a_dim {
+                logits.resize(bs * n_tokens * a_dim, 0.0);
+                logits[i * n_tokens * a_dim..(i * n_tokens + n) * a_dim]
+                    .copy_from_slice(&out.logits[..n * a_dim]);
+            }
+            i = j;
+        }
+        Ok(DecodeOutput {
+            actions,
+            logp,
+            logits,
+        })
+    }
+}
+
+/// Re-pack slots `[i, j)` of `b` into a full fixed-shape batch, padding
+/// the tail by replicating the run's last slot (the same
+/// `extend_from_within` padding the rollout scheduler uses).
+fn repack_run(b: &Batch, i: usize, j: usize, n_tokens: usize, feat_dim: usize) -> Batch {
+    let bs = b.batch_size;
+    let (fr, pr, tr) = (n_tokens * feat_dim, n_tokens * 3, n_tokens);
+    let mut sub = Batch {
+        feat: Vec::with_capacity(bs * fr),
+        pose: Vec::with_capacity(bs * pr),
+        tq: Vec::with_capacity(bs * tr),
+        target: Vec::with_capacity(bs * tr),
+        batch_size: bs,
+    };
+    sub.feat.extend_from_slice(&b.feat[i * fr..j * fr]);
+    sub.pose.extend_from_slice(&b.pose[i * pr..j * pr]);
+    sub.tq.extend_from_slice(&b.tq[i * tr..j * tr]);
+    sub.target.extend_from_slice(&b.target[i * tr..j * tr]);
+    for _ in j - i..bs {
+        sub.feat.extend_from_within((sub.feat.len() - fr)..);
+        sub.pose.extend_from_within((sub.pose.len() - pr)..);
+        sub.tq.extend_from_within((sub.tq.len() - tr)..);
+        sub.target.extend_from_within((sub.target.len() - tr)..);
+    }
+    sub
 }
 
 /// Deterministic artifact-free decoder: each token's action is a stateless
@@ -108,6 +231,53 @@ impl ActionDecoder for SyntheticDecoder {
         }
         // diagnostics (logp/logits) are not produced on this path; the
         // rollout scheduler consumes actions only
+        Ok(DecodeOutput {
+            actions,
+            logp: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+
+    /// Single-pass override: the hash is per row anyway, so a mixed-seed
+    /// step batch costs exactly one pass — no re-packing.
+    fn decode_slots(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        slots: &[SlotParams],
+    ) -> Result<DecodeOutput> {
+        use crate::prng::SplitMix64;
+        let bs = b.batch_size;
+        if slots.is_empty() || slots.len() > bs {
+            bail!(
+                "decode_slots: {} slot params for a batch of {}",
+                slots.len(),
+                bs
+            );
+        }
+        if b.feat.len() != bs * n_tokens * feat_dim {
+            bail!(
+                "synthetic decode: batch carries {} features, expected {}",
+                b.feat.len(),
+                bs * n_tokens * feat_dim
+            );
+        }
+        let mut actions = Vec::with_capacity(bs * n_tokens);
+        for s in 0..bs {
+            let seed = slots[s.min(slots.len() - 1)].seed;
+            for t in 0..n_tokens {
+                let row = &b.feat[(s * n_tokens + t) * feat_dim..(s * n_tokens + t + 1) * feat_dim];
+                let mut h = (seed as i64 as u64) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                for &f in row {
+                    h = SplitMix64::new(h ^ u64::from(f.to_bits())).next_u64();
+                }
+                for _ in 0..self.work_per_token {
+                    h = SplitMix64::new(h).next_u64();
+                }
+                actions.push((h % self.n_actions.max(1) as u64) as i32);
+            }
+        }
         Ok(DecodeOutput {
             actions,
             logp: Vec::new(),
@@ -194,6 +364,86 @@ impl ActionDecoder for NativeSdpaDecoder {
         }
         // diagnostics (logp/logits) are not produced on this path; the
         // rollout scheduler consumes actions only
+        Ok(DecodeOutput {
+            actions,
+            logp: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+
+    /// Single-pass override: attention is per scene slot anyway, so a
+    /// mixed-seed step batch costs exactly one kernel call per slot —
+    /// same as the uniform path.  Each slot's kernel call runs under
+    /// that slot's trace id, so the Attend spans of a shared step batch
+    /// land on the timeline of the request that owns the slot.
+    fn decode_slots(
+        &self,
+        b: &Batch,
+        n_tokens: usize,
+        feat_dim: usize,
+        slots: &[SlotParams],
+    ) -> Result<DecodeOutput> {
+        use crate::attention::kernel::flash_sdpa_blocked;
+        use crate::prng::SplitMix64;
+        let bs = b.batch_size;
+        if slots.is_empty() || slots.len() > bs {
+            bail!(
+                "decode_slots: {} slot params for a batch of {}",
+                slots.len(),
+                bs
+            );
+        }
+        if b.feat.len() != bs * n_tokens * feat_dim {
+            bail!(
+                "native decode: batch carries {} features, expected {}",
+                b.feat.len(),
+                bs * n_tokens * feat_dim
+            );
+        }
+        if b.tq.len() != bs * n_tokens {
+            bail!(
+                "native decode: batch carries {} timestamps, expected {}",
+                b.tq.len(),
+                bs * n_tokens
+            );
+        }
+        let scale = 1.0 / (feat_dim.max(1) as f64).sqrt();
+        let mut attended = vec![0.0f32; n_tokens * feat_dim];
+        let mut actions = Vec::with_capacity(bs * n_tokens);
+        let mut ambient = 0u64;
+        for s in 0..bs {
+            let p = slots[s.min(slots.len() - 1)];
+            // padding slots attribute to nobody
+            let want = if s < slots.len() { p.trace } else { 0 };
+            if want != ambient {
+                crate::trace::set_trace_id(want);
+                ambient = want;
+            }
+            let rows = &b.feat[s * n_tokens * feat_dim..(s + 1) * n_tokens * feat_dim];
+            let tq = &b.tq[s * n_tokens..(s + 1) * n_tokens];
+            flash_sdpa_blocked(
+                rows,
+                rows,
+                rows,
+                tq,
+                tq,
+                feat_dim,
+                scale,
+                &mut attended,
+                &self.kernel,
+            );
+            for t in 0..n_tokens {
+                let row = &attended[t * feat_dim..(t + 1) * feat_dim];
+                let mut h = (p.seed as i64 as u64) ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                for &f in row {
+                    h = SplitMix64::new(h ^ u64::from(f.to_bits())).next_u64();
+                }
+                actions.push((h % self.n_actions.max(1) as u64) as i32);
+            }
+        }
+        if ambient != 0 {
+            crate::trace::set_trace_id(0);
+        }
         Ok(DecodeOutput {
             actions,
             logp: Vec::new(),
@@ -499,5 +749,149 @@ mod tests {
         let d = NativeSdpaDecoder::new(8, KernelConfig::fixed(4, 8, 1));
         let b = toy_batch(1, 4, 3, 0.0);
         assert!(d.decode(&b, 5, 3, 0, 1.0).is_err());
+    }
+
+    fn uniform(n: usize, seed: i32) -> Vec<SlotParams> {
+        vec![
+            SlotParams {
+                seed,
+                temperature: 1.0,
+                trace: 0,
+            };
+            n
+        ]
+    }
+
+    /// A uniform slot batch must take the one-call fast path and decode
+    /// bit-identically to plain `decode` — the property that keeps
+    /// single-request chunks equal to the legacy fixed-batch path.
+    #[test]
+    fn decode_slots_uniform_matches_decode() {
+        use crate::attention::kernel::KernelConfig;
+        let (n_tokens, fd) = (6, 4);
+        let b = toy_batch(3, n_tokens, fd, 0.75);
+        let syn = SyntheticDecoder::new(64);
+        let nat = NativeSdpaDecoder::new(64, KernelConfig::fixed(8, 8, 2));
+        for seed in [0, 7, -3] {
+            let s = uniform(3, seed);
+            assert_eq!(
+                syn.decode(&b, n_tokens, fd, seed, 1.0).unwrap().actions,
+                syn.decode_slots(&b, n_tokens, fd, &s).unwrap().actions,
+            );
+            assert_eq!(
+                nat.decode(&b, n_tokens, fd, seed, 1.0).unwrap().actions,
+                nat.decode_slots(&b, n_tokens, fd, &s).unwrap().actions,
+            );
+        }
+    }
+
+    /// The continuous-scheduler property: a slot in a mixed-seed step
+    /// batch decodes exactly what it would decode alone in its own
+    /// batch under its own seed — per-request results cannot depend on
+    /// which other requests happen to share the step.
+    #[test]
+    fn decode_slots_heterogeneous_equals_solo_decodes() {
+        use crate::attention::kernel::KernelConfig;
+        let (n_tokens, fd) = (4, 3);
+        let b = toy_batch(3, n_tokens, fd, 2.25);
+        let seeds = [11, -5, 11];
+        let slots: Vec<SlotParams> = seeds
+            .iter()
+            .map(|&seed| SlotParams {
+                seed,
+                temperature: 1.0,
+                trace: 0,
+            })
+            .collect();
+        let syn = SyntheticDecoder::new(32);
+        let nat = NativeSdpaDecoder::new(32, KernelConfig::fixed(4, 8, 1));
+        let got_syn = syn.decode_slots(&b, n_tokens, fd, &slots).unwrap();
+        let got_nat = nat.decode_slots(&b, n_tokens, fd, &slots).unwrap();
+        for (s, &seed) in seeds.iter().enumerate() {
+            let mut solo = toy_batch(1, n_tokens, fd, 0.0);
+            solo.feat
+                .copy_from_slice(&b.feat[s * n_tokens * fd..(s + 1) * n_tokens * fd]);
+            let want_syn = syn.decode(&solo, n_tokens, fd, seed, 1.0).unwrap();
+            let want_nat = nat.decode(&solo, n_tokens, fd, seed, 1.0).unwrap();
+            assert_eq!(
+                want_syn.actions,
+                got_syn.actions[s * n_tokens..(s + 1) * n_tokens],
+                "synthetic slot {s}"
+            );
+            assert_eq!(
+                want_nat.actions,
+                got_nat.actions[s * n_tokens..(s + 1) * n_tokens],
+                "native slot {s}"
+            );
+        }
+    }
+
+    /// Exercise the default run-grouping implementation (re-pack each
+    /// equal-(seed,temp) run, decode, stitch) through a backend that
+    /// does NOT override `decode_slots`, and check it agrees with the
+    /// single-pass override on the same input.
+    #[test]
+    fn default_decode_slots_grouping_matches_override() {
+        struct DefaultOnly(SyntheticDecoder);
+        impl ActionDecoder for DefaultOnly {
+            fn decode(
+                &self,
+                b: &Batch,
+                n_tokens: usize,
+                feat_dim: usize,
+                seed: i32,
+                temperature: f32,
+            ) -> Result<DecodeOutput> {
+                self.0.decode(b, n_tokens, feat_dim, seed, temperature)
+            }
+        }
+        let (n_tokens, fd) = (4, 3);
+        let b = toy_batch(4, n_tokens, fd, 1.25);
+        let seeds = [2, 2, 9, -1];
+        let slots: Vec<SlotParams> = seeds
+            .iter()
+            .map(|&seed| SlotParams {
+                seed,
+                temperature: 1.0,
+                trace: 0,
+            })
+            .collect();
+        let wrapped = DefaultOnly(SyntheticDecoder::new(32));
+        let plain = SyntheticDecoder::new(32);
+        assert_eq!(
+            wrapped.decode_slots(&b, n_tokens, fd, &slots).unwrap().actions,
+            plain.decode_slots(&b, n_tokens, fd, &slots).unwrap().actions,
+        );
+    }
+
+    /// Fewer slot params than scene slots = the tail is padding; the
+    /// real prefix must still decode per-slot correctly.
+    #[test]
+    fn decode_slots_tolerates_padding_slots() {
+        let (n_tokens, fd) = (4, 3);
+        let b = toy_batch(4, n_tokens, fd, 0.5);
+        let slots = [
+            SlotParams {
+                seed: 1,
+                temperature: 1.0,
+                trace: 0,
+            },
+            SlotParams {
+                seed: 8,
+                temperature: 1.0,
+                trace: 0,
+            },
+        ];
+        let d = SyntheticDecoder::new(32);
+        let got = d.decode_slots(&b, n_tokens, fd, &slots).unwrap();
+        for (s, p) in slots.iter().enumerate() {
+            let mut solo = toy_batch(1, n_tokens, fd, 0.0);
+            solo.feat
+                .copy_from_slice(&b.feat[s * n_tokens * fd..(s + 1) * n_tokens * fd]);
+            let want = d.decode(&solo, n_tokens, fd, p.seed, 1.0).unwrap();
+            assert_eq!(want.actions, got.actions[s * n_tokens..(s + 1) * n_tokens]);
+        }
+        // no params at all is a caller bug, not silent misdecoding
+        assert!(d.decode_slots(&b, n_tokens, fd, &[]).is_err());
     }
 }

@@ -16,6 +16,14 @@
 //! each is packed into ceil(scenes*S / B) slots per step.  Padding slots
 //! replicate the last real scene's already-assembled rows in the batch
 //! buffer instead of re-extending tokenizer output per slot.
+//!
+//! Single-step advancement is first-class (DESIGN.md §17): the
+//! continuous-batching scheduler holds long-lived [`SessionState`]s and
+//! drives [`RolloutEngine::step_sessions`] directly, packing sessions
+//! from *different requests* into one step batch with per-slot
+//! [`SlotParams`] (seed/temperature/trace).  Whole-request
+//! [`RolloutEngine::rollout_with_cache`] is a thin loop over the same
+//! primitive, so both paths decode bit-identically.
 
 use std::sync::Arc;
 
@@ -29,7 +37,7 @@ use crate::sim::{AgentState, MapElement, Scenario, TrajectoryClass};
 use crate::tokenizer::{TokenizedScene, Tokenizer};
 
 use super::kvcache::{CacheConfig, KvCachePool, SessionKey};
-use super::model::{ActionDecoder, ModelHandle};
+use super::model::{ActionDecoder, ModelHandle, SlotParams};
 use super::telemetry::CacheStats;
 
 /// A request to roll one scenario forward.
@@ -63,14 +71,46 @@ pub struct RolloutResult {
     pub decode_ms: f64,
 }
 
-/// One in-flight scene-sample: mutable window state plus its cache key.
-struct SampleState {
+/// One in-flight decode session: a scene-sample's mutable window state
+/// plus its KV-cache identity.  Opaque outside the coordinator: the
+/// continuous scheduler holds these across step batches and hands them
+/// back to [`RolloutEngine::step_sessions`] each step and to
+/// [`RolloutEngine::finish_request`] at retirement.
+pub struct SessionState {
     map: Vec<MapElement>,
     window: Vec<Vec<AgentState>>,
     /// Recorded world positions per agent per emitted step.
     track: Vec<Vec<(f64, f64)>>,
     /// Session identity in the KV cache pool.
     key: SessionKey,
+}
+
+impl SessionState {
+    /// Cache-pool identity — the scheduler ends the pool session with
+    /// this key when the owning request retires.
+    pub fn key(&self) -> SessionKey {
+        self.key
+    }
+}
+
+/// One scene slot of a continuous step batch: a live session plus the
+/// decode parameters of the request that owns it.
+pub struct StepSlot<'a> {
+    pub session: &'a mut SessionState,
+    pub params: SlotParams,
+}
+
+/// What one [`RolloutEngine::step_sessions`] call did, for telemetry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    /// Summed decode wall time across this call's decode invocations (ms).
+    pub decode_ms: f64,
+    /// Decode invocations issued (chunks of the model batch size).
+    pub decode_calls: usize,
+    /// Real session slots advanced.
+    pub real_slots: usize,
+    /// Padding slots decoded alongside them.
+    pub padded_slots: usize,
 }
 
 /// The autoregressive rollout scheduler (see module docs): generic over
@@ -93,13 +133,16 @@ impl RolloutEngine {
         }
     }
 
-    fn sample_state(&self, req: &RolloutRequest, sample: u32) -> SampleState {
+    /// Open one decode session (sample `sample` of `req`): seed its
+    /// history window from the scenario and mint its cache-pool key.
+    /// The matching `pool.end_session` is the caller's responsibility.
+    pub fn begin_session(&self, req: &RolloutRequest, sample: u32) -> SessionState {
         let h = self.sim.history_steps;
         let window: Vec<Vec<AgentState>> = (req.t0 + 1 - h..=req.t0)
             .map(|t| req.scenario.states[t].clone())
             .collect();
         let n_agents = window[0].len();
-        SampleState {
+        SessionState {
             map: req.scenario.map_elements.clone(),
             window,
             track: vec![Vec::new(); n_agents],
@@ -115,34 +158,77 @@ impl RolloutEngine {
         }
     }
 
-    /// Advance a group of samples one decode step.  The decode boundary
-    /// is the [`ActionDecoder`] trait, so any backend (PJRT artifacts or
-    /// an artifact-free synthetic decoder) drives the same scheduler.
-    fn step_samples(
+    /// The per-slot decode seed for sample `sample_index` of `req` at
+    /// `step` — matches the legacy fixed-batch path bit for bit.  The
+    /// base mixes the request seed with the step index exactly as
+    /// before; the offset is the request-local chunk start the sample
+    /// occupied when the request decoded alone (chunks of the model
+    /// batch size).  Every slot of such a chunk shares one seed, so a
+    /// single-request step batch takes the decoder's uniform fast path
+    /// and reproduces the legacy actions; in a shared step batch the
+    /// per-slot seeds keep each request's sampling stream independent
+    /// of whoever else is in the batch.
+    pub fn step_seed(&self, req: &RolloutRequest, step: usize, sample_index: usize) -> i32 {
+        let chunk_start = (sample_index / self.model_cfg.batch_size) * self.model_cfg.batch_size;
+        req.seed
+            .wrapping_mul(7919)
+            .wrapping_add(step as i32 * 104_729)
+            .wrapping_add(chunk_start as i32)
+    }
+
+    /// Advance a set of live sessions one decode step — the single-step
+    /// primitive of the continuous scheduler.  Slots may belong to
+    /// different requests; each carries its own [`SlotParams`].  The
+    /// decode boundary is the [`ActionDecoder`] trait, so any backend
+    /// (PJRT artifacts or an artifact-free synthetic decoder) drives the
+    /// same scheduler.
+    ///
+    /// Tracing: when any slot carries a nonzero trace id, tokenize and
+    /// decode spans are recorded per request (slots of one request are
+    /// expected to be packed contiguously), so a shared step batch still
+    /// reconstructs into per-request timelines.
+    pub fn step_sessions(
         &self,
         model: &dyn ActionDecoder,
-        samples: &mut [SampleState],
+        slots: &mut [StepSlot<'_>],
         pool: &KvCachePool,
-        seed: i32,
-        temperature: f32,
-    ) -> Result<f64> {
+    ) -> Result<StepReport> {
         let b = self.model_cfg.batch_size;
         let n_tokens = self.model_cfg.n_tokens;
         let feat_dim = self.model_cfg.feat_dim;
-        let mut decode_ms = 0.0;
-        let mut calls = 0usize;
+        let mut report = StepReport {
+            real_slots: slots.len(),
+            ..StepReport::default()
+        };
 
-        let total = samples.len();
+        let total = slots.len();
         for chunk_start in (0..total).step_by(b) {
-            let chunk = &mut samples[chunk_start..(chunk_start + b).min(total)];
-            // tokenize only the frontier of each sample; the pool supplies
+            let chunk = &mut slots[chunk_start..(chunk_start + b).min(total)];
+            let traced = chunk.iter().any(|s| s.params.trace != 0);
+            // tokenize only the frontier of each session; the pool supplies
             // cached map rows and the reusable older window steps
             let tok_t0 = std::time::Instant::now();
-            let scenes: Vec<TokenizedScene> = chunk
-                .iter()
-                .map(|s| pool.step(s.key, &self.tokenizer, &s.map, &s.window))
-                .collect::<Result<_>>()?;
-            crate::trace::record_since(crate::trace::Stage::Tokenize, tok_t0, chunk.len() as u64);
+            let mut scenes: Vec<TokenizedScene> = Vec::with_capacity(chunk.len());
+            for slot in chunk.iter() {
+                let s = &slot.session;
+                let slot_t0 = std::time::Instant::now();
+                if traced {
+                    crate::trace::set_trace_id(slot.params.trace);
+                }
+                let scene = pool.step(s.key, &self.tokenizer, &s.map, &s.window);
+                if traced {
+                    crate::trace::record_since(crate::trace::Stage::Tokenize, slot_t0, 1);
+                    crate::trace::set_trace_id(0);
+                }
+                scenes.push(scene?);
+            }
+            if !traced {
+                crate::trace::record_since(
+                    crate::trace::Stage::Tokenize,
+                    tok_t0,
+                    chunk.len() as u64,
+                );
+            }
             let mut batch = Batch {
                 feat: Vec::with_capacity(b * n_tokens * feat_dim),
                 pose: Vec::with_capacity(b * n_tokens * 3),
@@ -168,20 +254,36 @@ impl RolloutEngine {
                 batch.tq.extend_from_within(tb..);
                 batch.target.extend_from_within(gb..);
             }
+            report.padded_slots += b - scenes.len();
+            let params: Vec<SlotParams> = chunk.iter().map(|s| s.params).collect();
             let t0 = std::time::Instant::now();
-            let out = model.decode(
-                &batch,
-                n_tokens,
-                feat_dim,
-                seed.wrapping_add(chunk_start as i32),
-                temperature,
-            )?;
-            decode_ms += t0.elapsed().as_secs_f64() * 1e3;
-            crate::trace::record_since(crate::trace::Stage::Decode, t0, chunk.len() as u64);
-            calls += 1;
+            let out = model.decode_slots(&batch, n_tokens, feat_dim, &params)?;
+            let t1 = std::time::Instant::now();
+            report.decode_ms += (t1 - t0).as_secs_f64() * 1e3;
+            report.decode_calls += 1;
+            if traced {
+                // one Decode span per request sharing this chunk
+                let mut last = 0u64;
+                for slot in chunk.iter() {
+                    let id = slot.params.trace;
+                    if id != 0 && id != last {
+                        crate::trace::record_between(
+                            crate::trace::Stage::Decode,
+                            t0,
+                            t1,
+                            id,
+                            chunk.len() as u64,
+                        );
+                        last = id;
+                    }
+                }
+            } else {
+                crate::trace::record_since(crate::trace::Stage::Decode, t0, chunk.len() as u64);
+            }
 
-            // apply sampled frontier actions per (real) sample
-            for (si, state) in chunk.iter_mut().enumerate() {
+            // apply sampled frontier actions per (real) session
+            for (si, slot) in chunk.iter_mut().enumerate() {
+                let state = &mut *slot.session;
                 let scene = &scenes[si];
                 let n_agents = state.window[0].len();
                 let latest = state.window.last().unwrap().clone();
@@ -202,7 +304,7 @@ impl RolloutEngine {
                 state.window.push(next);
             }
         }
-        Ok(decode_ms / calls.max(1) as f64)
+        Ok(report)
     }
 
     /// Run a full rollout request with a private, request-local cache
@@ -226,37 +328,59 @@ impl RolloutEngine {
         pool: &KvCachePool,
     ) -> Result<RolloutResult> {
         // a zero-sample request is a recoverable caller error, not a
-        // `samples[0]` panic on the serving thread
+        // `sessions[0]` panic on the serving thread
         if req.n_samples == 0 {
             bail!("rollout request asks for zero samples — nothing to roll out");
         }
-        let mut samples: Vec<SampleState> = (0..req.n_samples)
-            .map(|i| self.sample_state(req, i as u32))
+        let mut sessions: Vec<SessionState> = (0..req.n_samples)
+            .map(|i| self.begin_session(req, i as u32))
             .collect();
-        let stepped = (|| -> Result<f64> {
-            let mut decode_ms = 0.0;
+        let stepped = (|| -> Result<StepReport> {
+            let mut total = StepReport::default();
             for step in 0..self.sim.future_steps {
-                decode_ms += self.step_samples(
-                    model,
-                    &mut samples,
-                    pool,
-                    req.seed
-                        .wrapping_mul(7919)
-                        .wrapping_add(step as i32 * 104_729),
-                    req.temperature,
-                )?;
+                let mut slots: Vec<StepSlot<'_>> = sessions
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, session)| StepSlot {
+                        params: SlotParams {
+                            seed: self.step_seed(req, step, i),
+                            temperature: req.temperature,
+                            trace: 0,
+                        },
+                        session,
+                    })
+                    .collect();
+                let rep = self.step_sessions(model, &mut slots, pool)?;
+                total.decode_ms += rep.decode_ms;
+                total.decode_calls += rep.decode_calls;
+                total.real_slots += rep.real_slots;
+                total.padded_slots += rep.padded_slots;
             }
-            Ok(decode_ms)
+            Ok(total)
         })();
         // session lifecycle: release before propagating any decode error
-        for s in &samples {
+        for s in &sessions {
             pool.end_session(s.key);
         }
-        let decode_ms = stepped? / self.sim.future_steps as f64;
+        let rep = stepped?;
+        let decode_ms = rep.decode_ms / rep.decode_calls.max(1) as f64;
+        Ok(self.finish_request(req, &sessions, decode_ms))
+    }
 
-        let n_agents = samples[0].track.len();
+    /// Assemble the [`RolloutResult`] for a request whose sessions have
+    /// all advanced `future_steps` steps.  Pure bookkeeping — the caller
+    /// owns the session lifecycle (`pool.end_session` per key), which is
+    /// what lets the continuous scheduler retire requests one at a time
+    /// out of a shared step batch.
+    pub fn finish_request(
+        &self,
+        req: &RolloutRequest,
+        sessions: &[SessionState],
+        decode_ms: f64,
+    ) -> RolloutResult {
+        let n_agents = sessions.first().map(|s| s.track.len()).unwrap_or(0);
         let trajectories: Vec<Vec<Vec<(f64, f64)>>> =
-            samples.iter().map(|s| s.track.clone()).collect();
+            sessions.iter().map(|s| s.track.clone()).collect();
         let collisions = trajectories
             .iter()
             .map(|s| metrics::sample_collisions(s, metrics::COLLISION_RADIUS_M))
@@ -280,13 +404,13 @@ impl RolloutEngine {
             classes.push(req.scenario.classify_future(a, req.t0));
         }
 
-        Ok(RolloutResult {
+        RolloutResult {
             trajectories,
             min_ade,
             classes,
             collisions,
             decode_ms,
-        })
+        }
     }
 
     /// Evaluate a model over many scenarios, accumulating a Table-I row.

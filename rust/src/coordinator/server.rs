@@ -1,8 +1,8 @@
-//! Sharded serving front end (DESIGN.md §12): N worker threads, each
-//! owning its own inference backend (the PJRT engine and the `xla`
+//! Sharded serving front end (DESIGN.md §12, §17): N worker threads,
+//! each owning its own inference backend (the PJRT engine and the `xla`
 //! crate's client are `Rc`-based and must not cross threads, so every
-//! worker builds its replicas on its own thread), its own per-method
-//! `Batcher` set, and its own `KvCachePool` shard over a *shared* map-row
+//! worker builds its replicas on its own thread), its own admission
+//! queue, and its own `KvCachePool` shard over a *shared* map-row
 //! registry.
 //!
 //! Routing: session traffic is hashed by family-aware
@@ -11,18 +11,29 @@
 //! mid-rollout.  Stateless traffic (`submit_stateless`) goes to the
 //! least-loaded shard by inflight depth.
 //!
-//! Flow per shard: submit -> shard router -> per-method batcher ->
-//! deadline/size flush -> replica router -> rollout engine -> respond.
-//! Backpressure is **per shard**: a hot scene family fills only its own
-//! shard's queues and surfaces `Busy` to its own callers; the other
-//! shards keep serving.  Shutdown is graceful on every shard: partially
-//! filled batches drain *through the rollout engine*, so every
-//! already-accepted caller gets a real result rather than a drop, and a
-//! submit after shutdown gets an explicit "server is shut down" error.
+//! Scheduling is **continuous batching** (DESIGN.md §17): each worker
+//! runs a step loop — admit waiting requests into the live set, pack
+//! every live session into one step batch, decode *one* step through
+//! the incremental engine, retire requests that reached their horizon,
+//! respond — so sessions join and leave the in-flight batch at step
+//! granularity instead of waiting for fixed-size batch flushes.  An
+//! [`AdmissionQueue`] fronts the loop: a bounded wait queue with
+//! optional request deadlines (stale waiters are *shed* with a typed
+//! [`DeadlineExceeded`](super::admission::AdmissionError::DeadlineExceeded))
+//! and per-tenant token-bucket pacing, replacing the old binary `Busy`
+//! bounce.  Backpressure is still **per shard**: a hot scene family
+//! fills only its own shard's queue, and only its own callers see
+//! [`QueueFull`](super::admission::AdmissionError::QueueFull).
+//!
+//! The worker sleeps on its mailbox condvar when idle — a submit wakes
+//! it immediately, so a quiet shard adds no idle-tick latency.  Shutdown
+//! is graceful on every shard: the admission queue drains *through the
+//! step loop* (pacing and deadlines ignored), so every already-accepted
+//! caller gets a real result rather than a drop, and a submit after
+//! shutdown gets an explicit "server is shut down" error.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -31,10 +42,10 @@ use crate::config::{Method, SystemConfig};
 use crate::runtime::Engine;
 use crate::sim::Scenario;
 
-use super::batcher::{Batcher, BatcherConfig, ReadyBatch};
+use super::admission::{AdmissionConfig, AdmissionQueue};
 use super::kvcache::{CacheConfig, KvCachePool, MapRegistry};
-use super::model::{ActionDecoder, ModelHandle};
-use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult};
+use super::model::{ActionDecoder, ModelHandle, SlotParams};
+use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult, SessionState, StepSlot};
 use super::router::{shard_of, Router, ShardRouter};
 use super::telemetry::{ServerStats, ShardStats};
 use crate::trace::{self, ProfileConfig, ProfileGuard, Stage, TraceConfig, Tracer};
@@ -50,15 +61,18 @@ pub type Backend = Router<Box<dyn ActionDecoder>>;
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Backend> + Send + Sync>;
 
 /// Serving-layer configuration: worker shard count plus the per-shard
-/// batching and KV-cache budgets.
+/// admission and KV-cache budgets.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Worker shards (each its own thread + model replicas + batchers +
-    /// cache pool).  `Default` derives this from the host's parallelism.
+    /// Worker shards (each its own thread + model replicas + admission
+    /// queue + cache pool).  `Default` derives this from the host's
+    /// parallelism.
     pub workers: usize,
-    /// Batcher knobs, applied per shard per method — `max_queue` is a
-    /// per-shard bound, so backpressure isolates hot shards.
-    pub batcher: BatcherConfig,
+    /// Admission-controller knobs, applied per shard — `max_queue` is a
+    /// per-shard bound, so backpressure isolates hot shards; `deadline`
+    /// and the tenant token buckets shape load under overload
+    /// (DESIGN.md §17).
+    pub admission: AdmissionConfig,
     /// KV/tokenization cache budget, applied per shard pool (the shared
     /// map-row registry is bounded by `max_map_scenes` once, server-wide).
     /// Its `precision` field (CLI `simulate --cache-precision`) selects
@@ -90,7 +104,7 @@ impl Default for ServeConfig {
     fn default() -> ServeConfig {
         ServeConfig {
             workers: crate::config::default_workers(),
-            batcher: BatcherConfig::default(),
+            admission: AdmissionConfig::default(),
             cache: CacheConfig::default(),
             kernel: crate::attention::kernel::KernelConfig::default(),
             trace: TraceConfig::default(),
@@ -117,6 +131,8 @@ struct Envelope {
     submitted_at: Instant,
     /// Tracing id minted at submit (0 when tracing is off).
     trace_id: u64,
+    /// Tenant QoS class (wrapped onto the admission token buckets).
+    tenant: u8,
     respond: mpsc::Sender<Result<RolloutResult>>,
 }
 
@@ -125,8 +141,86 @@ enum Message {
     Shutdown,
 }
 
+/// Condvar-backed worker inbox: submitters push and wake the worker
+/// immediately (no idle-tick polling), the worker drains FIFO.  `close`
+/// seals the box so post-shutdown submits fail fast with an explicit
+/// error instead of queueing into a dead shard.
+struct Mailbox {
+    state: Mutex<MailboxState>,
+    ready: Condvar,
+}
+
+struct MailboxState {
+    queue: VecDeque<Message>,
+    closed: bool,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox {
+            state: Mutex::new(MailboxState {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue and wake the worker; `Err` hands the message back when
+    /// the box is closed (worker exited or shutting down).
+    fn push(&self, msg: Message) -> std::result::Result<(), Message> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(msg);
+        }
+        {
+            // inbox growth is charged to the batcher scope alongside the
+            // admission queue it feeds
+            let _mem = crate::obs::alloc::MemScope::enter("batcher");
+            st.queue.push_back(msg);
+        }
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Take everything queued.  When empty, sleep up to `timeout`
+    /// (`None` = until work arrives or the box closes) — the condvar
+    /// wake is what lets an idle shard pick up a submit with zero
+    /// polling latency.
+    fn recv(&self, timeout: Option<Duration>) -> Vec<Message> {
+        let mut st = self.state.lock().unwrap();
+        match timeout {
+            Some(d) => {
+                if st.queue.is_empty() && !st.closed {
+                    st = self.ready.wait_timeout(st, d).unwrap().0;
+                }
+            }
+            None => {
+                while st.queue.is_empty() && !st.closed {
+                    st = self.ready.wait(st).unwrap();
+                }
+            }
+        }
+        st.queue.drain(..).collect()
+    }
+
+    /// Non-blocking drain (the step loop must keep stepping live work).
+    fn try_drain(&self) -> Vec<Message> {
+        self.state.lock().unwrap().queue.drain(..).collect()
+    }
+
+    /// Seal against further pushes and hand back whatever was still
+    /// queued.  Idempotent.
+    fn close(&self) -> Vec<Message> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        st.queue.drain(..).collect()
+    }
+}
+
 struct Shard {
-    tx: mpsc::Sender<Message>,
+    mailbox: Arc<Mailbox>,
     thread: Option<std::thread::JoinHandle<()>>,
     stats: Arc<ShardStats>,
 }
@@ -138,7 +232,7 @@ pub struct Server {
     pub stats: Arc<ServerStats>,
     /// Span recorder, present when `ServeConfig::trace.enabled`.
     tracer: Option<Arc<Tracer>>,
-    /// Per-shard queue capacity, retained for the introspection
+    /// Per-shard admission-queue capacity, retained for the introspection
     /// server's saturation check ([`Server::obs_sources`]).
     max_queue: usize,
     /// Holds the global profiling gate up while the server lives.
@@ -187,7 +281,7 @@ impl Server {
 
     /// Start the worker pool on an injected backend factory (called once
     /// per shard, on that shard's thread).  This is how tests and benches
-    /// serve real traffic through the full shard/batch/cache machinery
+    /// serve real traffic through the full shard/admission/cache machinery
     /// without compiled artifacts.
     pub fn start_with_backend(
         cfg: SystemConfig,
@@ -213,13 +307,13 @@ impl Server {
         let mut shards = Vec::with_capacity(workers);
         let mut ready_rxs = Vec::with_capacity(workers);
         for shard_id in 0..workers {
-            let (tx, rx) = mpsc::channel::<Message>();
+            let mailbox = Arc::new(Mailbox::new());
             let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
             let ctx = ShardCtx {
                 id: shard_id,
                 cfg: cfg.clone(),
                 methods: methods.clone(),
-                batcher_cfg: serve.batcher.clone(),
+                admission: serve.admission.clone(),
                 cache_cfg: serve.cache.clone(),
                 maps: Arc::clone(&maps),
                 stats: Arc::clone(&stats),
@@ -227,11 +321,12 @@ impl Server {
                 factory: Arc::clone(&factory),
                 tracer: tracer.clone(),
             };
+            let worker_mailbox = Arc::clone(&mailbox);
             let thread = std::thread::Builder::new()
                 .name(format!("se2attn-shard-{shard_id}"))
-                .spawn(move || shard_worker(ctx, rx, ready_tx))?;
+                .spawn(move || shard_worker(ctx, worker_mailbox, ready_tx))?;
             shards.push(Shard {
-                tx,
+                mailbox,
                 thread: Some(thread),
                 stats: Arc::clone(&stats.shards[shard_id]),
             });
@@ -243,7 +338,7 @@ impl Server {
             router: ShardRouter::new(workers),
             stats,
             tracer,
-            max_queue: serve.batcher.max_queue,
+            max_queue: serve.admission.max_queue,
             _profile: profile,
         };
         // wait for every shard's model load/compile before accepting
@@ -296,8 +391,23 @@ impl Server {
         method: Method,
         request: RolloutRequest,
     ) -> mpsc::Receiver<Result<RolloutResult>> {
+        self.submit_for_tenant(0, method, request)
+    }
+
+    /// [`Server::submit`] on behalf of tenant QoS class `tenant`: the
+    /// admission controller paces each class through its own token
+    /// bucket (`AdmissionConfig::tenant_rate`/`tenant_burst`), so one
+    /// flooding tenant queues behind its own bucket instead of starving
+    /// the others.  Ids wrap onto
+    /// [`super::admission::TENANT_CLASSES`] classes.
+    pub fn submit_for_tenant(
+        &self,
+        tenant: u8,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
         let shard = self.router.shard_for_scene(request.scenario.scene_id());
-        self.submit_to(shard, method, request)
+        self.submit_to(shard, tenant, method, request)
     }
 
     /// Submit a rollout with no cache affinity (one-shot evaluation
@@ -310,12 +420,13 @@ impl Server {
         let shard = self
             .router
             .least_loaded(self.shards.iter().map(|s| s.stats.inflight.get()));
-        self.submit_to(shard, method, request)
+        self.submit_to(shard, 0, method, request)
     }
 
     fn submit_to(
         &self,
         shard: usize,
+        tenant: u8,
         method: Method,
         request: RolloutRequest,
     ) -> mpsc::Receiver<Result<RolloutResult>> {
@@ -330,14 +441,15 @@ impl Server {
             request,
             submitted_at,
             trace_id,
+            tenant,
             respond: rtx,
         };
-        // inflight goes up BEFORE the send: the worker decrements when it
+        // inflight goes up BEFORE the push: the worker decrements when it
         // answers, and its (saturating) sub must never be able to run
         // ahead of this add or the gauge would stick one too high
         let sh = &self.shards[shard].stats;
         sh.inflight.add(1);
-        match self.shards[shard].tx.send(Message::Request(env)) {
+        match self.shards[shard].mailbox.push(Message::Request(env)) {
             Ok(()) => {
                 // count the request only once the shard has accepted it
                 self.stats.requests_in.inc();
@@ -347,12 +459,12 @@ impl Server {
                     t.record_frontend(Stage::Route, submitted_at, trace_id, shard as u64);
                 }
             }
-            Err(mpsc::SendError(msg)) => {
-                // the shard has exited (shutdown): answer explicitly
-                // instead of silently dropping the channel, and do NOT
-                // count the request as accepted.  The worker never saw
-                // the envelope, so undoing the add here cannot race a
-                // worker-side decrement for it.
+            Err(msg) => {
+                // the shard's mailbox is sealed (shutdown or worker
+                // death): answer explicitly instead of silently dropping
+                // the channel, and do NOT count the request as accepted.
+                // The worker never saw the envelope, so undoing the add
+                // here cannot race a worker-side decrement for it.
                 sh.inflight.sub(1);
                 if let Message::Request(env) = msg {
                     let _ = env
@@ -371,13 +483,14 @@ impl Server {
             .map_err(|_| anyhow!("server dropped the request"))?
     }
 
-    /// Graceful shutdown: every shard drains its partially filled batches
-    /// through its rollout engine before the worker exits, so every
-    /// accepted caller still gets a real result.  Idempotent; also runs
-    /// on Drop.  After shutdown, `submit` answers "server is shut down".
+    /// Graceful shutdown: every shard drains its admission queue through
+    /// the continuous step loop (pacing and deadlines ignored) before
+    /// the worker exits, so every accepted caller still gets a real
+    /// result.  Idempotent; also runs on Drop.  After shutdown, `submit`
+    /// answers "server is shut down".
     pub fn shutdown(&mut self) {
         for s in &self.shards {
-            let _ = s.tx.send(Message::Shutdown);
+            let _ = s.mailbox.push(Message::Shutdown);
         }
         for s in &mut self.shards {
             if let Some(t) = s.thread.take() {
@@ -398,7 +511,7 @@ struct ShardCtx {
     id: usize,
     cfg: SystemConfig,
     methods: Vec<Method>,
-    batcher_cfg: BatcherConfig,
+    admission: AdmissionConfig,
     cache_cfg: CacheConfig,
     /// Map-row registry shared across shards (immutable rows, scene-keyed).
     maps: Arc<MapRegistry>,
@@ -413,21 +526,41 @@ struct ShardCtx {
     tracer: Option<Arc<Tracer>>,
 }
 
-/// Clears a shard's liveness gauge when its worker exits — by returning
-/// *or by panicking* (Drop runs on unwind), so `/healthz` reports dead
-/// shards either way.
-struct LiveGuard(Arc<ShardStats>);
+/// Clears a shard's liveness gauges and seals its mailbox when its
+/// worker exits — by returning *or by panicking* (Drop runs on unwind) —
+/// so `/healthz` reports dead shards and later submits get an explicit
+/// "server is shut down" answer instead of a dropped channel.
+struct WorkerGuard {
+    stats: Arc<ShardStats>,
+    mailbox: Arc<Mailbox>,
+}
 
-impl Drop for LiveGuard {
+impl Drop for WorkerGuard {
     fn drop(&mut self) {
-        self.0.live.set(0);
-        self.0.queue_depth.set(0);
+        let _ = self.mailbox.close();
+        self.stats.live.set(0);
+        self.stats.queue_depth.set(0);
+        self.stats.live_sessions.set(0);
     }
 }
 
-fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Sender<Result<()>>) {
+/// One admitted request being advanced through the continuous step loop.
+struct ActiveRequest {
+    env: Envelope,
+    /// One decode session per requested sample, stepped in lockstep.
+    sessions: Vec<SessionState>,
+    steps_done: usize,
+    /// Decode wall time attributed to this request (its slots' share of
+    /// every shared step batch it participated in), ms.
+    decode_ms: f64,
+}
+
+fn shard_worker(ctx: ShardCtx, mailbox: Arc<Mailbox>, ready_tx: mpsc::Sender<Result<()>>) {
     ctx.shard.live.set(1);
-    let _live = LiveGuard(Arc::clone(&ctx.shard));
+    let _guard = WorkerGuard {
+        stats: Arc::clone(&ctx.shard),
+        mailbox: Arc::clone(&mailbox),
+    };
     // bind this thread to its span ring for the worker's whole lifetime
     let _trace_ctx = ctx
         .tracer
@@ -445,11 +578,12 @@ fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Send
         }
     };
     let rollout = RolloutEngine::new(ctx.cfg.model.clone(), ctx.cfg.sim.clone());
-    let mut batchers: BTreeMap<Method, Batcher<Envelope>> = ctx
-        .methods
-        .iter()
-        .map(|m| (*m, Batcher::new(ctx.batcher_cfg.clone())))
-        .collect();
+    let future_steps = ctx.cfg.sim.future_steps;
+    let max_live = ctx.admission.max_live_sessions.max(1);
+    let mut adm: AdmissionQueue<Envelope> =
+        AdmissionQueue::new(ctx.admission.clone(), ctx.id, Instant::now());
+    let mut live: Vec<ActiveRequest> = Vec::new();
+    let mut draining = false;
 
     // This shard's slice of the KV/tokenization cache: private sessions
     // (the affinity router guarantees a session only ever lands here),
@@ -460,141 +594,282 @@ fn shard_worker(ctx: ShardCtx, rx: mpsc::Receiver<Message>, ready_tx: mpsc::Send
         Arc::clone(&ctx.maps),
     );
 
-    let mut running = true;
-    while running {
-        // sleep until the nearest batcher deadline (or a short idle tick)
-        let now = Instant::now();
-        let timeout = batchers
-            .values()
-            .filter_map(|b| b.next_deadline(now))
-            .min()
-            .unwrap_or(Duration::from_millis(50));
-
-        match rx.recv_timeout(timeout) {
-            Ok(Message::Request(env)) => match batchers.get_mut(&env.method) {
-                Some(b) => {
-                    if let Err(rejected) = b.push(env) {
-                        // per-shard backpressure: only this shard's
-                        // callers see Busy; siblings keep serving
-                        ctx.stats.queue_rejections.inc();
-                        ctx.shard.rejected.inc();
-                        ctx.shard.inflight.sub(1);
-                        let _ = rejected
-                            .respond
-                            .send(Err(anyhow!("server busy (shard {} queue full)", ctx.id)));
-                    }
-                }
-                None => {
-                    ctx.stats.queue_rejections.inc();
-                    ctx.shard.rejected.inc();
-                    ctx.shard.inflight.sub(1);
-                    let _ = env.respond.send(Err(anyhow!(
-                        "method '{}' is not deployed on this server",
-                        env.method.name()
-                    )));
-                }
-            },
-            Ok(Message::Shutdown) => running = false,
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
-        }
-        // saturation is visible to /healthz the moment the queues fill,
-        // not only after the next flush completes
-        refresh_queue_depth(&ctx, &batchers);
-
-        // flush any ready batches
-        let now = Instant::now();
-        for (method, b) in batchers.iter_mut() {
-            while let Some(ready) = b.poll(now) {
-                run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
+    loop {
+        // 1. receive: never block while there is live work to step or a
+        // drain to finish; otherwise sleep on the mailbox condvar, bounded
+        // by the earliest deadline expiry / token-bucket refill when the
+        // admission queue is waiting on time rather than on new messages
+        let msgs = if !live.is_empty() || draining {
+            mailbox.try_drain()
+        } else if adm.is_empty() {
+            mailbox.recv(None)
+        } else {
+            let now = Instant::now();
+            let wake = [adm.next_shed_in(now), adm.refill_wait(now)]
+                .into_iter()
+                .flatten()
+                .min();
+            match wake {
+                Some(d) => mailbox.recv(Some(d.max(Duration::from_millis(1)))),
+                // queued but permanently unadmittable (zero-burst bucket):
+                // nothing to time against, so block until new work or
+                // shutdown — the drain will serve these waiters
+                None => mailbox.recv(None),
+            }
+        };
+        for msg in msgs {
+            match msg {
+                Message::Request(env) => enqueue(env, &mut adm, &ctx),
+                Message::Shutdown => draining = true,
             }
         }
-        refresh_queue_depth(&ctx, &batchers);
-    }
+        if draining {
+            // seal the inbox so post-shutdown submits fail fast; whatever
+            // raced in before the seal still gets served below
+            for msg in mailbox.close() {
+                if let Message::Request(env) = msg {
+                    enqueue(env, &mut adm, &ctx);
+                }
+            }
+        }
 
-    // graceful shutdown: drain queued requests through the rollout engine
-    // so every already-accepted caller still gets a real result
-    for (method, b) in batchers.iter_mut() {
-        for mut ready in b.drain() {
-            // drained batches never hit the fixed-shape inference path, so
-            // their (large) padding must not skew the batching metric
-            ready.padding = 0;
-            run_batch(*method, ready, &mut backend, &rollout, &kv_pool, &ctx);
+        // 2. shed waiters past their deadline (never during drain — the
+        // shutdown contract is that every accepted caller is served)
+        let now = Instant::now();
+        if !draining {
+            for (w, err) in adm.shed_expired(now) {
+                let env = w.item;
+                ctx.stats.queue_sheds.inc();
+                ctx.stats.tenants.shed(env.tenant);
+                ctx.shard.shed.inc();
+                ctx.shard.inflight.sub(1);
+                let _ = env.respond.send(Err(anyhow::Error::new(err)));
+            }
+        }
+
+        // 3. admit up to the live-session cap.  The admission unit is the
+        // whole request; one whose n_samples exceeds the remaining
+        // headroom is still admitted alone (the cap bounds concurrency,
+        // it must not deadlock large requests).
+        while live.iter().map(|a| a.sessions.len()).sum::<usize>() < max_live {
+            let w = if draining {
+                adm.admit_unpaced()
+            } else {
+                adm.admit(Instant::now())
+            };
+            let Some(w) = w else { break };
+            let env = w.item;
+            let admitted_at = Instant::now();
+            ctx.stats
+                .queue_age
+                .record(admitted_at.saturating_duration_since(env.submitted_at));
+            // queue residency span: submit -> joining the step batch
+            trace::record_between(Stage::Enqueue, env.submitted_at, admitted_at, env.trace_id, 0);
+            ctx.stats.tenants.admitted(env.tenant);
+            let sessions: Vec<SessionState> = (0..env.request.n_samples)
+                .map(|i| rollout.begin_session(&env.request, i as u32))
+                .collect();
+            live.push(ActiveRequest {
+                env,
+                sessions,
+                steps_done: 0,
+                decode_ms: 0.0,
+            });
+        }
+
+        // 4. advance every live session one decode step, then retire the
+        // requests that reached their horizon
+        if !live.is_empty() {
+            step_live(&mut live, &mut backend, &rollout, &kv_pool, &ctx);
+            let mut rest = Vec::with_capacity(live.len());
+            for a in live.drain(..) {
+                if a.steps_done >= future_steps {
+                    retire_request(a, &rollout, &kv_pool, &ctx);
+                } else {
+                    rest.push(a);
+                }
+            }
+            live = rest;
+        }
+
+        // 5. publish load gauges (how /healthz and /vars see this shard)
+        ctx.shard.queue_depth.set(adm.len() as u64);
+        ctx.shard
+            .live_sessions
+            .set(live.iter().map(|a| a.sessions.len()).sum::<usize>() as u64);
+
+        if draining && live.is_empty() && adm.is_empty() {
+            break;
         }
     }
 }
 
-/// Publish the shard's total queued-envelope count to its gauge (the
-/// batchers live on the worker thread; the gauge is how `/healthz` and
-/// the `/vars` sampler observe queue depth without touching them).
-fn refresh_queue_depth(ctx: &ShardCtx, batchers: &BTreeMap<Method, Batcher<Envelope>>) {
-    ctx.shard
-        .queue_depth
-        .set(batchers.values().map(|b| b.len() as u64).sum());
+/// Move one incoming envelope into the admission queue, answering
+/// immediately-rejectable requests (unknown method, zero samples, queue
+/// full) on the spot with their typed error.
+fn enqueue(env: Envelope, adm: &mut AdmissionQueue<Envelope>, ctx: &ShardCtx) {
+    if !ctx.methods.contains(&env.method) {
+        ctx.stats.queue_rejections.inc();
+        ctx.shard.rejected.inc();
+        ctx.shard.inflight.sub(1);
+        let _ = env.respond.send(Err(anyhow!(
+            "method '{}' is not deployed on this server",
+            env.method.name()
+        )));
+        return;
+    }
+    if env.request.n_samples == 0 {
+        // a recoverable caller error, failed before it ever queues
+        ctx.stats.requests_failed.inc();
+        ctx.shard.failed.inc();
+        ctx.stats.e2e_latency.record(env.submitted_at.elapsed());
+        ctx.shard.inflight.sub(1);
+        let _ = env.respond.send(Err(anyhow!(
+            "rollout request asks for zero samples — nothing to roll out"
+        )));
+        return;
+    }
+    let tenant = env.tenant;
+    if let Err((env, err)) = adm.push(env, tenant, Instant::now()) {
+        // per-shard backpressure: only this shard's callers see the
+        // typed QueueFull; siblings keep serving
+        ctx.stats.queue_rejections.inc();
+        ctx.stats.tenants.rejected(tenant);
+        ctx.shard.rejected.inc();
+        ctx.shard.inflight.sub(1);
+        let _ = env.respond.send(Err(anyhow::Error::new(err)));
+    }
 }
 
-/// Execute one ready batch and respond to each request (shared by the
-/// steady-state flush and the shutdown drain).
-fn run_batch(
-    method: Method,
-    ready: ReadyBatch<Envelope>,
+/// Advance every live request one decode step: one shared step batch per
+/// method, sessions from different requests packed together with
+/// per-slot seeds (see [`RolloutEngine::step_seed`]) so results are
+/// bit-identical to each request running alone.
+fn step_live(
+    live: &mut Vec<ActiveRequest>,
     backend: &mut Backend,
     rollout: &RolloutEngine,
     kv_pool: &KvCachePool,
     ctx: &ShardCtx,
 ) {
-    let stats = &*ctx.stats;
-    let batch_t0 = Instant::now();
-    let batch_size = ready.items.len();
-    stats.batches.inc();
-    ctx.shard.batches.inc();
-    stats.padded_slots.add(ready.padding as u64);
-    let Some(model) = backend.route(method) else {
-        // deployed method with no live replica on this shard: answer
-        // every caller instead of wedging the batch
-        for env in ready.items {
-            stats.requests_failed.inc();
-            ctx.shard.failed.inc();
-            ctx.shard.inflight.sub(1);
-            let _ = env.respond.send(Err(anyhow!(
-                "method '{}' has no replica on shard {}",
-                method.name(),
-                ctx.id
-            )));
-        }
-        return;
-    };
-    for env in ready.items {
-        // queue residency: submit time -> this batch starting to run
-        trace::record_between(Stage::Enqueue, env.submitted_at, batch_t0, env.trace_id, 0);
-        // spans recorded below (tokenize/decode/attend, in the rollout
-        // and kernel layers) attribute to this request
-        trace::set_trace_id(env.trace_id);
-        let t0 = Instant::now();
-        let result = rollout.rollout_with_cache(model.as_ref(), &env.request, kv_pool);
-        stats.decode_latency.record(t0.elapsed());
-        match &result {
-            Ok(res) => {
-                stats.requests_done.inc();
-                ctx.shard.done.inc();
-                stats.families.record(
-                    env.request.scenario.family,
-                    &res.min_ade,
-                    res.collisions as u64,
-                    res.trajectories.len() as u64,
+    let mut methods: Vec<Method> = live.iter().map(|a| a.env.method).collect();
+    methods.sort();
+    methods.dedup();
+    for method in methods {
+        let round_t0 = Instant::now();
+        let Some(model) = backend.route(method) else {
+            // deployed method with no live replica on this shard: answer
+            // every caller instead of wedging the step loop
+            let (dead, rest): (Vec<_>, Vec<_>) =
+                live.drain(..).partition(|a| a.env.method == method);
+            *live = rest;
+            for a in dead {
+                fail_request(
+                    a,
+                    anyhow!("method '{}' has no replica on shard {}", method.name(), ctx.id),
+                    kv_pool,
+                    ctx,
                 );
             }
-            Err(_) => {
-                stats.requests_failed.inc();
-                ctx.shard.failed.inc();
+            continue;
+        };
+        // pack the step batch: every live session of this method, slots
+        // of one request contiguous, each slot carrying its request's
+        // seed/temperature/trace
+        let mut slots: Vec<StepSlot<'_>> = Vec::new();
+        for a in live.iter_mut().filter(|a| a.env.method == method) {
+            let req = &a.env.request;
+            let step = a.steps_done;
+            let trace_id = a.env.trace_id;
+            for (i, session) in a.sessions.iter_mut().enumerate() {
+                slots.push(StepSlot {
+                    params: SlotParams {
+                        seed: rollout.step_seed(req, step, i),
+                        temperature: req.temperature,
+                        trace: trace_id,
+                    },
+                    session,
+                });
             }
         }
-        stats.e2e_latency.record(env.submitted_at.elapsed());
-        ctx.shard.inflight.sub(1);
-        let respond_t0 = Instant::now();
-        let _ = env.respond.send(result);
-        trace::record_since(Stage::Respond, respond_t0, 0);
+        if slots.is_empty() {
+            continue;
+        }
+        let real = slots.len();
+        match rollout.step_sessions(model.as_ref(), &mut slots, kv_pool) {
+            Ok(rep) => {
+                drop(slots);
+                ctx.stats.batches.inc();
+                ctx.shard.batches.inc();
+                ctx.stats.padded_slots.add(rep.padded_slots as u64);
+                ctx.stats.step_sessions.add(rep.real_slots as u64);
+                // attribute decode wall time by slot share so retired
+                // requests report a meaningful per-step decode latency
+                let per_slot_ms = rep.decode_ms / rep.real_slots.max(1) as f64;
+                for a in live.iter_mut().filter(|a| a.env.method == method) {
+                    a.steps_done += 1;
+                    a.decode_ms += per_slot_ms * a.sessions.len() as f64;
+                }
+                trace::record_since(Stage::Batch, round_t0, real as u64);
+            }
+            Err(e) => {
+                drop(slots);
+                // a step failure poisons every request sharing the batch:
+                // fail them all rather than serve half-advanced sessions
+                let msg = format!("decode step failed on shard {}: {e:#}", ctx.id);
+                let (dead, rest): (Vec<_>, Vec<_>) =
+                    live.drain(..).partition(|a| a.env.method == method);
+                *live = rest;
+                for a in dead {
+                    fail_request(a, anyhow!("{msg}"), kv_pool, ctx);
+                }
+            }
+        }
     }
+}
+
+/// Retire a request that has advanced all its steps: end its cache
+/// sessions, assemble the result, respond.
+fn retire_request(a: ActiveRequest, rollout: &RolloutEngine, kv_pool: &KvCachePool, ctx: &ShardCtx) {
+    for s in &a.sessions {
+        kv_pool.end_session(s.key());
+    }
+    let decode_ms = a.decode_ms / a.steps_done.max(1) as f64;
+    let res = rollout.finish_request(&a.env.request, &a.sessions, decode_ms);
+    ctx.stats
+        .decode_latency
+        .record(Duration::from_secs_f64(a.decode_ms / 1e3));
+    ctx.stats.requests_done.inc();
+    ctx.shard.done.inc();
+    ctx.stats.tenants.done(a.env.tenant);
+    ctx.stats.families.record(
+        a.env.request.scenario.family,
+        &res.min_ade,
+        res.collisions as u64,
+        res.trajectories.len() as u64,
+    );
+    ctx.stats.e2e_latency.record(a.env.submitted_at.elapsed());
+    ctx.shard.inflight.sub(1);
+    let respond_t0 = Instant::now();
+    trace::set_trace_id(a.env.trace_id);
+    let _ = a.env.respond.send(Ok(res));
+    trace::record_since(Stage::Respond, respond_t0, 0);
     trace::set_trace_id(0);
-    trace::record_since(Stage::Batch, batch_t0, batch_size as u64);
+}
+
+/// Fail an admitted request (step error / missing replica): end its
+/// cache sessions and answer its caller.
+fn fail_request(a: ActiveRequest, err: anyhow::Error, kv_pool: &KvCachePool, ctx: &ShardCtx) {
+    for s in &a.sessions {
+        kv_pool.end_session(s.key());
+    }
+    ctx.stats.requests_failed.inc();
+    ctx.shard.failed.inc();
+    ctx.stats.e2e_latency.record(a.env.submitted_at.elapsed());
+    ctx.shard.inflight.sub(1);
+    let respond_t0 = Instant::now();
+    trace::set_trace_id(a.env.trace_id);
+    let _ = a.env.respond.send(Err(err));
+    trace::record_since(Stage::Respond, respond_t0, 0);
+    trace::set_trace_id(0);
 }

@@ -245,6 +245,104 @@ impl FamilyTelemetry {
     }
 }
 
+/// Per-tenant admission counters (DESIGN.md §17): one fixed slot per
+/// QoS class ([`super::admission::TENANT_CLASSES`] of them — tenant ids
+/// wrap), so recording stays allocation-free on the admission path.
+/// Admitted / rejected (queue full) / shed (deadline missed) / done are
+/// deliberately separate: under overload the shed:rejected ratio is the
+/// signal that distinguishes "queue too short" from "deadline too tight".
+#[derive(Debug)]
+pub struct TenantTelemetry {
+    admitted: Vec<Counter>,
+    rejected: Vec<Counter>,
+    shed: Vec<Counter>,
+    done: Vec<Counter>,
+}
+
+impl Default for TenantTelemetry {
+    fn default() -> Self {
+        let n = super::admission::TENANT_CLASSES;
+        let slots = || (0..n).map(|_| Counter::default()).collect();
+        TenantTelemetry {
+            admitted: slots(),
+            rejected: slots(),
+            shed: slots(),
+            done: slots(),
+        }
+    }
+}
+
+impl TenantTelemetry {
+    fn slot(&self, tenant: u8) -> usize {
+        tenant as usize % self.admitted.len()
+    }
+
+    /// The tenant's request joined a step batch.
+    pub fn admitted(&self, tenant: u8) {
+        self.admitted[self.slot(tenant)].inc();
+    }
+
+    /// The tenant's request bounced off a full admission queue.
+    pub fn rejected(&self, tenant: u8) {
+        self.rejected[self.slot(tenant)].inc();
+    }
+
+    /// The tenant's request was shed after missing its deadline.
+    pub fn shed(&self, tenant: u8) {
+        self.shed[self.slot(tenant)].inc();
+    }
+
+    /// The tenant's request completed with a real result.
+    pub fn done(&self, tenant: u8) {
+        self.done[self.slot(tenant)].inc();
+    }
+
+    pub fn admitted_count(&self, tenant: u8) -> u64 {
+        self.admitted[self.slot(tenant)].get()
+    }
+
+    pub fn rejected_count(&self, tenant: u8) -> u64 {
+        self.rejected[self.slot(tenant)].get()
+    }
+
+    pub fn shed_count(&self, tenant: u8) -> u64 {
+        self.shed[self.slot(tenant)].get()
+    }
+
+    pub fn done_count(&self, tenant: u8) -> u64 {
+        self.done[self.slot(tenant)].get()
+    }
+
+    /// Number of QoS class slots.
+    pub fn classes(&self) -> usize {
+        self.admitted.len()
+    }
+
+    /// Compact block for the stats line; only classes that saw traffic
+    /// appear, and an all-idle bundle contributes nothing.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = (0..self.classes())
+            .filter(|&t| {
+                self.admitted[t].get() + self.rejected[t].get() + self.shed[t].get() > 0
+            })
+            .map(|t| {
+                format!(
+                    "t{t}:adm={} rej={} shed={} done={}",
+                    self.admitted[t].get(),
+                    self.rejected[t].get(),
+                    self.shed[t].get(),
+                    self.done[t].get(),
+                )
+            })
+            .collect();
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!(" tenants[{}]", parts.join(" "))
+        }
+    }
+}
+
 /// Log-spaced latency histogram: bucket i covers [2^i, 2^(i+1)) microseconds,
 /// plus exact observed min/max atomics so the extreme percentiles report
 /// real values rather than power-of-two bucket bounds.
@@ -369,7 +467,12 @@ pub struct ShardStats {
     pub failed: Counter,
     /// Per-shard backpressure rejections (this shard's queue was full).
     pub rejected: Counter,
-    /// Batches this shard executed.
+    /// Requests shed by this shard's admission controller after missing
+    /// their deadline (counted separately from `rejected`: a shed request
+    /// was accepted into the queue first).
+    pub shed: Counter,
+    /// Step batches this shard executed (one per decode step per method
+    /// under the continuous scheduler).
     pub batches: Counter,
     /// Requests submitted but not yet answered (the least-loaded routing
     /// signal for stateless traffic).
@@ -382,18 +485,23 @@ pub struct ShardStats {
     /// (normally or by panic — maintained by a drop guard, so
     /// `/healthz` sees dead shards either way).
     pub live: Gauge,
+    /// Decode sessions currently admitted to this shard's continuous
+    /// step batch (step-batch occupancy; refreshed by the worker loop).
+    pub live_sessions: Gauge,
 }
 
 impl ShardStats {
     /// Compact `s<i>:` fragment for the stats line.
     pub fn summary_fragment(&self, shard: usize) -> String {
         format!(
-            "s{shard}:req={} done={} rej={} inflight={} q={}",
+            "s{shard}:req={} done={} rej={} inflight={} q={} shed={} live={}",
             self.requests.get(),
             self.done.get(),
             self.rejected.get(),
             self.inflight.get(),
             self.queue_depth.get(),
+            self.shed.get(),
+            self.live_sessions.get(),
         )
     }
 }
@@ -407,8 +515,22 @@ pub struct ServerStats {
     pub batches: Counter,
     pub padded_slots: Counter,
     pub queue_rejections: Counter,
+    /// Requests shed after missing their admission deadline (counted
+    /// separately from `queue_rejections`: sheds were accepted first —
+    /// under overload the ratio distinguishes a too-short queue from a
+    /// too-tight deadline).
+    pub queue_sheds: Counter,
+    /// Real (non-padding) session-slots decoded across all step batches;
+    /// divided by `batches` this is the mean step-batch occupancy of the
+    /// continuous scheduler.
+    pub step_sessions: Counter,
     pub e2e_latency: LatencyHistogram,
     pub decode_latency: LatencyHistogram,
+    /// Time requests spent in the admission queue before joining a step
+    /// batch (sheds and rejections never record here).
+    pub queue_age: LatencyHistogram,
+    /// Per-tenant QoS class admission counters.
+    pub tenants: TenantTelemetry,
     /// Shared with every shard's [`crate::coordinator::kvcache::KvCachePool`]
     /// (one gauge/counter set aggregated across shards).
     pub cache: std::sync::Arc<CacheStats>,
@@ -444,15 +566,19 @@ impl ServerStats {
 
     pub fn summary(&self) -> String {
         format!(
-            "in={} done={} failed={} batches={} pad={} rej={} \
-             e2e_mean={:.1}ms e2e_p95={:.1}ms decode_mean={:.1}ms \
-             decode_p95={:.1}ms decode_p99={:.1}ms {} {}{}",
+            "in={} done={} failed={} batches={} pad={} rej={} shed={} \
+             steps={} qage_p95={:.1}ms e2e_mean={:.1}ms e2e_p95={:.1}ms \
+             decode_mean={:.1}ms decode_p95={:.1}ms decode_p99={:.1}ms \
+             {} {}{}{}",
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_failed.get(),
             self.batches.get(),
             self.padded_slots.get(),
             self.queue_rejections.get(),
+            self.queue_sheds.get(),
+            self.step_sessions.get(),
+            self.queue_age.percentile_us(95.0) as f64 / 1e3,
             self.e2e_latency.mean_us() / 1e3,
             self.e2e_latency.percentile_us(95.0) as f64 / 1e3,
             self.decode_latency.mean_us() / 1e3,
@@ -460,6 +586,7 @@ impl ServerStats {
             self.decode_latency.percentile_us(99.0) as f64 / 1e3,
             self.cache.summary(),
             self.families.summary(),
+            self.tenants.summary(),
             self.shard_summary(),
         )
     }
@@ -609,6 +736,42 @@ mod tests {
         assert_eq!(t.ade_micrometers(FamilyId::Roundabout), u64::MAX);
         assert_eq!(t.ade_samples(FamilyId::Roundabout), 2);
         assert!(t.mean_min_ade_m(FamilyId::Roundabout).is_finite());
+    }
+
+    #[test]
+    fn tenant_telemetry_wraps_and_summarizes() {
+        let t = TenantTelemetry::default();
+        assert_eq!(t.summary(), "");
+        t.admitted(1);
+        t.admitted(1);
+        t.done(1);
+        t.shed(2);
+        // tenant ids wrap onto the fixed class slots
+        let wrapped = (t.classes() + 1) as u8;
+        t.rejected(wrapped);
+        assert_eq!(t.admitted_count(1), 2);
+        assert_eq!(t.done_count(1), 1);
+        assert_eq!(t.shed_count(2), 1);
+        assert_eq!(t.rejected_count(1), 1);
+        let s = t.summary();
+        assert!(s.contains("t1:adm=2 rej=1 shed=0 done=1"), "{s}");
+        assert!(s.contains("t2:adm=0 rej=0 shed=1 done=0"), "{s}");
+        assert!(!s.contains("t0:"), "{s}");
+    }
+
+    #[test]
+    fn summary_line_reports_sheds_and_queue_age() {
+        let stats = ServerStats::with_shards(1);
+        stats.queue_sheds.add(4);
+        stats.step_sessions.add(12);
+        stats.queue_age.record_us(2000);
+        stats.shards[0].shed.add(4);
+        stats.shards[0].live_sessions.set(3);
+        let s = stats.summary();
+        assert!(s.contains("shed=4"), "{s}");
+        assert!(s.contains("steps=12"), "{s}");
+        assert!(s.contains("qage_p95=2.0ms"), "{s}");
+        assert!(s.contains("s0:req=0 done=0 rej=0 inflight=0 q=0 shed=4 live=3"), "{s}");
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   substrate: synthetic driving simulator with a procedural scenario
 //!   suite (`sim::suite`: highway merges, signalized crossings,
 //!   roundabouts, parking lots, urban crossings + a weighted workload
-//!   mixer), tokenizer, dataset pipeline, PJRT runtime,
-//!   batcher/router/rollout scheduler/trainer, per-class and per-family
+//!   mixer), tokenizer, dataset pipeline, PJRT runtime, the sharded
+//!   serving stack (admission control + continuous step-batching
+//!   scheduler, shard router, rollout engine — DESIGN.md §17) and
+//!   trainer, per-class and per-family
 //!   metrics, the CPU reference implementations of the paper's
 //!   Algorithms 1 and 2 (backed by the blocked multithreaded flash
 //!   kernel in `attention::kernel`, with the scalar path kept as the

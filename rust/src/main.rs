@@ -60,6 +60,19 @@ fn app() -> App {
             .opt("mix", "", "weighted family mix, e.g. 'urban-crossing:1,roundabout:3'")
             .opt("seed", "0", "scenario seed base")
             .opt("workers", "0", "serving worker shards (0 = one per core, max 8)")
+            .opt("admit-queue", "256",
+                 "per-shard admission-queue capacity (a full queue answers \
+                  with a typed busy rejection instead of queueing unboundedly)")
+            .opt("deadline-ms", "0",
+                 "admission deadline: shed queued requests that wait longer \
+                  than this before joining a step batch (0 = never shed)")
+            .opt("tenant-rate", "0",
+                 "per-tenant admission pacing in requests/s via token \
+                  buckets (0 = unpaced FIFO admission)")
+            .opt("tenant-burst", "8", "per-tenant token-bucket burst size")
+            .opt("max-live-sessions", "32",
+                 "decode sessions concurrently resident in one shard's \
+                  continuous step batch")
             .opt("kernel-threads", "0",
                  "threads per native CPU flash-attention call, for engines \
                   derived from this server's model config (0 = one per core; \
@@ -123,7 +136,9 @@ fn app() -> App {
             .opt("attention", "BENCH_attention.json",
                  "attention_throughput JSON document (written by `cargo bench`)")
             .opt("decode", "BENCH_decode.json",
-                 "decode_throughput JSON document (written by `cargo bench`)"))
+                 "decode_throughput JSON document (written by `cargo bench`)")
+            .opt("serving", "BENCH_serving.json",
+                 "serving_load JSON document (written by `cargo bench`)"))
 }
 
 fn main() -> Result<()> {
@@ -344,6 +359,11 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         se2attn::attention::kernel::KernelConfig::with_threads(m.get_usize("kernel-threads"));
     serve.cache.precision =
         se2attn::config::CachePrecision::parse(m.get("cache-precision"))?;
+    serve.admission.max_queue = m.get_usize("admit-queue").max(1);
+    serve.admission.deadline = std::time::Duration::from_millis(m.get_u64("deadline-ms"));
+    serve.admission.tenant_rate = m.get_f64("tenant-rate");
+    serve.admission.tenant_burst = m.get_f64("tenant-burst");
+    serve.admission.max_live_sessions = m.get_usize("max-live-sessions").max(1);
     serve.trace.enabled = m.get_opt("trace-out").is_some();
     serve.trace.ring_spans = m.get_usize("trace-spans").max(1);
     serve.profile.enabled = m.get_flag("profile");
@@ -526,9 +546,14 @@ fn cmd_bench_report(m: &Matches) -> Result<()> {
     };
     let attention = load(m.get("attention"));
     let decode = load(m.get("decode"));
+    let serving = load(m.get("serving"));
     print!(
         "{}",
-        se2attn::benchlib::render_bench_report(attention.as_ref(), decode.as_ref())
+        se2attn::benchlib::render_bench_report(
+            attention.as_ref(),
+            decode.as_ref(),
+            serving.as_ref()
+        )
     );
     Ok(())
 }

@@ -121,6 +121,32 @@ impl MetricsSnapshot {
             Counter,
             stats.queue_rejections.get(),
         );
+        push("se2attn_queue_sheds_total", &no_labels, Counter, stats.queue_sheds.get());
+        push(
+            "se2attn_step_sessions_total",
+            &no_labels,
+            Counter,
+            stats.step_sessions.get(),
+        );
+
+        for t in 0..stats.tenants.classes() {
+            let labels = vec![("tenant".to_string(), t.to_string())];
+            let t = t as u8;
+            push(
+                "se2attn_tenant_admitted_total",
+                &labels,
+                Counter,
+                stats.tenants.admitted_count(t),
+            );
+            push(
+                "se2attn_tenant_rejected_total",
+                &labels,
+                Counter,
+                stats.tenants.rejected_count(t),
+            );
+            push("se2attn_tenant_sheds_total", &labels, Counter, stats.tenants.shed_count(t));
+            push("se2attn_tenant_done_total", &labels, Counter, stats.tenants.done_count(t));
+        }
 
         push("se2attn_cache_hits_total", &no_labels, Counter, stats.cache.hits.get());
         push("se2attn_cache_misses_total", &no_labels, Counter, stats.cache.misses.get());
@@ -150,8 +176,10 @@ impl MetricsSnapshot {
             push("se2attn_shard_done_total", &labels, Counter, sh.done.get());
             push("se2attn_shard_failed_total", &labels, Counter, sh.failed.get());
             push("se2attn_shard_rejected_total", &labels, Counter, sh.rejected.get());
+            push("se2attn_shard_shed_total", &labels, Counter, sh.shed.get());
             push("se2attn_shard_batches_total", &labels, Counter, sh.batches.get());
             push("se2attn_shard_inflight", &labels, Gauge, sh.inflight.get());
+            push("se2attn_shard_live_sessions", &labels, Gauge, sh.live_sessions.get());
         }
 
         for f in FamilyId::ALL {
@@ -231,6 +259,7 @@ impl MetricsSnapshot {
             "se2attn_decode_latency_us",
             &stats.decode_latency,
         ));
+        s.histograms.push(HistogramSnapshot::of("se2attn_queue_age_us", &stats.queue_age));
         s
     }
 
@@ -662,6 +691,50 @@ mod tests {
             let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
             assert!(v <= inf, "{line}");
         }
+    }
+
+    #[test]
+    fn collect_covers_admission_metrics() {
+        let stats = sample_stats();
+        stats.queue_sheds.add(3);
+        stats.step_sessions.add(24);
+        stats.queue_age.record_us(1200);
+        stats.tenants.admitted(1);
+        stats.tenants.shed(1);
+        stats.shards[0].shed.add(3);
+        stats.shards[0].live_sessions.set(5);
+        let snap = MetricsSnapshot::collect(&stats, None);
+        let get = |name: &str| {
+            snap.scalars
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing {name}"))
+                .value
+        };
+        assert_eq!(get("se2attn_queue_sheds_total"), 3);
+        assert_eq!(get("se2attn_step_sessions_total"), 24);
+        let tenant1 = |name: &str| {
+            snap.scalars
+                .iter()
+                .find(|s| {
+                    s.name == name && s.labels == vec![("tenant".to_string(), "1".to_string())]
+                })
+                .unwrap_or_else(|| panic!("missing {name} for tenant 1"))
+                .value
+        };
+        assert_eq!(tenant1("se2attn_tenant_admitted_total"), 1);
+        assert_eq!(tenant1("se2attn_tenant_sheds_total"), 1);
+        let qage = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == "se2attn_queue_age_us")
+            .unwrap();
+        assert_eq!(qage.count, 1);
+        let text = snap.to_prometheus();
+        validate_prometheus(&text).expect("admission metrics must render valid exposition");
+        assert!(text.contains("se2attn_shard_shed_total{shard=\"0\"} 3"));
+        assert!(text.contains("se2attn_shard_live_sessions{shard=\"0\"} 5"));
+        assert!(text.contains("# TYPE se2attn_queue_age_us histogram"));
     }
 
     #[test]

@@ -63,7 +63,9 @@ pub enum Scope {
     KernelScratch = 2,
     /// Shared per-scene map rows ([`crate::coordinator::kvcache::MapRegistry`]).
     MapRegistry = 3,
-    /// Shard queue envelopes ([`crate::coordinator::batcher`]).
+    /// Shard queue envelopes: the serving admission queue + worker
+    /// mailbox ([`crate::coordinator::admission`]) and the legacy fixed
+    /// batcher ([`crate::coordinator::batcher`]).
     Batcher = 4,
     /// Span rings ([`crate::trace`]).
     Trace = 5,

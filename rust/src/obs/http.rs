@@ -41,8 +41,8 @@ pub struct ObsSources {
     pub stats: Arc<ServerStats>,
     /// Span rings for `/trace` (`None` when tracing is disabled).
     pub tracer: Option<Arc<Tracer>>,
-    /// Per-shard batcher queue capacity
-    /// ([`crate::coordinator::batcher::BatcherConfig::max_queue`]);
+    /// Per-shard admission-queue capacity
+    /// ([`crate::coordinator::admission::AdmissionConfig::max_queue`]);
     /// `queue_depth >= max_queue` flips `/healthz` to 503.  0 disables
     /// the saturation check.
     pub max_queue: usize,

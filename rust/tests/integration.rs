@@ -13,9 +13,8 @@ use std::sync::Arc;
 
 use se2attn::attention::{quadratic, AttnProblem};
 use se2attn::config::{Method, SystemConfig};
-use se2attn::coordinator::batcher::BatcherConfig;
 use se2attn::coordinator::{
-    ModelHandle, RolloutEngine, RolloutRequest, ServeConfig, Server, Trainer,
+    AdmissionConfig, ModelHandle, RolloutEngine, RolloutRequest, ServeConfig, Server, Trainer,
 };
 use se2attn::geometry::Pose;
 use se2attn::metrics::TableOneRow;
@@ -286,10 +285,9 @@ fn server_end_to_end(cfg: &SystemConfig) {
         0,
         ServeConfig {
             workers: test_workers(),
-            batcher: BatcherConfig {
-                batch_size: 2,
-                max_wait: std::time::Duration::from_millis(5),
+            admission: AdmissionConfig {
                 max_queue: 16,
+                ..AdmissionConfig::default()
             },
             ..ServeConfig::default()
         },
@@ -325,9 +323,8 @@ fn server_end_to_end(cfg: &SystemConfig) {
             seed: 0,
         },
     );
-    // Abs was not deployed: the inference thread panics on unwrap? No — the
-    // batcher map lookup would panic. Guard: the server only accepts
-    // deployed methods; undeployed ones error.
+    // Abs was not deployed: the server only accepts deployed methods;
+    // undeployed ones error instead of wedging the shard worker.
     match rx.recv() {
         Ok(Err(_)) | Err(_) => {}
         Ok(Ok(_)) => panic!("undeployed method must not succeed"),
@@ -341,22 +338,24 @@ fn server_end_to_end(cfg: &SystemConfig) {
     eprintln!("server OK: {summary}");
 }
 
-/// Regression: requests still queued in a partially filled batch at
-/// shutdown must drain through the rollout engine (real results), not be
-/// dropped or answered with a shutdown error.
+/// Regression: requests still waiting in the admission queue at shutdown
+/// must drain through the rollout engine (real results), not be dropped
+/// or answered with a shutdown error.
 fn server_shutdown_drains_queued(cfg: &SystemConfig) {
     let stats = {
-        // a batch that can never fill or deadline-flush on its own
+        // admission pacing that can never fire on its own: the queue
+        // holds everything until the shutdown drain
         let server = Server::start(
             cfg.clone(),
             vec![Method::Rope2d],
             0,
             ServeConfig {
                 workers: test_workers(),
-                batcher: BatcherConfig {
-                    batch_size: 64,
-                    max_wait: std::time::Duration::from_secs(3600),
+                admission: AdmissionConfig {
                     max_queue: 64,
+                    tenant_rate: 1e-9,
+                    tenant_burst: 0.0,
+                    ..AdmissionConfig::default()
                 },
                 ..ServeConfig::default()
             },
@@ -377,7 +376,7 @@ fn server_shutdown_drains_queued(cfg: &SystemConfig) {
             ));
         }
         let stats = std::sync::Arc::clone(&server.stats);
-        drop(server); // shutdown with the batch still partially filled
+        drop(server); // shutdown with everything still queued for admission
         for rx in pending {
             let res = rx
                 .recv()

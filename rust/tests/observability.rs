@@ -13,10 +13,10 @@
 use std::sync::Arc;
 
 use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
-use se2attn::coordinator::batcher::BatcherConfig;
 use se2attn::coordinator::telemetry::ServerStats;
 use se2attn::coordinator::{
-    Backend, BackendFactory, NativeSdpaDecoder, RolloutRequest, Router, ServeConfig, Server,
+    AdmissionConfig, Backend, BackendFactory, NativeSdpaDecoder, RolloutRequest, Router,
+    ServeConfig, Server,
 };
 use se2attn::jsonio::Json;
 use se2attn::metrics_export::{validate_prometheus, MetricsSnapshot};
@@ -45,10 +45,12 @@ fn traced_server(workers: usize) -> Server {
     };
     let mut serve = ServeConfig::with_workers(workers);
     serve.workers = workers;
-    serve.batcher = BatcherConfig {
-        batch_size: 2,
-        max_wait: std::time::Duration::from_millis(2),
+    // a 2-session step batch keeps two traced requests sharing one decode
+    // step, so per-slot trace attribution inside shared batches is covered
+    serve.admission = AdmissionConfig {
         max_queue: 256,
+        max_live_sessions: 2,
+        ..AdmissionConfig::default()
     };
     serve.trace.enabled = true;
     serve.trace.ring_spans = 4096;

@@ -1,9 +1,9 @@
 //! Sharded-serving tests that run WITHOUT compiled PJRT artifacts: the
 //! worker pool is started on a deterministic [`SyntheticDecoder`] backend,
-//! so the full serving stack — shard router, per-method batchers,
-//! per-shard KV-cache pools over the shared map registry, the rollout
-//! scheduler, graceful drain — is exercised in the default (stub-runtime)
-//! build on every `cargo test`.
+//! so the full serving stack — shard router, per-shard admission queues,
+//! the continuous-batching step loop, per-shard KV-cache pools over the
+//! shared map registry, the rollout scheduler, graceful drain — is
+//! exercised in the default (stub-runtime) build on every `cargo test`.
 //!
 //! The headline check is **cross-shard equivalence**: the same
 //! mixed-family workload through 1 worker and through 4 workers must
@@ -16,10 +16,9 @@ use std::sync::Arc;
 use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
 
 mod common;
-use se2attn::coordinator::batcher::BatcherConfig;
 use se2attn::coordinator::{
-    Backend, BackendFactory, CacheConfig, RolloutRequest, RolloutResult, Router, ServeConfig,
-    Server, SyntheticDecoder,
+    AdmissionConfig, Backend, BackendFactory, CacheConfig, RolloutRequest, RolloutResult, Router,
+    ServeConfig, Server, SyntheticDecoder,
 };
 use se2attn::sim::{MixGenerator, Scenario, ScenarioGenerator};
 
@@ -48,13 +47,13 @@ fn synthetic_factory() -> BackendFactory {
     })
 }
 
-fn synthetic_server(workers: usize, batcher: BatcherConfig) -> Server {
+fn synthetic_server(workers: usize, admission: AdmissionConfig) -> Server {
     Server::start_with_backend(
         test_system_config(),
         vec![METHOD],
         ServeConfig {
             workers,
-            batcher,
+            admission,
             cache: CacheConfig::default(),
             kernel: se2attn::attention::kernel::KernelConfig::default(),
             ..ServeConfig::default()
@@ -62,6 +61,18 @@ fn synthetic_server(workers: usize, batcher: BatcherConfig) -> Server {
         synthetic_factory(),
     )
     .expect("synthetic server start")
+}
+
+/// An admission config whose pacing can never fire (sub-unit burst): the
+/// queue fills deterministically and only the shutdown drain serves it.
+/// The continuous-scheduler replacement for the old never-flush batcher.
+fn never_admit(max_queue: usize) -> AdmissionConfig {
+    AdmissionConfig {
+        max_queue,
+        tenant_rate: 1e-9,
+        tenant_burst: 0.0,
+        ..AdmissionConfig::default()
+    }
 }
 
 fn request_for(scenario: Scenario, i: usize, n_samples: usize) -> RolloutRequest {
@@ -99,18 +110,22 @@ fn cross_shard_equivalence_on_mixed_workload() {
     let scenes = 24;
     let samples = 2;
     let sim = SimConfig::default();
-    let batcher = BatcherConfig {
-        batch_size: 2,
-        max_wait: std::time::Duration::from_millis(1),
+    // a small live-session cap keeps several requests sharing each step
+    // batch, so heterogeneous (per-slot seeded) packing is exercised —
+    // equivalence holds because step seeds are a pure function of
+    // (request, step, sample), never of how the batch was packed
+    let admission = AdmissionConfig {
         max_queue: 1024,
+        max_live_sessions: 4,
+        ..AdmissionConfig::default()
     };
 
-    let server1 = synthetic_server(1, batcher.clone());
+    let server1 = synthetic_server(1, admission.clone());
     let results1 = run_workload(&server1, scenes, samples);
     let stats1 = Arc::clone(&server1.stats);
     drop(server1);
 
-    let server4 = synthetic_server(4, batcher);
+    let server4 = synthetic_server(4, admission);
     // shard pinning is a pure function of the scene id: record the
     // expected per-shard request counts before submitting
     let mix = se2attn::config::scenario_mix("mixed", "").unwrap();
@@ -173,10 +188,9 @@ fn cross_shard_equivalence_on_mixed_workload() {
 fn zero_sample_request_is_a_recoverable_error() {
     let server = synthetic_server(
         common::test_workers(2),
-        BatcherConfig {
-            batch_size: 1,
-            max_wait: std::time::Duration::from_millis(1),
+        AdmissionConfig {
             max_queue: 16,
+            ..AdmissionConfig::default()
         },
     );
     let gen = ScenarioGenerator::new(SimConfig::default());
@@ -206,10 +220,9 @@ fn submit_after_shutdown_errors_and_is_not_counted() {
     let workers = common::test_workers(2);
     let mut server = synthetic_server(
         workers,
-        BatcherConfig {
-            batch_size: 1,
-            max_wait: std::time::Duration::from_millis(1),
+        AdmissionConfig {
             max_queue: 16,
+            ..AdmissionConfig::default()
         },
     );
     let gen = ScenarioGenerator::new(SimConfig::default());
@@ -243,16 +256,9 @@ fn submit_after_shutdown_errors_and_is_not_counted() {
 /// scene family cannot starve the others.
 #[test]
 fn per_shard_backpressure_isolates_the_hot_shard() {
-    // a batcher that can never flush on its own: requests sit queued
-    // until the shutdown drain, so queue occupancy is fully deterministic
-    let server = synthetic_server(
-        2,
-        BatcherConfig {
-            batch_size: 64,
-            max_wait: std::time::Duration::from_secs(3600),
-            max_queue: 4,
-        },
-    );
+    // pacing that can never admit: requests sit queued until the
+    // shutdown drain, so queue occupancy is fully deterministic
+    let server = synthetic_server(2, never_admit(4));
     let gen = ScenarioGenerator::new(SimConfig::default());
 
     // find scenarios pinned to shard 0 (hot) and shard 1 (cold)
@@ -313,16 +319,9 @@ fn per_shard_backpressure_isolates_the_hot_shard() {
 /// the process lifetime, not just until shutdown.
 #[test]
 fn rejected_envelopes_settle_inflight_while_serving() {
-    // a batcher that can never flush on its own: occupancy and overflow
-    // are fully deterministic
-    let server = synthetic_server(
-        1,
-        BatcherConfig {
-            batch_size: 64,
-            max_wait: std::time::Duration::from_secs(3600),
-            max_queue: 2,
-        },
-    );
+    // pacing that can never admit: occupancy and overflow are fully
+    // deterministic
+    let server = synthetic_server(1, never_admit(2));
     let gen = ScenarioGenerator::new(SimConfig::default());
     let scenario = gen.generate(5);
     // 6 submits onto the single shard: the first 2 queue, the last 4
@@ -372,18 +371,11 @@ fn rejected_envelopes_settle_inflight_while_serving() {
 }
 
 /// Stateless submits ignore scene affinity and spread by inflight depth:
-/// with no completions (the batcher cannot flush), 8 submits round-robin
+/// with no completions (admission pacing frozen), 8 submits round-robin
 /// 2 onto each of 4 shards deterministically.
 #[test]
 fn stateless_requests_balance_across_shards() {
-    let server = synthetic_server(
-        4,
-        BatcherConfig {
-            batch_size: 64,
-            max_wait: std::time::Duration::from_secs(3600),
-            max_queue: 64,
-        },
-    );
+    let server = synthetic_server(4, never_admit(64));
     let gen = ScenarioGenerator::new(SimConfig::default());
     // all 8 requests share one scene: affinity would pile them onto a
     // single shard, least-loaded must spread them 2-2-2-2
@@ -400,4 +392,155 @@ fn stateless_requests_balance_across_shards() {
         rx.recv().expect("answered").expect("drained to a real result");
     }
     assert_eq!(stats.requests_done.get(), 8);
+}
+
+/// Satellite (ISSUE 8): shutdown with sessions mid-flight in a
+/// continuous step batch.  A small live-session cap keeps most requests
+/// waiting in the admission queue while earlier ones are being stepped,
+/// so the Shutdown lands mid-step-loop; every accepted request must
+/// still drain to a real result (no lost responses) and shutdown stays
+/// idempotent.  Extends the PR 3 drain regression to the continuous
+/// scheduler.
+#[test]
+fn shutdown_drains_sessions_mid_flight_in_step_batch() {
+    let mut server = synthetic_server(
+        1,
+        AdmissionConfig {
+            max_live_sessions: 2,
+            ..AdmissionConfig::default()
+        },
+    );
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let rxs: Vec<_> = (0..8)
+        .map(|i| server.submit(METHOD, request_for(gen.generate(100 + i as u64), i, 2)))
+        .collect();
+    // shutdown races the step loop: whatever is live keeps stepping to
+    // retirement, whatever is queued drains unpaced through the loop
+    server.shutdown();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx
+            .recv()
+            .expect("no lost responses across shutdown")
+            .unwrap_or_else(|e| panic!("request {i} must drain to a result: {e:#}"));
+        assert_eq!(res.trajectories.len(), 2, "request {i}");
+    }
+    assert_eq!(server.stats.requests_done.get(), 8);
+    assert_eq!(server.stats.requests_failed.get(), 0);
+    assert_eq!(server.stats.queue_sheds.get(), 0, "drain must never shed");
+    // idempotent: a second shutdown is a no-op
+    server.shutdown();
+    for s in &server.stats.shards {
+        assert_eq!(s.inflight.get(), 0);
+        assert_eq!(s.live_sessions.get(), 0, "WorkerGuard clears occupancy");
+    }
+}
+
+/// Satellite (ISSUE 8): session-affinity routing is a pure function of
+/// the scene id — repeated submits of the same scene always land on the
+/// pinned shard (never migrating once admitted), and the pin is stable
+/// across server instances with the same shard count.
+#[test]
+fn session_affinity_never_migrates_once_admitted() {
+    let server = synthetic_server(4, AdmissionConfig::default());
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let scenarios: Vec<Scenario> = (0..16).map(|s| gen.generate(s)).collect();
+    let pins: Vec<usize> = scenarios.iter().map(|s| server.shard_for(s)).collect();
+    let mut rxs = Vec::new();
+    for (i, sc) in scenarios.iter().enumerate() {
+        for r in 0..3 {
+            rxs.push(server.submit(METHOD, request_for(sc.clone(), i * 3 + r, 1)));
+        }
+    }
+    for rx in rxs {
+        rx.recv().expect("answered").expect("rollout ok");
+    }
+    // per-shard request counters match the pure pin prediction exactly:
+    // no submit was routed (or re-routed mid-flight) anywhere else
+    let mut expected = [0u64; 4];
+    for &p in &pins {
+        expected[p] += 3;
+    }
+    for (i, s) in server.stats.shards.iter().enumerate() {
+        assert_eq!(s.requests.get(), expected[i], "shard {i} request count");
+    }
+    // the pin survives a server restart (same shard count)
+    let server2 = synthetic_server(4, AdmissionConfig::default());
+    for (s, &p) in scenarios.iter().zip(&pins) {
+        assert_eq!(server2.shard_for(s), p, "pin must be instance-independent");
+    }
+}
+
+/// Satellite (ISSUE 8): least-inflight tie-breaking is deterministic —
+/// frozen admission pacing makes the inflight gauges advance in
+/// lockstep with the submits, so two identical stateless submit
+/// sequences must produce identical shard assignments, filling shards
+/// in index order on exact ties.
+#[test]
+fn stateless_tie_break_is_deterministic_under_equal_load() {
+    let run = || {
+        let server = synthetic_server(3, never_admit(64));
+        let gen = ScenarioGenerator::new(SimConfig::default());
+        let scenario = gen.generate(42);
+        let mut per_submit = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            rxs.push(server.submit_stateless(METHOD, request_for(scenario.clone(), i, 1)));
+            per_submit.push(
+                server
+                    .stats
+                    .shards
+                    .iter()
+                    .map(|s| s.requests.get())
+                    .collect::<Vec<u64>>(),
+            );
+        }
+        drop(server);
+        for rx in rxs {
+            rx.recv().expect("answered").expect("drained to a real result");
+        }
+        per_submit
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "identical submit sequences must route identically");
+    // exact ties fill in index order: 0,1,2,0,1,2
+    assert_eq!(a[0], vec![1, 0, 0]);
+    assert_eq!(a[2], vec![1, 1, 1]);
+    assert_eq!(a[5], vec![2, 2, 2]);
+}
+
+/// Satellite (ISSUE 8): a queued request that outlives its admission
+/// deadline is shed with a typed error — counted as a shed (not a
+/// rejection), attributed to its tenant class, and the worker keeps
+/// serving afterwards.
+#[test]
+fn deadline_missed_requests_are_shed_with_typed_error() {
+    let cfg = AdmissionConfig {
+        deadline: std::time::Duration::from_millis(10),
+        // frozen pacing: the request can never be admitted, so the
+        // deadline is guaranteed to fire
+        tenant_rate: 1e-9,
+        tenant_burst: 0.0,
+        ..AdmissionConfig::default()
+    };
+    let server = synthetic_server(1, cfg);
+    let gen = ScenarioGenerator::new(SimConfig::default());
+    let rx = server.submit_for_tenant(3, METHOD, request_for(gen.generate(1), 0, 1));
+    let err = rx
+        .recv()
+        .expect("a shed must be answered, not dropped")
+        .expect_err("the deadline must shed this request");
+    assert!(format!("{err:#}").contains("shed"), "{err:#}");
+    assert!(format!("{err:#}").contains("deadline"), "{err:#}");
+    assert_eq!(server.stats.queue_sheds.get(), 1);
+    assert_eq!(server.stats.tenants.shed_count(3), 1);
+    assert_eq!(
+        server.stats.queue_rejections.get(),
+        0,
+        "sheds and rejections are separate outcomes"
+    );
+    assert_eq!(server.stats.shards[0].shed.get(), 1);
+    assert_eq!(server.stats.requests_failed.get(), 0, "a shed is not a failure");
+    assert_eq!(server.stats.shards[0].inflight.get(), 0);
+    assert_eq!(server.stats.shards[0].live.get(), 1, "worker survives the shed");
 }
