@@ -6,7 +6,9 @@
 //! Modes (see `benchlib::BenchMode`):
 //! * `SE2ATTN_BENCH_SMOKE=1` — CI perf-regression gate: small sizes, few
 //!   iterations, and the process **exits nonzero** if the blocked kernel's
-//!   mean is slower than the scalar oracle at the largest smoke size.
+//!   mean is slower than the scalar oracle at the largest smoke size, or
+//!   if the fused SE(2)-Fourier path is < 1.5x over project-then-attend
+//!   at the largest smoke decode window.
 //! * default — developer-scale sweep (includes the 1024-token kernel row
 //!   backing the ">= 2x at n = m = 1024 with 4 threads" acceptance bar).
 //! * `SE2ATTN_BENCH_FULL=1` — paper-scale sweep.
@@ -197,6 +199,127 @@ fn kernel_section(mode: BenchMode, rows: &mut Vec<Json>) -> Option<bool> {
     last_ok
 }
 
+/// Fused projection vs project-then-attend at decode shapes (ISSUE 9 /
+/// ROADMAP fused-kernel gate): `n_new` fresh query rows attend a window
+/// of `m` raw keys+poses.  The fused path computes phi_k inside the key
+/// loop (zero projected intermediates); project-then-attend materializes
+/// the full (2m x c) k~/v~ first.  Returns the verdict at the largest
+/// size: `Some(true)` = fused >= 1.5x.
+fn fused_section(mode: BenchMode, rows: &mut Vec<Json>) -> Option<bool> {
+    let windows: &[usize] = mode.pick(
+        &[1024, 4096],
+        &[1024, 4096, 16384],
+        &[1024, 4096, 16384, 65536],
+    );
+    let n_new = 8usize;
+    let scales = [1.0, 0.5, 0.25, 0.125];
+    let cfg = KernelConfig::fixed(KernelConfig::DEFAULT_BLOCK_M, KernelConfig::DEFAULT_LANES, 4);
+
+    println!("\n# Fused projection vs project-then-attend, se2fourier decode shapes (n_new={n_new})\n");
+    let mut table = Table::new(&[
+        "keys m",
+        "project+attend ms",
+        "fused ms",
+        "speedup",
+        "proj peak KiB",
+        "fused peak KiB",
+        "verdict",
+    ]);
+    let mut last_ok = None;
+    for &m in windows {
+        let d = data(m);
+        let mut rng = Rng::new(m as u64 ^ 0xFACE);
+        let q: Vec<f32> = (0..n_new * D).map(|_| rng.normal() as f32).collect();
+        let pose_q: Vec<Pose> = (0..n_new)
+            .map(|_| Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.1, 3.1)))
+            .collect();
+        // fresh decode rows: visible to the whole window
+        let tq = vec![i32::MAX; n_new];
+        let p = AttnProblem {
+            method: Method::Se2Fourier,
+            d: D,
+            fourier_f: F,
+            scales: &scales,
+            q: &q,
+            k: &d.k,
+            v: &d.v,
+            pose_q: &pose_q,
+            pose_k: &d.poses,
+            tq: &tq,
+            tk: &d.tq,
+        };
+        let projected = bench_mode(mode, || {
+            std::hint::black_box(linear::attention_projected_with(&p, &cfg));
+        });
+        let fused = bench_mode(mode, || {
+            std::hint::black_box(linear::attention_fused_with(&p, &cfg));
+        });
+        // the memory claim, measured on the real outputs (not just bench
+        // timing): fused reports zero projection intermediates
+        let proj_peak = linear::attention_projected_with(&p, &cfg).peak_temp_bytes;
+        let fused_peak = linear::attention_fused_with(&p, &cfg).peak_temp_bytes;
+        assert!(
+            fused_peak * 4 < proj_peak,
+            "fused peak {fused_peak} not well under projected peak {proj_peak}"
+        );
+
+        let speedup = projected.mean_ns / fused.mean_ns;
+        let ok = speedup >= 1.5;
+        table.row(vec![
+            m.to_string(),
+            format!("{:.3}", projected.mean_ms()),
+            format!("{:.3}", fused.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{}", proj_peak / 1024),
+            format!("{}", fused_peak / 1024),
+            if ok { "PASS (>=1.5x)".into() } else { format!("FAIL ({speedup:.2}x < 1.5x)") },
+        ]);
+        let row = Json::obj(vec![
+            ("bench", Json::Str("fused".into())),
+            ("m", Json::Num(m as f64)),
+            ("n_new", Json::Num(n_new as f64)),
+            ("projected", projected.to_json()),
+            ("fused", fused.to_json()),
+            ("speedup", Json::Num(speedup)),
+            ("projected_peak_bytes", Json::Num(proj_peak as f64)),
+            ("fused_peak_bytes", Json::Num(fused_peak as f64)),
+        ]);
+        record_row("attention_throughput", row.clone());
+        rows.push(row);
+        last_ok = Some(ok);
+    }
+    table.print();
+
+    // ungated context row: at prefill shapes (n = m) the recompute factor
+    // ceil(n/8) makes project-then-attend the right choice — documenting
+    // why attention_with routes by query count (DESIGN.md §18)
+    let n = *mode.pick(&[256], &[512], &[1024]).first().unwrap();
+    let d = data(n);
+    let p = problem(Method::Se2Fourier, &d, &scales);
+    let projected = bench_mode(mode, || {
+        std::hint::black_box(linear::attention_projected_with(&p, &cfg));
+    });
+    let fused = bench_mode(mode, || {
+        std::hint::black_box(linear::attention_fused_with(&p, &cfg));
+    });
+    println!(
+        "\nprefill n=m={n}: project+attend {:.3} ms vs fused {:.3} ms ({:.2}x) — \
+         recompute factor favors materializing k~/v~ at large n",
+        projected.mean_ms(),
+        fused.mean_ms(),
+        projected.mean_ns / fused.mean_ns,
+    );
+    let row = Json::obj(vec![
+        ("bench", Json::Str("fused_prefill".into())),
+        ("n", Json::Num(n as f64)),
+        ("projected", projected.to_json()),
+        ("fused", fused.to_json()),
+    ]);
+    record_row("attention_throughput", row.clone());
+    rows.push(row);
+    last_ok
+}
+
 /// Observability overhead on the hot kernel path: the same blocked call
 /// benched with the tracing/profiling gates off, then with a live tracer
 /// (thread ctx installed, Attend spans landing in a ring) plus profiling
@@ -346,6 +469,7 @@ fn main() {
     let mut rows: Vec<Json> = Vec::new();
     algorithms_section(mode, &mut rows);
     let kernel_ok = kernel_section(mode, &mut rows);
+    let fused_ok = fused_section(mode, &mut rows);
     let overhead = overhead_section(mode, &mut rows);
     if !mode.is_smoke() {
         artifact_section(&mut rows);
@@ -359,6 +483,16 @@ fn main() {
         eprintln!(
             "PERF REGRESSION: blocked flash kernel slower than the scalar \
              oracle at the largest smoke size — see BENCH_attention.json"
+        );
+        std::process::exit(1);
+    }
+    // fused-kernel gate (ROADMAP): at decode shapes the fused path must
+    // be >= 1.5x over project-then-attend at the largest smoke window.
+    if mode.is_smoke() && fused_ok == Some(false) {
+        eprintln!(
+            "PERF REGRESSION: fused SE(2)-Fourier kernel < 1.5x over \
+             project-then-attend at the largest smoke window — see \
+             BENCH_attention.json"
         );
         std::process::exit(1);
     }

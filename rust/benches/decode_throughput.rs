@@ -22,12 +22,19 @@
 //! `BENCH_decode_<precision>.json` instead of `BENCH_decode.json`, so
 //! the CI perf-smoke job archives both tiers side by side.
 //!
+//! `--kernel-autotune` runs the one-shot startup microbenchmark
+//! ([`KernelConfig::autotune`], env pins via `SE2ATTN_KERNEL_*` still
+//! win) and benches both attention legs with the tuned
+//! `{block_m, lanes, threads}` instead of the defaults — the same knob
+//! `se2attn simulate --kernel-autotune` plumbs through `ServeConfig`.
+//!
 //! Expected shape: the cached step's projection cost is O(new tokens)
 //! instead of O(window), so it wins for every window larger than the
 //! frontier itself and the gap widens with the window; the acceptance
 //! check prints per-row verdicts for window >= 32.
 
 use se2attn::attention::incremental::{IncrementalAttention, IncrementalConfig};
+use se2attn::attention::kernel::KernelConfig;
 use se2attn::attention::{linear, AttnProblem};
 use se2attn::benchlib::{bench, record_row, write_bench_json, BenchMode, Table};
 use se2attn::config::{CachePrecision, Method, SimConfig};
@@ -86,9 +93,19 @@ fn step_bench<F: FnMut()>(mode: BenchMode, f: F) -> se2attn::benchlib::Stats {
     }
 }
 
-fn attention_path(mode: BenchMode, precision: CachePrecision, rows: &mut Vec<Json>) {
+fn attention_path(
+    mode: BenchMode,
+    precision: CachePrecision,
+    kernel: Option<KernelConfig>,
+    rows: &mut Vec<Json>,
+) {
     let mut model = model_config(&SimConfig::default());
     model.cache_precision = precision;
+    if let Some(k) = kernel {
+        // the autotuned shape reaches the cached engine the same way a
+        // shard gets it: through ModelConfig.kernel
+        model.kernel = k;
+    }
     let scales = [1.0, 0.5, 0.25, 0.125];
     let sizes: &[usize] = mode.pick(
         &[16, 32, 64],
@@ -128,7 +145,11 @@ fn attention_path(mode: BenchMode, precision: CachePrecision, rows: &mut Vec<Jso
                 tq: &new.t,
                 tk: &ctx.t,
             };
-            std::hint::black_box(linear::attention(&p).out);
+            let out = match kernel {
+                Some(k) => linear::attention_with(&p, &k),
+                None => linear::attention(&p),
+            };
+            std::hint::black_box(out.out);
         });
 
         // ---- cached: append frontier + attend, amortized re-anchor ------
@@ -311,6 +332,7 @@ fn main() {
     let mode = BenchMode::from_env();
     // `cargo bench --bench decode_throughput -- --cache-precision f16`
     let mut precision = CachePrecision::F32;
+    let mut autotune = false;
     let args: Vec<String> = std::env::args().collect();
     for (i, a) in args.iter().enumerate() {
         if a == "--cache-precision" {
@@ -318,10 +340,22 @@ fn main() {
             precision = CachePrecision::parse(v).expect("bad --cache-precision");
         } else if let Some(v) = a.strip_prefix("--cache-precision=") {
             precision = CachePrecision::parse(v).expect("bad --cache-precision");
+        } else if a == "--kernel-autotune" {
+            autotune = true;
         }
     }
+    let kernel = if autotune {
+        let k = KernelConfig::autotune();
+        println!(
+            "kernel autotune: block_m={} lanes={} threads={}\n",
+            k.block_m, k.lanes, k.threads
+        );
+        Some(k)
+    } else {
+        None
+    };
     let mut rows: Vec<Json> = Vec::new();
-    attention_path(mode, precision, &mut rows);
+    attention_path(mode, precision, kernel, &mut rows);
     tokenization_path(mode, &mut rows);
     let bytes_ok = cache_precision_section(mode, &mut rows);
     let out = match precision {

@@ -30,6 +30,22 @@
 //! [`flash_sdpa_rows`] is the row-source entry point;
 //! [`flash_sdpa_blocked`] wraps it for plain slices.
 //!
+//! ## Fused projection (DESIGN.md §18)
+//!
+//! [`KvRowSource::RawPose`] rows are *raw* k/v features plus poses
+//! ([`super::projections::RawPoseKv`]): the kernel phi_k-projects each key
+//! block on the fly into O(block_m * c) per-thread scratch — once per
+//! (query chunk, key block) pair via the shared-coefficient pair
+//! projection — so the m x c projected k~/v~ tensors of Algorithm 2 line 2
+//! are never materialized.  [`flash_sdpa_fused`] additionally fuses the
+//! query-side projection and the output unprojection into the same chunk
+//! loop, taking raw (n x d) queries to raw (n x d) outputs with only
+//! per-thread transients.  Because the per-row arithmetic sequence (block
+//! order, lane math, online-softmax folds) and every projected value are
+//! identical to the project-then-attend path, the fused output is
+//! **bit-identical** to it for the same `(block_m, lanes)` — and therefore
+//! inherits all of its equivalence guarantees below.
+//!
 //! ## Determinism
 //!
 //! For a fixed `(block_m, lanes)` the blocked kernel is **bit-stable
@@ -50,14 +66,20 @@
 
 use std::cell::RefCell;
 
-use crate::config::default_workers;
-use crate::exec::{run_chunked, SendPtr};
+use crate::config::{default_workers, Method};
+use crate::exec::{prefetch_read, run_chunked, SendPtr};
+use crate::geometry::Pose;
 
+use super::projections::{self as proj, RawPoseKv};
 use super::quant::KvRowSource;
 
 /// Query rows claimed per pool task: small enough to load-balance ragged
 /// visibility masks, large enough to amortize the work-stealing counter.
-const ROWS_PER_TASK: usize = 8;
+/// Public because it is also the fused path's query-chunk size — each key
+/// block is re-projected once per chunk, so `ceil(n / ROWS_PER_TASK)` is
+/// the fused recompute factor that [`super::memmodel::linear_fused_bytes`]
+/// and the `linear::FUSED_MAX_QUERY_ROWS` routing threshold reason about.
+pub const ROWS_PER_TASK: usize = 8;
 
 /// Configuration of the blocked flash kernel.  `Default` resolves the
 /// `SE2ATTN_KERNEL_{BLOCK_M,LANES,THREADS}` environment overrides once
@@ -155,6 +177,101 @@ impl KernelConfig {
             } else {
                 0
             }
+    }
+
+    /// Transient bytes of one worker thread's *fused-path* scratch
+    /// (DESIGN.md §18): the per-chunk q~/o~ tiles, the per-block
+    /// projected k~/v~ tiles, the pair-projection staging rows, the f32
+    /// value-block accumulator, and the per-row online-softmax state.
+    /// O(block_m * c) — constant in both n and m, so the fused path's
+    /// entire transient footprint is per-thread scratch; no O(m c)
+    /// projected tensor ever exists.  (The se2fourier quadrature scratch
+    /// adds O(F), negligible next to c = (4F+2) d/6 and excluded here.)
+    pub fn scratch_bytes_per_thread_fused(&self, c: usize, m: usize) -> usize {
+        let bm = self.block_m.max(1).min(m.max(1));
+        let chunk = ROWS_PER_TASK;
+        // f64: block scores + per-row running (m, l) + per-row accumulators
+        (bm + 2 * chunk + chunk * c) * std::mem::size_of::<f64>()
+            // f32: q~/o~ chunk tiles, k~/v~ block tiles, k/v pair staging,
+            // value-block accumulator, unproject staging
+            + (2 * chunk * c + 2 * bm * c + 4 * c) * std::mem::size_of::<f32>()
+    }
+
+    /// One-shot startup auto-tuner: microbenchmark the blocked kernel
+    /// over a small deterministic synthetic problem across the supported
+    /// `{block_m, lanes}` grid and return the fastest shape, with
+    /// `threads` resolved the same way [`Self::from_env`] resolves it.
+    ///
+    /// * **Cached per process** (`OnceLock`): every later call returns the
+    ///   same config, so all call sites agree on one kernel shape and
+    ///   outputs stay bit-stable within the process.
+    /// * **Env-overridable**: a valid `SE2ATTN_KERNEL_{BLOCK_M,LANES,
+    ///   THREADS}` pins that dimension — the sweep only explores the
+    ///   unpinned ones, so operators can still force an exact shape.
+    /// * **Determinism**: the tuner only selects *which* `(block_m,
+    ///   lanes)` runs; for any fixed choice the kernel output is a pure
+    ///   function of the inputs, so an autotuned run is bit-identical to
+    ///   an explicit [`Self::fixed`] run with the same fields (pinned by
+    ///   `autotuned_config_is_bit_identical_to_explicit`).
+    ///
+    /// Costs a few milliseconds, once; both the native backend and the
+    /// `pjrt` stub consume the result through the shared tiling contract
+    /// ([`crate::runtime::kernel_tiling`]).
+    pub fn autotune() -> KernelConfig {
+        static TUNED: std::sync::OnceLock<KernelConfig> = std::sync::OnceLock::new();
+        *TUNED.get_or_init(|| {
+            let pin = |name: &str| -> Option<usize> {
+                std::env::var(name)
+                    .ok()
+                    .and_then(|v| v.trim().parse::<usize>().ok())
+                    .filter(|&v| v > 0)
+            };
+            let block_ms: Vec<usize> = match pin("SE2ATTN_KERNEL_BLOCK_M") {
+                Some(v) => vec![v],
+                None => vec![16, 32, 64, 128],
+            };
+            let lane_set: Vec<usize> = match pin("SE2ATTN_KERNEL_LANES") {
+                Some(v) => vec![v],
+                None => vec![4, 8, 16],
+            };
+            let threads = pin("SE2ATTN_KERNEL_THREADS").unwrap_or_else(default_workers);
+
+            // deterministic synthetic problem, sized so one sweep stays in
+            // the low milliseconds but block_m up to 128 still tiles m
+            let (n, m, c) = (64usize, 512usize, 64usize);
+            let mut rng = crate::prng::Rng::new(0xA070_77E5);
+            let gen = |rng: &mut crate::prng::Rng, len: usize| -> Vec<f32> {
+                (0..len).map(|_| rng.normal() as f32).collect()
+            };
+            let q = gen(&mut rng, n * c);
+            let k = gen(&mut rng, m * c);
+            let v = gen(&mut rng, m * c);
+            let tq: Vec<i32> = (0..n).map(|i| i as i32).collect();
+            let tk: Vec<i32> = (0..m).map(|j| (j / 8) as i32).collect();
+            let scale = 1.0 / (c as f64).sqrt();
+            let mut out = vec![0.0f32; n * c];
+
+            let mut best = KernelConfig::fixed(Self::DEFAULT_BLOCK_M, Self::DEFAULT_LANES, threads);
+            let mut best_ns = f64::INFINITY;
+            for &bm in &block_ms {
+                for &lanes in &lane_set {
+                    let cand = KernelConfig::fixed(bm, lanes, threads);
+                    // best-of-two damps one-off scheduling noise; ties keep
+                    // the earlier (smaller) shape, so selection is stable
+                    let mut t_ns = f64::INFINITY;
+                    for _ in 0..2 {
+                        let t0 = std::time::Instant::now();
+                        flash_sdpa_blocked(&q, &k, &v, &tq, &tk, c, scale, &mut out, &cand);
+                        t_ns = t_ns.min(t0.elapsed().as_nanos() as f64);
+                    }
+                    if t_ns < best_ns {
+                        best_ns = t_ns;
+                        best = cand;
+                    }
+                }
+            }
+            best
+        })
     }
 }
 
@@ -451,6 +568,396 @@ fn attend_row<const L: usize>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused projection driver (DESIGN.md §18)
+// ---------------------------------------------------------------------------
+
+/// Per-thread scratch of the fused driver: everything the chunk loop
+/// touches, all O(block_m * c) or O(ROWS_PER_TASK * c) — the byte model
+/// is [`KernelConfig::scratch_bytes_per_thread_fused`].
+#[derive(Default)]
+struct FusedScratch {
+    /// Projected q~ tile of one chunk (ROWS_PER_TASK x c; only the
+    /// fully fused entry point uses it — the row-source path reads the
+    /// caller's already-projected queries).
+    qt: Vec<f32>,
+    /// Attended o~ tile of one chunk (fully fused entry point only).
+    ot: Vec<f32>,
+    /// Projected k~ rows of the current key block (block_m x c).
+    kblock: Vec<f32>,
+    /// Projected v~ rows of the current key block (block_m x c).
+    vblock: Vec<f32>,
+    /// Pair-projection staging row (also reused as the q-projection /
+    /// o-unprojection staging row by the fully fused entry point).
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+    /// Scores of one key block (f64 — the online-softmax state dtype).
+    s: Vec<f64>,
+    /// f32 value-block accumulator (shared across the chunk's rows —
+    /// zeroed per (row, block) exactly as in [`attend_row`]).
+    vacc: Vec<f32>,
+    /// Per-row f64 running output accumulators (chunk x c).
+    acc: Vec<f64>,
+    /// Per-row running softmax max.
+    mstate: Vec<f64>,
+    /// Per-row running softmax normalizer.
+    lstate: Vec<f64>,
+    /// se2fourier quadrature scratch (built lazily, rebuilt when F
+    /// changes between calls on this thread).
+    se2f: Option<proj::Se2fKeyScratch>,
+}
+
+impl FusedScratch {
+    fn ensure(&mut self, chunk: usize, block_m: usize, c: usize, kv: &RawPoseKv<'_>) {
+        if self.s.len() < block_m {
+            self.s.resize(block_m, 0.0);
+        }
+        if self.vacc.len() != c {
+            self.vacc.resize(c, 0.0);
+        }
+        if self.kblock.len() < block_m * c {
+            self.kblock.resize(block_m * c, 0.0);
+        }
+        if self.vblock.len() < block_m * c {
+            self.vblock.resize(block_m * c, 0.0);
+        }
+        if self.acc.len() < chunk * c {
+            self.acc.resize(chunk * c, 0.0);
+        }
+        if self.mstate.len() < chunk {
+            self.mstate.resize(chunk, 0.0);
+        }
+        if self.lstate.len() < chunk {
+            self.lstate.resize(chunk, 0.0);
+        }
+        if self.qt.len() < chunk * c {
+            self.qt.resize(chunk * c, 0.0);
+        }
+        if self.ot.len() < chunk * c {
+            self.ot.resize(chunk * c, 0.0);
+        }
+        if kv.method == Method::Se2Fourier
+            && self.se2f.as_ref().map_or(false, |s| s.table.f != kv.fourier_f)
+        {
+            self.se2f = None;
+        }
+    }
+}
+
+thread_local! {
+    static FUSED_SCRATCH: RefCell<FusedScratch> = RefCell::new(FusedScratch::default());
+}
+
+/// One chunk of query rows against every key block, with on-the-fly key
+/// projection: each visited block's k/v rows are phi_k-projected **once
+/// per chunk** into the per-thread `kblock`/`vblock` tiles (shared
+/// Gamma/Lambda coefficients via [`RawPoseKv::project_pair_into`]), then
+/// every row in the chunk runs *exactly* the [`attend_row`] block body
+/// against the tile.  Per-row operation order and all operand values are
+/// identical to the project-then-attend path, so outputs are
+/// bit-identical to it; per-row state is carried in `mstate`/`lstate`/
+/// `acc` across blocks instead of locals.
+#[allow(clippy::too_many_arguments)]
+fn attend_chunk_fused<const L: usize>(
+    qt: &[f32],
+    tq: &[i32],
+    kv: &RawPoseKv<'_>,
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    blocks: &[KeyBlock],
+    sc: &mut FusedScratch,
+    ot: &mut [f32],
+    prof: &mut RowProfile,
+) {
+    let chunk = tq.len();
+    let FusedScratch {
+        kblock,
+        vblock,
+        krow,
+        vrow,
+        s,
+        vacc,
+        acc,
+        mstate,
+        lstate,
+        se2f,
+        ..
+    } = sc;
+    for x in &mut mstate[..chunk] {
+        *x = f64::NEG_INFINITY;
+    }
+    for x in &mut lstate[..chunk] {
+        *x = 0.0;
+    }
+    acc[..chunk * c].iter_mut().for_each(|a| *a = 0.0);
+    let chunk_max_tq = tq.iter().copied().max().unwrap_or(i32::MIN);
+    for (bi, b) in blocks.iter().enumerate() {
+        if chunk_max_tq < b.min_tk {
+            // fully masked for every row in the chunk: skipped before any
+            // raw k/v row is read or projected
+            prof.blocks_skipped += chunk as u64;
+            continue;
+        }
+        // ---- project the block once for the whole chunk -----------------
+        for (jj, j) in (b.start..b.end).enumerate() {
+            kv.project_pair_into(j, se2f, krow, vrow);
+            kblock[jj * c..(jj + 1) * c].copy_from_slice(krow);
+            vblock[jj * c..(jj + 1) * c].copy_from_slice(vrow);
+        }
+        // pull the next block's raw rows toward L1 while this block's
+        // tile is attended (no-op off x86_64)
+        if let Some(nb) = blocks.get(bi + 1) {
+            prefetch_read(kv.k, nb.start * kv.d);
+            prefetch_read(kv.v, nb.start * kv.d);
+        }
+        // ---- attend every chunk row against the tile --------------------
+        for r in 0..chunk {
+            let tqi = tq[r];
+            if tqi < b.min_tk {
+                prof.blocks_skipped += 1;
+                continue;
+            }
+            prof.blocks_visited += 1;
+            let qi = &qt[r * c..(r + 1) * c];
+            let fully_visible = tqi >= b.max_tk;
+            let m_i = mstate[r];
+            let accr = &mut acc[r * c..(r + 1) * c];
+            let mut bmax = f64::NEG_INFINITY;
+            for (jj, j) in (b.start..b.end).enumerate() {
+                s[jj] = if fully_visible || tqi >= tk[j] {
+                    prof.k_rows_read += 1;
+                    let kj = &kblock[jj * c..(jj + 1) * c];
+                    let sv = dot_lanes::<L>(qi, kj) * scale;
+                    if sv > bmax {
+                        bmax = sv;
+                    }
+                    sv
+                } else {
+                    f64::NEG_INFINITY
+                };
+            }
+            let m_new = if bmax > m_i { bmax } else { m_i };
+            let alpha = (m_i - m_new).exp(); // m_i == -inf  =>  alpha == 0
+            vacc.iter_mut().for_each(|x| *x = 0.0);
+            let mut l_b = 0.0f64;
+            for jj in 0..(b.end - b.start) {
+                let sv = s[jj];
+                if sv == f64::NEG_INFINITY {
+                    continue;
+                }
+                let p = (sv - m_new).exp();
+                l_b += p;
+                prof.v_rows_read += 1;
+                let vj = &vblock[jj * c..(jj + 1) * c];
+                axpy_lanes::<L>(vacc, p as f32, vj);
+            }
+            lstate[r] = lstate[r] * alpha + l_b;
+            for (a, &vb) in accr.iter_mut().zip(vacc.iter()) {
+                *a = *a * alpha + vb as f64;
+            }
+            mstate[r] = m_new;
+        }
+    }
+    for r in 0..chunk {
+        let out_row = &mut ot[r * c..(r + 1) * c];
+        if lstate[r] > 0.0 {
+            let accr = &acc[r * c..(r + 1) * c];
+            for (o, &a) in out_row.iter_mut().zip(accr.iter()) {
+                *o = (a / lstate[r]) as f32;
+            }
+        } else {
+            // all-masked query row: defined as zero, never 0/0 = NaN
+            out_row.iter_mut().for_each(|o| *o = 0.0);
+        }
+    }
+}
+
+/// Flush one chunk's profiling counters (shared by the fused drivers;
+/// mirrors the per-chunk flush in [`flash_sdpa_rows`]).
+fn flush_chunk_profile(rows: usize, prof: &RowProfile) {
+    if crate::trace::profiling() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = crate::trace::kernel_profile();
+        p.chunks.fetch_add(1, Relaxed);
+        p.rows.fetch_add(rows as u64, Relaxed);
+        p.key_blocks_visited.fetch_add(prof.blocks_visited, Relaxed);
+        p.key_blocks_skipped.fetch_add(prof.blocks_skipped, Relaxed);
+    }
+}
+
+/// Flush one call's profiling summary (shared by the fused drivers).
+fn flush_call_profile(threads: usize, scratch: usize) {
+    if crate::trace::profiling() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let p = crate::trace::kernel_profile();
+        p.calls.fetch_add(1, Relaxed);
+        p.participants.fetch_add(threads as u64, Relaxed);
+        p.scratch_bytes.fetch_add(scratch as u64, Relaxed);
+    }
+}
+
+/// Fused key-side driver behind the [`KvRowSource::RawPose`] dispatch in
+/// [`flash_sdpa_rows`]: projected queries in, attended o~ out, k/v
+/// projected per block into per-thread scratch.
+#[allow(clippy::too_many_arguments)]
+fn fused_rows(
+    qt: &[f32],
+    kv: &RawPoseKv<'_>,
+    tq: &[i32],
+    tk: &[i32],
+    c: usize,
+    scale: f64,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) -> usize {
+    let n = tq.len();
+    let m = tk.len();
+    if n == 0 {
+        return 0;
+    }
+    let blocks = key_blocks(tk, cfg.block_m);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    let block_m = cfg.block_m.min(m.max(1));
+    let attend_t0 = crate::trace::enabled().then(std::time::Instant::now);
+
+    let threads = run_chunked(n, ROWS_PER_TASK, cfg.threads, &|lo, hi| {
+        FUSED_SCRATCH.with(|cell| {
+            let _mem = crate::obs::alloc::MemScope::enter("kernel_scratch");
+            let mut sc = cell.borrow_mut();
+            sc.ensure(hi - lo, block_m, c, kv);
+            let mut prof = RowProfile::default();
+            // chunks own disjoint contiguous row ranges of the output
+            let ot = unsafe { out_ptr.slice_mut(lo * c, (hi - lo) * c) };
+            let qt_chunk = &qt[lo * c..hi * c];
+            match cfg.lanes {
+                4 => attend_chunk_fused::<4>(
+                    qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot, &mut prof,
+                ),
+                16 => attend_chunk_fused::<16>(
+                    qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot, &mut prof,
+                ),
+                _ => attend_chunk_fused::<8>(
+                    qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot, &mut prof,
+                ),
+            }
+            flush_chunk_profile(hi - lo, &prof);
+        });
+    });
+    let scratch = threads * cfg.scratch_bytes_per_thread_fused(c, m);
+    flush_call_profile(threads, scratch);
+    if let Some(t0) = attend_t0 {
+        crate::trace::record_since(crate::trace::Stage::Attend, t0, n as u64);
+    }
+    scratch
+}
+
+/// Fully fused Algorithm 2 kernel (DESIGN.md §18): raw (n x d) queries +
+/// query poses in, raw (n x d) outputs out.  Per chunk of query rows the
+/// driver projects q~ into per-thread scratch (line 1), attends through
+/// the fused key-block loop — each visited block's k~/v~ rows projected
+/// on the fly from `kv` (line 2), never materialized — and unprojects o~
+/// back to width d (line 4).  The only transients are the per-thread
+/// scratch tiles ([`KernelConfig::scratch_bytes_per_thread_fused`]);
+/// returns their total bytes across participating threads.
+///
+/// Output is bit-identical to `linear::attention_projected_with` for the
+/// same config: every projected value and every reduction step matches.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_sdpa_fused(
+    q: &[f32],
+    pose_q: &[Pose],
+    kv: &RawPoseKv<'_>,
+    tq: &[i32],
+    tk: &[i32],
+    scale: f64,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) -> usize {
+    let n = tq.len();
+    let m = tk.len();
+    let d = kv.d;
+    let c = kv.proj_width();
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(pose_q.len(), n, "pose_q shape");
+    assert_eq!(out.len(), n * d, "out shape");
+    KvRowSource::RawPose { kv, value_side: false }.assert_shape(c, m, "k");
+    KvRowSource::RawPose { kv, value_side: true }.assert_shape(c, m, "v");
+    let cfg = cfg.normalized();
+    if n == 0 {
+        return 0;
+    }
+    let blocks = key_blocks(tk, cfg.block_m);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    let block_m = cfg.block_m.min(m.max(1));
+    let attend_t0 = crate::trace::enabled().then(std::time::Instant::now);
+
+    let threads = run_chunked(n, ROWS_PER_TASK, cfg.threads, &|lo, hi| {
+        FUSED_SCRATCH.with(|cell| {
+            let _mem = crate::obs::alloc::MemScope::enter("kernel_scratch");
+            let mut sc = cell.borrow_mut();
+            sc.ensure(hi - lo, block_m, c, kv);
+            let chunk = hi - lo;
+            // take the q~/o~ tiles out of the scratch so the chunk body
+            // can borrow the rest of it mutably alongside them
+            let mut qtile = std::mem::take(&mut sc.qt);
+            let mut otile = std::mem::take(&mut sc.ot);
+            for (r, i) in (lo..hi).enumerate() {
+                proj::project_q_row_into(
+                    kv.method,
+                    &q[i * d..(i + 1) * d],
+                    &pose_q[i],
+                    kv.scales,
+                    kv.fourier_f,
+                    kv.pref,
+                    &mut sc.krow,
+                );
+                qtile[r * c..(r + 1) * c].copy_from_slice(&sc.krow);
+            }
+            let mut prof = RowProfile::default();
+            {
+                let qt_chunk = &qtile[..chunk * c];
+                let ot_chunk = &mut otile[..chunk * c];
+                match cfg.lanes {
+                    4 => attend_chunk_fused::<4>(
+                        qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot_chunk,
+                        &mut prof,
+                    ),
+                    16 => attend_chunk_fused::<16>(
+                        qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot_chunk,
+                        &mut prof,
+                    ),
+                    _ => attend_chunk_fused::<8>(
+                        qt_chunk, &tq[lo..hi], kv, tk, c, scale, &blocks, &mut sc, ot_chunk,
+                        &mut prof,
+                    ),
+                }
+            }
+            for (r, i) in (lo..hi).enumerate() {
+                proj::unproject_o_row_into(
+                    kv.method,
+                    &otile[r * c..(r + 1) * c],
+                    &pose_q[i],
+                    kv.scales,
+                    kv.fourier_f,
+                    &mut sc.krow,
+                );
+                let out_row = unsafe { out_ptr.slice_mut(i * d, d) };
+                out_row.copy_from_slice(&sc.krow);
+            }
+            sc.qt = qtile;
+            sc.ot = otile;
+            flush_chunk_profile(hi - lo, &prof);
+        });
+    });
+    let scratch = threads * cfg.scratch_bytes_per_thread_fused(c, m);
+    flush_call_profile(threads, scratch);
+    if let Some(t0) = attend_t0 {
+        crate::trace::record_since(crate::trace::Stage::Attend, t0, n as u64);
+    }
+    scratch
+}
+
 /// Blocked, multithreaded flash SDPA over [`KvRowSource`] k/v rows (see
 /// module docs).  Same masking/softmax contract as [`flash_sdpa_scalar`];
 /// returns the total transient scratch bytes of the participating worker
@@ -479,6 +986,27 @@ pub fn flash_sdpa_rows(
     if n == 0 {
         return 0;
     }
+    // raw-pose sources take the fused block driver: projecting row-by-row
+    // through the generic `row()` would rebuild quadrature scratch per
+    // read, while the fused driver projects each key block once per chunk
+    if let Some((kvk, k_side)) = k.raw_pose() {
+        let (kvv, v_side) = v
+            .raw_pose()
+            .expect("a raw-pose k source requires a raw-pose v source");
+        assert!(
+            std::ptr::eq(kvk, kvv),
+            "raw-pose k and v must view the same RawPoseKv"
+        );
+        assert!(
+            !k_side && v_side,
+            "k must be the key side and v the value side of the pair"
+        );
+        return fused_rows(q, kvk, tq, tk, c, scale, out, &cfg);
+    }
+    assert!(
+        v.raw_pose().is_none(),
+        "a raw-pose v source requires a raw-pose k source"
+    );
     let quantized = k.is_quantized() || v.is_quantized();
     let blocks = key_blocks(tk, cfg.block_m);
     let out_ptr = SendPtr::new(out.as_mut_ptr());
@@ -863,5 +1391,238 @@ mod tests {
             &cfg,
         );
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn malformed_kernel_env_falls_back_to_defaults() {
+        // malformed values behave exactly like unset ones (no panic, same
+        // defaults), so this test cannot perturb the process-wide Default
+        // OnceLock even when other tests resolve it concurrently
+        for bad in ["abc", "", " ", "0", "-3", "1.5", "8x"] {
+            std::env::set_var("SE2ATTN_KERNEL_BLOCK_M", bad);
+            std::env::set_var("SE2ATTN_KERNEL_LANES", bad);
+            std::env::set_var("SE2ATTN_KERNEL_THREADS", bad);
+            let cfg = KernelConfig::from_env();
+            assert_eq!(cfg.block_m, KernelConfig::DEFAULT_BLOCK_M, "{bad:?}");
+            assert_eq!(cfg.lanes, KernelConfig::DEFAULT_LANES, "{bad:?}");
+            assert_eq!(cfg.threads, default_workers().clamp(1, 32), "{bad:?}");
+        }
+        std::env::remove_var("SE2ATTN_KERNEL_BLOCK_M");
+        std::env::remove_var("SE2ATTN_KERNEL_LANES");
+        std::env::remove_var("SE2ATTN_KERNEL_THREADS");
+    }
+
+    #[test]
+    fn autotune_is_cached_and_normalized() {
+        let a = KernelConfig::autotune();
+        let b = KernelConfig::autotune();
+        assert_eq!(a, b, "autotune must return one config per process");
+        assert_eq!(a, a.normalized(), "autotuned config must be normalized");
+        assert!(matches!(a.lanes, 4 | 8 | 16));
+        assert!(a.block_m >= 1);
+        assert!((1..=32).contains(&a.threads));
+    }
+
+    #[test]
+    fn autotuned_config_is_bit_identical_to_explicit() {
+        // the tuner only picks WHICH shape runs; for a fixed shape the
+        // kernel is a pure function of its inputs, so an autotuned run
+        // must match an explicit-config run bit for bit
+        let mut rng = Rng::new(4040);
+        let (n, m, c) = (19, 41, 24);
+        let (q, k, v, tq, tk) = rand_inputs(&mut rng, n, m, c, 4);
+        let tuned = KernelConfig::autotune();
+        let explicit = KernelConfig::fixed(tuned.block_m, tuned.lanes, tuned.threads);
+        let a = run_blocked(&q, &k, &v, &tq, &tk, c, &tuned);
+        let b = run_blocked(&q, &k, &v, &tq, &tk, c, &explicit);
+        assert_eq!(a, b);
+        // and thread count still never changes bits
+        let t1 = run_blocked(&q, &k, &v, &tq, &tk, c, &KernelConfig::fixed(tuned.block_m, tuned.lanes, 1));
+        assert_eq!(a, t1);
+    }
+
+    fn raw_kv_case(
+        rng: &mut Rng,
+        d: usize,
+        n: usize,
+        m: usize,
+    ) -> (
+        Vec<f32>,
+        Vec<f32>,
+        Vec<f32>,
+        Vec<crate::geometry::Pose>,
+        Vec<crate::geometry::Pose>,
+        Vec<i32>,
+        Vec<i32>,
+    ) {
+        use crate::geometry::Pose;
+        let gen = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let q = gen(rng, n * d);
+        let k = gen(rng, m * d);
+        let v = gen(rng, m * d);
+        let pose = |rng: &mut Rng| {
+            Pose::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), rng.range(-3.1, 3.1))
+        };
+        let pq: Vec<Pose> = (0..n).map(|_| pose(rng)).collect();
+        let pk: Vec<Pose> = (0..m).map(|_| pose(rng)).collect();
+        let mut tq: Vec<i32> = (0..n).map(|_| rng.int_range(0, 4) as i32).collect();
+        let tk: Vec<i32> = (0..m).map(|_| rng.int_range(0, 4) as i32).collect();
+        tq[0] = -100; // an all-masked query row rides along
+        (q, k, v, pq, pk, tq, tk)
+    }
+
+    const RAW_METHODS: [(Method, usize, usize); 4] = [
+        (Method::Abs, 8, 0),
+        (Method::Rope2d, 8, 0),
+        (Method::Se2Rep, 9, 0),
+        (Method::Se2Fourier, 12, 4),
+    ];
+
+    #[test]
+    fn raw_pose_row_source_is_bit_identical_to_preprojected() {
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(4242);
+        for (method, d, f) in RAW_METHODS {
+            let (n, m) = (13usize, 29usize);
+            let (_q, k, v, _pq, pk, tq, tk) = raw_kv_case(&mut rng, d, n, m);
+            let kv = RawPoseKv {
+                k: &k,
+                v: &v,
+                poses: &pk,
+                method,
+                d,
+                fourier_f: f,
+                scales: &scales,
+                pref: 1.1,
+            };
+            let c = kv.proj_width();
+            // materialize k~/v~ through the exact same pair projection
+            let mut kt = vec![0.0f32; m * c];
+            let mut vt = vec![0.0f32; m * c];
+            let mut se2f = None;
+            let (mut kr, mut vr) = (Vec::new(), Vec::new());
+            for j in 0..m {
+                kv.project_pair_into(j, &mut se2f, &mut kr, &mut vr);
+                kt[j * c..(j + 1) * c].copy_from_slice(&kr);
+                vt[j * c..(j + 1) * c].copy_from_slice(&vr);
+            }
+            let qt: Vec<f32> = (0..n * c).map(|_| rng.normal() as f32).collect();
+            let scale = 1.0 / (c as f64).sqrt();
+            let cfg = KernelConfig::fixed(5, 8, 3);
+            let mut want = vec![0.0f32; n * c];
+            flash_sdpa_blocked(&qt, &kt, &vt, &tq, &tk, c, scale, &mut want, &cfg);
+            let mut got = vec![f32::NAN; n * c];
+            flash_sdpa_rows(
+                &qt,
+                KvRowSource::RawPose { kv: &kv, value_side: false },
+                KvRowSource::RawPose { kv: &kv, value_side: true },
+                &tq,
+                &tk,
+                c,
+                scale,
+                &mut got,
+                &cfg,
+            );
+            assert_eq!(want, got, "{method:?}: fused block driver must be bitwise");
+        }
+    }
+
+    #[test]
+    fn fused_entry_point_matches_project_then_attend_bitwise() {
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(777);
+        for (method, d, f) in RAW_METHODS {
+            let (n, m) = (11usize, 23usize);
+            let (q, k, v, pq, pk, tq, tk) = raw_kv_case(&mut rng, d, n, m);
+            let cdim = match method {
+                Method::Se2Fourier => (4 * f + 2) * (d / 6),
+                _ => d,
+            };
+            let pref = ((cdim as f64) / (d as f64)).powf(0.25) as f32;
+            let kv = RawPoseKv {
+                k: &k,
+                v: &v,
+                poses: &pk,
+                method,
+                d,
+                fourier_f: f,
+                scales: &scales,
+                pref,
+            };
+            let c = kv.proj_width();
+            assert_eq!(c, cdim);
+            // explicit project -> blocked attend -> unproject
+            let mut qt = vec![0.0f32; n * c];
+            let mut row = Vec::new();
+            for i in 0..n {
+                proj::project_q_row_into(
+                    method, &q[i * d..(i + 1) * d], &pq[i], &scales, f, pref, &mut row,
+                );
+                qt[i * c..(i + 1) * c].copy_from_slice(&row);
+            }
+            let mut kt = vec![0.0f32; m * c];
+            let mut vt = vec![0.0f32; m * c];
+            let mut se2f = None;
+            let (mut kr, mut vr) = (Vec::new(), Vec::new());
+            for j in 0..m {
+                kv.project_pair_into(j, &mut se2f, &mut kr, &mut vr);
+                kt[j * c..(j + 1) * c].copy_from_slice(&kr);
+                vt[j * c..(j + 1) * c].copy_from_slice(&vr);
+            }
+            let scale = 1.0 / (c as f64).sqrt();
+            let cfg = KernelConfig::fixed(7, 8, 2);
+            let mut ot = vec![0.0f32; n * c];
+            flash_sdpa_blocked(&qt, &kt, &vt, &tq, &tk, c, scale, &mut ot, &cfg);
+            let mut want = vec![0.0f32; n * d];
+            for i in 0..n {
+                proj::unproject_o_row_into(
+                    method, &ot[i * c..(i + 1) * c], &pq[i], &scales, f, &mut row,
+                );
+                want[i * d..(i + 1) * d].copy_from_slice(&row);
+            }
+            // fused: one call, no projected intermediates
+            let mut got = vec![f32::NAN; n * d];
+            flash_sdpa_fused(&q, &pq, &kv, &tq, &tk, scale, &mut got, &cfg);
+            assert_eq!(want, got, "{method:?}: fully fused path must be bitwise");
+            // bit-stable across thread counts
+            for threads in [1usize, 4, 8] {
+                let mut t = vec![f32::NAN; n * d];
+                flash_sdpa_fused(
+                    &q,
+                    &pq,
+                    &kv,
+                    &tq,
+                    &tk,
+                    scale,
+                    &mut t,
+                    &KernelConfig::fixed(7, 8, threads),
+                );
+                assert_eq!(got, t, "{method:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_scratch_accounting_is_o_block_c_per_thread() {
+        let cfg = KernelConfig::fixed(64, 8, 4);
+        let chunk = super::ROWS_PER_TASK;
+        assert_eq!(
+            cfg.scratch_bytes_per_thread_fused(100, 1000),
+            (64 + 2 * chunk + chunk * 100) * 8
+                + (2 * chunk * 100 + 2 * 64 * 100 + 4 * 100) * 4
+        );
+        // block capped by m
+        assert_eq!(
+            cfg.scratch_bytes_per_thread_fused(100, 16),
+            (16 + 2 * chunk + chunk * 100) * 8
+                + (2 * chunk * 100 + 2 * 16 * 100 + 4 * 100) * 4
+        );
+        // constant in m beyond the cap — the linear-memory claim per thread
+        assert_eq!(
+            cfg.scratch_bytes_per_thread_fused(100, 1_000),
+            cfg.scratch_bytes_per_thread_fused(100, 1_000_000)
+        );
     }
 }

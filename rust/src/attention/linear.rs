@@ -13,9 +13,19 @@
 use crate::config::Method;
 use crate::geometry::Pose;
 
-use super::kernel::{flash_sdpa_blocked, flash_sdpa_scalar, KernelConfig};
-use super::projections as proj;
+use super::kernel::{flash_sdpa_blocked, flash_sdpa_fused, flash_sdpa_scalar, KernelConfig};
+use super::projections::{self as proj, RawPoseKv};
 use super::{AttnOutput, AttnProblem};
+
+/// Query-row threshold below which [`attention_with`] takes the fused
+/// path.  Fusion re-projects each key block once per query *chunk*
+/// (`kernel::ROWS_PER_TASK` rows), so its projection work scales with
+/// `ceil(n / 8) * m` versus project-then-attend's `n + m`: at decode
+/// shapes (n ≤ chunk ⇒ exactly one projection pass over the keys) fusion
+/// strictly wins by never materializing the O(m·c) k~/v~ tensors, while
+/// at prefill shapes the recompute factor makes the materialized path
+/// faster.  See DESIGN.md §18.
+pub const FUSED_MAX_QUERY_ROWS: usize = 16;
 
 /// The scalar flash-SDPA oracle, re-exported under its historical name so
 /// callers of `linear::flash_sdpa` keep compiling (the blocked kernel
@@ -63,6 +73,13 @@ pub struct Projected {
 }
 
 impl Projected {
+    /// Bytes held by the materialized q~/k~/v~ tensors.  This is the
+    /// projection-intermediate cost of the project-then-attend path only:
+    /// the fused path ([`attention_fused_with`]) never builds a
+    /// `Projected` and reports **zero** projection-intermediate bytes —
+    /// its entire transient footprint is the O(block_m·c) per-thread
+    /// kernel scratch measured under the `obs` allocator's
+    /// `kernel_scratch` scope.
     pub fn bytes(&self) -> usize {
         (self.qt.len() + self.kt.len() + self.vt.len()) * std::mem::size_of::<f32>()
     }
@@ -202,14 +219,33 @@ fn unproject(p: &AttnProblem, ot: &[f32], c: usize) -> Vec<f32> {
 }
 
 /// Algorithm 2 with the default kernel configuration (env-overridable —
-/// see [`KernelConfig`]).  Linear transient memory: three projected
-/// tensors of width c plus O(c) online-softmax state per worker thread.
+/// see [`KernelConfig`]).  Transient memory is linear in N + M at worst
+/// (project-then-attend) and O(block_m·c) per thread at best (fused
+/// decode shapes) — see [`attention_with`] for the routing rule.
 pub fn attention(p: &AttnProblem) -> AttnOutput {
     attention_with(p, &KernelConfig::default())
 }
 
-/// Algorithm 2 over the blocked multithreaded flash kernel.
+/// Algorithm 2 over the blocked multithreaded flash kernel, routing
+/// between the fused and project-then-attend executions by query count:
+/// `n <= FUSED_MAX_QUERY_ROWS` (decode / short-burst shapes) takes
+/// [`attention_fused_with`], everything else takes
+/// [`attention_projected_with`].  The two are bit-identical for a given
+/// `{block_m, lanes}`, so routing never changes results — only the
+/// transient-memory / recompute trade (DESIGN.md §18).
 pub fn attention_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
+    if p.n() <= FUSED_MAX_QUERY_ROWS {
+        attention_fused_with(p, kcfg)
+    } else {
+        attention_projected_with(p, kcfg)
+    }
+}
+
+/// Algorithm 2, project-then-attend: materialize q~/k~/v~ once, then run
+/// the blocked flash kernel over the projected tensors.  Cheapest in
+/// compute (each key row projected exactly once regardless of n) but
+/// carries the O((n + 2m)·c) projection intermediates in its peak.
+pub fn attention_projected_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
     p.validate();
     let prj = project(p);
     let n = p.n();
@@ -225,6 +261,41 @@ pub fn attention_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
     AttnOutput {
         out,
         peak_temp_bytes: peak,
+    }
+}
+
+/// Algorithm 2, fused: phi_q q, phi_k k/v, and the o~ unprojection are all
+/// computed inside the kernel's per-chunk loops, so **no** projected
+/// tensor is ever allocated — `peak_temp_bytes` is exactly the per-thread
+/// kernel scratch (O(block_m·c) per participating worker, constant in n
+/// and m).  Bit-identical to [`attention_projected_with`] for the same
+/// kernel config.
+pub fn attention_fused_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
+    p.validate();
+    let (n, d, f) = (p.n(), p.d, p.fourier_f);
+    let c = proj_dim(p.method, d, f);
+    let pref = ((c as f64) / (d as f64)).powf(0.25) as f32;
+    let eff_scale = match p.method {
+        Method::Se2Fourier => 1.0 / (c as f64).sqrt(),
+        _ => 1.0 / (d as f64).sqrt(),
+    };
+    let kv = RawPoseKv {
+        k: p.k,
+        v: p.v,
+        poses: p.pose_k,
+        method: p.method,
+        d,
+        fourier_f: f,
+        scales: p.scales,
+        pref,
+    };
+    let mut out = vec![0.0f32; n * d];
+    let kernel_scratch = flash_sdpa_fused(p.q, p.pose_q, &kv, p.tq, p.tk, eff_scale, &mut out, kcfg);
+    AttnOutput {
+        out,
+        // Zero projection intermediates: the output buffer is the result,
+        // not a transient, so the fused peak is kernel scratch alone.
+        peak_temp_bytes: kernel_scratch,
     }
 }
 
@@ -354,6 +425,112 @@ mod tests {
             let (o1, o2) = (run(&poses), run(&shifted));
             crate::proplite::all_close_f32(&o1, &o2, 5e-3, "invariance")
         });
+    }
+
+    #[test]
+    fn fused_path_matches_scalar_reference_ragged() {
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(90210);
+        for (method, d) in [
+            (Method::Abs, 8),
+            (Method::Rope2d, 8),
+            (Method::Se2Rep, 9),
+            (Method::Se2Fourier, 12),
+        ] {
+            let (q, k, v, pq, pk, tq, tk) =
+                crate::attention::tests::random_problem_data(&mut rng, 9, 31, d, 1.5, 3);
+            let p = AttnProblem {
+                method,
+                d,
+                fourier_f: 8,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            let want = attention_ref(&p).out;
+            let got = attention_fused_with(&p, &KernelConfig::fixed(7, 8, 3)).out;
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-5, "{method:?} [{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn routing_is_bit_identical_to_both_executions() {
+        // n <= FUSED_MAX_QUERY_ROWS routes fused; above routes projected.
+        // Either way the result must be bitwise what the explicit entry
+        // point produces, and the two entry points must agree bitwise.
+        let scales = [1.0, 0.5];
+        let mut rng = Rng::new(777);
+        let d = 12;
+        let cfg = KernelConfig::fixed(6, 8, 2);
+        for n in [FUSED_MAX_QUERY_ROWS, FUSED_MAX_QUERY_ROWS + 1] {
+            let (q, k, v, pq, pk, tq, tk) =
+                crate::attention::tests::random_problem_data(&mut rng, n, 25, d, 1.5, 3);
+            let p = AttnProblem {
+                method: Method::Se2Fourier,
+                d,
+                fourier_f: 6,
+                scales: &scales,
+                q: &q,
+                k: &k,
+                v: &v,
+                pose_q: &pq,
+                pose_k: &pk,
+                tq: &tq,
+                tk: &tk,
+            };
+            let routed = attention_with(&p, &cfg);
+            let fused = attention_fused_with(&p, &cfg);
+            let projected = attention_projected_with(&p, &cfg);
+            assert_eq!(fused.out, projected.out, "n={n}: executions diverge");
+            assert_eq!(routed.out, fused.out, "n={n}");
+            if n <= FUSED_MAX_QUERY_ROWS {
+                assert_eq!(routed.peak_temp_bytes, fused.peak_temp_bytes);
+            } else {
+                assert_eq!(routed.peak_temp_bytes, projected.peak_temp_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_peak_has_zero_projection_intermediates() {
+        let mut rng = Rng::new(31337);
+        let d = 12;
+        let (n, m) = (8, 512);
+        let (q, k, v, pq, pk, tq, tk) =
+            crate::attention::tests::random_problem_data(&mut rng, n, m, d, 1.5, 3);
+        let p = AttnProblem {
+            method: Method::Se2Fourier,
+            d,
+            fourier_f: 8,
+            scales: &[1.0, 0.5],
+            q: &q,
+            k: &k,
+            v: &v,
+            pose_q: &pq,
+            pose_k: &pk,
+            tq: &tq,
+            tk: &tk,
+        };
+        let cfg = KernelConfig::fixed(32, 8, 2);
+        let c = proj_dim(p.method, d, p.fourier_f);
+        let fused = attention_fused_with(&p, &cfg);
+        let projected = attention_projected_with(&p, &cfg);
+        // Project-then-attend carries the k~/v~ tensors (>= 2*m*c f32);
+        // the fused peak is per-thread scratch only — constant in m.
+        assert!(projected.peak_temp_bytes >= 2 * m * c * 4);
+        assert!(
+            fused.peak_temp_bytes <= 2 * cfg.scratch_bytes_per_thread_fused(c, m),
+            "fused peak {} exceeds modeled scratch",
+            fused.peak_temp_bytes
+        );
+        assert!(fused.peak_temp_bytes * 4 < projected.peak_temp_bytes);
     }
 
     #[test]

@@ -89,6 +89,35 @@ pub fn linear_bytes(
     }
 }
 
+/// Algorithm 2 over the fused kernel
+/// ([`crate::attention::kernel::flash_sdpa_fused`]): projections are
+/// computed inside the key-block loop, so the projected-intermediate term
+/// of [`linear_bytes`] vanishes entirely.  The transient working set is
+/// the per-thread kernel scratch — one (block_m x c) k~/v~ tile pair plus
+/// O(chunk·c) online-softmax state — which is constant in both n and m.
+/// `threads` is the number of participating workers (at most
+/// `ceil(n / chunk)`), matching the kernel's own
+/// `scratch_bytes_per_thread_fused` accounting.
+pub fn linear_fused_bytes(
+    method: Method,
+    n: usize,
+    m: usize,
+    d: usize,
+    fourier_f: usize,
+    block_m: usize,
+    threads: usize,
+) -> MemoryEstimate {
+    use crate::attention::kernel::{KernelConfig, ROWS_PER_TASK};
+    let c = proj_dim(method, d, fourier_f);
+    let cfg = KernelConfig::fixed(block_m, 8, threads.max(1));
+    let participating = threads.max(1).min(n.div_ceil(ROWS_PER_TASK).max(1));
+    MemoryEstimate {
+        input_bytes: input_bytes(n, m, d, BYTES_F32),
+        // Zero projected intermediates — scratch only.
+        transient_bytes: participating * cfg.scratch_bytes_per_thread_fused(c, m),
+    }
+}
+
 /// Bytes of one cached incremental-decode row pair at a storage
 /// precision: projected `phi_k k` and `phi_k v` (width c each, with
 /// per-row scale/offset when quantized) plus the visibility timestep
@@ -201,6 +230,32 @@ mod tests {
         let ratio = lin_fourier.transient_bytes as f64
             / lin_rope.transient_bytes as f64;
         assert!((ratio - 50.0 / 6.0).abs() < 0.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fused_transients_are_constant_in_window() {
+        // The fused path's transient working set must not grow with m
+        // beyond the block_m cap — that is the whole point of computing
+        // phi_k inside the key loop instead of materializing k~/v~.
+        let a = linear_fused_bytes(Method::Se2Fourier, 8, 512, 48, 12, 64, 4).transient_bytes;
+        let b = linear_fused_bytes(Method::Se2Fourier, 8, 4096, 48, 12, 64, 4).transient_bytes;
+        assert_eq!(a, b, "fused transients grew with m: {a} vs {b}");
+        // and sits far below project-then-attend's k~/v~ intermediates
+        let projected = linear_bytes(Method::Se2Fourier, 8, 4096, 48, 12, BYTES_F32)
+            .transient_bytes;
+        assert!(b * 8 < projected, "fused {b} vs projected {projected}");
+    }
+
+    #[test]
+    fn fused_transients_count_participating_workers_only() {
+        // n=8 is a single ROWS_PER_TASK chunk: only one worker ever holds
+        // scratch, no matter how many threads the config names.
+        let one = linear_fused_bytes(Method::Se2Fourier, 8, 1024, 48, 12, 64, 1).transient_bytes;
+        let many = linear_fused_bytes(Method::Se2Fourier, 8, 1024, 48, 12, 64, 16).transient_bytes;
+        assert_eq!(one, many);
+        // n=64 across 16 threads: 8 chunks -> 8 participants.
+        let wide = linear_fused_bytes(Method::Se2Fourier, 64, 1024, 48, 12, 64, 16).transient_bytes;
+        assert_eq!(wide, 8 * one);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! All functions operate in place on one token's per-head feature slice of
 //! width d (blocks cycled over the scale ladder).
 
+use crate::config::Method;
 use crate::fourier::{coefficients, eval_basis, Axis, QuadratureTable};
 use crate::geometry::{rotate_pair, Pose};
 
@@ -324,6 +325,220 @@ pub fn se2f_unproject_o(
     }
 }
 
+/// A raw (un-projected) key/value tensor view plus per-token poses: the
+/// row source the fused kernel path consumes
+/// ([`crate::attention::kernel::flash_sdpa_fused`]).  Instead of
+/// materializing the m x c projected k~/v~ tensors of Algorithm 2 line 2,
+/// the fused driver projects each key block on the fly into O(block_m * c)
+/// per-thread scratch via [`RawPoseKv::project_pair_into`] — the same
+/// projection functions `linear::project` runs, in the same order, so the
+/// fused output is bit-identical to project-then-attend (DESIGN.md §18).
+#[derive(Debug)]
+pub struct RawPoseKv<'a> {
+    /// Raw key rows, row-major (m x d).
+    pub k: &'a [f32],
+    /// Raw value rows, row-major (m x d).
+    pub v: &'a [f32],
+    /// One pose per key/value row.
+    pub poses: &'a [Pose],
+    pub method: Method,
+    /// Raw per-head width.
+    pub d: usize,
+    /// Fourier order F (se2fourier only; ignored elsewhere).
+    pub fourier_f: usize,
+    pub scales: &'a [f64],
+    /// The (c/d)^(1/4) Alg. 2 prefactor applied to k~ (se2fourier only;
+    /// pass 1.0 for the width-preserving methods).
+    pub pref: f32,
+}
+
+impl<'a> RawPoseKv<'a> {
+    /// Number of key/value rows.
+    pub fn len(&self) -> usize {
+        self.poses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.poses.is_empty()
+    }
+
+    /// Projected per-head width c (matches `linear::proj_dim`, computed
+    /// inline to keep this module free of a `linear` dependency).
+    pub fn proj_width(&self) -> usize {
+        match self.method {
+            Method::Se2Fourier => se2f_block_width(self.fourier_f) * (self.d / 6),
+            _ => self.d,
+        }
+    }
+
+    /// Project key row `j` *and* value row `j` in one pass (the se2fourier
+    /// Gamma/Lambda coefficients depend only on the pose, so the pair costs
+    /// barely more than one side).  Element-identical to the rows
+    /// `linear::project` would have written at index `j`.
+    pub fn project_pair_into(
+        &self,
+        j: usize,
+        se2f: &mut Option<Se2fKeyScratch>,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let d = self.d;
+        let kr = &self.k[j * d..(j + 1) * d];
+        let vr = &self.v[j * d..(j + 1) * d];
+        match self.method {
+            Method::Abs => {
+                k_out.clear();
+                k_out.extend_from_slice(kr);
+                v_out.clear();
+                v_out.extend_from_slice(vr);
+            }
+            Method::Rope2d => {
+                k_out.clear();
+                k_out.extend_from_slice(kr);
+                v_out.clear();
+                v_out.extend_from_slice(vr);
+                rope2d_project(k_out, &self.poses[j], self.scales);
+                rope2d_project(v_out, &self.poses[j], self.scales);
+            }
+            Method::Se2Rep => {
+                k_out.clear();
+                k_out.extend_from_slice(kr);
+                v_out.clear();
+                v_out.extend_from_slice(vr);
+                se2rep_project_k(k_out, &self.poses[j], self.scales);
+                se2rep_project_k(v_out, &self.poses[j], self.scales);
+            }
+            Method::Se2Fourier => {
+                let scratch =
+                    se2f.get_or_insert_with(|| Se2fKeyScratch::new(self.fourier_f));
+                se2f_project_kv_with(
+                    scratch,
+                    kr,
+                    vr,
+                    &self.poses[j],
+                    self.scales,
+                    self.pref,
+                    k_out,
+                    v_out,
+                );
+            }
+        }
+    }
+
+    /// Project one side of row `j` (cold path for the generic
+    /// [`crate::attention::quant::KvRowSource::row`] contract; the fused
+    /// driver always uses the pair form above).  Element-identical to the
+    /// corresponding half of [`Self::project_pair_into`]:
+    /// `se2f_project_k_with` emits the same expressions as the kv pair
+    /// loop, and values carry prefactor 1.0.
+    pub fn project_row_into(
+        &self,
+        j: usize,
+        value_side: bool,
+        se2f: &mut Option<Se2fKeyScratch>,
+        out: &mut Vec<f32>,
+    ) {
+        let d = self.d;
+        let side = if value_side { self.v } else { self.k };
+        let row = &side[j * d..(j + 1) * d];
+        match self.method {
+            Method::Abs => {
+                out.clear();
+                out.extend_from_slice(row);
+            }
+            Method::Rope2d => {
+                out.clear();
+                out.extend_from_slice(row);
+                rope2d_project(out, &self.poses[j], self.scales);
+            }
+            Method::Se2Rep => {
+                out.clear();
+                out.extend_from_slice(row);
+                se2rep_project_k(out, &self.poses[j], self.scales);
+            }
+            Method::Se2Fourier => {
+                let scratch =
+                    se2f.get_or_insert_with(|| Se2fKeyScratch::new(self.fourier_f));
+                let pref = if value_side { 1.0 } else { self.pref };
+                se2f_project_k_with(scratch, row, &self.poses[j], self.scales, pref, out);
+            }
+        }
+    }
+}
+
+/// Project one raw query row (width d) to q~ (width c), dispatching on
+/// `method` exactly as `linear::project` does per row — the fused kernel's
+/// query-side half (Alg. 2 line 1).  `pref` is the (c/d)^(1/4) prefactor
+/// (se2fourier only; ignored elsewhere).
+#[allow(clippy::too_many_arguments)]
+pub fn project_q_row_into(
+    method: Method,
+    row: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    fourier_f: usize,
+    pref: f32,
+    out: &mut Vec<f32>,
+) {
+    match method {
+        Method::Abs => {
+            out.clear();
+            out.extend_from_slice(row);
+        }
+        Method::Rope2d => {
+            out.clear();
+            out.extend_from_slice(row);
+            rope2d_project(out, pose, scales);
+        }
+        Method::Se2Rep => {
+            out.clear();
+            out.extend_from_slice(row);
+            se2rep_project_q(out, pose, scales);
+        }
+        Method::Se2Fourier => {
+            se2f_project_q(row, pose, scales, fourier_f, pref, out);
+        }
+    }
+}
+
+/// Map one attended o~ row (width c) back to width d, dispatching on
+/// `method` exactly as `linear::unproject` does per row (Alg. 2 line 4).
+pub fn unproject_o_row_into(
+    method: Method,
+    ot_row: &[f32],
+    pose: &Pose,
+    scales: &[f64],
+    fourier_f: usize,
+    out: &mut Vec<f32>,
+) {
+    match method {
+        Method::Abs => {
+            out.clear();
+            out.extend_from_slice(ot_row);
+        }
+        Method::Rope2d => {
+            out.clear();
+            out.extend_from_slice(ot_row);
+            // phi_q(p_n) = rho(-a x_n) blocks: rotate by the negated own
+            // coordinates
+            let neg = Pose {
+                x: -pose.x,
+                y: -pose.y,
+                theta: 0.0,
+            };
+            rope2d_project(out, &neg, scales);
+        }
+        Method::Se2Rep => {
+            out.clear();
+            out.extend_from_slice(ot_row);
+            se2rep_unproject_o(out, pose, scales);
+        }
+        Method::Se2Fourier => {
+            se2f_unproject_o(ot_row, pose, scales, fourier_f, out);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +619,47 @@ mod tests {
                 + q[3] as f64 * r3;
             crate::proplite::close(got, expect, 1e-6, "bilinear form")
         });
+    }
+
+    #[test]
+    fn raw_pose_kv_pair_is_bit_identical_to_single_side() {
+        // the fused hot path projects pairs; the generic row() cold path
+        // projects one side — both must emit the exact same bits
+        let mut rng = Rng::new(77);
+        for (method, d, f) in [
+            (Method::Abs, 8, 0),
+            (Method::Rope2d, 8, 0),
+            (Method::Se2Rep, 9, 0),
+            (Method::Se2Fourier, 12, 5),
+        ] {
+            let m = 5;
+            let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let poses: Vec<Pose> = (0..m).map(|_| rand_pose(&mut rng)).collect();
+            let kv = RawPoseKv {
+                k: &k,
+                v: &v,
+                poses: &poses,
+                method,
+                d,
+                fourier_f: f,
+                scales: &[1.0, 0.5],
+                pref: 1.25,
+            };
+            assert_eq!(kv.len(), m);
+            let mut se2f = None;
+            let (mut kp, mut vp) = (Vec::new(), Vec::new());
+            let mut single = Vec::new();
+            for j in 0..m {
+                kv.project_pair_into(j, &mut se2f, &mut kp, &mut vp);
+                assert_eq!(kp.len(), kv.proj_width(), "{method:?} k width");
+                assert_eq!(vp.len(), kv.proj_width(), "{method:?} v width");
+                kv.project_row_into(j, false, &mut se2f, &mut single);
+                assert_eq!(kp, single, "{method:?} key row {j}");
+                kv.project_row_into(j, true, &mut se2f, &mut single);
+                assert_eq!(vp, single, "{method:?} value row {j}");
+            }
+        }
     }
 
     #[test]

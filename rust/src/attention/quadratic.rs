@@ -107,41 +107,54 @@ pub fn attention_with(p: &AttnProblem, kcfg: &KernelConfig) -> AttnOutput {
     let out_ptr = SendPtr::new(out.as_mut_ptr());
     let scores_ptr = SendPtr::new(scores.as_mut_ptr());
 
+    // Per-thread phi scratch, reused across chunks: like the fused flash
+    // path (DESIGN.md §18), the projected row never hits the allocator on
+    // the steady-state path — the thread-local grows once to d and stays.
+    thread_local! {
+        static PHI_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    }
+
     let body = |lo: usize, hi: usize| {
-        let mut phik = vec![0.0f32; d];
-        for i in lo..hi {
-            let qi = &p.q[i * d..(i + 1) * d];
-            // disjoint per-row slices — the only mutable state
-            let row = unsafe { scores_ptr.slice_mut(i * m, m) };
-            let oi = unsafe { out_ptr.slice_mut(i * d, d) };
-            for j in 0..m {
-                if p.tq[i] < p.tk[j] {
-                    row[j] = f64::NEG_INFINITY;
-                    continue;
-                }
-                let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
-                apply_phi_rel(p.method, &rel, p.scales, &p.k[j * d..(j + 1) * d], &mut phik);
-                let dot: f64 = qi
-                    .iter()
-                    .zip(phik.iter())
-                    .map(|(a, b)| *a as f64 * *b as f64)
-                    .sum();
-                row[j] = dot * inv_sqrt_d;
+        PHI_SCRATCH.with(|cell| {
+            let mut phik = cell.borrow_mut();
+            if phik.len() < d {
+                phik.resize(d, 0.0);
             }
-            crate::linalg::softmax_inplace(row);
-            // o_i = sum_j a_ij phi(rel_ij) v_j   (Alg. 1 line 3)
-            for j in 0..m {
-                let a = row[j];
-                if a == 0.0 {
-                    continue;
+            let phik = &mut phik[..d];
+            for i in lo..hi {
+                let qi = &p.q[i * d..(i + 1) * d];
+                // disjoint per-row slices — the only mutable state
+                let row = unsafe { scores_ptr.slice_mut(i * m, m) };
+                let oi = unsafe { out_ptr.slice_mut(i * d, d) };
+                for j in 0..m {
+                    if p.tq[i] < p.tk[j] {
+                        row[j] = f64::NEG_INFINITY;
+                        continue;
+                    }
+                    let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+                    apply_phi_rel(p.method, &rel, p.scales, &p.k[j * d..(j + 1) * d], phik);
+                    let dot: f64 = qi
+                        .iter()
+                        .zip(phik.iter())
+                        .map(|(a, b)| *a as f64 * *b as f64)
+                        .sum();
+                    row[j] = dot * inv_sqrt_d;
                 }
-                let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
-                apply_phi_rel(p.method, &rel, p.scales, &p.v[j * d..(j + 1) * d], &mut phik);
-                for (o, &pv) in oi.iter_mut().zip(phik.iter()) {
-                    *o += (a * pv as f64) as f32;
+                crate::linalg::softmax_inplace(row);
+                // o_i = sum_j a_ij phi(rel_ij) v_j   (Alg. 1 line 3)
+                for j in 0..m {
+                    let a = row[j];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let rel = relative(p.method, &p.pose_q[i], &p.pose_k[j]);
+                    apply_phi_rel(p.method, &rel, p.scales, &p.v[j * d..(j + 1) * d], phik);
+                    for (o, &pv) in oi.iter_mut().zip(phik.iter()) {
+                        *o += (a * pv as f64) as f32;
+                    }
                 }
             }
-        }
+        })
     };
     let threads = run_chunked(n, ROWS_PER_TASK, kcfg.normalized().threads, &body);
 

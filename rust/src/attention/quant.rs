@@ -423,23 +423,45 @@ impl FeatureRows {
 /// What the blocked flash kernel's key-block loop reads k/v rows from:
 /// either a borrowed f32 matrix (zero-copy — the row is returned as a
 /// subslice, so the f32 path is bit-identical to the pre-abstraction
-/// kernel) or a [`QuantizedRows`] store (the row is dequantized into the
-/// caller's O(c) scratch on the fly).
+/// kernel), a [`QuantizedRows`] store (the row is dequantized into the
+/// caller's O(c) scratch on the fly), or a raw k/v tensor plus poses
+/// ([`RawPoseKv`]) whose rows are phi_k-projected on the fly — the fused
+/// path of DESIGN.md §18, where no m x c projected tensor ever exists.
 #[derive(Clone, Copy, Debug)]
 pub enum KvRowSource<'a> {
     F32(&'a [f32]),
     Quant(&'a QuantizedRows),
+    /// Raw rows + poses, projected per key block by the fused driver.
+    /// `value_side` selects which half of the pair this source reads
+    /// (k~ carries the (c/d)^(1/4) prefactor, v~ does not).
+    RawPose {
+        kv: &'a RawPoseKv<'a>,
+        value_side: bool,
+    },
 }
+
+pub use super::projections::RawPoseKv;
 
 impl<'a> KvRowSource<'a> {
     /// Row `j` as f32: borrowed for f32 sources, dequantized into
-    /// `scratch` for quantized ones.
+    /// `scratch` for quantized ones, projected into `scratch` for
+    /// raw-pose ones.
+    ///
+    /// For [`KvRowSource::RawPose`] this is the *cold* path (it builds a
+    /// fresh se2fourier quadrature scratch per call); the fused kernel
+    /// driver instead projects whole key blocks through
+    /// [`RawPoseKv::project_pair_into`] and never lands here.
     #[inline]
     pub fn row<'s>(&'s self, j: usize, c: usize, scratch: &'s mut Vec<f32>) -> &'s [f32] {
         match self {
             KvRowSource::F32(data) => &data[j * c..(j + 1) * c],
             KvRowSource::Quant(q) => {
                 q.dequant_row_into(j, scratch);
+                scratch
+            }
+            KvRowSource::RawPose { kv, value_side } => {
+                let mut se2f = None;
+                kv.project_row_into(j, *value_side, &mut se2f, scratch);
                 scratch
             }
         }
@@ -451,11 +473,21 @@ impl<'a> KvRowSource<'a> {
         matches!(self, KvRowSource::Quant(_))
     }
 
+    /// The raw-pose view behind this source, if it is one (the blocked
+    /// kernel dispatches such sources to the fused block driver).
+    pub fn raw_pose(&self) -> Option<(&'a RawPoseKv<'a>, bool)> {
+        match self {
+            KvRowSource::RawPose { kv, value_side } => Some((kv, *value_side)),
+            _ => None,
+        }
+    }
+
     /// Number of rows, given the row width `c`.
     pub fn len(&self, c: usize) -> usize {
         match self {
             KvRowSource::F32(data) => data.len() / c.max(1),
             KvRowSource::Quant(q) => q.len(),
+            KvRowSource::RawPose { kv, .. } => kv.len(),
         }
     }
 
@@ -468,6 +500,12 @@ impl<'a> KvRowSource<'a> {
             KvRowSource::Quant(q) => {
                 assert_eq!(q.width(), c, "{what} width");
                 assert_eq!(q.len(), m, "{what} shape");
+            }
+            KvRowSource::RawPose { kv, value_side } => {
+                assert_eq!(kv.proj_width(), c, "{what} projected width");
+                assert_eq!(kv.poses.len(), m, "{what} poses");
+                let side = if *value_side { kv.v } else { kv.k };
+                assert_eq!(side.len(), m * kv.d, "{what} shape");
             }
         }
     }
@@ -650,6 +688,45 @@ mod tests {
             for (a, b) in want.iter().zip(got.iter()) {
                 assert!((a - b).abs() < 5e-3, "{a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn raw_pose_row_source_projects_on_read() {
+        use crate::config::Method;
+        use crate::geometry::Pose;
+        let mut rng = Rng::new(5);
+        let (d, m) = (8, 3);
+        let k: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let poses: Vec<Pose> = (0..m)
+            .map(|_| Pose::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-3.0, 3.0)))
+            .collect();
+        let kv = RawPoseKv {
+            k: &k,
+            v: &v,
+            poses: &poses,
+            method: Method::Rope2d,
+            d,
+            fourier_f: 0,
+            scales: &[1.0, 0.5],
+            pref: 1.0,
+        };
+        let ks = KvRowSource::RawPose { kv: &kv, value_side: false };
+        let vs = KvRowSource::RawPose { kv: &kv, value_side: true };
+        assert!(!ks.is_quantized());
+        assert_eq!(ks.len(d), m);
+        assert!(ks.raw_pose().is_some());
+        ks.assert_shape(d, m, "k");
+        vs.assert_shape(d, m, "v");
+        let mut scratch = Vec::new();
+        for j in 0..m {
+            let mut want = k[j * d..(j + 1) * d].to_vec();
+            crate::attention::projections::rope2d_project(&mut want, &poses[j], &[1.0, 0.5]);
+            assert_eq!(ks.row(j, d, &mut scratch), &want[..], "key row {j}");
+            let mut want_v = v[j * d..(j + 1) * d].to_vec();
+            crate::attention::projections::rope2d_project(&mut want_v, &poses[j], &[1.0, 0.5]);
+            assert_eq!(vs.row(j, d, &mut scratch), &want_v[..], "value row {j}");
         }
     }
 }

@@ -232,6 +232,32 @@ pub fn render_bench_report(
                 ));
                 out.push('\n');
             }
+            let fused: Vec<Vec<String>> = rows
+                .iter()
+                .filter(|r| r.get("bench").and_then(|b| b.as_str()) == Some("fused"))
+                .filter_map(|r| {
+                    let projected =
+                        r.get("projected").and_then(|s| row_num(s, "mean_ns"))?;
+                    let fus = r.get("fused").and_then(|s| row_num(s, "mean_ns"))?;
+                    Some(vec![
+                        format!("{}", row_num(r, "m")? as u64),
+                        format!("{}", row_num(r, "n_new")? as u64),
+                        format!("{:.3}", projected / 1e6),
+                        format!("{:.3}", fus / 1e6),
+                        format!("{:.2}x", row_num(r, "speedup")?),
+                    ])
+                })
+                .collect();
+            if !fused.is_empty() {
+                out.push_str(
+                    "### Fused projection vs project-then-attend (se2fourier decode shapes)\n\n",
+                );
+                out.push_str(&md_table(
+                    &["keys m", "new rows", "project+attend ms", "fused ms", "speedup"],
+                    &fused,
+                ));
+                out.push('\n');
+            }
             let algo: Vec<Vec<String>> = rows
                 .iter()
                 .filter(|r| {
@@ -364,6 +390,166 @@ pub fn render_bench_report(
         }
     }
     out
+}
+
+/// Shape/identity keys that pair a row with its baseline counterpart in
+/// [`compare_bench_reports`].  Everything else in a row is treated as a
+/// measurement, never as identity — so two runs of the same bench matrix
+/// always pair up even when every timing moved.
+const IDENTITY_KEYS: &[&str] = &[
+    "bench",
+    "path",
+    "mode",
+    "method",
+    "kind",
+    "n",
+    "m",
+    "c",
+    "n_new",
+    "window",
+    "threads",
+    "load_factor",
+    "precision",
+];
+
+/// Stable identity string of a bench row (`None` for rows with no
+/// identity fields at all — those are skipped rather than mispaired).
+fn row_identity(row: &Json) -> Option<String> {
+    let mut parts = Vec::new();
+    for k in IDENTITY_KEYS {
+        match row.get(k) {
+            Some(Json::Str(s)) => parts.push(format!("{k}={s}")),
+            Some(Json::Num(x)) => parts.push(format!("{k}={x}")),
+            _ => {}
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join(" "))
+    }
+}
+
+/// Gating direction of a metric key: `Some(true)` when lower is better
+/// (latencies), `Some(false)` when higher is better (throughput and
+/// speedup ratios), `None` for non-gated values (byte counts, identity
+/// fields, offered load — which the harness chooses, not earns).
+fn metric_lower_is_better(key: &str) -> Option<bool> {
+    if key.ends_with("_ms") || key.ends_with("_us") || key.ends_with("_ns") {
+        Some(true)
+    } else if key == "goodput_rps" || key.starts_with("speedup") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Allowed relative loss before the comparison fails: >10% regression in
+/// any gated metric (the CI `bench-regression` job's contract).
+const REGRESSION_TOLERANCE: f64 = 0.10;
+
+/// Gated metrics of one row: `(key, value, lower_is_better)` — top-level
+/// latency/throughput numbers plus every nested stats object's `mean_ns`.
+fn row_metrics(row: &Json) -> Vec<(String, f64, bool)> {
+    let Json::Obj(fields) = row else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for (k, v) in fields {
+        match v {
+            Json::Num(x) if x.is_finite() => {
+                if let Some(lower) = metric_lower_is_better(k) {
+                    out.push((k.clone(), *x, lower));
+                }
+            }
+            Json::Obj(_) => {
+                if let Some(mean) = row_num(v, "mean_ns") {
+                    out.push((format!("{k}.mean_ns"), mean, true));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Diff two `BENCH_*.json` documents (`{"rows": [...]}`): pair rows by
+/// identity, compare every gated metric, and render a markdown delta
+/// table.  Returns `(markdown, regressed)` where `regressed` is true iff
+/// any gated metric moved more than [`REGRESSION_TOLERANCE`] in the bad
+/// direction.  One-sided rows (new in this run, or gone from it) are
+/// reported but never fail the comparison — bench matrices are allowed
+/// to grow.
+pub fn compare_bench_reports(old: &Json, new: &Json) -> (String, bool) {
+    use std::collections::BTreeMap;
+    let index = |doc: &Json| -> BTreeMap<String, Json> {
+        doc_rows(doc)
+            .into_iter()
+            .filter_map(|r| row_identity(r).map(|id| (id, r.clone())))
+            .collect()
+    };
+    let old_rows = index(old);
+    let new_rows = index(new);
+
+    let mut table = Vec::new();
+    let mut notes = Vec::new();
+    let mut regressed = false;
+    for (id, new_row) in &new_rows {
+        let Some(old_row) = old_rows.get(id) else {
+            notes.push(format!("- `{id}`: new row, no baseline"));
+            continue;
+        };
+        let old_metrics: BTreeMap<String, (f64, bool)> = row_metrics(old_row)
+            .into_iter()
+            .map(|(k, v, l)| (k, (v, l)))
+            .collect();
+        for (key, new_val, lower) in row_metrics(new_row) {
+            let Some(&(old_val, _)) = old_metrics.get(&key) else {
+                continue;
+            };
+            if old_val == 0.0 {
+                continue;
+            }
+            let delta = new_val / old_val - 1.0;
+            // loss > 0 means the metric moved in the bad direction
+            let loss = if lower { delta } else { -delta };
+            let bad = loss > REGRESSION_TOLERANCE;
+            regressed |= bad;
+            table.push(vec![
+                id.clone(),
+                key,
+                format!("{old_val:.4}"),
+                format!("{new_val:.4}"),
+                format!("{:+.1}%", delta * 100.0),
+                if bad { "**REGRESSED**".into() } else { "ok".to_string() },
+            ]);
+        }
+    }
+    for id in old_rows.keys() {
+        if !new_rows.contains_key(id) {
+            notes.push(format!("- `{id}`: baseline row missing from this run"));
+        }
+    }
+
+    let mut md = String::from("### Bench comparison (old -> new)\n\n");
+    if table.is_empty() {
+        md.push_str("*No paired rows to compare.*\n");
+    } else {
+        md.push_str(&md_table(
+            &["row", "metric", "old", "new", "delta", "status"],
+            &table,
+        ));
+    }
+    if !notes.is_empty() {
+        md.push('\n');
+        md.push_str(&notes.join("\n"));
+        md.push('\n');
+    }
+    md.push_str(&format!(
+        "\nGate: fail when any gated metric regresses more than {:.0}%.\n",
+        REGRESSION_TOLERANCE * 100.0
+    ));
+    (md, regressed)
 }
 
 /// Fixed-width table printer for paper-style result tables.
@@ -578,6 +764,90 @@ mod tests {
         assert!(md.contains("BENCH_attention.json not found"), "{md}");
         assert!(md.contains("BENCH_decode.json not found"), "{md}");
         assert!(md.contains("BENCH_serving.json not found"), "{md}");
+    }
+
+    fn fused_doc(fused_mean_ns: f64) -> Json {
+        Json::obj(vec![(
+            "rows",
+            Json::Arr(vec![Json::obj(vec![
+                ("bench", Json::Str("fused".into())),
+                ("m", Json::Num(4096.0)),
+                ("n_new", Json::Num(8.0)),
+                (
+                    "projected",
+                    Json::obj(vec![("mean_ns", Json::Num(3.0e6))]),
+                ),
+                ("fused", Json::obj(vec![("mean_ns", Json::Num(fused_mean_ns))])),
+                ("speedup", Json::Num(3.0e6 / fused_mean_ns)),
+            ])]),
+        )])
+    }
+
+    #[test]
+    fn bench_report_renders_fused_section() {
+        let md = render_bench_report(Some(&fused_doc(1.0e6)), None, None);
+        assert!(md.contains("Fused projection vs project-then-attend"), "{md}");
+        assert!(md.contains("| 4096 | 8 | 3.000 | 1.000 | 3.00x |"), "{md}");
+    }
+
+    #[test]
+    fn compare_flags_regressions_over_tolerance_only() {
+        // identical runs: no regression
+        let (md, bad) = compare_bench_reports(&fused_doc(1.0e6), &fused_doc(1.0e6));
+        assert!(!bad, "{md}");
+        assert!(md.contains("fused.mean_ns"), "{md}");
+        // 5% slower: inside the 10% tolerance
+        let (_, bad) = compare_bench_reports(&fused_doc(1.0e6), &fused_doc(1.05e6));
+        assert!(!bad);
+        // 20% slower: regression (both the mean_ns and the derived
+        // speedup cross the gate)
+        let (md, bad) = compare_bench_reports(&fused_doc(1.0e6), &fused_doc(1.2e6));
+        assert!(bad, "{md}");
+        assert!(md.contains("**REGRESSED**"), "{md}");
+        // 20% *faster* is an improvement, not a regression
+        let (_, bad) = compare_bench_reports(&fused_doc(1.0e6), &fused_doc(0.8e6));
+        assert!(!bad);
+    }
+
+    #[test]
+    fn compare_tolerates_one_sided_rows() {
+        let empty = Json::obj(vec![("rows", Json::Arr(vec![]))]);
+        let (md, bad) = compare_bench_reports(&empty, &fused_doc(1.0e6));
+        assert!(!bad, "new rows must not fail the gate: {md}");
+        assert!(md.contains("no baseline"), "{md}");
+        let (md, bad) = compare_bench_reports(&fused_doc(1.0e6), &empty);
+        assert!(!bad, "removed rows must not fail the gate: {md}");
+        assert!(md.contains("missing from this run"), "{md}");
+    }
+
+    #[test]
+    fn compare_pairs_rows_by_identity_not_position() {
+        let two = |a: f64, b: f64| {
+            Json::obj(vec![(
+                "rows",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("bench", Json::Str("fused".into())),
+                        ("m", Json::Num(1024.0)),
+                        ("fused", Json::obj(vec![("mean_ns", Json::Num(a))])),
+                    ]),
+                    Json::obj(vec![
+                        ("bench", Json::Str("fused".into())),
+                        ("m", Json::Num(4096.0)),
+                        ("fused", Json::obj(vec![("mean_ns", Json::Num(b))])),
+                    ]),
+                ]),
+            )])
+        };
+        // same values, opposite row order in the baseline: must pair by
+        // (bench, m) identity and find nothing regressed
+        let old = two(2.0e6, 8.0e6);
+        let new = Json::obj(vec![(
+            "rows",
+            Json::Arr(doc_rows(&two(2.0e6, 8.0e6)).into_iter().rev().cloned().collect()),
+        )]);
+        let (md, bad) = compare_bench_reports(&old, &new);
+        assert!(!bad, "{md}");
     }
 
     #[test]

@@ -18,6 +18,10 @@ pub struct Command {
     pub name: String,
     pub about: String,
     pub args: Vec<ArgSpec>,
+    /// Help text for positional (non `--`) arguments; `None` means the
+    /// command rejects positionals, as every command did before
+    /// `bench-report --compare OLD NEW` needed them.
+    pub free_args: Option<String>,
 }
 
 impl Command {
@@ -26,7 +30,15 @@ impl Command {
             name: name.into(),
             about: about.into(),
             args: Vec::new(),
+            free_args: None,
         }
+    }
+
+    /// Accept positional arguments (collected in order into
+    /// [`Matches::free`]); `help` describes them in `--help` output.
+    pub fn free_args(mut self, help: &str) -> Command {
+        self.free_args = Some(help.into());
+        self
     }
 
     pub fn opt(mut self, name: &str, default: &str, help: &str) -> Command {
@@ -66,9 +78,15 @@ pub struct Matches {
     pub command: String,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    free: Vec<String>,
 }
 
 impl Matches {
+    /// Positional arguments, in order (empty unless the command opted in
+    /// via [`Command::free_args`]).
+    pub fn free(&self) -> &[String] {
+        &self.free
+    }
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
@@ -156,6 +174,9 @@ impl App {
             };
             s.push_str(&format!("  --{:<22} {} [{}]\n", a.name, a.help, d));
         }
+        if let Some(free) = &c.free_args {
+            s.push_str(&format!("\nARGS:\n  {free}\n"));
+        }
         s
     }
 
@@ -187,6 +208,7 @@ impl App {
                 values.insert(a.name.clone(), d.clone());
             }
         }
+        let mut free = Vec::new();
         let mut i = 1;
         while i < argv.len() {
             let tok = &argv[i];
@@ -194,6 +216,11 @@ impl App {
                 return ParseOutcome::Help(self.command_usage(cmd));
             }
             let Some(stripped) = tok.strip_prefix("--") else {
+                if cmd.free_args.is_some() {
+                    free.push(tok.clone());
+                    i += 1;
+                    continue;
+                }
                 return ParseOutcome::Error(format!("unexpected argument '{tok}'"));
             };
             let (key, inline_val) = match stripped.split_once('=') {
@@ -233,6 +260,7 @@ impl App {
             command: cmd.name.clone(),
             values,
             flags,
+            free,
         })
     }
 }
@@ -292,6 +320,41 @@ mod tests {
             _ => panic!(),
         };
         assert_eq!(m.get_opt("data"), Some("x.shard"));
+    }
+
+    #[test]
+    fn free_args_collected_in_order_when_opted_in() {
+        let app = App::new("t", "x").command(
+            Command::new("compare", "diff reports")
+                .flag("strict", "fail on regression")
+                .free_args("OLD NEW — report files to diff"),
+        );
+        let m = match app.parse(&args(&["compare", "old.json", "--strict", "new.json"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!("expected run"),
+        };
+        assert_eq!(m.free(), &["old.json".to_string(), "new.json".to_string()]);
+        assert!(m.get_flag("strict"));
+        // help mentions the positional usage
+        match app.parse(&args(&["compare", "--help"])) {
+            ParseOutcome::Help(h) => assert!(h.contains("OLD NEW"), "{h}"),
+            _ => panic!("expected help"),
+        }
+    }
+
+    #[test]
+    fn positionals_still_rejected_without_opt_in() {
+        let m = app().parse(&args(&["serve", "--model", "fwd", "stray"]));
+        match m {
+            ParseOutcome::Error(e) => assert!(e.contains("stray"), "{e}"),
+            _ => panic!("expected error"),
+        }
+        // and a command that never opted in reports empty free()
+        let m = match app().parse(&args(&["serve", "--model", "fwd"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!(),
+        };
+        assert!(m.free().is_empty());
     }
 
     #[test]

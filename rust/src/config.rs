@@ -148,11 +148,17 @@ pub struct ModelConfig {
     pub map_timestep: i32,
     pub param_names: Vec<String>,
     /// Blocked flash-kernel shape for every *native* (CPU) attention this
-    /// model performs — Algorithm 2, the quadratic oracle's row partition
-    /// and the incremental decode engine.  Not read from `index.json`
-    /// (it is a host-execution knob, not a model-shape one): defaults to
+    /// model performs — Algorithm 2 (fused and project-then-attend), the
+    /// quadratic oracle's row partition and the incremental decode
+    /// engine.  Not read from `index.json` (it is a host-execution knob,
+    /// not a model-shape one): defaults to
     /// [`crate::attention::kernel::KernelConfig::default`] and is
-    /// overridden by `ServeConfig`/CLI on the serving path.
+    /// overridden by `ServeConfig`/CLI on the serving path — including
+    /// `ServeConfig.autotune_kernel` / `simulate --kernel-autotune`,
+    /// which replaces it with the
+    /// [`crate::attention::kernel::KernelConfig::autotune`] pick at
+    /// startup.  Whatever lands here is the one kernel shape *both*
+    /// backends honor (see [`crate::runtime::kernel_tiling`]).
     pub kernel: crate::attention::kernel::KernelConfig,
     /// Storage precision of cached feature rows for engines derived from
     /// this model config

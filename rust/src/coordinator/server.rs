@@ -93,6 +93,15 @@ pub struct ServeConfig {
     /// pool, and each attention call's transient state stays O(c) per
     /// participating worker.
     pub kernel: crate::attention::kernel::KernelConfig,
+    /// Replace `kernel` with the one-shot startup microbenchmark's pick
+    /// ([`crate::attention::kernel::KernelConfig::autotune`]) before the
+    /// shards capture it (CLI `simulate --kernel-autotune`).  Env
+    /// `SE2ATTN_KERNEL_*` pins still win inside the autotuner, and the
+    /// tuned shape is process-cached, so every shard — and the PJRT
+    /// tiling contract ([`crate::runtime::kernel_tiling`]) — sees one
+    /// kernel shape.  Off by default: autotuning costs a few hundred ms
+    /// of microbenchmark at startup.
+    pub autotune_kernel: bool,
     /// Request tracing (DESIGN.md §15).  Off by default: no rings are
     /// allocated and every span site costs one branch.
     pub trace: TraceConfig,
@@ -107,8 +116,22 @@ impl Default for ServeConfig {
             admission: AdmissionConfig::default(),
             cache: CacheConfig::default(),
             kernel: crate::attention::kernel::KernelConfig::default(),
+            autotune_kernel: false,
             trace: TraceConfig::default(),
             profile: ProfileConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The kernel shape the serving pool will actually run: the autotuned
+    /// pick when `autotune_kernel` is set, otherwise the explicit
+    /// `kernel` field — normalized either way.
+    fn resolved_kernel(&self) -> crate::attention::kernel::KernelConfig {
+        if self.autotune_kernel {
+            crate::attention::kernel::KernelConfig::autotune().normalized()
+        } else {
+            self.kernel.normalized()
         }
     }
 }
@@ -256,7 +279,7 @@ impl Server {
         // this config (and any `IncrementalConfig::for_model` engine
         // derived from it) see the ServeConfig/CLI knobs
         let mut cfg = cfg;
-        cfg.model.kernel = serve.kernel.normalized();
+        cfg.model.kernel = serve.resolved_kernel();
         cfg.model.cache_precision = serve.cache.precision;
         let factory: BackendFactory = {
             let cfg = cfg.clone();
@@ -293,7 +316,7 @@ impl Server {
         // whatever the model config carried in, so every shard agrees
         // with the CLI/ServeConfig
         let mut cfg = cfg;
-        cfg.model.kernel = serve.kernel.normalized();
+        cfg.model.kernel = serve.resolved_kernel();
         cfg.model.cache_precision = serve.cache.precision;
         let workers = serve.workers.max(1);
         let stats = Arc::new(ServerStats::with_shards(workers));

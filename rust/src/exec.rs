@@ -395,6 +395,29 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Hint the CPU to pull `data[idx..]` toward L1 ahead of use (`T0`
+/// locality).  A no-op off x86_64 and for out-of-range indices — purely a
+/// performance hint, never an observable effect, so callers (e.g. the
+/// fused kernel's next-key-block prefetch) need no cfg guards.
+#[inline]
+pub fn prefetch_read<T>(data: &[T], idx: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if idx < data.len() {
+        // SAFETY: the pointer is derived from an in-bounds index of a live
+        // slice; prefetch dereferences nothing architecturally.
+        unsafe {
+            std::arch::x86_64::_mm_prefetch(
+                data.as_ptr().add(idx) as *const i8,
+                std::arch::x86_64::_MM_HINT_T0,
+            );
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (data, idx);
+    }
+}
+
 /// Partition `0..n` into contiguous chunks of `chunk` items and run
 /// `f(lo, hi)` for each, using up to `threads` participants from the
 /// shared pool (inline when one thread suffices).  The common driver for

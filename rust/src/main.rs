@@ -10,7 +10,9 @@
 //!   stats      render a metrics snapshot as Prometheus text; validate
 //!              trace/metrics exports (CI observability smoke)
 //!   approx     SE(2) Fourier approximation error probe (Fig. 3 pointwise)
-//!   bench-report  render the README Benchmarks section from BENCH_*.json
+//!   bench-report  render the README Benchmarks section from BENCH_*.json;
+//!              `--compare OLD NEW` diffs two runs and exits nonzero on a
+//!              >10% regression in any gated metric (CI bench-regression)
 
 use std::sync::Arc;
 
@@ -78,6 +80,12 @@ fn app() -> App {
                   derived from this server's model config (0 = one per core; \
                   bit-identical at any setting; PJRT artifact decode is \
                   threaded by XLA and unaffected)")
+            .flag("kernel-autotune",
+                  "pick {block_m, lanes, threads} for the native flash \
+                   kernel via a one-shot startup microbenchmark instead of \
+                   the defaults (SE2ATTN_KERNEL_* env pins still win; \
+                   results are bit-identical to an explicit config with \
+                   the same shape)")
             .opt("cache-precision", "f32",
                  "storage precision of cached session feature rows \
                   (f32|f16|bf16): f16/bf16 roughly halve resident cache \
@@ -138,7 +146,14 @@ fn app() -> App {
             .opt("decode", "BENCH_decode.json",
                  "decode_throughput JSON document (written by `cargo bench`)")
             .opt("serving", "BENCH_serving.json",
-                 "serving_load JSON document (written by `cargo bench`)"))
+                 "serving_load JSON document (written by `cargo bench`)")
+            .flag("compare",
+                  "diff two BENCH_*.json documents instead of rendering: \
+                   prints a markdown delta table and exits 1 when any gated \
+                   metric regressed by more than 10% (the CI \
+                   bench-regression job)")
+            .free_args("OLD NEW — with --compare, baseline and candidate \
+                        BENCH_*.json files"))
 }
 
 fn main() -> Result<()> {
@@ -357,6 +372,17 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
     let mut serve = ServeConfig::with_workers(m.get_usize("workers"));
     serve.kernel =
         se2attn::attention::kernel::KernelConfig::with_threads(m.get_usize("kernel-threads"));
+    if m.get_flag("kernel-autotune") {
+        // resolve eagerly (not just via ServeConfig.autotune_kernel) so
+        // the synthetic factory below captures the tuned shape too; the
+        // pick is process-cached, so both resolutions agree
+        serve.autotune_kernel = true;
+        serve.kernel = se2attn::attention::kernel::KernelConfig::autotune();
+        println!(
+            "kernel autotune: block_m={} lanes={} threads={}",
+            serve.kernel.block_m, serve.kernel.lanes, serve.kernel.threads
+        );
+    }
     serve.cache.precision =
         se2attn::config::CachePrecision::parse(m.get("cache-precision"))?;
     serve.admission.max_queue = m.get_usize("admit-queue").max(1);
@@ -538,6 +564,27 @@ fn validate_trace_file(path: &str) -> Result<()> {
 }
 
 fn cmd_bench_report(m: &Matches) -> Result<()> {
+    if m.get_flag("compare") {
+        // comparison mode is the CI gate: unreadable inputs are hard
+        // errors, and a regression exits nonzero
+        let [old_path, new_path] = m.free() else {
+            anyhow::bail!("--compare needs exactly two files: bench-report --compare OLD NEW");
+        };
+        let read = |path: &str| -> Result<se2attn::jsonio::Json> {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            se2attn::jsonio::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+        };
+        let (md, regressed) =
+            se2attn::benchlib::compare_bench_reports(&read(old_path)?, &read(new_path)?);
+        print!("{md}");
+        if regressed {
+            eprintln!("bench-report: gated metric regressed >10% vs {old_path}");
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
     // missing inputs are reported inside the rendered markdown (the
     // benches may not have run yet), not as a hard error
     let load = |path: &str| -> Option<se2attn::jsonio::Json> {

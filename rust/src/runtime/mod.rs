@@ -132,6 +132,34 @@ fn validate_inputs(m: &Manifest, inputs: &[HostTensor]) -> Result<()> {
     Ok(())
 }
 
+/// The kernel tiling contract shared by both backends (DESIGN.md §18):
+/// whatever `{block_m, lanes, threads}` the native CPU kernel resolves —
+/// default, `SE2ATTN_KERNEL_*`-pinned, or picked by
+/// [`crate::attention::kernel::KernelConfig::autotune`] — is also the
+/// shape a PJRT-lowered fused kernel must be compiled with, so a mixed
+/// deployment never runs two different tilings for one model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelTiling {
+    /// Key rows per kernel block (the fused path's k~/v~ tile height).
+    pub block_m: usize,
+    /// FMA lane width of the score/value inner loops.
+    pub lanes: usize,
+    /// Worker threads partitioning query chunks.
+    pub threads: usize,
+}
+
+/// Resolve the shared tiling from a kernel config, normalizing exactly
+/// the way the native kernel does before launch — both backends call
+/// this one function, which *is* the contract.
+pub fn kernel_tiling(cfg: &crate::attention::kernel::KernelConfig) -> KernelTiling {
+    let c = cfg.normalized();
+    KernelTiling {
+        block_m: c.block_m,
+        lanes: c.lanes,
+        threads: c.threads,
+    }
+}
+
 #[cfg(feature = "pjrt")]
 mod backend {
     //! Real PJRT backend (requires the `xla` crate).
@@ -273,6 +301,16 @@ mod backend {
         pub fn loaded(&self) -> Vec<String> {
             self.artifacts.lock().unwrap().keys().cloned().collect()
         }
+
+        /// Kernel tiling this backend would lower fused attention with —
+        /// by construction identical to the native CPU kernel's shape
+        /// (see [`super::kernel_tiling`]).
+        pub fn tiling(
+            &self,
+            cfg: &crate::attention::kernel::KernelConfig,
+        ) -> super::KernelTiling {
+            super::kernel_tiling(cfg)
+        }
     }
 }
 
@@ -343,6 +381,17 @@ mod backend {
         pub fn loaded(&self) -> Vec<String> {
             Vec::new()
         }
+
+        /// Kernel tiling this backend would lower fused attention with —
+        /// the stub mirrors the real backend's contract exactly (one
+        /// shared [`super::kernel_tiling`] resolution), so code written
+        /// against the stub observes the same shape decisions.
+        pub fn tiling(
+            &self,
+            cfg: &crate::attention::kernel::KernelConfig,
+        ) -> super::KernelTiling {
+            super::kernel_tiling(cfg)
+        }
     }
 }
 
@@ -397,5 +446,21 @@ mod tests {
         let err = e.load("decode_se2fourier").unwrap_err();
         assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
         assert!(e.loaded().is_empty());
+    }
+
+    #[test]
+    fn engine_tiling_matches_native_kernel_shape() {
+        use crate::attention::kernel::KernelConfig;
+        let e = Engine::cpu("artifacts").unwrap();
+        // Degenerate values must normalize identically on both sides.
+        let cfg = KernelConfig::fixed(0, 5, 0);
+        let t = e.tiling(&cfg);
+        let native = cfg.normalized();
+        assert_eq!(t.block_m, native.block_m);
+        assert_eq!(t.lanes, native.lanes);
+        assert_eq!(t.threads, native.threads);
+        // An autotuned config resolves through the same contract.
+        let tuned = KernelConfig::autotune();
+        assert_eq!(e.tiling(&tuned), kernel_tiling(&tuned));
     }
 }
