@@ -10,16 +10,21 @@
 //! `work_per_token`, emulating a model-latency-bound decode so the bench
 //! runs (and scales) in the default stub-runtime build.
 //!
+//! A second section (ISSUE 10 acceptance) runs the same workload through
+//! the **multi-process** path: worker shards as real child processes
+//! behind [`ProcServer`]'s wire protocol.  Aggregate scenes/s must grow
+//! from 1 to 4 worker processes on a multi-core host.
+//!
 //! Run: `cargo bench --bench shard_scaling`
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use se2attn::benchlib::{record_row, Table};
-use se2attn::config::{Method, ModelConfig, SimConfig, SystemConfig};
+use se2attn::config::{Method, ModelConfig, ProcConfig, SimConfig, SystemConfig};
 use se2attn::coordinator::{
-    AdmissionConfig, Backend, BackendFactory, CacheConfig, RolloutRequest, Router, ServeConfig,
-    Server, SyntheticDecoder,
+    AdmissionConfig, Backend, BackendFactory, CacheConfig, ProcServer, RolloutRequest, Router,
+    ServeConfig, Server, SyntheticDecoder,
 };
 use se2attn::jsonio::Json;
 use se2attn::sim::MixGenerator;
@@ -99,6 +104,57 @@ fn run(workers: usize) -> (f64, f64) {
     (wall, SCENES as f64 / wall)
 }
 
+/// Same workload through `workers` real child processes speaking the
+/// wire protocol (the `simulate --worker-procs` path); returns
+/// (wall s, scenes/s).  Wall time includes envelope/response
+/// serialization — the protocol overhead the multi-process gate prices.
+fn run_procs(workers: usize) -> (f64, f64) {
+    let sim = SimConfig::default();
+    let worker_cmd = vec![
+        env!("CARGO_BIN_EXE_se2-attention").to_string(),
+        "worker".to_string(),
+        "--methods".to_string(),
+        METHOD.name().to_string(),
+        "--synthetic-work".to_string(),
+        WORK_PER_TOKEN.to_string(),
+    ];
+    let server = ProcServer::start(
+        workers,
+        ProcConfig::default(),
+        AdmissionConfig {
+            max_queue: 4096,
+            ..AdmissionConfig::default()
+        },
+        worker_cmd,
+    )
+    .expect("proc server start");
+
+    let mix = se2attn::config::scenario_mix("mixed", "").expect("mix");
+    let gen = MixGenerator::new(sim.clone(), mix);
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..SCENES)
+        .map(|i| {
+            let scenario = gen.generate(3000 + i as u64);
+            server.submit(
+                METHOD,
+                RolloutRequest {
+                    scenario,
+                    t0: sim.history_steps - 1,
+                    n_samples: SAMPLES,
+                    temperature: 1.0,
+                    seed: i as i32,
+                },
+            )
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().expect("coordinator alive").expect("rollout ok");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    (wall, SCENES as f64 / wall)
+}
+
 fn main() {
     let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
     println!(
@@ -143,6 +199,49 @@ fn main() {
         );
     } else {
         println!("strictly increasing aggregate throughput 1 -> 4 workers: FAIL");
+        std::process::exit(1);
+    }
+
+    println!(
+        "\n== multi-process scaling: same workload through worker *processes* \
+         (wire protocol + session codec on the path) =="
+    );
+    let mut table = Table::new(&["worker procs", "wall s", "scenes/s", "speedup vs 1"]);
+    let mut proc_tput = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let (wall, tput) = run_procs(workers);
+        proc_tput.push((workers, tput));
+        let speedup = tput / proc_tput[0].1;
+        table.row(vec![
+            workers.to_string(),
+            format!("{wall:.2}"),
+            format!("{tput:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        record_row(
+            "proc_scaling",
+            Json::obj(vec![
+                ("worker_procs", Json::Num(workers as f64)),
+                ("scenes", Json::Num(SCENES as f64)),
+                ("samples", Json::Num(SAMPLES as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("scenes_per_s", Json::Num(tput)),
+            ]),
+        );
+    }
+    table.print();
+
+    let first = proc_tput[0].1;
+    let last = proc_tput.last().expect("proc rows").1;
+    if last > first {
+        println!("aggregate throughput grows 1 -> 4 worker processes: PASS");
+    } else if cores < 4 {
+        println!(
+            "no cross-process growth — expected on a {cores}-core host; \
+             re-run on >=4 cores for the acceptance check"
+        );
+    } else {
+        println!("aggregate throughput grows 1 -> 4 worker processes: FAIL");
         std::process::exit(1);
     }
 }

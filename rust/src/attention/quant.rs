@@ -265,6 +265,27 @@ impl QuantizedRows {
     pub fn resident_bytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<u16>() + self.len() * QUANT_ROW_OVERHEAD
     }
+
+    /// Raw storage of row `j` — `(scale, offset, codes)` — for lossless
+    /// serialization: re-inserting the same triple through
+    /// [`QuantizedRows::push_row_raw`] reproduces the row bit-exactly,
+    /// with no decode/re-encode rounding on the migration path.
+    pub fn row_raw(&self, j: usize) -> (f32, f32, &[u16]) {
+        (
+            self.scale[j],
+            self.offset[j],
+            &self.data[j * self.c..(j + 1) * self.c],
+        )
+    }
+
+    /// Append one row from its raw serialized parts (the inverse of
+    /// [`QuantizedRows::row_raw`]); codes are stored verbatim.
+    pub fn push_row_raw(&mut self, scale: f32, offset: f32, codes: &[u16]) {
+        assert_eq!(codes.len(), self.c, "row width");
+        self.scale.push(scale);
+        self.offset.push(offset);
+        self.data.extend_from_slice(codes);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -412,6 +433,33 @@ impl FeatureRows {
         match self {
             FeatureRows::F32 { data, .. } => KvRowSource::F32(data),
             FeatureRows::Quant(q) => KvRowSource::Quant(q),
+        }
+    }
+
+    /// Borrow the raw f32 storage (`None` for quantized rows) — the
+    /// bit-exact serialization path for the f32 tier.
+    pub fn raw_f32(&self) -> Option<&[f32]> {
+        match self {
+            FeatureRows::F32 { data, .. } => Some(data),
+            FeatureRows::Quant(_) => None,
+        }
+    }
+
+    /// Borrow the quantized store (`None` for f32 rows); pair with
+    /// [`QuantizedRows::row_raw`] for lossless serialization.
+    pub fn as_quant(&self) -> Option<&QuantizedRows> {
+        match self {
+            FeatureRows::F32 { .. } => None,
+            FeatureRows::Quant(q) => Some(q),
+        }
+    }
+
+    /// Mutable quantized store (`None` for f32 rows) — the
+    /// deserialization half of the raw-row path.
+    pub fn as_quant_mut(&mut self) -> Option<&mut QuantizedRows> {
+        match self {
+            FeatureRows::F32 { .. } => None,
+            FeatureRows::Quant(q) => Some(q),
         }
     }
 }

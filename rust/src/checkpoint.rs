@@ -93,7 +93,11 @@ impl Checkpoint {
         }
         let version = read_u32(&mut r)?;
         if version != VERSION {
-            bail!("checkpoint version {version}, expected {VERSION}");
+            bail!(
+                "checkpoint version {version}, expected {VERSION} — this file was written \
+                 by an incompatible se2attn build; re-export it with a build matching this \
+                 binary (see `train --save`)"
+            );
         }
         let step = read_u64(&mut r)?;
         let method = read_str(&mut r)?;
@@ -242,6 +246,37 @@ mod tests {
             std::fs::write(&bad, &bytes[..cut]).unwrap();
             assert!(Checkpoint::load(&bad).is_err(), "cut at {cut}");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_skew_fails_with_actionable_message() {
+        let dir = std::env::temp_dir().join("se2attn_ck_skew");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("skew.ckpt");
+        sample_checkpoint().save(&path).unwrap();
+        // bump the on-disk version field (bytes 4..8, after the magic)
+        // to simulate a file written by a future build
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&format!("checkpoint version {}, expected {VERSION}", VERSION + 1)),
+            "message must name both versions: {msg}"
+        );
+        assert!(
+            msg.contains("re-export"),
+            "message must say what to do about it: {msg}"
+        );
+        // a matching version with a mangled magic stays a distinct error
+        let mut bad_magic = std::fs::read(&path).unwrap();
+        bad_magic[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        bad_magic[0] ^= 0xFF;
+        std::fs::write(&path, &bad_magic).unwrap();
+        let msg = format!("{:#}", Checkpoint::load(&path).unwrap_err());
+        assert!(msg.contains("bad magic"), "{msg}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

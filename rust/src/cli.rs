@@ -22,6 +22,11 @@ pub struct Command {
     /// command rejects positionals, as every command did before
     /// `bench-report --compare OLD NEW` needed them.
     pub free_args: Option<String>,
+    /// Omit from the top-level command list.  For internal entry points
+    /// (the `worker` process spawned by `simulate --worker-procs`) that
+    /// must parse like any command but are not part of the user-facing
+    /// surface.  Still runs and still answers `<name> --help`.
+    pub hidden: bool,
 }
 
 impl Command {
@@ -31,7 +36,14 @@ impl Command {
             about: about.into(),
             args: Vec::new(),
             free_args: None,
+            hidden: false,
         }
+    }
+
+    /// Hide this command from the top-level usage listing.
+    pub fn hidden(mut self) -> Command {
+        self.hidden = true;
+        self
     }
 
     /// Accept positional arguments (collected in order into
@@ -157,7 +169,7 @@ impl App {
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n",
             self.name, self.about, self.name);
-        for c in &self.commands {
+        for c in self.commands.iter().filter(|c| !c.hidden) {
             s.push_str(&format!("  {:<24} {}\n", c.name, c.about));
         }
         s.push_str("\nRun '<command> --help' for command options.\n");
@@ -371,6 +383,25 @@ mod tests {
             app().parse(&args(&["nope"])),
             ParseOutcome::Error(_)
         ));
+    }
+
+    #[test]
+    fn hidden_commands_run_but_stay_out_of_usage() {
+        let app = App::new("t", "x")
+            .command(Command::new("serve", "run server"))
+            .command(Command::new("worker", "internal entry point").hidden().opt(
+                "id",
+                "0",
+                "slot index",
+            ));
+        assert!(!app.usage().contains("worker"), "{}", app.usage());
+        let m = match app.parse(&args(&["worker", "--id", "3"])) {
+            ParseOutcome::Run(m) => m,
+            _ => panic!("hidden command must still parse"),
+        };
+        assert_eq!(m.get_usize("id"), 3);
+        // and still answers --help directly
+        assert!(matches!(app.parse(&args(&["worker", "--help"])), ParseOutcome::Help(_)));
     }
 
     #[test]

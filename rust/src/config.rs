@@ -337,6 +337,43 @@ impl ObsConfig {
     }
 }
 
+/// Multi-process fleet settings (`simulate --worker-procs N`;
+/// [`crate::coordinator::proc`], DESIGN.md §19): worker-shard child
+/// processes speaking the wire protocol over a local socket, with
+/// heartbeat liveness, session migration and respawn-on-death.
+#[derive(Clone, Debug)]
+pub struct ProcConfig {
+    /// Worker heartbeat-beacon interval.  The coordinator's supervisor
+    /// sweeps at half this period.
+    pub heartbeat: std::time::Duration,
+    /// Silence window after which a connected worker is declared dead
+    /// (its requests replay elsewhere; see `death_after >= 2*heartbeat`
+    /// or a jittered beacon gets declared dead spuriously).
+    pub death_after: std::time::Duration,
+    /// Read deadline for the `Hello` handshake on a fresh connection —
+    /// bounds how long a garbage/stalled peer can hold a handshake slot.
+    pub connect_timeout: std::time::Duration,
+    /// Respawn workers that die (SIGKILL, crash, heartbeat timeout).
+    /// Off, a dead worker stays dead and its traffic reroutes for good.
+    pub respawn: bool,
+    /// Do not spawn child processes at startup (and never respawn):
+    /// the test harness connects worker processes itself, possibly
+    /// through a fault-injection proxy.
+    pub manual_workers: bool,
+}
+
+impl Default for ProcConfig {
+    fn default() -> ProcConfig {
+        ProcConfig {
+            heartbeat: std::time::Duration::from_millis(250),
+            death_after: std::time::Duration::from_secs(2),
+            connect_timeout: std::time::Duration::from_secs(10),
+            respawn: true,
+            manual_workers: false,
+        }
+    }
+}
+
 /// Whole-system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {

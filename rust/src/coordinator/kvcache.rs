@@ -175,6 +175,57 @@ impl WindowCache {
         self.precision
     }
 
+    /// Shared map rows this session emits against.
+    pub fn map(&self) -> &Arc<MapTokens> {
+        &self.map
+    }
+
+    /// Feature width of the cached rows.
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    /// Cached step rows, oldest first: `(feature rows, world poses)` per
+    /// window step — the serialization surface of the session codec
+    /// (`coordinator::session_codec`).
+    pub fn step_rows(&self) -> impl Iterator<Item = (&FeatureRows, &[Pose])> {
+        self.steps.iter().map(|s| (&s.feat, s.world_pose.as_slice()))
+    }
+
+    /// Rebuild a cache from serialized step rows (the deserialization
+    /// half of the session codec).  Rows are installed verbatim — no
+    /// re-tokenization and no re-quantization — so a migrated session
+    /// emits bit-identically to the one exported on the source worker.
+    pub fn from_parts(
+        map: Arc<MapTokens>,
+        steps: Vec<(FeatureRows, Vec<Pose>)>,
+        precision: CachePrecision,
+    ) -> Result<WindowCache> {
+        if steps.is_empty() || steps[0].1.is_empty() {
+            bail!("cannot rebuild a session window cache from an empty window");
+        }
+        let n_agents = steps[0].1.len();
+        let feat_dim = steps[0].0.width();
+        for (feat, poses) in &steps {
+            if feat.len() != n_agents || poses.len() != n_agents || feat.width() != feat_dim {
+                bail!("corrupt migrated session: ragged step rows");
+            }
+            if feat.precision() != precision {
+                bail!("corrupt migrated session: row precision does not match header");
+            }
+        }
+        Ok(WindowCache {
+            map,
+            steps: steps
+                .into_iter()
+                .map(|(feat, world_pose)| AgentStepRows { feat, world_pose })
+                .collect(),
+            n_agents,
+            feat_dim,
+            precision,
+        })
+    }
+
     /// Slide the window one decode step: evict the oldest step's rows and
     /// tokenize *only* the new frontier — the O(new) hot path.
     pub fn advance(&mut self, tok: &Tokenizer, frontier: &[AgentState]) {
@@ -382,6 +433,38 @@ impl MapRegistry {
         if !already_known {
             inner.order.push_back(scene);
         }
+        self.enforce_scene_capacity(&mut inner);
+        m
+    }
+
+    /// Register migrated map rows for `scene`, returning the shared `Arc`
+    /// to use: rows the registry already holds (same shape) win — the
+    /// replicated-registry fast path, where a migrated session re-points
+    /// at the destination's existing copy — otherwise the migrated rows
+    /// are installed and handed back.
+    pub fn install(&self, scene: u64, m: Arc<MapTokens>) -> Arc<MapTokens> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(have) = inner.maps.get(&scene) {
+            if have.len() == m.len() {
+                self.stats.map_hits.inc();
+                return Arc::clone(have);
+            }
+        }
+        self.stats.map_misses.inc();
+        let _mem = crate::obs::alloc::MemScope::enter("map_registry");
+        inner.bytes += m.resident_bytes();
+        self.stats.resident_bytes.add(m.resident_bytes() as u64);
+        if let Some(stale) = inner.maps.insert(scene, Arc::clone(&m)) {
+            inner.bytes = inner.bytes.saturating_sub(stale.resident_bytes());
+            self.stats.resident_bytes.sub(stale.resident_bytes() as u64);
+        } else {
+            inner.order.push_back(scene);
+        }
+        self.enforce_scene_capacity(&mut inner);
+        m
+    }
+
+    fn enforce_scene_capacity(&self, inner: &mut MapRegistryInner) {
         while inner.maps.len() > self.max_scenes {
             if let Some(old) = inner.order.pop_front() {
                 if let Some(gone) = inner.maps.remove(&old) {
@@ -402,7 +485,6 @@ impl MapRegistry {
                 break;
             }
         }
-        m
     }
 
     /// Bytes held by the shared map rows.
@@ -640,6 +722,42 @@ impl KvCachePool {
                 }
             }
         }
+    }
+
+    /// Remove and return a session's cached window for migration (drain,
+    /// rebalance, or worker death with a live connection).  The pool's
+    /// byte accounting is released; the caller owns serialization.
+    /// `None` when the session is unknown (e.g. already LRU-evicted) —
+    /// callers treat that as "nothing to migrate" and the destination
+    /// rebuilds it as an ordinary cache miss.
+    pub fn export_session(&self, key: SessionKey) -> Option<WindowCache> {
+        let mut inner = self.inner.lock().unwrap();
+        let gone = inner.sessions.remove(&key)?;
+        inner.session_bytes = inner.session_bytes.saturating_sub(gone.bytes);
+        self.stats.resident_bytes.sub(gone.bytes as u64);
+        Some(gone.cache)
+    }
+
+    /// Install a migrated session (the receive half of
+    /// [`Self::export_session`]).  The cache's map rows are re-pointed at
+    /// this pool's registry copy when one of the same shape exists, so a
+    /// scene's map stays tokenized once per destination no matter how
+    /// many sessions migrate in.  The session enters at a fresh LRU tick
+    /// under the normal byte budget.
+    pub fn install_session(&self, key: SessionKey, mut cache: WindowCache) {
+        cache.map = self.maps.install(key.scene, Arc::clone(&cache.map));
+        let _mem = crate::obs::alloc::MemScope::enter("kvcache");
+        let bytes = cache.resident_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(stale) = inner.sessions.insert(key, SessionEntry { cache, bytes, tick }) {
+            inner.session_bytes = inner.session_bytes.saturating_sub(stale.bytes);
+            self.stats.resident_bytes.sub(stale.bytes as u64);
+        }
+        inner.session_bytes += bytes;
+        self.stats.resident_bytes.add(bytes as u64);
+        self.enforce_capacity(&mut inner, Some(key));
     }
 
     /// Drop a finished session (end of rollout).

@@ -33,22 +33,35 @@
 //!   (DESIGN.md §15).
 //! * [`telemetry`] — lock-free counters/histograms for the hot path,
 //!   including per-shard and per-tenant breakdowns.
+//! * [`wire`] — length-prefixed binary frame protocol for the process
+//!   boundary (DESIGN.md §19): handshake, request/response envelopes,
+//!   heartbeats, drain/transfer.
+//! * [`session_codec`] — self-describing wire/disk codec for one KV
+//!   session (key + `WindowCache`, f16/bf16 rows kept in their
+//!   quantized form), so sessions migrate instead of rebuilding.
+//! * [`proc`] — multi-process scale-out: a `ProcServer` coordinator
+//!   supervising worker *processes* over [`wire`], with envelope replay
+//!   on worker death and warm-session migration on drain.
 
 pub mod admission;
 pub mod batcher;
 pub mod kvcache;
 pub mod model;
+pub mod proc;
 pub mod rollout;
 pub mod router;
 pub mod server;
+pub mod session_codec;
 pub mod telemetry;
 pub mod trainer;
+pub mod wire;
 
 pub use admission::{AdmissionConfig, AdmissionError, AdmissionQueue};
 pub use batcher::{Batcher, BatcherConfig};
 pub use kvcache::{CacheConfig, KvCachePool, MapRegistry, SessionKey, WindowCache};
 pub use model::{ActionDecoder, ModelHandle, NativeSdpaDecoder, SyntheticDecoder};
 pub use rollout::{RolloutEngine, RolloutRequest, RolloutResult};
-pub use router::{shard_of, Router, ShardRouter};
+pub use proc::{worker_serve, ProcServer, WorkerOptions};
+pub use router::{shard_of, shard_of_excluding, Router, ShardRouter};
 pub use server::{Backend, BackendFactory, ServeConfig, Server};
 pub use trainer::Trainer;

@@ -1,0 +1,1372 @@
+//! Multi-process scale-out: worker shards as child **processes**.
+//!
+//! The in-process [`super::server::Server`] keeps every shard on a
+//! thread inside one address space.  This module moves the shard
+//! boundary to a process boundary: a [`ProcServer`] coordinator owns
+//! admission, routing, and the pending-request table, while each worker
+//! is a separate OS process speaking the length-prefixed binary
+//! protocol of [`super::wire`] over a loopback TCP socket.
+//!
+//! What the process boundary buys (and what this module must therefore
+//! guarantee):
+//!
+//! * **Scale-out** — workers step rollouts on their own cores with no
+//!   shared allocator or `Arc` contention; `benches/shard_scaling.rs`
+//!   measures the 1 -> 4 process curve.
+//! * **Fault isolation** — a worker SIGKILL'd mid-rollout loses no
+//!   sessions: the coordinator keeps the full request envelope in its
+//!   pending table and **replays** it to a live worker (deterministic
+//!   re-derivation; the rollout restarts from `t0` with the same seeds,
+//!   so results stay bit-identical to the single-process path).
+//! * **Migration, not cache misses** — a *cooperative* handoff (drain)
+//!   ships each live session's KV cache through the
+//!   [`super::session_codec`] blob inside a [`Frame::Transfer`], so the
+//!   receiving worker resumes mid-rollout with warm rows instead of
+//!   rebuilding them.
+//!
+//! Failure model (see DESIGN.md §19): a request is **replayed** when
+//! its worker dies uncleanly (crash, SIGKILL, socket loss), **migrated**
+//! when its worker drains cleanly, and **lost** only when every worker
+//! is excluded — in which case the caller gets a typed error, never a
+//! hang.  Liveness is heartbeat + connection-loss based; respawn is
+//! supervised by the coordinator with a generation counter so a stale
+//! reader thread can never double-declare a death.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{Method, ProcConfig};
+use crate::prng::SplitMix64;
+use crate::trace::{self, Stage};
+
+use super::admission::{AdmissionConfig, AdmissionError};
+use super::kvcache::{CacheConfig, KvCachePool, SessionKey};
+use super::model::SlotParams;
+use super::rollout::{RolloutEngine, RolloutRequest, RolloutResult, SessionState, StepSlot};
+use super::router::shard_of_excluding;
+use super::server::Backend;
+use super::session_codec::{decode_session, encode_session};
+use super::telemetry::{CacheStats, ServerStats};
+use super::wire::{Frame, SessionTransfer, WireError, WIRE_VERSION};
+
+// ---------------------------------------------------------------------------
+// Coordinator state
+// ---------------------------------------------------------------------------
+
+/// An admitted request the coordinator has not yet answered.  Keeps the
+/// full [`RolloutRequest`] so the envelope can be **replayed** to
+/// another worker if its current owner dies — the worker side holds no
+/// state the coordinator cannot reconstruct.
+struct Pending {
+    worker: usize,
+    tenant: u8,
+    method: Method,
+    request: RolloutRequest,
+    submitted_at: Instant,
+    respond: mpsc::Sender<Result<RolloutResult>>,
+}
+
+/// Per-worker connection slot.  `generation` increments on every death
+/// so a stale reader thread (still blocked on the old socket) can never
+/// re-trigger death handling for a slot that already reconnected.
+struct SlotState {
+    conn: Option<TcpStream>,
+    last_seen: Instant,
+    generation: u64,
+    child: Option<Child>,
+    /// Frames queued while the worker is between connections (spawned
+    /// but not yet through its handshake).  Flushed on `HelloAck`.
+    backlog: Vec<Vec<u8>>,
+    draining: bool,
+    dead: bool,
+    /// Set when a respawn is launched; consumed by the handshake to
+    /// record resurrect latency.
+    respawn_started: Option<Instant>,
+}
+
+struct Shared {
+    slots: Vec<Mutex<SlotState>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    stats: Arc<ServerStats>,
+    cfg: ProcConfig,
+    /// Shared secret each worker must echo in its `Hello`; a random
+    /// local process cannot register as a worker by guessing the port.
+    token: u64,
+    addr: SocketAddr,
+    shutting_down: AtomicBool,
+    next_req: AtomicU64,
+    /// argv prefix for spawning workers (`[program, fixed args...]`);
+    /// the coordinator appends `--connect/--worker-id/--token/...`.
+    worker_cmd: Vec<String>,
+    max_queue: usize,
+}
+
+/// Coordinator for a fleet of worker processes.  Mirrors the submit
+/// surface of [`super::server::Server`] (`submit`, `submit_for_tenant`,
+/// `call`) so callers and tests can swap the two behind one shape.
+pub struct ProcServer {
+    shared: Arc<Shared>,
+    threads: Vec<thread::JoinHandle<()>>,
+}
+
+/// Exclusion vector for routing: a worker takes no new traffic while
+/// dead or draining.
+fn exclusion(shared: &Shared) -> Vec<bool> {
+    shared
+        .slots
+        .iter()
+        .map(|s| {
+            let s = s.lock().unwrap();
+            s.dead || s.draining
+        })
+        .collect()
+}
+
+/// On the proc path queue depth *is* inflight depth (workers admit
+/// immediately; there is no coordinator-side step queue).
+fn sync_depth(stats: &ServerStats, w: usize) {
+    stats.shards[w].queue_depth.set(stats.shards[w].inflight.get());
+}
+
+/// Deliver one encoded frame to worker `i`: write it if connected,
+/// queue it if the worker is between connections, and fall through to
+/// death handling if the write fails or the slot is already dead (the
+/// latter closes the race where a request is routed to a worker that
+/// dies between routing and send).
+fn send_payload(shared: &Arc<Shared>, i: usize, payload: Vec<u8>) {
+    let failed_gen = {
+        let mut slot = shared.slots[i].lock().unwrap();
+        match slot.conn.as_mut() {
+            Some(conn) => match super::wire::write_frame(conn, &payload) {
+                Ok(()) => return,
+                Err(_) => Some(slot.generation),
+            },
+            None if !slot.dead => {
+                slot.backlog.push(payload);
+                return;
+            }
+            None => None,
+        }
+    };
+    match failed_gen {
+        Some(generation) => on_worker_down(shared, i, generation),
+        // dead slot with no connection: whatever was pending here must
+        // move now — nothing else will notice
+        None => replay_pending(shared, i),
+    }
+}
+
+/// Handle the death of worker `i`.  Idempotent per generation: the
+/// caller passes the generation it observed, and only the first caller
+/// for that generation does the work (reader thread, supervisor, and a
+/// failed write can all race here).
+fn on_worker_down(shared: &Arc<Shared>, i: usize, expected_gen: u64) {
+    if shared.shutting_down.load(Ordering::SeqCst) {
+        return;
+    }
+    let (planned, child) = {
+        let mut slot = shared.slots[i].lock().unwrap();
+        if slot.generation != expected_gen {
+            return; // someone else already handled this death
+        }
+        slot.generation += 1;
+        if let Some(conn) = slot.conn.take() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        let child = slot.child.take();
+        let planned = slot.draining;
+        let respawn = shared.cfg.respawn && !planned && !shared.cfg.manual_workers;
+        slot.dead = !respawn;
+        slot.respawn_started = respawn.then(Instant::now);
+        if !respawn {
+            slot.backlog.clear();
+        }
+        (planned, child)
+    };
+    shared.stats.shards[i].live.set(0);
+    shared.stats.shards[i].queue_depth.set(0);
+    if let Some(mut child) = child {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    if planned {
+        return; // drain: sessions migrated via Transfer, not a death
+    }
+    shared.stats.migration.worker_deaths.inc();
+    replay_pending(shared, i);
+    let respawning = shared.slots[i].lock().unwrap().respawn_started.is_some();
+    if respawning {
+        shared.stats.migration.worker_respawns.inc();
+        if let Err(e) = spawn_child(shared, i) {
+            eprintln!("se2attn: respawn of worker {i} failed: {e:#}");
+            let mut slot = shared.slots[i].lock().unwrap();
+            slot.dead = true;
+            slot.respawn_started = None;
+            slot.backlog.clear();
+        }
+    }
+}
+
+/// Re-route every pending envelope owned by dead worker `from`.  A
+/// respawning worker keeps envelopes whose scene has no live
+/// alternative (they sit in the backlog until the respawn connects);
+/// otherwise orphans fail with a typed error rather than hanging.
+fn replay_pending(shared: &Arc<Shared>, from: usize) {
+    // exclusion snapshot BEFORE the pending lock (lock order: slots,
+    // then pending — send_payload below re-takes slot locks)
+    let mut excluded = exclusion(shared);
+    excluded[from] = true;
+    let from_respawning = shared.slots[from].lock().unwrap().respawn_started.is_some();
+    let mut sends: Vec<(usize, Vec<u8>)> = Vec::new();
+    let mut fails: Vec<(mpsc::Sender<Result<RolloutResult>>, anyhow::Error)> = Vec::new();
+    {
+        let mut pending = shared.pending.lock().unwrap();
+        let owned: Vec<u64> = pending
+            .iter()
+            .filter(|(_, p)| p.worker == from)
+            .map(|(&id, _)| id)
+            .collect();
+        for req_id in owned {
+            let target = shard_of_excluding(
+                pending[&req_id].request.scenario.scene_id(),
+                shared.slots.len(),
+                &excluded,
+            )
+            .or(if from_respawning { Some(from) } else { None });
+            match target {
+                Some(t) => {
+                    let p = pending.get_mut(&req_id).unwrap();
+                    shared.stats.shards[p.worker].inflight.sub(1);
+                    shared.stats.shards[t].inflight.add(1);
+                    p.worker = t;
+                    let frame = Frame::Request {
+                        req_id,
+                        tenant: p.tenant,
+                        trace_id: 0,
+                        method: p.method.name().to_string(),
+                        rollout: p.request.clone(),
+                    };
+                    sends.push((t, frame.encode()));
+                    shared.stats.migration.envelopes_replayed.inc();
+                }
+                None => {
+                    let p = pending.remove(&req_id).unwrap();
+                    shared.stats.shards[p.worker].inflight.sub(1);
+                    shared.stats.requests_failed.inc();
+                    shared.stats.shards[from].failed.inc();
+                    fails.push((
+                        p.respond,
+                        anyhow!("worker {from} died with no live worker to replay to"),
+                    ));
+                }
+            }
+        }
+    }
+    for w in 0..shared.slots.len() {
+        sync_depth(&shared.stats, w);
+    }
+    for (t, payload) in sends {
+        send_payload(shared, t, payload);
+    }
+    for (respond, err) in fails {
+        let _ = respond.send(Err(err));
+    }
+}
+
+fn spawn_child(shared: &Arc<Shared>, i: usize) -> Result<u32> {
+    let addr = shared.addr.to_string();
+    spawn_child_via(shared, i, &addr)
+}
+
+/// Launch the worker process for slot `i`, telling it to connect to
+/// `connect` (normally the coordinator's own listener; tests interpose
+/// a chaos proxy here).
+fn spawn_child_via(shared: &Arc<Shared>, i: usize, connect: &str) -> Result<u32> {
+    let cmd = &shared.worker_cmd;
+    if cmd.is_empty() {
+        bail!("no worker command configured (manual_workers fleet?)");
+    }
+    let child = Command::new(&cmd[0])
+        .args(&cmd[1..])
+        .arg("--connect")
+        .arg(connect)
+        .arg("--worker-id")
+        .arg(i.to_string())
+        .arg("--token")
+        .arg(shared.token.to_string())
+        .arg("--heartbeat-ms")
+        .arg(shared.cfg.heartbeat.as_millis().to_string())
+        .spawn()
+        .with_context(|| format!("spawning worker {i} via {:?}", cmd[0]))?;
+    let pid = child.id();
+    shared.slots[i].lock().unwrap().child = Some(child);
+    Ok(pid)
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator threads
+// ---------------------------------------------------------------------------
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    for conn in listener.incoming() {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        // a thread per handshake: a client that connects and stalls
+        // (or feeds garbage byte-by-byte) must not block the accept
+        // loop — the protocol-fuzz tests rely on this
+        let shared = Arc::clone(&shared);
+        thread::Builder::new()
+            .name("se2-proc-handshake".into())
+            .spawn(move || handshake(shared, stream))
+            .expect("spawn handshake thread");
+    }
+}
+
+/// Validate a freshly accepted connection: read `Hello`, check version
+/// + token + worker id, flush the slot backlog, hand the socket to a
+/// reader thread.  Every rejection counts in `wire_errors` and closes
+/// the socket — malformed clients get silence, never a panic.
+fn handshake(shared: Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.connect_timeout));
+    let hello = match Frame::read_from(&mut stream) {
+        Ok(f) => f,
+        Err(_) => {
+            shared.stats.migration.wire_errors.inc();
+            return;
+        }
+    };
+    let Frame::Hello { version, worker_id, pid: _, token } = hello else {
+        shared.stats.migration.wire_errors.inc();
+        return;
+    };
+    let worker = worker_id as usize;
+    if version != WIRE_VERSION || token != shared.token || worker >= shared.slots.len() {
+        shared.stats.migration.wire_errors.inc();
+        return;
+    }
+    let _ = stream.set_read_timeout(None);
+    let Ok(mut reader) = stream.try_clone() else { return };
+    let gen = {
+        let mut slot = shared.slots[worker].lock().unwrap();
+        if slot.conn.is_some() {
+            // duplicate registration for a live slot — refuse it rather
+            // than hijacking the session
+            shared.stats.migration.wire_errors.inc();
+            return;
+        }
+        if let Some(t0) = slot.respawn_started.take() {
+            shared.stats.migration.resurrect_latency.record(t0.elapsed());
+        }
+        slot.dead = false;
+        slot.draining = false;
+        slot.last_seen = Instant::now();
+        let gen = slot.generation;
+        // flush frames queued while the worker was between connections
+        let mut ok = Frame::HelloAck.write_to(&mut stream).is_ok();
+        let mut unsent: Vec<Vec<u8>> = Vec::new();
+        for payload in slot.backlog.drain(..) {
+            if ok && super::wire::write_frame(&mut stream, &payload).is_err() {
+                ok = false;
+            }
+            if !ok {
+                unsent.push(payload);
+            }
+        }
+        if !ok {
+            // connection died mid-flush: restore what we could not send
+            // and let the supervisor's next pass recover
+            slot.backlog = unsent;
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        slot.conn = Some(stream);
+        gen
+    };
+    shared.stats.shards[worker].live.set(1);
+    let rshared = Arc::clone(&shared);
+    thread::Builder::new()
+        .name(format!("se2-proc-read-{worker}"))
+        .spawn(move || reader_loop(rshared, &mut reader, worker, gen))
+        .expect("spawn reader thread");
+}
+
+fn reader_loop(shared: Arc<Shared>, reader: &mut TcpStream, i: usize, gen: u64) {
+    loop {
+        match Frame::read_from(reader) {
+            Ok(frame) => {
+                {
+                    let mut slot = shared.slots[i].lock().unwrap();
+                    if slot.generation != gen {
+                        return; // stale reader for a reconnected slot
+                    }
+                    slot.last_seen = Instant::now();
+                }
+                handle_frame(&shared, i, frame);
+            }
+            Err(e) => {
+                if !matches!(e, WireError::Io(_)) {
+                    shared.stats.migration.wire_errors.inc();
+                }
+                on_worker_down(&shared, i, gen);
+                return;
+            }
+        }
+    }
+}
+
+/// Liveness sweep: declares a worker dead when its heartbeats stop
+/// (`death_after` of silence) or its child process is reaped.
+fn supervisor_loop(shared: Arc<Shared>) {
+    let tick = (shared.cfg.heartbeat / 2).max(Duration::from_millis(10));
+    while !shared.shutting_down.load(Ordering::SeqCst) {
+        thread::sleep(tick);
+        for i in 0..shared.slots.len() {
+            let down_gen = {
+                let mut slot = shared.slots[i].lock().unwrap();
+                let stale =
+                    slot.conn.is_some() && slot.last_seen.elapsed() > shared.cfg.death_after;
+                let reaped = match slot.child.as_mut() {
+                    Some(c) => matches!(c.try_wait(), Ok(Some(_))),
+                    None => false,
+                };
+                (stale || reaped).then_some(slot.generation)
+            };
+            if let Some(gen) = down_gen {
+                on_worker_down(&shared, i, gen);
+            }
+        }
+    }
+}
+
+/// Dispatch one frame from worker `i`.
+fn handle_frame(shared: &Arc<Shared>, i: usize, frame: Frame) {
+    match frame {
+        Frame::Heartbeat { .. } => {} // last_seen already refreshed
+        Frame::Response { req_id, outcome } => {
+            let p = shared.pending.lock().unwrap().remove(&req_id);
+            let Some(p) = p else { return }; // replayed + answered twice
+            shared.stats.shards[p.worker].inflight.sub(1);
+            sync_depth(&shared.stats, p.worker);
+            match outcome {
+                Ok(res) => {
+                    shared.stats.requests_done.inc();
+                    shared.stats.shards[p.worker].done.inc();
+                    shared.stats.e2e_latency.record(p.submitted_at.elapsed());
+                    shared
+                        .stats
+                        .decode_latency
+                        .record(Duration::from_secs_f64(res.decode_ms / 1e3));
+                    shared.stats.families.record(
+                        p.request.scenario.family,
+                        &res.min_ade,
+                        res.collisions as u64,
+                        res.trajectories.len() as u64,
+                    );
+                    shared.stats.tenants.done(p.tenant);
+                    let _ = p.respond.send(Ok(res));
+                }
+                Err(msg) => {
+                    shared.stats.requests_failed.inc();
+                    shared.stats.shards[p.worker].failed.inc();
+                    shared.stats.e2e_latency.record(p.submitted_at.elapsed());
+                    let _ = p.respond.send(Err(anyhow!(msg)));
+                }
+            }
+        }
+        Frame::Transfer {
+            req_id,
+            tenant,
+            trace_id,
+            method,
+            rollout,
+            steps_done,
+            decode_ms,
+            sessions,
+        } => {
+            let mut excluded = exclusion(shared);
+            excluded[i] = true;
+            let n_sessions = sessions.len() as u64;
+            let kv_bytes: u64 = sessions.iter().map(|s| s.kv.len() as u64).sum();
+            let target =
+                shard_of_excluding(rollout.scenario.scene_id(), shared.slots.len(), &excluded);
+            match target {
+                Some(t) => {
+                    {
+                        let mut pending = shared.pending.lock().unwrap();
+                        if let Some(p) = pending.get_mut(&req_id) {
+                            shared.stats.shards[p.worker].inflight.sub(1);
+                            shared.stats.shards[t].inflight.add(1);
+                            p.worker = t;
+                        }
+                    }
+                    sync_depth(&shared.stats, i);
+                    sync_depth(&shared.stats, t);
+                    let frame = Frame::Transfer {
+                        req_id,
+                        tenant,
+                        trace_id,
+                        method,
+                        rollout,
+                        steps_done,
+                        decode_ms,
+                        sessions,
+                    };
+                    send_payload(shared, t, frame.encode());
+                    shared.stats.migration.sessions_migrated.add(n_sessions);
+                    shared.stats.migration.migration_bytes.add(kv_bytes);
+                    if trace::profiling() {
+                        trace::instant(Stage::Migrate, kv_bytes);
+                    }
+                }
+                None => {
+                    let p = shared.pending.lock().unwrap().remove(&req_id);
+                    if let Some(p) = p {
+                        shared.stats.shards[p.worker].inflight.sub(1);
+                        sync_depth(&shared.stats, p.worker);
+                        shared.stats.requests_failed.inc();
+                        shared.stats.shards[i].failed.inc();
+                        let _ = p.respond.send(Err(anyhow!(
+                            "worker {i} drained with no live worker to migrate its sessions to"
+                        )));
+                    }
+                }
+            }
+        }
+        Frame::DrainDone => {}
+        _ => shared.stats.migration.wire_errors.inc(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProcServer
+// ---------------------------------------------------------------------------
+
+impl ProcServer {
+    /// Start the coordinator: bind the loopback listener, start the
+    /// accept + supervisor threads, and (unless
+    /// [`ProcConfig::manual_workers`]) spawn one worker process per
+    /// slot via `worker_cmd`.
+    pub fn start(
+        workers: usize,
+        cfg: ProcConfig,
+        admission: AdmissionConfig,
+        worker_cmd: Vec<String>,
+    ) -> Result<ProcServer> {
+        if workers == 0 {
+            bail!("a process fleet needs at least one worker");
+        }
+        if worker_cmd.is_empty() && !cfg.manual_workers {
+            bail!("no worker command given (set manual_workers to connect workers yourself)");
+        }
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding the coordinator socket")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        let seed = ((std::process::id() as u64) << 32) | ((addr.port() as u64) ^ nanos);
+        let token = SplitMix64::new(seed).next_u64();
+        let shared = Arc::new(Shared {
+            slots: (0..workers)
+                .map(|_| {
+                    Mutex::new(SlotState {
+                        conn: None,
+                        last_seen: Instant::now(),
+                        generation: 0,
+                        child: None,
+                        backlog: Vec::new(),
+                        draining: false,
+                        dead: false,
+                        respawn_started: None,
+                    })
+                })
+                .collect(),
+            pending: Mutex::new(HashMap::new()),
+            stats: Arc::new(ServerStats::with_shards(workers)),
+            cfg,
+            token,
+            addr,
+            shutting_down: AtomicBool::new(false),
+            next_req: AtomicU64::new(0),
+            worker_cmd,
+            max_queue: admission.max_queue,
+        });
+        let mut threads = Vec::new();
+        let a = Arc::clone(&shared);
+        threads.push(
+            thread::Builder::new()
+                .name("se2-proc-accept".into())
+                .spawn(move || accept_loop(a, listener))
+                .context("spawning the accept thread")?,
+        );
+        let s = Arc::clone(&shared);
+        threads.push(
+            thread::Builder::new()
+                .name("se2-proc-supervise".into())
+                .spawn(move || supervisor_loop(s))
+                .context("spawning the supervisor thread")?,
+        );
+        if !shared.cfg.manual_workers {
+            for i in 0..workers {
+                spawn_child(&shared, i)?;
+            }
+        }
+        Ok(ProcServer { shared, threads })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    /// The coordinator's loopback listener address — workers (and the
+    /// protocol-fuzz tests) connect here.
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Handshake token; exposed so tests can connect hand-rolled
+    /// workers.
+    pub fn token(&self) -> u64 {
+        self.shared.token
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.shared.stats)
+    }
+
+    /// Sources for the introspection server (`/healthz` shows per-worker
+    /// liveness via the shard `live` gauges).
+    pub fn obs_sources(&self) -> crate::obs::http::ObsSources {
+        crate::obs::http::ObsSources {
+            stats: Arc::clone(&self.shared.stats),
+            tracer: None,
+            max_queue: self.shared.max_queue,
+        }
+    }
+
+    /// OS pid of worker `i`'s child process, if the coordinator spawned
+    /// one (fault-injection tests SIGKILL this).
+    pub fn worker_pid(&self, i: usize) -> Option<u32> {
+        self.shared.slots[i].lock().unwrap().child.as_ref().map(Child::id)
+    }
+
+    /// Spawn worker `i` told to connect through `connect` instead of the
+    /// coordinator's own address — the hook the chaos-proxy tests use to
+    /// interpose delays and partitions on the worker socket.
+    pub fn spawn_worker_via(&self, i: usize, connect: &str) -> Result<u32> {
+        {
+            let mut slot = self.shared.slots[i].lock().unwrap();
+            slot.dead = false;
+            slot.draining = false;
+        }
+        spawn_child_via(&self.shared, i, connect)
+    }
+
+    /// Cooperative handoff: stop routing new work to worker `i` and ask
+    /// it to export its live sessions ([`Frame::Transfer`]) and exit.
+    pub fn drain_worker(&self, i: usize) {
+        self.shared.slots[i].lock().unwrap().draining = true;
+        send_payload(&self.shared, i, Frame::Drain.encode());
+    }
+
+    pub fn submit(
+        &self,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
+        self.submit_for_tenant(0, method, request)
+    }
+
+    /// Admit + route a request to a live worker.  Mirrors
+    /// [`super::server::Server::submit_for_tenant`]: the receiver always
+    /// yields exactly one result, typed errors included.
+    pub fn submit_for_tenant(
+        &self,
+        tenant: u8,
+        method: Method,
+        request: RolloutRequest,
+    ) -> mpsc::Receiver<Result<RolloutResult>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.enqueue(tenant, method, request, rtx);
+        rrx
+    }
+
+    pub fn call(&self, method: Method, request: RolloutRequest) -> Result<RolloutResult> {
+        self.submit(method, request)
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+    }
+
+    fn enqueue(
+        &self,
+        tenant: u8,
+        method: Method,
+        request: RolloutRequest,
+        respond: mpsc::Sender<Result<RolloutResult>>,
+    ) {
+        let shared = &self.shared;
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            let _ = respond.send(Err(anyhow!("server is shut down — request not accepted")));
+            return;
+        }
+        let excluded = exclusion(shared);
+        let Some(worker) =
+            shard_of_excluding(request.scenario.scene_id(), shared.slots.len(), &excluded)
+        else {
+            let _ = respond.send(Err(anyhow!("no live worker process to route to")));
+            return;
+        };
+        let sh = &shared.stats.shards[worker];
+        sh.requests.inc();
+        if shared.max_queue > 0 && sh.inflight.get() >= shared.max_queue as u64 {
+            shared.stats.queue_rejections.inc();
+            sh.rejected.inc();
+            shared.stats.tenants.rejected(tenant);
+            let _ = respond.send(Err(anyhow::Error::new(AdmissionError::QueueFull {
+                shard: worker,
+                capacity: shared.max_queue,
+            })));
+            return;
+        }
+        let req_id = shared.next_req.fetch_add(1, Ordering::SeqCst) + 1;
+        let frame = Frame::Request {
+            req_id,
+            tenant,
+            trace_id: 0,
+            method: method.name().to_string(),
+            rollout: request.clone(),
+        };
+        sh.inflight.add(1);
+        sync_depth(&shared.stats, worker);
+        shared.stats.requests_in.inc();
+        shared.stats.tenants.admitted(tenant);
+        // pending entry goes in BEFORE the send: if the worker dies
+        // mid-write, death handling finds and replays the envelope
+        shared.pending.lock().unwrap().insert(
+            req_id,
+            Pending {
+                worker,
+                tenant,
+                method,
+                request,
+                submitted_at: Instant::now(),
+                respond,
+            },
+        );
+        send_payload(shared, worker, frame.encode());
+    }
+
+    /// Stop the fleet: kill children, close sockets, fail anything
+    /// still pending.  Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        shutdown_now(&self.shared);
+    }
+}
+
+fn shutdown_now(shared: &Arc<Shared>) {
+    if shared.shutting_down.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    for slot in &shared.slots {
+        let mut slot = slot.lock().unwrap();
+        slot.dead = true;
+        slot.backlog.clear();
+        if let Some(conn) = slot.conn.take() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    // wake the accept loop so it observes shutting_down and exits
+    let _ = TcpStream::connect(shared.addr);
+    let drained: Vec<Pending> = {
+        let mut pending = shared.pending.lock().unwrap();
+        pending.drain().map(|(_, p)| p).collect()
+    };
+    for p in drained {
+        let _ = p.respond.send(Err(anyhow!("server is shut down — request abandoned")));
+    }
+}
+
+impl Drop for ProcServer {
+    fn drop(&mut self) {
+        shutdown_now(&self.shared);
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Connection parameters for one worker process (parsed from the argv
+/// the coordinator passed to it).
+pub struct WorkerOptions {
+    pub connect: String,
+    pub worker_id: u32,
+    pub token: u64,
+    pub heartbeat: Duration,
+}
+
+enum WorkerEvent {
+    Frame(Frame),
+    Disconnected,
+}
+
+/// One admitted request on the worker: the stepping state the
+/// continuous loop advances, plus everything needed to re-wrap it in a
+/// [`Frame::Transfer`] on drain.
+struct ActiveReq {
+    req_id: u64,
+    tenant: u8,
+    trace_id: u64,
+    method: Method,
+    request: RolloutRequest,
+    sessions: Vec<SessionState>,
+    steps_done: usize,
+    decode_ms: f64,
+}
+
+/// The coordinator may still be binding its listener when a freshly
+/// spawned worker starts; retry briefly instead of dying on the first
+/// refused connect.
+fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..200 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    Err(anyhow!("connecting to coordinator {addr}: {}", last.unwrap()))
+}
+
+/// Run one worker process: connect, handshake, then loop stepping
+/// admitted rollouts and answering frames until the coordinator goes
+/// away (socket loss => clean exit — a worker never outlives its
+/// coordinator as an orphan) or a `Drain` arrives.
+pub fn worker_serve(
+    engine: &RolloutEngine,
+    backend: &mut Backend,
+    cache: CacheConfig,
+    opts: &WorkerOptions,
+) -> Result<()> {
+    let mut conn = connect_retry(&opts.connect)?;
+    let _ = conn.set_nodelay(true);
+    Frame::Hello {
+        version: WIRE_VERSION,
+        worker_id: opts.worker_id,
+        pid: std::process::id(),
+        token: opts.token,
+    }
+    .write_to(&mut conn)
+    .context("sending Hello")?;
+    match Frame::read_from(&mut conn).context("waiting for HelloAck")? {
+        Frame::HelloAck => {}
+        other => bail!("expected HelloAck, coordinator sent {other:?}"),
+    }
+    let (tx, rx) = mpsc::channel();
+    let mut reader = conn.try_clone().context("cloning the socket for reads")?;
+    thread::Builder::new()
+        .name("se2-worker-read".into())
+        .spawn(move || loop {
+            match Frame::read_from(&mut reader) {
+                Ok(f) => {
+                    if tx.send(WorkerEvent::Frame(f)).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => {
+                    let _ = tx.send(WorkerEvent::Disconnected);
+                    return;
+                }
+            }
+        })
+        .context("spawning the worker reader thread")?;
+
+    let pool = KvCachePool::new(cache, Arc::new(CacheStats::default()));
+    let mut active: Vec<ActiveReq> = Vec::new();
+    let mut hb_seq: u64 = 0;
+    let mut last_hb = Instant::now();
+    loop {
+        let mut events: Vec<WorkerEvent> = Vec::new();
+        if active.is_empty() {
+            // idle: block until traffic or the next heartbeat is due
+            let wait = opts
+                .heartbeat
+                .saturating_sub(last_hb.elapsed())
+                .max(Duration::from_millis(1));
+            match rx.recv_timeout(wait) {
+                Ok(ev) => events.push(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        while let Ok(ev) = rx.try_recv() {
+            events.push(ev);
+        }
+        for ev in events {
+            match ev {
+                WorkerEvent::Disconnected => return Ok(()),
+                WorkerEvent::Frame(Frame::Request {
+                    req_id,
+                    tenant,
+                    trace_id,
+                    method,
+                    rollout,
+                }) => {
+                    let admitted =
+                        admit_request(engine, backend, req_id, tenant, trace_id, &method, rollout);
+                    match admitted {
+                        Ok(a) => active.push(a),
+                        Err(msg) => {
+                            let resp = Frame::Response { req_id, outcome: Err(msg) };
+                            if resp.write_to(&mut conn).is_err() {
+                                return Ok(());
+                            }
+                        }
+                    }
+                }
+                WorkerEvent::Frame(Frame::Transfer {
+                    req_id,
+                    tenant,
+                    trace_id,
+                    method,
+                    rollout,
+                    steps_done,
+                    decode_ms,
+                    sessions,
+                }) => {
+                    let admitted = admit_transfer(
+                        engine, backend, &pool, req_id, tenant, trace_id, &method, rollout,
+                        steps_done, decode_ms, sessions,
+                    );
+                    match admitted {
+                        Ok(a) => active.push(a),
+                        Err(msg) => {
+                            let resp = Frame::Response { req_id, outcome: Err(msg) };
+                            if resp.write_to(&mut conn).is_err() {
+                                return Ok(());
+                            }
+                        }
+                    }
+                }
+                WorkerEvent::Frame(Frame::Drain) => {
+                    export_all(&mut conn, &pool, &mut active);
+                    return Ok(());
+                }
+                WorkerEvent::Frame(_) => {} // coordinator never sends anything else
+            }
+        }
+        if last_hb.elapsed() >= opts.heartbeat {
+            hb_seq += 1;
+            if (Frame::Heartbeat { seq: hb_seq }.write_to(&mut conn)).is_err() {
+                return Ok(());
+            }
+            last_hb = Instant::now();
+        }
+        if !active.is_empty() {
+            for (req_id, outcome) in step_active(engine, backend, &pool, &mut active) {
+                if (Frame::Response { req_id, outcome }.write_to(&mut conn)).is_err() {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Validate and admit a fresh request; errors go back as typed strings
+/// in a `Response` frame, matching the in-process server's messages.
+#[allow(clippy::too_many_arguments)]
+fn admit_request(
+    engine: &RolloutEngine,
+    backend: &Backend,
+    req_id: u64,
+    tenant: u8,
+    trace_id: u64,
+    method: &str,
+    rollout: RolloutRequest,
+) -> Result<ActiveReq, String> {
+    let m = Method::parse(method).map_err(|e| format!("{e:#}"))?;
+    if backend.n_replicas(m) == 0 {
+        return Err(format!("method '{method}' is not deployed on this worker"));
+    }
+    if rollout.n_samples == 0 {
+        return Err("rollout requires at least one sample".into());
+    }
+    let h = engine.sim.history_steps;
+    if rollout.t0 + 1 < h || rollout.t0 >= rollout.scenario.states.len() {
+        return Err(format!(
+            "t0 {} outside the scenario (history {h}, {} recorded steps)",
+            rollout.t0,
+            rollout.scenario.states.len()
+        ));
+    }
+    let n_agents = rollout.scenario.states[rollout.t0].len();
+    if n_agents == 0 {
+        return Err("scenario has no agents at t0".into());
+    }
+    for t in rollout.t0 + 1 - h..=rollout.t0 {
+        if rollout.scenario.states[t].len() != n_agents {
+            return Err(format!("agent count varies across the history window at t={t}"));
+        }
+    }
+    let sessions = (0..rollout.n_samples)
+        .map(|s| engine.begin_session(&rollout, s as u32))
+        .collect();
+    Ok(ActiveReq {
+        req_id,
+        tenant,
+        trace_id,
+        method: m,
+        request: rollout,
+        sessions,
+        steps_done: 0,
+        decode_ms: 0.0,
+    })
+}
+
+/// Resume a migrated request: install each session's KV blob into the
+/// local pool (a corrupt blob silently degrades to a cache-miss
+/// rebuild — correctness never depends on the cache) and rebuild the
+/// stepping state from the transferred windows/tracks.
+#[allow(clippy::too_many_arguments)]
+fn admit_transfer(
+    engine: &RolloutEngine,
+    backend: &Backend,
+    pool: &KvCachePool,
+    req_id: u64,
+    tenant: u8,
+    trace_id: u64,
+    method: &str,
+    rollout: RolloutRequest,
+    steps_done: u32,
+    decode_ms: f64,
+    transfers: Vec<SessionTransfer>,
+) -> Result<ActiveReq, String> {
+    let m = Method::parse(method).map_err(|e| format!("{e:#}"))?;
+    if backend.n_replicas(m) == 0 {
+        return Err(format!("method '{method}' is not deployed on this worker"));
+    }
+    if transfers.is_empty() {
+        return Err("transfer carries no sessions".into());
+    }
+    let _ = engine; // session geometry is already baked into the transfer
+    let mut sessions = Vec::with_capacity(transfers.len());
+    for st in transfers {
+        let key = SessionKey {
+            scene: rollout.scenario.scene_id(),
+            t0: rollout.t0 as u32,
+            sample: st.sample,
+        };
+        if !st.kv.is_empty() {
+            if let Ok((k, cache)) = decode_session(&st.kv, m.name()) {
+                if k == key {
+                    pool.install_session(k, cache);
+                }
+            }
+        }
+        sessions.push(SessionState::from_parts(
+            rollout.scenario.map_elements.clone(),
+            st.window,
+            st.track,
+            key,
+        ));
+    }
+    Ok(ActiveReq {
+        req_id,
+        tenant,
+        trace_id,
+        method: m,
+        request: rollout,
+        sessions,
+        steps_done: steps_done as usize,
+        decode_ms,
+    })
+}
+
+/// One continuous-scheduler pass over the active set: batch all
+/// requests per method into one `step_sessions` call (per-request
+/// slots stay contiguous so [`RolloutEngine::step_seed`]'s chunk math
+/// matches the single-process path bit-for-bit), then retire finished
+/// requests.  Returns `(req_id, outcome)` pairs ready to wire back.
+fn step_active(
+    engine: &RolloutEngine,
+    backend: &mut Backend,
+    pool: &KvCachePool,
+    active: &mut Vec<ActiveReq>,
+) -> Vec<(u64, Result<RolloutResult, String>)> {
+    let mut out = Vec::new();
+    for m in Method::ALL {
+        if !active.iter().any(|a| a.method == m) {
+            continue;
+        }
+        let Some(model) = backend.route(m) else { continue };
+        let mut slots: Vec<StepSlot> = Vec::new();
+        for a in active.iter_mut().filter(|a| a.method == m) {
+            let req = &a.request;
+            let done = a.steps_done;
+            for (i, s) in a.sessions.iter_mut().enumerate() {
+                slots.push(StepSlot {
+                    session: s,
+                    params: SlotParams {
+                        seed: engine.step_seed(req, done, i),
+                        temperature: req.temperature,
+                        trace: 0,
+                    },
+                });
+            }
+        }
+        let stepped = engine.step_sessions(&**model, &mut slots, pool);
+        drop(slots);
+        match stepped {
+            Ok(rep) => {
+                let per_slot = rep.decode_ms / rep.real_slots.max(1) as f64;
+                for a in active.iter_mut().filter(|a| a.method == m) {
+                    a.decode_ms += per_slot * a.sessions.len() as f64;
+                    a.steps_done += 1;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let mut i = 0;
+                while i < active.len() {
+                    if active[i].method == m {
+                        let a = active.swap_remove(i);
+                        for s in &a.sessions {
+                            pool.end_session(s.key());
+                        }
+                        out.push((a.req_id, Err(msg.clone())));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].steps_done >= engine.sim.future_steps {
+            let a = active.swap_remove(i);
+            for s in &a.sessions {
+                pool.end_session(s.key());
+            }
+            let decode_ms = a.decode_ms / a.steps_done.max(1) as f64;
+            let res = engine.finish_request(&a.request, &a.sessions, decode_ms);
+            out.push((a.req_id, Ok(res)));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Drain: ship every active request back to the coordinator as a
+/// [`Frame::Transfer`] — full request context, per-sample windows and
+/// tracks, and each session's KV cache as a [`super::session_codec`]
+/// blob — then signal `DrainDone`.
+fn export_all(conn: &mut TcpStream, pool: &KvCachePool, active: &mut Vec<ActiveReq>) {
+    for a in active.drain(..) {
+        let sessions: Vec<SessionTransfer> = a
+            .sessions
+            .iter()
+            .map(|s| {
+                let kv = pool
+                    .export_session(s.key())
+                    .map(|c| encode_session(a.method.name(), s.key(), &c))
+                    .unwrap_or_default();
+                SessionTransfer {
+                    sample: s.key().sample,
+                    window: s.window().to_vec(),
+                    track: s.track().to_vec(),
+                    kv,
+                }
+            })
+            .collect();
+        for s in &a.sessions {
+            pool.end_session(s.key());
+        }
+        let frame = Frame::Transfer {
+            req_id: a.req_id,
+            tenant: a.tenant,
+            trace_id: a.trace_id,
+            method: a.method.name().to_string(),
+            rollout: a.request,
+            steps_done: a.steps_done as u32,
+            decode_ms: a.decode_ms,
+            sessions,
+        };
+        if frame.write_to(conn).is_err() {
+            return;
+        }
+    }
+    let _ = Frame::DrainDone.write_to(conn);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::coordinator::router::shard_of;
+    use crate::sim::ScenarioGenerator;
+
+    fn test_cfg() -> ProcConfig {
+        ProcConfig {
+            heartbeat: Duration::from_millis(25),
+            death_after: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(2),
+            respawn: false,
+            manual_workers: true,
+        }
+    }
+
+    fn fleet(n: usize) -> ProcServer {
+        ProcServer::start(n, test_cfg(), AdmissionConfig::default(), Vec::new()).unwrap()
+    }
+
+    /// Hand-rolled worker: registers over the real socket protocol but
+    /// is driven frame-by-frame by the test.
+    fn fake_worker(server: &ProcServer, id: u32) -> TcpStream {
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let hello = Frame::Hello {
+            version: WIRE_VERSION,
+            worker_id: id,
+            pid: 4242,
+            token: server.token(),
+        };
+        hello.write_to(&mut s).unwrap();
+        match Frame::read_from(&mut s).unwrap() {
+            Frame::HelloAck => s,
+            f => panic!("expected HelloAck, got {f:?}"),
+        }
+    }
+
+    /// A request whose scene hashes to worker `want` out of `n`.
+    fn request_for_worker(want: usize, n: usize) -> RolloutRequest {
+        let sim = SimConfig::default();
+        let scenarios = ScenarioGenerator::new(sim.clone());
+        for seed in 0..10_000u64 {
+            let s = scenarios.generate(seed);
+            if shard_of(s.scene_id(), n) == want {
+                return RolloutRequest {
+                    scenario: s,
+                    t0: sim.history_steps - 1,
+                    n_samples: 2,
+                    temperature: 0.5,
+                    seed: 7,
+                };
+            }
+        }
+        unreachable!("no scene routed to worker {want}");
+    }
+
+    fn dummy_result() -> RolloutResult {
+        RolloutResult {
+            trajectories: Vec::new(),
+            min_ade: Vec::new(),
+            classes: Vec::new(),
+            collisions: 0,
+            decode_ms: 0.25,
+        }
+    }
+
+    fn wait_until(deadline_ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(deadline_ms) {
+            if cond() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        cond()
+    }
+
+    #[test]
+    fn bad_token_hello_is_refused_and_counted() {
+        let server = fleet(1);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        let hello = Frame::Hello {
+            version: WIRE_VERSION,
+            worker_id: 0,
+            pid: 1,
+            token: server.token() ^ 1,
+        };
+        hello.write_to(&mut s).unwrap();
+        // the coordinator hangs up without a HelloAck
+        assert!(Frame::read_from(&mut s).is_err());
+        let stats = server.stats();
+        assert!(wait_until(2_000, || stats.migration.wire_errors.get() == 1));
+        assert_eq!(stats.shards[0].live.get(), 0, "never registered as live");
+    }
+
+    #[test]
+    fn fake_worker_serves_a_request_end_to_end() {
+        let server = fleet(1);
+        let mut w = fake_worker(&server, 0);
+        let rx = server.submit(Method::Se2Fourier, request_for_worker(0, 1));
+        // the worker sees the request frame with the envelope intact
+        let (req_id, rollout) = match Frame::read_from(&mut w).unwrap() {
+            Frame::Request { req_id, method, rollout, .. } => {
+                assert_eq!(method, "se2fourier");
+                (req_id, rollout)
+            }
+            f => panic!("expected Request, got {f:?}"),
+        };
+        assert_eq!(rollout.n_samples, 2);
+        let resp = Frame::Response { req_id, outcome: Ok(dummy_result()) };
+        resp.write_to(&mut w).unwrap();
+        let res = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(res.decode_ms, 0.25);
+        let stats = server.stats();
+        assert_eq!(stats.requests_in.get(), 1);
+        assert!(wait_until(2_000, || stats.requests_done.get() == 1));
+        assert_eq!(stats.shards[0].inflight.get(), 0);
+    }
+
+    #[test]
+    fn dead_workers_envelope_replays_to_a_survivor() {
+        let server = fleet(2);
+        let mut w0 = fake_worker(&server, 0);
+        let mut w1 = fake_worker(&server, 1);
+        let rx = server.submit(Method::Abs, request_for_worker(0, 2));
+        // worker 0 receives the envelope, then dies mid-rollout
+        let died_req = match Frame::read_from(&mut w0).unwrap() {
+            Frame::Request { req_id, .. } => req_id,
+            f => panic!("expected Request, got {f:?}"),
+        };
+        drop(w0);
+        // the coordinator replays the same envelope to the survivor
+        let req_id = match Frame::read_from(&mut w1).unwrap() {
+            Frame::Request { req_id, method, .. } => {
+                assert_eq!(method, "abs");
+                req_id
+            }
+            f => panic!("expected replayed Request, got {f:?}"),
+        };
+        assert_eq!(req_id, died_req, "replay reuses the envelope id");
+        let resp = Frame::Response { req_id, outcome: Ok(dummy_result()) };
+        resp.write_to(&mut w1).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let stats = server.stats();
+        assert_eq!(stats.migration.worker_deaths.get(), 1);
+        assert_eq!(stats.migration.envelopes_replayed.get(), 1);
+        assert_eq!(stats.requests_failed.get(), 0, "nothing lost");
+    }
+}
+

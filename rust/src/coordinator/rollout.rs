@@ -91,6 +91,34 @@ impl SessionState {
     pub fn key(&self) -> SessionKey {
         self.key
     }
+
+    /// The live history window (serialization surface of the migration
+    /// codec): `window[step][agent]`, oldest step first.
+    pub fn window(&self) -> &[Vec<AgentState>] {
+        &self.window
+    }
+
+    /// Recorded world positions per agent per emitted step.
+    pub fn track(&self) -> &[Vec<(f64, f64)>] {
+        &self.track
+    }
+
+    /// Reassemble a session from migrated parts (the receive half of a
+    /// worker-to-worker transfer).  The parts are installed verbatim, so
+    /// the rebuilt session steps bit-identically to the one exported.
+    pub fn from_parts(
+        map: Vec<MapElement>,
+        window: Vec<Vec<AgentState>>,
+        track: Vec<Vec<(f64, f64)>>,
+        key: SessionKey,
+    ) -> SessionState {
+        SessionState {
+            map,
+            window,
+            track,
+            key,
+        }
+    }
 }
 
 /// One scene slot of a continuous step batch: a live session plus the

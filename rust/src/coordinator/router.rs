@@ -25,6 +25,30 @@ pub fn shard_of(scene_id: u64, n_shards: usize) -> usize {
     (SplitMix64::new(scene_id).next_u64() % n_shards.max(1) as u64) as usize
 }
 
+/// [`shard_of`] with a set of excluded (dead/draining) shards: draws
+/// from the same SplitMix64 stream until it lands on a live shard, so
+/// reassignment is a pure function of the scene id and the exclusion
+/// set — every coordinator replays the same choice.  Returns `None`
+/// when every shard is excluded.
+pub fn shard_of_excluding(scene_id: u64, n_shards: usize, excluded: &[bool]) -> Option<usize> {
+    debug_assert!(n_shards > 0);
+    debug_assert_eq!(excluded.len(), n_shards);
+    if excluded.iter().all(|&e| e) {
+        return None;
+    }
+    let mut rng = SplitMix64::new(scene_id);
+    // bounded probe on the hash stream keeps the common case (few dead
+    // shards) O(1); the deterministic linear fallback guarantees termination
+    for _ in 0..n_shards.max(1) * 4 {
+        let s = (rng.next_u64() % n_shards.max(1) as u64) as usize;
+        if !excluded[s] {
+            return Some(s);
+        }
+    }
+    let first = shard_of(scene_id, n_shards);
+    (0..n_shards).map(|off| (first + off) % n_shards).find(|&s| !excluded[s])
+}
+
 /// Front-end router over worker shards.  Stateless by design: routing
 /// must stay a pure function of the request (plus the live load snapshot
 /// for stateless traffic), so no atomics are touched on the submit path.
@@ -51,15 +75,23 @@ impl ShardRouter {
     }
 
     /// Least-loaded route for stateless requests; `loads` is the current
-    /// per-shard inflight depth in shard order.  Ties break to the lowest
-    /// shard index (deterministic).
+    /// per-shard inflight depth in shard order.
+    ///
+    /// Tie-break contract (pinned by `least_loaded_ties_are_positional`):
+    /// the **first** shard at the minimum load wins — strictly-lower load
+    /// is the only thing that moves the pick.  Spelled as an explicit
+    /// fold rather than `min_by_key` so the contract is in the code, not
+    /// in an iterator adaptor's documented-but-easy-to-miss stability.
     pub fn least_loaded(&self, loads: impl IntoIterator<Item = u64>) -> usize {
-        loads
-            .into_iter()
-            .enumerate()
-            .min_by_key(|&(i, load)| (load, i))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        let mut best = 0usize;
+        let mut best_load = u64::MAX;
+        for (i, load) in loads.into_iter().enumerate() {
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
     }
 }
 
@@ -185,5 +217,43 @@ mod tests {
         assert_eq!(r.least_loaded([5u64, 1, 3]), 1);
         assert_eq!(r.least_loaded([2u64, 2, 2]), 0, "ties break low");
         assert_eq!(r.least_loaded([4u64, 0, 0]), 1, "first minimum wins");
+    }
+
+    /// Pin the tie-break contract: the winner is the first index at the
+    /// minimum, for every rotation of a tied load vector.  Would have
+    /// caught any rewrite whose ties depend on iteration internals.
+    #[test]
+    fn least_loaded_ties_are_positional() {
+        let r = ShardRouter::new(4);
+        let base = [3u64, 1, 1, 1];
+        for rot in 0..4 {
+            let loads: Vec<u64> = (0..4).map(|i| base[(i + rot) % 4]).collect();
+            let want = loads.iter().position(|&l| l == 1).unwrap();
+            assert_eq!(r.least_loaded(loads.clone()), want, "loads {loads:?}");
+        }
+        // empty input degrades to shard 0, never panics
+        assert_eq!(r.least_loaded(std::iter::empty()), 0);
+    }
+
+    #[test]
+    fn excluding_reroutes_deterministically_off_dead_shards() {
+        let n = 4;
+        for scene in 0..512u64 {
+            let home = shard_of(scene, n);
+            // nothing excluded: identical to the plain assignment
+            assert_eq!(shard_of_excluding(scene, n, &[false; 4]), Some(home));
+            // home shard dead: lands elsewhere, and the same elsewhere
+            // on every call (replayable reassignment)
+            let mut dead = [false; 4];
+            dead[home] = true;
+            let moved = shard_of_excluding(scene, n, &dead).unwrap();
+            assert_ne!(moved, home);
+            assert_eq!(shard_of_excluding(scene, n, &dead), Some(moved));
+            // one survivor: always found, even if the probe is unlucky
+            let mut all_but = [true; 4];
+            all_but[(home + 1) % n] = false;
+            assert_eq!(shard_of_excluding(scene, n, &all_but), Some((home + 1) % n));
+        }
+        assert_eq!(shard_of_excluding(7, 4, &[true; 4]), None);
     }
 }

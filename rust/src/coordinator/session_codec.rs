@@ -1,0 +1,359 @@
+//! Serialization of one KV session for cross-worker migration
+//! (DESIGN.md §19).
+//!
+//! A migrating session ships its cached [`WindowCache`] rows verbatim —
+//! f32 rows byte-for-byte, quantized rows as their **raw u16 codes plus
+//! the per-row scale/offset pair** — so the destination worker resumes
+//! with warm rows and no re-quantization: the rebuilt cache emits
+//! bit-identically to the one exported.  Shipping raw f16/bf16 codes is
+//! also what halves migration bytes for quantized sessions (DESIGN.md
+//! §14): the wire size *is* the resident size.
+//!
+//! The format follows the [`crate::checkpoint`] discipline (magic,
+//! version, little-endian, length-prefixed method string, actionable
+//! errors on skew) but carries a session, not weights:
+//!
+//! ```text
+//! [SESSION_MAGIC u32][SESSION_VERSION u32][method str]
+//! [scene u64][t0 u32][sample u32][precision u8]
+//! [feat_dim u32][n_agents u32][history_steps u32][n_map u32]
+//! map rows:   n_map * feat_dim f32, then n_map world poses (3 x f64)
+//! step rows:  per step — n_agents feature rows (raw f32, or
+//!             scale f32 + offset f32 + feat_dim u16 codes per row),
+//!             then n_agents world poses (3 x f64)
+//! ```
+//!
+//! The header is exactly [`session_header_bytes`] bytes; the body is
+//! exactly [`crate::attention::memmodel::map_tokens_bytes`] `+`
+//! [`crate::attention::memmodel::window_cache_bytes`] — serialization
+//! adds nothing beyond the documented header overhead, an invariant the
+//! `session_codec_props` property suite pins against the memmodel.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::memmodel::{map_tokens_bytes, window_cache_bytes};
+use crate::attention::quant::FeatureRows;
+use crate::config::CachePrecision;
+use crate::geometry::Pose;
+
+use super::kvcache::{MapTokens, SessionKey, WindowCache};
+use super::wire::{
+    put_f32, put_pose, put_str, put_u16, put_u32, put_u64, put_u8, take_pose, Cursor,
+};
+
+/// Session-blob magic (distinct from the checkpoint magic `0x5E2A_C4B7`
+/// and the frame magic `0x5E2A_F8A3`).
+pub const SESSION_MAGIC: u32 = 0x5E55_C0DE;
+/// Bumped on any layout change; a mismatch fails loudly at decode.
+pub const SESSION_VERSION: u32 = 1;
+
+const MAX_MAP_ROWS: u64 = 1 << 20;
+const MAX_AGENT_ROWS: u64 = 4096;
+const MAX_STEPS: u64 = 1 << 16;
+const MAX_FEAT_DIM: u64 = 1 << 16;
+/// Wire bytes of one pose (3 x f64) — matches
+/// [`crate::attention::memmodel::POSE_BYTES`].
+const POSE_WIRE_BYTES: usize = 24;
+
+/// Exact header size of an encoded session blob: every fixed field plus
+/// the length-prefixed method string.  This is the codec's entire
+/// overhead over the memmodel's resident-byte formulas.
+pub fn session_header_bytes(method: &str) -> usize {
+    // magic + version + method (len prefix + bytes) + scene + t0 +
+    // sample + precision + feat_dim + n_agents + history_steps + n_map
+    4 + 4 + (4 + method.len()) + 8 + 4 + 4 + 1 + 4 + 4 + 4 + 4
+}
+
+/// Exact size of the blob [`encode_session`] produces for a session of
+/// this shape: header overhead plus the memmodel byte formulas.
+pub fn session_blob_bytes(
+    method: &str,
+    n_map: usize,
+    n_agents: usize,
+    history_steps: usize,
+    feat_dim: usize,
+    precision: CachePrecision,
+) -> usize {
+    session_header_bytes(method)
+        + map_tokens_bytes(n_map, feat_dim)
+        + window_cache_bytes(n_agents, history_steps, feat_dim, precision)
+}
+
+fn precision_tag(p: CachePrecision) -> u8 {
+    match p {
+        CachePrecision::F32 => 0,
+        CachePrecision::F16 => 1,
+        CachePrecision::Bf16 => 2,
+    }
+}
+
+fn precision_from(tag: u8) -> Result<CachePrecision> {
+    match tag {
+        0 => Ok(CachePrecision::F32),
+        1 => Ok(CachePrecision::F16),
+        2 => Ok(CachePrecision::Bf16),
+        t => bail!("corrupt session blob: unknown precision tag {t}"),
+    }
+}
+
+fn put_feature_rows(out: &mut Vec<u8>, rows: &FeatureRows) {
+    if let Some(raw) = rows.raw_f32() {
+        for &x in raw {
+            put_f32(out, x);
+        }
+    } else {
+        let q = rows.as_quant().expect("non-f32 rows are quantized");
+        for j in 0..q.len() {
+            let (scale, offset, codes) = q.row_raw(j);
+            put_f32(out, scale);
+            put_f32(out, offset);
+            for &code in codes {
+                put_u16(out, code);
+            }
+        }
+    }
+}
+
+fn take_feature_rows(
+    c: &mut Cursor<'_>,
+    precision: CachePrecision,
+    n_rows: usize,
+    feat_dim: usize,
+) -> Result<FeatureRows> {
+    let mut rows = FeatureRows::new(precision, feat_dim);
+    if precision.is_quantized() {
+        let q = rows.as_quant_mut().expect("quantized store");
+        let mut codes = Vec::with_capacity(feat_dim);
+        for _ in 0..n_rows {
+            let scale = c.f32("row scale")?;
+            let offset = c.f32("row offset")?;
+            codes.clear();
+            for _ in 0..feat_dim {
+                codes.push(c.u16("row code")?);
+            }
+            q.push_row_raw(scale, offset, &codes);
+        }
+    } else {
+        let raw = c.bytes(n_rows * feat_dim * 4, "f32 rows")?;
+        let mut data = Vec::with_capacity(n_rows * feat_dim);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        rows.push_rows(&data);
+    }
+    Ok(rows)
+}
+
+/// Serialize one session's cached window for migration.  `method` is the
+/// attention method the session was decoding under — the decode side
+/// refuses to resume it under a different method.
+pub fn encode_session(method: &str, key: SessionKey, cache: &WindowCache) -> Vec<u8> {
+    let map = cache.map();
+    let fd = cache.feat_dim();
+    let mut out = Vec::with_capacity(session_blob_bytes(
+        method,
+        map.len(),
+        cache.n_agents(),
+        cache.history_steps(),
+        fd,
+        cache.precision(),
+    ));
+    put_u32(&mut out, SESSION_MAGIC);
+    put_u32(&mut out, SESSION_VERSION);
+    put_str(&mut out, method);
+    put_u64(&mut out, key.scene);
+    put_u32(&mut out, key.t0);
+    put_u32(&mut out, key.sample);
+    put_u8(&mut out, precision_tag(cache.precision()));
+    put_u32(&mut out, fd as u32);
+    put_u32(&mut out, cache.n_agents() as u32);
+    put_u32(&mut out, cache.history_steps() as u32);
+    put_u32(&mut out, map.len() as u32);
+
+    for &x in &map.feat {
+        put_f32(&mut out, x);
+    }
+    for p in &map.world_pose {
+        put_pose(&mut out, p);
+    }
+    for (feat, poses) in cache.step_rows() {
+        put_feature_rows(&mut out, feat);
+        for p in poses {
+            put_pose(&mut out, p);
+        }
+    }
+    out
+}
+
+/// Decode a migrated session blob back into its cache-pool identity and
+/// a ready-to-install [`WindowCache`].  Version or method skew fails
+/// with an actionable message, mirroring [`crate::checkpoint::load`];
+/// malformed bytes are recoverable errors, never a panic.
+pub fn decode_session(bytes: &[u8], expected_method: &str) -> Result<(SessionKey, WindowCache)> {
+    let mut c = Cursor::new(bytes);
+    let magic = c.u32("session magic").context("decoding session blob")?;
+    if magic != SESSION_MAGIC {
+        bail!("not a se2attn session blob (bad magic {magic:#010x})");
+    }
+    let version = c.u32("session version")?;
+    if version != SESSION_VERSION {
+        bail!(
+            "session codec version {version}, expected {SESSION_VERSION} — \
+             re-export the session from a worker running this build"
+        );
+    }
+    let method = c.str("session method")?;
+    if method != expected_method {
+        bail!(
+            "session was exported for method '{method}', expected \
+             '{expected_method}' — refusing to resume a KV cache under a \
+             different attention method"
+        );
+    }
+    let key = SessionKey {
+        scene: c.u64("session scene")?,
+        t0: c.u32("session t0")?,
+        sample: c.u32("session sample")?,
+    };
+    let precision = precision_from(c.u8("session precision")?)?;
+    let feat_dim = c.count("session feat_dim", MAX_FEAT_DIM)?;
+    let n_agents = c.count("session agents", MAX_AGENT_ROWS)?;
+    let h = c.count("session steps", MAX_STEPS)?;
+    let n_map = c.count("session map rows", MAX_MAP_ROWS)?;
+
+    // every count is validated against the bytes actually present before
+    // any proportional allocation (the framing discipline of wire.rs)
+    let map_raw = c.bytes(n_map * feat_dim * 4, "map features")?;
+    let mut map_feat = Vec::with_capacity(n_map * feat_dim);
+    for chunk in map_raw.chunks_exact(4) {
+        map_feat.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    if c.remaining() < n_map * POSE_WIRE_BYTES {
+        bail!("corrupt session blob: truncated inside map poses");
+    }
+    let mut map_pose = Vec::with_capacity(n_map);
+    for _ in 0..n_map {
+        map_pose.push(take_pose(&mut c)?);
+    }
+    let map = Arc::new(MapTokens {
+        feat: map_feat,
+        world_pose: map_pose,
+    });
+
+    let mut steps = Vec::with_capacity(h);
+    for _ in 0..h {
+        let feat = take_feature_rows(&mut c, precision, n_agents, feat_dim)?;
+        let mut poses = Vec::with_capacity(n_agents);
+        for _ in 0..n_agents {
+            poses.push(take_pose(&mut c)?);
+        }
+        steps.push((feat, poses));
+    }
+    if !c.is_empty() {
+        bail!(
+            "corrupt session blob: {} trailing bytes after the last step",
+            c.remaining()
+        );
+    }
+    let cache = WindowCache::from_parts(map, steps, precision)?;
+    Ok((key, cache))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, SimConfig};
+    use crate::sim::ScenarioGenerator;
+    use crate::tokenizer::Tokenizer;
+
+    fn sample_cache(seed: u64, precision: CachePrecision) -> (Tokenizer, WindowCache) {
+        let sim = SimConfig::default();
+        let tok = Tokenizer::new(&ModelConfig::synthetic(), &sim);
+        let s = ScenarioGenerator::new(sim.clone()).generate(seed);
+        let window: Vec<_> = (0..sim.history_steps).map(|t| s.states[t].clone()).collect();
+        let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
+        let cache = WindowCache::from_window_with(&tok, map, &window, precision).unwrap();
+        (tok, cache)
+    }
+
+    #[test]
+    fn roundtrip_emits_bit_identically_at_every_precision() {
+        for p in CachePrecision::ALL {
+            let (tok, cache) = sample_cache(11, p);
+            let key = SessionKey { scene: 11, t0: 7, sample: 2 };
+            let blob = encode_session("se2fourier", key, &cache);
+            let (back_key, back) = decode_session(&blob, "se2fourier").unwrap();
+            assert_eq!(back_key, key);
+            assert_eq!(back.precision(), p);
+            let (a, b) = (cache.emit(&tok).unwrap(), back.emit(&tok).unwrap());
+            assert_eq!(a.feat, b.feat, "{p:?}: features must round-trip losslessly");
+            assert_eq!(a.pose, b.pose, "{p:?}");
+            assert_eq!(a.tq, b.tq, "{p:?}");
+            assert_eq!(a.frame, b.frame, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn blob_size_matches_memmodel_exactly() {
+        let sim = SimConfig::default();
+        for p in CachePrecision::ALL {
+            let (_, cache) = sample_cache(3, p);
+            let key = SessionKey { scene: 3, t0: 7, sample: 0 };
+            let blob = encode_session("abs", key, &cache);
+            assert_eq!(
+                blob.len(),
+                session_blob_bytes(
+                    "abs",
+                    cache.map().len(),
+                    sim.n_agents,
+                    sim.history_steps,
+                    cache.feat_dim(),
+                    p
+                ),
+                "{p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn version_and_method_skew_fail_actionably() {
+        let (_, cache) = sample_cache(5, CachePrecision::F32);
+        let key = SessionKey { scene: 5, t0: 7, sample: 0 };
+        let mut blob = encode_session("se2fourier", key, &cache);
+
+        // wrong method: refuse to resume under a different attention method
+        let err = decode_session(&blob, "abs").unwrap_err();
+        assert!(format!("{err:#}").contains("exported for method 'se2fourier'"), "{err:#}");
+        assert!(format!("{err:#}").contains("'abs'"), "{err:#}");
+
+        // bumped version: actionable, names both versions
+        blob[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let err = decode_session(&blob, "se2fourier").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("session codec version 2, expected 1"), "{msg}");
+
+        // garbage magic: typed, names the blob kind
+        blob[0..4].copy_from_slice(&0xAABB_CCDDu32.to_le_bytes());
+        let err = decode_session(&blob, "se2fourier").unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_recoverable_errors() {
+        let (_, cache) = sample_cache(9, CachePrecision::F16);
+        let key = SessionKey { scene: 9, t0: 7, sample: 1 };
+        let blob = encode_session("se2fourier", key, &cache);
+        for cut in [10usize, 40, 60, blob.len() / 2, blob.len() - 1] {
+            assert!(
+                decode_session(&blob[..cut], "se2fourier").is_err(),
+                "cut at {cut} must fail, not panic"
+            );
+        }
+        let mut padded = blob.clone();
+        padded.extend_from_slice(&[0u8; 7]);
+        let err = decode_session(&padded, "se2fourier").unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+}

@@ -506,6 +506,62 @@ impl ShardStats {
     }
 }
 
+/// Multi-process fleet counters (DESIGN.md §19): worker liveness churn,
+/// session migration volume and the wire-protocol error budget.  All
+/// zero on the in-process serving path — the summary fragment only
+/// appears once a process boundary exists.
+#[derive(Default, Debug)]
+pub struct MigrationStats {
+    /// Workers declared dead (heartbeat timeout, connection loss, or a
+    /// reaped child process).
+    pub worker_deaths: Counter,
+    /// Dead workers the coordinator respawned.
+    pub worker_respawns: Counter,
+    /// KV sessions that moved between worker processes via the session
+    /// codec (drain/rebalance Transfer frames), instead of rebuilding
+    /// as cache misses.
+    pub sessions_migrated: Counter,
+    /// Encoded session-blob bytes shipped across the process boundary.
+    pub migration_bytes: Counter,
+    /// In-flight request envelopes replayed to a live worker after
+    /// their original worker died.
+    pub envelopes_replayed: Counter,
+    /// Frames rejected by the wire codec (bad magic, oversized length
+    /// prefix, truncation, unknown tag) — each one cost a connection,
+    /// never a coordinator panic.
+    pub wire_errors: Counter,
+    /// Time from deciding to respawn a worker to its Hello completing.
+    pub resurrect_latency: LatencyHistogram,
+}
+
+impl MigrationStats {
+    fn is_idle(&self) -> bool {
+        self.worker_deaths.get() == 0
+            && self.sessions_migrated.get() == 0
+            && self.envelopes_replayed.get() == 0
+            && self.wire_errors.get() == 0
+    }
+
+    /// Compact block for the stats line; empty until the fleet sees its
+    /// first death, migration or wire error.
+    pub fn summary(&self) -> String {
+        if self.is_idle() {
+            return String::new();
+        }
+        format!(
+            " fleet[deaths={} respawns={} migrated={} mig_bytes={} replayed={} \
+             wire_err={} resurrect_p95={:.1}ms]",
+            self.worker_deaths.get(),
+            self.worker_respawns.get(),
+            self.sessions_migrated.get(),
+            self.migration_bytes.get(),
+            self.envelopes_replayed.get(),
+            self.wire_errors.get(),
+            self.resurrect_latency.percentile_us(95.0) as f64 / 1e3,
+        )
+    }
+}
+
 /// Serving metrics bundle.
 #[derive(Default, Debug)]
 pub struct ServerStats {
@@ -539,6 +595,8 @@ pub struct ServerStats {
     /// Per-shard counters (empty for a non-sharded bundle, e.g. in unit
     /// tests that only exercise the global counters).
     pub shards: Vec<std::sync::Arc<ShardStats>>,
+    /// Multi-process fleet counters (all zero on the in-process path).
+    pub migration: MigrationStats,
 }
 
 impl ServerStats {
@@ -588,7 +646,7 @@ impl ServerStats {
             self.families.summary(),
             self.tenants.summary(),
             self.shard_summary(),
-        )
+        ) + &self.migration.summary()
     }
 }
 
@@ -772,6 +830,26 @@ mod tests {
         assert!(s.contains("steps=12"), "{s}");
         assert!(s.contains("qage_p95=2.0ms"), "{s}");
         assert!(s.contains("s0:req=0 done=0 rej=0 inflight=0 q=0 shed=4 live=3"), "{s}");
+    }
+
+    #[test]
+    fn migration_stats_stay_silent_until_fleet_activity() {
+        let stats = ServerStats::default();
+        assert!(!stats.summary().contains("fleet["), "idle fleet adds nothing");
+        stats.migration.worker_deaths.inc();
+        stats.migration.worker_respawns.inc();
+        stats.migration.sessions_migrated.add(12);
+        stats.migration.migration_bytes.add(4096);
+        stats.migration.envelopes_replayed.add(3);
+        stats.migration.resurrect_latency.record_us(2000);
+        let s = stats.summary();
+        assert!(s.contains("fleet[deaths=1 respawns=1 migrated=12"), "{s}");
+        assert!(s.contains("mig_bytes=4096 replayed=3"), "{s}");
+        assert!(s.contains("resurrect_p95=2.0ms"), "{s}");
+        // wire errors alone also surface the block
+        let quiet = ServerStats::default();
+        quiet.migration.wire_errors.inc();
+        assert!(quiet.migration.summary().contains("wire_err=1"));
     }
 
     #[test]

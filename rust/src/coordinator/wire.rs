@@ -1,0 +1,1029 @@
+//! Coordinator <-> worker-process wire protocol (DESIGN.md §19).
+//!
+//! Worker shards run as child **processes** speaking a length-prefixed
+//! binary protocol over a local TCP socket.  The framing extends the
+//! discipline already used by [`crate::checkpoint`] (little-endian
+//! integers, length-prefixed strings, magic + version header, implausible
+//! counts rejected before allocation) — but unlike checkpoints, which
+//! parse trusted local files, frames arrive from a socket, so every
+//! decode error is **typed** ([`WireError`]) and recoverable: the
+//! coordinator counts it, drops the connection, and keeps serving.
+//! Nothing on this path panics or hangs on malformed input
+//! (`tests/failure_injection.rs` fuzzes exactly that).
+//!
+//! Layout of one frame on the wire:
+//!
+//! ```text
+//! [WIRE_MAGIC u32][payload_len u32][payload: tag u8 + body]
+//! ```
+//!
+//! `payload_len` is capped at [`MAX_FRAME_BYTES`]; a larger prefix is
+//! rejected before any allocation.  The payload body is a [`Frame`]:
+//! handshake (`Hello`/`HelloAck`), request/response, liveness
+//! (`Heartbeat`), and session migration (`Drain`/`Transfer`/`DrainDone`).
+//!
+//! Scenario payloads serialize only what the worker consumes — seed,
+//! family, map elements and recorded agent states.  The derived lane
+//! graph and recorded actions stay coordinator-side: workers tokenize
+//! from `map_elements`/`states` and score against `future_positions`,
+//! never the raw `LaneGraph`, so the decoded [`Scenario`] carries an
+//! empty graph and reproduces rollouts bit-for-bit.
+
+use std::io::{Read, Write};
+
+use crate::geometry::Pose;
+use crate::sim::{
+    AgentKind, AgentState, FamilyId, KinematicAction, LaneGraph, MapElement, MapElementKind,
+    Scenario, TrajectoryClass,
+};
+
+use super::rollout::{RolloutRequest, RolloutResult};
+
+/// Frame magic (distinct from the checkpoint magic `0x5E2A_C4B7`).
+pub const WIRE_MAGIC: u32 = 0x5E2A_F8A3;
+/// Protocol version carried in `Hello`; a mismatch is a typed error, not
+/// a silent best-effort parse.
+pub const WIRE_VERSION: u32 = 1;
+/// Hard cap on one frame's payload.  A length prefix above this is
+/// rejected *before* allocating, so a hostile/corrupt 4 GiB prefix
+/// cannot OOM the coordinator.
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+const MAX_STR: usize = 4096;
+const MAX_AGENTS: u64 = 4096;
+const MAX_STEPS: u64 = 1 << 16;
+const MAX_MAP: u64 = 1 << 20;
+const MAX_SAMPLES: u64 = 1 << 16;
+const MAX_TRACK: u64 = 1 << 20;
+
+/// Typed decode/transport errors.  Every malformed input maps onto one
+/// of these — the coordinator's fuzz tests match on the variants.
+#[derive(Debug)]
+pub enum WireError {
+    /// The 4-byte frame prefix was not [`WIRE_MAGIC`].
+    BadMagic(u32),
+    /// A `Hello` carried an unsupported protocol version.
+    BadVersion(u32),
+    /// A length prefix exceeded its documented cap.
+    Oversize {
+        what: &'static str,
+        len: u64,
+        cap: u64,
+    },
+    /// The payload ended before the field being decoded.
+    Truncated(&'static str),
+    /// An enum tag had no defined meaning.
+    BadTag { what: &'static str, tag: u32 },
+    /// A length-prefixed string was not UTF-8.
+    BadUtf8(&'static str),
+    /// Socket-level failure (includes mid-frame disconnects, which
+    /// surface as `UnexpectedEof`).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => {
+                write!(f, "not a se2attn wire frame (bad magic {m:#010x})")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "wire protocol version {v}, expected {WIRE_VERSION}")
+            }
+            WireError::Oversize { what, len, cap } => {
+                write!(f, "corrupt frame: {what} length {len} exceeds cap {cap}")
+            }
+            WireError::Truncated(what) => {
+                write!(f, "corrupt frame: truncated while reading {what}")
+            }
+            WireError::BadTag { what, tag } => {
+                write!(f, "corrupt frame: unknown {what} tag {tag}")
+            }
+            WireError::BadUtf8(what) => write!(f, "corrupt frame: {what} is not utf-8"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive writers (little-endian, matching checkpoint.rs)
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed string, truncated to [`MAX_STR`] bytes on a char
+/// boundary (long anyhow chains in error responses must not make the
+/// frame undecodable).
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    let mut n = s.len().min(MAX_STR);
+    while n > 0 && !s.is_char_boundary(n) {
+        n -= 1;
+    }
+    put_u32(out, n as u32);
+    out.extend_from_slice(&s.as_bytes()[..n]);
+}
+
+// ---------------------------------------------------------------------
+// primitive reader
+
+/// Bounds-checked reader over one frame payload.  Every accessor returns
+/// a typed [`WireError`] instead of panicking on short input.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn i32(&mut self, what: &'static str) -> Result<i32, WireError> {
+        Ok(self.u32(what)? as i32)
+    }
+
+    pub fn f32(&mut self, what: &'static str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Length-prefixed count, validated against `cap` before the caller
+    /// allocates anything proportional to it.
+    pub fn count(&mut self, what: &'static str, cap: u64) -> Result<usize, WireError> {
+        let n = self.u32(what)? as u64;
+        if n > cap {
+            return Err(WireError::Oversize { what, len: n, cap });
+        }
+        Ok(n as usize)
+    }
+
+    pub fn str(&mut self, what: &'static str) -> Result<String, WireError> {
+        let n = self.count(what, MAX_STR as u64)?;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec()).map_err(|_| WireError::BadUtf8(what))
+    }
+
+    pub fn bytes(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        self.take(n, what)
+    }
+}
+
+// ---------------------------------------------------------------------
+// stream framing
+
+/// Write one `[magic][len][payload]` frame and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES as usize);
+    w.write_all(&WIRE_MAGIC.to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame payload.  Validates the magic and the length prefix
+/// (against [`MAX_FRAME_BYTES`]) before allocating; a peer that
+/// disconnects mid-frame yields `WireError::Io(UnexpectedEof)`.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, WireError> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let len = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversize {
+            what: "frame",
+            len: len as u64,
+            cap: MAX_FRAME_BYTES as u64,
+        });
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---------------------------------------------------------------------
+// domain codecs
+
+fn kind_tag(k: AgentKind) -> u8 {
+    match k {
+        AgentKind::Vehicle => 0,
+        AgentKind::Pedestrian => 1,
+        AgentKind::Cyclist => 2,
+    }
+}
+
+fn kind_from(tag: u8) -> Result<AgentKind, WireError> {
+    match tag {
+        0 => Ok(AgentKind::Vehicle),
+        1 => Ok(AgentKind::Pedestrian),
+        2 => Ok(AgentKind::Cyclist),
+        t => Err(WireError::BadTag {
+            what: "agent kind",
+            tag: t as u32,
+        }),
+    }
+}
+
+fn map_kind_tag(k: MapElementKind) -> u8 {
+    match k {
+        MapElementKind::Lane => 0,
+        MapElementKind::Crosswalk => 1,
+        MapElementKind::Signal => 2,
+    }
+}
+
+fn map_kind_from(tag: u8) -> Result<MapElementKind, WireError> {
+    match tag {
+        0 => Ok(MapElementKind::Lane),
+        1 => Ok(MapElementKind::Crosswalk),
+        2 => Ok(MapElementKind::Signal),
+        t => Err(WireError::BadTag {
+            what: "map element kind",
+            tag: t as u32,
+        }),
+    }
+}
+
+fn class_tag(c: TrajectoryClass) -> u8 {
+    match c {
+        TrajectoryClass::Stationary => 0,
+        TrajectoryClass::Straight => 1,
+        TrajectoryClass::Turning => 2,
+    }
+}
+
+fn class_from(tag: u8) -> Result<TrajectoryClass, WireError> {
+    match tag {
+        0 => Ok(TrajectoryClass::Stationary),
+        1 => Ok(TrajectoryClass::Straight),
+        2 => Ok(TrajectoryClass::Turning),
+        t => Err(WireError::BadTag {
+            what: "trajectory class",
+            tag: t as u32,
+        }),
+    }
+}
+
+pub fn put_pose(out: &mut Vec<u8>, p: &Pose) {
+    put_f64(out, p.x);
+    put_f64(out, p.y);
+    put_f64(out, p.theta);
+}
+
+pub fn take_pose(c: &mut Cursor<'_>) -> Result<Pose, WireError> {
+    // construct the literal (not Pose::new) so decoded angles round-trip
+    // bit-for-bit instead of passing through the wrap
+    Ok(Pose {
+        x: c.f64("pose.x")?,
+        y: c.f64("pose.y")?,
+        theta: c.f64("pose.theta")?,
+    })
+}
+
+fn put_agent(out: &mut Vec<u8>, a: &AgentState) {
+    put_pose(out, &a.pose);
+    put_f64(out, a.speed);
+    put_u8(out, kind_tag(a.kind));
+    put_f64(out, a.length);
+    put_f64(out, a.width);
+    put_f64(out, a.last_action.accel);
+    put_f64(out, a.last_action.yaw_rate);
+}
+
+fn take_agent(c: &mut Cursor<'_>) -> Result<AgentState, WireError> {
+    Ok(AgentState {
+        pose: take_pose(c)?,
+        speed: c.f64("agent.speed")?,
+        kind: kind_from(c.u8("agent.kind")?)?,
+        length: c.f64("agent.length")?,
+        width: c.f64("agent.width")?,
+        last_action: KinematicAction {
+            accel: c.f64("agent.accel")?,
+            yaw_rate: c.f64("agent.yaw_rate")?,
+        },
+    })
+}
+
+fn put_agent_step(out: &mut Vec<u8>, step: &[AgentState]) {
+    put_u32(out, step.len() as u32);
+    for a in step {
+        put_agent(out, a);
+    }
+}
+
+fn take_agent_step(c: &mut Cursor<'_>) -> Result<Vec<AgentState>, WireError> {
+    let n = c.count("agent step", MAX_AGENTS)?;
+    (0..n).map(|_| take_agent(c)).collect()
+}
+
+fn put_map_element(out: &mut Vec<u8>, e: &MapElement) {
+    put_u8(out, map_kind_tag(e.kind));
+    put_pose(out, &e.pose);
+    put_f64(out, e.curvature);
+    put_f64(out, e.speed_limit);
+    put_f64(out, e.signal_state);
+}
+
+fn take_map_element(c: &mut Cursor<'_>) -> Result<MapElement, WireError> {
+    Ok(MapElement {
+        kind: map_kind_from(c.u8("map.kind")?)?,
+        pose: take_pose(c)?,
+        curvature: c.f64("map.curvature")?,
+        speed_limit: c.f64("map.speed_limit")?,
+        signal_state: c.f64("map.signal_state")?,
+    })
+}
+
+fn put_scenario(out: &mut Vec<u8>, s: &Scenario) {
+    put_u64(out, s.seed);
+    put_u8(out, s.family.index() as u8);
+    put_u32(out, s.map_elements.len() as u32);
+    for e in &s.map_elements {
+        put_map_element(out, e);
+    }
+    put_u32(out, s.states.len() as u32);
+    for step in &s.states {
+        put_agent_step(out, step);
+    }
+}
+
+fn take_scenario(c: &mut Cursor<'_>) -> Result<Scenario, WireError> {
+    let seed = c.u64("scenario.seed")?;
+    let fam = c.u8("scenario.family")? as usize;
+    let family = *FamilyId::ALL
+        .get(fam)
+        .ok_or(WireError::BadTag {
+            what: "scenario family",
+            tag: fam as u32,
+        })?;
+    let n_map = c.count("scenario map elements", MAX_MAP)?;
+    let map_elements = (0..n_map)
+        .map(|_| take_map_element(c))
+        .collect::<Result<Vec<_>, _>>()?;
+    let n_steps = c.count("scenario steps", MAX_STEPS)?;
+    let states = (0..n_steps)
+        .map(|_| take_agent_step(c))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Scenario {
+        // lane graph and recorded actions are coordinator-side detail
+        // (see module docs) — workers never read them
+        map: LaneGraph::empty(),
+        map_elements,
+        states,
+        actions: Vec::new(),
+        seed,
+        family,
+    })
+}
+
+pub fn put_request(out: &mut Vec<u8>, r: &RolloutRequest) {
+    put_scenario(out, &r.scenario);
+    put_u32(out, r.t0 as u32);
+    put_u32(out, r.n_samples as u32);
+    put_f32(out, r.temperature);
+    put_i32(out, r.seed);
+}
+
+pub fn take_request(c: &mut Cursor<'_>) -> Result<RolloutRequest, WireError> {
+    let scenario = take_scenario(c)?;
+    let t0 = c.u32("request.t0")? as usize;
+    let n_samples = c.count("request samples", MAX_SAMPLES)?;
+    Ok(RolloutRequest {
+        scenario,
+        t0,
+        n_samples,
+        temperature: c.f32("request.temperature")?,
+        seed: c.i32("request.seed")?,
+    })
+}
+
+fn put_track(out: &mut Vec<u8>, track: &[Vec<(f64, f64)>]) {
+    put_u32(out, track.len() as u32);
+    for per_agent in track {
+        put_u32(out, per_agent.len() as u32);
+        for &(x, y) in per_agent {
+            put_f64(out, x);
+            put_f64(out, y);
+        }
+    }
+}
+
+fn take_track(c: &mut Cursor<'_>) -> Result<Vec<Vec<(f64, f64)>>, WireError> {
+    let n_agents = c.count("track agents", MAX_AGENTS)?;
+    let mut track = Vec::with_capacity(n_agents);
+    for _ in 0..n_agents {
+        let n = c.count("track points", MAX_TRACK)?;
+        let mut pts = Vec::with_capacity(n);
+        for _ in 0..n {
+            pts.push((c.f64("track.x")?, c.f64("track.y")?));
+        }
+        track.push(pts);
+    }
+    Ok(track)
+}
+
+pub fn put_result(out: &mut Vec<u8>, r: &RolloutResult) {
+    put_u32(out, r.trajectories.len() as u32);
+    for sample in &r.trajectories {
+        put_track(out, sample);
+    }
+    put_u32(out, r.min_ade.len() as u32);
+    for &a in &r.min_ade {
+        put_f64(out, a);
+    }
+    put_u32(out, r.classes.len() as u32);
+    for &cl in &r.classes {
+        put_u8(out, class_tag(cl));
+    }
+    put_u64(out, r.collisions as u64);
+    put_f64(out, r.decode_ms);
+}
+
+pub fn take_result(c: &mut Cursor<'_>) -> Result<RolloutResult, WireError> {
+    let n_samples = c.count("result samples", MAX_SAMPLES)?;
+    let trajectories = (0..n_samples)
+        .map(|_| take_track(c))
+        .collect::<Result<Vec<_>, _>>()?;
+    let n_ade = c.count("result min_ade", MAX_AGENTS)?;
+    let mut min_ade = Vec::with_capacity(n_ade);
+    for _ in 0..n_ade {
+        min_ade.push(c.f64("result.min_ade")?);
+    }
+    let n_cls = c.count("result classes", MAX_AGENTS)?;
+    let mut classes = Vec::with_capacity(n_cls);
+    for _ in 0..n_cls {
+        classes.push(class_from(c.u8("result.class")?)?);
+    }
+    Ok(RolloutResult {
+        trajectories,
+        min_ade,
+        classes,
+        collisions: c.u64("result.collisions")? as usize,
+        decode_ms: c.f64("result.decode_ms")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// frames
+
+/// One migrating session: scheduler state (window + recorded track) plus
+/// the serialized KV window cache
+/// ([`super::session_codec::encode_session`]), so the destination worker
+/// resumes with warm cached rows instead of a rebuild miss.
+#[derive(Clone, Debug)]
+pub struct SessionTransfer {
+    /// Sample index within the owning request.
+    pub sample: u32,
+    /// Sliding history window at export time.
+    pub window: Vec<Vec<AgentState>>,
+    /// World positions emitted so far, per agent.
+    pub track: Vec<Vec<(f64, f64)>>,
+    /// Session-codec blob of the cached KV rows; empty when the source
+    /// held no cached rows for this session.
+    pub kv: Vec<u8>,
+}
+
+fn put_session_transfer(out: &mut Vec<u8>, s: &SessionTransfer) {
+    put_u32(out, s.sample);
+    put_u32(out, s.window.len() as u32);
+    for step in &s.window {
+        put_agent_step(out, step);
+    }
+    put_track(out, &s.track);
+    put_u32(out, s.kv.len() as u32);
+    out.extend_from_slice(&s.kv);
+}
+
+fn take_session_transfer(c: &mut Cursor<'_>) -> Result<SessionTransfer, WireError> {
+    let sample = c.u32("session.sample")?;
+    let h = c.count("session window", MAX_STEPS)?;
+    let window = (0..h)
+        .map(|_| take_agent_step(c))
+        .collect::<Result<Vec<_>, _>>()?;
+    let track = take_track(c)?;
+    let kv_len = c.count("session kv blob", MAX_FRAME_BYTES as u64)?;
+    let kv = c.bytes(kv_len, "session kv blob")?.to_vec();
+    Ok(SessionTransfer {
+        sample,
+        window,
+        track,
+        kv,
+    })
+}
+
+/// One protocol message (the payload of a frame).
+#[derive(Debug)]
+pub enum Frame {
+    /// Worker -> coordinator, first frame after connect.
+    Hello {
+        version: u32,
+        worker_id: u32,
+        pid: u32,
+        token: u64,
+    },
+    /// Coordinator -> worker handshake acknowledgement.
+    HelloAck,
+    /// Coordinator -> worker: one rollout request.
+    Request {
+        req_id: u64,
+        tenant: u8,
+        trace_id: u64,
+        method: String,
+        rollout: RolloutRequest,
+    },
+    /// Worker -> coordinator: terminal answer for `req_id`.
+    Response {
+        req_id: u64,
+        outcome: Result<RolloutResult, String>,
+    },
+    /// Worker -> coordinator liveness beacon.
+    Heartbeat { seq: u64 },
+    /// Coordinator -> worker: export all live sessions and exit.
+    Drain,
+    /// A mid-rollout request changing workers: full request context plus
+    /// per-sample session state.  Worker -> coordinator on drain;
+    /// coordinator -> (another) worker to resume.
+    Transfer {
+        req_id: u64,
+        tenant: u8,
+        trace_id: u64,
+        method: String,
+        rollout: RolloutRequest,
+        steps_done: u32,
+        decode_ms: f64,
+        sessions: Vec<SessionTransfer>,
+    },
+    /// Worker -> coordinator: drain complete, the process is exiting.
+    DrainDone,
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_REQUEST: u8 = 3;
+const TAG_RESPONSE: u8 = 4;
+const TAG_HEARTBEAT: u8 = 5;
+const TAG_DRAIN: u8 = 6;
+const TAG_TRANSFER: u8 = 7;
+const TAG_DRAIN_DONE: u8 = 8;
+
+impl Frame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Frame::Hello {
+                version,
+                worker_id,
+                pid,
+                token,
+            } => {
+                put_u8(&mut out, TAG_HELLO);
+                put_u32(&mut out, *version);
+                put_u32(&mut out, *worker_id);
+                put_u32(&mut out, *pid);
+                put_u64(&mut out, *token);
+            }
+            Frame::HelloAck => put_u8(&mut out, TAG_HELLO_ACK),
+            Frame::Request {
+                req_id,
+                tenant,
+                trace_id,
+                method,
+                rollout,
+            } => {
+                put_u8(&mut out, TAG_REQUEST);
+                put_u64(&mut out, *req_id);
+                put_u8(&mut out, *tenant);
+                put_u64(&mut out, *trace_id);
+                put_str(&mut out, method);
+                put_request(&mut out, rollout);
+            }
+            Frame::Response { req_id, outcome } => {
+                put_u8(&mut out, TAG_RESPONSE);
+                put_u64(&mut out, *req_id);
+                match outcome {
+                    Ok(res) => {
+                        put_u8(&mut out, 0);
+                        put_result(&mut out, res);
+                    }
+                    Err(msg) => {
+                        put_u8(&mut out, 1);
+                        put_str(&mut out, msg);
+                    }
+                }
+            }
+            Frame::Heartbeat { seq } => {
+                put_u8(&mut out, TAG_HEARTBEAT);
+                put_u64(&mut out, *seq);
+            }
+            Frame::Drain => put_u8(&mut out, TAG_DRAIN),
+            Frame::Transfer {
+                req_id,
+                tenant,
+                trace_id,
+                method,
+                rollout,
+                steps_done,
+                decode_ms,
+                sessions,
+            } => {
+                put_u8(&mut out, TAG_TRANSFER);
+                put_u64(&mut out, *req_id);
+                put_u8(&mut out, *tenant);
+                put_u64(&mut out, *trace_id);
+                put_str(&mut out, method);
+                put_request(&mut out, rollout);
+                put_u32(&mut out, *steps_done);
+                put_f64(&mut out, *decode_ms);
+                put_u32(&mut out, sessions.len() as u32);
+                for s in sessions {
+                    put_session_transfer(&mut out, s);
+                }
+            }
+            Frame::DrainDone => put_u8(&mut out, TAG_DRAIN_DONE),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cursor::new(payload);
+        let tag = c.u8("frame tag")?;
+        match tag {
+            TAG_HELLO => Ok(Frame::Hello {
+                version: c.u32("hello.version")?,
+                worker_id: c.u32("hello.worker_id")?,
+                pid: c.u32("hello.pid")?,
+                token: c.u64("hello.token")?,
+            }),
+            TAG_HELLO_ACK => Ok(Frame::HelloAck),
+            TAG_REQUEST => Ok(Frame::Request {
+                req_id: c.u64("request.req_id")?,
+                tenant: c.u8("request.tenant")?,
+                trace_id: c.u64("request.trace_id")?,
+                method: c.str("request.method")?,
+                rollout: take_request(&mut c)?,
+            }),
+            TAG_RESPONSE => {
+                let req_id = c.u64("response.req_id")?;
+                let outcome = match c.u8("response.outcome")? {
+                    0 => Ok(take_result(&mut c)?),
+                    1 => Err(c.str("response.error")?),
+                    t => {
+                        return Err(WireError::BadTag {
+                            what: "response outcome",
+                            tag: t as u32,
+                        })
+                    }
+                };
+                Ok(Frame::Response { req_id, outcome })
+            }
+            TAG_HEARTBEAT => Ok(Frame::Heartbeat {
+                seq: c.u64("heartbeat.seq")?,
+            }),
+            TAG_DRAIN => Ok(Frame::Drain),
+            TAG_TRANSFER => {
+                let req_id = c.u64("transfer.req_id")?;
+                let tenant = c.u8("transfer.tenant")?;
+                let trace_id = c.u64("transfer.trace_id")?;
+                let method = c.str("transfer.method")?;
+                let rollout = take_request(&mut c)?;
+                let steps_done = c.u32("transfer.steps_done")?;
+                let decode_ms = c.f64("transfer.decode_ms")?;
+                let n = c.count("transfer sessions", MAX_SAMPLES)?;
+                let sessions = (0..n)
+                    .map(|_| take_session_transfer(&mut c))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Frame::Transfer {
+                    req_id,
+                    tenant,
+                    trace_id,
+                    method,
+                    rollout,
+                    steps_done,
+                    decode_ms,
+                    sessions,
+                })
+            }
+            TAG_DRAIN_DONE => Ok(Frame::DrainDone),
+            t => Err(WireError::BadTag {
+                what: "frame",
+                tag: t as u32,
+            }),
+        }
+    }
+
+    /// Encode and write as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
+        write_frame(w, &self.encode())
+    }
+
+    /// Read and decode one frame.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, WireError> {
+        Frame::decode(&read_frame(r)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::sim::ScenarioGenerator;
+
+    fn sample_request(seed: u64) -> RolloutRequest {
+        let sim = SimConfig::default();
+        let scenario = ScenarioGenerator::new(sim.clone()).generate(seed);
+        RolloutRequest {
+            scenario,
+            t0: sim.history_steps - 1,
+            n_samples: 2,
+            temperature: 0.8,
+            seed: 41,
+        }
+    }
+
+    /// decode(encode(x)) re-encodes to the same bytes — the codec is a
+    /// bijection on its own image, which is what migration/replay needs.
+    fn assert_roundtrip(f: &Frame) {
+        let bytes = f.encode();
+        let back = Frame::decode(&bytes).unwrap();
+        assert_eq!(bytes, back.encode(), "{f:?}");
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        assert_roundtrip(&Frame::Hello {
+            version: WIRE_VERSION,
+            worker_id: 3,
+            pid: 4242,
+            token: 0xDEAD_BEEF,
+        });
+        assert_roundtrip(&Frame::HelloAck);
+        assert_roundtrip(&Frame::Request {
+            req_id: 7,
+            tenant: 2,
+            trace_id: 99,
+            method: "se2fourier".into(),
+            rollout: sample_request(11),
+        });
+        assert_roundtrip(&Frame::Heartbeat { seq: 123 });
+        assert_roundtrip(&Frame::Drain);
+        assert_roundtrip(&Frame::DrainDone);
+        assert_roundtrip(&Frame::Response {
+            req_id: 9,
+            outcome: Err("decode step failed".into()),
+        });
+    }
+
+    #[test]
+    fn result_and_transfer_roundtrip() {
+        let res = RolloutResult {
+            trajectories: vec![vec![vec![(1.5, -2.5), (0.0, 0.25)], vec![(3.0, 4.0)]]],
+            min_ade: vec![0.5, 1.25],
+            classes: vec![TrajectoryClass::Straight, TrajectoryClass::Turning],
+            collisions: 3,
+            decode_ms: 1.75,
+        };
+        assert_roundtrip(&Frame::Response {
+            req_id: 12,
+            outcome: Ok(res),
+        });
+        let req = sample_request(5);
+        let window = vec![req.scenario.states[0].clone(), req.scenario.states[1].clone()];
+        assert_roundtrip(&Frame::Transfer {
+            req_id: 13,
+            tenant: 0,
+            trace_id: 4,
+            method: "abs".into(),
+            rollout: req,
+            steps_done: 6,
+            decode_ms: 0.25,
+            sessions: vec![SessionTransfer {
+                sample: 1,
+                window,
+                track: vec![vec![(9.0, 9.5)], vec![]],
+                kv: vec![1, 2, 3, 4],
+            }],
+        });
+    }
+
+    #[test]
+    fn decoded_request_replays_identically() {
+        // the decoded scenario must drive the rollout engine bit-for-bit:
+        // every field the engine reads survives, and the scene id (cache
+        // affinity + routing key) is preserved exactly
+        let req = sample_request(17);
+        let mut buf = Vec::new();
+        put_request(&mut buf, &req);
+        let back = take_request(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(back.scenario.scene_id(), req.scenario.scene_id());
+        assert_eq!(back.scenario.states.len(), req.scenario.states.len());
+        for (a, b) in req
+            .scenario
+            .states
+            .iter()
+            .flatten()
+            .zip(back.scenario.states.iter().flatten())
+        {
+            assert_eq!(a.pose, b.pose);
+            assert_eq!(a.speed.to_bits(), b.speed.to_bits());
+            assert_eq!(a.kind, b.kind);
+        }
+        assert_eq!(back.scenario.map_elements.len(), req.scenario.map_elements.len());
+        assert_eq!(back.t0, req.t0);
+        assert_eq!(back.n_samples, req.n_samples);
+        assert_eq!(back.seed, req.seed);
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut buf: &[u8] = &[0xAA, 0xBB, 0xCC, 0xDD, 0, 0, 0, 0];
+        match read_frame(&mut buf) {
+            Err(WireError::BadMagic(_)) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_typed_and_never_allocates() {
+        let mut head = Vec::new();
+        put_u32(&mut head, WIRE_MAGIC);
+        put_u32(&mut head, u32::MAX); // 4 GiB claim
+        match read_frame(&mut head.as_slice()) {
+            Err(WireError::Oversize { what: "frame", len, .. }) => {
+                assert_eq!(len, u32::MAX as u64)
+            }
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mid_frame_disconnect_is_typed_eof() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, WIRE_MAGIC);
+        put_u32(&mut buf, 100); // promises 100 bytes,
+        buf.extend_from_slice(&[0u8; 10]); // delivers 10, then "disconnects"
+        match read_frame(&mut buf.as_slice()) {
+            Err(WireError::Io(e)) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof)
+            }
+            other => panic!("expected Io(UnexpectedEof), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_and_bad_tags_are_typed() {
+        // a Request frame cut short inside the scenario
+        let full = Frame::Request {
+            req_id: 1,
+            tenant: 0,
+            trace_id: 0,
+            method: "abs".into(),
+            rollout: sample_request(3),
+        }
+        .encode();
+        for cut in [1usize, 5, 20, full.len() - 1] {
+            match Frame::decode(&full[..cut]) {
+                Err(WireError::Truncated(_)) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        match Frame::decode(&[99]) {
+            Err(WireError::BadTag { what: "frame", tag: 99 }) => {}
+            other => panic!("expected BadTag, got {other:?}"),
+        }
+        // an implausible agent-count prefix must be rejected before any
+        // allocation happens
+        let mut buf = vec![TAG_HEARTBEAT];
+        buf.truncate(0);
+        put_u8(&mut buf, TAG_REQUEST);
+        put_u64(&mut buf, 1); // req_id
+        put_u8(&mut buf, 0); // tenant
+        put_u64(&mut buf, 0); // trace
+        put_str(&mut buf, "abs");
+        put_u64(&mut buf, 7); // scenario.seed
+        put_u8(&mut buf, 0); // family
+        put_u32(&mut buf, u32::MAX); // map element count: implausible
+        match Frame::decode(&buf) {
+            Err(WireError::Oversize { .. }) => {}
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn long_error_strings_truncate_on_char_boundary() {
+        let msg = "é".repeat(4096); // 2 bytes per char — must split cleanly
+        let f = Frame::Response {
+            req_id: 1,
+            outcome: Err(msg),
+        };
+        match Frame::decode(&f.encode()).unwrap() {
+            Frame::Response { outcome: Err(m), .. } => {
+                assert!(m.len() <= 4096);
+                assert!(m.chars().all(|ch| ch == 'é'));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_framing_roundtrips_multiple_frames() {
+        let mut buf = Vec::new();
+        Frame::Heartbeat { seq: 1 }.write_to(&mut buf).unwrap();
+        Frame::Drain.write_to(&mut buf).unwrap();
+        let mut r = buf.as_slice();
+        assert!(matches!(
+            Frame::read_from(&mut r).unwrap(),
+            Frame::Heartbeat { seq: 1 }
+        ));
+        assert!(matches!(Frame::read_from(&mut r).unwrap(), Frame::Drain));
+        // clean EOF between frames is an Io error the reader loop maps to
+        // connection-closed
+        assert!(matches!(
+            Frame::read_from(&mut r),
+            Err(WireError::Io(_))
+        ));
+    }
+}

@@ -62,6 +62,11 @@ fn app() -> App {
             .opt("mix", "", "weighted family mix, e.g. 'urban-crossing:1,roundabout:3'")
             .opt("seed", "0", "scenario seed base")
             .opt("workers", "0", "serving worker shards (0 = one per core, max 8)")
+            .opt("worker-procs", "0",
+                 "run shards as separate worker *processes* over the local \
+                  socket protocol instead of in-process threads (requires \
+                  --synthetic; sessions migrate on drain, envelopes replay \
+                  on worker death — DESIGN.md §19)")
             .opt("admit-queue", "256",
                  "per-shard admission-queue capacity (a full queue answers \
                   with a typed busy rejection instead of queueing unboundedly)")
@@ -154,6 +159,17 @@ fn app() -> App {
                    bench-regression job)")
             .free_args("OLD NEW — with --compare, baseline and candidate \
                         BENCH_*.json files"))
+        .command(Command::new("worker",
+                              "internal: one worker process for `simulate --worker-procs`")
+            .hidden()
+            .opt("connect", "", "coordinator address to connect to")
+            .opt("worker-id", "0", "slot index assigned by the coordinator")
+            .opt("token", "0", "handshake token from the coordinator")
+            .opt("heartbeat-ms", "250", "heartbeat period in milliseconds")
+            .opt("methods", "se2fourier", "comma-separated methods to deploy")
+            .opt("cache-precision", "f32", "session cache storage precision (f32|f16|bf16)")
+            .opt("synthetic-work", "0",
+                 "per-token synthetic decoder spin work (0 = native flash kernel)"))
 }
 
 fn main() -> Result<()> {
@@ -181,6 +197,7 @@ fn dispatch(m: &Matches) -> Result<()> {
         "stats" => cmd_stats(m),
         "approx" => cmd_approx(m),
         "bench-report" => cmd_bench_report(m),
+        "worker" => cmd_worker(m),
         other => anyhow::bail!("unhandled command {other}"),
     }
 }
@@ -350,6 +367,10 @@ fn cmd_render(m: &Matches) -> Result<()> {
 }
 
 fn cmd_simulate(m: &Matches) -> Result<()> {
+    let worker_procs = m.get_usize("worker-procs");
+    if worker_procs > 0 {
+        return cmd_simulate_procs(m, worker_procs);
+    }
     let synthetic = m.get_flag("synthetic");
     let cfg = if synthetic {
         // artifact-free: the native-kernel decoder needs no PJRT programs
@@ -511,6 +532,174 @@ fn cmd_simulate(m: &Matches) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `simulate --worker-procs N`: the multi-process serving path.  Worker
+/// shards are child processes of this coordinator, spawned from the
+/// same binary's hidden `worker` entry point and speaking the local
+/// socket protocol (DESIGN.md §19).
+fn cmd_simulate_procs(m: &Matches, workers: usize) -> Result<()> {
+    use se2attn::coordinator::proc::ProcServer;
+    if !m.get_flag("synthetic") {
+        anyhow::bail!(
+            "--worker-procs requires --synthetic: worker processes serve the \
+             artifact-free native decoder"
+        );
+    }
+    let method = Method::parse(m.get("method"))?;
+    let scenes = m.get_usize("scenes");
+    let samples = m.get_usize("samples");
+    let seed = m.get_u64("seed");
+    let mix = se2attn::config::scenario_mix(m.get("family"), m.get("mix"))?;
+    let sim = se2attn::config::SimConfig::default();
+    // precision is validated here, applied inside each worker process
+    se2attn::config::CachePrecision::parse(m.get("cache-precision"))?;
+
+    let admission = se2attn::coordinator::AdmissionConfig {
+        max_queue: m.get_usize("admit-queue").max(1),
+        ..Default::default()
+    };
+    let exe = std::env::current_exe().context("locating the se2-attention binary")?;
+    let worker_cmd = vec![
+        exe.to_string_lossy().into_owned(),
+        "worker".to_string(),
+        "--methods".to_string(),
+        m.get("method").to_string(),
+        "--cache-precision".to_string(),
+        m.get("cache-precision").to_string(),
+    ];
+    let server = ProcServer::start(
+        workers,
+        se2attn::config::ProcConfig::default(),
+        admission,
+        worker_cmd,
+    )?;
+    println!(
+        "serving on {} worker process(es), session-affinity routing by scene id, \
+         cache precision {}",
+        server.n_workers(),
+        m.get("cache-precision"),
+    );
+    let obs = if let Some(addr) = m.get_opt("obs-addr") {
+        let obs_cfg = se2attn::config::ObsConfig::at(addr);
+        let obs = se2attn::obs::http::ObsServer::start(&obs_cfg, server.obs_sources())
+            .with_context(|| format!("starting introspection server on {addr}"))?;
+        println!(
+            "introspection server on http://{} \
+             (/metrics /metrics.json /memory /healthz /vars)",
+            obs.addr()
+        );
+        Some(obs)
+    } else {
+        None
+    };
+    let gen = se2attn::sim::MixGenerator::new(sim.clone(), mix);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..scenes {
+        let scenario = gen.generate(seed + i as u64);
+        let family = scenario.family;
+        let req = RolloutRequest {
+            scenario,
+            t0: sim.history_steps - 1,
+            n_samples: samples,
+            temperature: 1.0,
+            seed: i as i32,
+        };
+        pending.push((family, server.submit(method, req)));
+    }
+    let mut ades = Vec::new();
+    let mut breakdown = se2attn::metrics::FamilyBreakdown::default();
+    for (family, rx) in pending {
+        let res = rx.recv().context("response channel closed")??;
+        breakdown.add_rollout(family, &res.min_ade, res.collisions, res.trajectories.len());
+        ades.extend(res.min_ade);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mean_ade, _) = se2attn::metrics::mean_std(&ades);
+    println!("method={} scenes={scenes} samples={samples}", method.name());
+    println!(
+        "wall {:.2}s  throughput {:.2} scenes/s  minADE(mean over agents) {:.2} m",
+        wall,
+        scenes as f64 / wall,
+        mean_ade
+    );
+    for line in breakdown.summary_lines() {
+        println!("  {line}");
+    }
+    let stats = server.stats();
+    println!("server stats: {}", stats.summary());
+    let hold_ms = m.get_u64("obs-hold-ms");
+    if obs.is_some() && hold_ms > 0 {
+        println!("holding {hold_ms} ms for live scrapes (--obs-hold-ms)");
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
+    server.shutdown();
+    drop(server);
+    if let Some(obs) = obs {
+        obs.stop();
+    }
+    if let Some(path) = m.get_opt("metrics-out") {
+        let snap = se2attn::metrics_export::MetricsSnapshot::collect(&stats, None);
+        std::fs::write(path, snap.to_json().to_string())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        println!(
+            "metrics snapshot written to {path} ({} scalars, {} histograms)",
+            snap.scalars.len(),
+            snap.histograms.len()
+        );
+    }
+    Ok(())
+}
+
+/// Hidden `worker` entry point: one worker process of a
+/// `simulate --worker-procs` fleet.  Connects back to the coordinator
+/// that spawned it and serves until drained or disconnected.
+fn cmd_worker(m: &Matches) -> Result<()> {
+    use se2attn::coordinator::proc::{worker_serve, WorkerOptions};
+    let Some(connect) = m.get_opt("connect") else {
+        anyhow::bail!(
+            "worker is an internal entry point for `simulate --worker-procs`; \
+             it needs --connect from a coordinator"
+        );
+    };
+    let model_cfg = se2attn::config::ModelConfig::synthetic();
+    let sim = se2attn::config::SimConfig::default();
+    let engine = se2attn::coordinator::RolloutEngine::new(model_cfg.clone(), sim);
+    let mut backend: se2attn::coordinator::Backend = se2attn::coordinator::Router::new();
+    let work = m.get_usize("synthetic-work");
+    for name in m.get("methods").split(',') {
+        let method = Method::parse(name.trim())?;
+        if work > 0 {
+            backend.deploy(
+                method,
+                Box::new(se2attn::coordinator::SyntheticDecoder::with_work(
+                    model_cfg.n_actions,
+                    work,
+                )),
+            );
+        } else {
+            let kernel = se2attn::attention::kernel::KernelConfig::with_threads(0);
+            backend.deploy(
+                method,
+                Box::new(se2attn::coordinator::NativeSdpaDecoder::new(
+                    model_cfg.n_actions,
+                    kernel,
+                )),
+            );
+        }
+    }
+    let cache = se2attn::coordinator::CacheConfig {
+        precision: se2attn::config::CachePrecision::parse(m.get("cache-precision"))?,
+        ..Default::default()
+    };
+    let opts = WorkerOptions {
+        connect: connect.to_string(),
+        worker_id: m.get_usize("worker-id") as u32,
+        token: m.get_u64("token"),
+        heartbeat: std::time::Duration::from_millis(m.get_u64("heartbeat-ms").max(10)),
+    };
+    worker_serve(&engine, &mut backend, cache, &opts)
 }
 
 fn cmd_stats(m: &Matches) -> Result<()> {

@@ -180,7 +180,33 @@ impl MetricsSnapshot {
             push("se2attn_shard_batches_total", &labels, Counter, sh.batches.get());
             push("se2attn_shard_inflight", &labels, Gauge, sh.inflight.get());
             push("se2attn_shard_live_sessions", &labels, Gauge, sh.live_sessions.get());
+            push("se2attn_shard_live", &labels, Gauge, sh.live.get());
         }
+
+        // multi-process fleet (DESIGN.md §19): worker liveness churn and
+        // session-migration volume; all-zero on the in-process path
+        let mig = &stats.migration;
+        push("se2attn_worker_deaths_total", &no_labels, Counter, mig.worker_deaths.get());
+        push(
+            "se2attn_worker_respawns_total",
+            &no_labels,
+            Counter,
+            mig.worker_respawns.get(),
+        );
+        push(
+            "se2attn_sessions_migrated_total",
+            &no_labels,
+            Counter,
+            mig.sessions_migrated.get(),
+        );
+        push("se2attn_migration_bytes_total", &no_labels, Counter, mig.migration_bytes.get());
+        push(
+            "se2attn_envelopes_replayed_total",
+            &no_labels,
+            Counter,
+            mig.envelopes_replayed.get(),
+        );
+        push("se2attn_wire_errors_total", &no_labels, Counter, mig.wire_errors.get());
 
         for f in FamilyId::ALL {
             let labels = vec![("family".to_string(), f.name().to_string())];
@@ -260,6 +286,10 @@ impl MetricsSnapshot {
             &stats.decode_latency,
         ));
         s.histograms.push(HistogramSnapshot::of("se2attn_queue_age_us", &stats.queue_age));
+        s.histograms.push(HistogramSnapshot::of(
+            "se2attn_resurrect_latency_us",
+            &stats.migration.resurrect_latency,
+        ));
         s
     }
 

@@ -60,11 +60,14 @@ pub enum Stage {
     Respond = 6,
     /// Instant event: a KV-cache session or map eviction.
     CacheEvict = 7,
+    /// Instant event: a session migration between worker processes
+    /// (arg = KV blob bytes shipped).
+    Migrate = 8,
 }
 
 impl Stage {
     /// All stages, in pipeline order (used by trace validation).
-    pub const ALL: [Stage; 8] = [
+    pub const ALL: [Stage; 9] = [
         Stage::Route,
         Stage::Enqueue,
         Stage::Batch,
@@ -73,6 +76,7 @@ impl Stage {
         Stage::Attend,
         Stage::Respond,
         Stage::CacheEvict,
+        Stage::Migrate,
     ];
 
     /// Stages every traced `simulate` run must produce (CacheEvict only
@@ -97,6 +101,7 @@ impl Stage {
             Stage::Attend => "attend",
             Stage::Respond => "respond",
             Stage::CacheEvict => "cache_evict",
+            Stage::Migrate => "migrate",
         }
     }
 
@@ -475,7 +480,11 @@ impl Tracer {
             ]));
         }
         for s in self.spans() {
-            let ph = if s.stage == Stage::CacheEvict { "i" } else { "X" };
+            let ph = if matches!(s.stage, Stage::CacheEvict | Stage::Migrate) {
+                "i"
+            } else {
+                "X"
+            };
             events.push(Json::obj(vec![
                 ("name", Json::Str(s.stage.name().into())),
                 ("cat", Json::Str("serve".into())),

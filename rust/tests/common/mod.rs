@@ -1,5 +1,9 @@
 //! Helpers shared by the integration test binaries.
 
+// not every test binary that mounts `common` drives worker processes
+#[allow(dead_code)]
+pub mod procfleet;
+
 /// Worker-shard count for server tests, threaded through the environment
 /// so CI exercises both the single-shard and the multi-shard serving
 /// path (`SE2ATTN_TEST_WORKERS=1` / `=4`) on every push.  `default`

@@ -1,0 +1,158 @@
+//! Process-orchestration helpers for the multi-process serving tests
+//! (ISSUE 10): spawn real worker processes from the built
+//! `se2-attention` binary, kill them mid-rollout, and interpose a
+//! chaos proxy on the worker socket to inject delay and partitions.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Path of the `se2-attention` binary Cargo built for this test run.
+pub fn worker_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_se2-attention")
+}
+
+/// argv prefix for a synthetic worker fleet: the hidden `worker` entry
+/// point serving `method` with `work` spin-iterations per token
+/// (0 = the native flash kernel — bit-identical to the in-process
+/// synthetic server).
+pub fn synthetic_worker_cmd(method: &str, work: usize) -> Vec<String> {
+    vec![
+        worker_bin().to_string(),
+        "worker".to_string(),
+        "--methods".to_string(),
+        method.to_string(),
+        "--synthetic-work".to_string(),
+        work.to_string(),
+    ]
+}
+
+/// SIGKILL by pid — the worker gets no chance to flush, drain, or say
+/// goodbye.  Uses the `kill` binary so the test suite needs no libc
+/// binding.
+pub fn sigkill(pid: u32) {
+    let _ = std::process::Command::new("kill")
+        .arg("-9")
+        .arg(pid.to_string())
+        .status();
+}
+
+/// A TCP relay with injectable faults, sitting between a worker and the
+/// coordinator (`ProcServer::spawn_worker_via` points a worker here):
+///
+/// * `set_delay_ms` — added latency per relayed chunk, both directions;
+/// * `pause` / `resume` — a partition: connections stay open but no
+///   bytes flow, so heartbeats stop and the coordinator's `death_after`
+///   liveness sweep is what notices, not a socket error.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    delay_ms: Arc<AtomicU64>,
+    paused: Arc<AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ChaosProxy {
+    pub fn start(target: SocketAddr) -> std::io::Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let delay_ms = Arc::new(AtomicU64::new(0));
+        let paused = Arc::new(AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        {
+            let delay = Arc::clone(&delay_ms);
+            let paused = Arc::clone(&paused);
+            let shutdown = Arc::clone(&shutdown);
+            thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(client) = conn else { continue };
+                    let Ok(upstream) = TcpStream::connect(target) else { continue };
+                    pump_pair(client, upstream, &delay, &paused, &shutdown);
+                }
+            });
+        }
+        Ok(ChaosProxy {
+            addr,
+            delay_ms,
+            paused,
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn set_delay_ms(&self, ms: u64) {
+        self.delay_ms.store(ms, Ordering::SeqCst);
+    }
+
+    pub fn pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+    }
+
+    pub fn resume(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the accept loop so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+fn pump_pair(
+    a: TcpStream,
+    b: TcpStream,
+    delay: &Arc<AtomicU64>,
+    paused: &Arc<AtomicBool>,
+    shutdown: &Arc<AtomicBool>,
+) {
+    let (a2, b2) = match (a.try_clone(), b.try_clone()) {
+        (Ok(a2), Ok(b2)) => (a2, b2),
+        _ => return,
+    };
+    let (d1, p1, s1) = (Arc::clone(delay), Arc::clone(paused), Arc::clone(shutdown));
+    thread::spawn(move || pump(a, b, &d1, &p1, &s1));
+    let (d2, p2, s2) = (Arc::clone(delay), Arc::clone(paused), Arc::clone(shutdown));
+    thread::spawn(move || pump(b2, a2, &d2, &p2, &s2));
+}
+
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    delay: &AtomicU64,
+    paused: &AtomicBool,
+    shutdown: &AtomicBool,
+) {
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        while paused.load(Ordering::SeqCst) && !shutdown.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(5));
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let d = delay.load(Ordering::SeqCst);
+        if d > 0 {
+            thread::sleep(Duration::from_millis(d));
+        }
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}

@@ -1,8 +1,14 @@
 //! Failure-injection and edge-case tests for the non-PJRT layers: the
 //! system must fail loudly and cleanly, never silently.
 
-use se2attn::config::{Method, SimConfig, SystemConfig};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use se2attn::config::{Method, ProcConfig, SimConfig, SystemConfig};
 use se2attn::coordinator::batcher::{Batcher, BatcherConfig};
+use se2attn::coordinator::wire::{Frame, WIRE_MAGIC, WIRE_VERSION};
+use se2attn::coordinator::{AdmissionConfig, ProcServer, RolloutRequest};
 use se2attn::dataset;
 use se2attn::jsonio::Json;
 use se2attn::prng::Rng;
@@ -186,4 +192,184 @@ fn test_model_config() -> se2attn::config::ModelConfig {
         batch_size: 4,
         ..se2attn::config::ModelConfig::synthetic()
     }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-protocol fuzz against a live ProcServer coordinator (ISSUE 10):
+// truncated frames, oversized length prefixes, garbage magic bytes and
+// mid-frame disconnects must all surface as typed, counted errors at the
+// coordinator — never a panic, never an unbounded hang.
+// ---------------------------------------------------------------------------
+
+/// A one-slot coordinator with no children of its own: the tests below
+/// play both the attacker and (when needed) a hand-rolled worker.
+fn fuzz_fleet() -> ProcServer {
+    ProcServer::start(
+        1,
+        ProcConfig {
+            manual_workers: true,
+            respawn: false,
+            ..ProcConfig::default()
+        },
+        AdmissionConfig::default(),
+        Vec::new(),
+    )
+    .expect("fuzz fleet start")
+}
+
+fn wait_until(ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Deliver `bytes` on a fresh connection, then close it; waits (bounded)
+/// for the coordinator to hang up on us so the error is counted before
+/// the caller checks the stats.
+fn attack(server: &ProcServer, bytes: &[u8]) {
+    let mut s = TcpStream::connect(server.addr()).expect("connect to coordinator");
+    let _ = s.write_all(bytes);
+    let _ = s.flush();
+    let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut sink = [0u8; 16];
+    // errors with UnexpectedEof as soon as the coordinator drops us
+    let _ = s.read_exact(&mut sink);
+}
+
+/// A well-formed worker handshake: true iff the coordinator answers
+/// `HelloAck` — the liveness probe proving the fuzz did not wedge it.
+fn handshake_probe(server: &ProcServer) -> bool {
+    let Ok(mut s) = TcpStream::connect(server.addr()) else {
+        return false;
+    };
+    if s.set_read_timeout(Some(Duration::from_secs(5))).is_err() {
+        return false;
+    }
+    let hello = Frame::Hello {
+        version: WIRE_VERSION,
+        worker_id: 0,
+        pid: std::process::id(),
+        token: server.token(),
+    };
+    if hello.write_to(&mut s).is_err() {
+        return false;
+    }
+    matches!(Frame::read_from(&mut s), Ok(Frame::HelloAck))
+}
+
+#[test]
+fn proc_coordinator_survives_handshake_fuzz() {
+    let server = fuzz_fleet();
+    let stats = server.stats();
+    let start = Instant::now();
+
+    // four targeted attacks, one connection each
+    // garbage magic bytes
+    let garbage = b"\xde\xad\xbe\xefnot a frame at all".to_vec();
+    // oversized length prefix: claims 4 GiB, must be rejected before
+    // any allocation
+    let mut oversize = WIRE_MAGIC.to_le_bytes().to_vec();
+    oversize.extend_from_slice(&u32::MAX.to_le_bytes());
+    // truncated frame: promises 100 payload bytes, delivers 10, closes
+    let mut trunc = WIRE_MAGIC.to_le_bytes().to_vec();
+    trunc.extend_from_slice(&100u32.to_le_bytes());
+    trunc.extend_from_slice(&[7u8; 10]);
+    // mid-frame disconnect: header only, zero payload bytes
+    let mut header_only = WIRE_MAGIC.to_le_bytes().to_vec();
+    header_only.extend_from_slice(&64u32.to_le_bytes());
+    let frames = vec![garbage, oversize, trunc, header_only];
+    let targeted = frames.len() as u64;
+    for f in &frames {
+        attack(&server, f);
+    }
+
+    // random-bytes fuzz: every connection must resolve to exactly one
+    // typed wire error (whatever the bytes decode to, a random token
+    // can never pass the handshake)
+    let mut rng = Rng::new(0xF422);
+    let n_random = 40u64;
+    for _ in 0..n_random {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        attack(&server, &bytes);
+    }
+
+    // one counted error per hostile connection — no more, no fewer
+    let expected = targeted + n_random;
+    assert!(
+        wait_until(5_000, || stats.migration.wire_errors.get() == expected),
+        "wire errors: want {expected}, got {} (bounded wait)",
+        stats.migration.wire_errors.get()
+    );
+    // and the coordinator still accepts a well-formed worker afterwards
+    assert!(
+        wait_until(5_000, || handshake_probe(&server)),
+        "coordinator stopped answering valid handshakes after the fuzz"
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(60),
+        "fuzz sweep must complete in bounded time"
+    );
+}
+
+#[test]
+fn proc_reader_fuzz_after_handshake_is_contained() {
+    let server = fuzz_fleet();
+    let stats = server.stats();
+
+    // a legitimate hand-rolled worker session...
+    let mut s = TcpStream::connect(server.addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    Frame::Hello {
+        version: WIRE_VERSION,
+        worker_id: 0,
+        pid: std::process::id(),
+        token: server.token(),
+    }
+    .write_to(&mut s)
+    .expect("send hello");
+    assert!(matches!(Frame::read_from(&mut s), Ok(Frame::HelloAck)));
+    assert!(wait_until(2_000, || stats.shards[0].live.get() == 1));
+
+    // ...that turns hostile: garbage on the established session is a
+    // typed wire error and an unclean worker death, not a panic
+    s.write_all(b"\x00\x00\x00\x00 bad magic mid-session").unwrap();
+    s.flush().unwrap();
+    assert!(wait_until(5_000, || stats.migration.wire_errors.get() >= 1));
+    assert!(wait_until(5_000, || stats.migration.worker_deaths.get() == 1));
+    assert_eq!(stats.shards[0].live.get(), 0);
+
+    // with the only worker dead (manual fleet: no respawn), submission
+    // fails fast with a typed routing error instead of hanging
+    let gen = se2attn::sim::ScenarioGenerator::new(SimConfig::default());
+    let req = RolloutRequest {
+        scenario: gen.generate(0),
+        t0: SimConfig::default().history_steps - 1,
+        n_samples: 1,
+        temperature: 1.0,
+        seed: 0,
+    };
+    let err = server.call(Method::Se2Fourier, req).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no live worker"),
+        "typed routing error, got: {err:#}"
+    );
+}
+
+#[test]
+fn stalled_client_does_not_block_the_accept_loop() {
+    let server = fuzz_fleet();
+    // connects and sends nothing: parked in its own handshake thread
+    // until `connect_timeout`, which is longer than this whole test
+    let _staller = TcpStream::connect(server.addr()).expect("staller connect");
+    // a well-formed handshake still completes promptly alongside it
+    assert!(
+        wait_until(5_000, || handshake_probe(&server)),
+        "a stalled client must not wedge the accept loop"
+    );
 }

@@ -1,0 +1,393 @@
+//! Multi-process serving tests (ISSUE 10): real worker *processes*
+//! spawned from the built `se2-attention` binary, speaking the
+//! length-prefixed wire protocol to a [`ProcServer`] coordinator.
+//!
+//! The headline invariant is the same one `shard_serving.rs` proves for
+//! in-process shards, extended across a process boundary and through
+//! faults: per-request results are **bit-identical** to the
+//! single-process reference even when a worker is SIGKILLed mid-rollout
+//! (envelopes replay from `t0` with the same pure-function step seeds),
+//! drained mid-rollout (sessions migrate as lossless KV blobs), or cut
+//! off behind a partitioned / delayed socket.
+//!
+//! Workers run the [`SyntheticDecoder`] with a nonzero spin-work knob so
+//! requests stay in flight long enough for the fault to land; the
+//! in-process reference deploys the *same* decoder configuration because
+//! `work_per_token` feeds the action hash.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use se2attn::config::{scenario_mix, Method, ModelConfig, ProcConfig, SimConfig, SystemConfig};
+use se2attn::coordinator::{
+    shard_of, AdmissionConfig, Backend, BackendFactory, CacheConfig, ProcServer, RolloutRequest,
+    RolloutResult, Router, ServeConfig, Server, SyntheticDecoder,
+};
+use se2attn::sim::{MixGenerator, Scenario};
+
+mod common;
+use common::procfleet::{self, ChaosProxy};
+
+const METHOD: Method = Method::Se2Fourier;
+
+/// Spin-work per decoded token: large enough that a multi-scene workload
+/// is still mid-rollout when the fault lands, small enough that a full
+/// pass stays well under a second per request.
+const WORK: usize = 20_000;
+
+fn test_system_config() -> SystemConfig {
+    SystemConfig {
+        artifact_dir: std::path::PathBuf::from("artifacts-not-needed"),
+        model: ModelConfig::synthetic(),
+        sim: SimConfig::default(),
+        threads: 1,
+    }
+}
+
+fn admission() -> AdmissionConfig {
+    AdmissionConfig {
+        max_queue: 1024,
+        ..AdmissionConfig::default()
+    }
+}
+
+/// Single-process reference: in-process shards running the same decoder
+/// configuration the worker processes deploy.
+fn reference_server(workers: usize, work: usize) -> Server {
+    let n_actions = ModelConfig::synthetic().n_actions;
+    let factory: BackendFactory = Arc::new(move |_shard: usize| -> anyhow::Result<Backend> {
+        let mut backend: Backend = Router::new();
+        backend.deploy(METHOD, Box::new(SyntheticDecoder::with_work(n_actions, work)));
+        Ok(backend)
+    });
+    Server::start_with_backend(
+        test_system_config(),
+        vec![METHOD],
+        ServeConfig {
+            workers,
+            admission: admission(),
+            cache: CacheConfig::default(),
+            kernel: se2attn::attention::kernel::KernelConfig::default(),
+            ..ServeConfig::default()
+        },
+        factory,
+    )
+    .expect("reference server start")
+}
+
+/// A coordinator that spawns and supervises `workers` real child
+/// processes from the built binary.
+fn proc_fleet(workers: usize, work: usize, cfg: ProcConfig) -> ProcServer {
+    ProcServer::start(
+        workers,
+        cfg,
+        admission(),
+        procfleet::synthetic_worker_cmd(METHOD.name(), work),
+    )
+    .expect("proc fleet start")
+}
+
+fn request_for(scenario: Scenario, i: usize, n_samples: usize) -> RolloutRequest {
+    let sim = SimConfig::default();
+    RolloutRequest {
+        scenario,
+        t0: sim.history_steps - 1,
+        n_samples,
+        temperature: 1.0,
+        seed: i as i32,
+    }
+}
+
+/// Mixed-family scenarios, seeds `1000 + i` (matches `shard_serving.rs`
+/// so the workload shape is the one the in-process suite already pins).
+fn mixed_scenarios(scenes: usize) -> Vec<Scenario> {
+    let gen = MixGenerator::new(SimConfig::default(), scenario_mix("mixed", "").unwrap());
+    (0..scenes).map(|i| gen.generate(1000 + i as u64)).collect()
+}
+
+/// Scenarios whose affinity hash pins every request to worker `want` of
+/// an `n_workers` fleet — the deterministic way to aim a workload at the
+/// worker a test is about to kill, drain, or partition.
+fn pinned_scenarios(scenes: usize, want: usize, n_workers: usize) -> Vec<Scenario> {
+    let gen = MixGenerator::new(SimConfig::default(), scenario_mix("mixed", "").unwrap());
+    let mut out = Vec::new();
+    for seed in 0..20_000u64 {
+        let s = gen.generate(seed);
+        if shard_of(s.scene_id(), n_workers) == want {
+            out.push(s);
+            if out.len() == scenes {
+                return out;
+            }
+        }
+    }
+    panic!("no {scenes} scenarios pinned to worker {want}/{n_workers} in 20k seeds");
+}
+
+fn gather(rxs: Vec<mpsc::Receiver<anyhow::Result<RolloutResult>>>) -> Vec<RolloutResult> {
+    rxs.into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            rx.recv_timeout(Duration::from_secs(120))
+                .unwrap_or_else(|_| panic!("request {i}: coordinator dropped or timed out"))
+                .unwrap_or_else(|e| panic!("request {i}: rollout failed: {e}"))
+        })
+        .collect()
+}
+
+fn run_inproc(server: &Server, scenarios: &[Scenario], n_samples: usize) -> Vec<RolloutResult> {
+    let rxs = scenarios
+        .iter()
+        .enumerate()
+        .map(|(i, s)| server.submit(METHOD, request_for(s.clone(), i, n_samples)))
+        .collect();
+    gather(rxs)
+}
+
+fn submit_procs(
+    fleet: &ProcServer,
+    scenarios: &[Scenario],
+    n_samples: usize,
+) -> Vec<mpsc::Receiver<anyhow::Result<RolloutResult>>> {
+    scenarios
+        .iter()
+        .enumerate()
+        .map(|(i, s)| fleet.submit(METHOD, request_for(s.clone(), i, n_samples)))
+        .collect()
+}
+
+/// Bit-identical per-request results; `decode_ms` is wall-clock and
+/// excluded.
+fn assert_same_results(reference: &[RolloutResult], got: &[RolloutResult]) {
+    assert_eq!(reference.len(), got.len());
+    for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+        assert_eq!(a.trajectories, b.trajectories, "request {i}: trajectories");
+        assert_eq!(a.min_ade, b.min_ade, "request {i}: minADE");
+        assert_eq!(a.classes, b.classes, "request {i}: classes");
+        assert_eq!(a.collisions, b.collisions, "request {i}: collisions");
+    }
+}
+
+fn wait_until(ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Acceptance gate: the same mixed workload through two worker
+/// *processes* and through the single-process path must produce
+/// identical results, with requests spread across workers exactly as the
+/// affinity hash predicts.
+#[test]
+fn two_proc_results_match_single_process() {
+    let scenes = 16;
+    let samples = 2;
+    let scenarios = mixed_scenarios(scenes);
+
+    let reference = {
+        let server = reference_server(1, WORK);
+        run_inproc(&server, &scenarios, samples)
+    };
+
+    let fleet = proc_fleet(2, WORK, ProcConfig::default());
+    let results = gather(submit_procs(&fleet, &scenarios, samples));
+    assert_same_results(&reference, &results);
+
+    let stats = fleet.stats();
+    let mut expected = [0u64; 2];
+    for s in &scenarios {
+        expected[shard_of(s.scene_id(), 2)] += 1;
+    }
+    for (i, sh) in stats.shards.iter().enumerate() {
+        assert_eq!(sh.requests.get(), expected[i], "worker {i} request count");
+    }
+    assert!(
+        expected.iter().all(|&c| c > 0),
+        "workload must hit both workers: {expected:?}"
+    );
+    assert_eq!(stats.requests_failed.get(), 0);
+    assert_eq!(stats.migration.wire_errors.get(), 0);
+}
+
+/// SIGKILL a worker mid-rollout under an open-loop load: zero lost
+/// sessions — every request still answers, and bit-identically to the
+/// single-process reference, because replayed envelopes restart from
+/// `t0` with the same pure-function step seeds.
+#[test]
+fn sigkill_mid_rollout_loses_nothing() {
+    let scenes = 12;
+    let samples = 2;
+    let scenarios = mixed_scenarios(scenes);
+
+    let reference = {
+        let server = reference_server(1, WORK);
+        run_inproc(&server, &scenarios, samples)
+    };
+
+    let fleet = proc_fleet(2, WORK, ProcConfig::default());
+    let stats = fleet.stats();
+    // wait for both workers to finish the handshake so the kill hits a
+    // live, request-holding process rather than a not-yet-spawned one
+    assert!(
+        wait_until(10_000, || stats.shards.iter().all(|s| s.live.get() == 1)),
+        "workers never connected"
+    );
+
+    let rxs = submit_procs(&fleet, &scenarios, samples);
+    let victim = fleet.worker_pid(0).expect("worker 0 has a child process");
+    procfleet::sigkill(victim);
+
+    let results = gather(rxs);
+    assert_same_results(&reference, &results);
+
+    assert!(
+        stats.migration.worker_deaths.get() >= 1,
+        "the SIGKILL must be detected as a worker death"
+    );
+    assert_eq!(stats.requests_failed.get(), 0, "zero lost sessions");
+    // default config respawns: the fleet is back at full strength
+    assert!(
+        wait_until(10_000, || stats.shards.iter().all(|s| s.live.get() == 1)),
+        "killed worker never respawned"
+    );
+    assert!(stats.migration.worker_respawns.get() >= 1);
+}
+
+/// Graceful drain mid-rollout: the drained worker exports its live
+/// sessions as KV blobs, the coordinator re-targets them at a survivor,
+/// and the survivor resumes mid-trajectory — results still bit-identical
+/// (the session codec round-trip is lossless, proven property-wise in
+/// `session_codec_props.rs`).
+#[test]
+fn drain_migrates_sessions_without_loss() {
+    let scenes = 8;
+    let samples = 2;
+    let scenarios = pinned_scenarios(scenes, 0, 2);
+
+    let reference = {
+        let server = reference_server(1, WORK);
+        run_inproc(&server, &scenarios, samples)
+    };
+
+    // the drain races the rollout: retry with a fresh fleet until the
+    // drain lands while sessions are live (first try in practice — WORK
+    // keeps each request in flight for many scheduler steps)
+    let mut migrated = 0u64;
+    for _attempt in 0..5 {
+        let fleet = proc_fleet(2, WORK, ProcConfig::default());
+        let stats = fleet.stats();
+        assert!(
+            wait_until(10_000, || stats.shards.iter().all(|s| s.live.get() == 1)),
+            "workers never connected"
+        );
+        let rxs = submit_procs(&fleet, &scenarios, samples);
+        fleet.drain_worker(0);
+        let results = gather(rxs);
+        assert_same_results(&reference, &results);
+        assert_eq!(stats.requests_failed.get(), 0, "zero lost sessions");
+        assert_eq!(
+            stats.migration.worker_deaths.get(),
+            0,
+            "a clean drain is not a death"
+        );
+        migrated = stats.migration.sessions_migrated.get();
+        if migrated > 0 {
+            assert!(stats.migration.migration_bytes.get() > 0);
+            break;
+        }
+    }
+    assert!(migrated > 0, "drain never caught a live session in 5 tries");
+}
+
+/// A slow link is not a fault: with 20 ms injected on every relayed
+/// chunk the worker still heartbeats inside `death_after`, requests
+/// complete, and the wire-error counter stays untouched.
+#[test]
+fn delayed_socket_still_completes() {
+    let scenes = 6;
+    let samples = 2;
+    let scenarios = mixed_scenarios(scenes);
+
+    let reference = {
+        let server = reference_server(1, WORK);
+        run_inproc(&server, &scenarios, samples)
+    };
+
+    let cfg = ProcConfig {
+        manual_workers: true,
+        ..ProcConfig::default()
+    };
+    let fleet = proc_fleet(1, WORK, cfg);
+    let proxy = ChaosProxy::start(fleet.addr()).expect("proxy start");
+    proxy.set_delay_ms(20);
+    fleet
+        .spawn_worker_via(0, &proxy.addr().to_string())
+        .expect("spawn worker through proxy");
+
+    let stats = fleet.stats();
+    assert!(
+        wait_until(10_000, || stats.shards[0].live.get() == 1),
+        "worker never connected through the proxy"
+    );
+    let results = gather(submit_procs(&fleet, &scenarios, samples));
+    assert_same_results(&reference, &results);
+    assert_eq!(stats.migration.wire_errors.get(), 0);
+    assert_eq!(stats.migration.worker_deaths.get(), 0);
+}
+
+/// A partition (connection open, zero bytes flowing) is detected by the
+/// heartbeat liveness sweep — not by a socket error — and the stranded
+/// envelopes replay to the surviving worker.
+#[test]
+fn partition_triggers_replay_to_survivor() {
+    let scenes = 6;
+    let samples = 2;
+    let scenarios = pinned_scenarios(scenes, 0, 2);
+
+    let reference = {
+        let server = reference_server(1, WORK);
+        run_inproc(&server, &scenarios, samples)
+    };
+
+    let cfg = ProcConfig {
+        heartbeat: Duration::from_millis(50),
+        death_after: Duration::from_millis(400),
+        respawn: false,
+        manual_workers: true,
+        ..ProcConfig::default()
+    };
+    let fleet = proc_fleet(2, WORK, cfg);
+    let proxy = ChaosProxy::start(fleet.addr()).expect("proxy start");
+    fleet
+        .spawn_worker_via(0, &proxy.addr().to_string())
+        .expect("spawn worker 0 through proxy");
+    fleet
+        .spawn_worker_via(1, &fleet.addr().to_string())
+        .expect("spawn worker 1 direct");
+
+    let stats = fleet.stats();
+    assert!(
+        wait_until(10_000, || stats.shards.iter().all(|s| s.live.get() == 1)),
+        "workers never connected"
+    );
+
+    // cut worker 0 off, then submit the load pinned to it: the envelopes
+    // sit on the silent socket until the liveness sweep declares death
+    proxy.pause();
+    let rxs = submit_procs(&fleet, &scenarios, samples);
+    let results = gather(rxs);
+    assert_same_results(&reference, &results);
+
+    assert_eq!(
+        stats.migration.worker_deaths.get(),
+        1,
+        "exactly one death: the partitioned worker"
+    );
+    assert_eq!(stats.requests_failed.get(), 0, "zero lost sessions");
+    assert!(stats.migration.envelopes_replayed.get() >= 1);
+    assert_eq!(stats.shards[1].live.get(), 1, "survivor stays live");
+}

@@ -1,0 +1,153 @@
+//! Property suite for the session wire codec (ISSUE 10 satellite):
+//! random sessions across all three [`CachePrecision`] tiers must
+//!
+//! * round-trip encode -> decode **losslessly** — the rebuilt cache
+//!   emits bit-identically to the original and re-encodes to the same
+//!   bytes (a bijection on the codec's image, which is what migration
+//!   needs for bit-identical cross-process results);
+//! * serialize to exactly the [`se2attn::attention::memmodel`] byte
+//!   formulas plus the documented header overhead
+//!   ([`session_header_bytes`]) — the wire size *is* the resident size,
+//!   nothing hidden.
+//!
+//! Failures replay with `SE2ATTN_PROP_SEED` (see `se2attn::proplite`).
+
+use std::sync::Arc;
+
+use se2attn::attention::memmodel::{map_tokens_bytes, window_cache_bytes};
+use se2attn::config::{CachePrecision, Method, ModelConfig, SimConfig};
+use se2attn::coordinator::kvcache::{MapTokens, SessionKey, WindowCache};
+use se2attn::coordinator::session_codec::{
+    decode_session, encode_session, session_blob_bytes, session_header_bytes,
+};
+use se2attn::proplite::check;
+use se2attn::sim::ScenarioGenerator;
+use se2attn::tokenizer::Tokenizer;
+
+/// Random real-scenario session: a window slice of a generated scenario
+/// at a random offset, cached at `precision`.
+fn random_session(
+    rng: &mut se2attn::prng::Rng,
+    precision: CachePrecision,
+) -> (Tokenizer, SessionKey, WindowCache) {
+    let sim = SimConfig::default();
+    let tok = Tokenizer::new(&ModelConfig::synthetic(), &sim);
+    let s = ScenarioGenerator::new(sim.clone()).generate(rng.below(10_000) as u64);
+    let h = sim.history_steps;
+    let t0 = h - 1 + rng.below(s.n_steps() - h + 1);
+    let window: Vec<_> = (t0 + 1 - h..=t0).map(|t| s.states[t].clone()).collect();
+    let map = Arc::new(MapTokens::tokenize(&tok, &s.map_elements));
+    let cache = WindowCache::from_window_with(&tok, map, &window, precision).unwrap();
+    let key = SessionKey {
+        scene: s.scene_id(),
+        t0: t0 as u32,
+        sample: rng.below(64) as u32,
+    };
+    (tok, key, cache)
+}
+
+#[test]
+fn roundtrip_is_lossless_across_all_precision_tiers() {
+    check("session codec roundtrip", 24, |rng| {
+        let precision = *rng.choice(&CachePrecision::ALL);
+        let method = rng.choice(&Method::ALL).name();
+        let (tok, key, cache) = random_session(rng, precision);
+        let blob = encode_session(method, key, &cache);
+
+        let (back_key, back) = decode_session(&blob, method)
+            .map_err(|e| format!("{precision:?}: decode failed: {e:#}"))?;
+        if back_key != key {
+            return Err(format!("key changed: {back_key:?} vs {key:?}"));
+        }
+        if back.precision() != precision {
+            return Err(format!(
+                "precision changed: {:?} vs {precision:?}",
+                back.precision()
+            ));
+        }
+
+        // lossless: the rebuilt cache emits bit-identically
+        let want = cache.emit(&tok).map_err(|e| e.to_string())?;
+        let got = back.emit(&tok).map_err(|e| e.to_string())?;
+        if got.feat != want.feat {
+            return Err(format!("{precision:?}: emitted features diverged"));
+        }
+        if got.pose != want.pose || got.tq != want.tq || got.frame != want.frame {
+            return Err(format!("{precision:?}: emitted poses/tq/frame diverged"));
+        }
+
+        // bijection on the image: re-encoding the decoded session
+        // reproduces the original bytes
+        let again = encode_session(method, back_key, &back);
+        if again != blob {
+            return Err(format!(
+                "{precision:?}: re-encode diverged ({} vs {} bytes)",
+                again.len(),
+                blob.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blob_size_equals_memmodel_plus_documented_header() {
+    check("session codec size vs memmodel", 24, |rng| {
+        let precision = *rng.choice(&CachePrecision::ALL);
+        let method = rng.choice(&Method::ALL).name();
+        let (_, key, cache) = random_session(rng, precision);
+        let blob = encode_session(method, key, &cache);
+
+        let body = map_tokens_bytes(cache.map().len(), cache.feat_dim())
+            + window_cache_bytes(
+                cache.n_agents(),
+                cache.history_steps(),
+                cache.feat_dim(),
+                precision,
+            );
+        let want = session_header_bytes(method) + body;
+        if blob.len() != want {
+            return Err(format!(
+                "{precision:?}: blob {} bytes, memmodel + header says {want} \
+                 (header {}, body {body})",
+                blob.len(),
+                session_header_bytes(method)
+            ));
+        }
+        // the helper the serving path uses agrees
+        if blob.len()
+            != session_blob_bytes(
+                method,
+                cache.map().len(),
+                cache.n_agents(),
+                cache.history_steps(),
+                cache.feat_dim(),
+                precision,
+            )
+        {
+            return Err("session_blob_bytes disagrees with the encoder".into());
+        }
+        // quantized sessions actually halve the dominant row term
+        if precision.is_quantized() {
+            let f32_body = window_cache_bytes(
+                cache.n_agents(),
+                cache.history_steps(),
+                cache.feat_dim(),
+                CachePrecision::F32,
+            );
+            let q_body = window_cache_bytes(
+                cache.n_agents(),
+                cache.history_steps(),
+                cache.feat_dim(),
+                precision,
+            );
+            if q_body >= f32_body {
+                return Err(format!(
+                    "{precision:?}: quantized window bytes {q_body} not below \
+                     f32 {f32_body}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
