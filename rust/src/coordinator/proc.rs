@@ -28,9 +28,13 @@
 //! its worker dies uncleanly (crash, SIGKILL, socket loss), **migrated**
 //! when its worker drains cleanly, and **lost** only when every worker
 //! is excluded — in which case the caller gets a typed error, never a
-//! hang.  Liveness is heartbeat + connection-loss based; respawn is
-//! supervised by the coordinator with a generation counter so a stale
-//! reader thread can never double-declare a death.
+//! hang.  A drain that dies mid-way (SIGKILL'd after `Drain`, partition,
+//! rejected `Transfer`) is both: envelopes whose `Transfer` landed were
+//! migrated, the rest replay like any other death.  Liveness is
+//! heartbeat + connection-loss based; respawn is supervised by the
+//! coordinator with a generation counter so a stale reader thread can
+//! never double-declare a death, and a respawn that fails to spawn
+//! re-routes or typed-fails every envelope parked on it.
 
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -54,7 +58,7 @@ use super::router::shard_of_excluding;
 use super::server::Backend;
 use super::session_codec::{decode_session, encode_session};
 use super::telemetry::{CacheStats, ServerStats};
-use super::wire::{Frame, SessionTransfer, WireError, WIRE_VERSION};
+use super::wire::{Frame, SessionTransfer, WireError, MAX_FRAME_BYTES, WIRE_VERSION};
 
 // ---------------------------------------------------------------------------
 // Coordinator state
@@ -84,6 +88,10 @@ struct SlotState {
     /// Frames queued while the worker is between connections (spawned
     /// but not yet through its handshake).  Flushed on `HelloAck`.
     backlog: Vec<Vec<u8>>,
+    /// A handshake is mid-flush for this slot (writing HelloAck + backlog
+    /// with the lock *released*, so a stalled worker socket cannot block
+    /// the submit path); refuses duplicate registrations meanwhile.
+    registering: bool,
     draining: bool,
     dead: bool,
     /// Set when a respawn is launched; consumed by the handshake to
@@ -197,7 +205,14 @@ fn on_worker_down(shared: &Arc<Shared>, i: usize, expected_gen: u64) {
         let _ = child.wait();
     }
     if planned {
-        return; // drain: sessions migrated via Transfer, not a death
+        // Drain: `Transfer` handling already moved migrated envelopes off
+        // this slot, so whatever it still owns was NOT migrated — the
+        // worker was killed mid-drain, partitioned, or its Transfer was
+        // rejected.  Those leftovers must replay (or fail typed) like any
+        // other death; only the death counter and respawn are skipped,
+        // because the exit itself was requested.
+        replay_pending(shared, i);
+        return;
     }
     shared.stats.migration.worker_deaths.inc();
     replay_pending(shared, i);
@@ -206,10 +221,17 @@ fn on_worker_down(shared: &Arc<Shared>, i: usize, expected_gen: u64) {
         shared.stats.migration.worker_respawns.inc();
         if let Err(e) = spawn_child(shared, i) {
             eprintln!("se2attn: respawn of worker {i} failed: {e:#}");
-            let mut slot = shared.slots[i].lock().unwrap();
-            slot.dead = true;
-            slot.respawn_started = None;
-            slot.backlog.clear();
+            {
+                let mut slot = shared.slots[i].lock().unwrap();
+                slot.dead = true;
+                slot.respawn_started = None;
+                slot.backlog.clear();
+            }
+            // replay_pending above parked this slot's envelopes on the
+            // respawn that now cannot happen; with `respawn_started`
+            // cleared they re-route to a live worker or fail typed
+            // instead of waiting forever on a dead slot's backlog.
+            replay_pending(shared, i);
         }
     }
 }
@@ -358,23 +380,54 @@ fn handshake(shared: Arc<Shared>, mut stream: TcpStream) {
     let Ok(mut reader) = stream.try_clone() else { return };
     let gen = {
         let mut slot = shared.slots[worker].lock().unwrap();
-        if slot.conn.is_some() {
+        if slot.conn.is_some() || slot.registering {
             // duplicate registration for a live slot — refuse it rather
             // than hijacking the session
             shared.stats.migration.wire_errors.inc();
             return;
         }
+        slot.registering = true;
         if let Some(t0) = slot.respawn_started.take() {
             shared.stats.migration.resurrect_latency.record(t0.elapsed());
         }
         slot.dead = false;
         slot.draining = false;
         slot.last_seen = Instant::now();
-        let gen = slot.generation;
-        // flush frames queued while the worker was between connections
-        let mut ok = Frame::HelloAck.write_to(&mut stream).is_ok();
+        slot.generation
+    };
+    // Flush HelloAck + queued backlog with the slot lock RELEASED: these
+    // writes can block on a full TCP buffer, and holding the lock here
+    // would stall `exclusion()` — i.e. admission for the whole fleet —
+    // behind one stalled worker socket.  `registering` keeps concurrent
+    // handshakes out, and `conn` is still `None`, so racing
+    // `send_payload` calls park frames in the backlog; the loop re-takes
+    // the lock and drains whatever accumulated until none remain.
+    let mut ok = Frame::HelloAck.write_to(&mut stream).is_ok();
+    loop {
+        let batch = {
+            let mut slot = shared.slots[worker].lock().unwrap();
+            if slot.generation != gen || slot.dead || shared.shutting_down.load(Ordering::SeqCst) {
+                // death handling or shutdown overtook the flush
+                slot.registering = false;
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            if !ok {
+                // connection died mid-flush: leave the backlog for the
+                // supervisor's next pass to recover
+                slot.registering = false;
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            if slot.backlog.is_empty() {
+                slot.conn = Some(stream);
+                slot.registering = false;
+                break;
+            }
+            std::mem::take(&mut slot.backlog)
+        };
         let mut unsent: Vec<Vec<u8>> = Vec::new();
-        for payload in slot.backlog.drain(..) {
+        for payload in batch {
             if ok && super::wire::write_frame(&mut stream, &payload).is_err() {
                 ok = false;
             }
@@ -382,16 +435,14 @@ fn handshake(shared: Arc<Shared>, mut stream: TcpStream) {
                 unsent.push(payload);
             }
         }
-        if !ok {
-            // connection died mid-flush: restore what we could not send
-            // and let the supervisor's next pass recover
+        if !unsent.is_empty() {
+            // restore what we could not send ahead of frames queued
+            // meanwhile, preserving delivery order
+            let mut slot = shared.slots[worker].lock().unwrap();
+            unsent.append(&mut slot.backlog);
             slot.backlog = unsent;
-            let _ = stream.shutdown(Shutdown::Both);
-            return;
         }
-        slot.conn = Some(stream);
-        gen
-    };
+    }
     shared.stats.shards[worker].live.set(1);
     let rshared = Arc::clone(&shared);
     thread::Builder::new()
@@ -586,6 +637,7 @@ impl ProcServer {
                         generation: 0,
                         child: None,
                         backlog: Vec::new(),
+                        registering: false,
                         draining: false,
                         dead: false,
                         respawn_started: None,
@@ -747,6 +799,20 @@ impl ProcServer {
             method: method.name().to_string(),
             rollout: request.clone(),
         };
+        let payload = frame.encode();
+        if payload.len() > MAX_FRAME_BYTES as usize {
+            // undeliverable to ANY worker — fail typed now rather than
+            // letting the refused write masquerade as a worker death
+            // (which would replay the same oversize frame forever)
+            shared.stats.requests_failed.inc();
+            sh.failed.inc();
+            let _ = respond.send(Err(anyhow!(
+                "request frame is {} bytes, over the {} byte wire cap",
+                payload.len(),
+                MAX_FRAME_BYTES
+            )));
+            return;
+        }
         sh.inflight.add(1);
         sync_depth(&shared.stats, worker);
         shared.stats.requests_in.inc();
@@ -764,7 +830,7 @@ impl ProcServer {
                 respond,
             },
         );
-        send_payload(shared, worker, frame.encode());
+        send_payload(shared, worker, payload);
     }
 
     /// Stop the fleet: kill children, close sockets, fail anything
@@ -1177,6 +1243,30 @@ fn step_active(
     out
 }
 
+/// Encode a [`Frame::Transfer`] under the wire cap, degrading
+/// gracefully: a request's aggregated KV blobs (each up to
+/// [`MAX_FRAME_BYTES`] on its own at decode) can push the frame over
+/// the cap, and `write_frame` now refuses such payloads outright.  So:
+/// try with KV; if oversize, drop the blobs (the destination rebuilds
+/// them as cache misses — the blob is an optimization, the envelope is
+/// the truth); if the bare scheduler state *still* cannot fit, return
+/// `None` so the caller skips the frame and the coordinator replays the
+/// envelope when the drained worker's socket closes.
+fn encode_transfer_bounded(mut frame: Frame) -> Option<Vec<u8>> {
+    let payload = frame.encode();
+    if payload.len() <= MAX_FRAME_BYTES as usize {
+        return Some(payload);
+    }
+    let Frame::Transfer { sessions, .. } = &mut frame else {
+        return None;
+    };
+    for s in sessions.iter_mut() {
+        s.kv = Vec::new();
+    }
+    let payload = frame.encode();
+    (payload.len() <= MAX_FRAME_BYTES as usize).then_some(payload)
+}
+
 /// Drain: ship every active request back to the coordinator as a
 /// [`Frame::Transfer`] — full request context, per-sample windows and
 /// tracks, and each session's KV cache as a [`super::session_codec`]
@@ -1212,7 +1302,12 @@ fn export_all(conn: &mut TcpStream, pool: &KvCachePool, active: &mut Vec<ActiveR
             decode_ms: a.decode_ms,
             sessions,
         };
-        if frame.write_to(conn).is_err() {
+        // a request too large even without KV is not exported: the
+        // coordinator replays its envelope once this socket closes
+        let Some(payload) = encode_transfer_bounded(frame) else {
+            continue;
+        };
+        if super::wire::write_frame(conn, &payload).is_err() {
             return;
         }
     }
@@ -1337,6 +1432,145 @@ mod tests {
         assert_eq!(stats.requests_in.get(), 1);
         assert!(wait_until(2_000, || stats.requests_done.get() == 1));
         assert_eq!(stats.shards[0].inflight.get(), 0);
+    }
+
+    /// A worker killed mid-drain (after `Drain`, before exporting its
+    /// sessions) must not strand its envelopes: whatever was not
+    /// migrated replays to a survivor, while the planned exit still does
+    /// not count as a worker death.
+    #[test]
+    fn drain_death_replays_unmigrated_envelopes() {
+        let server = fleet(2);
+        let mut w0 = fake_worker(&server, 0);
+        let mut w1 = fake_worker(&server, 1);
+        let rx = server.submit(Method::Abs, request_for_worker(0, 2));
+        let died_req = match Frame::read_from(&mut w0).unwrap() {
+            Frame::Request { req_id, .. } => req_id,
+            f => panic!("expected Request, got {f:?}"),
+        };
+        server.drain_worker(0);
+        assert!(matches!(Frame::read_from(&mut w0).unwrap(), Frame::Drain));
+        // SIGKILL'd mid-drain: the socket closes with no Transfer sent
+        drop(w0);
+        let req_id = match Frame::read_from(&mut w1).unwrap() {
+            Frame::Request { req_id, .. } => req_id,
+            f => panic!("expected replayed Request, got {f:?}"),
+        };
+        assert_eq!(req_id, died_req, "the un-migrated envelope replays");
+        let resp = Frame::Response { req_id, outcome: Ok(dummy_result()) };
+        resp.write_to(&mut w1).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let stats = server.stats();
+        assert_eq!(stats.migration.worker_deaths.get(), 0, "a drain exit stays planned");
+        assert_eq!(stats.migration.envelopes_replayed.get(), 1);
+        assert_eq!(stats.requests_failed.get(), 0, "nothing lost");
+    }
+
+    /// Envelopes parked on a respawning worker must fail typed — not
+    /// hang — when the respawn itself cannot be spawned.
+    #[test]
+    #[cfg(unix)]
+    fn respawn_spawn_failure_fails_parked_envelopes() {
+        use std::os::unix::fs::PermissionsExt;
+        let script = std::env::temp_dir()
+            .join(format!("se2attn-respawn-fail-{}.sh", std::process::id()));
+        std::fs::write(&script, "#!/bin/sh\nsleep 2\n").unwrap();
+        std::fs::set_permissions(&script, std::fs::Permissions::from_mode(0o755)).unwrap();
+        let cfg = ProcConfig {
+            heartbeat: Duration::from_millis(25),
+            death_after: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(2),
+            respawn: true,
+            manual_workers: false,
+        };
+        let server = ProcServer::start(
+            1,
+            cfg,
+            AdmissionConfig::default(),
+            vec![script.to_str().unwrap().to_string()],
+        )
+        .unwrap();
+        // the "worker" never speaks the protocol, so the envelope parks
+        // in the slot backlog waiting for a handshake that never comes
+        let rx = server.submit(Method::Abs, request_for_worker(0, 1));
+        // the script exits on its own in ~2s; deleting it first makes the
+        // supervised respawn fail at spawn
+        std::fs::remove_file(&script).unwrap();
+        let res = rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("parked envelope hung after a failed respawn");
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("no live worker"), "unexpected error: {msg}");
+        assert_eq!(server.stats().migration.worker_deaths.get(), 1);
+    }
+
+    /// A `Transfer` whose aggregated KV blobs exceed the frame cap is
+    /// re-encoded kv-less (destination rebuilds as cache misses) instead
+    /// of being refused by `write_frame` mid-drain.
+    #[test]
+    fn oversize_transfer_degrades_to_kv_less() {
+        let req = request_for_worker(0, 1);
+        let big = (MAX_FRAME_BYTES as usize / 2) + 1024;
+        let frame = Frame::Transfer {
+            req_id: 1,
+            tenant: 0,
+            trace_id: 0,
+            method: "abs".into(),
+            rollout: req.clone(),
+            steps_done: 3,
+            decode_ms: 0.5,
+            sessions: vec![
+                SessionTransfer { sample: 0, window: vec![], track: vec![], kv: vec![0u8; big] },
+                SessionTransfer { sample: 1, window: vec![], track: vec![], kv: vec![0u8; big] },
+            ],
+        };
+        let payload = encode_transfer_bounded(frame).expect("kv-less fallback must fit");
+        assert!(payload.len() <= MAX_FRAME_BYTES as usize);
+        match Frame::decode(&payload).unwrap() {
+            Frame::Transfer { sessions, steps_done, .. } => {
+                assert_eq!(steps_done, 3);
+                assert_eq!(sessions.len(), 2);
+                assert!(sessions.iter().all(|s| s.kv.is_empty()), "kv dropped to fit");
+            }
+            f => panic!("expected Transfer, got {f:?}"),
+        }
+        // under the cap, the kv rides along untouched
+        let small = Frame::Transfer {
+            req_id: 2,
+            tenant: 0,
+            trace_id: 0,
+            method: "abs".into(),
+            rollout: req,
+            steps_done: 1,
+            decode_ms: 0.1,
+            sessions: vec![SessionTransfer {
+                sample: 0,
+                window: vec![],
+                track: vec![],
+                kv: vec![1, 2, 3],
+            }],
+        };
+        let payload = encode_transfer_bounded(small).unwrap();
+        match Frame::decode(&payload).unwrap() {
+            Frame::Transfer { sessions, .. } => assert_eq!(sessions[0].kv, vec![1, 2, 3]),
+            f => panic!("expected Transfer, got {f:?}"),
+        }
+    }
+
+    /// Frames routed to a worker that has not yet connected park in the
+    /// slot backlog and flush — outside the slot lock — on handshake.
+    #[test]
+    fn backlog_queued_before_connect_is_flushed_on_handshake() {
+        let server = fleet(1);
+        let rx = server.submit(Method::Abs, request_for_worker(0, 1));
+        let mut w = fake_worker(&server, 0);
+        let req_id = match Frame::read_from(&mut w).unwrap() {
+            Frame::Request { req_id, .. } => req_id,
+            f => panic!("expected the queued Request, got {f:?}"),
+        };
+        let resp = Frame::Response { req_id, outcome: Ok(dummy_result()) };
+        resp.write_to(&mut w).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
     }
 
     #[test]

@@ -252,9 +252,20 @@ impl<'a> Cursor<'a> {
 // ---------------------------------------------------------------------
 // stream framing
 
-/// Write one `[magic][len][payload]` frame and flush.
+/// Write one `[magic][len][payload]` frame and flush.  A payload over
+/// [`MAX_FRAME_BYTES`] is refused *before* any bytes hit the wire (the
+/// receiver would reject the length prefix and drop the connection, so
+/// sending it could only destroy the stream); callers that can build
+/// such payloads — `export_all`'s aggregated `Transfer` — must degrade
+/// (drop KV blobs) instead of sending.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
-    debug_assert!(payload.len() <= MAX_FRAME_BYTES as usize);
+    if payload.len() > MAX_FRAME_BYTES as usize {
+        return Err(WireError::Oversize {
+            what: "frame",
+            len: payload.len() as u64,
+            cap: MAX_FRAME_BYTES as u64,
+        });
+    }
     w.write_all(&WIRE_MAGIC.to_le_bytes())?;
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
@@ -937,6 +948,20 @@ mod tests {
             }
             other => panic!("expected Oversize, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn oversize_payload_is_refused_before_writing() {
+        let payload = vec![0u8; MAX_FRAME_BYTES as usize + 1];
+        let mut sink = Vec::new();
+        match write_frame(&mut sink, &payload) {
+            Err(WireError::Oversize { what: "frame", len, cap }) => {
+                assert_eq!(len, MAX_FRAME_BYTES as u64 + 1);
+                assert_eq!(cap, MAX_FRAME_BYTES as u64);
+            }
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+        assert!(sink.is_empty(), "nothing written for a refused frame");
     }
 
     #[test]
